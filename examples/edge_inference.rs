@@ -1,0 +1,73 @@
+//! **End-to-end driver** (the repo's headline validation): load the
+//! *trained, quantized* networks produced by `make artifacts`, run the
+//! exported held-out test sets through the full SoC simulator (cores +
+//! fullerene NoC + RISC-V firmware), cross-check every sample against the
+//! AOT-compiled XLA golden model, and print the Table-I row per dataset:
+//! accuracy, pJ/SOP, power, power density, latency.
+//!
+//! ```bash
+//! make artifacts            # trains + exports (once)
+//! cargo run --release --example edge_inference
+//! cargo run --release --example edge_inference -- --samples 20 --no-xla
+//! ```
+//!
+//! The measured numbers land in EXPERIMENTS.md §Table-I.
+
+use fullerene_soc::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
+use fullerene_soc::datasets::Dataset;
+use fullerene_soc::energy::ChipReport;
+use fullerene_soc::nn::load_weights_json;
+use fullerene_soc::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let limit: usize = args.get_parse_or("samples", 50);
+    let use_xla = !args.flag("no-xla");
+
+    let mut reports = Vec::new();
+    for name in ["nmnist", "dvsgesture", "cifar10"] {
+        let weights = artifacts.join(format!("{name}.weights.json"));
+        let dataset = artifacts.join(format!("dataset_{name}.json"));
+        if !weights.exists() || !dataset.exists() {
+            eprintln!("[{name}] artifacts missing — run `make artifacts` first; skipping");
+            continue;
+        }
+        let net = load_weights_json(&weights)?;
+        let ds = Dataset::load_json(&dataset)?;
+        println!(
+            "[{name}] {} synapses, T={}, {} test samples (running {})",
+            net.total_synapses(),
+            net.timesteps,
+            ds.samples.len(),
+            ds.samples.len().min(limit)
+        );
+        let check = if use_xla { GoldenCheck::Both } else { GoldenCheck::Reference };
+        let runner = ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                limit,
+                check,
+                artifacts: artifacts.clone(),
+                ..ExperimentConfig::default()
+            },
+        )?;
+        let out = runner.run(&ds)?;
+        println!(
+            "[{name}] golden check: {} checks, {} mismatches {}",
+            out.checked,
+            out.mismatches,
+            if out.mismatches == 0 { "✓" } else { "✗ DIVERGENCE" }
+        );
+        if out.mismatches > 0 {
+            anyhow::bail!("{name}: cycle simulator diverged from the golden model");
+        }
+        reports.push(out.report);
+    }
+    if reports.is_empty() {
+        anyhow::bail!("no artifacts found — run `make artifacts`");
+    }
+    println!("\n=== Table I (reproduced) ===\n{}", ChipReport::table(&reports).render());
+    Ok(())
+}

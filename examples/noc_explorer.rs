@@ -1,0 +1,74 @@
+//! NoC explorer: compare the fullerene topology against 2D-mesh, torus,
+//! ring and tree under static analytics (Fig. 5a/5b) and dynamic load
+//! (latency-vs-throughput curves), and sweep the CMRouter FIFO depth.
+//!
+//! ```bash
+//! cargo run --release --example noc_explorer
+//! ```
+
+use fullerene_soc::energy::EnergyParams;
+use fullerene_soc::metrics::Table;
+use fullerene_soc::noc::traffic::{Pattern, TrafficGen};
+use fullerene_soc::noc::{NocSim, TopoStats, Topology};
+
+fn topologies() -> Vec<Topology> {
+    vec![
+        Topology::fullerene(),
+        Topology::mesh2d(4, 5),
+        Topology::torus(4, 5),
+        Topology::ring(20),
+        Topology::tree(4, 20),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- static analytics (Fig. 5a/5b) ---------------------------------
+    let stats: Vec<TopoStats> = topologies().iter().map(TopoStats::compute).collect();
+    println!("## static topology comparison (Fig. 5a/5b)\n{}", TopoStats::table(&stats).render());
+
+    // --- dynamic: latency under uniform load ----------------------------
+    println!("## average latency (cycles) vs offered load, uniform traffic");
+    let mut t = Table::new(&["topology", "0.02", "0.05", "0.10", "0.20"]);
+    for topo in topologies() {
+        let mut cells = vec![topo.name.clone()];
+        for &load in &[0.02, 0.05, 0.10, 0.20] {
+            let mut sim = NocSim::new(topo.clone(), 4, EnergyParams::nominal());
+            let mut tg = TrafficGen::new(Pattern::Uniform, load, 20, 99);
+            match tg.run(&mut sim, 300) {
+                Ok(()) => cells.push(format!("{:.1}", sim.stats().avg_latency)),
+                Err(_) => cells.push("sat".into()),
+            }
+        }
+        t.push_row(cells);
+    }
+    println!("{}", t.render());
+
+    // --- router FIFO depth ablation --------------------------------------
+    println!("## fullerene: FIFO depth vs saturation throughput (load 0.5)");
+    let mut t = Table::new(&["depth", "spike/cycle", "avg latency", "backpressure stalls"]);
+    for depth in [1usize, 2, 4, 8, 16] {
+        let mut sim = NocSim::new(Topology::fullerene(), depth, EnergyParams::nominal());
+        let mut tg = TrafficGen::new(Pattern::Uniform, 0.5, 20, 7);
+        tg.run(&mut sim, 300)?;
+        let st = sim.stats();
+        t.push_row(vec![
+            depth.to_string(),
+            format!("{:.3}", st.throughput),
+            format!("{:.1}", st.avg_latency),
+            st.stalls_backpressure.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- broadcast economics ---------------------------------------------
+    println!("## transmission energy by mode (Fig. 5c)");
+    let mut t = Table::new(&["mode", "pJ/hop"]);
+    for (name, pattern) in [("p2p", Pattern::Uniform), ("1-to-3 broadcast", Pattern::Broadcast(3))] {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut tg = TrafficGen::new(pattern, 0.1, 20, 13);
+        tg.run(&mut sim, 200)?;
+        t.push_row(vec![name.into(), format!("{:.4}", sim.pj_per_hop().unwrap_or(f64::NAN))]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

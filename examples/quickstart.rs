@@ -1,0 +1,91 @@
+//! Quickstart: build a small spiking network by hand, map it onto the
+//! simulated chip, run a handful of event-stream samples and print the
+//! chip report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use fullerene_soc::datasets::Workload;
+use fullerene_soc::energy::ChipReport;
+use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+use fullerene_soc::nn::quant::kmeans_quantize;
+use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 2-layer SNN for the NMNIST-like geometry. Weights here are
+    //    random floats quantized through the same non-uniform codebook
+    //    pipeline the trained artifacts use (run `make artifacts` +
+    //    examples/edge_inference for the trained version).
+    let w = Workload::Nmnist;
+    let (inputs, hidden, classes) = (w.inputs(), 64, w.classes());
+    let mut rng = Rng::new(7);
+
+    let mut make_layer = |name: &str, a: usize, n: usize| -> anyhow::Result<LayerDesc> {
+        let floats: Vec<f64> = (0..a * n).map(|_| rng.normal() * 0.3).collect();
+        let q = kmeans_quantize(&floats, 16, 8, 12)?;
+        Ok(LayerDesc {
+            name: name.into(),
+            inputs: a,
+            neurons: n,
+            codebook: q.codebook,
+            widx: q.widx,
+            neuron_params: NeuronParams {
+                threshold: 120,
+                leak: LeakMode::Linear(2),
+                reset: ResetMode::Subtract,
+                mp_bits: 16,
+            },
+        })
+    };
+    let net = NetworkDesc {
+        name: "quickstart".into(),
+        layers: vec![
+            make_layer("hidden", inputs, hidden)?,
+            make_layer("out", hidden, classes)?,
+        ],
+        timesteps: w.timesteps(),
+        classes,
+    };
+    println!(
+        "network: {} inputs → {hidden} hidden → {classes} classes, {} synapses",
+        inputs,
+        net.total_synapses()
+    );
+
+    // 2. Assemble the chip (20 cores, fullerene NoC, RISC-V control CPU).
+    let mut soc = Soc::new(net, SocConfig::default())?;
+    println!(
+        "mapped onto {} cores: {}",
+        soc.mapping().cores_used(),
+        soc.mapping()
+            .placements
+            .iter()
+            .map(|p| format!(
+                "core{}←layer{}[{}..{}]",
+                p.core_id,
+                p.layer,
+                p.neuron_offset,
+                p.neuron_offset + p.neurons
+            ))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+
+    // 3. Run a few synthetic saccade samples.
+    let ds = w.generate(5, 42);
+    for (i, s) in ds.samples.iter().enumerate() {
+        let r = soc.run_sample(s, true)?;
+        println!(
+            "sample {i}: label {} → predicted {} | {} SOPs, {} cycles",
+            s.label, r.predicted, r.sops, r.cycles
+        );
+    }
+
+    // 4. The Table-I-style chip report.
+    let report = soc.finish_report("quickstart");
+    println!("\n{}", ChipReport::table(std::slice::from_ref(&report)).render());
+    Ok(())
+}

@@ -1,0 +1,173 @@
+"""AOT compile path: data → train → quantize → export artifacts.
+
+Per dataset this emits, under ``artifacts/``:
+
+- ``<name>.weights.json``  — the quantized network (rust ``nn::loader``);
+- ``dataset_<name>.json``  — the held-out test split (rust ``datasets``);
+- ``<name>.hlo.txt``       — the integer network (Pallas kernel inside)
+  lowered to HLO **text** for the Rust PJRT runtime;
+- ``<name>.meta.json``     — shape sidecar for the runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Python runs ONCE at build time (``make artifacts``); it is never on the
+Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model, train
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the baked codebook-index matrices must
+    # round-trip through the text format (default printing elides them as
+    # `constant({...})`, which the Rust-side parser would reject).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+SPECS = {
+    "nmnist": model.NetSpec(
+        name="nmnist", inputs=34 * 34 * 2, hidden=(1024,), classes=10,
+        timesteps=20),
+    "dvsgesture": model.NetSpec(
+        name="dvsgesture", inputs=32 * 32 * 2, hidden=(1024,), classes=11,
+        timesteps=25),
+    "cifar10": model.NetSpec(
+        name="cifar10", inputs=32 * 32 * 3, hidden=(512,), classes=10,
+        timesteps=16),
+}
+
+
+def export_weights_json(result: train.TrainResult, path: str) -> None:
+    spec = result.spec
+    layers = []
+    sizes = spec.layer_sizes
+    for li, (layer, scale) in enumerate(zip(result.int_layers,
+                                            result.scales)):
+        a, n = sizes[li]
+        widx = np.asarray(layer.widx, dtype=np.uint8)
+        p = layer.params
+        leak = ({"mode": "none"} if p.leak_mode == ref.LEAK_NONE else
+                {"mode": "linear", "value": int(p.leak_value)}
+                if p.leak_mode == ref.LEAK_LINEAR else
+                {"mode": "shift", "value": int(p.leak_value)})
+        layers.append({
+            "name": f"fc{li}",
+            "inputs": a,
+            "neurons": n,
+            "codebook": [int(v) for v in np.asarray(layer.codebook)],
+            "w_bits": spec.w_bits,
+            "scale": scale,
+            "widx_hex": widx.tobytes().hex(),
+            "threshold": int(p.threshold),
+            "leak": leak,
+            "reset": "subtract" if p.reset_mode == ref.RESET_SUBTRACT
+                     else "zero",
+            "mp_bits": int(p.mp_bits),
+        })
+    doc = {
+        "name": spec.name,
+        "timesteps": spec.timesteps,
+        "classes": spec.classes,
+        "layers": layers,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+
+
+def export_hlo(result: train.TrainResult, out_dir: str, name: str,
+               log=print) -> None:
+    spec = result.spec
+    layers = result.int_layers
+
+    def run_fn(raster):
+        return (model.int_forward(layers, raster, use_pallas=True),)
+
+    example = jax.ShapeDtypeStruct((spec.timesteps, spec.inputs), jnp.int32)
+    t0 = time.time()
+    lowered = jax.jit(run_fn).lower(example)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = {"inputs": spec.inputs, "timesteps": spec.timesteps,
+            "classes": spec.classes}
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f)
+    log(f"  lowered {name}.hlo.txt ({len(text) / 1e6:.1f} MB, "
+        f"{time.time() - t0:.1f}s)")
+
+
+def build_dataset(name: str, fast: bool):
+    gen = data_mod.GENERATORS[name]
+    n_train, n_test = (120, 40) if fast else (480, 120)
+    ds_train = gen(n_train, seed=1000)
+    ds_test = gen(n_test, seed=2000)  # disjoint seed → held-out split
+    return ds_train, ds_test
+
+
+def run_one(name: str, out_dir: str, fast: bool, log=print):
+    os.makedirs(out_dir, exist_ok=True)
+    spec = SPECS[name]
+    ds_train, ds_test = build_dataset(name, fast)
+    assert ds_train.inputs == spec.inputs
+    assert ds_train.timesteps == spec.timesteps
+    epochs = 6 if fast else 20
+    result = train.train_and_quantize(
+        spec, ds_train.rasters, ds_train.labels, ds_test.rasters,
+        ds_test.labels, epochs=epochs, seed=42, log=log)
+    export_weights_json(result,
+                        os.path.join(out_dir, f"{name}.weights.json"))
+    # Export the test split the chip will be evaluated on (capped for
+    # simulation time).
+    ds_test.name = name
+    ds_test.export_json(os.path.join(out_dir, f"dataset_{name}.json"),
+                        limit=40 if fast else 100)
+    export_hlo(result, out_dir, name, log=log)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default="nmnist,dvsgesture,cifar10")
+    ap.add_argument("--fast", action="store_true",
+                    default=os.environ.get("FSOC_FAST") == "1")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    summary = {}
+    for name in args.datasets.split(","):
+        name = name.strip()
+        print(f"=== {name} ({'fast' if args.fast else 'full'}) ===")
+        r = run_one(name, args.out, args.fast)
+        summary[name] = {"float_acc": r.float_acc, "int_acc": r.int_acc}
+    with open(os.path.join(args.out, "training_summary.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    print("summary:", json.dumps(summary))
+    # Marker for the Makefile.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+
+
+if __name__ == "__main__":
+    main()

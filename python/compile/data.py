@@ -1,0 +1,208 @@
+"""Synthetic event-stream datasets (numpy, seeded) — the training-side
+counterparts of ``rust/src/datasets/*``.
+
+Same geometry and statistics as the Rust generators (34×34×2 NMNIST-like
+saccades, 32×32×2 DVS-Gesture-like motion, 32×32×3 rate-coded
+CIFAR-like frames); the Python side owns *training* and also exports a
+held-out test split to ``artifacts/dataset_<name>.json`` so the Rust chip
+simulator evaluates exactly the samples the trained network was validated
+on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EventDataset:
+    name: str
+    inputs: int
+    timesteps: int
+    classes: int
+    rasters: np.ndarray  # bool [samples, T, inputs]
+    labels: np.ndarray   # int [samples]
+
+    def sparsity(self) -> float:
+        return 1.0 - float(self.rasters.mean())
+
+    def export_json(self, path: str, limit: int | None = None) -> None:
+        """Write the interchange file the Rust loader reads."""
+        n = len(self.labels) if limit is None else min(limit, len(self.labels))
+        samples = []
+        for i in range(n):
+            t_idx, a_idx = np.nonzero(self.rasters[i])
+            events = [[int(t), int(a)] for t, a in zip(t_idx, a_idx)]
+            samples.append({"label": int(self.labels[i]), "events": events})
+        doc = {
+            "name": self.name,
+            "inputs": self.inputs,
+            "timesteps": self.timesteps,
+            "classes": self.classes,
+            "samples": samples,
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, separators=(",", ":"))
+
+
+def _blob(side: int, cx: float, cy: float, sigma: float, amp: float):
+    y, x = np.mgrid[0:side, 0:side].astype(np.float64)
+    return np.minimum(amp * np.exp(-((x - cx) ** 2 + (y - cy) ** 2)
+                                   / (2 * sigma * sigma)), 1.0)
+
+
+def _shift(img: np.ndarray, dx: int, dy: int) -> np.ndarray:
+    out = np.zeros_like(img)
+    h, w = img.shape
+    xs0, xs1 = max(0, dx), min(w, w + dx)
+    ys0, ys1 = max(0, dy), min(h, h + dy)
+    out[ys0:ys1, xs0:xs1] = img[ys0 - dy:ys1 - dy, xs0 - dx:xs1 - dx]
+    return out
+
+
+# --------------------------- NMNIST-like ---------------------------------
+
+def _nmnist_prototype(cls: int) -> np.ndarray:
+    rng = np.random.default_rng(0x5EED0000 + cls)
+    side = 34
+    img = np.zeros((side, side))
+    blobs = 3 + cls % 3
+    for b in range(blobs):
+        ang = 2 * np.pi * (b / blobs + cls * 0.13)
+        r = 6.0 + (cls * 0.7) % 5.0
+        cx = side / 2 + r * np.cos(ang) + rng.normal()
+        cy = side / 2 + r * np.sin(ang) + rng.normal()
+        img = np.minimum(img + _blob(side, cx, cy, 2.2 + 0.2 * (cls % 4), 0.75), 1.0)
+    return img
+
+
+def make_nmnist(n: int, seed: int) -> EventDataset:
+    side, channels, T, classes = 34, 2, 20, 10
+    rng = np.random.default_rng(seed)
+    rasters = np.zeros((n, T, side * side * channels), dtype=bool)
+    labels = np.zeros(n, dtype=np.int64)
+    saccade = [(1, 0), (0, 1), (-1, -1)]
+    for i in range(n):
+        cls = i % classes
+        labels[i] = cls
+        proto = _nmnist_prototype(cls)
+        prev = proto.copy()
+        for t in range(T):
+            phase = t * len(saccade) // T
+            dx, dy = saccade[phase]
+            jx, jy = rng.integers(-1, 2), rng.integers(-1, 2)
+            cur = _shift(proto, dx * (t % 4) + jx, dy * (t % 4) + jy)
+            on = cur
+            off = np.maximum(prev - cur, 0.0)
+            prev = cur
+            frame = np.concatenate([on.ravel(), off.ravel()])
+            rasters[i, t] = rng.random(frame.shape) < frame * 0.18
+    return EventDataset("nmnist-syn", side * side * channels, T, classes,
+                        rasters, labels)
+
+
+# ------------------------ DVS-Gesture-like --------------------------------
+
+def _gesture_pos(cls: int, t: float, side: int = 32):
+    c, r = side / 2, 8.0
+    tau = 2 * np.pi
+    table = {
+        0: (c + r * np.cos(t * tau), c + r * np.sin(t * tau)),
+        1: (c + r * np.cos(t * tau), c - r * np.sin(t * tau)),
+        2: (c + r * np.cos(2 * t * tau), c + r * np.sin(2 * t * tau)),
+        3: (c + r * np.cos(2 * t * tau), c - r * np.sin(2 * t * tau)),
+        4: (c + r * (2 * t - 1), c),
+        5: (c, c + r * (2 * t - 1)),
+        6: (c + r * (2 * t - 1), c + r * (2 * t - 1)),
+        7: (c + r * (2 * t - 1), c - r * (2 * t - 1)),
+        8: (c + r * np.sin(t * tau), c + r * np.sin(2 * t * tau) / 2),
+        9: (c + r * np.sin(2 * t * tau) / 2, c + r * np.sin(t * tau)),
+    }
+    return table.get(cls, (c, c))
+
+
+def make_dvsgesture(n: int, seed: int) -> EventDataset:
+    side, channels, T, classes = 32, 2, 25, 11
+    rng = np.random.default_rng(seed ^ 0xD50001)
+    rasters = np.zeros((n, T, side * side * channels), dtype=bool)
+    labels = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        cls = i % classes
+        labels[i] = cls
+        px, py = _gesture_pos(cls, 0.0, side)
+        for t in range(T):
+            ft = t / T
+            cx, cy = _gesture_pos(cls, ft, side)
+            cx += rng.normal() * 0.4
+            cy += rng.normal() * 0.4
+            dx, dy = cx - px, cy - py
+            speed = max(np.hypot(dx, dy), 0.2)
+            on = _blob(side, cx + 0.7 * dx, cy + 0.7 * dy, 2.0,
+                       min(0.5 * speed, 0.9))
+            off = _blob(side, cx - 0.7 * dx, cy - 0.7 * dy, 2.0,
+                        min(0.4 * speed, 0.8))
+            if cls == 10:
+                amp = 0.8 if t % 2 == 0 else 0.1
+                on = np.minimum(on + _blob(side, cx, cy, 2.5, amp), 1.0)
+                off = np.minimum(off + _blob(side, cx, cy, 2.5, 0.9 - amp), 1.0)
+            px, py = cx, cy
+            frame = np.concatenate([on.ravel(), off.ravel()])
+            rasters[i, t] = rng.random(frame.shape) < frame * 0.35
+    return EventDataset("dvsgesture-syn", side * side * channels, T, classes,
+                        rasters, labels)
+
+
+# --------------------------- CIFAR-like ----------------------------------
+
+def _cifar_prototype(cls: int) -> np.ndarray:
+    rng = np.random.default_rng(0xC1FA0000 + cls)
+    side, channels = 32, 3
+    img = np.zeros((channels, side, side))
+    for ch in range(channels):
+        blobs = 2 + (cls + ch) % 3
+        amp = 0.35 + 0.4 * (((cls + ch * 3) % 5) / 4.0)
+        for b in range(blobs):
+            ang = 2 * np.pi * (b / blobs) + cls * 0.37
+            r = 4.0 + ((cls * 7 + ch * 3 + b) % 9)
+            cx = side / 2 + r * np.cos(ang) + rng.normal() * 0.5
+            cy = side / 2 + r * np.sin(ang) + rng.normal() * 0.5
+            img[ch] = np.minimum(img[ch] + _blob(side, cx, cy,
+                                                 3.0 + (b % 2), amp), 1.0)
+    return img
+
+
+def make_cifar(n: int, seed: int) -> EventDataset:
+    side, channels, T, classes = 32, 3, 16, 10
+    rng = np.random.default_rng(seed ^ 0xC1FAF00D)
+    rasters = np.zeros((n, T, side * side * channels), dtype=bool)
+    labels = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        cls = i % classes
+        labels[i] = cls
+        img = _cifar_prototype(cls).copy()
+        # Natural-image stand-in is deliberately the *hardest* task (the
+        # paper's accuracy ordering is NMNIST > DVS Gesture > Cifar-10):
+        # large shifts, heavy distractor clutter and background noise.
+        dx, dy = rng.integers(-2, 3), rng.integers(-2, 3)
+        img = np.stack([_shift(c, dx, dy) for c in img])
+        for _ in range(3):
+            ch = rng.integers(0, channels)
+            img[ch] = np.minimum(
+                img[ch] + _blob(side, rng.random() * side,
+                                rng.random() * side, 3.0, 0.30), 1.0)
+        flat = img.reshape(-1)
+        for t in range(T):
+            p = flat * 0.22 + 0.008  # background spike noise
+            rasters[i, t] = rng.random(flat.shape) < p
+    return EventDataset("cifar10-syn", side * side * channels, T, classes,
+                        rasters, labels)
+
+
+GENERATORS = {
+    "nmnist": make_nmnist,
+    "dvsgesture": make_dvsgesture,
+    "cifar10": make_cifar,
+}

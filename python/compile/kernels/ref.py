@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for the sparse-codebook SNN layer kernel.
+
+This module is the *bit-exact functional definition* of the chip's
+arithmetic (mirrored by ``rust/src/core/neuron.rs`` — see its module docs
+for the authoritative order of operations):
+
+1. integrate: ``mp ← sat_w(mp + acc)`` (saturating to the MP register
+   width), where ``acc[n] = Σ_a spike[a] · codebook[widx[a, n]]`` over
+   non-pruned synapses (``widx == 255`` means "no synapse");
+2. leak: linear decay toward zero (never crossing), or arithmetic-shift
+   decay ``m − (m >> k)``;
+3. fire: ``spike ← mp ≥ threshold`` — **only touched neurons** (partial
+   membrane-potential update: a neuron with no incoming synapse event this
+   timestep keeps its MP and cannot fire);
+4. reset: to zero or by threshold subtraction.
+
+Everything is int32; inputs/outputs match the Pallas kernel exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+NO_SYNAPSE = 255
+
+# Leak mode tags (must match model.py / the Rust LeakMode enum).
+LEAK_NONE = 0
+LEAK_LINEAR = 1
+LEAK_SHIFT = 2
+
+RESET_ZERO = 0
+RESET_SUBTRACT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerParams:
+    """Static integer dynamics of one layer (register-table contents)."""
+
+    threshold: int
+    leak_mode: int  # LEAK_*
+    leak_value: int
+    reset_mode: int  # RESET_*
+    mp_bits: int = 16
+
+    @property
+    def mp_lo(self) -> int:
+        return -(1 << (self.mp_bits - 1))
+
+    @property
+    def mp_hi(self) -> int:
+        return (1 << (self.mp_bits - 1)) - 1
+
+
+def layer_step_ref(spikes, widx, codebook, mp, p: LayerParams):
+    """One timestep of one layer, pure jnp.
+
+    Args:
+      spikes: int32[A] 0/1 presynaptic spike vector.
+      widx: int32[A, N] codebook indexes (NO_SYNAPSE = pruned).
+      codebook: int32[C] weight levels.
+      mp: int32[N] membrane potentials.
+      p: layer dynamics.
+
+    Returns:
+      (out_spikes int32[N], new_mp int32[N])
+    """
+    spikes = spikes.astype(jnp.int32)
+    has_syn = (widx != NO_SYNAPSE).astype(jnp.int32)
+    # Gather weights; pruned entries contribute 0 (index clamped to 0 but
+    # masked out).
+    w = codebook[jnp.where(widx == NO_SYNAPSE, 0, widx)] * has_syn
+    acc = spikes @ w  # int32[N]
+    touched = (spikes @ has_syn) > 0
+
+    # int32 is exact here: |mp| < 2^15 and |acc| ≤ A·96 ≪ 2^31.
+    m = jnp.clip(mp + acc, p.mp_lo, p.mp_hi).astype(jnp.int32)
+
+    if p.leak_mode == LEAK_LINEAR:
+        lam = jnp.int32(p.leak_value)
+        m = jnp.sign(m) * jnp.maximum(jnp.abs(m) - lam, 0)
+    elif p.leak_mode == LEAK_SHIFT:
+        m = m - (m >> p.leak_value)
+
+    fire = touched & (m >= p.threshold)
+    if p.reset_mode == RESET_ZERO:
+        m_after = jnp.where(fire, 0, m)
+    else:
+        m_after = jnp.where(fire, m - p.threshold, m)
+
+    new_mp = jnp.where(touched, m_after, mp)
+    return fire.astype(jnp.int32), new_mp

@@ -1,0 +1,136 @@
+"""Layer-1 Pallas kernel: the chip datapath's compute hot-spot.
+
+One fused kernel per layer-timestep implements exactly what the silicon's
+ZSPE → SPE → neuron-updater pipeline computes (see ``ref.py`` for the
+bit-exact specification): sparsity-gated codebook accumulation plus the
+partial-update LIF step.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the ASIC's
+event-driven zero-skip becomes a *masked accumulate* — on a TPU-shaped
+target branching per spike would stall the VPU, so the zero-skip is
+expressed as multiplication by the 0/1 spike vector and the synapse-valid
+mask, letting the MXU/VPU stream. The non-uniform weight codebook (≤16
+entries) is VMEM-resident — the analogue of the paper's shared per-core
+weight SRAM — and the per-synapse 4-bit indexes are expanded by an
+on-the-fly gather. BlockSpec tiles the neuron axis (the dual-SPE
+parallelism analogue); the A (axon) axis stays resident per tile, matching
+the chip's "all synapses of a core share one codebook" locality.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical (see tests/test_kernel.py), and
+real-TPU performance is *estimated* from the BlockSpec VMEM footprint in
+DESIGN.md §Perf rather than measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NO_SYNAPSE = ref.NO_SYNAPSE
+
+# Neuron-axis tile (the dual-SPE lane analogue; multiple of the VPU's 128
+# lanes on real hardware).
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(spikes_ref, widx_ref, codebook_ref, mp_ref, out_spikes_ref,
+            new_mp_ref, *, threshold, leak_mode, leak_value, reset_mode,
+            mp_lo, mp_hi):
+    """Pallas kernel body for one neuron tile."""
+    spikes = spikes_ref[...].astype(jnp.int32)  # [A]
+    widx = widx_ref[...].astype(jnp.int32)      # [A, BN]
+    codebook = codebook_ref[...]                # [C]
+    mp = mp_ref[...]                            # [BN]
+
+    has_syn = (widx != NO_SYNAPSE).astype(jnp.int32)
+    w = codebook[jnp.where(widx == NO_SYNAPSE, 0, widx)] * has_syn
+    # Masked accumulate = the ZSPE zero-skip + SPE codebook MAC.
+    acc = spikes @ w
+    touched = (spikes @ has_syn) > 0
+
+    # int32 is exact here: |mp| < 2^15 and |acc| ≤ A·96 ≪ 2^31.
+    m = jnp.clip(mp + acc, mp_lo, mp_hi).astype(jnp.int32)
+    if leak_mode == ref.LEAK_LINEAR:
+        m = jnp.sign(m) * jnp.maximum(jnp.abs(m) - jnp.int32(leak_value), 0)
+    elif leak_mode == ref.LEAK_SHIFT:
+        m = m - (m >> leak_value)
+
+    fire = touched & (m >= threshold)
+    if reset_mode == ref.RESET_ZERO:
+        m_after = jnp.where(fire, 0, m)
+    else:
+        m_after = jnp.where(fire, m - threshold, m)
+
+    out_spikes_ref[...] = fire.astype(jnp.int32)
+    new_mp_ref[...] = jnp.where(touched, m_after, mp)
+
+
+def layer_step(spikes, widx, codebook, mp, p: ref.LayerParams,
+               block_n: int = DEFAULT_BLOCK_N):
+    """One timestep of one layer through the Pallas kernel.
+
+    Same contract as :func:`ref.layer_step_ref`.
+    """
+    a, n = widx.shape
+    bn = min(block_n, n)
+    # Pad the neuron axis to a whole number of tiles.
+    n_pad = (-n) % bn
+    if n_pad:
+        widx = jnp.pad(widx, ((0, 0), (0, n_pad)), constant_values=NO_SYNAPSE)
+        mp = jnp.pad(mp, (0, n_pad))
+    n_tot = n + n_pad
+    grid = (n_tot // bn,)
+
+    kernel = functools.partial(
+        _kernel,
+        threshold=int(p.threshold),
+        leak_mode=int(p.leak_mode),
+        leak_value=int(p.leak_value),
+        reset_mode=int(p.reset_mode),
+        mp_lo=int(p.mp_lo),
+        mp_hi=int(p.mp_hi),
+    )
+    out_spikes, new_mp = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a,), lambda i: (0,)),          # spikes: resident
+            pl.BlockSpec((a, bn), lambda i: (0, i)),     # widx tile
+            pl.BlockSpec((codebook.shape[0],), lambda i: (0,)),  # codebook
+            pl.BlockSpec((bn,), lambda i: (i,)),         # mp tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tot,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tot,), jnp.int32),
+        ],
+        interpret=True,
+    )(spikes.astype(jnp.int32), widx.astype(jnp.int32),
+      codebook.astype(jnp.int32), mp.astype(jnp.int32))
+    return out_spikes[:n], new_mp[:n]
+
+
+def vmem_footprint_bytes(a: int, n: int, c: int,
+                         block_n: int = DEFAULT_BLOCK_N) -> dict:
+    """Estimated per-tile VMEM residency of the kernel (DESIGN.md §Perf).
+
+    int32 working set per grid step: spikes[A] + widx[A, BN] + codebook[C]
+    + mp/out/new_mp[BN] each.
+    """
+    bn = min(block_n, n)
+    return {
+        "spikes": 4 * a,
+        "widx_tile": 4 * a * bn,
+        "codebook": 4 * c,
+        "mp_tiles": 3 * 4 * bn,
+        "total": 4 * (a + a * bn + c + 3 * bn),
+    }

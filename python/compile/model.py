@@ -1,0 +1,147 @@
+"""Layer-2 JAX model: the SNN forward pass.
+
+Two versions of the same network:
+
+- :func:`int_forward` — the **deployed integer network**: quantized
+  codebook weights, the chip's exact integer LIF semantics, computed by
+  the Layer-1 Pallas kernel (``kernels/snn_core.py``) and scanned over
+  timesteps. This is what gets AOT-lowered to HLO for the Rust runtime
+  and what defines Table-I accuracy.
+- :func:`float_forward` — the **training surrogate**: float weights,
+  differentiable spike via a fast-sigmoid surrogate gradient, same
+  topology and dynamics shape. Training happens here; the weights are
+  then quantized (``quantize.py``) into the integer network.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, snn_core
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """Network topology + float dynamics used for training."""
+
+    name: str
+    inputs: int
+    hidden: tuple
+    classes: int
+    timesteps: int
+    threshold: float = 1.0
+    leak: float = 0.02
+    # integer codebook geometry for deployment
+    n_levels: int = 16
+    w_bits: int = 8
+
+    @property
+    def layer_sizes(self):
+        dims = (self.inputs,) + tuple(self.hidden) + (self.classes,)
+        return list(zip(dims[:-1], dims[1:]))
+
+
+# ------------------------- float training model ---------------------------
+
+@jax.custom_jvp
+def spike_fn(v):
+    """Heaviside spike with a fast-sigmoid surrogate gradient."""
+    return jnp.where(jnp.asarray(v) >= 0.0, 1.0, 0.0).astype(jnp.float32)
+
+
+@spike_fn.defjvp
+def _spike_jvp(primals, tangents):
+    (v,), (dv,) = primals, tangents
+    out = spike_fn(v)
+    # fast sigmoid surrogate: 1 / (1 + 10|v|)^2
+    grad = 1.0 / (1.0 + 10.0 * jnp.abs(v)) ** 2
+    return out, grad * dv
+
+
+def init_params(spec: NetSpec, key):
+    """He-scaled float weights per layer."""
+    params = []
+    for (a, n) in spec.layer_sizes:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, n), jnp.float32) * (2.0 / a) ** 0.5
+        params.append(w)
+    return params
+
+
+def float_forward(params, raster, spec: NetSpec):
+    """Training forward: returns per-class output spike counts (float).
+
+    raster: float32[T, inputs] of 0/1.
+    """
+    def step(mps, spikes_t):
+        spikes = spikes_t
+        new_mps = []
+        for li, w in enumerate(params):
+            drive = spikes @ w
+            m = mps[li] + drive
+            # linear leak toward zero
+            m = jnp.sign(m) * jnp.maximum(jnp.abs(m) - spec.leak, 0.0)
+            out = spike_fn(m - spec.threshold)
+            m = m - out * spec.threshold  # subtract reset
+            new_mps.append(m)
+            spikes = out
+        return new_mps, spikes
+
+    mps = [jnp.zeros(n, jnp.float32) for (_, n) in spec.layer_sizes]
+    _, outs = jax.lax.scan(step, mps, raster)
+    return outs.sum(axis=0)  # [classes]
+
+
+def batched_float_forward(params, rasters, spec: NetSpec):
+    """vmapped float forward over a batch: [B, T, I] → [B, classes]."""
+    return jax.vmap(lambda r: float_forward(params, r, spec))(rasters)
+
+
+# ------------------------- integer deployed model -------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IntLayer:
+    """One deployed layer: codebook indexes + integer dynamics."""
+
+    widx: jnp.ndarray      # int32 [A, N] (255 = pruned)
+    codebook: jnp.ndarray  # int32 [C]
+    params: ref.LayerParams
+
+
+def int_forward(layers, raster, use_pallas: bool = True):
+    """Deployed integer forward: per-class output spike counts (int32).
+
+    raster: int32[T, inputs] of 0/1. Scanned over T; each layer-timestep
+    runs the Pallas kernel (or the jnp oracle when ``use_pallas=False``).
+    """
+    step_fn = snn_core.layer_step if use_pallas else ref.layer_step_ref
+
+    def step(mps, spikes_t):
+        spikes = spikes_t
+        new_mps = []
+        for li, layer in enumerate(layers):
+            out, m = step_fn(spikes, layer.widx, layer.codebook, mps[li],
+                             layer.params)
+            new_mps.append(m)
+            spikes = out
+        return tuple(new_mps), spikes
+
+    mps = tuple(jnp.zeros(l.widx.shape[1], jnp.int32) for l in layers)
+    _, outs = jax.lax.scan(step, mps, raster.astype(jnp.int32))
+    return outs.sum(axis=0).astype(jnp.int32)
+
+
+def int_accuracy(layers, rasters, labels, use_pallas: bool = False) -> float:
+    """Integer-model accuracy over a batch (oracle path by default — it is
+    numerically identical to the kernel and much faster to trace)."""
+    fn = jax.jit(functools.partial(int_forward, layers,
+                                   use_pallas=use_pallas))
+    correct = 0
+    for r, y in zip(rasters, labels):
+        counts = fn(jnp.asarray(r, jnp.int32))
+        correct += int(counts.argmax()) == int(y)
+    return correct / len(labels)

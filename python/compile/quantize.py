@@ -1,0 +1,60 @@
+"""Non-uniform weight quantization (k-means codebooks), the Python twin of
+``rust/src/nn/quant.rs`` — same quantile initialization, same Lloyd
+update, same integerization rule, so both sides satisfy the same
+invariants (tested in tests/test_quantize.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+NO_SYNAPSE = 255
+
+
+@dataclasses.dataclass
+class QuantizedLayer:
+    codebook: np.ndarray  # int32 [n]
+    widx: np.ndarray      # uint8, same shape as the input weights
+    scale: float          # float_weight ≈ level × scale
+
+
+def kmeans_quantize(weights: np.ndarray, n: int, w_bits: int,
+                    iters: int = 15) -> QuantizedLayer:
+    """Quantize float weights to ``n`` integer levels of ``w_bits``."""
+    assert n in (4, 8, 16) and w_bits in (4, 8, 16)
+    flat = np.asarray(weights, dtype=np.float64).ravel()
+    assert flat.size > 0
+    srt = np.sort(flat)
+    qs = (np.arange(n) + 0.5) / n
+    centroids = srt[((srt.size - 1) * qs).astype(int)].astype(np.float64)
+    for i in range(1, n):
+        if centroids[i] <= centroids[i - 1]:
+            centroids[i] = centroids[i - 1] + 1e-9
+
+    for _ in range(iters):
+        d = np.abs(flat[:, None] - centroids[None, :])
+        assign = d.argmin(axis=1)
+        for c in range(n):
+            sel = flat[assign == c]
+            if sel.size:
+                centroids[c] = sel.mean()
+        centroids.sort()
+
+    hi = (1 << (w_bits - 1)) - 1
+    lo = -(1 << (w_bits - 1))
+    maxabs = np.abs(centroids).max()
+    scale = maxabs / hi if maxabs > 1e-6 else 1.0
+    levels = np.clip(np.round(centroids / scale), lo, hi).astype(np.int32)
+    # Final assignment against the integerized levels (deployed domain).
+    d = np.abs(flat[:, None] - (levels[None, :] * scale))
+    assign = d.argmin(axis=1).astype(np.uint8)
+    return QuantizedLayer(codebook=levels,
+                          widx=assign.reshape(np.shape(weights)),
+                          scale=float(scale))
+
+
+def quant_mse(weights: np.ndarray, q: QuantizedLayer) -> float:
+    approx = q.codebook[q.widx.ravel().astype(int)] * q.scale
+    return float(np.mean((np.ravel(weights) - approx) ** 2))

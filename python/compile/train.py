@@ -1,0 +1,135 @@
+"""Surrogate-gradient training of the float SNN + conversion to the
+deployed integer network.
+
+The pipeline (per dataset): train float → per-layer k-means codebook
+quantization → integer threshold/leak scaling → :class:`model.IntLayer`
+stack whose accuracy is measured with the chip's exact integer semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, quantize
+from .kernels import ref
+
+
+@dataclasses.dataclass
+class TrainResult:
+    spec: model.NetSpec
+    params: list            # float weights
+    int_layers: list        # model.IntLayer
+    scales: list            # per-layer quantization scales
+    float_acc: float
+    int_acc: float
+
+
+def _adam_update(params, grads, mom, vel, step, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8):
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, mom, vel):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v
+
+
+def train_float(spec: model.NetSpec, rasters, labels, *, epochs=25,
+                batch=64, lr=2e-3, seed=0, log=print):
+    """Train the float surrogate network; returns (params, train_acc)."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(spec, key)
+    x = jnp.asarray(rasters, jnp.float32)
+    y = jnp.asarray(labels, jnp.int32)
+
+    def loss_fn(params, xb, yb):
+        counts = model.batched_float_forward(params, xb, spec)
+        logits = counts  # spike counts as class scores
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(yb.shape[0]), yb].mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    mom = [jnp.zeros_like(p) for p in params]
+    vel = [jnp.zeros_like(p) for p in params]
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    step = 0
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n, batch):
+            idx = order[i:i + batch]
+            step += 1
+            loss, grads = grad_fn(params, x[idx], y[idx])
+            params, mom, vel = _adam_update(params, grads, mom, vel, step,
+                                            lr=lr)
+            losses.append(float(loss))
+        if epoch % 5 == 0 or epoch == epochs - 1:
+            log(f"  epoch {epoch:3d}: loss {np.mean(losses):.4f}")
+    # train accuracy (cheap proxy printed by the caller on the test split)
+    counts = model.batched_float_forward(params, x, spec)
+    acc = float((jnp.argmax(counts, axis=1) == y).mean())
+    return params, acc
+
+
+def to_int_layers(spec: model.NetSpec, params) -> tuple:
+    """Quantize float weights into deployed integer layers.
+
+    Per layer: k-means codebook over the float weights, then the float
+    threshold/leak are rescaled into the integer domain with the same
+    scale (``w_f ≈ level × s`` ⇒ ``th_i = round(th_f / s)``).
+    """
+    int_layers, scales = [], []
+    for w in params:
+        q = quantize.kmeans_quantize(np.asarray(w), spec.n_levels,
+                                     spec.w_bits)
+        th_i = max(1, int(round(spec.threshold / q.scale)))
+        leak_i = max(0, int(round(spec.leak / q.scale)))
+        mp_bits = 16
+        hi = (1 << (mp_bits - 1)) - 1
+        if th_i > hi // 2:
+            # Saturation headroom: widen MP register to 24 bits (the chip
+            # supports configurable widths; extreme scales need headroom).
+            mp_bits = 24
+        int_layers.append(model.IntLayer(
+            widx=jnp.asarray(q.widx, jnp.int32),
+            codebook=jnp.asarray(q.codebook, jnp.int32),
+            params=ref.LayerParams(
+                threshold=th_i,
+                leak_mode=ref.LEAK_LINEAR if leak_i > 0 else ref.LEAK_NONE,
+                leak_value=leak_i,
+                reset_mode=ref.RESET_SUBTRACT,
+                mp_bits=mp_bits,
+            ),
+        ))
+        scales.append(q.scale)
+    return int_layers, scales
+
+
+def train_and_quantize(spec: model.NetSpec, train_rasters, train_labels,
+                       test_rasters, test_labels, *, epochs=25, batch=64,
+                       lr=2e-3, seed=0, log=print) -> TrainResult:
+    """Full pipeline; integer accuracy is measured on the test split with
+    the chip's exact semantics."""
+    log(f"training '{spec.name}' float surrogate "
+        f"({spec.inputs}→{'→'.join(map(str, spec.hidden))}→{spec.classes}, "
+        f"T={spec.timesteps})")
+    params, _ = train_float(spec, train_rasters, train_labels, epochs=epochs,
+                            batch=batch, lr=lr, seed=seed, log=log)
+    counts = model.batched_float_forward(
+        params, jnp.asarray(test_rasters, jnp.float32), spec)
+    float_acc = float((jnp.argmax(counts, axis=1)
+                       == jnp.asarray(test_labels)).mean())
+    int_layers, scales = to_int_layers(spec, params)
+    int_acc = model.int_accuracy(int_layers, test_rasters, test_labels)
+    log(f"  float test acc {float_acc:.3f} → integer (chip) acc {int_acc:.3f}")
+    return TrainResult(spec=spec, params=params, int_layers=int_layers,
+                       scales=scales, float_acc=float_acc, int_acc=int_acc)

@@ -1,0 +1,86 @@
+"""AOT pipeline tests: HLO text emission (constants included!), weights
+JSON schema, dataset export, and the run_one fast path end to end on a
+tiny spec."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, train
+from compile.kernels import ref
+
+
+def tiny_result():
+    spec = model.NetSpec(name="tiny", inputs=12, hidden=(8,), classes=3,
+                         timesteps=4)
+    rng = np.random.default_rng(0)
+    rasters = rng.random((30, 4, 12)) < 0.3
+    labels = rng.integers(0, 3, 30)
+    return spec, train.train_and_quantize(
+        spec, rasters, labels, rasters[:10], labels[:10], epochs=2,
+        log=lambda *_: None)
+
+
+def test_hlo_text_contains_full_constants(tmp_path):
+    spec, result = tiny_result()
+    aot.export_hlo(result, str(tmp_path), "tiny", log=lambda *_: None)
+    text = (tmp_path / "tiny.hlo.txt").read_text()
+    assert "HloModule" in text
+    assert "{...}" not in text, "large constants were elided"
+    meta = json.loads((tmp_path / "tiny.meta.json").read_text())
+    assert meta == {"inputs": 12, "timesteps": 4, "classes": 3}
+
+
+def test_weights_json_schema(tmp_path):
+    spec, result = tiny_result()
+    path = tmp_path / "tiny.weights.json"
+    aot.export_weights_json(result, str(path))
+    doc = json.loads(path.read_text())
+    assert doc["classes"] == 3
+    l0 = doc["layers"][0]
+    assert l0["inputs"] == 12 and l0["neurons"] == 8
+    assert len(l0["codebook"]) == spec.n_levels
+    assert len(l0["widx_hex"]) == 2 * 12 * 8
+    assert l0["reset"] in ("zero", "subtract")
+    assert l0["leak"]["mode"] in ("none", "linear", "shift")
+    # hex decodes to valid indexes
+    raw = bytes.fromhex(l0["widx_hex"])
+    assert all(b < spec.n_levels or b == 255 for b in raw)
+
+
+def test_hlo_executes_and_matches_int_forward(tmp_path):
+    """The lowered computation (via jax, pre-export) equals int_forward."""
+    spec, result = tiny_result()
+
+    def run_fn(raster):
+        return (model.int_forward(result.int_layers, raster,
+                                  use_pallas=True),)
+
+    raster = jnp.asarray(
+        np.random.default_rng(1).random((4, 12)) < 0.4, jnp.int32)
+    direct = model.int_forward(result.int_layers, raster, use_pallas=False)
+    lowered = jax.jit(run_fn).lower(
+        jax.ShapeDtypeStruct((4, 12), jnp.int32))
+    compiled = lowered.compile()
+    out = compiled(raster)[0]
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(direct))
+
+
+def test_dataset_export_caps_samples(tmp_path):
+    from compile import data
+    ds = data.make_nmnist(6, seed=3)
+    p = tmp_path / "d.json"
+    ds.export_json(str(p), limit=4)
+    doc = json.loads(p.read_text())
+    assert len(doc["samples"]) == 4
+
+
+def test_specs_match_workload_geometry():
+    assert aot.SPECS["nmnist"].inputs == 2312
+    assert aot.SPECS["dvsgesture"].inputs == 2048
+    assert aot.SPECS["cifar10"].inputs == 3072
+    assert aot.SPECS["dvsgesture"].classes == 11

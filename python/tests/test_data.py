@@ -1,0 +1,65 @@
+"""Synthetic dataset generators: geometry, sparsity, determinism, export."""
+
+import json
+
+import numpy as np
+
+from compile import data
+
+
+def test_geometry_matches_paper_datasets():
+    d = data.make_nmnist(4, seed=0)
+    assert d.inputs == 2312 and d.timesteps == 20 and d.classes == 10
+    d = data.make_dvsgesture(4, seed=0)
+    assert d.inputs == 2048 and d.timesteps == 25 and d.classes == 11
+    d = data.make_cifar(4, seed=0)
+    assert d.inputs == 3072 and d.timesteps == 16 and d.classes == 10
+
+
+def test_sparsity_in_snn_regime():
+    for make, lo, hi in [(data.make_nmnist, 0.8, 0.999),
+                         (data.make_dvsgesture, 0.85, 0.999),
+                         (data.make_cifar, 0.6, 0.99)]:
+        d = make(6, seed=1)
+        s = d.sparsity()
+        assert lo < s < hi, f"{d.name} sparsity {s}"
+
+
+def test_determinism():
+    a = data.make_nmnist(5, seed=7)
+    b = data.make_nmnist(5, seed=7)
+    np.testing.assert_array_equal(a.rasters, b.rasters)
+    c = data.make_nmnist(5, seed=8)
+    assert (a.rasters != c.rasters).any()
+
+
+def test_labels_round_robin():
+    d = data.make_cifar(25, seed=2)
+    assert (d.labels == np.arange(25) % 10).all()
+
+
+def test_classes_distinct():
+    d = data.make_nmnist(40, seed=3)
+    hists = []
+    for c in range(2):
+        sel = d.rasters[d.labels == c]
+        hists.append(sel.reshape(-1, d.inputs).mean(axis=0))
+    h0, h1 = hists
+    cos = (h0 @ h1) / (np.linalg.norm(h0) * np.linalg.norm(h1) + 1e-12)
+    assert cos < 0.9, f"class prototypes overlap (cos {cos})"
+
+
+def test_export_json_roundtrips(tmp_path):
+    d = data.make_dvsgesture(3, seed=4)
+    path = tmp_path / "ds.json"
+    d.export_json(str(path), limit=2)
+    doc = json.loads(path.read_text())
+    assert doc["inputs"] == 2048
+    assert len(doc["samples"]) == 2
+    # events reconstruct the raster
+    s0 = doc["samples"][0]
+    got = np.zeros((d.timesteps, d.inputs), dtype=bool)
+    for t, a in s0["events"]:
+        got[t, a] = True
+    np.testing.assert_array_equal(got, d.rasters[0])
+    assert s0["label"] == int(d.labels[0])

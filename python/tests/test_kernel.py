@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernel ≡ pure-jnp oracle, bit for bit.
+
+Hypothesis sweeps shapes, codebook sizes, dynamics modes and spike
+densities; dedicated tests pin the edge cases (saturation, pruned
+synapses, partial-update semantics, padding tiles).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.snn_core import layer_step, vmem_footprint_bytes
+
+NO_SYN = ref.NO_SYNAPSE
+
+
+def make_case(rng, a, n, c, density, mp_scale, prune):
+    spikes = (rng.random(a) < density).astype(np.int32)
+    widx = rng.integers(0, c, size=(a, n)).astype(np.int32)
+    if prune > 0:
+        mask = rng.random((a, n)) < prune
+        widx = np.where(mask, NO_SYN, widx)
+    codebook = rng.integers(-96, 97, size=c).astype(np.int32)
+    mp = rng.integers(-mp_scale, mp_scale + 1, size=n).astype(np.int32)
+    return spikes, widx, codebook, mp
+
+
+def run_both(spikes, widx, codebook, mp, p, block_n=128):
+    got_s, got_m = layer_step(
+        jnp.asarray(spikes), jnp.asarray(widx), jnp.asarray(codebook),
+        jnp.asarray(mp), p, block_n=block_n)
+    exp_s, exp_m = ref.layer_step_ref(
+        jnp.asarray(spikes), jnp.asarray(widx), jnp.asarray(codebook),
+        jnp.asarray(mp), p)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(exp_s))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(exp_m))
+    return np.asarray(got_s), np.asarray(got_m)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    a=st.integers(1, 96),
+    n=st.integers(1, 200),
+    c=st.sampled_from([4, 8, 16]),
+    density=st.floats(0.0, 1.0),
+    leak=st.sampled_from([
+        (ref.LEAK_NONE, 0), (ref.LEAK_LINEAR, 3), (ref.LEAK_SHIFT, 2)]),
+    reset=st.sampled_from([ref.RESET_ZERO, ref.RESET_SUBTRACT]),
+    prune=st.floats(0.0, 0.9),
+)
+def test_kernel_matches_ref_property(seed, a, n, c, density, leak, reset,
+                                     prune):
+    rng = np.random.default_rng(seed)
+    spikes, widx, codebook, mp = make_case(rng, a, n, c, density, 500, prune)
+    p = ref.LayerParams(threshold=rng.integers(1, 400),
+                        leak_mode=leak[0], leak_value=leak[1],
+                        reset_mode=reset, mp_bits=16)
+    run_both(spikes, widx, codebook, mp, p)
+
+
+def test_no_spikes_means_no_update():
+    rng = np.random.default_rng(0)
+    _, widx, codebook, mp = make_case(rng, 16, 32, 16, 0.0, 300, 0.0)
+    spikes = np.zeros(16, np.int32)
+    p = ref.LayerParams(threshold=10, leak_mode=ref.LEAK_LINEAR,
+                        leak_value=5, reset_mode=ref.RESET_SUBTRACT)
+    out, new_mp = run_both(spikes, widx, codebook, mp, p)
+    assert out.sum() == 0
+    np.testing.assert_array_equal(new_mp, mp)  # partial update: untouched
+
+
+def test_pruned_synapses_do_not_touch():
+    # One axon spikes but ALL its synapses are pruned.
+    spikes = np.array([1], np.int32)
+    widx = np.full((1, 8), NO_SYN, np.int32)
+    codebook = np.arange(-8, 8, dtype=np.int32)
+    mp = np.arange(8, dtype=np.int32) * 10
+    p = ref.LayerParams(threshold=5, leak_mode=ref.LEAK_LINEAR, leak_value=1,
+                        reset_mode=ref.RESET_ZERO)
+    out, new_mp = run_both(spikes, widx, codebook, mp, p)
+    assert out.sum() == 0
+    np.testing.assert_array_equal(new_mp, mp)
+
+
+def test_saturation_at_mp_bits():
+    spikes = np.ones(64, np.int32)
+    widx = np.zeros((64, 4), np.int32)      # all point at codebook[0]
+    codebook = np.array([96] + [0] * 15, np.int32)  # 64 × 96 = 6144/step
+    mp = np.full(4, 30000, np.int32)
+    p = ref.LayerParams(threshold=40000, leak_mode=ref.LEAK_NONE,
+                        leak_value=0, reset_mode=ref.RESET_ZERO, mp_bits=16)
+    out, new_mp = run_both(spikes, widx, codebook, mp, p)
+    assert out.sum() == 0                    # threshold above saturation
+    assert (new_mp == 32767).all()           # clamped at +2^15-1
+
+
+def test_subtract_reset_keeps_residue():
+    spikes = np.array([1], np.int32)
+    widx = np.zeros((1, 1), np.int32)
+    codebook = np.array([17] + [0] * 15, np.int32)
+    mp = np.zeros(1, np.int32)
+    p = ref.LayerParams(threshold=10, leak_mode=ref.LEAK_NONE, leak_value=0,
+                        reset_mode=ref.RESET_SUBTRACT)
+    out, new_mp = run_both(spikes, widx, codebook, mp, p)
+    assert out[0] == 1 and new_mp[0] == 7
+
+
+def test_linear_leak_never_crosses_zero():
+    spikes = np.array([1, 1], np.int32)
+    widx = np.array([[0], [0]], np.int32)
+    codebook = np.array([1] + [0] * 15, np.int32)   # acc = +2
+    mp = np.array([-1], np.int32)                   # m = 1, leak 5 → 0
+    p = ref.LayerParams(threshold=100, leak_mode=ref.LEAK_LINEAR,
+                        leak_value=5, reset_mode=ref.RESET_ZERO)
+    _, new_mp = run_both(spikes, widx, codebook, mp, p)
+    assert new_mp[0] == 0
+
+
+def test_shift_leak_arithmetic_on_negatives():
+    spikes = np.array([1], np.int32)
+    widx = np.zeros((1, 1), np.int32)
+    codebook = np.array([-100] + [0] * 15, np.int32)
+    mp = np.zeros(1, np.int32)
+    p = ref.LayerParams(threshold=1000, leak_mode=ref.LEAK_SHIFT,
+                        leak_value=2, reset_mode=ref.RESET_ZERO)
+    _, new_mp = run_both(spikes, widx, codebook, mp, p)
+    # -100 - (-100 >> 2) = -100 - (-25) = -75
+    assert new_mp[0] == -75
+
+
+def test_neuron_padding_tiles_are_exact():
+    # n deliberately NOT a multiple of the tile.
+    rng = np.random.default_rng(7)
+    spikes, widx, codebook, mp = make_case(rng, 24, 130, 16, 0.5, 200, 0.1)
+    p = ref.LayerParams(threshold=50, leak_mode=ref.LEAK_LINEAR,
+                        leak_value=2, reset_mode=ref.RESET_SUBTRACT)
+    run_both(spikes, widx, codebook, mp, p, block_n=64)
+
+
+@pytest.mark.parametrize("block_n", [16, 32, 128, 512])
+def test_block_size_invariance(block_n):
+    rng = np.random.default_rng(11)
+    spikes, widx, codebook, mp = make_case(rng, 48, 96, 8, 0.3, 100, 0.2)
+    p = ref.LayerParams(threshold=30, leak_mode=ref.LEAK_SHIFT, leak_value=3,
+                        reset_mode=ref.RESET_ZERO)
+    s1, m1 = run_both(spikes, widx, codebook, mp, p, block_n=block_n)
+    s2, m2 = run_both(spikes, widx, codebook, mp, p, block_n=128)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(m1, m2)
+
+
+def test_vmem_footprint_model():
+    f = vmem_footprint_bytes(a=1024, n=8192, c=16, block_n=128)
+    assert f["widx_tile"] == 4 * 1024 * 128
+    # The per-tile working set must fit a 16 MiB TPU VMEM comfortably.
+    assert f["total"] < 16 * 1024 * 1024

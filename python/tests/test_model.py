@@ -1,0 +1,100 @@
+"""L2 model tests: float/integer forwards, training convergence on a toy
+task, and float→int conversion consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, train
+from compile.kernels import ref
+
+
+def toy_spec(inputs=24, hidden=16, classes=3, timesteps=6):
+    return model.NetSpec(name="toy", inputs=inputs, hidden=(hidden,),
+                         classes=classes, timesteps=timesteps)
+
+
+def toy_data(spec, n, seed):
+    """Linearly separable toy task: class c lights input block c."""
+    rng = np.random.default_rng(seed)
+    block = spec.inputs // spec.classes
+    rasters = np.zeros((n, spec.timesteps, spec.inputs), dtype=bool)
+    labels = rng.integers(0, spec.classes, n)
+    for i, y in enumerate(labels):
+        lo = int(y) * block
+        p = np.full(spec.inputs, 0.02)
+        p[lo:lo + block] = 0.5
+        rasters[i] = rng.random((spec.timesteps, spec.inputs)) < p
+    return rasters, labels
+
+
+def test_float_forward_shapes():
+    spec = toy_spec()
+    params = model.init_params(spec, jax.random.PRNGKey(0))
+    raster = jnp.zeros((spec.timesteps, spec.inputs), jnp.float32)
+    counts = model.float_forward(params, raster, spec)
+    assert counts.shape == (spec.classes,)
+    batch = model.batched_float_forward(
+        params, jnp.zeros((4, spec.timesteps, spec.inputs)), spec)
+    assert batch.shape == (4, spec.classes)
+
+
+def test_spike_fn_surrogate_gradient_nonzero():
+    g = jax.grad(lambda v: model.spike_fn(v))(0.05)
+    assert g > 0.0
+    g_far = jax.grad(lambda v: model.spike_fn(v))(5.0)
+    assert g_far < g  # surrogate decays away from the threshold
+
+
+def test_training_learns_toy_task():
+    spec = toy_spec()
+    x, y = toy_data(spec, 120, seed=0)
+    params, acc = train.train_float(spec, x, y, epochs=12, batch=32,
+                                    lr=5e-3, seed=0, log=lambda *_: None)
+    assert acc > 0.9, f"float train acc {acc}"
+
+
+def test_int_conversion_preserves_function():
+    spec = toy_spec()
+    x, y = toy_data(spec, 120, seed=1)
+    params, _ = train.train_float(spec, x, y, epochs=12, batch=32, lr=5e-3,
+                                  seed=1, log=lambda *_: None)
+    int_layers, scales = train.to_int_layers(spec, params)
+    assert len(int_layers) == 2 and all(s > 0 for s in scales)
+    xt, yt = toy_data(spec, 60, seed=2)
+    acc = model.int_accuracy(int_layers, xt, yt)
+    assert acc > 0.8, f"integer acc {acc} lost too much vs float"
+
+
+def test_int_forward_pallas_equals_oracle_path():
+    spec = toy_spec()
+    x, y = toy_data(spec, 40, seed=3)
+    params, _ = train.train_float(spec, x, y, epochs=6, batch=20, lr=5e-3,
+                                  seed=3, log=lambda *_: None)
+    int_layers, _ = train.to_int_layers(spec, params)
+    r = jnp.asarray(x[0], jnp.int32)
+    via_pallas = model.int_forward(int_layers, r, use_pallas=True)
+    via_ref = model.int_forward(int_layers, r, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(via_pallas),
+                                  np.asarray(via_ref))
+
+
+def test_int_forward_deterministic():
+    spec = toy_spec()
+    x, _ = toy_data(spec, 10, seed=4)
+    params = model.init_params(spec, jax.random.PRNGKey(4))
+    int_layers, _ = train.to_int_layers(spec, params)
+    r = jnp.asarray(x[0], jnp.int32)
+    a = model.int_forward(int_layers, r, use_pallas=False)
+    b = model.int_forward(int_layers, r, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int_layer_params_within_mp_range():
+    spec = toy_spec()
+    params = model.init_params(spec, jax.random.PRNGKey(5))
+    int_layers, _ = train.to_int_layers(spec, params)
+    for l in int_layers:
+        hi = (1 << (l.params.mp_bits - 1)) - 1
+        assert 0 < l.params.threshold <= hi
+        assert l.params.leak_mode in (ref.LEAK_NONE, ref.LEAK_LINEAR)

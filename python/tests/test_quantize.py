@@ -1,0 +1,63 @@
+"""Quantizer invariants (mirror of the Rust-side property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.sampled_from([4, 8, 16]),
+       bits=st.sampled_from([4, 8, 16]),
+       size=st.integers(20, 400))
+def test_invariants(seed, n, bits, size):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.4, size)
+    q = quantize.kmeans_quantize(w, n, bits)
+    assert q.codebook.shape == (n,)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    assert (q.codebook >= lo).all() and (q.codebook <= hi).all()
+    assert (np.diff(q.codebook) >= 0).all(), "levels must be sorted"
+    assert q.widx.max() < n
+    # Nearest-level assignment in the deployed (integer×scale) domain.
+    approx = q.codebook[q.widx.astype(int)] * q.scale
+    for lvl in q.codebook:
+        alt = lvl * q.scale
+        assert (np.abs(w - approx) <= np.abs(w - alt) + 1e-9).all()
+
+
+def test_discrete_weights_recovered_exactly():
+    rng = np.random.default_rng(1)
+    vals = np.array([-0.5, -0.1, 0.2, 0.7])
+    w = vals[rng.integers(0, 4, 500)]
+    q = quantize.kmeans_quantize(w, 4, 8)
+    assert quantize.quant_mse(w, q) < 1e-4
+
+
+def test_more_levels_reduce_error():
+    rng = np.random.default_rng(2)
+    w = rng.normal(0, 0.3, 1000)
+    e4 = quantize.quant_mse(w, quantize.kmeans_quantize(w, 4, 8))
+    e16 = quantize.quant_mse(w, quantize.kmeans_quantize(w, 16, 8))
+    assert e16 < e4
+
+
+def test_all_zero_weights():
+    q = quantize.kmeans_quantize(np.zeros(64), 4, 8)
+    assert (q.codebook == 0).all()
+
+
+def test_shape_preserved():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(7, 11))
+    q = quantize.kmeans_quantize(w, 8, 8)
+    assert q.widx.shape == (7, 11)
+
+
+def test_invalid_geometry_rejected():
+    with pytest.raises(AssertionError):
+        quantize.kmeans_quantize(np.ones(10), 5, 8)
+    with pytest.raises(AssertionError):
+        quantize.kmeans_quantize(np.ones(10), 8, 7)

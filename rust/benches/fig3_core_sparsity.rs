@@ -1,0 +1,89 @@
+//! Fig. 3 reproduction: neuromorphic-core computing efficiency (GSOP/s)
+//! and synapse energy efficiency (pJ/SOP) over the 0–100 % spike-sparsity
+//! sweep at 200 MHz, sparse core vs the traditional dense baseline.
+//!
+//! Paper anchors: best 0.627 GSOP/s and 0.627 pJ/SOP; ≥0.426 GSOP/s and
+//! ≤1.196 pJ/SOP in the sparse regime; ×2.69 energy-efficiency gain over
+//! the traditional scheme.
+
+use fullerene_soc::benches_support::{self, spikes_at_sparsity};
+use fullerene_soc::util::bench::Bench;
+use fullerene_soc::util::prng::Rng;
+
+fn main() {
+    // --- the figure itself -------------------------------------------------
+    println!("## Fig. 3: core efficiency vs spike sparsity (200 MHz)");
+    println!("{}", benches_support::fig3_table(11, 42).render());
+    let pts = benches_support::fig3_sweep(11, 42);
+    let best = pts
+        .iter()
+        .filter(|p| p.gsops.is_finite() && p.pj_per_sop.is_finite())
+        .fold((0.0f64, f64::INFINITY), |acc, p| {
+            (acc.0.max(p.gsops), acc.1.min(p.pj_per_sop))
+        });
+    println!(
+        "best computing efficiency {:.3} GSOP/s (paper 0.627), best energy \
+         {:.3} pJ/SOP (paper 0.627)",
+        best.0, best.1
+    );
+    let cross = pts.iter().find(|p| p.gain >= 2.69);
+    match cross {
+        Some(p) => println!(
+            "2.69x energy-efficiency gain (paper's headline) reached at \
+             sparsity {:.0}%",
+            p.sparsity * 100.0
+        ),
+        None => println!("2.69x gain not reached in sweep"),
+    }
+
+    // --- wall-clock of the simulator itself (perf tracking) ----------------
+    let mut b = Bench::new("fig3_core_sparsity");
+    let energy = fullerene_soc::energy::EnergyParams::nominal();
+    for sparsity in [0.0f64, 0.5, 0.9] {
+        let mut rng = Rng::new(7);
+        let spikes = spikes_at_sparsity(sparsity, &mut rng);
+        let mut core = benches_support_core(&energy);
+        b.bench(&format!("core-timestep/s={sparsity}"), || {
+            core.stage_input_spikes(&spikes);
+            core.tick_timestep().stats.cycles
+        });
+    }
+    b.finish();
+}
+
+fn benches_support_core(
+    energy: &fullerene_soc::energy::EnergyParams,
+) -> fullerene_soc::core::NeuroCore {
+    use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use fullerene_soc::core::{Codebook, SynapsesBuilder};
+    let cb = Codebook::default_log16();
+    let mut bld = SynapsesBuilder::new(
+        benches_support_axons(),
+        benches_support_neurons(),
+        cb.n(),
+    );
+    bld.connect_dense(|a, n| ((a * 31 + n * 7) % 16) as u8).unwrap();
+    fullerene_soc::core::NeuroCore::new(
+        0,
+        benches_support_axons(),
+        benches_support_neurons(),
+        NeuronParams {
+            threshold: 5000,
+            leak: LeakMode::Linear(2),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        },
+        cb,
+        bld.build(),
+        energy.clone(),
+    )
+    .unwrap()
+}
+
+fn benches_support_axons() -> usize {
+    fullerene_soc::benches_support::FIG3_AXONS
+}
+
+fn benches_support_neurons() -> usize {
+    fullerene_soc::benches_support::FIG3_NEURONS
+}

@@ -1,0 +1,76 @@
+//! Table I reproduction: end-to-end chip metrics per workload — accuracy,
+//! pJ/SOP, power, power density, neuron density, latency — on the trained
+//! artifacts at the paper's 100 MHz / 1.08 V application operating point.
+//!
+//! Paper anchors (this work's column): 0.96 pJ/SOP (NMNIST), 1.17 pJ/SOP
+//! (DVS Gesture), 1.24 pJ/SOP (Cifar-10); accuracy 98.8 / 92.7 / 81.5 %;
+//! 2.8–113 mW; 0.52 mW/mm² floor; 30.23 K neurons/mm²; 160 K neurons;
+//! 1280 M synapses.
+
+use fullerene_soc::datasets::Dataset;
+use fullerene_soc::energy::{AreaModel, ChipReport};
+use fullerene_soc::nn::load_weights_json;
+use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::util::bench::Bench;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FSOC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    let samples: usize = std::env::var("FSOC_TABLE1_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+
+    // --- static rows of Table I --------------------------------------------
+    let area = AreaModel::paper_chip();
+    println!("## Table I static rows");
+    println!(
+        "neurons {} (paper 160 K) | synapses {} M (paper 1280 M) | \
+         neuron density {:.2} K/mm^2 (paper 30.23) | die {:.2} mm^2",
+        area.total_neurons(),
+        area.total_synapses() / (1024 * 1024),
+        area.neuron_density_k_per_mm2(),
+        area.die_mm2
+    );
+
+    // --- dynamic rows: run each trained workload ----------------------------
+    let mut reports = Vec::new();
+    let mut b = Bench::new("table1_chip");
+    for name in ["nmnist", "dvsgesture", "cifar10"] {
+        let wpath = dir.join(format!("{name}.weights.json"));
+        let dpath = dir.join(format!("dataset_{name}.json"));
+        if !wpath.exists() || !dpath.exists() {
+            println!("[{name}] artifacts missing — run `make artifacts`; skipping");
+            continue;
+        }
+        let net = load_weights_json(&wpath).expect("weights parse");
+        let ds = Dataset::load_json(&dpath).expect("dataset parse");
+        let mut soc = Soc::new(net.clone(), SocConfig::default()).expect("soc");
+        let acc = soc.run_dataset(&ds, samples).expect("run");
+        let mut rep = soc.finish_report(name);
+        rep.accuracy = Some(acc);
+        reports.push(rep);
+
+        // Per-sample wall-clock of the whole-chip simulator.
+        let mut soc2 = Soc::new(net, SocConfig::default()).expect("soc");
+        let sample = ds.samples[0].clone();
+        b.bench(&format!("chip-sample/{name}"), || {
+            soc2.run_sample(&sample, true).unwrap().sops
+        });
+    }
+    if !reports.is_empty() {
+        println!("\n## Table I dynamic rows (measured, {samples} samples each)");
+        println!("{}", ChipReport::table(&reports).render());
+        println!(
+            "paper anchors: 0.96 / 1.17 / 1.24 pJ/SOP; accuracy 98.8 / 92.7 / \
+             81.5 %; power floor 2.8 mW → 0.52 mW/mm^2"
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,350 @@
+//! Shared figure-reproduction logic used by both the CLI (`bench`
+//! subcommand) and the `cargo bench` targets, so every figure has exactly
+//! one implementation.
+//!
+//! - [`fig3_sweep`] — core computing efficiency (GSOP/s) and synapse
+//!   energy (pJ/SOP) vs spike sparsity, sparse core vs the dense
+//!   traditional baseline (paper Fig. 3).
+//! - [`fig5c_sweep`] — CMRouter throughput (spike/cycle) and transmission
+//!   energy (pJ/hop) for P2P and 1-to-3 broadcast (paper Fig. 5c).
+//! - [`fig6_power`] — RISC-V average power with sleep/clock-gating vs the
+//!   busy-wait baseline on the MNIST control protocol (paper Fig. 6).
+
+use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use crate::core::{Codebook, DenseCore, NeuroCore, SynapsesBuilder};
+use crate::energy::constants::F_CORE_HZ;
+use crate::energy::{EnergyParams, EventClass};
+use crate::metrics::Table;
+use crate::noc::traffic::{Pattern, TrafficGen};
+use crate::noc::{NocSim, Topology};
+use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
+use crate::riscv::firmware;
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// Fig. 3 reference core geometry: 1024 axons fully connected to 256
+/// neurons (256 fan-out per axon, 262 144 synapses).
+pub const FIG3_AXONS: usize = 1024;
+/// Neurons in the Fig. 3 reference core.
+pub const FIG3_NEURONS: usize = 256;
+
+/// One Fig. 3 measurement point.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    /// Zero fraction of the input spike vector.
+    pub sparsity: f64,
+    /// Sparse-core computing efficiency (GSOP/s at 200 MHz).
+    pub gsops: f64,
+    /// Sparse-core synapse energy (pJ/SOP).
+    pub pj_per_sop: f64,
+    /// Dense-baseline energy per *useful* SOP (pJ/SOP).
+    pub baseline_pj_per_sop: f64,
+    /// Baseline computing efficiency over useful SOPs (GSOP/s).
+    pub baseline_gsops: f64,
+    /// Energy-efficiency gain of the sparse design (×).
+    pub gain: f64,
+}
+
+fn fig3_core(energy: &EnergyParams) -> NeuroCore {
+    let cb = Codebook::default_log16();
+    let mut b = SynapsesBuilder::new(FIG3_AXONS, FIG3_NEURONS, cb.n());
+    b.connect_dense(|a, n| ((a * 31 + n * 7) % 16) as u8).unwrap();
+    NeuroCore::new(
+        0,
+        FIG3_AXONS,
+        FIG3_NEURONS,
+        NeuronParams {
+            threshold: 5000,
+            leak: LeakMode::Linear(2),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        },
+        cb,
+        b.build(),
+        energy.clone(),
+    )
+    .unwrap()
+}
+
+fn fig3_dense(energy: &EnergyParams) -> DenseCore {
+    let cb = Codebook::default_log16();
+    let mut b = SynapsesBuilder::new(FIG3_AXONS, FIG3_NEURONS, cb.n());
+    b.connect_dense(|a, n| ((a * 31 + n * 7) % 16) as u8).unwrap();
+    DenseCore::new(
+        FIG3_AXONS,
+        FIG3_NEURONS,
+        NeuronParams {
+            threshold: 5000,
+            leak: LeakMode::Linear(2),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        },
+        cb,
+        b.build(),
+        energy.clone(),
+    )
+    .unwrap()
+}
+
+/// Random spike vector (axon ids) at the requested zero-fraction.
+pub fn spikes_at_sparsity(sparsity: f64, rng: &mut Rng) -> Vec<u32> {
+    let k = ((1.0 - sparsity) * FIG3_AXONS as f64).round() as usize;
+    rng.choose_k(FIG3_AXONS, k).into_iter().map(|a| a as u32).collect()
+}
+
+/// Run the Fig. 3 sweep over `points` sparsity values in [0, 1].
+pub fn fig3_sweep(points: usize, seed: u64) -> Vec<Fig3Point> {
+    let energy = EnergyParams::nominal();
+    let timesteps = 12u32; // averages out updater/scan edge effects
+    (0..points)
+        .map(|i| {
+            let sparsity = i as f64 / (points - 1).max(1) as f64;
+            let mut rng = Rng::new(seed + i as u64);
+
+            // --- sparse core -------------------------------------------
+            let mut core = fig3_core(&energy);
+            let mut cycles = 0u64;
+            for _ in 0..timesteps {
+                core.stage_input_spikes(&spikes_at_sparsity(sparsity, &mut rng));
+                cycles += core.tick_timestep().stats.cycles;
+            }
+            core.finish_window(cycles);
+            let sops = core.ledger().count(EventClass::Sop);
+            let total_pj = core.ledger().total_pj(&energy, F_CORE_HZ);
+            let secs = cycles as f64 / F_CORE_HZ;
+            let gsops = if secs > 0.0 { sops as f64 / secs / 1e9 } else { 0.0 };
+            let pj_per_sop = if sops > 0 { total_pj / sops as f64 } else { f64::NAN };
+
+            // --- dense baseline ----------------------------------------
+            let mut rng = Rng::new(seed + i as u64); // same spike draws
+            let mut dense = fig3_dense(&energy);
+            let mut dcycles = 0u64;
+            let mut useful = 0u64;
+            for _ in 0..timesteps {
+                dense.stage_input_spikes(&spikes_at_sparsity(sparsity, &mut rng));
+                let (_, st) = dense.tick_timestep();
+                dcycles += st.cycles;
+                useful += st.useful_sops;
+            }
+            dense.finish_window(dcycles);
+            let dpj = dense.ledger().total_pj(&energy, F_CORE_HZ);
+            let dsecs = dcycles as f64 / F_CORE_HZ;
+            let baseline_pj = if useful > 0 { dpj / useful as f64 } else { f64::NAN };
+            let baseline_gsops = if dsecs > 0.0 { useful as f64 / dsecs / 1e9 } else { 0.0 };
+
+            Fig3Point {
+                sparsity,
+                gsops,
+                pj_per_sop,
+                baseline_pj_per_sop: baseline_pj,
+                baseline_gsops,
+                gain: baseline_pj / pj_per_sop,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 3 as a printable table.
+pub fn fig3_table(points: usize, seed: u64) -> Table {
+    let rows = fig3_sweep(points, seed);
+    let mut t = Table::new(&[
+        "sparsity",
+        "GSOP/s",
+        "pJ/SOP",
+        "baseline pJ/SOP",
+        "baseline GSOP/s",
+        "gain x",
+    ]);
+    for r in &rows {
+        t.push_row(vec![
+            format!("{:.0}%", r.sparsity * 100.0),
+            format!("{:.3}", r.gsops),
+            format!("{:.3}", r.pj_per_sop),
+            format!("{:.3}", r.baseline_pj_per_sop),
+            format!("{:.3}", r.baseline_gsops),
+            format!("{:.2}", r.gain),
+        ]);
+    }
+    t
+}
+
+/// One Fig. 5c measurement point.
+#[derive(Debug, Clone)]
+pub struct Fig5cPoint {
+    /// Traffic pattern name.
+    pub pattern: String,
+    /// Offered load (flits/core/cycle).
+    pub load: f64,
+    /// Delivered throughput (spike/cycle over the whole NoC).
+    pub throughput: f64,
+    /// Mean latency (cycles).
+    pub latency: f64,
+    /// Hop energy (pJ/hop).
+    pub pj_per_hop: f64,
+}
+
+/// Router/NoC load sweep (Fig. 5c): P2P and 1-to-3 broadcast.
+pub fn fig5c_sweep(seed: u64) -> Vec<Fig5cPoint> {
+    let mut out = Vec::new();
+    for &(name, pattern) in &[
+        ("p2p", Pattern::Uniform),
+        ("bcast-1to3", Pattern::Broadcast(3)),
+    ] {
+        for &load in &[0.02, 0.05, 0.1, 0.2, 0.4, 0.8] {
+            let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+            let mut tg = TrafficGen::new(pattern, load, 20, seed);
+            // Offered load for `cycles` then drain.
+            if tg.run(&mut sim, 400).is_err() {
+                continue; // saturated beyond drain budget: skip point
+            }
+            let st = sim.stats();
+            out.push(Fig5cPoint {
+                pattern: name.to_string(),
+                load,
+                throughput: st.throughput,
+                latency: st.avg_latency,
+                pj_per_hop: sim.pj_per_hop().unwrap_or(f64::NAN),
+            });
+        }
+    }
+    out
+}
+
+/// Fig. 5c as a printable table.
+pub fn fig5c_table(seed: u64) -> Table {
+    let rows = fig5c_sweep(seed);
+    let mut t = Table::new(&["pattern", "load", "spike/cycle", "latency", "pJ/hop"]);
+    for r in &rows {
+        t.push_row(vec![
+            r.pattern.clone(),
+            format!("{:.2}", r.load),
+            format!("{:.3}", r.throughput),
+            format!("{:.1}", r.latency),
+            format!("{:.4}", r.pj_per_hop),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: run the MNIST control protocol on the ISS twice — with
+/// sleep/clock gating and as the busy-wait baseline — and report average
+/// power at `f_cpu` = 16 MHz (the paper's low-power CPU operating point).
+pub fn fig6_power() -> Result<(f64, f64, f64)> {
+    let f_cpu = 16.0e6;
+    let params = EnergyParams::nominal();
+    let timesteps = 200u32;
+    // Each timestep the neuromorphic processor takes ~3000 CPU cycles.
+    let window = 3000u64;
+
+    // --- gated (wfi) variant -------------------------------------------
+    let mut cpu = Cpu::new(64 * 1024, true);
+    cpu.load_program(&firmware::mnist_control(timesteps, 64)?)?;
+    cpu.run(1_000_000)?;
+    for t in 0..timesteps {
+        cpu.lsu.mmio.npu_status |= 1;
+        cpu.wake(WakeEvent::TimestepSwitch);
+        let mut spent = 0u64;
+        while cpu.state == CpuState::Running {
+            spent += cpu.step()?;
+        }
+        while spent < window {
+            spent += cpu.step()?; // gated sleep cycles
+        }
+        let _ = t;
+    }
+    cpu.lsu.mmio.npu_status &= !1;
+    cpu.wake(WakeEvent::NetworkFinish);
+    cpu.run(1_000_000)?;
+    let gated = crate::riscv::power::report(&cpu.ledger, &cpu.clocks, cpu.instret, &params, f_cpu);
+
+    // --- busy-wait baseline ---------------------------------------------
+    let mut cpu = Cpu::new(64 * 1024, false);
+    cpu.load_program(&firmware::mnist_control_busywait(timesteps, 64)?)?;
+    let total_budget = window * timesteps as u64;
+    let mut spent = 0u64;
+    while cpu.state == CpuState::Running && spent < total_budget {
+        spent += cpu.step()?;
+    }
+    cpu.lsu.mmio.npu_status &= !1; // finish
+    while cpu.state == CpuState::Running {
+        let _ = cpu.step()?;
+    }
+    let _ = spent;
+    let baseline =
+        crate::riscv::power::report(&cpu.ledger, &cpu.clocks, cpu.instret, &params, f_cpu);
+
+    let reduction = 1.0 - gated.avg_power_mw / baseline.avg_power_mw;
+    Ok((gated.avg_power_mw, baseline.avg_power_mw, reduction))
+}
+
+/// Fig. 6 as a printable table.
+pub fn fig6_table() -> Result<Table> {
+    let (gated, baseline, reduction) = fig6_power()?;
+    let mut t = Table::new(&["variant", "avg power (mW)"]);
+    t.push_row(vec!["sleep + clock gating".into(), format!("{gated:.3}")]);
+    t.push_row(vec!["busy-wait baseline".into(), format!("{baseline:.3}")]);
+    t.push_row(vec!["reduction".into(), format!("{:.1}%", reduction * 100.0)]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shapes_hold() {
+        // Sweep 0–75 % (at exactly 100 % sparsity no SOP runs, pJ/SOP is
+        // undefined — the paper's curve likewise diverges at the edge).
+        let pts = fig3_sweep(5, 1);
+        // GSOP/s decreases as sparsity rises (scan overhead dominates).
+        assert!(pts[0].gsops > pts[3].gsops, "{pts:?}");
+        // Energy/SOP grows with sparsity (fixed scan amortized over
+        // fewer useful ops).
+        assert!(pts[3].pj_per_sop >= pts[0].pj_per_sop * 0.9);
+        // Sparse design beats the dense baseline increasingly with
+        // sparsity; at high sparsity by a large factor.
+        assert!(pts[1].gain > 1.0);
+        assert!(pts[3].gain > pts[1].gain);
+        // The paper's 2.69× lands inside our sweep's gain range.
+        assert!(
+            pts[3].gain > 2.69 && pts[0].gain < 2.69,
+            "gain range {:?}",
+            pts.iter().map(|p| p.gain).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fig3_dense_point_near_peak_rate() {
+        let pts = fig3_sweep(3, 2);
+        // At sparsity 0 the SPE is the bottleneck: 4 SOP/cycle × 200 MHz
+        // = 0.8 GSOP/s ceiling; pipeline overheads land us near the
+        // paper's 0.627.
+        assert!(pts[0].gsops > 0.5 && pts[0].gsops <= 0.8, "gsops {}", pts[0].gsops);
+    }
+
+    #[test]
+    fn fig5c_broadcast_cheaper_per_hop() {
+        let rows = fig5c_sweep(3);
+        let p2p: Vec<&Fig5cPoint> = rows.iter().filter(|r| r.pattern == "p2p").collect();
+        let bc: Vec<&Fig5cPoint> = rows.iter().filter(|r| r.pattern == "bcast-1to3").collect();
+        assert!(!p2p.is_empty() && !bc.is_empty());
+        assert!(bc[0].pj_per_hop < p2p[0].pj_per_hop);
+        // Throughput rises with offered load.
+        assert!(p2p.last().unwrap().throughput > p2p[0].throughput);
+    }
+
+    #[test]
+    fn fig6_gating_saves_about_40_percent() {
+        let (gated, baseline, reduction) = fig6_power().unwrap();
+        assert!(gated < baseline);
+        // Paper anchors: 0.434 mW gated, −43 % vs baseline.
+        assert!(
+            (gated - 0.434).abs() < 0.434 * 0.25,
+            "gated {gated} mW too far from the paper's 0.434"
+        );
+        assert!(
+            reduction > 0.3 && reduction < 0.6,
+            "reduction {reduction} (gated {gated}, baseline {baseline})"
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! Configuration system: JSON config files + validation for the CLI
+//! launcher (the offline environment has no TOML crate, so configs are
+//! JSON through the in-tree parser — same schema keys as the CLI flags).
+//!
+//! ```json
+//! {
+//!   "chip": {
+//!     "n_cores": 20, "max_neurons_per_core": 8192, "fifo_depth": 4,
+//!     "f_core_mhz": 100, "f_cpu_mhz": 50, "supply_v": 1.08,
+//!     "use_noc": true, "drive_cpu": true
+//!   },
+//!   "workload": {"name": "nmnist", "samples": 50, "seed": 7},
+//!   "check": "reference",
+//!   "artifacts": "artifacts"
+//! }
+//! ```
+
+use crate::coordinator::{ExperimentConfig, GoldenCheck};
+use crate::datasets::Workload;
+use crate::soc::SocConfig;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Workload selection from config.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Which dataset.
+    pub workload: Workload,
+    /// Samples to generate/run.
+    pub samples: usize,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Chip parameters.
+    pub soc: SocConfig,
+    /// Workload parameters.
+    pub workload: WorkloadConfig,
+    /// Golden-check mode.
+    pub check: GoldenCheck,
+    /// Artifacts directory.
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            soc: SocConfig::default(),
+            workload: WorkloadConfig {
+                workload: Workload::Nmnist,
+                samples: 20,
+                seed: 7,
+            },
+            check: GoldenCheck::Reference,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// Parse a workload name.
+pub fn parse_workload(name: &str) -> Result<Workload> {
+    Ok(match name {
+        "nmnist" => Workload::Nmnist,
+        "dvsgesture" | "dvs-gesture" | "dvs" => Workload::DvsGesture,
+        "cifar10" | "cifar" => Workload::Cifar10,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown workload '{other}' (nmnist | dvsgesture | cifar10)"
+            )))
+        }
+    })
+}
+
+/// Parse a golden-check mode.
+pub fn parse_check(name: &str) -> Result<GoldenCheck> {
+    Ok(match name {
+        "none" => GoldenCheck::None,
+        "reference" | "ref" => GoldenCheck::Reference,
+        "xla" => GoldenCheck::Xla,
+        "both" => GoldenCheck::Both,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown check mode '{other}' (none | reference | xla | both)"
+            )))
+        }
+    })
+}
+
+impl RunConfig {
+    /// Load and validate a JSON config file.
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let j = Json::read_file(path)?;
+        let mut cfg = RunConfig::default();
+        if let Some(chip) = j.get_opt("chip") {
+            let s = &mut cfg.soc;
+            if let Some(v) = chip.get_opt("n_cores") {
+                s.n_cores = v.as_usize()?;
+            }
+            if let Some(v) = chip.get_opt("max_neurons_per_core") {
+                s.max_neurons_per_core = v.as_usize()?;
+            }
+            if let Some(v) = chip.get_opt("fifo_depth") {
+                s.fifo_depth = v.as_usize()?;
+            }
+            if let Some(v) = chip.get_opt("f_core_mhz") {
+                s.f_core_hz = v.as_f64()? * 1.0e6;
+            }
+            if let Some(v) = chip.get_opt("f_cpu_mhz") {
+                s.f_cpu_hz = v.as_f64()? * 1.0e6;
+            }
+            if let Some(v) = chip.get_opt("supply_v") {
+                s.supply_v = v.as_f64()?;
+            }
+            if let Some(v) = chip.get_opt("use_noc") {
+                s.use_noc = v.as_bool()?;
+            }
+            if let Some(v) = chip.get_opt("drive_cpu") {
+                s.drive_cpu = v.as_bool()?;
+            }
+        }
+        if let Some(w) = j.get_opt("workload") {
+            cfg.workload.workload = parse_workload(w.get("name")?.as_str()?)?;
+            if let Some(v) = w.get_opt("samples") {
+                cfg.workload.samples = v.as_usize()?;
+            }
+            if let Some(v) = w.get_opt("seed") {
+                cfg.workload.seed = v.as_i64()? as u64;
+            }
+        }
+        if let Some(c) = j.get_opt("check") {
+            cfg.check = parse_check(c.as_str()?)?;
+        }
+        if let Some(a) = j.get_opt("artifacts") {
+            cfg.artifacts = PathBuf::from(a.as_str()?);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.soc.n_cores == 0 || self.soc.n_cores > 20 {
+            return Err(Error::Config(format!(
+                "n_cores {} outside 1..=20 (one fullerene domain)",
+                self.soc.n_cores
+            )));
+        }
+        if self.soc.max_neurons_per_core == 0
+            || self.soc.max_neurons_per_core > crate::core::MAX_NEURONS_PER_CORE
+        {
+            return Err(Error::Config(format!(
+                "max_neurons_per_core {} outside 1..={}",
+                self.soc.max_neurons_per_core,
+                crate::core::MAX_NEURONS_PER_CORE
+            )));
+        }
+        if self.soc.fifo_depth == 0 || self.soc.fifo_depth > 64 {
+            return Err(Error::Config("fifo_depth outside 1..=64".into()));
+        }
+        if !(0.9..=1.4).contains(&self.soc.supply_v) {
+            return Err(Error::Config(format!(
+                "supply {} V outside the 0.9–1.4 V model range",
+                self.soc.supply_v
+            )));
+        }
+        if self.workload.samples == 0 {
+            return Err(Error::Config("samples must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Convert to an [`ExperimentConfig`].
+    pub fn experiment(&self) -> ExperimentConfig {
+        ExperimentConfig {
+            soc: self.soc.clone(),
+            limit: self.workload.samples,
+            check: self.check,
+            artifacts: self.artifacts.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_full_config() {
+        let text = r#"{
+            "chip": {"n_cores": 10, "f_core_mhz": 200, "use_noc": false},
+            "workload": {"name": "cifar10", "samples": 5, "seed": 3},
+            "check": "none"
+        }"#;
+        let tmp = std::env::temp_dir().join("fsoc_cfg_test.json");
+        std::fs::write(&tmp, text).unwrap();
+        let cfg = RunConfig::load(&tmp).unwrap();
+        assert_eq!(cfg.soc.n_cores, 10);
+        assert!((cfg.soc.f_core_hz - 200.0e6).abs() < 1.0);
+        assert!(!cfg.soc.use_noc);
+        assert_eq!(cfg.workload.samples, 5);
+        assert_eq!(cfg.check, GoldenCheck::None);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn rejects_bad_ranges() {
+        let mut cfg = RunConfig::default();
+        cfg.soc.n_cores = 21;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.soc.supply_v = 2.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert!(parse_workload("nmnist").is_ok());
+        assert!(parse_workload("bogus").is_err());
+        assert!(parse_check("both").is_ok());
+        assert!(parse_check("bogus").is_err());
+    }
+}

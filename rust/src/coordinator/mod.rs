@@ -1,0 +1,7 @@
+//! Experiment coordination: ties datasets, the SoC simulator and the XLA
+//! golden model together into reproducible experiment runs (the layer the
+//! CLI and benches drive).
+
+pub mod runner;
+
+pub use runner::{ExperimentConfig, ExperimentRunner, GoldenCheck};

@@ -1,0 +1,194 @@
+//! [`ExperimentRunner`]: run a workload on the simulated chip, optionally
+//! cross-checking every sample against the functional references (the
+//! in-process integer reference and/or the AOT-compiled XLA golden model).
+
+use crate::datasets::Dataset;
+use crate::energy::ChipReport;
+use crate::nn::NetworkDesc;
+use crate::runtime::GoldenModel;
+use crate::soc::{Soc, SocConfig};
+use crate::{Error, Result};
+use std::path::PathBuf;
+
+/// What to validate against while running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GoldenCheck {
+    /// No cross-checking (fastest).
+    None,
+    /// Check against [`NetworkDesc::reference_run`] (pure Rust).
+    Reference,
+    /// Check against the XLA-executed AOT artifact.
+    Xla,
+    /// Check against both.
+    Both,
+}
+
+/// Experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Chip configuration.
+    pub soc: SocConfig,
+    /// Max samples to run.
+    pub limit: usize,
+    /// Cross-check mode.
+    pub check: GoldenCheck,
+    /// Artifacts directory (for the XLA golden model).
+    pub artifacts: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            soc: SocConfig::default(),
+            limit: usize::MAX,
+            check: GoldenCheck::Reference,
+            artifacts: GoldenModel::artifacts_dir(),
+        }
+    }
+}
+
+/// Outcome of an experiment run.
+#[derive(Debug)]
+pub struct ExperimentOutcome {
+    /// Chip-level report (Table-I row).
+    pub report: ChipReport,
+    /// Samples where the chip disagreed with a reference (should be 0).
+    pub mismatches: u64,
+    /// Samples checked against a golden model.
+    pub checked: u64,
+}
+
+/// The runner.
+pub struct ExperimentRunner {
+    net: NetworkDesc,
+    config: ExperimentConfig,
+    golden: Option<GoldenModel>,
+}
+
+impl ExperimentRunner {
+    /// Build a runner; loads the XLA golden model when requested.
+    pub fn new(net: NetworkDesc, config: ExperimentConfig) -> Result<ExperimentRunner> {
+        let golden = match config.check {
+            GoldenCheck::Xla | GoldenCheck::Both => {
+                Some(GoldenModel::load(&config.artifacts, &net.name)?)
+            }
+            _ => None,
+        };
+        Ok(ExperimentRunner { net, config, golden })
+    }
+
+    /// Run the dataset through the chip; returns the report and the
+    /// mismatch count against the requested references.
+    pub fn run(&self, ds: &Dataset) -> Result<ExperimentOutcome> {
+        if ds.inputs != self.net.input_size() {
+            return Err(Error::Config(format!(
+                "dataset inputs {} != network inputs {}",
+                ds.inputs,
+                self.net.input_size()
+            )));
+        }
+        let mut soc = Soc::new(self.net.clone(), self.config.soc.clone())?;
+        let mut mismatches = 0u64;
+        let mut checked = 0u64;
+        let n = ds.samples.len().min(self.config.limit);
+        for sample in &ds.samples[..n] {
+            let r = soc.run_sample(sample, true)?;
+            let use_ref = matches!(
+                self.config.check,
+                GoldenCheck::Reference | GoldenCheck::Both
+            );
+            if use_ref {
+                let raster = sample.to_raster(self.net.timesteps, self.net.input_size());
+                let expect = self.net.reference_run(&raster);
+                checked += 1;
+                if expect != r.counts {
+                    mismatches += 1;
+                }
+            }
+            if let Some(g) = &self.golden {
+                let expect = g.run_sample(sample)?;
+                checked += 1;
+                if expect != r.counts {
+                    mismatches += 1;
+                }
+            }
+        }
+        Ok(ExperimentOutcome {
+            report: soc.finish_report(&ds.name),
+            mismatches,
+            checked,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::datasets::Workload;
+    use crate::nn::network::LayerDesc;
+
+    fn small_net_for(w: Workload, hidden: usize) -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 60,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        let inputs = w.inputs();
+        let classes = w.classes();
+        NetworkDesc {
+            name: format!("{}-test", w.name()),
+            layers: vec![
+                LayerDesc {
+                    name: "h".into(),
+                    inputs,
+                    neurons: hidden,
+                    codebook: cb.clone(),
+                    widx: (0..inputs * hidden).map(|i| ((i * 7) % 16) as u8).collect(),
+                    neuron_params: params.clone(),
+                },
+                LayerDesc {
+                    name: "o".into(),
+                    inputs: hidden,
+                    neurons: classes,
+                    codebook: cb,
+                    widx: (0..hidden * classes).map(|i| ((i * 5) % 16) as u8).collect(),
+                    neuron_params: params,
+                },
+            ],
+            timesteps: w.timesteps(),
+            classes,
+        }
+    }
+
+    #[test]
+    fn chip_never_disagrees_with_reference() {
+        let net = small_net_for(Workload::Nmnist, 40);
+        let ds = Workload::Nmnist.generate(4, 11);
+        let runner = ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                limit: 4,
+                check: GoldenCheck::Reference,
+                ..ExperimentConfig::default()
+            },
+        )
+        .unwrap();
+        let out = runner.run(&ds).unwrap();
+        assert_eq!(out.checked, 4);
+        assert_eq!(out.mismatches, 0, "cycle sim diverged from reference");
+        assert!(out.report.sops > 0);
+    }
+
+    #[test]
+    fn dataset_network_mismatch_rejected() {
+        let net = small_net_for(Workload::Nmnist, 10);
+        let ds = Workload::Cifar10.generate(2, 1);
+        let runner =
+            ExperimentRunner::new(net, ExperimentConfig::default()).unwrap();
+        assert!(runner.run(&ds).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Double ping-pong caches (paper §II.A: "Double ping-pong caches
+//! facilitate expedited access to spike data and weight index").
+//!
+//! A [`PingPong`] pairs two banks: the *active* bank is read by the
+//! pipeline for the current timestep while the *shadow* bank is filled
+//! (by DMA / the NoC receiver) for the next timestep; `swap()` flips the
+//! roles at the timestep boundary. Energy is charged by the owner via the
+//! ledger; this type tracks access counts for that purpose.
+
+/// A two-bank ping-pong buffer of `T`.
+#[derive(Debug, Clone)]
+pub struct PingPong<T: Clone + Default> {
+    banks: [Vec<T>; 2],
+    active: usize,
+    reads: u64,
+    writes: u64,
+}
+
+impl<T: Clone + Default> PingPong<T> {
+    /// Create with both banks sized to `capacity` default elements.
+    pub fn new(capacity: usize) -> Self {
+        PingPong {
+            banks: [vec![T::default(); capacity], vec![T::default(); capacity]],
+            active: 0,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// Capacity of each bank.
+    pub fn capacity(&self) -> usize {
+        self.banks[0].len()
+    }
+
+    /// Read element `i` of the active bank.
+    #[inline]
+    pub fn read(&mut self, i: usize) -> T {
+        self.reads += 1;
+        self.banks[self.active][i].clone()
+    }
+
+    /// Read the whole active bank without per-element accounting
+    /// (burst read; caller charges `len()` reads itself if needed).
+    pub fn active_bank(&self) -> &[T] {
+        &self.banks[self.active]
+    }
+
+    /// Write element `i` of the shadow bank (the one being filled).
+    #[inline]
+    pub fn write_shadow(&mut self, i: usize, v: T) {
+        self.writes += 1;
+        self.banks[1 - self.active][i] = v;
+    }
+
+    /// Bulk-fill the shadow bank (counts one write per element).
+    pub fn fill_shadow(&mut self, data: &[T]) {
+        let shadow = &mut self.banks[1 - self.active];
+        for (i, v) in data.iter().enumerate() {
+            shadow[i] = v.clone();
+        }
+        // Clear any tail beyond the new data so stale spikes don't leak
+        // into the next timestep.
+        for slot in shadow.iter_mut().skip(data.len()) {
+            *slot = T::default();
+        }
+        self.writes += data.len() as u64;
+    }
+
+    /// Flip active/shadow at the timestep boundary.
+    pub fn swap(&mut self) {
+        self.active = 1 - self.active;
+    }
+
+    /// Zero the active bank (consume-on-read: the pipeline clears spike
+    /// words as it drains them, so a timestep with no new staging does not
+    /// replay stale spikes).
+    pub fn clear_active(&mut self) {
+        self.banks[self.active].iter_mut().for_each(|v| *v = T::default());
+    }
+
+    /// (reads, writes) performed so far; reset with [`Self::take_counts`].
+    pub fn counts(&self) -> (u64, u64) {
+        (self.reads, self.writes)
+    }
+
+    /// Return and reset the access counters.
+    pub fn take_counts(&mut self) -> (u64, u64) {
+        let c = (self.reads, self.writes);
+        self.reads = 0;
+        self.writes = 0;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shadow_write_then_swap_becomes_visible() {
+        let mut pp = PingPong::<u16>::new(4);
+        pp.write_shadow(0, 7);
+        assert_eq!(pp.read(0), 0, "active bank unchanged before swap");
+        pp.swap();
+        assert_eq!(pp.read(0), 7);
+    }
+
+    #[test]
+    fn fill_shadow_clears_tail() {
+        let mut pp = PingPong::<u16>::new(4);
+        pp.fill_shadow(&[1, 2, 3, 4]);
+        pp.swap();
+        pp.fill_shadow(&[9]);
+        pp.swap();
+        assert_eq!(pp.active_bank(), &[9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn counts_track_accesses() {
+        let mut pp = PingPong::<u16>::new(2);
+        pp.write_shadow(0, 1);
+        pp.swap();
+        let _ = pp.read(0);
+        let _ = pp.read(1);
+        assert_eq!(pp.counts(), (2, 1));
+        assert_eq!(pp.take_counts(), (2, 1));
+        assert_eq!(pp.counts(), (0, 0));
+    }
+}

@@ -1,0 +1,127 @@
+//! Non-uniform quantized weight codebook shared by all synapses of a core.
+//!
+//! The paper: "All synapses share N × W-bit quantized weights in a core,
+//! in which N is the weight number, and W is the weight bit width
+//! (N, W ∈ {4, 8, 16})." A synapse stores only an index (log2 N bits) into
+//! the codebook, which is what makes 64 M synapses/core addressable with
+//! tiny on-core weight memory.
+
+use crate::{Error, Result};
+
+
+/// Allowed codebook sizes / bit widths.
+pub const ALLOWED_N: [usize; 3] = [4, 8, 16];
+/// Allowed weight bit widths.
+pub const ALLOWED_W: [usize; 3] = [4, 8, 16];
+
+/// A core's shared weight codebook: `n` signed `w_bits`-wide values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Codebook {
+    values: Vec<i32>,
+    w_bits: usize,
+}
+
+impl Codebook {
+    /// Build a codebook, validating `N`, `W` and value ranges.
+    pub fn new(values: Vec<i32>, w_bits: usize) -> Result<Self> {
+        if !ALLOWED_N.contains(&values.len()) {
+            return Err(Error::Core(format!(
+                "codebook size N={} not in {:?}",
+                values.len(),
+                ALLOWED_N
+            )));
+        }
+        if !ALLOWED_W.contains(&w_bits) {
+            return Err(Error::Core(format!(
+                "weight width W={w_bits} not in {ALLOWED_W:?}"
+            )));
+        }
+        let (lo, hi) = Self::range(w_bits);
+        for (i, &v) in values.iter().enumerate() {
+            if v < lo || v > hi {
+                return Err(Error::Core(format!(
+                    "codebook[{i}]={v} outside {w_bits}-bit signed range [{lo}, {hi}]"
+                )));
+            }
+        }
+        Ok(Codebook { values, w_bits })
+    }
+
+    /// Signed range of a `w_bits` weight.
+    pub fn range(w_bits: usize) -> (i32, i32) {
+        let half = 1i64 << (w_bits - 1);
+        ((-half) as i32, (half - 1) as i32)
+    }
+
+    /// Number of codebook entries (N).
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Weight bit width (W).
+    pub fn w_bits(&self) -> usize {
+        self.w_bits
+    }
+
+    /// Bits needed per synapse index (log2 N).
+    pub fn index_bits(&self) -> usize {
+        self.values.len().trailing_zeros() as usize
+    }
+
+    /// Total codebook storage in bits (`N × W`).
+    pub fn storage_bits(&self) -> usize {
+        self.n() * self.w_bits
+    }
+
+    /// Look up a weight by synapse index.
+    #[inline]
+    pub fn weight(&self, idx: u8) -> i32 {
+        self.values[idx as usize]
+    }
+
+    /// All values.
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    /// Default 16-entry, 8-bit codebook with a symmetric non-uniform
+    /// (approximately logarithmic) level spacing — a sensible default for
+    /// tests and examples.
+    pub fn default_log16() -> Self {
+        let v = vec![
+            -96, -64, -40, -24, -14, -8, -4, -1, 0, 1, 4, 8, 14, 24, 40, 64,
+        ];
+        Codebook::new(v, 8).expect("static codebook is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_sizes_only() {
+        assert!(Codebook::new(vec![0; 4], 4).is_ok());
+        assert!(Codebook::new(vec![0; 8], 8).is_ok());
+        assert!(Codebook::new(vec![0; 16], 16).is_ok());
+        assert!(Codebook::new(vec![0; 5], 8).is_err());
+        assert!(Codebook::new(vec![0; 16], 6).is_err());
+    }
+
+    #[test]
+    fn range_enforced() {
+        // 4-bit signed: [-8, 7].
+        assert!(Codebook::new(vec![-8, 7, 0, 1], 4).is_ok());
+        assert!(Codebook::new(vec![-9, 0, 0, 0], 4).is_err());
+        assert!(Codebook::new(vec![8, 0, 0, 0], 4).is_err());
+    }
+
+    #[test]
+    fn index_and_storage_bits() {
+        let cb = Codebook::default_log16();
+        assert_eq!(cb.n(), 16);
+        assert_eq!(cb.index_bits(), 4);
+        assert_eq!(cb.storage_bits(), 128);
+        assert_eq!(cb.weight(8), 0);
+    }
+}

@@ -1,0 +1,383 @@
+//! [`NeuroCore`]: the assembled neuromorphic core — register table,
+//! ping-pong spike cache, ZSPE→SPE pipeline, neuron updater, clock gating
+//! and energy accounting.
+
+use super::cache::PingPong;
+use super::codebook::Codebook;
+use super::neuron::{NeuronArray, NeuronParams};
+use super::pipeline::{self, PipelineStats};
+use super::regtable::RegTable;
+use super::spe::{AccumCtx, Spe};
+use super::synapses::Synapses;
+use crate::energy::{EnergyLedger, EnergyParams, EventClass};
+use crate::Result;
+
+
+/// Depth of the ZSPE→SPE job queue (hardware buffer slots).
+pub const SPE_QUEUE_DEPTH: usize = 8;
+
+/// Statistics for one core timestep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreStats {
+    /// Accumulation-phase pipeline stats.
+    pub pipeline: PipelineStats,
+    /// Neurons read-modified-written by the updater (partial update:
+    /// touched only).
+    pub neurons_updated: u64,
+    /// Output spikes fired.
+    pub spikes_fired: u64,
+    /// Total cycles for the timestep (accumulation + updater drain).
+    pub cycles: u64,
+}
+
+/// Output of one core timestep.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TimestepOutput {
+    /// Neuron ids that fired this timestep (ascending).
+    pub spikes: Vec<u32>,
+    /// Timestep statistics.
+    pub stats: CoreStats,
+}
+
+/// A neuromorphic core instance.
+#[derive(Debug, Clone)]
+pub struct NeuroCore {
+    regs: RegTable,
+    codebook: Codebook,
+    synapses: Synapses,
+    neurons: NeuronArray,
+    spike_cache: PingPong<u16>,
+    spe: Spe,
+    // Scratch (reused across timesteps; cleared via the touched list).
+    acc: Vec<i32>,
+    touched: Vec<bool>,
+    touched_list: Vec<u32>,
+    ledger: EnergyLedger,
+    energy: EnergyParams,
+    total_cycles: u64,
+    gated_cycles: u64,
+}
+
+impl NeuroCore {
+    /// Assemble a core. `synapses.axons()` must match `axons`.
+    pub fn new(
+        core_id: u8,
+        axons: usize,
+        neurons: usize,
+        neuron_params: NeuronParams,
+        codebook: Codebook,
+        synapses: Synapses,
+        energy: EnergyParams,
+    ) -> Result<Self> {
+        let regs = RegTable::new(core_id, axons, neurons, neuron_params.clone(), &codebook)?;
+        if synapses.axons() != axons {
+            return Err(crate::Error::Core(format!(
+                "synapse table covers {} axons, core has {}",
+                synapses.axons(),
+                axons
+            )));
+        }
+        let words = regs.spike_words();
+        Ok(NeuroCore {
+            regs,
+            codebook,
+            synapses,
+            neurons: NeuronArray::new(neurons, neuron_params),
+            spike_cache: PingPong::new(words),
+            spe: Spe::new(SPE_QUEUE_DEPTH),
+            acc: vec![0; neurons],
+            touched: vec![false; neurons],
+            touched_list: Vec::with_capacity(neurons),
+            ledger: EnergyLedger::new(),
+            energy,
+            total_cycles: 0,
+            gated_cycles: 0,
+        })
+    }
+
+    /// Register table (read/write: enable bit etc.).
+    pub fn regs(&self) -> &RegTable {
+        &self.regs
+    }
+
+    /// Set the clock-gate enable bit.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.regs.enabled = on;
+    }
+
+    /// The core's neuron array (golden-model comparison, MPDMA).
+    pub fn neurons(&self) -> &NeuronArray {
+        &self.neurons
+    }
+
+    /// Mutable neuron array (MPDMA restore).
+    pub fn neurons_mut(&mut self) -> &mut NeuronArray {
+        &mut self.neurons
+    }
+
+    /// The core's synapse table.
+    pub fn synapses(&self) -> &Synapses {
+        &self.synapses
+    }
+
+    /// The core's codebook.
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    /// Stage input spikes (axon ids) for the *next* timestep into the
+    /// shadow bank of the ping-pong spike cache. Out-of-range axons are an
+    /// error at debug level and ignored in release (hardware would drop).
+    pub fn stage_input_spikes(&mut self, axons: &[u32]) {
+        let words = self.regs.spike_words();
+        let mut packed = vec![0u16; words];
+        for &a in axons {
+            let a = a as usize;
+            debug_assert!(a < self.regs.axons, "axon {a} out of range");
+            if a < self.regs.axons {
+                packed[a / super::SPIKE_WORD_BITS] |= 1 << (a % super::SPIKE_WORD_BITS);
+            }
+        }
+        self.spike_cache.fill_shadow(&packed);
+    }
+
+    /// Stage a full boolean spike vector for the next timestep.
+    pub fn stage_input_vector(&mut self, spikes: &[bool]) {
+        debug_assert!(spikes.len() <= self.regs.axons);
+        self.spike_cache.fill_shadow(&super::pack_spikes(spikes));
+    }
+
+    /// Execute one timestep: swap the ping-pong cache, run the pipeline
+    /// over the (now active) spike bank, drain the updater, fire spikes.
+    ///
+    /// When the core is clock-gated (enable bit off) the timestep costs
+    /// zero cycles of active power and produces no spikes.
+    pub fn tick_timestep(&mut self) -> TimestepOutput {
+        if !self.regs.enabled {
+            // Clock-gated: account a nominal gated cycle so leakage is
+            // integrated by the caller via `finish_window`.
+            return TimestepOutput::default();
+        }
+        self.spike_cache.swap();
+
+        // ---- stages 1–3: accumulate -------------------------------------
+        let words: Vec<u16> = self.spike_cache.active_bank().to_vec();
+        // Consume-on-read: a timestep without fresh staging must see an
+        // empty cache, not a replay of two timesteps ago.
+        self.spike_cache.clear_active();
+        let mut ctx = AccumCtx {
+            acc: &mut self.acc,
+            touched: &mut self.touched,
+            touched_list: &mut self.touched_list,
+        };
+        let pstats = pipeline::run_accumulation(
+            &words,
+            self.regs.axons,
+            &self.synapses,
+            &self.codebook,
+            &mut self.spe,
+            &mut ctx,
+        );
+
+        // ---- stage 4: partial neuron update (touched only) ---------------
+        self.touched_list.sort_unstable();
+        let mut spikes = Vec::new();
+        for &t in self.touched_list.iter() {
+            if self.neurons.update_one(t as usize, self.acc[t as usize]) {
+                spikes.push(t);
+            }
+        }
+        let neurons_updated = self.touched_list.len() as u64;
+        let update_cycles = neurons_updated; // 1 neuron / cycle drain
+        // clear scratch via the touched list (O(touched), not O(neurons))
+        for &t in self.touched_list.iter() {
+            self.acc[t as usize] = 0;
+            self.touched[t as usize] = false;
+        }
+        self.touched_list.clear();
+
+        // ---- energy -------------------------------------------------------
+        let cycles = pstats.cycles + update_cycles;
+        self.ledger.add(EventClass::CacheRead, pstats.words_read);
+        self.ledger.add(EventClass::ZspeWord, pstats.words_scanned);
+        self.ledger
+            .add(EventClass::ZspeForward, pstats.spikes_forwarded);
+        self.ledger.add(EventClass::ZeroSkip, pstats.zeros_skipped);
+        self.ledger.add(EventClass::Sop, pstats.sops);
+        self.ledger.add(EventClass::MpUpdate, neurons_updated);
+        self.ledger
+            .add(EventClass::SpikeFire, spikes.len() as u64);
+        self.total_cycles += cycles;
+
+        TimestepOutput {
+            stats: CoreStats {
+                pipeline: pstats,
+                neurons_updated,
+                spikes_fired: spikes.len() as u64,
+                cycles,
+            },
+            spikes,
+        }
+    }
+
+    /// Charge spike-cache write energy for `words` staged words (the DMA /
+    /// NoC receiver calls this when it fills the shadow bank).
+    pub fn charge_cache_writes(&mut self, words: u64) {
+        self.ledger.add(EventClass::CacheWrite, words);
+    }
+
+    /// Account a window of `window_cycles` wall cycles: the core was
+    /// active for its recorded busy cycles and gated for the rest.
+    pub fn finish_window(&mut self, window_cycles: u64) {
+        let active = self.total_cycles.min(window_cycles);
+        let gated = window_cycles - active;
+        self.gated_cycles += gated;
+        let label = format!("core{}", self.regs.core_id());
+        self.ledger.add_static(
+            &label,
+            active,
+            gated,
+            self.energy.p_core_active,
+            self.energy.p_core_gated,
+        );
+        self.total_cycles = 0;
+    }
+
+    /// Busy cycles since the last `finish_window`.
+    pub fn busy_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// Read (and keep) the core's energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Drain the ledger (merge into a chip-level ledger).
+    pub fn take_ledger(&mut self) -> EnergyLedger {
+        std::mem::take(&mut self.ledger)
+    }
+
+    /// Reset dynamic state (MPs, caches) keeping configuration.
+    pub fn reset_state(&mut self) {
+        self.neurons.reset_all();
+        let words = self.regs.spike_words();
+        self.spike_cache = PingPong::new(words);
+        self.spe = Spe::new(SPE_QUEUE_DEPTH);
+        self.acc.iter_mut().for_each(|a| *a = 0);
+        self.touched.iter_mut().for_each(|t| *t = false);
+        self.touched_list.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, ResetMode};
+    use crate::core::synapses::SynapsesBuilder;
+
+    fn small_core() -> NeuroCore {
+        let cb = Codebook::default_log16();
+        let mut b = SynapsesBuilder::new(32, 8, cb.n());
+        // every axon connects to every neuron with weight index 12 (=14)
+        b.connect_dense(|_, _| 12).unwrap();
+        NeuroCore::new(
+            3,
+            32,
+            8,
+            NeuronParams {
+                threshold: 50,
+                leak: LeakMode::None,
+                reset: ResetMode::Subtract,
+                mp_bits: 16,
+            },
+            cb,
+            b.build(),
+            EnergyParams::nominal(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spikes_accumulate_and_fire() {
+        let mut c = small_core();
+        // 4 spikes × weight 14 = 56 ≥ 50 → every neuron fires, residue 6.
+        c.stage_input_spikes(&[0, 5, 16, 31]);
+        let out = c.tick_timestep();
+        assert_eq!(out.spikes, (0..8).collect::<Vec<u32>>());
+        assert_eq!(out.stats.pipeline.sops, 4 * 8);
+        assert_eq!(out.stats.neurons_updated, 8);
+        assert!(c.neurons().mps().iter().all(|&m| m == 6));
+    }
+
+    #[test]
+    fn no_input_means_no_update_partial_semantics() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0]); // 1 spike → acc 14 < 50
+        let o1 = c.tick_timestep();
+        assert!(o1.spikes.is_empty());
+        assert!(c.neurons().mps().iter().all(|&m| m == 14));
+        // Empty timestep: partial update leaves MP untouched (no leak).
+        c.stage_input_spikes(&[]);
+        let o2 = c.tick_timestep();
+        assert_eq!(o2.stats.neurons_updated, 0);
+        assert!(c.neurons().mps().iter().all(|&m| m == 14));
+    }
+
+    #[test]
+    fn gated_core_does_nothing() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0, 1, 2, 3]);
+        c.set_enabled(false);
+        let out = c.tick_timestep();
+        assert!(out.spikes.is_empty());
+        assert_eq!(out.stats.cycles, 0);
+    }
+
+    #[test]
+    fn ledger_counts_match_stats() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[1, 2]);
+        let out = c.tick_timestep();
+        assert_eq!(c.ledger().count(EventClass::Sop), out.stats.pipeline.sops);
+        assert_eq!(
+            c.ledger().count(EventClass::ZeroSkip),
+            out.stats.pipeline.zeros_skipped
+        );
+        assert_eq!(c.ledger().count(EventClass::MpUpdate), 8);
+    }
+
+    #[test]
+    fn ping_pong_staging_applies_next_timestep_only() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0, 1, 2, 3]); // for t=0
+        let o0 = c.tick_timestep();
+        assert_eq!(o0.spikes.len(), 8);
+        // nothing staged for t=1 → no work
+        let o1 = c.tick_timestep();
+        assert_eq!(o1.stats.pipeline.spikes_forwarded, 0);
+    }
+
+    #[test]
+    fn reset_state_clears_mps() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0]);
+        c.tick_timestep();
+        assert!(c.neurons().mps().iter().any(|&m| m != 0));
+        c.reset_state();
+        assert!(c.neurons().mps().iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn finish_window_accounts_static_split() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0, 1]);
+        c.tick_timestep();
+        let busy = c.busy_cycles();
+        assert!(busy > 0);
+        c.finish_window(1000);
+        assert_eq!(c.busy_cycles(), 0);
+        let pj = c.ledger().static_pj(200.0e6);
+        assert!(pj > 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! The "traditional scheme" baseline core used for the paper's 2.69×
+//! energy-efficiency comparison (Fig. 3).
+//!
+//! Differences from [`super::NeuroCore`]:
+//!
+//! - **no zero-skip**: every axon's synapse list is walked every timestep;
+//!   a zero spike contributes `w × 0` but still costs a full synapse
+//!   operation (weight-index fetch + codebook read + add);
+//! - **full membrane-potential update**: every neuron is
+//!   read-modified-written every timestep (leak applies to all neurons),
+//!   instead of the partial touched-only update.
+//!
+//! Useful-SOP accounting: only synapse ops triggered by *valid* spikes
+//! count as useful SOPs (that is what Fig. 3's pJ/SOP denominators use on
+//! both designs), while the baseline's energy also pays for the wasted
+//! zero-spike walks — that asymmetry is precisely the 2.69× story.
+
+use super::codebook::Codebook;
+use super::neuron::{NeuronArray, NeuronParams};
+use super::synapses::Synapses;
+use crate::energy::{EnergyLedger, EnergyParams, EventClass};
+use crate::Result;
+
+
+/// Statistics for one baseline-core timestep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DenseStats {
+    /// Synapse walks performed (all axons × fanout).
+    pub synapse_walks: u64,
+    /// Of which triggered by valid spikes (useful SOPs).
+    pub useful_sops: u64,
+    /// Neurons updated (always all neurons).
+    pub neurons_updated: u64,
+    /// Spikes fired.
+    pub spikes_fired: u64,
+    /// Total cycles.
+    pub cycles: u64,
+}
+
+/// The dense baseline core.
+#[derive(Debug, Clone)]
+pub struct DenseCore {
+    axons: usize,
+    codebook: Codebook,
+    synapses: Synapses,
+    neurons: NeuronArray,
+    staged: Vec<bool>,
+    current: Vec<bool>,
+    acc: Vec<i32>,
+    ledger: EnergyLedger,
+    energy: EnergyParams,
+    total_cycles: u64,
+}
+
+impl DenseCore {
+    /// Assemble a baseline core with the same network contents as a
+    /// [`super::NeuroCore`].
+    pub fn new(
+        axons: usize,
+        neurons: usize,
+        neuron_params: NeuronParams,
+        codebook: Codebook,
+        synapses: Synapses,
+        energy: EnergyParams,
+    ) -> Result<Self> {
+        if synapses.axons() != axons {
+            return Err(crate::Error::Core(format!(
+                "synapse table covers {} axons, core has {}",
+                synapses.axons(),
+                axons
+            )));
+        }
+        Ok(DenseCore {
+            axons,
+            codebook,
+            synapses,
+            neurons: NeuronArray::new(neurons, neuron_params),
+            staged: vec![false; axons],
+            current: vec![false; axons],
+            acc: vec![0; neurons],
+            ledger: EnergyLedger::new(),
+            energy,
+            total_cycles: 0,
+        })
+    }
+
+    /// Stage input spikes (axon ids) for the next timestep.
+    pub fn stage_input_spikes(&mut self, axons_in: &[u32]) {
+        self.staged.iter_mut().for_each(|s| *s = false);
+        for &a in axons_in {
+            if (a as usize) < self.axons {
+                self.staged[a as usize] = true;
+            }
+        }
+    }
+
+    /// Execute one timestep the traditional way.
+    pub fn tick_timestep(&mut self) -> (Vec<u32>, DenseStats) {
+        std::mem::swap(&mut self.staged, &mut self.current);
+        // Consume-on-read (see NeuroCore): don't replay stale spikes.
+        self.staged.iter_mut().for_each(|s| *s = false);
+        let mut st = DenseStats::default();
+
+        // Walk EVERY synapse of EVERY axon (no zero-skip).
+        for a in 0..self.axons {
+            let spiking = self.current[a];
+            let (targets, widx) = self.synapses.slices_of(a);
+            for (&t, &w) in targets.iter().zip(widx) {
+                if spiking {
+                    let ti = t as usize;
+                    self.acc[ti] = self.acc[ti].saturating_add(self.codebook.weight(w));
+                    st.useful_sops += 1;
+                }
+                st.synapse_walks += 1;
+            }
+        }
+
+        // Update EVERY neuron (full MP update: leak everywhere).
+        let mut spikes = Vec::new();
+        for n in 0..self.neurons.len() {
+            if self.neurons.update_one(n, self.acc[n]) {
+                spikes.push(n as u32);
+            }
+            self.acc[n] = 0;
+        }
+        st.neurons_updated = self.neurons.len() as u64;
+        st.spikes_fired = spikes.len() as u64;
+
+        // Cycles: synapse walks at the same 4-lane rate, plus the full
+        // neuron drain, plus the spike-word cache reads.
+        let words = self.axons.div_ceil(super::SPIKE_WORD_BITS) as u64;
+        st.cycles = words + st.synapse_walks.div_ceil(4) + st.neurons_updated;
+        self.total_cycles += st.cycles;
+
+        // Energy: every walk is priced as a full SOP; every neuron pays at
+        // least the leak-only read-modify-write.
+        self.ledger.add(EventClass::CacheRead, words);
+        self.ledger.add(EventClass::Sop, st.synapse_walks);
+        self.ledger.add(EventClass::MpUpdate, st.neurons_updated);
+        self.ledger.add(EventClass::SpikeFire, st.spikes_fired);
+
+        (spikes, st)
+    }
+
+    /// Account static power over a window (the baseline cannot gate).
+    pub fn finish_window(&mut self, window_cycles: u64) {
+        self.ledger.add_static(
+            "dense-core",
+            window_cycles,
+            0,
+            self.energy.p_core_active,
+            self.energy.p_core_gated,
+        );
+        self.total_cycles = 0;
+    }
+
+    /// Busy cycles since last window.
+    pub fn busy_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// The energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Neuron array (for functional comparisons).
+    pub fn neurons(&self) -> &NeuronArray {
+        &self.neurons
+    }
+
+    /// Energy per *useful* SOP over everything recorded so far.
+    pub fn pj_per_useful_sop(&self, f_hz: f64, useful_sops: u64) -> Option<f64> {
+        (useful_sops > 0).then(|| self.ledger.total_pj(&self.energy, f_hz) / useful_sops as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, ResetMode};
+    use crate::core::synapses::SynapsesBuilder;
+
+    fn baseline() -> DenseCore {
+        let cb = Codebook::default_log16();
+        let mut b = SynapsesBuilder::new(32, 8, cb.n());
+        b.connect_dense(|_, _| 12).unwrap(); // weight 14
+        DenseCore::new(
+            32,
+            8,
+            NeuronParams {
+                threshold: 50,
+                leak: LeakMode::None,
+                reset: ResetMode::Subtract,
+                mp_bits: 16,
+            },
+            cb,
+            b.build(),
+            EnergyParams::nominal(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn walks_all_synapses_regardless_of_sparsity() {
+        let mut c = baseline();
+        c.stage_input_spikes(&[0]);
+        let (_, st) = c.tick_timestep();
+        assert_eq!(st.synapse_walks, 32 * 8);
+        assert_eq!(st.useful_sops, 8);
+        assert_eq!(st.neurons_updated, 8);
+    }
+
+    #[test]
+    fn functional_output_matches_sparse_core_without_leak() {
+        // With LeakMode::None, dense and sparse semantics coincide.
+        let mut d = baseline();
+        d.stage_input_spikes(&[0, 5, 16, 31]);
+        let (spikes, _) = d.tick_timestep();
+        assert_eq!(spikes, (0..8).collect::<Vec<u32>>());
+        assert!(d.neurons().mps().iter().all(|&m| m == 6));
+    }
+
+    #[test]
+    fn energy_pays_for_wasted_walks() {
+        let mut c = baseline();
+        c.stage_input_spikes(&[0]); // 1 of 32 axons spiking
+        let (_, st) = c.tick_timestep();
+        let pj = c.pj_per_useful_sop(200.0e6, st.useful_sops).unwrap();
+        // 256 walks priced for 8 useful sops → ≥ 32× the raw SOP energy.
+        assert!(pj > EnergyParams::nominal().e_sop * 30.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! The neuromorphic core (paper §II.A).
+//!
+//! A core integrates:
+//!
+//! - a **register table** ([`regtable::RegTable`]) holding the core ID,
+//!   clock-gating enable, neuron configuration and weight configuration;
+//! - **double ping-pong caches** ([`cache::PingPong`]) for spike data and
+//!   weight indexes;
+//! - a **zero-skip sparse process engine** ([`zspe::Zspe`]) that scans
+//!   16-bit spike words and forwards weight-index requests only for valid
+//!   (non-zero) spikes;
+//! - **dual synapse process engines** ([`spe::Spe`]) that fetch 4 synapse
+//!   weights per cycle from the shared non-uniform quantized codebook
+//!   ([`codebook::Codebook`], `N × W` bits, `N, W ∈ {4, 8, 16}`) and
+//!   accumulate partial membrane potentials;
+//! - a **neuron updater** ([`neuron::NeuronArray`]) controlling LIF
+//!   integration, leak, reset and spike firing, with *partial MP updates*
+//!   (only neurons touched by input spikes are read-modified-written);
+//! - a **four-stage pipeline** ([`pipeline`]) over cache → ZSPE → SPE →
+//!   updater with inter-stage buffers, which produces the cycle counts;
+//! - **clock gating** driven by the register-table enable bit.
+//!
+//! [`dense::DenseCore`] is the paper's "traditional scheme" baseline: no
+//! zero-skip (every axon, spiking or not, walks the full synapse list) and
+//! full MP updates (every neuron read-modified-written every timestep).
+//! Fig. 3's 2.69× energy-efficiency claim is the ratio between the two.
+
+pub mod cache;
+pub mod codebook;
+pub mod core_impl;
+pub mod dense;
+pub mod neuron;
+pub mod pipeline;
+pub mod regtable;
+pub mod spe;
+pub mod synapses;
+pub mod zspe;
+
+pub use cache::PingPong;
+pub use codebook::Codebook;
+pub use core_impl::{CoreStats, NeuroCore, TimestepOutput};
+pub use dense::DenseCore;
+pub use neuron::{LeakMode, NeuronArray, NeuronParams, ResetMode};
+pub use regtable::{RegTable, WeightConfig};
+pub use synapses::{Synapses, SynapsesBuilder};
+
+/// Width of one spike word processed by the ZSPE per cycle (paper: 16).
+pub const SPIKE_WORD_BITS: usize = 16;
+
+/// Synapse operations the dual SPEs complete per cycle (paper: 4).
+pub const SPE_LANES: usize = 4;
+
+/// Maximum neurons per core (paper: 160 K neurons / 20 cores).
+pub const MAX_NEURONS_PER_CORE: usize = 8192;
+
+/// Pack a boolean spike vector into 16-bit words, LSB = lowest axon id.
+pub fn pack_spikes(spikes: &[bool]) -> Vec<u16> {
+    let mut words = vec![0u16; spikes.len().div_ceil(SPIKE_WORD_BITS)];
+    for (i, &s) in spikes.iter().enumerate() {
+        if s {
+            words[i / SPIKE_WORD_BITS] |= 1 << (i % SPIKE_WORD_BITS);
+        }
+    }
+    words
+}
+
+/// Unpack 16-bit spike words into a boolean vector of length `n`.
+pub fn unpack_spikes(words: &[u16], n: usize) -> Vec<bool> {
+    (0..n)
+        .map(|i| words[i / SPIKE_WORD_BITS] >> (i % SPIKE_WORD_BITS) & 1 == 1)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let spikes: Vec<bool> = (0..37).map(|i| i % 3 == 0).collect();
+        let words = pack_spikes(&spikes);
+        assert_eq!(words.len(), 3);
+        assert_eq!(unpack_spikes(&words, 37), spikes);
+    }
+
+    #[test]
+    fn pack_sets_expected_bits() {
+        let mut spikes = vec![false; 16];
+        spikes[0] = true;
+        spikes[15] = true;
+        assert_eq!(pack_spikes(&spikes), vec![0x8001]);
+    }
+}

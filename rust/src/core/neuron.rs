@@ -1,0 +1,236 @@
+//! LIF neuron state + updater (paper §II.A: "A neuron updater controls
+//! neuron MP integration, leaking and resetting, and spike firing
+//! procedures."), with **partial membrane-potential updates**: only
+//! neurons touched by at least one valid input spike in the current
+//! timestep are read-modified-written; untouched neurons keep their MP
+//! unchanged and cannot fire. The dense baseline instead walks every
+//! neuron every timestep.
+//!
+//! The integer semantics here are the **authoritative definition** of the
+//! chip's arithmetic and are mirrored bit-exactly by the JAX golden model
+//! (`python/compile/kernels/ref.py` / the Pallas kernel). Order per
+//! touched neuron:
+//!
+//! 1. integrate: `mp ← sat_w(mp + acc)` (saturating to the MP register
+//!    width),
+//! 2. leak: linear decay toward zero by `leak` (or arithmetic-shift decay),
+//! 3. fire: `spike ← mp ≥ threshold`,
+//! 4. reset: to zero, or by threshold subtraction.
+
+
+
+/// Leak applied after integration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeakMode {
+    /// No leak.
+    None,
+    /// Subtract `λ` moving the MP toward zero, never crossing it.
+    Linear(i32),
+    /// Exponential-style decay: `mp ← mp - (mp >> k)` (arithmetic shift).
+    Shift(u8),
+}
+
+/// Reset applied on firing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResetMode {
+    /// Reset MP to zero.
+    Zero,
+    /// Subtract the threshold (residue-preserving).
+    Subtract,
+}
+
+/// Neuron dynamics configuration (stored in the core register table).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NeuronParams {
+    /// Firing threshold (> 0).
+    pub threshold: i32,
+    /// Leak mode.
+    pub leak: LeakMode,
+    /// Reset mode.
+    pub reset: ResetMode,
+    /// MP register width in bits (signed saturating arithmetic).
+    pub mp_bits: u32,
+}
+
+impl Default for NeuronParams {
+    fn default() -> Self {
+        NeuronParams {
+            threshold: 64,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        }
+    }
+}
+
+impl NeuronParams {
+    /// Saturation bounds of the MP register.
+    #[inline]
+    pub fn mp_range(&self) -> (i32, i32) {
+        let half = 1i64 << (self.mp_bits - 1);
+        ((-half) as i32, (half - 1) as i32)
+    }
+}
+
+/// The membrane-potential array of one core plus its update logic.
+#[derive(Debug, Clone)]
+pub struct NeuronArray {
+    params: NeuronParams,
+    mp: Vec<i32>,
+}
+
+impl NeuronArray {
+    /// All-zero MPs for `n` neurons.
+    pub fn new(n: usize, params: NeuronParams) -> Self {
+        NeuronArray {
+            params,
+            mp: vec![0; n],
+        }
+    }
+
+    /// Number of neurons.
+    pub fn len(&self) -> usize {
+        self.mp.len()
+    }
+
+    /// True when the array has no neurons.
+    pub fn is_empty(&self) -> bool {
+        self.mp.is_empty()
+    }
+
+    /// Dynamics parameters.
+    pub fn params(&self) -> &NeuronParams {
+        &self.params
+    }
+
+    /// Current MP of neuron `i`.
+    pub fn mp(&self, i: usize) -> i32 {
+        self.mp[i]
+    }
+
+    /// Raw MP slice (for DMA/golden-model comparison).
+    pub fn mps(&self) -> &[i32] {
+        &self.mp
+    }
+
+    /// Overwrite all MPs (MPDMA restore path).
+    pub fn load_mps(&mut self, mps: &[i32]) {
+        self.mp.copy_from_slice(mps);
+    }
+
+    /// Reset all MPs to zero (network startup).
+    pub fn reset_all(&mut self) {
+        self.mp.iter_mut().for_each(|m| *m = 0);
+    }
+
+    /// Update one neuron with accumulated input `acc`; returns `true` when
+    /// it fires. This is the single authoritative LIF step.
+    #[inline]
+    pub fn update_one(&mut self, i: usize, acc: i32) -> bool {
+        let (lo, hi) = self.params.mp_range();
+        // 1. integrate, saturating.
+        let mut m = (self.mp[i] as i64 + acc as i64).clamp(lo as i64, hi as i64) as i32;
+        // 2. leak toward zero.
+        m = match self.params.leak {
+            LeakMode::None => m,
+            LeakMode::Linear(l) => {
+                if m > 0 {
+                    (m - l).max(0)
+                } else if m < 0 {
+                    (m + l).min(0)
+                } else {
+                    0
+                }
+            }
+            LeakMode::Shift(k) => m - (m >> k),
+        };
+        // 3. fire.
+        let spike = m >= self.params.threshold;
+        // 4. reset.
+        if spike {
+            m = match self.params.reset {
+                ResetMode::Zero => 0,
+                ResetMode::Subtract => m - self.params.threshold,
+            };
+        }
+        self.mp[i] = m;
+        spike
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(th: i32, leak: LeakMode, reset: ResetMode) -> NeuronParams {
+        NeuronParams {
+            threshold: th,
+            leak,
+            reset,
+            mp_bits: 16,
+        }
+    }
+
+    #[test]
+    fn integrate_and_fire_subtract_reset() {
+        let mut n = NeuronArray::new(1, params(10, LeakMode::None, ResetMode::Subtract));
+        assert!(!n.update_one(0, 6)); // mp = 6
+        assert!(n.update_one(0, 6)); // mp = 12 >= 10 → fire, residue 2
+        assert_eq!(n.mp(0), 2);
+    }
+
+    #[test]
+    fn zero_reset_discards_residue() {
+        let mut n = NeuronArray::new(1, params(10, LeakMode::None, ResetMode::Zero));
+        assert!(n.update_one(0, 15));
+        assert_eq!(n.mp(0), 0);
+    }
+
+    #[test]
+    fn linear_leak_moves_toward_zero_without_crossing() {
+        let mut n = NeuronArray::new(2, params(100, LeakMode::Linear(3), ResetMode::Zero));
+        n.update_one(0, 5); // 5 - 3 = 2
+        assert_eq!(n.mp(0), 2);
+        n.update_one(0, 0); // 2 - 3 clamps at 0
+        assert_eq!(n.mp(0), 0);
+        n.update_one(1, -5); // -5 + 3 = -2
+        assert_eq!(n.mp(1), -2);
+        n.update_one(1, 0); // -2 + 3 clamps at 0
+        assert_eq!(n.mp(1), 0);
+    }
+
+    #[test]
+    fn shift_leak_matches_arithmetic_shift() {
+        let mut n = NeuronArray::new(1, params(1000, LeakMode::Shift(2), ResetMode::Zero));
+        n.update_one(0, 100); // 100 - 25 = 75
+        assert_eq!(n.mp(0), 75);
+        let mut n2 = NeuronArray::new(1, params(1000, LeakMode::Shift(2), ResetMode::Zero));
+        n2.update_one(0, -100); // -100 - (-100 >> 2 = -25) = -75
+        assert_eq!(n2.mp(0), -75);
+    }
+
+    #[test]
+    fn saturation_at_register_width() {
+        let p = params(30000, LeakMode::None, ResetMode::Zero);
+        let (lo, hi) = p.mp_range();
+        assert_eq!((lo, hi), (-32768, 32767));
+        let mut n = NeuronArray::new(1, p);
+        n.update_one(0, 30000);
+        n.update_one(0, 30000); // would be 60000 → saturates, fires
+        assert_eq!(n.mp(0), 0); // fired at hi (32767 ≥ 30000) and reset
+        let mut n = NeuronArray::new(1, params(40000, LeakMode::None, ResetMode::Zero));
+        // threshold above saturation: can never fire, clamps at hi
+        assert!(!n.update_one(0, 32000));
+        assert!(!n.update_one(0, 32000));
+        assert_eq!(n.mp(0), 32767);
+    }
+
+    #[test]
+    fn load_and_reset() {
+        let mut n = NeuronArray::new(3, NeuronParams::default());
+        n.load_mps(&[1, 2, 3]);
+        assert_eq!(n.mps(), &[1, 2, 3]);
+        n.reset_all();
+        assert_eq!(n.mps(), &[0, 0, 0]);
+    }
+}

@@ -1,0 +1,224 @@
+//! The four-stage core pipeline (paper §II.A: "A four-level pipeline is
+//! set up in the core, including core caches, ZSPE, SPE, and neuron
+//! updater. Buffers are inserted into the pipeline to optimize data-access
+//! efficiency.")
+//!
+//! Stage 1 (cache) reads one 16-bit spike word per cycle into the word
+//! buffer; stage 2 (ZSPE) scans the buffered word, forwarding valid-spike
+//! jobs into the SPE queue (stalling when the queue is full); stage 3
+//! (SPE) retires up to 4 synapse ops per cycle; stage 4 (neuron updater)
+//! runs as a drain phase over the touched-neuron list at one neuron per
+//! cycle. The stepper advances all stages each simulated cycle, so fill,
+//! drain and back-pressure stalls fall out naturally.
+
+use super::codebook::Codebook;
+use super::spe::{AccumCtx, Spe};
+use super::synapses::Synapses;
+use super::zspe;
+
+
+/// Cycle/event statistics of one timestep's accumulation phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Cycles spent in the accumulation phase (stages 1–3).
+    pub cycles: u64,
+    /// Spike words read from the cache.
+    pub words_read: u64,
+    /// Words scanned by the ZSPE.
+    pub words_scanned: u64,
+    /// Valid spikes forwarded ZSPE → SPE.
+    pub spikes_forwarded: u64,
+    /// Zero spikes skipped by the ZSPE.
+    pub zeros_skipped: u64,
+    /// Synapse operations retired by the SPE.
+    pub sops: u64,
+    /// Cycles the ZSPE stalled on a full SPE queue.
+    pub stall_cycles: u64,
+}
+
+/// Run the accumulation phase (stages 1–3) of one timestep.
+///
+/// `spike_words` is the active ping-pong bank; results accumulate into
+/// `ctx`. Returns per-stage statistics; the caller (the core) charges
+/// energy from them and then runs the stage-4 updater drain.
+pub fn run_accumulation(
+    spike_words: &[u16],
+    axons: usize,
+    syn: &Synapses,
+    cb: &Codebook,
+    spe: &mut Spe,
+    ctx: &mut AccumCtx,
+) -> PipelineStats {
+    let mut st = PipelineStats::default();
+    let n_words = spike_words.len();
+    let mut next_word = 0usize; // stage-1 cursor
+    let mut word_buf: Option<(u16, usize)> = None; // stage-1→2 buffer
+    // Pending forwards from a scanned word that didn't fit the SPE queue.
+    let mut pending: Vec<u32> = Vec::new();
+    let mut pending_pos = 0usize;
+
+    loop {
+        // Cycle-step only while the front stages (fetch/scan/forward) are
+        // still producing work; once they are empty the remaining SPE
+        // backlog is retired in one cycle-exact bulk pass below — the
+        // dominant fast path at realistic fan-outs (see EXPERIMENTS §Perf).
+        let front_busy =
+            next_word < n_words || word_buf.is_some() || pending_pos < pending.len();
+        if !front_busy {
+            break;
+        }
+        // Fast-forward: when forwarding is blocked on a full SPE queue the
+        // front stages cannot make progress until the in-flight job
+        // retires — skip those cycles in one step (identical sop/cycle
+        // accounting; ZSPE hang-up cycles are charged as stalls).
+        if pending_pos < pending.len() && spe.free_slots() == 0 {
+            let (sops, cycles) = spe.fast_forward_one_job(syn, cb, ctx);
+            st.sops += sops;
+            st.cycles += cycles;
+            st.stall_cycles += cycles;
+            continue;
+        }
+        st.cycles += 1;
+
+        // ---- stage 3: SPE retires synapse ops -----------------------------
+        st.sops += spe.step(syn, cb, ctx) as u64;
+
+        // ---- stage 2: ZSPE scan / forward ---------------------------------
+        if pending_pos < pending.len() {
+            // Drain previously scanned spikes into freed queue slots.
+            let free = spe.free_slots();
+            if free == 0 {
+                st.stall_cycles += 1;
+            } else {
+                let take = free.min(pending.len() - pending_pos);
+                for &a in &pending[pending_pos..pending_pos + take] {
+                    spe.push(a);
+                }
+                pending_pos += take;
+                if pending_pos == pending.len() {
+                    pending.clear();
+                    pending_pos = 0;
+                }
+            }
+        } else if let Some((word, idx)) = word_buf {
+            // Scan the buffered word this cycle.
+            let scan = zspe::scan_word(word, idx, axons);
+            st.words_scanned += 1;
+            st.zeros_skipped += scan.skipped as u64;
+            st.spikes_forwarded += scan.valid_axons.len() as u64;
+            let free = spe.free_slots();
+            let take = free.min(scan.valid_axons.len());
+            for &a in &scan.valid_axons[..take] {
+                spe.push(a);
+            }
+            if take < scan.valid_axons.len() {
+                pending = scan.valid_axons;
+                pending_pos = take;
+            }
+            word_buf = None;
+        }
+
+        // ---- stage 1: cache word fetch ------------------------------------
+        if word_buf.is_none() && pending_pos >= pending.len() && next_word < n_words {
+            word_buf = Some((spike_words[next_word], next_word));
+            next_word += 1;
+            st.words_read += 1;
+        }
+    }
+
+    // ---- drain: retire the remaining SPE backlog in bulk ------------------
+    let (sops, cycles) = spe.drain_bulk(syn, cb, ctx);
+    st.sops += sops;
+    st.cycles += cycles;
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::synapses::SynapsesBuilder;
+    use crate::core::{pack_spikes, Codebook};
+
+    fn dense_syn(axons: usize, neurons: usize, widx: u8) -> Synapses {
+        let mut b = SynapsesBuilder::new(axons, neurons, 16);
+        b.connect_dense(|_, _| widx).unwrap();
+        b.build()
+    }
+
+    fn run(spikes: &[bool], syn: &Synapses, neurons: usize) -> (PipelineStats, Vec<i32>) {
+        let cb = Codebook::default_log16();
+        let words = pack_spikes(spikes);
+        let mut spe = Spe::new(8);
+        let mut acc = vec![0i32; neurons];
+        let mut touched = vec![false; neurons];
+        let mut list = Vec::new();
+        let st = run_accumulation(
+            &words,
+            spikes.len(),
+            syn,
+            &cb,
+            &mut spe,
+            &mut AccumCtx {
+                acc: &mut acc,
+                touched: &mut touched,
+                touched_list: &mut list,
+            },
+        );
+        (st, acc)
+    }
+
+    #[test]
+    fn all_zero_input_costs_only_scan_cycles() {
+        let syn = dense_syn(32, 4, 9);
+        let (st, acc) = run(&vec![false; 32], &syn, 4);
+        assert_eq!(st.sops, 0);
+        assert_eq!(st.words_scanned, 2);
+        assert_eq!(st.zeros_skipped, 32);
+        // 2 fetch + 2 scan cycles, pipelined: fetch0, (scan0|fetch1), scan1 → ≤4
+        assert!(st.cycles <= 4, "cycles = {}", st.cycles);
+        assert!(acc.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn sop_count_equals_valid_spikes_times_fanout() {
+        let syn = dense_syn(32, 4, 9);
+        let mut spikes = vec![false; 32];
+        spikes[3] = true;
+        spikes[17] = true;
+        spikes[31] = true;
+        let (st, acc) = run(&spikes, &syn, 4);
+        assert_eq!(st.sops, 3 * 4);
+        assert_eq!(st.spikes_forwarded, 3);
+        assert_eq!(st.zeros_skipped, 29);
+        // weight(9) = 1: each neuron accumulates one per valid spike.
+        assert_eq!(acc, vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn dense_input_is_spe_bound() {
+        let syn = dense_syn(64, 16, 9);
+        let (st, _) = run(&vec![true; 64], &syn, 16);
+        assert_eq!(st.sops, 64 * 16);
+        // SPE-bound: 1024 sops / 4 lanes = 256 cycles + small fill.
+        assert!(st.cycles >= 256);
+        assert!(st.cycles < 256 + 16, "cycles = {}", st.cycles);
+    }
+
+    #[test]
+    fn backpressure_stalls_counted_with_large_words() {
+        // 16 valid spikes in one word with queue depth 8 → pending drain.
+        let syn = dense_syn(16, 32, 9);
+        let (st, acc) = run(&vec![true; 16], &syn, 32);
+        assert_eq!(st.sops, 16 * 32);
+        assert_eq!(acc, vec![16i32; 32]);
+    }
+
+    #[test]
+    fn partial_word_padding_not_counted() {
+        let syn = dense_syn(20, 2, 9);
+        let (st, _) = run(&vec![true; 20], &syn, 2);
+        assert_eq!(st.spikes_forwarded, 20);
+        assert_eq!(st.zeros_skipped, 0);
+        assert_eq!(st.words_scanned, 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! Core register table: configuration + clock-gate enable (paper §II.A:
+//! "A clock gating enables the core clock according to an enable signal in
+//! the register table. In addition, the register table stores other
+//! parameters, such as neuron configuration parameters and read-only core
+//! ID.")
+
+use super::codebook::Codebook;
+use super::neuron::NeuronParams;
+use crate::{Error, Result};
+
+
+/// Weight configuration of a core: the codebook geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightConfig {
+    /// Number of codebook entries (N ∈ {4, 8, 16}).
+    pub n: usize,
+    /// Weight bit width (W ∈ {4, 8, 16}).
+    pub w_bits: usize,
+}
+
+/// The per-core register table.
+#[derive(Debug, Clone)]
+pub struct RegTable {
+    /// Read-only core identifier (5 bits on chip: up to 32 nodes/domain).
+    core_id: u8,
+    /// Clock-gate enable: when false the core burns only gated leakage.
+    pub enabled: bool,
+    /// Number of input axons this core listens to.
+    pub axons: usize,
+    /// Number of neurons implemented in this core.
+    pub neurons: usize,
+    /// Neuron dynamics configuration.
+    pub neuron_params: NeuronParams,
+    /// Weight/codebook geometry.
+    pub weight_config: WeightConfig,
+}
+
+impl RegTable {
+    /// Build and validate a register table.
+    pub fn new(
+        core_id: u8,
+        axons: usize,
+        neurons: usize,
+        neuron_params: NeuronParams,
+        codebook: &Codebook,
+    ) -> Result<Self> {
+        if core_id >= 32 {
+            return Err(Error::Core(format!(
+                "core_id {core_id} exceeds the 5-bit id space"
+            )));
+        }
+        if neurons == 0 || neurons > super::MAX_NEURONS_PER_CORE {
+            return Err(Error::Core(format!(
+                "neurons {} out of range 1..={}",
+                neurons,
+                super::MAX_NEURONS_PER_CORE
+            )));
+        }
+        if axons == 0 {
+            return Err(Error::Core("axons must be > 0".into()));
+        }
+        Ok(RegTable {
+            core_id,
+            enabled: true,
+            axons,
+            neurons,
+            neuron_params,
+            weight_config: WeightConfig {
+                n: codebook.n(),
+                w_bits: codebook.w_bits(),
+            },
+        })
+    }
+
+    /// Read-only core id.
+    pub fn core_id(&self) -> u8 {
+        self.core_id
+    }
+
+    /// Number of 16-bit spike words per timestep.
+    pub fn spike_words(&self) -> usize {
+        self.axons.div_ceil(super::SPIKE_WORD_BITS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::NeuronParams;
+
+    #[test]
+    fn validates_id_and_sizes() {
+        let cb = Codebook::default_log16();
+        let np = NeuronParams::default();
+        assert!(RegTable::new(31, 16, 10, np.clone(), &cb).is_ok());
+        assert!(RegTable::new(32, 16, 10, np.clone(), &cb).is_err());
+        assert!(RegTable::new(0, 16, 0, np.clone(), &cb).is_err());
+        assert!(RegTable::new(0, 16, 9000, np.clone(), &cb).is_err());
+        assert!(RegTable::new(0, 0, 10, np, &cb).is_err());
+    }
+
+    #[test]
+    fn spike_words_rounds_up() {
+        let cb = Codebook::default_log16();
+        let rt = RegTable::new(1, 17, 8, NeuronParams::default(), &cb).unwrap();
+        assert_eq!(rt.spike_words(), 2);
+    }
+}

@@ -1,0 +1,251 @@
+//! Dual synapse process engines (SPE).
+//!
+//! The two 4-bit engines jointly retire [`super::SPE_LANES`] (= 4) synapse
+//! operations per cycle: weight-index fetch → codebook read → saturating
+//! accumulate into the partial-membrane-potential register of the target
+//! neuron. The SPE consumes axon jobs queued by the ZSPE; a full queue
+//! back-pressures the ZSPE (a pipeline stall).
+
+use super::codebook::Codebook;
+use super::synapses::Synapses;
+use std::collections::VecDeque;
+
+/// One queued unit of SPE work: an axon whose synapse list must be walked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    /// Axon id.
+    pub axon: u32,
+    /// Next synapse position within the axon's list.
+    pub pos: u32,
+}
+
+/// SPE state: the job queue and the in-flight job.
+#[derive(Debug, Clone)]
+pub struct Spe {
+    queue: VecDeque<Job>,
+    current: Option<Job>,
+    capacity: usize,
+}
+
+/// Scratch accumulation target shared with the neuron updater.
+pub struct AccumCtx<'a> {
+    /// Partial-MP accumulators, one per neuron.
+    pub acc: &'a mut [i32],
+    /// Touched flags (first-touch detection for the partial-update list).
+    pub touched: &'a mut [bool],
+    /// Ordered list of touched neurons.
+    pub touched_list: &'a mut Vec<u32>,
+}
+
+impl Spe {
+    /// New SPE with a job queue of `capacity` entries (hardware buffer).
+    pub fn new(capacity: usize) -> Self {
+        Spe {
+            queue: VecDeque::with_capacity(capacity),
+            current: None,
+            capacity,
+        }
+    }
+
+    /// Free slots in the job queue.
+    pub fn free_slots(&self) -> usize {
+        self.capacity - self.queue.len()
+    }
+
+    /// True when no queued nor in-flight work remains.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.current.is_none()
+    }
+
+    /// Enqueue an axon job (caller must have checked `free_slots`).
+    pub fn push(&mut self, axon: u32) {
+        debug_assert!(self.queue.len() < self.capacity, "SPE queue overflow");
+        self.queue.push_back(Job { axon, pos: 0 });
+    }
+
+    /// Bulk-drain every queued and in-flight job (hot-path fast lane used
+    /// once the ZSPE has nothing more to forward). Cycle-exact with
+    /// repeated [`Self::step`]: the stepper packs 4 lanes across job
+    /// boundaries, so draining `S` remaining synapse ops takes
+    /// `ceil(S / 4)` cycles either way. Returns `(sops, cycles)`.
+    pub fn drain_bulk(&mut self, syn: &Synapses, cb: &Codebook, ctx: &mut AccumCtx) -> (u64, u64) {
+        let mut sops = 0u64;
+        loop {
+            let job = match self.current.take() {
+                Some(j) => j,
+                None => match self.queue.pop_front() {
+                    Some(j) => j,
+                    None => break,
+                },
+            };
+            let (targets, widx) = syn.slices_of(job.axon as usize);
+            let a = job.pos as usize;
+            for (&t, &w) in targets[a..].iter().zip(&widx[a..]) {
+                let ti = t as usize;
+                ctx.acc[ti] = ctx.acc[ti].saturating_add(cb.weight(w));
+                if !ctx.touched[ti] {
+                    ctx.touched[ti] = true;
+                    ctx.touched_list.push(t);
+                }
+            }
+            sops += (targets.len() - a) as u64;
+        }
+        (sops, sops.div_ceil(super::SPE_LANES as u64))
+    }
+
+    /// Fast-forward through one whole job (used by the pipeline when the
+    /// front stages are provably blocked on a full queue — the only
+    /// possible progress is the SPE retiring its in-flight job). Returns
+    /// `(sops, cycles)`; a no-op when idle.
+    pub fn fast_forward_one_job(
+        &mut self,
+        syn: &Synapses,
+        cb: &Codebook,
+        ctx: &mut AccumCtx,
+    ) -> (u64, u64) {
+        let job = match self.current.take() {
+            Some(j) => j,
+            None => match self.queue.pop_front() {
+                Some(j) => j,
+                None => return (0, 0),
+            },
+        };
+        let (targets, widx) = syn.slices_of(job.axon as usize);
+        let a = job.pos as usize;
+        for (&t, &w) in targets[a..].iter().zip(&widx[a..]) {
+            let ti = t as usize;
+            ctx.acc[ti] = ctx.acc[ti].saturating_add(cb.weight(w));
+            if !ctx.touched[ti] {
+                ctx.touched[ti] = true;
+                ctx.touched_list.push(t);
+            }
+        }
+        let sops = (targets.len() - a) as u64;
+        (sops, sops.div_ceil(super::SPE_LANES as u64))
+    }
+
+    /// Advance one cycle: retire up to [`super::SPE_LANES`] synapse ops.
+    /// Returns the number of SOPs performed this cycle.
+    pub fn step(&mut self, syn: &Synapses, cb: &Codebook, ctx: &mut AccumCtx) -> u32 {
+        let mut lanes = super::SPE_LANES as u32;
+        let mut sops = 0;
+        while lanes > 0 {
+            let job = match self.current {
+                Some(j) => j,
+                None => match self.queue.pop_front() {
+                    Some(j) => {
+                        self.current = Some(j);
+                        j
+                    }
+                    None => break,
+                },
+            };
+            let (targets, widx) = syn.slices_of(job.axon as usize);
+            let remaining = targets.len() as u32 - job.pos;
+            if remaining == 0 {
+                self.current = None;
+                continue;
+            }
+            let take = remaining.min(lanes);
+            let a = job.pos as usize;
+            let b = (job.pos + take) as usize;
+            for (&t, &w) in targets[a..b].iter().zip(&widx[a..b]) {
+                let ti = t as usize;
+                ctx.acc[ti] = ctx.acc[ti].saturating_add(cb.weight(w));
+                if !ctx.touched[ti] {
+                    ctx.touched[ti] = true;
+                    ctx.touched_list.push(t);
+                }
+            }
+            sops += take;
+            lanes -= take;
+            if job.pos + take == targets.len() as u32 {
+                self.current = None;
+            } else {
+                self.current = Some(Job {
+                    axon: job.axon,
+                    pos: job.pos + take,
+                });
+            }
+        }
+        sops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::synapses::SynapsesBuilder;
+
+    fn fixture() -> (Synapses, Codebook) {
+        let mut b = SynapsesBuilder::new(2, 8, 16);
+        // axon 0 → 6 synapses, axon 1 → 2 synapses.
+        for n in 0..6 {
+            b.connect(0, n, 10).unwrap(); // weight(10) = 4 in default_log16
+        }
+        b.connect(1, 6, 9).unwrap(); // weight(9) = 1
+        b.connect(1, 7, 9).unwrap();
+        (b.build(), Codebook::default_log16())
+    }
+
+    fn ctx<'a>(
+        acc: &'a mut [i32],
+        touched: &'a mut [bool],
+        list: &'a mut Vec<u32>,
+    ) -> AccumCtx<'a> {
+        AccumCtx {
+            acc,
+            touched,
+            touched_list: list,
+        }
+    }
+
+    #[test]
+    fn retires_four_lanes_per_cycle_across_jobs() {
+        let (syn, cb) = fixture();
+        let mut spe = Spe::new(8);
+        spe.push(0);
+        spe.push(1);
+        let mut acc = vec![0i32; 8];
+        let mut touched = vec![false; 8];
+        let mut list = Vec::new();
+        // cycle 1: 4 sops from axon 0.
+        assert_eq!(spe.step(&syn, &cb, &mut ctx(&mut acc, &mut touched, &mut list)), 4);
+        // cycle 2: 2 remaining from axon 0 + 2 from axon 1.
+        assert_eq!(spe.step(&syn, &cb, &mut ctx(&mut acc, &mut touched, &mut list)), 4);
+        assert!(spe.idle());
+        assert_eq!(acc[0], 4);
+        assert_eq!(acc[6], 1);
+        assert_eq!(list.len(), 8);
+    }
+
+    #[test]
+    fn zero_fanout_job_consumes_no_lanes() {
+        let mut b = SynapsesBuilder::new(2, 2, 16);
+        b.connect(1, 0, 9).unwrap();
+        let syn = b.build();
+        let cb = Codebook::default_log16();
+        let mut spe = Spe::new(4);
+        spe.push(0); // fanout 0
+        spe.push(1);
+        let mut acc = vec![0i32; 2];
+        let mut touched = vec![false; 2];
+        let mut list = Vec::new();
+        let sops = spe.step(&syn, &cb, &mut ctx(&mut acc, &mut touched, &mut list));
+        assert_eq!(sops, 1);
+        assert!(spe.idle());
+    }
+
+    #[test]
+    fn touched_list_records_first_touch_once() {
+        let (syn, cb) = fixture();
+        let mut spe = Spe::new(8);
+        spe.push(0);
+        let mut acc = vec![0i32; 8];
+        let mut touched = vec![false; 8];
+        let mut list = Vec::new();
+        spe.step(&syn, &cb, &mut ctx(&mut acc, &mut touched, &mut list));
+        spe.step(&syn, &cb, &mut ctx(&mut acc, &mut touched, &mut list));
+        assert_eq!(list, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-core synapse connectivity: CSR by axon, with per-synapse weight
+//! *indexes* into the shared codebook (the chip stores only `log2 N` bits
+//! per synapse — that is how 64 M synapses/core fit).
+
+use crate::{Error, Result};
+
+
+/// Compressed synapse table: for each axon, a slice of (target neuron,
+/// weight index) pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Synapses {
+    /// CSR offsets, length `axons + 1`.
+    offsets: Vec<u32>,
+    /// Target neuron ids, length = total synapses.
+    targets: Vec<u32>,
+    /// Codebook indexes, parallel to `targets`.
+    widx: Vec<u8>,
+}
+
+impl Synapses {
+    /// Number of axons.
+    pub fn axons(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Total synapse count.
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// True when there are no synapses.
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Fan-out of one axon.
+    #[inline]
+    pub fn fanout(&self, axon: usize) -> usize {
+        (self.offsets[axon + 1] - self.offsets[axon]) as usize
+    }
+
+    /// Iterate the (target, weight index) pairs of one axon.
+    #[inline]
+    pub fn synapses_of(&self, axon: usize) -> impl Iterator<Item = (u32, u8)> + '_ {
+        let a = self.offsets[axon] as usize;
+        let b = self.offsets[axon + 1] as usize;
+        self.targets[a..b].iter().copied().zip(self.widx[a..b].iter().copied())
+    }
+
+    /// Raw slices of one axon's synapses (hot-path accessor).
+    #[inline]
+    pub fn slices_of(&self, axon: usize) -> (&[u32], &[u8]) {
+        let a = self.offsets[axon] as usize;
+        let b = self.offsets[axon + 1] as usize;
+        (&self.targets[a..b], &self.widx[a..b])
+    }
+
+    /// Storage the chip would need for this table: `synapses × log2 N` bits.
+    pub fn storage_bits(&self, index_bits: usize) -> u64 {
+        self.len() as u64 * index_bits as u64
+    }
+}
+
+/// Builder that accepts synapses in any order and freezes them into CSR.
+#[derive(Debug, Clone)]
+pub struct SynapsesBuilder {
+    axons: usize,
+    neurons: usize,
+    n_codebook: usize,
+    /// (axon, target, widx) triples.
+    entries: Vec<(u32, u32, u8)>,
+}
+
+impl SynapsesBuilder {
+    /// New builder for a core with `axons` inputs, `neurons` targets and a
+    /// codebook of `n_codebook` entries.
+    pub fn new(axons: usize, neurons: usize, n_codebook: usize) -> Self {
+        SynapsesBuilder {
+            axons,
+            neurons,
+            n_codebook,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Add one synapse `axon → neuron` with codebook index `widx`.
+    pub fn connect(&mut self, axon: usize, neuron: usize, widx: u8) -> Result<&mut Self> {
+        if axon >= self.axons {
+            return Err(Error::Core(format!(
+                "axon {axon} out of range 0..{}",
+                self.axons
+            )));
+        }
+        if neuron >= self.neurons {
+            return Err(Error::Core(format!(
+                "neuron {neuron} out of range 0..{}",
+                self.neurons
+            )));
+        }
+        if widx as usize >= self.n_codebook {
+            return Err(Error::Core(format!(
+                "weight index {widx} out of codebook range 0..{}",
+                self.n_codebook
+            )));
+        }
+        self.entries.push((axon as u32, neuron as u32, widx));
+        Ok(self)
+    }
+
+    /// Dense all-to-all connection where `widx_of(axon, neuron)` supplies
+    /// the codebook index.
+    pub fn connect_dense(
+        &mut self,
+        widx_of: impl Fn(usize, usize) -> u8,
+    ) -> Result<&mut Self> {
+        self.entries.reserve(self.axons * self.neurons);
+        for a in 0..self.axons {
+            for n in 0..self.neurons {
+                let w = widx_of(a, n);
+                if w as usize >= self.n_codebook {
+                    return Err(Error::Core(format!(
+                        "weight index {w} out of codebook range"
+                    )));
+                }
+                self.entries.push((a as u32, n as u32, w));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Freeze into CSR form (counting sort by axon; stable in target order
+    /// of insertion).
+    pub fn build(&self) -> Synapses {
+        let mut counts = vec![0u32; self.axons + 1];
+        for &(a, _, _) in &self.entries {
+            counts[a as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut targets = vec![0u32; self.entries.len()];
+        let mut widx = vec![0u8; self.entries.len()];
+        for &(a, t, w) in &self.entries {
+            let pos = cursor[a as usize] as usize;
+            targets[pos] = t;
+            widx[pos] = w;
+            cursor[a as usize] += 1;
+        }
+        Synapses {
+            offsets,
+            targets,
+            widx,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_iterate() {
+        let mut b = SynapsesBuilder::new(3, 4, 16);
+        b.connect(2, 0, 5).unwrap();
+        b.connect(0, 1, 1).unwrap();
+        b.connect(0, 3, 2).unwrap();
+        let s = b.build();
+        assert_eq!(s.axons(), 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.fanout(0), 2);
+        assert_eq!(s.fanout(1), 0);
+        assert_eq!(s.fanout(2), 1);
+        let v: Vec<_> = s.synapses_of(0).collect();
+        assert_eq!(v, vec![(1, 1), (3, 2)]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut b = SynapsesBuilder::new(2, 2, 4);
+        assert!(b.connect(2, 0, 0).is_err());
+        assert!(b.connect(0, 2, 0).is_err());
+        assert!(b.connect(0, 0, 4).is_err());
+    }
+
+    #[test]
+    fn dense_builder_counts() {
+        let mut b = SynapsesBuilder::new(4, 3, 16);
+        b.connect_dense(|a, n| ((a + n) % 16) as u8).unwrap();
+        let s = b.build();
+        assert_eq!(s.len(), 12);
+        assert_eq!(s.storage_bits(4), 48);
+    }
+}

@@ -1,0 +1,76 @@
+//! Zero-skip sparse process engine (ZSPE).
+//!
+//! Scans one 16-bit spike word per cycle; valid (set) bits become
+//! weight-index requests forwarded to the SPE stage, zero bits are
+//! *skipped* at near-zero energy. This is the paper's headline sparse
+//! optimization: synapse work and energy scale with valid spikes, not
+//! with axon count.
+
+/// Result of scanning one spike word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WordScan {
+    /// Absolute axon ids of valid spikes in this word (LSB-first order —
+    /// the hardware priority encoder drains from bit 0 upward).
+    pub valid_axons: Vec<u32>,
+    /// Number of zero (skipped) lanes in this word that map to real axons.
+    pub skipped: u32,
+}
+
+/// Scan a 16-bit spike word.
+///
+/// `word_idx` is the word's position in the spike cache, `axons` the core's
+/// total axon count (so the final partial word doesn't report padding
+/// lanes as skips).
+pub fn scan_word(word: u16, word_idx: usize, axons: usize) -> WordScan {
+    let base = word_idx * super::SPIKE_WORD_BITS;
+    let lanes = super::SPIKE_WORD_BITS.min(axons.saturating_sub(base));
+    let mut valid_axons = Vec::new();
+    let mut w = word;
+    // Drain set bits LSB-first via count-trailing-zeros — mirrors the
+    // hardware priority encoder and is branch-light on the host.
+    while w != 0 {
+        let bit = w.trailing_zeros() as usize;
+        if bit >= lanes {
+            break; // padding bits beyond the last axon
+        }
+        valid_axons.push((base + bit) as u32);
+        w &= w - 1;
+    }
+    WordScan {
+        skipped: lanes as u32 - valid_axons.len() as u32,
+        valid_axons,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scans_lsb_first() {
+        let s = scan_word(0b1000_0000_0000_0101, 0, 16);
+        assert_eq!(s.valid_axons, vec![0, 2, 15]);
+        assert_eq!(s.skipped, 13);
+    }
+
+    #[test]
+    fn word_offset_applied() {
+        let s = scan_word(0b1, 2, 64);
+        assert_eq!(s.valid_axons, vec![32]);
+    }
+
+    #[test]
+    fn partial_final_word_ignores_padding() {
+        // 20 axons: word 1 has only 4 real lanes (16..19).
+        let s = scan_word(0xFFFF, 1, 20);
+        assert_eq!(s.valid_axons, vec![16, 17, 18, 19]);
+        assert_eq!(s.skipped, 0);
+    }
+
+    #[test]
+    fn all_zero_word_skips_all_lanes() {
+        let s = scan_word(0, 0, 16);
+        assert!(s.valid_axons.is_empty());
+        assert_eq!(s.skipped, 16);
+    }
+}

@@ -1,0 +1,134 @@
+//! Spike encoders shared by the synthetic generators: Bernoulli rate
+//! coding from intensity maps, plus gaussian-blob intensity synthesis.
+
+use super::events::Sample;
+use crate::util::prng::Rng;
+
+/// A 2D (or stacked-channel) intensity map in `[0, 1]`.
+#[derive(Debug, Clone)]
+pub struct Intensity {
+    /// Width.
+    pub w: usize,
+    /// Height.
+    pub h: usize,
+    /// Channels.
+    pub c: usize,
+    /// Row-major `[c][y][x]` intensities.
+    pub data: Vec<f64>,
+}
+
+impl Intensity {
+    /// All-zero map.
+    pub fn zeros(w: usize, h: usize, c: usize) -> Self {
+        Intensity {
+            w,
+            h,
+            c,
+            data: vec![0.0; w * h * c],
+        }
+    }
+
+    /// Flat input index of `(channel, y, x)`.
+    #[inline]
+    pub fn idx(&self, ch: usize, y: usize, x: usize) -> usize {
+        (ch * self.h + y) * self.w + x
+    }
+
+    /// Add a gaussian blob at `(cx, cy)` with std `sigma` and peak `amp`
+    /// on channel `ch`, clamping to `[0, 1]`.
+    pub fn add_blob(&mut self, ch: usize, cx: f64, cy: f64, sigma: f64, amp: f64) {
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                let v = amp * (-d2 / (2.0 * sigma * sigma)).exp();
+                let i = self.idx(ch, y, x);
+                self.data[i] = (self.data[i] + v).min(1.0);
+            }
+        }
+    }
+
+    /// Shift the map by integer `(dx, dy)` (zero-fill), returning a copy —
+    /// used for saccade/motion simulation.
+    pub fn shifted(&self, dx: i64, dy: i64) -> Intensity {
+        let mut out = Intensity::zeros(self.w, self.h, self.c);
+        for ch in 0..self.c {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    let sx = x as i64 - dx;
+                    let sy = y as i64 - dy;
+                    if sx >= 0 && sx < self.w as i64 && sy >= 0 && sy < self.h as i64 {
+                        let v = self.data[self.idx(ch, sy as usize, sx as usize)];
+                        let i = out.idx(ch, y, x);
+                        out.data[i] = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total inputs (`w × h × c`).
+    pub fn inputs(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Bernoulli rate coding: each timestep, input `i` spikes with probability
+/// `intensity[i] × gain` (clamped to 1).
+pub fn rate_encode(
+    frames: &[Intensity],
+    gain: f64,
+    label: usize,
+    rng: &mut Rng,
+) -> Sample {
+    let mut events = Vec::new();
+    for (t, f) in frames.iter().enumerate() {
+        for (i, &v) in f.data.iter().enumerate() {
+            let p = (v * gain).min(1.0);
+            if p > 0.0 && rng.bool(p) {
+                events.push((t as u16, i as u32));
+            }
+        }
+    }
+    Sample { label, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_peaks_at_center() {
+        let mut m = Intensity::zeros(9, 9, 1);
+        m.add_blob(0, 4.0, 4.0, 1.5, 0.9);
+        let center = m.data[m.idx(0, 4, 4)];
+        let corner = m.data[m.idx(0, 0, 0)];
+        assert!(center > 0.85);
+        assert!(corner < 0.01);
+    }
+
+    #[test]
+    fn shift_moves_mass() {
+        let mut m = Intensity::zeros(9, 9, 1);
+        m.add_blob(0, 2.0, 2.0, 1.0, 1.0);
+        let s = m.shifted(3, 0);
+        let i_orig = m.idx(0, 2, 2);
+        let i_new = m.idx(0, 2, 5);
+        assert!(s.data[i_new] > 0.9);
+        assert!(s.data[i_orig] < s.data[i_new]);
+    }
+
+    #[test]
+    fn rate_encode_tracks_intensity() {
+        let mut hi = Intensity::zeros(10, 10, 1);
+        for v in hi.data.iter_mut() {
+            *v = 0.8;
+        }
+        let lo = Intensity::zeros(10, 10, 1);
+        let mut rng = Rng::new(1);
+        let s_hi = rate_encode(&vec![hi; 10], 0.5, 0, &mut rng);
+        let s_lo = rate_encode(&vec![lo; 10], 0.5, 0, &mut rng);
+        assert!(s_hi.events.len() > 300); // E = 10t × 100px × 0.4
+        assert_eq!(s_lo.events.len(), 0);
+    }
+}

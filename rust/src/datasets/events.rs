@@ -1,0 +1,214 @@
+//! Event-stream containers + the JSON interchange with the Python side.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// One labelled sample: a sparse spike raster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sample {
+    /// Ground-truth class.
+    pub label: usize,
+    /// Events as (timestep, axon) pairs, sorted by timestep.
+    pub events: Vec<(u16, u32)>,
+}
+
+impl Sample {
+    /// Expand to a dense raster (`timesteps × inputs` booleans).
+    pub fn to_raster(&self, timesteps: usize, inputs: usize) -> Vec<Vec<bool>> {
+        let mut r = vec![vec![false; inputs]; timesteps];
+        for &(t, a) in &self.events {
+            if (t as usize) < timesteps && (a as usize) < inputs {
+                r[t as usize][a as usize] = true;
+            }
+        }
+        r
+    }
+
+    /// Spikes at one timestep (axon ids, ascending).
+    pub fn spikes_at(&self, t: u16) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .events
+            .iter()
+            .filter(|&&(et, _)| et == t)
+            .map(|&(_, a)| a)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Mean spikes per timestep.
+    pub fn rate(&self, timesteps: usize) -> f64 {
+        self.events.len() as f64 / timesteps as f64
+    }
+}
+
+/// A labelled dataset of event streams.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Dataset name.
+    pub name: String,
+    /// Input (axon) count.
+    pub inputs: usize,
+    /// Timesteps per sample.
+    pub timesteps: usize,
+    /// Class count.
+    pub classes: usize,
+    /// Samples.
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    /// Average spike sparsity: fraction of (timestep × axon) slots that
+    /// are **zero** (the x-axis of Fig. 3).
+    pub fn sparsity(&self) -> f64 {
+        let slots = (self.samples.len() * self.timesteps * self.inputs) as f64;
+        let spikes: usize = self.samples.iter().map(|s| s.events.len()).sum();
+        1.0 - spikes as f64 / slots
+    }
+
+    /// Load the Python-exported interchange file.
+    pub fn load_json(path: &Path) -> Result<Dataset> {
+        let j = Json::read_file(path)?;
+        let samples = j
+            .get("samples")?
+            .as_arr()?
+            .iter()
+            .map(|s| -> Result<Sample> {
+                let events = s
+                    .get("events")?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| -> Result<(u16, u32)> {
+                        let pair = e.as_arr()?;
+                        if pair.len() != 2 {
+                            return Err(Error::Artifact("event must be [t, axon]".into()));
+                        }
+                        Ok((pair[0].as_i64()? as u16, pair[1].as_i64()? as u32))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Sample {
+                    label: s.get("label")?.as_usize()?,
+                    events,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let d = Dataset {
+            name: j.get("name")?.as_str()?.to_string(),
+            inputs: j.get("inputs")?.as_usize()?,
+            timesteps: j.get("timesteps")?.as_usize()?,
+            classes: j.get("classes")?.as_usize()?,
+            samples,
+        };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Serialize to the interchange format.
+    pub fn to_json(&self) -> Json {
+        let samples: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("label", Json::Num(s.label as f64)),
+                    (
+                        "events",
+                        Json::Arr(
+                            s.events
+                                .iter()
+                                .map(|&(t, a)| {
+                                    Json::Arr(vec![Json::Num(t as f64), Json::Num(a as f64)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("inputs", Json::Num(self.inputs as f64)),
+            ("timesteps", Json::Num(self.timesteps as f64)),
+            ("classes", Json::Num(self.classes as f64)),
+            ("samples", Json::Arr(samples)),
+        ])
+    }
+
+    /// Validate labels/events are in range.
+    pub fn validate(&self) -> Result<()> {
+        for (i, s) in self.samples.iter().enumerate() {
+            if s.label >= self.classes {
+                return Err(Error::Artifact(format!(
+                    "sample {i}: label {} out of {} classes",
+                    s.label, self.classes
+                )));
+            }
+            for &(t, a) in &s.events {
+                if t as usize >= self.timesteps || a as usize >= self.inputs {
+                    return Err(Error::Artifact(format!(
+                        "sample {i}: event ({t},{a}) out of range"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            inputs: 4,
+            timesteps: 3,
+            classes: 2,
+            samples: vec![
+                Sample { label: 0, events: vec![(0, 1), (2, 3)] },
+                Sample { label: 1, events: vec![(1, 0)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn raster_expansion() {
+        let d = tiny();
+        let r = d.samples[0].to_raster(3, 4);
+        assert!(r[0][1] && r[2][3]);
+        assert!(!r[0][0] && !r[1][1]);
+        assert_eq!(d.samples[0].spikes_at(0), vec![1]);
+    }
+
+    #[test]
+    fn sparsity_counts_zero_slots() {
+        let d = tiny();
+        // 2 samples × 3 t × 4 inputs = 24 slots, 3 spikes.
+        assert!((d.sparsity() - (1.0 - 3.0 / 24.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = tiny();
+        let text = d.to_json().to_string();
+        let tmp = std::env::temp_dir().join("fsoc_ds_test.json");
+        std::fs::write(&tmp, &text).unwrap();
+        let back = Dataset::load_json(&tmp).unwrap();
+        assert_eq!(back.samples, d.samples);
+        assert_eq!(back.inputs, 4);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let mut d = tiny();
+        d.samples[0].label = 9;
+        assert!(d.validate().is_err());
+        let mut d = tiny();
+        d.samples[0].events.push((9, 0));
+        assert!(d.validate().is_err());
+    }
+}

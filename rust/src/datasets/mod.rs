@@ -1,0 +1,94 @@
+//! Synthetic event-stream datasets (the paper evaluates on NMNIST, DVS
+//! Gesture and Cifar-10; those files are not available offline, so we
+//! substitute generators that reproduce their **tensor geometry and spike
+//! statistics** — see DESIGN.md §Substitutions):
+//!
+//! - [`nmnist`] — 34×34×2 saccade-style digit events, 10 classes;
+//! - [`dvsgesture`] — 32×32×2 motion events (rotating/translating
+//!   clusters), 11 classes;
+//! - [`cifar`] — rate-coded 32×32×3 static images, 10 classes.
+//!
+//! The *same generator definitions* exist in `python/compile/data.py`
+//! (seeded numpy) where training happens; the Python side also exports a
+//! held-out test split into `artifacts/dataset_<name>.json` which
+//! [`events::Dataset::load_json`] reads so that Rust evaluates the exact
+//! samples the trained network was validated on.
+
+pub mod cifar;
+pub mod dvsgesture;
+pub mod encode;
+pub mod events;
+pub mod nmnist;
+
+pub use events::{Dataset, Sample};
+
+/// Workload descriptor used across benches/examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// NMNIST-like saccade events.
+    Nmnist,
+    /// DVS-Gesture-like motion events.
+    DvsGesture,
+    /// Rate-coded CIFAR-like frames.
+    Cifar10,
+}
+
+impl Workload {
+    /// Canonical dataset name (artifact file stem).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Nmnist => "nmnist",
+            Workload::DvsGesture => "dvsgesture",
+            Workload::Cifar10 => "cifar10",
+        }
+    }
+
+    /// Input width of the encoded stream.
+    pub fn inputs(&self) -> usize {
+        match self {
+            Workload::Nmnist => 34 * 34 * 2,
+            Workload::DvsGesture => 32 * 32 * 2,
+            Workload::Cifar10 => 32 * 32 * 3,
+        }
+    }
+
+    /// Class count.
+    pub fn classes(&self) -> usize {
+        match self {
+            Workload::Nmnist => 10,
+            Workload::DvsGesture => 11,
+            Workload::Cifar10 => 10,
+        }
+    }
+
+    /// Default simulation timesteps per sample.
+    pub fn timesteps(&self) -> usize {
+        match self {
+            Workload::Nmnist => 20,
+            Workload::DvsGesture => 25,
+            Workload::Cifar10 => 16,
+        }
+    }
+
+    /// Generate `n` synthetic samples with the Rust generator.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        match self {
+            Workload::Nmnist => nmnist::generate(n, seed),
+            Workload::DvsGesture => dvsgesture::generate(n, seed),
+            Workload::Cifar10 => cifar::generate(n, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_paper_datasets() {
+        assert_eq!(Workload::Nmnist.inputs(), 2312);
+        assert_eq!(Workload::DvsGesture.inputs(), 2048);
+        assert_eq!(Workload::Cifar10.inputs(), 3072);
+        assert_eq!(Workload::DvsGesture.classes(), 11);
+    }
+}

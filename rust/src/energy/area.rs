@@ -1,0 +1,126 @@
+//! 55 nm area model: die area, neuron density, power density.
+//!
+//! Table I anchors: 5.42 mm² die (3.41 mm² without pad ring), "160 K"
+//! (= 20 × 8192 = 163 840) neurons → 163 840 / 5.42 ≈ 30.23 K neurons/mm².
+
+
+
+/// Static area description of the fabricated chip, with per-block
+/// estimates that sum to the die area.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// Full die area including pad ring (mm²).
+    pub die_mm2: f64,
+    /// Core logic area without pads (mm²).
+    pub logic_mm2: f64,
+    /// One neuromorphic core (mm²).
+    pub neuro_core_mm2: f64,
+    /// Number of neuromorphic cores.
+    pub n_cores: usize,
+    /// One level-1 CMRouter (mm²).
+    pub router_mm2: f64,
+    /// Number of level-1 routers.
+    pub n_routers: usize,
+    /// Level-2 router (mm²).
+    pub l2_router_mm2: f64,
+    /// RISC-V CPU + ENU (mm²).
+    pub cpu_mm2: f64,
+    /// Bus + DMA + clock manager + output buffers (mm²).
+    pub plumbing_mm2: f64,
+    /// Neurons per core.
+    pub neurons_per_core: usize,
+    /// Maximum (virtual) synapses per core — weight-index addressed.
+    pub synapses_per_core: u64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        Self::paper_chip()
+    }
+}
+
+impl AreaModel {
+    /// The fabricated chip of the paper: 20 cores + 12 routers + RISC-V
+    /// on a 5.42 mm² die (55 nm).
+    pub fn paper_chip() -> Self {
+        AreaModel {
+            die_mm2: 5.42,
+            logic_mm2: 3.41,
+            neuro_core_mm2: 0.118,
+            n_cores: 20,
+            router_mm2: 0.021,
+            n_routers: 12,
+            l2_router_mm2: 0.028,
+            cpu_mm2: 0.46,
+            plumbing_mm2: 0.31,
+            neurons_per_core: 8192,
+            synapses_per_core: 64 * 1024 * 1024,
+        }
+    }
+
+    /// Total neurons on chip.
+    pub fn total_neurons(&self) -> usize {
+        self.n_cores * self.neurons_per_core
+    }
+
+    /// Total addressable synapses on chip.
+    pub fn total_synapses(&self) -> u64 {
+        self.n_cores as u64 * self.synapses_per_core
+    }
+
+    /// Neuron density (K neurons / mm²): the paper's 30.23 K/mm² is
+    /// 163 840 neurons ("160 K") over the full 5.42 mm² die.
+    pub fn neuron_density_k_per_mm2(&self) -> f64 {
+        self.total_neurons() as f64 / 1000.0 / self.die_mm2
+    }
+
+    /// Power density (mW/mm²) for a given chip power.
+    pub fn power_density(&self, power_mw: f64) -> f64 {
+        power_mw / self.die_mm2
+    }
+
+    /// Sum of block areas (mm²) — checked against `logic_mm2` in tests.
+    pub fn block_sum_mm2(&self) -> f64 {
+        self.neuro_core_mm2 * self.n_cores as f64
+            + self.router_mm2 * self.n_routers as f64
+            + self.l2_router_mm2
+            + self.cpu_mm2
+            + self.plumbing_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_neuron_count_and_density() {
+        let a = AreaModel::paper_chip();
+        assert_eq!(a.total_neurons(), 163_840); // "160 K"
+        let d = a.neuron_density_k_per_mm2();
+        assert!((d - 30.23).abs() < 0.05, "density {d}");
+    }
+
+    #[test]
+    fn paper_synapse_count() {
+        let a = AreaModel::paper_chip();
+        // 1280 M synapses.
+        assert_eq!(a.total_synapses(), 1280 * 1024 * 1024);
+    }
+
+    #[test]
+    fn block_areas_fit_logic_area() {
+        let a = AreaModel::paper_chip();
+        let sum = a.block_sum_mm2();
+        assert!(sum <= a.logic_mm2 * 1.05, "blocks {sum} vs logic {}", a.logic_mm2);
+        assert!(sum >= a.logic_mm2 * 0.80, "blocks {sum} too small vs {}", a.logic_mm2);
+    }
+
+    #[test]
+    fn power_density_floor_matches_paper() {
+        let a = AreaModel::paper_chip();
+        // 2.8 mW floor → 0.52 mW/mm².
+        let pd = a.power_density(2.8);
+        assert!((pd - 0.52).abs() < 0.01, "power density {pd}");
+    }
+}

@@ -1,0 +1,326 @@
+//! Event ledger: subsystems record architectural events; the ledger turns
+//! them into energy (pJ), average power (mW) and efficiency (pJ/SOP).
+
+use super::constants::EnergyParams;
+
+use std::collections::BTreeMap;
+
+/// Classes of architectural events the simulators record.
+///
+/// Each class maps to exactly one per-event constant in [`EnergyParams`];
+/// static power is handled separately via [`EnergyLedger::add_active_cycles`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventClass {
+    // core
+    Sop,
+    ZspeWord,
+    ZspeForward,
+    ZeroSkip,
+    MpUpdate,
+    MpLeakOnly,
+    SpikeFire,
+    CacheRead,
+    CacheWrite,
+    // noc
+    HopP2p,
+    HopBroadcast,
+    HopMerge,
+    LinkTraversal,
+    // cpu
+    CpuAlu,
+    CpuMem,
+    CpuMulDiv,
+    CpuBranch,
+    EnuIssue,
+    // soc
+    BusBeat,
+    DmaWord,
+    ExtMemWord,
+    OutBufWrite,
+}
+
+impl EventClass {
+    /// Per-event energy (pJ) for this class under `p`.
+    pub fn energy_pj(self, p: &EnergyParams) -> f64 {
+        use EventClass::*;
+        match self {
+            Sop => p.e_sop,
+            ZspeWord => p.e_zspe_word,
+            ZspeForward => p.e_zspe_fwd,
+            ZeroSkip => p.e_skip,
+            MpUpdate => p.e_mp_update,
+            MpLeakOnly => p.e_mp_leak_only,
+            SpikeFire => p.e_spike_fire,
+            CacheRead => p.e_cache_rd,
+            CacheWrite => p.e_cache_wr,
+            HopP2p => p.e_hop_p2p,
+            HopBroadcast => p.e_hop_bcast,
+            HopMerge => p.e_hop_merge,
+            LinkTraversal => p.e_link,
+            CpuAlu => p.e_cpu_alu,
+            CpuMem => p.e_cpu_mem,
+            CpuMulDiv => p.e_cpu_muldiv,
+            CpuBranch => p.e_cpu_branch,
+            EnuIssue => p.e_enu_issue,
+            BusBeat => p.e_bus_beat,
+            DmaWord => p.e_dma_word,
+            ExtMemWord => p.e_extmem_word,
+            OutBufWrite => p.e_outbuf_wr,
+        }
+    }
+
+    /// All classes, for iteration in reports.
+    pub const ALL: [EventClass; 22] = [
+        EventClass::Sop,
+        EventClass::ZspeWord,
+        EventClass::ZspeForward,
+        EventClass::ZeroSkip,
+        EventClass::MpUpdate,
+        EventClass::MpLeakOnly,
+        EventClass::SpikeFire,
+        EventClass::CacheRead,
+        EventClass::CacheWrite,
+        EventClass::HopP2p,
+        EventClass::HopBroadcast,
+        EventClass::HopMerge,
+        EventClass::LinkTraversal,
+        EventClass::CpuAlu,
+        EventClass::CpuMem,
+        EventClass::CpuMulDiv,
+        EventClass::CpuBranch,
+        EventClass::EnuIssue,
+        EventClass::BusBeat,
+        EventClass::DmaWord,
+        EventClass::ExtMemWord,
+        EventClass::OutBufWrite,
+    ];
+}
+
+/// A static-power contributor: a block that was clocked for some cycles at
+/// some power, and gated (leaking) the rest of the time.
+#[derive(Debug, Clone, Default)]
+struct StaticEntry {
+    active_cycles: u64,
+    gated_cycles: u64,
+    p_active_mw: f64,
+    p_gated_mw: f64,
+}
+
+/// Accumulates event counts + static-power cycle accounting and converts
+/// them to energy/power under a given [`EnergyParams`].
+///
+/// Ledgers are cheap to create, mergeable (`merge`), and serializable so
+/// benches can dump raw counts alongside derived numbers.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    counts: BTreeMap<EventClass, u64>,
+    statics: BTreeMap<String, StaticEntry>,
+}
+
+impl EnergyLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n` events of class `c`.
+    #[inline]
+    pub fn add(&mut self, c: EventClass, n: u64) {
+        *self.counts.entry(c).or_insert(0) += n;
+    }
+
+    /// Record one event of class `c`.
+    #[inline]
+    pub fn add1(&mut self, c: EventClass) {
+        self.add(c, 1);
+    }
+
+    /// Count recorded for class `c`.
+    pub fn count(&self, c: EventClass) -> u64 {
+        self.counts.get(&c).copied().unwrap_or(0)
+    }
+
+    /// Record static-power accounting for named block `label`:
+    /// `active` cycles at `p_active_mw`, `gated` cycles at `p_gated_mw`.
+    pub fn add_static(
+        &mut self,
+        label: &str,
+        active: u64,
+        gated: u64,
+        p_active_mw: f64,
+        p_gated_mw: f64,
+    ) {
+        let e = self.statics.entry(label.to_string()).or_default();
+        e.active_cycles += active;
+        e.gated_cycles += gated;
+        e.p_active_mw = p_active_mw;
+        e.p_gated_mw = p_gated_mw;
+    }
+
+    /// Merge another ledger's counts into this one.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (c, n) in &other.counts {
+            *self.counts.entry(*c).or_insert(0) += n;
+        }
+        for (k, v) in &other.statics {
+            let e = self.statics.entry(k.clone()).or_default();
+            e.active_cycles += v.active_cycles;
+            e.gated_cycles += v.gated_cycles;
+            e.p_active_mw = v.p_active_mw;
+            e.p_gated_mw = v.p_gated_mw;
+        }
+    }
+
+    /// Total dynamic energy (pJ) under `p`.
+    pub fn dynamic_pj(&self, p: &EnergyParams) -> f64 {
+        self.counts
+            .iter()
+            .map(|(c, n)| c.energy_pj(p) * *n as f64)
+            .sum()
+    }
+
+    /// Total static energy (pJ) for all blocks at frequency `f_hz`.
+    pub fn static_pj(&self, f_hz: f64) -> f64 {
+        self.statics
+            .values()
+            .map(|e| {
+                EnergyParams::static_pj(e.p_active_mw, e.active_cycles, f_hz)
+                    + EnergyParams::static_pj(e.p_gated_mw, e.gated_cycles, f_hz)
+            })
+            .sum()
+    }
+
+    /// Total energy (pJ).
+    pub fn total_pj(&self, p: &EnergyParams, f_hz: f64) -> f64 {
+        self.dynamic_pj(p) + self.static_pj(f_hz)
+    }
+
+    /// Average power (mW) over `cycles` at `f_hz`.
+    pub fn avg_power_mw(&self, p: &EnergyParams, cycles: u64, f_hz: f64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        let t_s = cycles as f64 / f_hz;
+        self.total_pj(p, f_hz) / 1.0e9 / t_s
+    }
+
+    /// Energy per synapse operation (pJ/SOP); `None` when no SOPs ran.
+    pub fn pj_per_sop(&self, p: &EnergyParams, f_hz: f64) -> Option<f64> {
+        let sops = self.count(EventClass::Sop);
+        (sops > 0).then(|| self.total_pj(p, f_hz) / sops as f64)
+    }
+
+    /// Core-complex energy (pJ): neuromorphic-core dynamic events plus the
+    /// static entries labelled `core*`. This is the paper's Table-I
+    /// accounting ("the neuromorphic core achieves … pJ/SOP in
+    /// applications") — CPU, NoC, DMA and chip plumbing excluded.
+    pub fn core_pj(&self, p: &EnergyParams, f_hz: f64) -> f64 {
+        use EventClass::*;
+        let dynamic: f64 = [
+            Sop, ZspeWord, ZspeForward, ZeroSkip, MpUpdate, MpLeakOnly, SpikeFire, CacheRead,
+            CacheWrite,
+        ]
+        .iter()
+        .map(|&c| c.energy_pj(p) * self.count(c) as f64)
+        .sum();
+        let stat: f64 = self
+            .statics
+            .iter()
+            .filter(|(k, _)| k.starts_with("core"))
+            .map(|(_, e)| {
+                EnergyParams::static_pj(e.p_active_mw, e.active_cycles, f_hz)
+                    + EnergyParams::static_pj(e.p_gated_mw, e.gated_cycles, f_hz)
+            })
+            .sum();
+        dynamic + stat
+    }
+
+    /// Core-complex energy per SOP (the paper's Table-I metric).
+    pub fn core_pj_per_sop(&self, p: &EnergyParams, f_hz: f64) -> Option<f64> {
+        let sops = self.count(EventClass::Sop);
+        (sops > 0).then(|| self.core_pj(p, f_hz) / sops as f64)
+    }
+
+    /// Detailed breakdown for reports.
+    pub fn breakdown(&self, p: &EnergyParams, f_hz: f64) -> EnergyBreakdown {
+        let mut by_class = BTreeMap::new();
+        for c in EventClass::ALL {
+            let n = self.count(c);
+            if n > 0 {
+                by_class.insert(format!("{c:?}"), c.energy_pj(p) * n as f64);
+            }
+        }
+        let mut by_static = BTreeMap::new();
+        for (k, e) in &self.statics {
+            by_static.insert(
+                k.clone(),
+                EnergyParams::static_pj(e.p_active_mw, e.active_cycles, f_hz)
+                    + EnergyParams::static_pj(e.p_gated_mw, e.gated_cycles, f_hz),
+            );
+        }
+        EnergyBreakdown {
+            dynamic_pj: self.dynamic_pj(p),
+            static_pj: self.static_pj(f_hz),
+            by_class,
+            by_static,
+        }
+    }
+}
+
+/// Itemized energy report (all pJ).
+#[derive(Debug, Clone)]
+pub struct EnergyBreakdown {
+    pub dynamic_pj: f64,
+    pub static_pj: f64,
+    pub by_class: BTreeMap<String, f64>,
+    pub by_static: BTreeMap<String, f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_prices_events() {
+        let p = EnergyParams::nominal();
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 1000);
+        l.add1(EventClass::SpikeFire);
+        assert_eq!(l.count(EventClass::Sop), 1000);
+        let dyn_pj = l.dynamic_pj(&p);
+        assert!((dyn_pj - (1000.0 * p.e_sop + p.e_spike_fire)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_statics() {
+        let mut a = EnergyLedger::new();
+        a.add(EventClass::HopP2p, 5);
+        a.add_static("core0", 100, 50, 0.1, 0.01);
+        let mut b = EnergyLedger::new();
+        b.add(EventClass::HopP2p, 7);
+        b.add_static("core0", 10, 5, 0.1, 0.01);
+        a.merge(&b);
+        assert_eq!(a.count(EventClass::HopP2p), 12);
+        let pj = a.static_pj(200.0e6);
+        let expect = EnergyParams::static_pj(0.1, 110, 200.0e6)
+            + EnergyParams::static_pj(0.01, 55, 200.0e6);
+        assert!((pj - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pj_per_sop_none_without_sops() {
+        let l = EnergyLedger::new();
+        assert!(l.pj_per_sop(&EnergyParams::nominal(), 1e8).is_none());
+    }
+
+    #[test]
+    fn avg_power_basic() {
+        let p = EnergyParams::nominal();
+        let mut l = EnergyLedger::new();
+        // 1e9 pJ over 1 second = 1 mW.
+        let n = (1.0e9 / p.e_sop) as u64;
+        l.add(EventClass::Sop, n);
+        let mw = l.avg_power_mw(&p, 100_000_000, 100.0e6);
+        assert!((mw - 1.0).abs() < 0.01, "got {mw}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Chip-level report assembly: turns ledgers + area model into the
+//! Table-I-style row for a workload run.
+
+use super::{AreaModel, EnergyBreakdown, EnergyLedger, EnergyParams};
+use crate::metrics::table::Table;
+
+
+/// End-to-end chip report for one workload (one Table I column).
+#[derive(Debug, Clone)]
+pub struct ChipReport {
+    /// Workload name (e.g. "nmnist-syn").
+    pub workload: String,
+    /// Neuromorphic-processor frequency used (Hz).
+    pub f_core_hz: f64,
+    /// Supply voltage (V).
+    pub supply_v: f64,
+    /// Wall cycles simulated on the neuromorphic-processor clock.
+    pub cycles: u64,
+    /// Total synapse operations performed.
+    pub sops: u64,
+    /// Total spikes routed through the NoC.
+    pub spikes_routed: u64,
+    /// Classified samples (if the workload is a classification task).
+    pub samples: u64,
+    /// Classification accuracy in [0,1] (if applicable).
+    pub accuracy: Option<f64>,
+    /// Chip energy per synapse op (pJ/SOP) — whole-SoC accounting.
+    pub pj_per_sop: f64,
+    /// Core-complex energy per synapse op (pJ/SOP) — the paper's Table-I
+    /// accounting (neuromorphic cores only).
+    pub core_pj_per_sop: f64,
+    /// Average chip power (mW).
+    pub power_mw: f64,
+    /// Power density (mW/mm²).
+    pub power_density: f64,
+    /// Neuron density (K/mm²) — static, from the area model.
+    pub neuron_density_k_mm2: f64,
+    /// Inference latency per sample (ms), if samples > 0.
+    pub latency_ms_per_sample: Option<f64>,
+    /// Itemized energy.
+    pub breakdown: EnergyBreakdown,
+}
+
+impl ChipReport {
+    /// Assemble a report from a merged ledger.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_ledger(
+        workload: &str,
+        ledger: &EnergyLedger,
+        params: &EnergyParams,
+        area: &AreaModel,
+        f_core_hz: f64,
+        cycles: u64,
+        samples: u64,
+        accuracy: Option<f64>,
+        spikes_routed: u64,
+    ) -> Self {
+        use crate::energy::model::EventClass;
+        let sops = ledger.count(EventClass::Sop);
+        let power_mw = ledger.avg_power_mw(params, cycles, f_core_hz);
+        let pj_per_sop = ledger.pj_per_sop(params, f_core_hz).unwrap_or(f64::NAN);
+        let core_pj_per_sop = ledger
+            .core_pj_per_sop(params, f_core_hz)
+            .unwrap_or(f64::NAN);
+        let latency = (samples > 0)
+            .then(|| cycles as f64 / f_core_hz * 1000.0 / samples as f64);
+        ChipReport {
+            workload: workload.to_string(),
+            f_core_hz,
+            supply_v: params.supply_v,
+            cycles,
+            sops,
+            spikes_routed,
+            samples,
+            accuracy,
+            pj_per_sop,
+            core_pj_per_sop,
+            power_mw,
+            power_density: area.power_density(power_mw),
+            neuron_density_k_mm2: area.neuron_density_k_per_mm2(),
+            latency_ms_per_sample: latency,
+            breakdown: ledger.breakdown(params, f_core_hz),
+        }
+    }
+
+    /// Render several reports as a Table-I-style comparison table.
+    pub fn table(reports: &[ChipReport]) -> Table {
+        let mut t = Table::new(&["metric"]);
+        for r in reports {
+            t.add_column(&r.workload);
+        }
+        let fmt_opt = |v: Option<f64>, scale: f64, digits: usize| {
+            v.map(|x| format!("{:.*}", digits, x * scale))
+                .unwrap_or_else(|| "N.A.".into())
+        };
+        t.row(
+            "frequency (MHz)",
+            reports.iter().map(|r| format!("{:.0}", r.f_core_hz / 1e6)),
+        );
+        t.row(
+            "supply (V)",
+            reports.iter().map(|r| format!("{:.2}", r.supply_v)),
+        );
+        t.row("SOPs", reports.iter().map(|r| r.sops.to_string()));
+        t.row(
+            "core energy eff. (pJ/SOP)",
+            reports.iter().map(|r| format!("{:.3}", r.core_pj_per_sop)),
+        );
+        t.row(
+            "chip energy eff. (pJ/SOP)",
+            reports.iter().map(|r| format!("{:.3}", r.pj_per_sop)),
+        );
+        t.row(
+            "power (mW)",
+            reports.iter().map(|r| format!("{:.2}", r.power_mw)),
+        );
+        t.row(
+            "power density (mW/mm^2)",
+            reports.iter().map(|r| format!("{:.2}", r.power_density)),
+        );
+        t.row(
+            "neuron density (K/mm^2)",
+            reports
+                .iter()
+                .map(|r| format!("{:.2}", r.neuron_density_k_mm2)),
+        );
+        t.row(
+            "accuracy (%)",
+            reports.iter().map(|r| fmt_opt(r.accuracy, 100.0, 1)),
+        );
+        t.row(
+            "latency (ms/sample)",
+            reports
+                .iter()
+                .map(|r| fmt_opt(r.latency_ms_per_sample, 1.0, 3)),
+        );
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::model::EventClass;
+
+    #[test]
+    fn report_from_ledger_computes_density_and_power() {
+        let p = EnergyParams::nominal();
+        let a = AreaModel::paper_chip();
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 1_000_000);
+        let r = ChipReport::from_ledger("t", &l, &p, &a, 100e6, 1_000_000, 10, Some(0.9), 123);
+        assert_eq!(r.sops, 1_000_000);
+        assert!(r.pj_per_sop > 0.0);
+        assert!(r.power_mw > 0.0);
+        assert!((r.neuron_density_k_mm2 - 30.23).abs() < 1.0);
+        assert!(r.latency_ms_per_sample.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let p = EnergyParams::nominal();
+        let a = AreaModel::paper_chip();
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 100);
+        let r = ChipReport::from_ledger("w", &l, &p, &a, 100e6, 100, 0, None, 0);
+        let t = ChipReport::table(&[r]);
+        let s = t.render();
+        assert!(s.contains("pJ/SOP"));
+        assert!(s.contains("N.A."));
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors produced by the simulator, configuration, and runtime layers.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration failed validation (bad field, inconsistent sizes, …).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A network description is malformed or cannot be mapped to the chip.
+    #[error("network error: {0}")]
+    Network(String),
+
+    /// The neuron→core mapper could not place the network.
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// NoC simulation error (unroutable packet, buffer misuse, …).
+    #[error("noc error: {0}")]
+    Noc(String),
+
+    /// Neuromorphic-core simulation error.
+    #[error("core error: {0}")]
+    Core(String),
+
+    /// RISC-V ISS error (illegal instruction, bus fault, …).
+    #[error("riscv error: {0}")]
+    Riscv(String),
+
+    /// SoC-level error (bus, DMA, clock manager).
+    #[error("soc error: {0}")]
+    Soc(String),
+
+    /// PJRT/XLA runtime error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact (HLO text / weights JSON) missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// JSON parse/serialize error (in-tree parser, `util::json`).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor for configuration errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}

@@ -1,0 +1,55 @@
+//! # fullerene-soc
+//!
+//! Software reproduction of *"A 0.96pJ/SOP, 30.23K-neuron/mm² Heterogeneous
+//! Neuromorphic Chip With Fullerene-like Interconnection Topology for
+//! Edge-AI Computing"* (CS.AR 2024).
+//!
+//! The crate is a **cycle-level, energy-annotated simulator** of the paper's
+//! heterogeneous SoC plus the coordination runtime around it:
+//!
+//! - [`core`] — the neuromorphic core: zero-skip sparse process engine
+//!   (ZSPE), dual synapse process engines (SPE) with non-uniform quantized
+//!   weight codebooks, LIF neuron updater with partial membrane-potential
+//!   updates, a four-stage pipeline, and clock gating. A dense baseline
+//!   core ([`core::dense`]) implements the paper's "traditional scheme"
+//!   for the 2.69× ablation.
+//! - [`noc`] — the fullerene-like network-on-chip: 12 connection-matrix
+//!   routers (CMRouter) at icosahedron vertices + 20 cores at its faces,
+//!   hybrid P2P/broadcast/merge transmission, a cycle-driven simulator,
+//!   baseline topologies (2D-mesh, torus, tree, ring), and level-2
+//!   multi-domain scale-up.
+//! - [`riscv`] — an RV32IM instruction-set simulator with three clock
+//!   domains, sleep/wake clock gating, and the Extended Neuromorphic Unit
+//!   (ENU) custom-instruction coupling to the neuromorphic processor.
+//! - [`soc`] — SoC plumbing: neuromorphic bus, IDMA/MPDMA, clock manager,
+//!   output buffers, external-memory interface.
+//! - [`nn`] — network descriptions, non-uniform weight quantization
+//!   (k-means codebooks, N, W ∈ {4, 8, 16}), and the neuron→core mapper.
+//! - [`datasets`] — synthetic event-stream workloads with NMNIST-like,
+//!   DVS-Gesture-like, and rate-coded CIFAR-like geometry/statistics.
+//! - [`energy`] — the calibrated 55 nm event-energy/area model that turns
+//!   simulation event counts into pJ/SOP, mW and mm² figures.
+//! - [`coordinator`] — timestep orchestration across cores, NoC and CPU
+//!   (the chip's system-level behaviour).
+//! - [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX golden model
+//!   (`artifacts/*.hlo.txt`) used to validate the hardware simulation.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod util;
+pub mod benches_support;
+pub mod coordinator;
+pub mod core;
+pub mod datasets;
+pub mod energy;
+pub mod error;
+pub mod metrics;
+pub mod nn;
+pub mod noc;
+pub mod riscv;
+pub mod runtime;
+pub mod soc;
+
+pub use error::{Error, Result};

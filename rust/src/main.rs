@@ -1,0 +1,293 @@
+//! `fullerene-soc` CLI launcher.
+//!
+//! Subcommands:
+//!
+//! - `run`       — run a workload on the simulated chip and print the
+//!                 Table-I-style report (`--workload`, `--samples`,
+//!                 `--config <json>`, `--check none|reference|xla|both`).
+//! - `topo`      — print the Fig. 5a/5b topology comparison table.
+//! - `bench`     — quick in-CLI reproductions: `core-sparsity` (Fig. 3),
+//!                 `router` (Fig. 5c), `riscv-power` (Fig. 6).
+//! - `inspect`   — show how a weights artifact maps onto the chip.
+//! - `gen-data`  — emit a synthetic dataset JSON (debugging aid).
+
+use anyhow::{anyhow, Result};
+use fullerene_soc::config::{parse_check, parse_workload, RunConfig};
+use fullerene_soc::coordinator::ExperimentRunner;
+use fullerene_soc::datasets::Workload;
+use fullerene_soc::energy::ChipReport;
+use fullerene_soc::metrics::Table;
+use fullerene_soc::nn::load_weights_json;
+use fullerene_soc::noc::{TopoStats, Topology};
+use fullerene_soc::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("topo") => cmd_topo(),
+        Some("bench") => cmd_bench(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("gen-data") => cmd_gen_data(args),
+        Some(other) => Err(anyhow!("unknown subcommand '{other}'; run without args for help")),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fullerene-soc — neuromorphic SoC simulator (CS.AR 2024 reproduction)\n\
+         \n\
+         USAGE: fullerene-soc <run|topo|bench|inspect|gen-data> [flags]\n\
+         \n\
+         run       --workload nmnist|dvsgesture|cifar10  --samples N  --seed S\n\
+                   --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
+                   --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
+         topo      (prints the Fig. 5 topology comparison)\n\
+         bench     core-sparsity | router | riscv-power  (quick figure repros)\n\
+         inspect   --weights <file>   (mapping summary)\n\
+         gen-data  --workload W --samples N --seed S --out file.json"
+    );
+}
+
+/// Fallback network used when no trained artifact is available: fixed
+/// pseudo-random codebook indexes (structure exercises every code path;
+/// accuracy is chance — the trained artifact is what Table I uses).
+fn fallback_net(w: Workload, hidden: usize) -> fullerene_soc::nn::NetworkDesc {
+    use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use fullerene_soc::core::Codebook;
+    use fullerene_soc::nn::network::LayerDesc;
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 80,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let (inputs, classes) = (w.inputs(), w.classes());
+    fullerene_soc::nn::NetworkDesc {
+        name: format!("{}-fallback", w.name()),
+        layers: vec![
+            LayerDesc {
+                name: "h".into(),
+                inputs,
+                neurons: hidden,
+                codebook: cb.clone(),
+                widx: (0..inputs * hidden)
+                    .map(|i| ((i.wrapping_mul(2654435761)) % 16) as u8)
+                    .collect(),
+                neuron_params: params.clone(),
+            },
+            LayerDesc {
+                name: "o".into(),
+                inputs: hidden,
+                neurons: classes,
+                codebook: cb,
+                widx: (0..hidden * classes)
+                    .map(|i| ((i.wrapping_mul(40503)) % 16) as u8)
+                    .collect(),
+                neuron_params: params,
+            },
+        ],
+        timesteps: w.timesteps(),
+        classes,
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "workload",
+        "samples",
+        "seed",
+        "weights",
+        "check",
+        "config",
+        "no-noc",
+        "no-cpu",
+        "f-core-mhz",
+        "supply",
+        "hidden",
+        "max-neurons-per-core",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::load(Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    if let Some(w) = args.get("workload") {
+        cfg.workload.workload = parse_workload(w)?;
+    }
+    cfg.workload.samples = args.get_parse_or("samples", cfg.workload.samples);
+    cfg.workload.seed = args.get_parse_or("seed", cfg.workload.seed);
+    if let Some(c) = args.get("check") {
+        cfg.check = parse_check(c)?;
+    }
+    if args.flag("no-noc") {
+        cfg.soc.use_noc = false;
+    }
+    if args.flag("no-cpu") {
+        cfg.soc.drive_cpu = false;
+    }
+    if let Some(f) = args.get("f-core-mhz") {
+        cfg.soc.f_core_hz = f.parse::<f64>().map_err(|_| anyhow!("bad --f-core-mhz"))? * 1e6;
+    }
+    if let Some(v) = args.get("supply") {
+        cfg.soc.supply_v = v.parse().map_err(|_| anyhow!("bad --supply"))?;
+    }
+    if let Some(m) = args.get("max-neurons-per-core") {
+        cfg.soc.max_neurons_per_core = m.parse().map_err(|_| anyhow!("bad flag"))?;
+    }
+    cfg.validate()?;
+
+    let w = cfg.workload.workload;
+    // Prefer the trained artifact; fall back to the structural network.
+    let net = match args.get("weights") {
+        Some(p) => load_weights_json(Path::new(p))?,
+        None => {
+            let auto = cfg.artifacts.join(format!("{}.weights.json", w.name()));
+            if auto.exists() {
+                println!("using trained weights: {}", auto.display());
+                load_weights_json(&auto)?
+            } else {
+                eprintln!(
+                    "note: no trained artifact at {}; using untrained fallback network \
+                     (run `make artifacts` for trained weights)",
+                    auto.display()
+                );
+                fallback_net(w, args.get_parse_or("hidden", 128))
+            }
+        }
+    };
+
+    // Prefer the exported test set (exact training distribution); fall
+    // back to the Rust generator.
+    let ds_path = cfg.artifacts.join(format!("dataset_{}.json", w.name()));
+    let ds = if ds_path.exists() {
+        println!("using exported dataset: {}", ds_path.display());
+        fullerene_soc::datasets::Dataset::load_json(&ds_path)?
+    } else {
+        w.generate(cfg.workload.samples, cfg.workload.seed)
+    };
+
+    let runner = ExperimentRunner::new(net, cfg.experiment())?;
+    let out = runner.run(&ds)?;
+    if out.checked > 0 {
+        println!(
+            "golden check: {} samples checked, {} mismatches",
+            out.checked, out.mismatches
+        );
+    }
+    println!(
+        "{}",
+        ChipReport::table(std::slice::from_ref(&out.report)).render()
+    );
+    Ok(())
+}
+
+fn cmd_topo() -> Result<()> {
+    let stats = vec![
+        TopoStats::compute(&Topology::fullerene()),
+        TopoStats::compute(&Topology::fullerene_with_l2()),
+        TopoStats::compute(&Topology::mesh2d(4, 5)),
+        TopoStats::compute(&Topology::torus(4, 5)),
+        TopoStats::compute(&Topology::ring(20)),
+        TopoStats::compute(&Topology::tree(4, 20)),
+    ];
+    println!("{}", TopoStats::table(&stats).render());
+    let f = &stats[0];
+    let best_other = stats[2..]
+        .iter()
+        .map(|s| s.avg_core_hops)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "fullerene avg hops {:.2} vs best baseline {:.2} ({:.1}% lower)",
+        f.avg_core_hops,
+        best_other,
+        (1.0 - f.avg_core_hops / best_other) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("core-sparsity") => {
+            let t = fullerene_soc::benches_support::fig3_table(9, 42);
+            println!("{}", t.render());
+        }
+        Some("router") => {
+            let t = fullerene_soc::benches_support::fig5c_table(42);
+            println!("{}", t.render());
+        }
+        Some("riscv-power") => {
+            let t = fullerene_soc::benches_support::fig6_table().map_err(|e| anyhow!(e))?;
+            println!("{}", t.render());
+        }
+        other => {
+            return Err(anyhow!(
+                "bench expects core-sparsity | router | riscv-power, got {other:?}"
+            ))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .get("weights")
+        .ok_or_else(|| anyhow!("--weights <file> required"))?;
+    let net = load_weights_json(Path::new(path))?;
+    let mapping = fullerene_soc::nn::Mapping::plan(&net, 20, 8192)?;
+    println!(
+        "network '{}': {} layers, {} neurons, {} synapses, T={}",
+        net.name,
+        net.layers.len(),
+        net.total_neurons(),
+        net.total_synapses(),
+        net.timesteps
+    );
+    let mut t = Table::new(&["core", "layer", "neurons", "axons", "offset"]);
+    for p in &mapping.placements {
+        t.push_row(vec![
+            p.core_id.to_string(),
+            net.layers[p.layer].name.clone(),
+            p.neurons.to_string(),
+            p.axons.to_string(),
+            p.neuron_offset.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let w = parse_workload(&args.get_or("workload", "nmnist"))?;
+    let n: usize = args.get_parse_or("samples", 10);
+    let seed: u64 = args.get_parse_or("seed", 7);
+    let out = PathBuf::from(args.get_or("out", "dataset.json"));
+    let ds = w.generate(n, seed);
+    ds.to_json().write_file(&out)?;
+    println!(
+        "wrote {} samples ({} inputs, T={}, sparsity {:.3}) to {}",
+        n,
+        ds.inputs,
+        ds.timesteps,
+        ds.sparsity(),
+        out.display()
+    );
+    Ok(())
+}

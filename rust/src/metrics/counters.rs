@@ -1,0 +1,77 @@
+//! Generic named counters used by subsystems for non-energy telemetry
+//! (stalls, buffer occupancy peaks, retries, …).
+
+
+use std::collections::BTreeMap;
+
+/// A set of named monotonically increasing counters plus gauges.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    counts: BTreeMap<String, u64>,
+    maxima: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    /// Empty counter set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment counter `name` by `n`.
+    #[inline]
+    pub fn inc(&mut self, name: &str, n: u64) {
+        *self.counts.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Record a high-watermark gauge value (keeps the max seen).
+    #[inline]
+    pub fn high_water(&mut self, name: &str, v: u64) {
+        let e = self.maxima.entry(name.to_string()).or_insert(0);
+        *e = (*e).max(v);
+    }
+
+    /// Read a counter (0 when never incremented).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Read a high-watermark gauge.
+    pub fn max_of(&self, name: &str) -> u64 {
+        self.maxima.get(name).copied().unwrap_or(0)
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.maxima {
+            let e = self.maxima.entry(k.clone()).or_insert(0);
+            *e = (*e).max(*v);
+        }
+    }
+
+    /// Iterate counters (sorted by name).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counts.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_get_merge() {
+        let mut a = Counters::new();
+        a.inc("stalls", 3);
+        a.high_water("occ", 5);
+        let mut b = Counters::new();
+        b.inc("stalls", 2);
+        b.high_water("occ", 4);
+        a.merge(&b);
+        assert_eq!(a.get("stalls"), 5);
+        assert_eq!(a.max_of("occ"), 5);
+        assert_eq!(a.get("missing"), 0);
+    }
+}

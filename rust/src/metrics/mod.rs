@@ -1,0 +1,7 @@
+//! Counters and plain-text table rendering used by benches and the CLI.
+
+pub mod counters;
+pub mod table;
+
+pub use counters::Counters;
+pub use table::Table;

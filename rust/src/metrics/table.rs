@@ -1,0 +1,119 @@
+//! Minimal fixed-width table renderer for bench/CLI output.
+//!
+//! Keeps bench output diff-able: every figure/table reproduction prints
+//! through this, so `bench_output.txt` is stable and greppable.
+
+/// A simple column-oriented text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with initial headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a column header (cells are filled by subsequent `row` calls).
+    pub fn add_column(&mut self, name: &str) {
+        self.headers.push(name.to_string());
+    }
+
+    /// Append a row: label + one cell per non-label column.
+    pub fn row<I, S>(&mut self, label: &str, cells: I)
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut r = vec![label.to_string()];
+        r.extend(cells.into_iter().map(Into::into));
+        self.rows.push(r);
+    }
+
+    /// Append a row from pre-built cells (must match header count).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to an aligned plain-text string.
+    pub fn render(&self) -> String {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.headers.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncols];
+        let measure = |widths: &mut Vec<usize>, row: &[String]| {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        };
+        measure(&mut widths, &self.headers);
+        for r in &self.rows {
+            measure(&mut widths, r);
+        }
+        let fmt_row = |row: &[String]| {
+            let mut s = String::new();
+            for (i, w) in widths.iter().enumerate() {
+                let cell = row.get(i).map(String::as_str).unwrap_or("");
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{cell:<w$}"));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1))));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["metric", "a", "b"]);
+        t.row("x", ["1", "22"]);
+        t.row("longer", ["333", "4"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("metric"));
+        assert!(lines[2].starts_with("x"));
+    }
+
+    #[test]
+    fn row_len_tracking() {
+        let mut t = Table::new(&["m"]);
+        assert!(t.is_empty());
+        t.row("r", Vec::<String>::new());
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,249 @@
+//! Loader for `artifacts/weights.json` — the quantized-network interchange
+//! file the Python compile path (`python/compile/aot.py`) emits.
+//!
+//! Schema (one object):
+//!
+//! ```json
+//! {
+//!   "name": "nmnist-mlp", "timesteps": 20, "classes": 10,
+//!   "layers": [{
+//!     "name": "fc1", "inputs": 2312, "neurons": 400,
+//!     "codebook": [-96, ...], "w_bits": 8, "scale": 0.0123,
+//!     "widx_hex": "00010f...",      // 2 hex chars per synapse index,
+//!                                   // row-major [input][neuron]; "ff" = pruned
+//!     "threshold": 64,
+//!     "leak": {"mode": "linear", "value": 1},   // none | linear | shift
+//!     "reset": "subtract",                      // zero | subtract
+//!     "mp_bits": 16
+//!   }]
+//! }
+//! ```
+//!
+//! A plain `"widx"` integer array is also accepted (used by tests).
+
+use super::network::{LayerDesc, NetworkDesc};
+use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use crate::core::Codebook;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+fn parse_leak(j: &Json) -> Result<LeakMode> {
+    let mode = j.get("mode")?.as_str()?;
+    Ok(match mode {
+        "none" => LeakMode::None,
+        "linear" => LeakMode::Linear(j.get("value")?.as_i64()? as i32),
+        "shift" => LeakMode::Shift(j.get("value")?.as_i64()? as u8),
+        other => return Err(Error::Artifact(format!("unknown leak mode '{other}'"))),
+    })
+}
+
+fn parse_reset(s: &str) -> Result<ResetMode> {
+    Ok(match s {
+        "zero" => ResetMode::Zero,
+        "subtract" => ResetMode::Subtract,
+        other => return Err(Error::Artifact(format!("unknown reset mode '{other}'"))),
+    })
+}
+
+fn parse_widx(layer: &Json, expected: usize) -> Result<Vec<u8>> {
+    if let Some(hex) = layer.get_opt("widx_hex") {
+        let s = hex.as_str()?;
+        if s.len() != expected * 2 {
+            return Err(Error::Artifact(format!(
+                "widx_hex length {} != 2×{expected}",
+                s.len()
+            )));
+        }
+        let bytes = s.as_bytes();
+        let nib = |c: u8| -> Result<u8> {
+            match c {
+                b'0'..=b'9' => Ok(c - b'0'),
+                b'a'..=b'f' => Ok(c - b'a' + 10),
+                b'A'..=b'F' => Ok(c - b'A' + 10),
+                _ => Err(Error::Artifact(format!("bad hex digit '{}'", c as char))),
+            }
+        };
+        (0..expected)
+            .map(|i| Ok(nib(bytes[2 * i])? << 4 | nib(bytes[2 * i + 1])?))
+            .collect()
+    } else {
+        let arr = layer.get("widx")?.as_arr()?;
+        if arr.len() != expected {
+            return Err(Error::Artifact(format!(
+                "widx length {} != {expected}",
+                arr.len()
+            )));
+        }
+        arr.iter()
+            .map(|v| Ok(v.as_i64()? as u8))
+            .collect()
+    }
+}
+
+/// Parse a network from JSON text.
+pub fn parse_weights_json(text: &str) -> Result<NetworkDesc> {
+    let j = Json::parse(text)?;
+    let layers = j
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .map(|l| -> Result<LayerDesc> {
+            let inputs = l.get("inputs")?.as_usize()?;
+            let neurons = l.get("neurons")?.as_usize()?;
+            let w_bits = l.get("w_bits")?.as_usize()?;
+            let codebook_vals: Vec<i32> = l
+                .get("codebook")?
+                .as_i64_vec()?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            Ok(LayerDesc {
+                name: l.get("name")?.as_str()?.to_string(),
+                inputs,
+                neurons,
+                codebook: Codebook::new(codebook_vals, w_bits)?,
+                widx: parse_widx(l, inputs * neurons)?,
+                neuron_params: NeuronParams {
+                    threshold: l.get("threshold")?.as_i64()? as i32,
+                    leak: parse_leak(l.get("leak")?)?,
+                    reset: parse_reset(l.get("reset")?.as_str()?)?,
+                    mp_bits: l.get("mp_bits")?.as_i64()? as u32,
+                },
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let net = NetworkDesc {
+        name: j.get("name")?.as_str()?.to_string(),
+        layers,
+        timesteps: j.get("timesteps")?.as_usize()?,
+        classes: j.get("classes")?.as_usize()?,
+    };
+    net.validate()?;
+    Ok(net)
+}
+
+/// Load a network from a weights JSON file.
+pub fn load_weights_json(path: &Path) -> Result<NetworkDesc> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+    parse_weights_json(&text)
+}
+
+/// Serialize a network back to the interchange JSON (round-trip tests and
+/// Rust-side network construction for examples).
+pub fn to_weights_json(net: &NetworkDesc) -> Json {
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let hex: String = l
+                .widx
+                .iter()
+                .map(|b| format!("{b:02x}"))
+                .collect();
+            let leak = match l.neuron_params.leak {
+                LeakMode::None => Json::obj(vec![("mode", Json::Str("none".into()))]),
+                LeakMode::Linear(v) => Json::obj(vec![
+                    ("mode", Json::Str("linear".into())),
+                    ("value", Json::Num(v as f64)),
+                ]),
+                LeakMode::Shift(k) => Json::obj(vec![
+                    ("mode", Json::Str("shift".into())),
+                    ("value", Json::Num(k as f64)),
+                ]),
+            };
+            Json::obj(vec![
+                ("name", Json::Str(l.name.clone())),
+                ("inputs", Json::Num(l.inputs as f64)),
+                ("neurons", Json::Num(l.neurons as f64)),
+                (
+                    "codebook",
+                    Json::from_i64s(l.codebook.values().iter().map(|&v| v as i64)),
+                ),
+                ("w_bits", Json::Num(l.codebook.w_bits() as f64)),
+                ("scale", Json::Num(1.0)),
+                ("widx_hex", Json::Str(hex)),
+                ("threshold", Json::Num(l.neuron_params.threshold as f64)),
+                ("leak", leak),
+                (
+                    "reset",
+                    Json::Str(
+                        match l.neuron_params.reset {
+                            ResetMode::Zero => "zero",
+                            ResetMode::Subtract => "subtract",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("mp_bits", Json::Num(l.neuron_params.mp_bits as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::Str(net.name.clone())),
+        ("timesteps", Json::Num(net.timesteps as f64)),
+        ("classes", Json::Num(net.classes as f64)),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "tiny", "timesteps": 4, "classes": 2,
+        "layers": [{
+            "name": "fc", "inputs": 3, "neurons": 2,
+            "codebook": [-4, 0, 2, 6], "w_bits": 4, "scale": 0.5,
+            "widx": [0, 1, 2, 3, 255, 0],
+            "threshold": 5,
+            "leak": {"mode": "linear", "value": 1},
+            "reset": "subtract", "mp_bits": 16
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let n = parse_weights_json(SAMPLE).unwrap();
+        assert_eq!(n.name, "tiny");
+        assert_eq!(n.layers[0].index_of(2, 0), 255);
+        assert_eq!(n.layers[0].weight_of(1, 1), 6);
+        assert_eq!(n.layers[0].neuron_params.threshold, 5);
+    }
+
+    #[test]
+    fn roundtrip_via_hex() {
+        let n = parse_weights_json(SAMPLE).unwrap();
+        let text = to_weights_json(&n).to_string();
+        let n2 = parse_weights_json(&text).unwrap();
+        assert_eq!(n2.layers[0].widx, n.layers[0].widx);
+        assert_eq!(n2.layers[0].codebook, n.layers[0].codebook);
+        assert_eq!(n2.layers[0].neuron_params, n.layers[0].neuron_params);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let bad = SAMPLE.replace("[0, 1, 2, 3, 255, 0]", "[0, 1]");
+        assert!(parse_weights_json(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_modes_rejected() {
+        let bad = SAMPLE.replace("subtract", "explode");
+        assert!(parse_weights_json(&bad).is_err());
+        let bad = SAMPLE.replace("linear", "quadratic");
+        assert!(parse_weights_json(&bad).is_err());
+    }
+
+    #[test]
+    fn widx_hex_parses() {
+        let hexed = SAMPLE.replace(
+            r#""widx": [0, 1, 2, 3, 255, 0]"#,
+            r#""widx_hex": "00010203ff00""#,
+        );
+        let n = parse_weights_json(&hexed).unwrap();
+        assert_eq!(n.layers[0].widx, vec![0, 1, 2, 3, 255, 0]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Neuron→core mapper: splits each layer of a [`NetworkDesc`] across the
+//! chip's 20 neuromorphic cores and derives the NoC multicast plan.
+//!
+//! Placement rules (matching the hardware constraints):
+//! - a core hosts neurons of exactly **one** layer (a core has a single
+//!   shared codebook and a single neuron-parameter set);
+//! - at most `max_neurons_per_core` neurons per core (chip: 8192);
+//! - every core of a layer receives the layer's **full input axon space**
+//!   (fan-in is resolved inside the core through its synapse table), so a
+//!   presynaptic spike is **broadcast** to all cores of the next layer —
+//!   this is exactly the broadcast transmission mode the CMRouter
+//!   provides.
+
+use super::network::{NetworkDesc, NO_SYNAPSE};
+use crate::core::{NeuroCore, Synapses, SynapsesBuilder};
+use crate::energy::EnergyParams;
+use crate::{Error, Result};
+
+/// One physical core's assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorePlacement {
+    /// Physical core id (0..n_cores).
+    pub core_id: usize,
+    /// Layer index this core serves.
+    pub layer: usize,
+    /// First layer-local neuron hosted here.
+    pub neuron_offset: usize,
+    /// Number of neurons hosted here.
+    pub neurons: usize,
+    /// Axons (= the layer's input width).
+    pub axons: usize,
+}
+
+/// A complete mapping of a network onto the chip.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// Per-core assignments (dense, one entry per used core).
+    pub placements: Vec<CorePlacement>,
+    /// Physical cores used by each layer.
+    pub layer_cores: Vec<Vec<usize>>,
+}
+
+impl Mapping {
+    /// Map `net` onto `n_cores` cores with at most `max_neurons_per_core`
+    /// neurons each.
+    pub fn plan(net: &NetworkDesc, n_cores: usize, max_neurons_per_core: usize) -> Result<Mapping> {
+        net.validate()?;
+        let mut placements = Vec::new();
+        let mut layer_cores = Vec::new();
+        let mut next_core = 0usize;
+        for (li, layer) in net.layers.iter().enumerate() {
+            let mut cores_of_layer = Vec::new();
+            let mut off = 0usize;
+            while off < layer.neurons {
+                if next_core >= n_cores {
+                    return Err(Error::Mapping(format!(
+                        "network needs more than {n_cores} cores \
+                         (stuck at layer {li} neuron {off})"
+                    )));
+                }
+                let take = (layer.neurons - off).min(max_neurons_per_core);
+                placements.push(CorePlacement {
+                    core_id: next_core,
+                    layer: li,
+                    neuron_offset: off,
+                    neurons: take,
+                    axons: layer.inputs,
+                });
+                cores_of_layer.push(next_core);
+                next_core += 1;
+                off += take;
+            }
+            layer_cores.push(cores_of_layer);
+        }
+        Ok(Mapping {
+            placements,
+            layer_cores,
+        })
+    }
+
+    /// Cores used in total.
+    pub fn cores_used(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// The placement hosted on physical core `core_id` (if any).
+    pub fn placement_of(&self, core_id: usize) -> Option<&CorePlacement> {
+        self.placements.iter().find(|p| p.core_id == core_id)
+    }
+
+    /// Broadcast destination set for spikes leaving layer `li`
+    /// (`None` for the last layer — its spikes go to the output buffer).
+    pub fn dest_cores_after(&self, li: usize) -> Option<&[usize]> {
+        self.layer_cores.get(li + 1).map(Vec::as_slice)
+    }
+
+    /// Build the synapse table for one placement from the network
+    /// description (pruned synapses skipped).
+    pub fn synapses_for(&self, net: &NetworkDesc, p: &CorePlacement) -> Result<Synapses> {
+        let layer = &net.layers[p.layer];
+        let mut b = SynapsesBuilder::new(p.axons, p.neurons, layer.codebook.n());
+        for a in 0..p.axons {
+            for n in 0..p.neurons {
+                let w = layer.index_of(a, p.neuron_offset + n);
+                if w != NO_SYNAPSE {
+                    b.connect(a, n, w)?;
+                }
+            }
+        }
+        Ok(b.build())
+    }
+
+    /// Instantiate all [`NeuroCore`]s for this mapping.
+    pub fn build_cores(&self, net: &NetworkDesc, energy: &EnergyParams) -> Result<Vec<NeuroCore>> {
+        self.placements
+            .iter()
+            .map(|p| {
+                let layer = &net.layers[p.layer];
+                NeuroCore::new(
+                    p.core_id as u8,
+                    p.axons,
+                    p.neurons,
+                    layer.neuron_params.clone(),
+                    layer.codebook.clone(),
+                    self.synapses_for(net, p)?,
+                    energy.clone(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::nn::network::LayerDesc;
+
+    fn net(inputs: usize, hidden: usize, out: usize) -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 30,
+            leak: LeakMode::None,
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        NetworkDesc {
+            name: "t".into(),
+            layers: vec![
+                LayerDesc {
+                    name: "h".into(),
+                    inputs,
+                    neurons: hidden,
+                    codebook: cb.clone(),
+                    widx: (0..inputs * hidden).map(|i| (i % 16) as u8).collect(),
+                    neuron_params: params.clone(),
+                },
+                LayerDesc {
+                    name: "o".into(),
+                    inputs: hidden,
+                    neurons: out,
+                    codebook: cb,
+                    widx: (0..hidden * out).map(|i| (i % 16) as u8).collect(),
+                    neuron_params: params,
+                },
+            ],
+            timesteps: 4,
+            classes: out,
+        }
+    }
+
+    #[test]
+    fn splits_layers_across_cores() {
+        let n = net(64, 100, 10);
+        let m = Mapping::plan(&n, 20, 40).unwrap();
+        // hidden needs ceil(100/40)=3 cores, out needs 1.
+        assert_eq!(m.cores_used(), 4);
+        assert_eq!(m.layer_cores[0], vec![0, 1, 2]);
+        assert_eq!(m.layer_cores[1], vec![3]);
+        // Every neuron placed exactly once.
+        let covered: usize = m
+            .placements
+            .iter()
+            .filter(|p| p.layer == 0)
+            .map(|p| p.neurons)
+            .sum();
+        assert_eq!(covered, 100);
+        // Offsets are contiguous.
+        let mut offs: Vec<(usize, usize)> = m
+            .placements
+            .iter()
+            .filter(|p| p.layer == 0)
+            .map(|p| (p.neuron_offset, p.neurons))
+            .collect();
+        offs.sort_unstable();
+        assert_eq!(offs, vec![(0, 40), (40, 40), (80, 20)]);
+    }
+
+    #[test]
+    fn too_large_network_rejected() {
+        let n = net(64, 10_000, 10);
+        assert!(Mapping::plan(&n, 20, 400).is_err());
+    }
+
+    #[test]
+    fn dest_cores_point_to_next_layer() {
+        let n = net(64, 100, 10);
+        let m = Mapping::plan(&n, 20, 40).unwrap();
+        assert_eq!(m.dest_cores_after(0), Some(&[3usize][..]));
+        assert_eq!(m.dest_cores_after(1), None);
+    }
+
+    #[test]
+    fn built_cores_match_placements() {
+        let n = net(32, 50, 10);
+        let m = Mapping::plan(&n, 20, 30).unwrap();
+        let cores = m.build_cores(&n, &EnergyParams::nominal()).unwrap();
+        assert_eq!(cores.len(), m.cores_used());
+        for (core, p) in cores.iter().zip(&m.placements) {
+            assert_eq!(core.regs().neurons, p.neurons);
+            assert_eq!(core.regs().axons, p.axons);
+            assert_eq!(core.regs().core_id() as usize, p.core_id);
+        }
+    }
+
+    #[test]
+    fn synapse_tables_respect_offsets() {
+        let n = net(8, 6, 2);
+        let m = Mapping::plan(&n, 20, 4).unwrap();
+        // Layer 0 split into cores of 4 + 2 neurons.
+        let p1 = &m.placements[1];
+        assert_eq!(p1.neuron_offset, 4);
+        let syn = m.synapses_for(&n, p1).unwrap();
+        // Core-local neuron 0 = layer neuron 4: index (a*6 + 4) % 16.
+        let (targets, widx) = syn.slices_of(0);
+        assert_eq!(targets[0], 0);
+        assert_eq!(widx[0], n.layers[0].index_of(0, 4));
+    }
+}

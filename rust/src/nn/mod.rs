@@ -1,0 +1,22 @@
+//! Network descriptions, non-uniform weight quantization and the
+//! neuron→core mapper.
+//!
+//! The flow: the Python compile path trains a float SNN, quantizes each
+//! layer to a non-uniform codebook (`N` levels × `W`-bit integers — the
+//! chip's shared-codebook scheme) and exports `artifacts/weights.json`;
+//! [`loader`] reads it into a [`network::NetworkDesc`]; [`mapper`] splits
+//! each layer across neuromorphic cores (respecting the 8 K-neuron and
+//! codebook-per-core limits) and emits the multicast routing plan the
+//! coordinator drives through the NoC. [`quant`] reimplements the same
+//! k-means quantizer in Rust (used by examples that build networks without
+//! the Python path, and property-tested against its invariants).
+
+pub mod loader;
+pub mod mapper;
+pub mod network;
+pub mod quant;
+
+pub use loader::load_weights_json;
+pub use mapper::{CorePlacement, Mapping};
+pub use network::{LayerDesc, NetworkDesc};
+pub use quant::QuantizedLayer;

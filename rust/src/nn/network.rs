@@ -1,0 +1,302 @@
+//! Network description: a feed-forward SNN of fully-connected LIF layers
+//! with per-layer non-uniform quantized weights (codebook + index matrix),
+//! matching what the Python compile path exports.
+
+use crate::core::neuron::NeuronParams;
+use crate::core::Codebook;
+use crate::{Error, Result};
+
+/// One fully-connected spiking layer, already quantized.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    /// Layer name (for reports).
+    pub name: String,
+    /// Input (axon) count.
+    pub inputs: usize,
+    /// Output (neuron) count.
+    pub neurons: usize,
+    /// Shared weight codebook (N × W bits).
+    pub codebook: Codebook,
+    /// Weight indexes, row-major `[input][neuron]`, length = inputs ×
+    /// neurons. Index `255` means "no synapse" (pruned).
+    pub widx: Vec<u8>,
+    /// Neuron dynamics.
+    pub neuron_params: NeuronParams,
+}
+
+/// Sentinel weight index meaning "no synapse".
+pub const NO_SYNAPSE: u8 = 255;
+
+impl LayerDesc {
+    /// Validate geometry and index ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.widx.len() != self.inputs * self.neurons {
+            return Err(Error::Network(format!(
+                "layer {}: widx length {} != {}×{}",
+                self.name,
+                self.widx.len(),
+                self.inputs,
+                self.neurons
+            )));
+        }
+        let n = self.codebook.n() as u8;
+        if let Some(bad) = self
+            .widx
+            .iter()
+            .find(|&&w| w != NO_SYNAPSE && w >= n)
+        {
+            return Err(Error::Network(format!(
+                "layer {}: weight index {bad} out of codebook range {n}",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Weight index of synapse `input → neuron`.
+    #[inline]
+    pub fn index_of(&self, input: usize, neuron: usize) -> u8 {
+        self.widx[input * self.neurons + neuron]
+    }
+
+    /// Count of real (non-pruned) synapses.
+    pub fn synapse_count(&self) -> usize {
+        self.widx.iter().filter(|&&w| w != NO_SYNAPSE).count()
+    }
+
+    /// Integer weight of synapse `input → neuron` (0 when pruned).
+    pub fn weight_of(&self, input: usize, neuron: usize) -> i32 {
+        match self.index_of(input, neuron) {
+            NO_SYNAPSE => 0,
+            w => self.codebook.weight(w),
+        }
+    }
+}
+
+/// A feed-forward network of quantized spiking layers.
+#[derive(Debug, Clone)]
+pub struct NetworkDesc {
+    /// Network name (e.g. "nmnist-mlp").
+    pub name: String,
+    /// Layers in order.
+    pub layers: Vec<LayerDesc>,
+    /// Number of simulation timesteps per sample.
+    pub timesteps: usize,
+    /// Class count (output layer neurons are class scores).
+    pub classes: usize,
+}
+
+impl NetworkDesc {
+    /// Validate the whole network (layer chaining + per-layer checks).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::Network("no layers".into()));
+        }
+        for l in &self.layers {
+            l.validate()?;
+        }
+        for pair in self.layers.windows(2) {
+            if pair[0].neurons != pair[1].inputs {
+                return Err(Error::Network(format!(
+                    "layer {} outputs {} but layer {} expects {} inputs",
+                    pair[0].name, pair[0].neurons, pair[1].name, pair[1].inputs
+                )));
+            }
+        }
+        let last = self.layers.last().unwrap();
+        if last.neurons != self.classes {
+            return Err(Error::Network(format!(
+                "output layer has {} neurons but {} classes",
+                last.neurons, self.classes
+            )));
+        }
+        Ok(())
+    }
+
+    /// Input width of the network.
+    pub fn input_size(&self) -> usize {
+        self.layers[0].inputs
+    }
+
+    /// Total neurons across layers.
+    pub fn total_neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.neurons).sum()
+    }
+
+    /// Total real synapses.
+    pub fn total_synapses(&self) -> usize {
+        self.layers.iter().map(|l| l.synapse_count()).sum()
+    }
+
+    /// Bit-exact functional reference: run the network on a spike raster
+    /// (timesteps × input booleans), returning per-class output spike
+    /// counts. This mirrors the chip semantics (partial MP update: only
+    /// touched neurons update) and is used to cross-check the cycle
+    /// simulator and the XLA golden model.
+    pub fn reference_run(&self, raster: &[Vec<bool>]) -> Vec<u32> {
+        let mut mps: Vec<Vec<i32>> = self.layers.iter().map(|l| vec![0; l.neurons]).collect();
+        let mut counts = vec![0u32; self.classes];
+        // Spikes flowing between layers this timestep.
+        for step in raster {
+            let mut spikes: Vec<bool> = step.clone();
+            for (li, layer) in self.layers.iter().enumerate() {
+                let mut acc = vec![0i64; layer.neurons];
+                let mut touched = vec![false; layer.neurons];
+                for (i, &s) in spikes.iter().enumerate() {
+                    if !s {
+                        continue;
+                    }
+                    for n in 0..layer.neurons {
+                        match layer.index_of(i, n) {
+                            NO_SYNAPSE => {}
+                            w => {
+                                acc[n] += layer.codebook.weight(w) as i64;
+                                touched[n] = true;
+                            }
+                        }
+                    }
+                }
+                let mut out = vec![false; layer.neurons];
+                let p = &layer.neuron_params;
+                let (lo, hi) = p.mp_range();
+                for n in 0..layer.neurons {
+                    if !touched[n] {
+                        continue; // partial MP update semantics
+                    }
+                    let mut m =
+                        (mps[li][n] as i64 + acc[n]).clamp(lo as i64, hi as i64) as i32;
+                    m = match p.leak {
+                        crate::core::neuron::LeakMode::None => m,
+                        crate::core::neuron::LeakMode::Linear(l) => {
+                            if m > 0 {
+                                (m - l).max(0)
+                            } else if m < 0 {
+                                (m + l).min(0)
+                            } else {
+                                0
+                            }
+                        }
+                        crate::core::neuron::LeakMode::Shift(k) => m - (m >> k),
+                    };
+                    let spike = m >= p.threshold;
+                    if spike {
+                        m = match p.reset {
+                            crate::core::neuron::ResetMode::Zero => 0,
+                            crate::core::neuron::ResetMode::Subtract => m - p.threshold,
+                        };
+                        out[n] = true;
+                        if li == self.layers.len() - 1 {
+                            counts[n] += 1;
+                        }
+                    }
+                    mps[li][n] = m;
+                }
+                spikes = out;
+            }
+        }
+        counts
+    }
+
+    /// Classify: argmax of output spike counts (ties → lowest class).
+    pub fn classify(&self, raster: &[Vec<bool>]) -> usize {
+        let counts = self.reference_run(raster);
+        counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, ResetMode};
+
+    fn tiny_net() -> NetworkDesc {
+        let cb = Codebook::new(vec![-4, 0, 2, 6], 4).unwrap();
+        let params = NeuronParams {
+            threshold: 6,
+            leak: LeakMode::None,
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        // 2 inputs → 2 hidden → 2 outputs.
+        let l0 = LayerDesc {
+            name: "h".into(),
+            inputs: 2,
+            neurons: 2,
+            codebook: cb.clone(),
+            // input0→n0: 6, input0→n1: 2, input1→n0: 0, input1→n1: 6
+            widx: vec![3, 2, 1, 3],
+            neuron_params: params.clone(),
+        };
+        let l1 = LayerDesc {
+            name: "out".into(),
+            inputs: 2,
+            neurons: 2,
+            codebook: cb,
+            widx: vec![3, NO_SYNAPSE, NO_SYNAPSE, 3],
+            neuron_params: params,
+        };
+        NetworkDesc {
+            name: "tiny".into(),
+            layers: vec![l0, l1],
+            timesteps: 4,
+            classes: 2,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_and_rejects() {
+        let mut n = tiny_net();
+        n.validate().unwrap();
+        n.layers[1].inputs = 3;
+        assert!(n.validate().is_err());
+        let mut n = tiny_net();
+        n.layers[0].widx[0] = 7; // codebook has 4 entries
+        assert!(n.validate().is_err());
+        let mut n = tiny_net();
+        n.classes = 5;
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn reference_run_propagates_spikes() {
+        let n = tiny_net();
+        // input 0 fires every step: hidden n0 gets +6 → fires each step;
+        // hidden n1 gets +2, fires every 3rd step.
+        let raster = vec![vec![true, false]; 4];
+        let counts = n.reference_run(&raster);
+        // Spikes propagate within the same timestep in this reference
+        // (pipelined chip: layer l's output at t feeds layer l+1 at t).
+        // hidden n0 fires t0..t3 → out n0 fires 4×; hidden n1 reaches the
+        // threshold at t2 (2+2+2) → out n1 fires once.
+        assert_eq!(counts, vec![4, 1]);
+    }
+
+    #[test]
+    fn pruned_synapses_contribute_nothing() {
+        let n = tiny_net();
+        assert_eq!(n.layers[1].weight_of(0, 1), 0);
+        assert_eq!(n.layers[1].synapse_count(), 2);
+    }
+
+    #[test]
+    fn classify_argmax_deterministic_on_tie() {
+        let n = tiny_net();
+        let raster = vec![vec![false, false]; 4];
+        assert_eq!(n.classify(&raster), 0); // all-zero counts → class 0
+    }
+
+    #[test]
+    fn partial_update_keeps_untouched_mp() {
+        let n = tiny_net();
+        // Only input1 fires: hidden n0 gets codebook[1]=0 (touched, but
+        // acc 0), n1 gets 6 and fires.
+        let raster = vec![vec![false, true]];
+        let counts = n.reference_run(&raster);
+        assert_eq!(counts, vec![0, 1]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Non-uniform weight quantization: k-means (Lloyd) codebooks over a
+//! layer's float weights, emitted as `N` integer levels of `W` bits plus
+//! the per-synapse index matrix — the chip's shared-codebook scheme
+//! (paper §II.A: "All synapses share N × W-bit quantized weights in a
+//! core").
+//!
+//! The same algorithm (same initialization, same iteration count) is
+//! implemented in `python/compile/quantize.py`; both sides are tested
+//! against the invariants (codebook size, monotone levels, assignment
+//! optimality) rather than against each other bit-for-bit, since training
+//! happens only on the Python side.
+
+use crate::core::Codebook;
+use crate::{Error, Result};
+
+/// A quantized layer: integer codebook + index matrix + the float scale
+/// that maps levels back to the original weight domain.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    /// Integer codebook (N × W bits).
+    pub codebook: Codebook,
+    /// Per-synapse codebook indexes (row-major `[input][neuron]`).
+    pub widx: Vec<u8>,
+    /// `float_weight ≈ level × scale`.
+    pub scale: f64,
+}
+
+/// K-means quantization of `weights` (any shape, flattened row-major) to
+/// `n` levels of `w_bits` each. `iters` Lloyd iterations (deterministic:
+/// quantile initialization, no RNG).
+pub fn kmeans_quantize(
+    weights: &[f64],
+    n: usize,
+    w_bits: usize,
+    iters: usize,
+) -> Result<QuantizedLayer> {
+    if weights.is_empty() {
+        return Err(Error::Network("cannot quantize empty weights".into()));
+    }
+    // Quantile init: split the sorted weights into n equal-mass buckets.
+    let mut sorted = weights.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids: Vec<f64> = (0..n)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / n as f64;
+            sorted[((sorted.len() - 1) as f64 * q) as usize]
+        })
+        .collect();
+    // Nudge duplicate centroids apart so every cluster can win points.
+    for i in 1..n {
+        if centroids[i] <= centroids[i - 1] {
+            centroids[i] = centroids[i - 1] + 1e-9;
+        }
+    }
+
+    let mut assign = vec![0u8; weights.len()];
+    for _ in 0..iters {
+        // Assignment step (centroids stay sorted → binary search works,
+        // but n ≤ 16 so a linear scan is fastest).
+        for (i, &w) in weights.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (c, &cent) in centroids.iter().enumerate() {
+                let d = (w - cent).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assign[i] = best as u8;
+        }
+        // Update step.
+        let mut sums = vec![0.0f64; n];
+        let mut counts = vec![0usize; n];
+        for (i, &w) in weights.iter().enumerate() {
+            sums[assign[i] as usize] += w;
+            counts[assign[i] as usize] += 1;
+        }
+        for c in 0..n {
+            if counts[c] > 0 {
+                centroids[c] = sums[c] / counts[c] as f64;
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    // Integerize: scale so the largest |centroid| hits the W-bit range.
+    let (lo, hi) = Codebook::range(w_bits);
+    let maxabs = centroids.iter().fold(0.0f64, |m, &c| m.max(c.abs()));
+    // Degenerate all-zero case (the 1e-9 tie-break nudges are noise, not
+    // signal): keep scale 1 so every level rounds to 0.
+    let scale = if maxabs > 1e-6 {
+        maxabs / hi as f64
+    } else {
+        1.0
+    };
+    let levels: Vec<i32> = centroids
+        .iter()
+        .map(|&c| ((c / scale).round() as i64).clamp(lo as i64, hi as i64) as i32)
+        .collect();
+    // Final assignment against the *integerized* levels (what the chip
+    // actually stores), so every index is nearest in the deployed domain.
+    for (i, &w) in weights.iter().enumerate() {
+        let mut best = 0usize;
+        let mut bd = f64::INFINITY;
+        for (c, &lvl) in levels.iter().enumerate() {
+            let d = (w - lvl as f64 * scale).abs();
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        assign[i] = best as u8;
+    }
+    Ok(QuantizedLayer {
+        codebook: Codebook::new(levels, w_bits)?,
+        widx: assign,
+        scale,
+    })
+}
+
+/// Mean squared quantization error in the float domain.
+pub fn quant_mse(weights: &[f64], q: &QuantizedLayer) -> f64 {
+    weights
+        .iter()
+        .zip(&q.widx)
+        .map(|(&w, &i)| {
+            let approx = q.codebook.weight(i) as f64 * q.scale;
+            (w - approx).powi(2)
+        })
+        .sum::<f64>()
+        / weights.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn recovers_discrete_levels_exactly() {
+        // Weights drawn from 4 distinct values → 4-level codebook must
+        // reach ~zero error.
+        let vals = [-0.5, -0.1, 0.2, 0.7];
+        let mut rng = Rng::new(3);
+        let w: Vec<f64> = (0..400).map(|_| vals[rng.below_usize(4)]).collect();
+        let q = kmeans_quantize(&w, 4, 8, 20).unwrap();
+        assert!(quant_mse(&w, &q) < 1e-4, "mse {}", quant_mse(&w, &q));
+    }
+
+    #[test]
+    fn more_levels_never_hurt() {
+        let mut rng = Rng::new(9);
+        let w: Vec<f64> = (0..1000).map(|_| rng.normal() * 0.3).collect();
+        let e4 = quant_mse(&w, &kmeans_quantize(&w, 4, 8, 15).unwrap());
+        let e16 = quant_mse(&w, &kmeans_quantize(&w, 16, 8, 15).unwrap());
+        assert!(e16 < e4, "e16 {e16} vs e4 {e4}");
+    }
+
+    #[test]
+    fn codebook_levels_sorted_and_in_range() {
+        check("quant-invariants", 30, 77, |r| {
+            let len = 50 + r.below_usize(200);
+            let w: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+            let n = [4usize, 8, 16][r.below_usize(3)];
+            let bits = [4usize, 8, 16][r.below_usize(3)];
+            let q = kmeans_quantize(&w, n, bits, 10).unwrap();
+            assert_eq!(q.codebook.n(), n);
+            let vals = q.codebook.values();
+            assert!(vals.windows(2).all(|p| p[0] <= p[1]), "unsorted {vals:?}");
+            let (lo, hi) = Codebook::range(bits);
+            assert!(vals.iter().all(|&v| v >= lo && v <= hi));
+            assert!(q.widx.iter().all(|&i| (i as usize) < n));
+        });
+    }
+
+    #[test]
+    fn assignment_is_nearest_level() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let q = kmeans_quantize(&w, 8, 8, 15).unwrap();
+        for (i, &x) in w.iter().enumerate() {
+            let chosen = q.codebook.weight(q.widx[i]) as f64 * q.scale;
+            for &lvl in q.codebook.values() {
+                let alt = lvl as f64 * q.scale;
+                assert!(
+                    (x - chosen).abs() <= (x - alt).abs() + 1e-6,
+                    "w={x} chose {chosen}, but {alt} is closer"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_weights_rejected() {
+        assert!(kmeans_quantize(&[], 4, 8, 5).is_err());
+    }
+
+    #[test]
+    fn all_zero_weights_ok() {
+        let q = kmeans_quantize(&[0.0; 64], 4, 8, 5).unwrap();
+        assert!(q.codebook.values().iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,38 @@
+//! The fullerene-like network-on-chip (paper §II.B).
+//!
+//! Twenty neuromorphic cores and twelve level-1 CMRouters form one
+//! fullerene-like routing domain: the routers sit at the 12 vertices of an
+//! icosahedron, the cores at its 20 (triangular) faces; each router links
+//! to the 5 cores on its incident faces (`Nc = 5`, matching the paper's
+//! 5×5×5-bit connection-matrix budget) and each core links to the 3
+//! routers at its face's corners. The resulting 32-node graph has average
+//! degree 3.75 and degree variance 0.94 — the numbers the paper reports —
+//! which pins this construction (see `DESIGN.md` §Fullerene-topology).
+//!
+//! Modules:
+//! - [`topology`] — graph builders: fullerene + baseline 2D-mesh, torus,
+//!   ring, tree; [`metrics`] computes degree/latency statistics (Fig. 5a/5b).
+//! - [`router`] — the multi-mode connection-matrix router (CMRouter):
+//!   input/output buffers, register table, link controller (hang-up),
+//!   channel arbiter, reconfigurable connection matrix, clock gating.
+//! - [`packet`] — spike flits and the hybrid transmission modes
+//!   (P2P / broadcast / merge).
+//! - [`sim`] — the cycle-driven NoC simulator (Fig. 5c: throughput,
+//!   pJ/hop).
+//! - [`traffic`] — synthetic traffic generators for the router benches.
+//! - [`multilevel`] — level-2 scale-up: multiple domains joined through
+//!   central level-2 routers.
+
+pub mod metrics;
+pub mod multilevel;
+pub mod packet;
+pub mod router;
+pub mod sim;
+pub mod topology;
+pub mod traffic;
+
+pub use metrics::TopoStats;
+pub use packet::{Dest, Flit, TxMode};
+pub use router::CmRouter;
+pub use sim::{NocSim, SimStats};
+pub use topology::{NodeId, NodeKind, Topology};

@@ -1,0 +1,144 @@
+//! Level-2 scale-up (paper: "the NoC can be scaled up through extended
+//! off-chip high-level router nodes").
+//!
+//! A [`MultiDomain`] stitches `D` fullerene domains together: each domain
+//! keeps its 20 cores + 12 level-1 routers and gains the central level-2
+//! router; level-2 routers interconnect in a ring (the off-chip topology
+//! the paper sketches). Global core ids are `domain * 20 + local`.
+//!
+//! Analytic latency model for the scaling bench: intra-domain traffic uses
+//! the level-1 fabric; inter-domain traffic climbs `core → L1 → L2`, rides
+//! the L2 ring, and descends `L2 → L1 → core`.
+
+use super::metrics::TopoStats;
+use super::topology::{NodeKind, Topology};
+
+/// A multi-domain (scaled-up) system description.
+#[derive(Debug, Clone)]
+pub struct MultiDomain {
+    /// Number of fullerene domains.
+    pub domains: usize,
+    /// The single-domain graph (with L2 centre).
+    pub domain_topo: Topology,
+    /// Average intra-domain core-to-core router hops.
+    pub intra_hops: f64,
+    /// Average core→L2 router hops within a domain.
+    pub to_l2_hops: f64,
+}
+
+impl MultiDomain {
+    /// Build a system of `domains` fullerene domains.
+    pub fn new(domains: usize) -> Self {
+        assert!(domains >= 1);
+        let t = Topology::fullerene_with_l2();
+        let stats = TopoStats::compute(&t);
+        // Average router hops from a core up to the L2 centre:
+        // core → any of its 3 L1 routers → L2 = 2 router hops.
+        let l2 = (0..t.len())
+            .find(|&n| matches!(t.kind(n), NodeKind::RouterL2(_)))
+            .unwrap();
+        let mut total = 0usize;
+        for &c in t.cores() {
+            // BFS gives node distance; router hops = node distance / 2
+            // rounded (core→L1 link, L1→L2 link = 2 links = 2 router
+            // arrivals: L1 and L2).
+            total += t.bfs(c)[l2];
+        }
+        let to_l2_links = total as f64 / t.cores().len() as f64;
+        MultiDomain {
+            domains,
+            intra_hops: stats.avg_core_hops / 2.0, // router hops ≈ links/2
+            to_l2_hops: to_l2_links,               // links on the climb
+            domain_topo: t,
+        }
+    }
+
+    /// Total cores in the system.
+    pub fn total_cores(&self) -> usize {
+        self.domains * 20
+    }
+
+    /// Total neurons at the paper's 8 K/core.
+    pub fn total_neurons(&self) -> usize {
+        self.total_cores() * 8192
+    }
+
+    /// Ring distance between two domains.
+    pub fn l2_ring_hops(&self, a: usize, b: usize) -> usize {
+        let d = a.abs_diff(b);
+        d.min(self.domains - d)
+    }
+
+    /// Average router hops between two cores (global ids).
+    pub fn hops_between(&self, src: usize, dst: usize) -> f64 {
+        let (sd, dd) = (src / 20, dst / 20);
+        if sd == dd {
+            self.intra_hops
+        } else {
+            // climb + ring + descend (router-hop units).
+            self.to_l2_hops + self.l2_ring_hops(sd, dd) as f64 + self.to_l2_hops
+        }
+    }
+
+    /// Average hops over uniform random core pairs (analytic expectation).
+    pub fn avg_hops_uniform(&self) -> f64 {
+        let n = self.total_cores() as f64;
+        if self.domains == 1 {
+            return self.intra_hops;
+        }
+        // P(same domain) over ordered distinct pairs.
+        let same = (20.0 - 1.0) / (n - 1.0);
+        // Expected ring distance between two distinct uniform domains.
+        let d = self.domains;
+        let mut ring = 0.0;
+        for k in 1..d {
+            ring += self.l2_ring_hops(0, k) as f64;
+        }
+        ring /= (d - 1) as f64;
+        same * self.intra_hops + (1.0 - same) * (2.0 * self.to_l2_hops + ring)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_domain_degenerates_to_intra() {
+        let m = MultiDomain::new(1);
+        assert_eq!(m.total_cores(), 20);
+        assert!((m.avg_hops_uniform() - m.intra_hops).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_grows_neurons_linearly() {
+        let m = MultiDomain::new(8);
+        assert_eq!(m.total_cores(), 160);
+        assert_eq!(m.total_neurons(), 8 * 20 * 8192);
+    }
+
+    #[test]
+    fn ring_distance_wraps() {
+        let m = MultiDomain::new(6);
+        assert_eq!(m.l2_ring_hops(0, 5), 1);
+        assert_eq!(m.l2_ring_hops(1, 4), 3);
+    }
+
+    #[test]
+    fn inter_domain_costlier_than_intra() {
+        let m = MultiDomain::new(4);
+        assert!(m.hops_between(0, 25) > m.hops_between(0, 5));
+    }
+
+    #[test]
+    fn avg_hops_grows_sublinearly_with_domains() {
+        let h2 = MultiDomain::new(2).avg_hops_uniform();
+        let h8 = MultiDomain::new(8).avg_hops_uniform();
+        let h32 = MultiDomain::new(32).avg_hops_uniform();
+        assert!(h2 < h8 && h8 < h32);
+        // Ring diameter grows linearly in domains, so the ratio of
+        // avg-hops growth to core growth must stay well below linear.
+        let growth = h32 / h2;
+        assert!(growth < 16.0, "growth {growth}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Spike flits and the hybrid transmission modes.
+//!
+//! The CMRouter's connection matrix lets one physical flit format serve
+//! three modes (paper: "compatible with multiple transmission modes,
+//! including P2P, broadcast, and merge, while avoiding complex packet
+//! encoding and decoding"):
+//!
+//! - **P2P**: one source core → one destination core;
+//! - **broadcast**: one source → a set of destination cores (the flit is
+//!   replicated at tree-branch routers, paying the cheap per-destination
+//!   energy);
+//! - **merge**: spikes from several source cores converge onto one
+//!   destination axon range (the router merges streams; the destination
+//!   sees a single logical stream).
+
+use super::topology::NodeId;
+
+/// Transmission mode of a flit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxMode {
+    /// Point-to-point.
+    P2p,
+    /// One-to-many broadcast.
+    Broadcast,
+    /// Many-to-one merge.
+    Merge,
+}
+
+/// Destination specification at injection time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dest {
+    /// Single destination core (domain-local core id).
+    Core(usize),
+    /// Broadcast to several cores.
+    Cores(Vec<usize>),
+    /// Merge-mode delivery to one core (distinguished from [`Dest::Core`]
+    /// only by energy/arbitration accounting).
+    Merge(usize),
+}
+
+impl Dest {
+    /// The transmission mode this destination implies.
+    pub fn mode(&self) -> TxMode {
+        match self {
+            Dest::Core(_) => TxMode::P2p,
+            Dest::Cores(_) => TxMode::Broadcast,
+            Dest::Merge(_) => TxMode::Merge,
+        }
+    }
+}
+
+/// A spike flit in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Flit {
+    /// Unique id (for latency bookkeeping).
+    pub id: u64,
+    /// Source core (domain-local id).
+    pub src_core: usize,
+    /// Destination core (domain-local id) — broadcast flits are split into
+    /// per-destination copies at injection/branch points, each carrying
+    /// its own `dst_core`.
+    pub dst_core: usize,
+    /// Transmission mode (for energy accounting).
+    pub mode: TxMode,
+    /// Spike payload: the axon id at the destination core.
+    pub axon: u32,
+    /// Timestep tag (cores must stay timestep-synchronized; the link
+    /// controller hangs up on mismatch).
+    pub timestep: u32,
+    /// Injection cycle (latency bookkeeping).
+    pub injected_at: u64,
+    /// Hops (router traversals) so far.
+    pub hops: u32,
+    /// Current node (maintained by the simulator).
+    pub at: NodeId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dest_modes() {
+        assert_eq!(Dest::Core(1).mode(), TxMode::P2p);
+        assert_eq!(Dest::Cores(vec![1, 2]).mode(), TxMode::Broadcast);
+        assert_eq!(Dest::Merge(3).mode(), TxMode::Merge);
+    }
+}

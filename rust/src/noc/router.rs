@@ -1,0 +1,336 @@
+//! The multi-mode connection-matrix router (CMRouter, paper §II.B).
+//!
+//! Structure (paper): "independent input and output buffers, a register
+//! table, a link controller, a channel arbiter, a reconfigurable
+//! connection matrix, and a clock gating unit. […] The connection matrix
+//! records all routing links among neighbor cores utilizing only
+//! `Nc × Nc × Wcid` bits (Nc = 5 neighbor cores, Wcid = 5-bit core id)."
+//!
+//! Model: per-port input/output FIFOs; each cycle the **channel arbiter**
+//! matches input heads to output ports (round-robin priority, one flit per
+//! output per cycle) subject to the **connection matrix** (a reconfigurable
+//! `in × out` permission table — the bit-exact hardware budget is
+//! `Nc·Nc·Wcid = 125` bits, checked in tests); the **link controller**
+//! hangs an input up when the flit's timestep tag is out of sync with the
+//! router's current timestep or when the chosen output is full
+//! (backpressure). A clock-gated router does nothing and burns only
+//! leakage.
+//!
+//! The same switch structure is instantiated at core nodes (their NoC
+//! interface); only router nodes count as "hops" in latency/energy
+//! accounting, matching the paper's hop definition.
+
+use super::packet::Flit;
+use super::topology::NodeId;
+use std::collections::VecDeque;
+
+/// Default per-port FIFO depth (flits).
+pub const DEFAULT_BUF_DEPTH: usize = 4;
+
+/// Why an input port made no progress this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stall {
+    /// No flit waiting.
+    Empty,
+    /// Output buffer full (backpressure hang-up).
+    Backpressure,
+    /// Timestep tag mismatch (link controller hang-up).
+    TimestepSync,
+    /// Connection matrix forbids the in→out link.
+    MatrixBlocked,
+    /// Lost round-robin arbitration this cycle.
+    Arbitration,
+}
+
+/// One CMRouter / node switch.
+#[derive(Debug, Clone)]
+pub struct CmRouter {
+    /// The node this switch lives at.
+    pub node: NodeId,
+    /// Neighbor node per port (port i ↔ `ports[i]`).
+    ports: Vec<NodeId>,
+    in_buf: Vec<VecDeque<Flit>>,
+    out_buf: Vec<VecDeque<Flit>>,
+    depth: usize,
+    /// Reconfigurable connection matrix: `allow[in][out]`.
+    allow: Vec<Vec<bool>>,
+    /// Round-robin arbiter cursor (per output port).
+    rr: Vec<usize>,
+    /// Current timestep (link controller sync reference).
+    pub timestep: u32,
+    /// Clock-gate enable.
+    pub enabled: bool,
+    // --- statistics -----------------------------------------------------
+    /// Flits switched in→out.
+    pub switched: u64,
+    /// Stall events by cause (empty excluded).
+    pub stalls_backpressure: u64,
+    /// Timestep-sync hang-ups.
+    pub stalls_timestep: u64,
+    /// Matrix-blocked events.
+    pub stalls_matrix: u64,
+    /// Cycles with any activity (for clock gating accounting).
+    pub active_cycles: u64,
+}
+
+impl CmRouter {
+    /// New switch with one port per neighbor.
+    pub fn new(node: NodeId, neighbors: &[NodeId], depth: usize) -> Self {
+        let p = neighbors.len();
+        CmRouter {
+            node,
+            ports: neighbors.to_vec(),
+            in_buf: (0..p).map(|_| VecDeque::with_capacity(depth)).collect(),
+            out_buf: (0..p).map(|_| VecDeque::with_capacity(depth)).collect(),
+            depth,
+            allow: vec![vec![true; p]; p],
+            rr: vec![0; p],
+            timestep: 0,
+            enabled: true,
+            switched: 0,
+            stalls_backpressure: 0,
+            stalls_timestep: 0,
+            stalls_matrix: 0,
+            active_cycles: 0,
+        }
+    }
+
+    /// Number of ports.
+    pub fn port_count(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Port index toward neighbor `n`.
+    pub fn port_to(&self, n: NodeId) -> Option<usize> {
+        self.ports.iter().position(|&p| p == n)
+    }
+
+    /// Neighbor on a port.
+    pub fn neighbor(&self, port: usize) -> NodeId {
+        self.ports[port]
+    }
+
+    /// Reconfigure the connection matrix (register-table write).
+    pub fn set_allow(&mut self, in_port: usize, out_port: usize, on: bool) {
+        self.allow[in_port][out_port] = on;
+    }
+
+    /// Hardware storage of the connection matrix in bits:
+    /// `Nc × Nc × Wcid` (the paper's budget; Wcid = 5).
+    pub fn matrix_storage_bits(&self) -> usize {
+        self.ports.len() * self.ports.len() * 5
+    }
+
+    /// True if input FIFO `port` has room.
+    pub fn can_accept(&self, port: usize) -> bool {
+        self.in_buf[port].len() < self.depth
+    }
+
+    /// Push an arriving flit into input FIFO `port` (link stage).
+    /// Returns false (and drops nothing — caller retries) when full.
+    pub fn accept(&mut self, port: usize, flit: Flit) -> bool {
+        if self.in_buf[port].len() >= self.depth {
+            return false;
+        }
+        self.in_buf[port].push_back(flit);
+        true
+    }
+
+    /// Peek the head of an output FIFO.
+    pub fn out_head(&self, port: usize) -> Option<&Flit> {
+        self.out_buf[port].front()
+    }
+
+    /// Pop the head of an output FIFO (link stage moved it).
+    pub fn out_pop(&mut self, port: usize) -> Option<Flit> {
+        self.out_buf[port].pop_front()
+    }
+
+    /// Occupancy across all input FIFOs.
+    pub fn in_occupancy(&self) -> usize {
+        self.in_buf.iter().map(VecDeque::len).sum()
+    }
+
+    /// Occupancy across all output FIFOs.
+    pub fn out_occupancy(&self) -> usize {
+        self.out_buf.iter().map(VecDeque::len).sum()
+    }
+
+    /// One arbitration cycle: for each output port pick (round-robin over
+    /// input ports) one eligible head flit and switch it. `route` maps a
+    /// flit to its desired output port. Returns flits switched this cycle.
+    pub fn arbitrate(&mut self, route: impl Fn(&Flit) -> Option<usize>) -> u32 {
+        if !self.enabled {
+            return 0;
+        }
+        // Hot-path early-out: an idle switch does no work (and allocates
+        // nothing) this cycle.
+        if self.in_buf.iter().all(VecDeque::is_empty) {
+            return 0;
+        }
+        let p = self.ports.len();
+        let mut moved = 0;
+        // Pre-compute desired output of each input head.
+        let mut want: Vec<Option<usize>> = Vec::with_capacity(p);
+        for i in 0..p {
+            want.push(self.in_buf[i].front().and_then(|f| {
+                if f.timestep != self.timestep {
+                    None // link-controller hang-up; counted below
+                } else {
+                    route(f)
+                }
+            }));
+            if let Some(f) = self.in_buf[i].front() {
+                if f.timestep != self.timestep {
+                    self.stalls_timestep += 1;
+                }
+            }
+        }
+        for out in 0..p {
+            if self.out_buf[out].len() >= self.depth {
+                // Output full: anyone wanting it is back-pressured.
+                for w in want.iter().flatten() {
+                    if *w == out {
+                        self.stalls_backpressure += 1;
+                    }
+                }
+                continue;
+            }
+            // Round-robin from rr[out].
+            let start = self.rr[out];
+            let mut granted = None;
+            for k in 0..p {
+                let i = (start + k) % p;
+                if want[i] == Some(out) {
+                    if !self.allow[i][out] {
+                        self.stalls_matrix += 1;
+                        continue;
+                    }
+                    granted = Some(i);
+                    break;
+                }
+            }
+            if let Some(i) = granted {
+                let flit = self.in_buf[i].pop_front().expect("head exists");
+                self.out_buf[out].push_back(flit);
+                want[i] = None;
+                self.rr[out] = (i + 1) % p;
+                self.switched += 1;
+                moved += 1;
+            }
+        }
+        if moved > 0 {
+            self.active_cycles += 1;
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::packet::TxMode;
+
+    fn flit(id: u64, dst: usize, ts: u32) -> Flit {
+        Flit {
+            id,
+            src_core: 0,
+            dst_core: dst,
+            mode: TxMode::P2p,
+            axon: 0,
+            timestep: ts,
+            injected_at: 0,
+            hops: 0,
+            at: 0,
+        }
+    }
+
+    #[test]
+    fn matrix_budget_matches_paper() {
+        let r = CmRouter::new(0, &[1, 2, 3, 4, 5], 4);
+        assert_eq!(r.matrix_storage_bits(), 125); // 5×5×5 bits
+    }
+
+    #[test]
+    fn switches_one_flit_per_output_per_cycle() {
+        let mut r = CmRouter::new(0, &[10, 11], 4);
+        r.accept(0, flit(1, 7, 0));
+        r.accept(0, flit(2, 7, 0));
+        // Both want output port 1.
+        let moved = r.arbitrate(|_| Some(1));
+        assert_eq!(moved, 1);
+        assert_eq!(r.out_head(1).unwrap().id, 1);
+        let moved = r.arbitrate(|_| Some(1));
+        assert_eq!(moved, 1);
+    }
+
+    #[test]
+    fn round_robin_alternates_inputs() {
+        let mut r = CmRouter::new(0, &[10, 11, 12], 8);
+        for i in 0..3 {
+            r.accept(0, flit(i, 0, 0));
+            r.accept(1, flit(100 + i, 0, 0));
+        }
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            r.arbitrate(|_| Some(2));
+            order.push(r.out_pop(2).unwrap().id);
+        }
+        // Inputs 0 and 1 must interleave, not starve.
+        assert!(order.windows(2).any(|w| w[0] < 100 && w[1] >= 100));
+        assert!(order.iter().filter(|&&i| i < 100).count() == 3);
+    }
+
+    #[test]
+    fn backpressure_hangs_up_input() {
+        let mut r = CmRouter::new(0, &[10, 11], 1);
+        r.accept(0, flit(1, 0, 0));
+        r.arbitrate(|_| Some(1)); // fills out_buf[1] (depth 1)
+        r.accept(0, flit(2, 0, 0));
+        let moved = r.arbitrate(|_| Some(1));
+        assert_eq!(moved, 0);
+        assert!(r.stalls_backpressure > 0);
+        // Drain and retry.
+        r.out_pop(1);
+        assert_eq!(r.arbitrate(|_| Some(1)), 1);
+    }
+
+    #[test]
+    fn timestep_mismatch_hangs_up() {
+        let mut r = CmRouter::new(0, &[10, 11], 4);
+        r.accept(0, flit(1, 0, 5)); // future timestep
+        assert_eq!(r.arbitrate(|_| Some(1)), 0);
+        assert!(r.stalls_timestep > 0);
+        r.timestep = 5;
+        assert_eq!(r.arbitrate(|_| Some(1)), 1);
+    }
+
+    #[test]
+    fn connection_matrix_blocks_disallowed_turns() {
+        let mut r = CmRouter::new(0, &[10, 11], 4);
+        r.set_allow(0, 1, false);
+        r.accept(0, flit(1, 0, 0));
+        assert_eq!(r.arbitrate(|_| Some(1)), 0);
+        assert!(r.stalls_matrix > 0);
+        r.set_allow(0, 1, true);
+        assert_eq!(r.arbitrate(|_| Some(1)), 1);
+    }
+
+    #[test]
+    fn gated_router_is_inert() {
+        let mut r = CmRouter::new(0, &[10], 4);
+        r.enabled = false;
+        r.accept(0, flit(1, 0, 0));
+        assert_eq!(r.arbitrate(|_| Some(0)), 0);
+        assert_eq!(r.switched, 0);
+    }
+
+    #[test]
+    fn accept_respects_depth() {
+        let mut r = CmRouter::new(0, &[10], 2);
+        assert!(r.accept(0, flit(1, 0, 0)));
+        assert!(r.accept(0, flit(2, 0, 0)));
+        assert!(!r.accept(0, flit(3, 0, 0)));
+        assert!(!r.can_accept(0));
+    }
+}

@@ -1,0 +1,540 @@
+//! NoC topology graphs: the fullerene-like domain and the baseline
+//! topologies it is compared against in Fig. 5 (2D-mesh, torus, ring,
+//! tree).
+//!
+//! Convention: *communication nodes* are cores **and** routers, matching
+//! the paper's degree accounting (the fullerene's published average degree
+//! 3.75 and variance 0.93 only come out if both node types count — see
+//! `DESIGN.md`). In the baseline topologies every router carries one
+//! attached core (the classic NoC arrangement); in the fullerene domain
+//! cores attach to three routers each.
+
+use crate::{Error, Result};
+
+/// Index of a node within a [`Topology`].
+pub type NodeId = usize;
+
+/// What a communication node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// A neuromorphic core (holds the domain-local core id).
+    Core(u8),
+    /// A level-1 router.
+    RouterL1(u8),
+    /// A level-2 router (domain centre, scale-up port).
+    RouterL2(u8),
+}
+
+impl NodeKind {
+    /// True for cores.
+    pub fn is_core(&self) -> bool {
+        matches!(self, NodeKind::Core(_))
+    }
+
+    /// True for any router.
+    pub fn is_router(&self) -> bool {
+        !self.is_core()
+    }
+}
+
+/// An undirected multigraph-free topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Human-readable name ("fullerene", "mesh-4x5", …).
+    pub name: String,
+    nodes: Vec<NodeKind>,
+    adj: Vec<Vec<NodeId>>,
+    cores: Vec<NodeId>,
+}
+
+impl Topology {
+    fn new(name: &str) -> Self {
+        Topology {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            adj: Vec::new(),
+            cores: Vec::new(),
+        }
+    }
+
+    fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(kind);
+        self.adj.push(Vec::new());
+        if kind.is_core() {
+            self.cores.push(id);
+        }
+        id
+    }
+
+    fn add_edge(&mut self, a: NodeId, b: NodeId) {
+        debug_assert!(a != b);
+        debug_assert!(!self.adj[a].contains(&b), "duplicate edge {a}-{b}");
+        self.adj[a].push(b);
+        self.adj[b].push(a);
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the topology has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Node kind.
+    pub fn kind(&self, n: NodeId) -> NodeKind {
+        self.nodes[n]
+    }
+
+    /// Neighbors of a node.
+    pub fn neighbors(&self, n: NodeId) -> &[NodeId] {
+        &self.adj[n]
+    }
+
+    /// All core node ids (in core-id order).
+    pub fn cores(&self) -> &[NodeId] {
+        &self.cores
+    }
+
+    /// All router node ids.
+    pub fn routers(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&n| self.nodes[n].is_router()).collect()
+    }
+
+    /// Node id of core with domain-local id `c`.
+    pub fn core_node(&self, c: usize) -> NodeId {
+        self.cores[c]
+    }
+
+    /// Total undirected edge count.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// BFS distances from `src` to every node (`usize::MAX` if unreachable).
+    pub fn bfs(&self, src: NodeId) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.len()];
+        let mut q = std::collections::VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            for &v in &self.adj[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Next-hop routing table: `table[node][core]` = neighbor of `node` on
+    /// a shortest path toward core `core` (deterministic: lowest-id
+    /// neighbor that decreases the BFS distance). `table[n][c] == n` when
+    /// `n` *is* that core.
+    pub fn next_hop_table(&self) -> Vec<Vec<NodeId>> {
+        let mut table = vec![vec![usize::MAX; self.cores.len()]; self.len()];
+        for (ci, &cnode) in self.cores.iter().enumerate() {
+            let dist = self.bfs(cnode);
+            for n in 0..self.len() {
+                if n == cnode {
+                    table[n][ci] = n;
+                    continue;
+                }
+                if dist[n] == usize::MAX {
+                    continue;
+                }
+                // lowest-id neighbor strictly closer to the destination
+                let mut best = usize::MAX;
+                for &v in &self.adj[n] {
+                    if dist[v] + 1 == dist[n] && v < best {
+                        best = v;
+                    }
+                }
+                table[n][ci] = best;
+            }
+        }
+        table
+    }
+
+    /// Validate basic invariants (connected, no isolated cores).
+    pub fn validate(&self) -> Result<()> {
+        if self.cores.is_empty() {
+            return Err(Error::Noc(format!("{}: no cores", self.name)));
+        }
+        let dist = self.bfs(0);
+        if dist.iter().any(|&d| d == usize::MAX) {
+            return Err(Error::Noc(format!("{}: not connected", self.name)));
+        }
+        Ok(())
+    }
+
+    // ======================= builders =====================================
+
+    /// The fullerene-like level-1 domain: 12 level-1 routers at
+    /// icosahedron vertices, 20 cores at its faces; router↔core links on
+    /// face incidence (each router serves 5 cores, each core reaches 3
+    /// routers). 32 nodes, 60 edges, average degree 3.75, variance 0.9375.
+    pub fn fullerene() -> Topology {
+        let (faces, _) = icosahedron();
+        let mut t = Topology::new("fullerene");
+        let routers: Vec<NodeId> = (0..12)
+            .map(|i| t.add_node(NodeKind::RouterL1(i as u8)))
+            .collect();
+        for (ci, face) in faces.iter().enumerate() {
+            let core = t.add_node(NodeKind::Core(ci as u8));
+            for &v in face {
+                t.add_edge(core, routers[v]);
+            }
+        }
+        t
+    }
+
+    /// Fullerene domain plus the central level-2 router linked to all 12
+    /// level-1 routers (the paper's scale-up point).
+    pub fn fullerene_with_l2() -> Topology {
+        let mut t = Self::fullerene();
+        t.name = "fullerene+l2".into();
+        let l2 = t.add_node(NodeKind::RouterL2(0));
+        let routers: Vec<NodeId> = (0..t.len() - 1)
+            .filter(|&n| matches!(t.nodes[n], NodeKind::RouterL1(_)))
+            .collect();
+        for r in routers {
+            t.add_edge(l2, r);
+        }
+        t
+    }
+
+    /// A multi-domain system as a *real* graph (cycle-simulatable, not
+    /// just the analytic [`crate::noc::multilevel`] model): `domains`
+    /// fullerene domains, each with its level-2 centre router, the L2
+    /// routers joined in a ring (the paper's off-chip extension). Global
+    /// core ids are `domain * 20 + local`.
+    pub fn multi_domain(domains: usize) -> Topology {
+        assert!(domains >= 1);
+        let (faces, _) = icosahedron();
+        let mut t = Topology::new(&format!("fullerene-x{domains}"));
+        let mut l2s = Vec::with_capacity(domains);
+        for d in 0..domains {
+            let routers: Vec<NodeId> = (0..12)
+                .map(|i| t.add_node(NodeKind::RouterL1(i as u8)))
+                .collect();
+            for (ci, face) in faces.iter().enumerate() {
+                let core = t.add_node(NodeKind::Core(ci as u8));
+                for &v in face {
+                    t.add_edge(core, routers[v]);
+                }
+            }
+            let l2 = t.add_node(NodeKind::RouterL2(d as u8));
+            for &r in &routers {
+                t.add_edge(l2, r);
+            }
+            l2s.push(l2);
+        }
+        // L2 ring (only when more than one domain; 2 domains = one link).
+        for d in 0..domains {
+            let a = l2s[d];
+            let b = l2s[(d + 1) % domains];
+            if a != b && !t.adj[a].contains(&b) {
+                t.add_edge(a, b);
+            }
+        }
+        t
+    }
+
+    /// 2D mesh of `rows × cols` routers, one core attached to each router.
+    pub fn mesh2d(rows: usize, cols: usize) -> Topology {
+        let mut t = Topology::new(&format!("mesh-{rows}x{cols}"));
+        let mut r = vec![vec![0usize; cols]; rows];
+        for (i, row) in r.iter_mut().enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = t.add_node(NodeKind::RouterL1((i * cols + j) as u8));
+            }
+        }
+        for i in 0..rows {
+            for j in 0..cols {
+                if j + 1 < cols {
+                    t.add_edge(r[i][j], r[i][j + 1]);
+                }
+                if i + 1 < rows {
+                    t.add_edge(r[i][j], r[i + 1][j]);
+                }
+            }
+        }
+        for (ci, &router) in r.iter().flatten().enumerate() {
+            let core = t.add_node(NodeKind::Core(ci as u8));
+            t.add_edge(core, router);
+        }
+        t
+    }
+
+    /// 2D torus (mesh with wraparound links), one core per router.
+    pub fn torus(rows: usize, cols: usize) -> Topology {
+        let mut t = Topology::new(&format!("torus-{rows}x{cols}"));
+        let mut r = vec![vec![0usize; cols]; rows];
+        for (i, row) in r.iter_mut().enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = t.add_node(NodeKind::RouterL1((i * cols + j) as u8));
+            }
+        }
+        for i in 0..rows {
+            for j in 0..cols {
+                let right = r[i][(j + 1) % cols];
+                let down = r[(i + 1) % rows][j];
+                if cols > 1 && !t.adj[r[i][j]].contains(&right) {
+                    t.add_edge(r[i][j], right);
+                }
+                if rows > 1 && !t.adj[r[i][j]].contains(&down) {
+                    t.add_edge(r[i][j], down);
+                }
+            }
+        }
+        for (ci, &router) in r.iter().flatten().enumerate() {
+            let core = t.add_node(NodeKind::Core(ci as u8));
+            t.add_edge(core, router);
+        }
+        t
+    }
+
+    /// Ring of `n` routers, one core per router.
+    pub fn ring(n: usize) -> Topology {
+        let mut t = Topology::new(&format!("ring-{n}"));
+        let routers: Vec<NodeId> = (0..n)
+            .map(|i| t.add_node(NodeKind::RouterL1(i as u8)))
+            .collect();
+        for i in 0..n {
+            if n > 2 || i + 1 < n {
+                let a = routers[i];
+                let b = routers[(i + 1) % n];
+                if !t.adj[a].contains(&b) {
+                    t.add_edge(a, b);
+                }
+            }
+        }
+        for (ci, &router) in routers.iter().enumerate() {
+            let core = t.add_node(NodeKind::Core(ci as u8));
+            t.add_edge(core, router);
+        }
+        t
+    }
+
+    /// `arity`-ary tree with `n_cores` leaf routers (core attached to each
+    /// leaf), internal routers above them up to a single root — the
+    /// tree-NoC baseline of the comparison table.
+    pub fn tree(arity: usize, n_cores: usize) -> Topology {
+        assert!(arity >= 2);
+        let mut t = Topology::new(&format!("tree-a{arity}-{n_cores}"));
+        // Build level by level, bottom-up.
+        let mut level: Vec<NodeId> = (0..n_cores)
+            .map(|i| t.add_node(NodeKind::RouterL1(i as u8)))
+            .collect();
+        for (ci, &leaf) in level.clone().iter().enumerate() {
+            let core = t.add_node(NodeKind::Core(ci as u8));
+            t.add_edge(core, leaf);
+        }
+        let mut rid = n_cores;
+        while level.len() > 1 {
+            let mut next = Vec::new();
+            for chunk in level.chunks(arity) {
+                let parent = t.add_node(NodeKind::RouterL1((rid % 256) as u8));
+                rid += 1;
+                for &c in chunk {
+                    t.add_edge(parent, c);
+                }
+                next.push(parent);
+            }
+            level = next;
+        }
+        t
+    }
+}
+
+/// Icosahedron combinatorics: returns (20 faces as vertex triples, 30
+/// edges as vertex pairs) over vertices 0..12.
+///
+/// Built from the golden-ratio coordinates (0, ±1, ±φ) cyclic; edges are
+/// the 30 closest pairs (length 2), faces the 20 mutually-adjacent
+/// triangles. Pure integer output, checked by construction.
+pub fn icosahedron() -> (Vec<[usize; 3]>, Vec<(usize, usize)>) {
+    let phi = (1.0 + 5.0_f64.sqrt()) / 2.0;
+    let mut v: Vec<[f64; 3]> = Vec::with_capacity(12);
+    for &s1 in &[1.0, -1.0] {
+        for &s2 in &[1.0, -1.0] {
+            v.push([0.0, s1, s2 * phi]);
+            v.push([s1, s2 * phi, 0.0]);
+            v.push([s1 * phi, 0.0, s2]);
+        }
+    }
+    debug_assert_eq!(v.len(), 12);
+    let d2 = |a: &[f64; 3], b: &[f64; 3]| -> f64 {
+        (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+    };
+    // Edge length² = 4 (pairs at distance 2); everything else is farther.
+    let mut edges = Vec::new();
+    let mut adj = vec![[false; 12]; 12];
+    for i in 0..12 {
+        for j in i + 1..12 {
+            if d2(&v[i], &v[j]) < 4.5 {
+                edges.push((i, j));
+                adj[i][j] = true;
+                adj[j][i] = true;
+            }
+        }
+    }
+    assert_eq!(edges.len(), 30, "icosahedron must have 30 edges");
+    let mut faces = Vec::new();
+    for i in 0..12 {
+        for j in i + 1..12 {
+            if !adj[i][j] {
+                continue;
+            }
+            for k in j + 1..12 {
+                if adj[i][k] && adj[j][k] {
+                    faces.push([i, j, k]);
+                }
+            }
+        }
+    }
+    assert_eq!(faces.len(), 20, "icosahedron must have 20 faces");
+    (faces, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn icosahedron_combinatorics() {
+        let (faces, edges) = icosahedron();
+        assert_eq!(faces.len(), 20);
+        assert_eq!(edges.len(), 30);
+        // Every vertex belongs to exactly 5 faces and 5 edges.
+        for v in 0..12 {
+            let f = faces.iter().filter(|f| f.contains(&v)).count();
+            let e = edges.iter().filter(|(a, b)| *a == v || *b == v).count();
+            assert_eq!((f, e), (5, 5), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn fullerene_has_paper_published_shape() {
+        let t = Topology::fullerene();
+        t.validate().unwrap();
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.cores().len(), 20);
+        assert_eq!(t.edge_count(), 60);
+        // Cores have degree 3, routers degree 5.
+        for n in 0..t.len() {
+            let deg = t.neighbors(n).len();
+            match t.kind(n) {
+                NodeKind::Core(_) => assert_eq!(deg, 3),
+                NodeKind::RouterL1(_) => assert_eq!(deg, 5),
+                NodeKind::RouterL2(_) => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn fullerene_l2_center_connects_all_routers() {
+        let t = Topology::fullerene_with_l2();
+        t.validate().unwrap();
+        assert_eq!(t.len(), 33);
+        let l2 = (0..t.len())
+            .find(|&n| matches!(t.kind(n), NodeKind::RouterL2(_)))
+            .unwrap();
+        assert_eq!(t.neighbors(l2).len(), 12);
+    }
+
+    #[test]
+    fn mesh_torus_ring_tree_validate() {
+        for t in [
+            Topology::mesh2d(4, 5),
+            Topology::torus(4, 5),
+            Topology::ring(20),
+            Topology::tree(4, 20),
+        ] {
+            t.validate().unwrap();
+            assert_eq!(t.cores().len(), 20, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn torus_wrap_links_increase_degree() {
+        let m = Topology::mesh2d(4, 5);
+        let t = Topology::torus(4, 5);
+        assert!(t.edge_count() > m.edge_count());
+    }
+
+    #[test]
+    fn next_hop_routes_toward_destination() {
+        let t = Topology::fullerene();
+        let table = t.next_hop_table();
+        // From any node, following next hops reaches the core.
+        for (ci, &cnode) in t.cores().iter().enumerate() {
+            for start in 0..t.len() {
+                let mut cur = start;
+                let mut hops = 0;
+                while cur != cnode {
+                    cur = table[cur][ci];
+                    hops += 1;
+                    assert!(hops <= t.len(), "routing loop from {start} to core {ci}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_domain_graph_shape() {
+        let t = Topology::multi_domain(3);
+        t.validate().unwrap();
+        assert_eq!(t.cores().len(), 60);
+        // 3 × (32 + 1 L2) nodes.
+        assert_eq!(t.len(), 99);
+        // Edges: 3 × (60 core links + 12 L2 links) + 3 ring links.
+        assert_eq!(t.edge_count(), 3 * 72 + 3);
+        // Every L2 router: 12 domain links + 2 ring links.
+        for n in 0..t.len() {
+            if matches!(t.kind(n), NodeKind::RouterL2(_)) {
+                assert_eq!(t.neighbors(n).len(), 14);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_domain_routes_across_domains() {
+        let t = Topology::multi_domain(2);
+        let table = t.next_hop_table();
+        // From core 0 (domain 0) to core 25 (domain 1): follow hops.
+        let src = t.core_node(0);
+        let dst = t.core_node(25);
+        let mut cur = src;
+        let mut hops = 0;
+        while cur != dst {
+            cur = table[cur][25];
+            hops += 1;
+            assert!(hops < 50, "routing loop");
+        }
+        // Path must pass through at least one L2 router.
+        assert!(t.bfs(src)[dst] >= 5, "cross-domain path too short");
+    }
+
+    #[test]
+    fn single_domain_multi_equals_fullerene_with_l2() {
+        let m = Topology::multi_domain(1);
+        let f = Topology::fullerene_with_l2();
+        assert_eq!(m.len(), f.len());
+        assert_eq!(m.edge_count(), f.edge_count());
+    }
+
+    #[test]
+    fn bfs_distances_sane() {
+        let t = Topology::ring(6);
+        let c0 = t.core_node(0);
+        let c3 = t.core_node(3);
+        // core0 → router0 → r1 → r2 → r3 → core3 = 5 hops.
+        assert_eq!(t.bfs(c0)[c3], 5);
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic traffic generators for the NoC benches (Fig. 5c): uniform
+//! random, hotspot, nearest-neighbor and broadcast-heavy patterns, plus a
+//! Poisson injection process.
+
+use super::packet::Dest;
+use super::sim::NocSim;
+use crate::util::prng::Rng;
+
+/// A traffic pattern: maps (source core, rng) to a destination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Uniform random destination ≠ source.
+    Uniform,
+    /// All traffic converges on core 0 with probability ¾, else uniform.
+    Hotspot,
+    /// Destination = (src + 1) mod n (neighbor-ish).
+    Neighbor,
+    /// Broadcast to `fanout` random destinations.
+    Broadcast(usize),
+}
+
+/// Poisson traffic driver over a [`NocSim`].
+pub struct TrafficGen {
+    pattern: Pattern,
+    /// Offered load: expected injections per core per cycle.
+    rate: f64,
+    rng: Rng,
+    n_cores: usize,
+    injected: u64,
+}
+
+impl TrafficGen {
+    /// New generator with injection `rate` (flits/core/cycle) and `seed`.
+    pub fn new(pattern: Pattern, rate: f64, n_cores: usize, seed: u64) -> Self {
+        TrafficGen {
+            pattern,
+            rate,
+            rng: Rng::new(seed),
+            n_cores,
+            injected: 0,
+        }
+    }
+
+    /// Total flit injections performed.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    fn dest_for(&mut self, src: usize) -> Dest {
+        match self.pattern {
+            Pattern::Uniform => {
+                let mut d = self.rng.below_usize(self.n_cores - 1);
+                if d >= src {
+                    d += 1;
+                }
+                Dest::Core(d)
+            }
+            Pattern::Hotspot => {
+                if self.rng.bool(0.75) && src != 0 {
+                    Dest::Core(0)
+                } else {
+                    let mut d = self.rng.below_usize(self.n_cores - 1);
+                    if d >= src {
+                        d += 1;
+                    }
+                    Dest::Core(d)
+                }
+            }
+            Pattern::Neighbor => Dest::Core((src + 1) % self.n_cores),
+            Pattern::Broadcast(k) => {
+                let mut dsts: Vec<usize> = self
+                    .rng
+                    .choose_k(self.n_cores - 1, k)
+                    .into_iter()
+                    .map(|d| if d >= src { d + 1 } else { d })
+                    .collect();
+                dsts.sort_unstable();
+                Dest::Cores(dsts)
+            }
+        }
+    }
+
+    /// Inject one cycle's worth of traffic into `sim`.
+    pub fn tick(&mut self, sim: &mut NocSim) {
+        for src in 0..self.n_cores {
+            let k = self.rng.poisson(self.rate);
+            for _ in 0..k {
+                let dest = self.dest_for(src);
+                let axon = self.rng.next_u32() % 1024;
+                self.injected += sim.inject(src, &dest, axon).len() as u64;
+            }
+        }
+    }
+
+    /// Drive `sim` for `cycles` of offered load then drain.
+    pub fn run(&mut self, sim: &mut NocSim, cycles: u64) -> crate::Result<()> {
+        for _ in 0..cycles {
+            self.tick(sim);
+            sim.step();
+        }
+        sim.run_until_drained(1_000_000)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyParams;
+    use crate::noc::topology::Topology;
+
+    #[test]
+    fn uniform_load_delivers_everything() {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut tg = TrafficGen::new(Pattern::Uniform, 0.05, 20, 42);
+        tg.run(&mut sim, 200).unwrap();
+        let st = sim.stats();
+        assert_eq!(st.delivered, tg.injected());
+        assert!(st.avg_hops >= 1.0);
+    }
+
+    #[test]
+    fn hotspot_raises_latency_vs_uniform() {
+        let run = |pattern| {
+            let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+            let mut tg = TrafficGen::new(pattern, 0.15, 20, 7);
+            tg.run(&mut sim, 300).unwrap();
+            sim.stats().avg_latency
+        };
+        let uni = run(Pattern::Uniform);
+        let hot = run(Pattern::Hotspot);
+        assert!(
+            hot > uni,
+            "hotspot latency {hot} should exceed uniform {uni}"
+        );
+    }
+
+    #[test]
+    fn broadcast_pattern_multiplies_deliveries() {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut tg = TrafficGen::new(Pattern::Broadcast(3), 0.02, 20, 9);
+        tg.run(&mut sim, 100).unwrap();
+        assert_eq!(sim.stats().delivered, tg.injected());
+        assert!(tg.injected() % 3 == 0, "each injection makes 3 copies");
+    }
+}

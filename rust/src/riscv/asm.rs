@@ -1,0 +1,337 @@
+//! A small two-pass RV32IM assembler so firmware stays readable source in
+//! the repository instead of hex dumps.
+//!
+//! Supported: the full RV32IM mnemonic set used by the firmware, labels,
+//! `#` comments, `li`/`mv`/`nop`/`j`/`beqz`/`bnez` pseudo-instructions and
+//! the ENU custom mnemonics (`enu.init`, `enu.coreen`, `enu.start`,
+//! `enu.status`, `enu.result`, `enu.tsack`, `enu.stop`).
+
+use super::decode::{encode, AluOp, BrOp, Instr, LdOp, MulOp, StOp};
+use super::enu::funct;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+fn parse_reg(s: &str) -> Result<u8> {
+    let s = s.trim().trim_end_matches(',');
+    let body = match s {
+        "zero" => return Ok(0),
+        "ra" => return Ok(1),
+        "sp" => return Ok(2),
+        _ => s
+            .strip_prefix('x')
+            .ok_or_else(|| Error::Riscv(format!("bad register '{s}'")))?,
+    };
+    let n: u8 = body
+        .parse()
+        .map_err(|_| Error::Riscv(format!("bad register '{s}'")))?;
+    if n >= 32 {
+        return Err(Error::Riscv(format!("register x{n} out of range")));
+    }
+    Ok(n)
+}
+
+fn parse_imm(s: &str, labels: &BTreeMap<String, i64>) -> Result<i64> {
+    let s = s.trim().trim_end_matches(',');
+    if let Some(v) = labels.get(s) {
+        return Ok(*v);
+    }
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|_| Error::Riscv(format!("bad immediate '{s}'")))?;
+    Ok(if neg { -v } else { v })
+}
+
+/// `imm(reg)` operand.
+fn parse_mem(s: &str) -> Result<(i64, u8)> {
+    let s = s.trim();
+    let open = s
+        .find('(')
+        .ok_or_else(|| Error::Riscv(format!("bad mem operand '{s}'")))?;
+    let imm = parse_imm(&s[..open], &BTreeMap::new())?;
+    let reg = parse_reg(s[open + 1..].trim_end_matches(')'))?;
+    Ok((imm, reg))
+}
+
+/// Number of machine words a source line expands to.
+fn line_words(mnemonic: &str, ops: &[&str]) -> usize {
+    match mnemonic {
+        "li" => {
+            // li expands to 1 word for 12-bit imm, else 2 (lui+addi).
+            if let Ok(v) = parse_imm(ops.get(1).unwrap_or(&"0"), &BTreeMap::new()) {
+                if (-2048..=2047).contains(&v) {
+                    1
+                } else {
+                    2
+                }
+            } else {
+                2
+            }
+        }
+        _ => 1,
+    }
+}
+
+/// Assemble source into machine words.
+pub fn assemble(src: &str) -> Result<Vec<u32>> {
+    // Pass 1: label addresses.
+    let mut labels: BTreeMap<String, i64> = BTreeMap::new();
+    let mut pc = 0i64;
+    let lines: Vec<(usize, String)> = src
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.split('#').next().unwrap_or("").trim().to_string()))
+        .filter(|(_, l)| !l.is_empty())
+        .collect();
+    for (_, line) in &lines {
+        if let Some(label) = line.strip_suffix(':') {
+            labels.insert(label.trim().to_string(), pc);
+        } else {
+            let mut it = line.split_whitespace();
+            let m = it.next().unwrap();
+            let ops: Vec<&str> = it.collect();
+            pc += 4 * line_words(m, &ops) as i64;
+        }
+    }
+
+    // Pass 2: encode.
+    let mut words = Vec::new();
+    let mut pc = 0i64;
+    for (lineno, line) in &lines {
+        if line.ends_with(':') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let m = it.next().unwrap();
+        let ops: Vec<&str> = it.collect();
+        let err = |msg: &str| Error::Riscv(format!("line {lineno}: {msg}: '{line}'"));
+        let reg = |i: usize| -> Result<u8> {
+            parse_reg(ops.get(i).ok_or_else(|| err("missing operand"))?)
+        };
+        let imm = |i: usize| -> Result<i64> {
+            parse_imm(ops.get(i).ok_or_else(|| err("missing operand"))?, &labels)
+        };
+        let rel = |i: usize| -> Result<i32> { Ok((imm(i)? - pc) as i32) };
+
+        let alu3 = |op: AluOp| -> Result<Instr> {
+            Ok(Instr::Op { op, rd: reg(0)?, rs1: reg(1)?, rs2: reg(2)? })
+        };
+        let alui = |op: AluOp| -> Result<Instr> {
+            Ok(Instr::OpImm { op, rd: reg(0)?, rs1: reg(1)?, imm: imm(2)? as i32 })
+        };
+        let br = |op: BrOp| -> Result<Instr> {
+            Ok(Instr::Branch { op, rs1: reg(0)?, rs2: reg(1)?, imm: rel(2)? })
+        };
+        let muldiv = |op: MulOp| -> Result<Instr> {
+            Ok(Instr::MulDiv { op, rd: reg(0)?, rs1: reg(1)?, rs2: reg(2)? })
+        };
+        let load = |op: LdOp| -> Result<Instr> {
+            let (off, base) = parse_mem(ops.get(1).ok_or_else(|| err("missing operand"))?)?;
+            Ok(Instr::Load { op, rd: reg(0)?, rs1: base, imm: off as i32 })
+        };
+        let store = |op: StOp| -> Result<Instr> {
+            let (off, base) = parse_mem(ops.get(1).ok_or_else(|| err("missing operand"))?)?;
+            Ok(Instr::Store { op, rs1: base, rs2: reg(0)?, imm: off as i32 })
+        };
+
+        let emit: Vec<Instr> = match m {
+            // pseudo
+            "nop" => vec![Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 }],
+            "mv" => vec![Instr::OpImm { op: AluOp::Add, rd: reg(0)?, rs1: reg(1)?, imm: 0 }],
+            "li" => {
+                let rd = reg(0)?;
+                let v = imm(1)?;
+                if (-2048..=2047).contains(&v) {
+                    vec![Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: v as i32 }]
+                } else {
+                    let v = v as i32;
+                    // lui loads upper 20 bits; addi adds sign-extended low
+                    // 12; compensate when low 12 are negative.
+                    let low = (v << 20) >> 20;
+                    let high = v.wrapping_sub(low);
+                    vec![
+                        Instr::Lui { rd, imm: high },
+                        Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: low },
+                    ]
+                }
+            }
+            "j" => vec![Instr::Jal { rd: 0, imm: rel(0)? }],
+            "jal" => {
+                if ops.len() == 1 {
+                    vec![Instr::Jal { rd: 1, imm: rel(0)? }]
+                } else {
+                    vec![Instr::Jal { rd: reg(0)?, imm: rel(1)? }]
+                }
+            }
+            "jalr" => vec![Instr::Jalr { rd: reg(0)?, rs1: reg(1)?, imm: 0 }],
+            "ret" => vec![Instr::Jalr { rd: 0, rs1: 1, imm: 0 }],
+            "beqz" => vec![Instr::Branch { op: BrOp::Beq, rs1: reg(0)?, rs2: 0, imm: rel(1)? }],
+            "bnez" => vec![Instr::Branch { op: BrOp::Bne, rs1: reg(0)?, rs2: 0, imm: rel(1)? }],
+            // alu
+            "add" => vec![alu3(AluOp::Add)?],
+            "sub" => vec![alu3(AluOp::Sub)?],
+            "sll" => vec![alu3(AluOp::Sll)?],
+            "slt" => vec![alu3(AluOp::Slt)?],
+            "sltu" => vec![alu3(AluOp::Sltu)?],
+            "xor" => vec![alu3(AluOp::Xor)?],
+            "srl" => vec![alu3(AluOp::Srl)?],
+            "sra" => vec![alu3(AluOp::Sra)?],
+            "or" => vec![alu3(AluOp::Or)?],
+            "and" => vec![alu3(AluOp::And)?],
+            "addi" => vec![alui(AluOp::Add)?],
+            "slti" => vec![alui(AluOp::Slt)?],
+            "sltiu" => vec![alui(AluOp::Sltu)?],
+            "xori" => vec![alui(AluOp::Xor)?],
+            "ori" => vec![alui(AluOp::Or)?],
+            "andi" => vec![alui(AluOp::And)?],
+            "slli" => vec![alui(AluOp::Sll)?],
+            "srli" => vec![alui(AluOp::Srl)?],
+            "srai" => vec![alui(AluOp::Sra)?],
+            "lui" => vec![Instr::Lui { rd: reg(0)?, imm: (imm(1)? as i32) << 12 }],
+            "auipc" => vec![Instr::Auipc { rd: reg(0)?, imm: (imm(1)? as i32) << 12 }],
+            // muldiv
+            "mul" => vec![muldiv(MulOp::Mul)?],
+            "mulh" => vec![muldiv(MulOp::Mulh)?],
+            "mulhsu" => vec![muldiv(MulOp::Mulhsu)?],
+            "mulhu" => vec![muldiv(MulOp::Mulhu)?],
+            "div" => vec![muldiv(MulOp::Div)?],
+            "divu" => vec![muldiv(MulOp::Divu)?],
+            "rem" => vec![muldiv(MulOp::Rem)?],
+            "remu" => vec![muldiv(MulOp::Remu)?],
+            // memory
+            "lb" => vec![load(LdOp::Lb)?],
+            "lh" => vec![load(LdOp::Lh)?],
+            "lw" => vec![load(LdOp::Lw)?],
+            "lbu" => vec![load(LdOp::Lbu)?],
+            "lhu" => vec![load(LdOp::Lhu)?],
+            "sb" => vec![store(StOp::Sb)?],
+            "sh" => vec![store(StOp::Sh)?],
+            "sw" => vec![store(StOp::Sw)?],
+            // branches
+            "beq" => vec![br(BrOp::Beq)?],
+            "bne" => vec![br(BrOp::Bne)?],
+            "blt" => vec![br(BrOp::Blt)?],
+            "bge" => vec![br(BrOp::Bge)?],
+            "bltu" => vec![br(BrOp::Bltu)?],
+            "bgeu" => vec![br(BrOp::Bgeu)?],
+            // system
+            "fence" => vec![Instr::Fence],
+            "ecall" => vec![Instr::Ecall],
+            "ebreak" => vec![Instr::Ebreak],
+            "wfi" => vec![Instr::Wfi],
+            // ENU custom mnemonics
+            "enu.init" => vec![Instr::Enu { funct: funct::NET_INIT, rd: 0, rs1: reg(0)?, rs2: reg(1)? }],
+            "enu.coreen" => vec![Instr::Enu { funct: funct::CORE_EN, rd: 0, rs1: reg(0)?, rs2: 0 }],
+            "enu.start" => vec![Instr::Enu { funct: funct::NET_START, rd: reg(0)?, rs1: reg(1)?, rs2: 0 }],
+            "enu.status" => vec![Instr::Enu { funct: funct::NET_STATUS, rd: reg(0)?, rs1: 0, rs2: 0 }],
+            "enu.result" => vec![Instr::Enu { funct: funct::RESULT_RD, rd: reg(0)?, rs1: reg(1)?, rs2: 0 }],
+            "enu.tsack" => vec![Instr::Enu { funct: funct::TS_ACK, rd: 0, rs1: 0, rs2: 0 }],
+            "enu.stop" => vec![Instr::Enu { funct: funct::NET_STOP, rd: 0, rs1: 0, rs2: 0 }],
+            other => return Err(err(&format!("unknown mnemonic '{other}'"))),
+        };
+        for i in emit {
+            words.push(encode(&i));
+            pc += 4;
+        }
+    }
+    Ok(words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::decode::decode;
+
+    #[test]
+    fn labels_and_branches_resolve() {
+        let w = assemble(
+            "
+            li x1, 3
+        top:
+            addi x1, x1, -1
+            bnez x1, top
+            ebreak
+            ",
+        )
+        .unwrap();
+        assert_eq!(w.len(), 4);
+        // The branch targets -4 relative.
+        match decode(w[2]).unwrap() {
+            Instr::Branch { imm, .. } => assert_eq!(imm, -4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn li_expands_for_large_immediates() {
+        let small = assemble("li x1, 100").unwrap();
+        assert_eq!(small.len(), 1);
+        let large = assemble("li x1, 0x10000000").unwrap();
+        assert_eq!(large.len(), 2);
+        // Negative-low-half correction: 0x12345FFF → lui rounds up.
+        let tricky = assemble("li x1, 0x12345FFF").unwrap();
+        assert_eq!(tricky.len(), 2);
+    }
+
+    #[test]
+    fn li_large_executes_correctly() {
+        use crate::riscv::cpu::Cpu;
+        for &v in &[0x10000000i64, 0x12345FFF, -559038737 /*0xDEADBEEF*/, 2047, -2048] {
+            let mut cpu = Cpu::new(4096, true);
+            cpu.load_program(&assemble(&format!("li x1, {v}\nebreak")).unwrap())
+                .unwrap();
+            cpu.run(10).unwrap();
+            assert_eq!(cpu.regs[1], v as u32, "li {v}");
+        }
+    }
+
+    #[test]
+    fn mem_operands() {
+        let w = assemble("lw x5, 12(x2)\nsw x5, -4(x3)").unwrap();
+        assert_eq!(
+            decode(w[0]).unwrap(),
+            Instr::Load { op: LdOp::Lw, rd: 5, rs1: 2, imm: 12 }
+        );
+        assert_eq!(
+            decode(w[1]).unwrap(),
+            Instr::Store { op: StOp::Sw, rs1: 3, rs2: 5, imm: -4 }
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let w = assemble("# full comment\n\nnop # trailing\n").unwrap();
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn unknown_mnemonic_reports_line() {
+        let e = assemble("nop\nfrobnicate x1").unwrap_err();
+        assert!(e.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn enu_mnemonics_encode() {
+        let w = assemble("enu.start x0, x3\nenu.status x4").unwrap();
+        match decode(w[0]).unwrap() {
+            Instr::Enu { funct: f, rs1, .. } => {
+                assert_eq!(f, funct::NET_START);
+                assert_eq!(rs1, 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode(w[1]).unwrap() {
+            Instr::Enu { funct: f, rd, .. } => {
+                assert_eq!(f, funct::NET_STATUS);
+                assert_eq!(rd, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,463 @@
+//! The RV32IM CPU executor: fetch → decode → execute with the sleep/wake
+//! state machine, clock-domain accounting and per-instruction energy.
+//!
+//! CPI model (documented so the power numbers are reproducible):
+//! ALU/immediate 1 cycle, load/store 2, branch 1 (+1 taken), jumps 2,
+//! mul/div 4, ENU 2, `wfi` 1 (then gated). These match small in-order
+//! MCU-class RV32 pipelines.
+
+use super::clock::ClockDomains;
+use super::decode::{decode, AluOp, BrOp, Instr, LdOp, MulOp, StOp};
+use super::enu::EnuUnit;
+use super::lsu::{Lsu, LsuClient};
+use crate::energy::{EnergyLedger, EventClass};
+use crate::{Error, Result};
+
+/// Execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuState {
+    /// Executing instructions.
+    Running,
+    /// HFCLK halted by `wfi`; waiting for a wake event.
+    Sleeping,
+    /// Stopped by `ebreak` (test/firmware exit).
+    Halted,
+}
+
+/// Wake events from the neuromorphic processor (paper: "the RISC-V core
+/// can be woken up through timestep-switch or network-computing-finish
+/// signals").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeEvent {
+    /// The neuromorphic processor advanced a timestep.
+    TimestepSwitch,
+    /// Network run finished.
+    NetworkFinish,
+}
+
+impl WakeEvent {
+    /// Bit in the wake mask register.
+    pub fn mask_bit(self) -> u32 {
+        match self {
+            WakeEvent::TimestepSwitch => 1 << 0,
+            WakeEvent::NetworkFinish => 1 << 1,
+        }
+    }
+}
+
+/// The CPU.
+pub struct Cpu {
+    /// Register file (x0 hardwired to zero).
+    pub regs: [u32; 32],
+    /// Program counter.
+    pub pc: u32,
+    /// Execution state.
+    pub state: CpuState,
+    /// Shared load-and-store unit.
+    pub lsu: Lsu,
+    /// Extended neuromorphic unit.
+    pub enu: EnuUnit,
+    /// Clock-domain accounting.
+    pub clocks: ClockDomains,
+    /// Dynamic-energy ledger.
+    pub ledger: EnergyLedger,
+    /// Instructions retired.
+    pub instret: u64,
+}
+
+impl Cpu {
+    /// New CPU with `ram` bytes, gating on/off (baseline ablation).
+    pub fn new(ram: usize, gating: bool) -> Self {
+        Cpu {
+            regs: [0; 32],
+            pc: 0,
+            state: CpuState::Running,
+            lsu: Lsu::new(ram),
+            enu: EnuUnit::new(),
+            clocks: ClockDomains::new(gating),
+            ledger: EnergyLedger::new(),
+            instret: 0,
+        }
+    }
+
+    /// Load a program image at address 0 and reset the PC.
+    pub fn load_program(&mut self, words: &[u32]) -> Result<()> {
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        self.lsu.load_image(0, &bytes)?;
+        self.pc = 0;
+        self.state = CpuState::Running;
+        Ok(())
+    }
+
+    #[inline]
+    fn reg(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn set_reg(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Deliver a wake event; returns true if the CPU woke up.
+    pub fn wake(&mut self, ev: WakeEvent) -> bool {
+        if self.state == CpuState::Sleeping {
+            let mask = self.lsu.mmio.wake_mask;
+            // Mask of 0 = wake on anything (reset default).
+            if mask == 0 || mask & ev.mask_bit() != 0 {
+                self.state = CpuState::Running;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Execute one instruction (or one gated cycle when sleeping).
+    /// Returns the cycles consumed.
+    pub fn step(&mut self) -> Result<u64> {
+        match self.state {
+            CpuState::Halted => return Ok(0),
+            CpuState::Sleeping => {
+                self.clocks.tick(false);
+                self.lsu.mmio.cycle_lo = self.lsu.mmio.cycle_lo.wrapping_add(1);
+                return Ok(1);
+            }
+            CpuState::Running => {}
+        }
+        let word = self.lsu.fetch(self.pc)?;
+        let instr = decode(word)?;
+        let mut next_pc = self.pc.wrapping_add(4);
+        let cycles: u64 = match instr {
+            Instr::Lui { rd, imm } => {
+                self.set_reg(rd, imm as u32);
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Auipc { rd, imm } => {
+                self.set_reg(rd, self.pc.wrapping_add(imm as u32));
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Jal { rd, imm } => {
+                self.set_reg(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+                self.ledger.add1(EventClass::CpuBranch);
+                2
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let t = next_pc;
+                next_pc = self.reg(rs1).wrapping_add(imm as u32) & !1;
+                self.set_reg(rd, t);
+                self.ledger.add1(EventClass::CpuBranch);
+                2
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let (a, b) = (self.reg(rs1), self.reg(rs2));
+                let taken = match op {
+                    BrOp::Beq => a == b,
+                    BrOp::Bne => a != b,
+                    BrOp::Blt => (a as i32) < (b as i32),
+                    BrOp::Bge => (a as i32) >= (b as i32),
+                    BrOp::Bltu => a < b,
+                    BrOp::Bgeu => a >= b,
+                };
+                self.ledger.add1(EventClass::CpuBranch);
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                    2
+                } else {
+                    1
+                }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let addr = self.reg(rs1).wrapping_add(imm as u32);
+                let v = match op {
+                    LdOp::Lb => self.lsu.read(LsuClient::Core, addr, 1)? as i8 as i32 as u32,
+                    LdOp::Lbu => self.lsu.read(LsuClient::Core, addr, 1)?,
+                    LdOp::Lh => self.lsu.read(LsuClient::Core, addr, 2)? as i16 as i32 as u32,
+                    LdOp::Lhu => self.lsu.read(LsuClient::Core, addr, 2)?,
+                    LdOp::Lw => self.lsu.read(LsuClient::Core, addr, 4)?,
+                };
+                self.set_reg(rd, v);
+                self.ledger.add1(EventClass::CpuMem);
+                2
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                let addr = self.reg(rs1).wrapping_add(imm as u32);
+                let v = self.reg(rs2);
+                match op {
+                    StOp::Sb => self.lsu.write(LsuClient::Core, addr, 1, v)?,
+                    StOp::Sh => self.lsu.write(LsuClient::Core, addr, 2, v)?,
+                    StOp::Sw => self.lsu.write(LsuClient::Core, addr, 4, v)?,
+                }
+                self.ledger.add1(EventClass::CpuMem);
+                2
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let v = alu(op, self.reg(rs1), imm as u32);
+                self.set_reg(rd, v);
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let v = alu(op, self.reg(rs1), self.reg(rs2));
+                self.set_reg(rd, v);
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::MulDiv { op, rd, rs1, rs2 } => {
+                let (a, b) = (self.reg(rs1), self.reg(rs2));
+                let v = muldiv(op, a, b);
+                self.set_reg(rd, v);
+                self.ledger.add1(EventClass::CpuMulDiv);
+                4
+            }
+            Instr::Fence => {
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Ecall => {
+                // Environment call: treated as a no-op service request.
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Ebreak => {
+                self.state = CpuState::Halted;
+                1
+            }
+            Instr::Wfi => {
+                self.state = CpuState::Sleeping;
+                self.ledger.add1(EventClass::CpuAlu);
+                1
+            }
+            Instr::Enu { funct, rd, rs1, rs2 } => {
+                let v = self
+                    .enu
+                    .execute(funct, self.reg(rs1), self.reg(rs2), &mut self.lsu)?;
+                self.set_reg(rd, v);
+                self.ledger.add1(EventClass::EnuIssue);
+                2
+            }
+        };
+        self.pc = next_pc;
+        self.instret += 1;
+        for _ in 0..cycles {
+            self.clocks.tick(true);
+        }
+        self.lsu.mmio.cycle_lo = self.lsu.mmio.cycle_lo.wrapping_add(cycles as u32);
+        Ok(cycles)
+    }
+
+    /// Run until halted/sleeping or `max_steps` instructions.
+    pub fn run(&mut self, max_steps: u64) -> Result<()> {
+        for _ in 0..max_steps {
+            match self.state {
+                CpuState::Halted | CpuState::Sleeping => return Ok(()),
+                CpuState::Running => {
+                    self.step()?;
+                }
+            }
+        }
+        Err(Error::Riscv(format!(
+            "program did not halt within {max_steps} steps (pc={:#x})",
+            self.pc
+        )))
+    }
+}
+
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+fn muldiv(op: MulOp, a: u32, b: u32) -> u32 {
+    match op {
+        MulOp::Mul => a.wrapping_mul(b),
+        MulOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+        MulOp::Mulhsu => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+        MulOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        MulOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                a // overflow: -2^31 / -1
+            } else {
+                ((a as i32) / (b as i32)) as u32
+            }
+        }
+        MulOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        MulOp::Rem => {
+            if b == 0 {
+                a
+            } else if a == 0x8000_0000 && b == u32::MAX {
+                0
+            } else {
+                ((a as i32) % (b as i32)) as u32
+            }
+        }
+        MulOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::asm::assemble;
+
+    fn run_asm(src: &str) -> Cpu {
+        let mut cpu = Cpu::new(64 * 1024, true);
+        cpu.load_program(&assemble(src).unwrap()).unwrap();
+        cpu.run(100_000).unwrap();
+        cpu
+    }
+
+    #[test]
+    fn arithmetic_program() {
+        let cpu = run_asm(
+            "
+            li   x1, 10
+            li   x2, 32
+            add  x3, x1, x2
+            sub  x4, x2, x1
+            mul  x5, x1, x2
+            ebreak
+            ",
+        );
+        assert_eq!(cpu.regs[3], 42);
+        assert_eq!(cpu.regs[4], 22);
+        assert_eq!(cpu.regs[5], 320);
+    }
+
+    #[test]
+    fn loop_with_branches() {
+        // sum 1..=10
+        let cpu = run_asm(
+            "
+            li   x1, 0      # acc
+            li   x2, 1      # i
+            li   x3, 11
+        loop:
+            add  x1, x1, x2
+            addi x2, x2, 1
+            blt  x2, x3, loop
+            ebreak
+            ",
+        );
+        assert_eq!(cpu.regs[1], 55);
+    }
+
+    #[test]
+    fn memory_roundtrip_and_signed_loads() {
+        let cpu = run_asm(
+            "
+            li   x1, 0x200
+            li   x2, -2
+            sw   x2, 0(x1)
+            lb   x3, 0(x1)
+            lbu  x4, 0(x1)
+            ebreak
+            ",
+        );
+        assert_eq!(cpu.regs[3], (-2i32) as u32);
+        assert_eq!(cpu.regs[4], 0xFE);
+    }
+
+    #[test]
+    fn div_by_zero_semantics() {
+        let cpu = run_asm(
+            "
+            li   x1, 7
+            li   x2, 0
+            div  x3, x1, x2
+            remu x4, x1, x2
+            ebreak
+            ",
+        );
+        assert_eq!(cpu.regs[3], u32::MAX);
+        assert_eq!(cpu.regs[4], 7);
+    }
+
+    #[test]
+    fn wfi_sleeps_until_wake() {
+        let mut cpu = Cpu::new(4096, true);
+        cpu.load_program(&assemble("li x1, 1\nwfi\nli x1, 2\nebreak").unwrap())
+            .unwrap();
+        cpu.run(1000).unwrap();
+        assert_eq!(cpu.state, CpuState::Sleeping);
+        assert_eq!(cpu.regs[1], 1);
+        // Gated cycles accumulate while sleeping.
+        for _ in 0..50 {
+            cpu.step().unwrap();
+        }
+        assert!(cpu.clocks.hf_gated >= 50);
+        assert!(cpu.wake(WakeEvent::NetworkFinish));
+        cpu.run(1000).unwrap();
+        assert_eq!(cpu.state, CpuState::Halted);
+        assert_eq!(cpu.regs[1], 2);
+    }
+
+    #[test]
+    fn wake_mask_filters_events() {
+        let mut cpu = Cpu::new(4096, true);
+        // Mask = network-finish only.
+        let prog = format!(
+            "li x1, 2\nli x2, {}\nsw x1, 0x24(x2)\nwfi\nebreak",
+            crate::riscv::lsu::MMIO_BASE
+        );
+        cpu.load_program(&assemble(&prog).unwrap()).unwrap();
+        cpu.run(1000).unwrap();
+        assert_eq!(cpu.state, CpuState::Sleeping);
+        assert!(!cpu.wake(WakeEvent::TimestepSwitch), "masked event");
+        assert!(cpu.wake(WakeEvent::NetworkFinish));
+    }
+
+    #[test]
+    fn enu_instruction_reaches_unit() {
+        let mut cpu = Cpu::new(4096, true);
+        // enu.start: custom-0, funct7=2, rs1=x1 (timesteps)
+        cpu.load_program(&assemble("li x1, 16\nenu.start x0, x1\nebreak").unwrap())
+            .unwrap();
+        cpu.run(100).unwrap();
+        assert_eq!(
+            cpu.enu.pop_command(),
+            Some(crate::riscv::enu::EnuCommand::NetworkStart { timesteps: 16 })
+        );
+    }
+
+    #[test]
+    fn x0_stays_zero() {
+        let cpu = run_asm("li x0, 55\naddi x0, x0, 1\nebreak");
+        assert_eq!(cpu.regs[0], 0);
+    }
+
+    #[test]
+    fn illegal_instruction_errors() {
+        let mut cpu = Cpu::new(4096, true);
+        cpu.load_program(&[0xFFFF_FFFF]).unwrap();
+        assert!(cpu.step().is_err());
+    }
+}

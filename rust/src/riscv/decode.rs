@@ -1,0 +1,433 @@
+//! RV32IM decoder (+ the custom-0 ENU opcode and `wfi` sleep), with the
+//! encoders the in-tree assembler uses. Decode/encode round-trip is
+//! property-tested.
+
+use crate::{Error, Result};
+
+/// ALU operation (register-register and register-immediate forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// Branch condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Load width/sign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LdOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+/// Store width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+/// M-extension operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    Jal { rd: u8, imm: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    Branch { op: BrOp, rs1: u8, rs2: u8, imm: i32 },
+    Load { op: LdOp, rd: u8, rs1: u8, imm: i32 },
+    Store { op: StOp, rs1: u8, rs2: u8, imm: i32 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    MulDiv { op: MulOp, rd: u8, rs1: u8, rs2: u8 },
+    Fence,
+    Ecall,
+    Ebreak,
+    /// `wfi` — the paper's sleep instruction (gates HFCLK).
+    Wfi,
+    /// Custom-0 ENU instruction: `funct7` selects the neuromorphic
+    /// operation, rs1/rs2 carry operands, rd receives status.
+    Enu { funct: u8, rd: u8, rs1: u8, rs2: u8 },
+}
+
+#[inline]
+fn bits(x: u32, hi: u32, lo: u32) -> u32 {
+    (x >> lo) & ((1 << (hi - lo + 1)) - 1)
+}
+
+#[inline]
+fn sext(x: u32, bits_: u32) -> i32 {
+    let shift = 32 - bits_;
+    ((x << shift) as i32) >> shift
+}
+
+/// Decode one 32-bit instruction word.
+pub fn decode(w: u32) -> Result<Instr> {
+    let opcode = bits(w, 6, 0);
+    let rd = bits(w, 11, 7) as u8;
+    let funct3 = bits(w, 14, 12);
+    let rs1 = bits(w, 19, 15) as u8;
+    let rs2 = bits(w, 24, 20) as u8;
+    let funct7 = bits(w, 31, 25);
+    let i_imm = sext(bits(w, 31, 20), 12);
+    let s_imm = sext((bits(w, 31, 25) << 5) | bits(w, 11, 7), 12);
+    let b_imm = sext(
+        (bits(w, 31, 31) << 12) | (bits(w, 7, 7) << 11) | (bits(w, 30, 25) << 5)
+            | (bits(w, 11, 8) << 1),
+        13,
+    );
+    let u_imm = (w & 0xFFFF_F000) as i32;
+    let j_imm = sext(
+        (bits(w, 31, 31) << 20) | (bits(w, 19, 12) << 12) | (bits(w, 20, 20) << 11)
+            | (bits(w, 30, 21) << 1),
+        21,
+    );
+
+    let bad = || Error::Riscv(format!("illegal instruction {w:#010x}"));
+
+    Ok(match opcode {
+        0x37 => Instr::Lui { rd, imm: u_imm },
+        0x17 => Instr::Auipc { rd, imm: u_imm },
+        0x6F => Instr::Jal { rd, imm: j_imm },
+        0x67 => Instr::Jalr { rd, rs1, imm: i_imm },
+        0x63 => {
+            let op = match funct3 {
+                0 => BrOp::Beq,
+                1 => BrOp::Bne,
+                4 => BrOp::Blt,
+                5 => BrOp::Bge,
+                6 => BrOp::Bltu,
+                7 => BrOp::Bgeu,
+                _ => return Err(bad()),
+            };
+            Instr::Branch { op, rs1, rs2, imm: b_imm }
+        }
+        0x03 => {
+            let op = match funct3 {
+                0 => LdOp::Lb,
+                1 => LdOp::Lh,
+                2 => LdOp::Lw,
+                4 => LdOp::Lbu,
+                5 => LdOp::Lhu,
+                _ => return Err(bad()),
+            };
+            Instr::Load { op, rd, rs1, imm: i_imm }
+        }
+        0x23 => {
+            let op = match funct3 {
+                0 => StOp::Sb,
+                1 => StOp::Sh,
+                2 => StOp::Sw,
+                _ => return Err(bad()),
+            };
+            Instr::Store { op, rs1, rs2, imm: s_imm }
+        }
+        0x13 => {
+            let op = match funct3 {
+                0 => AluOp::Add,
+                1 => {
+                    if funct7 != 0 {
+                        return Err(bad());
+                    }
+                    AluOp::Sll
+                }
+                2 => AluOp::Slt,
+                3 => AluOp::Sltu,
+                4 => AluOp::Xor,
+                5 => {
+                    if funct7 == 0x20 {
+                        AluOp::Sra
+                    } else if funct7 == 0 {
+                        AluOp::Srl
+                    } else {
+                        return Err(bad());
+                    }
+                }
+                6 => AluOp::Or,
+                7 => AluOp::And,
+                _ => return Err(bad()),
+            };
+            // Shift immediates use only the low 5 bits.
+            let imm = if matches!(op, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                (i_imm & 0x1F) as i32
+            } else {
+                i_imm
+            };
+            Instr::OpImm { op, rd, rs1, imm }
+        }
+        0x33 => {
+            if funct7 == 1 {
+                let op = match funct3 {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    7 => MulOp::Remu,
+                    _ => return Err(bad()),
+                };
+                Instr::MulDiv { op, rd, rs1, rs2 }
+            } else {
+                let op = match (funct3, funct7) {
+                    (0, 0x00) => AluOp::Add,
+                    (0, 0x20) => AluOp::Sub,
+                    (1, 0x00) => AluOp::Sll,
+                    (2, 0x00) => AluOp::Slt,
+                    (3, 0x00) => AluOp::Sltu,
+                    (4, 0x00) => AluOp::Xor,
+                    (5, 0x00) => AluOp::Srl,
+                    (5, 0x20) => AluOp::Sra,
+                    (6, 0x00) => AluOp::Or,
+                    (7, 0x00) => AluOp::And,
+                    _ => return Err(bad()),
+                };
+                Instr::Op { op, rd, rs1, rs2 }
+            }
+        }
+        0x0F => Instr::Fence,
+        0x73 => match w {
+            0x0000_0073 => Instr::Ecall,
+            0x0010_0073 => Instr::Ebreak,
+            0x1050_0073 => Instr::Wfi,
+            _ => return Err(bad()),
+        },
+        // custom-0 (0x0B): the ENU opcode space.
+        0x0B => Instr::Enu { funct: funct7 as u8, rd, rs1, rs2 },
+        _ => return Err(bad()),
+    })
+}
+
+// ======================= encoders (assembler backend) =====================
+
+fn r_type(funct7: u32, rs2: u8, rs1: u8, funct3: u32, rd: u8, opcode: u32) -> u32 {
+    (funct7 << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn i_type(imm: i32, rs1: u8, funct3: u32, rd: u8, opcode: u32) -> u32 {
+    (((imm as u32) & 0xFFF) << 20) | ((rs1 as u32) << 15) | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn s_type(imm: i32, rs2: u8, rs1: u8, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (bits(imm, 11, 5) << 25) | ((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (funct3 << 12)
+        | (bits(imm, 4, 0) << 7)
+        | opcode
+}
+
+fn b_type(imm: i32, rs2: u8, rs1: u8, funct3: u32) -> u32 {
+    let imm = imm as u32;
+    (bits(imm, 12, 12) << 31) | (bits(imm, 10, 5) << 25) | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | (bits(imm, 4, 1) << 8)
+        | (bits(imm, 11, 11) << 7)
+        | 0x63
+}
+
+fn j_type(imm: i32, rd: u8) -> u32 {
+    let imm = imm as u32;
+    (bits(imm, 20, 20) << 31) | (bits(imm, 10, 1) << 21) | (bits(imm, 11, 11) << 20)
+        | (bits(imm, 19, 12) << 12)
+        | ((rd as u32) << 7)
+        | 0x6F
+}
+
+/// Encode an instruction back to its 32-bit word.
+pub fn encode(i: &Instr) -> u32 {
+    use Instr::*;
+    match *i {
+        Lui { rd, imm } => ((imm as u32) & 0xFFFF_F000) | ((rd as u32) << 7) | 0x37,
+        Auipc { rd, imm } => ((imm as u32) & 0xFFFF_F000) | ((rd as u32) << 7) | 0x17,
+        Jal { rd, imm } => j_type(imm, rd),
+        Jalr { rd, rs1, imm } => i_type(imm, rs1, 0, rd, 0x67),
+        Branch { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                BrOp::Beq => 0,
+                BrOp::Bne => 1,
+                BrOp::Blt => 4,
+                BrOp::Bge => 5,
+                BrOp::Bltu => 6,
+                BrOp::Bgeu => 7,
+            };
+            b_type(imm, rs2, rs1, f3)
+        }
+        Load { op, rd, rs1, imm } => {
+            let f3 = match op {
+                LdOp::Lb => 0,
+                LdOp::Lh => 1,
+                LdOp::Lw => 2,
+                LdOp::Lbu => 4,
+                LdOp::Lhu => 5,
+            };
+            i_type(imm, rs1, f3, rd, 0x03)
+        }
+        Store { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                StOp::Sb => 0,
+                StOp::Sh => 1,
+                StOp::Sw => 2,
+            };
+            s_type(imm, rs2, rs1, f3, 0x23)
+        }
+        OpImm { op, rd, rs1, imm } => {
+            let (f3, high) = match op {
+                AluOp::Add => (0, 0),
+                AluOp::Sll => (1, 0),
+                AluOp::Slt => (2, 0),
+                AluOp::Sltu => (3, 0),
+                AluOp::Xor => (4, 0),
+                AluOp::Srl => (5, 0),
+                AluOp::Sra => (5, 0x20 << 5),
+                AluOp::Or => (6, 0),
+                AluOp::And => (7, 0),
+                AluOp::Sub => unreachable!("no subi"),
+            };
+            i_type(imm, rs1, f3, rd, 0x13) | (high << 20)
+        }
+        Op { op, rd, rs1, rs2 } => {
+            let (f3, f7) = match op {
+                AluOp::Add => (0, 0x00),
+                AluOp::Sub => (0, 0x20),
+                AluOp::Sll => (1, 0x00),
+                AluOp::Slt => (2, 0x00),
+                AluOp::Sltu => (3, 0x00),
+                AluOp::Xor => (4, 0x00),
+                AluOp::Srl => (5, 0x00),
+                AluOp::Sra => (5, 0x20),
+                AluOp::Or => (6, 0x00),
+                AluOp::And => (7, 0x00),
+            };
+            r_type(f7, rs2, rs1, f3, rd, 0x33)
+        }
+        MulDiv { op, rd, rs1, rs2 } => {
+            let f3 = match op {
+                MulOp::Mul => 0,
+                MulOp::Mulh => 1,
+                MulOp::Mulhsu => 2,
+                MulOp::Mulhu => 3,
+                MulOp::Div => 4,
+                MulOp::Divu => 5,
+                MulOp::Rem => 6,
+                MulOp::Remu => 7,
+            };
+            r_type(1, rs2, rs1, f3, rd, 0x33)
+        }
+        Fence => 0x0000_000F,
+        Ecall => 0x0000_0073,
+        Ebreak => 0x0010_0073,
+        Wfi => 0x1050_0073,
+        Enu { funct, rd, rs1, rs2 } => r_type(funct as u32, rs2, rs1, 0, rd, 0x0B),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn known_encodings() {
+        // addi x1, x0, 5
+        assert_eq!(
+            decode(0x0050_0093).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 }
+        );
+        // add x3, x1, x2
+        assert_eq!(
+            decode(0x0020_81B3).unwrap(),
+            Instr::Op { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }
+        );
+        // wfi
+        assert_eq!(decode(0x1050_0073).unwrap(), Instr::Wfi);
+        // mul x5, x6, x7
+        assert_eq!(
+            decode(0x0273_02B3).unwrap(),
+            Instr::MulDiv { op: MulOp::Mul, rd: 5, rs1: 6, rs2: 7 }
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(0xFFFF_FFFF).is_err());
+        assert!(decode(0x0000_0000).is_err());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        check("rv32im-roundtrip", 500, 0xC0FFEE, |r| {
+            let rd = r.below(32) as u8;
+            let rs1 = r.below(32) as u8;
+            let rs2 = r.below(32) as u8;
+            let instr = match r.below(12) {
+                0 => Instr::Lui { rd, imm: ((r.next_u32() as i32) & !0xFFF) },
+                1 => Instr::Jal { rd, imm: (r.range_i64(-(1 << 19), (1 << 19) - 1) as i32) * 2 },
+                2 => Instr::Jalr { rd, rs1, imm: r.range_i64(-2048, 2047) as i32 },
+                3 => Instr::Branch {
+                    op: BrOp::Bne,
+                    rs1,
+                    rs2,
+                    imm: (r.range_i64(-2048, 2047) as i32) * 2,
+                },
+                4 => Instr::Load { op: LdOp::Lw, rd, rs1, imm: r.range_i64(-2048, 2047) as i32 },
+                5 => Instr::Store { op: StOp::Sw, rs1, rs2, imm: r.range_i64(-2048, 2047) as i32 },
+                6 => Instr::OpImm { op: AluOp::Xor, rd, rs1, imm: r.range_i64(-2048, 2047) as i32 },
+                7 => Instr::Op { op: AluOp::Sub, rd, rs1, rs2 },
+                8 => Instr::MulDiv { op: MulOp::Divu, rd, rs1, rs2 },
+                9 => Instr::OpImm { op: AluOp::Sra, rd, rs1, imm: r.below(32) as i32 },
+                10 => Instr::Enu { funct: r.below(128) as u8, rd, rs1, rs2 },
+                _ => Instr::Wfi,
+            };
+            let w = encode(&instr);
+            let back = decode(w).unwrap_or_else(|e| panic!("{e} for {instr:?} ({w:#x})"));
+            assert_eq!(back, instr, "word {w:#010x}");
+        });
+    }
+
+    #[test]
+    fn branch_immediate_reconstruction() {
+        let i = Instr::Branch { op: BrOp::Beq, rs1: 1, rs2: 2, imm: -8 };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+        let i = Instr::Branch { op: BrOp::Bgeu, rs1: 31, rs2: 30, imm: 4094 };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+    }
+}

@@ -1,0 +1,183 @@
+//! Extended Neuromorphic Unit (ENU, paper §II.C): decodes the custom-0
+//! neuromorphic instructions and drives the neuromorphic bus.
+//!
+//! "A set of dedicated neuromorphic instructions (including network
+//! parameter initialization, core enable, network startup, etc.) has been
+//! extended for efficient control of the neuromorphic processor. […] The
+//! ENU generates dedicated control signals by decoding neuromorphic
+//! instructions and sends them to the neuromorphic processor through a
+//! neuromorphic bus."
+//!
+//! The ENU shares the LSU with the core: `NetParamInit` reads its
+//! parameter-table header through the LSU (arbitrated), then the command
+//! is queued on the neuromorphic bus for the SoC/coordinator to consume.
+
+use super::lsu::{Lsu, LsuClient};
+use crate::Result;
+use std::collections::VecDeque;
+
+/// funct7 encodings of the ENU instructions.
+pub mod funct {
+    /// Initialize network parameters: rs1 = table address, rs2 = words.
+    pub const NET_INIT: u8 = 0x00;
+    /// Enable/disable cores: rs1 = 20-bit core enable mask.
+    pub const CORE_EN: u8 = 0x01;
+    /// Start network computation: rs1 = number of timesteps.
+    pub const NET_START: u8 = 0x02;
+    /// Read network status into rd.
+    pub const NET_STATUS: u8 = 0x03;
+    /// Read result word: rs1 = output buffer index (0–3); into rd.
+    pub const RESULT_RD: u8 = 0x04;
+    /// Acknowledge a timestep-switch wake.
+    pub const TS_ACK: u8 = 0x05;
+    /// Stop/abort network computation.
+    pub const NET_STOP: u8 = 0x06;
+}
+
+/// A decoded neuromorphic command on the neuromorphic bus.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnuCommand {
+    /// Stream `words` 32-bit words of parameters from RAM `addr` to the
+    /// neuromorphic processor (the coordinator runs IDMA for this).
+    NetParamInit { addr: u32, words: u32 },
+    /// Core clock-gate enables, bit per core.
+    CoreEnable { mask: u32 },
+    /// Run the network for `timesteps`.
+    NetworkStart { timesteps: u32 },
+    /// Acknowledge timestep switch.
+    TimestepAck,
+    /// Abort.
+    NetworkStop,
+}
+
+/// The ENU: command queue + status plumbing.
+#[derive(Debug, Clone, Default)]
+pub struct EnuUnit {
+    queue: VecDeque<EnuCommand>,
+    /// Instructions decoded (energy accounting).
+    pub issued: u64,
+}
+
+impl EnuUnit {
+    /// Empty unit.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execute one custom-0 instruction. Returns the value for `rd`
+    /// (0 when the instruction produces none).
+    pub fn execute(
+        &mut self,
+        f: u8,
+        rs1_val: u32,
+        rs2_val: u32,
+        lsu: &mut Lsu,
+    ) -> Result<u32> {
+        self.issued += 1;
+        match f {
+            funct::NET_INIT => {
+                // Validate the table header through the shared LSU (this
+                // is the arbitrated access path the paper describes).
+                let _probe = lsu.read(LsuClient::Enu, rs1_val, 4)?;
+                self.queue.push_back(EnuCommand::NetParamInit {
+                    addr: rs1_val,
+                    words: rs2_val,
+                });
+                Ok(0)
+            }
+            funct::CORE_EN => {
+                self.queue.push_back(EnuCommand::CoreEnable { mask: rs1_val });
+                Ok(0)
+            }
+            funct::NET_START => {
+                lsu.mmio.npu_status |= 1; // busy
+                self.queue
+                    .push_back(EnuCommand::NetworkStart { timesteps: rs1_val });
+                Ok(0)
+            }
+            funct::NET_STATUS => Ok(lsu.mmio.npu_status),
+            funct::RESULT_RD => {
+                let idx = (rs1_val & 3) as usize;
+                Ok(lsu.mmio.result[idx])
+            }
+            funct::TS_ACK => {
+                self.queue.push_back(EnuCommand::TimestepAck);
+                Ok(0)
+            }
+            funct::NET_STOP => {
+                lsu.mmio.npu_status &= !1;
+                self.queue.push_back(EnuCommand::NetworkStop);
+                Ok(0)
+            }
+            other => Err(crate::Error::Riscv(format!(
+                "unknown ENU funct7 {other:#x}"
+            ))),
+        }
+    }
+
+    /// Pop the next command off the neuromorphic bus.
+    pub fn pop_command(&mut self) -> Option<EnuCommand> {
+        self.queue.pop_front()
+    }
+
+    /// Commands waiting on the bus.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commands_queue_in_order() {
+        let mut lsu = Lsu::new(1024);
+        let mut enu = EnuUnit::new();
+        enu.execute(funct::NET_INIT, 0x100, 16, &mut lsu).unwrap();
+        enu.execute(funct::CORE_EN, 0xFFFFF, 0, &mut lsu).unwrap();
+        enu.execute(funct::NET_START, 20, 0, &mut lsu).unwrap();
+        assert_eq!(
+            enu.pop_command(),
+            Some(EnuCommand::NetParamInit { addr: 0x100, words: 16 })
+        );
+        assert_eq!(enu.pop_command(), Some(EnuCommand::CoreEnable { mask: 0xFFFFF }));
+        assert_eq!(enu.pop_command(), Some(EnuCommand::NetworkStart { timesteps: 20 }));
+        assert_eq!(enu.pop_command(), None);
+        assert_eq!(enu.issued, 3);
+    }
+
+    #[test]
+    fn net_start_sets_busy_and_status_reads_it() {
+        let mut lsu = Lsu::new(64);
+        let mut enu = EnuUnit::new();
+        enu.execute(funct::NET_START, 5, 0, &mut lsu).unwrap();
+        assert_eq!(enu.execute(funct::NET_STATUS, 0, 0, &mut lsu).unwrap() & 1, 1);
+        enu.execute(funct::NET_STOP, 0, 0, &mut lsu).unwrap();
+        assert_eq!(enu.execute(funct::NET_STATUS, 0, 0, &mut lsu).unwrap() & 1, 0);
+    }
+
+    #[test]
+    fn result_read_returns_buffer_word() {
+        let mut lsu = Lsu::new(64);
+        lsu.mmio.result[1] = 0xDEAD;
+        let mut enu = EnuUnit::new();
+        assert_eq!(enu.execute(funct::RESULT_RD, 1, 0, &mut lsu).unwrap(), 0xDEAD);
+    }
+
+    #[test]
+    fn net_init_uses_shared_lsu() {
+        let mut lsu = Lsu::new(1024);
+        let mut enu = EnuUnit::new();
+        enu.execute(funct::NET_INIT, 0x40, 4, &mut lsu).unwrap();
+        assert_eq!(lsu.served_enu, 1, "header probe must go through the LSU");
+        assert!(lsu.conflicts >= 1);
+    }
+
+    #[test]
+    fn bad_funct_rejected() {
+        let mut lsu = Lsu::new(64);
+        let mut enu = EnuUnit::new();
+        assert!(enu.execute(0x7F, 0, 0, &mut lsu).is_err());
+    }
+}

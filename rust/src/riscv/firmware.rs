@@ -1,0 +1,162 @@
+//! Control firmware for the RISC-V CPU, written in the in-tree assembler.
+//!
+//! [`mnist_control`] is the paper's Fig. 6 workload: initialize network
+//! parameters, enable the cores, start the network, then sleep between
+//! timesteps (waking on timestep-switch) and finally read the result —
+//! the CPU spends most wall time gated, which is where the 0.434 mW /
+//! −43 % claim comes from.
+
+use super::asm::assemble;
+use crate::Result;
+
+/// The MNIST-style control loop (Fig. 6 workload).
+///
+/// Protocol:
+/// 1. `enu.init` streams the parameter table (addr `0x400`, `words`).
+/// 2. `enu.coreen` enables all 20 cores.
+/// 3. `enu.start` launches `timesteps` timesteps.
+/// 4. Loop: `wfi` until woken; on wake check status — if the network is
+///    still busy, `enu.tsack` and sleep again; else read result word 0.
+/// 5. `ebreak`.
+pub fn mnist_control(timesteps: u32, param_words: u32) -> Result<Vec<u32>> {
+    let src = format!(
+        "
+        # -- initialization ------------------------------------
+        li   x10, 0x400          # parameter table address
+        li   x11, {param_words}  # parameter words
+        enu.init x10, x11
+        li   x12, 0xFFFFF        # 20-core enable mask
+        enu.coreen x12
+        li   x13, {timesteps}
+        enu.start x0, x13
+        # -- per-timestep sleep loop ----------------------------
+    tsloop:
+        wfi
+        enu.status x14           # bit0 = busy
+        andi x15, x14, 1
+        beqz x15, done           # network finished
+        enu.tsack
+        j    tsloop
+        # -- read back result -----------------------------------
+    done:
+        li   x16, 0
+        enu.result x17, x16      # winning class word
+        ebreak
+        "
+    );
+    assemble(&src)
+}
+
+/// Busy-poll variant used as the *no-sleep* ablation: identical protocol
+/// but spins on `enu.status` instead of `wfi` (the CPU never gates).
+pub fn mnist_control_busywait(timesteps: u32, param_words: u32) -> Result<Vec<u32>> {
+    let src = format!(
+        "
+        li   x10, 0x400
+        li   x11, {param_words}
+        enu.init x10, x11
+        li   x12, 0xFFFFF
+        enu.coreen x12
+        li   x13, {timesteps}
+        enu.start x0, x13
+    poll:
+        enu.status x14
+        andi x15, x14, 1
+        bnez x15, poll
+        li   x16, 0
+        enu.result x17, x16
+        ebreak
+        "
+    );
+    assemble(&src)
+}
+
+/// A pure-compute benchmark kernel (no ENU): sums and multiplies over a
+/// small array — used to measure active-mode CPU power in isolation.
+pub fn compute_kernel(iterations: u32) -> Result<Vec<u32>> {
+    let src = format!(
+        "
+        li   x1, 0          # acc
+        li   x2, 0          # i
+        li   x3, {iterations}
+    loop:
+        mul  x4, x2, x2
+        add  x1, x1, x4
+        addi x2, x2, 1
+        blt  x2, x3, loop
+        ebreak
+        "
+    );
+    assemble(&src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
+    use crate::riscv::enu::EnuCommand;
+
+    #[test]
+    fn mnist_firmware_issues_protocol_then_sleeps() {
+        let mut cpu = Cpu::new(64 * 1024, true);
+        cpu.load_program(&mnist_control(10, 64).unwrap()).unwrap();
+        cpu.run(10_000).unwrap();
+        assert_eq!(cpu.state, CpuState::Sleeping);
+        assert_eq!(
+            cpu.enu.pop_command(),
+            Some(EnuCommand::NetParamInit { addr: 0x400, words: 64 })
+        );
+        assert_eq!(cpu.enu.pop_command(), Some(EnuCommand::CoreEnable { mask: 0xFFFFF }));
+        assert_eq!(cpu.enu.pop_command(), Some(EnuCommand::NetworkStart { timesteps: 10 }));
+    }
+
+    #[test]
+    fn wake_cycle_acks_timesteps_until_done() {
+        let mut cpu = Cpu::new(64 * 1024, true);
+        cpu.load_program(&mnist_control(3, 8).unwrap()).unwrap();
+        cpu.run(10_000).unwrap(); // runs to first wfi
+        while cpu.enu.pop_command().is_some() {}
+        // Simulate 3 timestep wakes with busy status, then finish.
+        for _ in 0..3 {
+            cpu.lsu.mmio.npu_status |= 1;
+            assert!(cpu.wake(WakeEvent::TimestepSwitch));
+            cpu.run(10_000).unwrap();
+            assert_eq!(cpu.state, CpuState::Sleeping);
+            assert_eq!(cpu.enu.pop_command(), Some(EnuCommand::TimestepAck));
+        }
+        cpu.lsu.mmio.npu_status &= !1;
+        cpu.lsu.mmio.result[0] = 7;
+        assert!(cpu.wake(WakeEvent::NetworkFinish));
+        cpu.run(10_000).unwrap();
+        assert_eq!(cpu.state, CpuState::Halted);
+        assert_eq!(cpu.regs[17], 7, "read the result word");
+    }
+
+    #[test]
+    fn busywait_variant_never_sleeps() {
+        let mut cpu = Cpu::new(64 * 1024, true);
+        cpu.load_program(&mnist_control_busywait(3, 8).unwrap())
+            .unwrap();
+        // Finish immediately so the poll loop exits.
+        for _ in 0..2000 {
+            if cpu.state != CpuState::Running {
+                break;
+            }
+            cpu.step().unwrap();
+            // Clear busy after a while.
+            if cpu.instret == 500 {
+                cpu.lsu.mmio.npu_status &= !1;
+            }
+        }
+        assert_eq!(cpu.state, CpuState::Halted);
+        assert_eq!(cpu.clocks.hf_gated, 0);
+    }
+
+    #[test]
+    fn compute_kernel_sums_squares() {
+        let mut cpu = Cpu::new(4096, true);
+        cpu.load_program(&compute_kernel(10).unwrap()).unwrap();
+        cpu.run(1000).unwrap();
+        assert_eq!(cpu.regs[1], (0..10).map(|i| i * i).sum::<u32>());
+    }
+}

@@ -1,0 +1,226 @@
+//! Load-and-store unit, shared between the RISC-V core and the ENU
+//! (paper: "the ENU and RISC-V core share a load-and-store unit (LSU)
+//! together. During working, the ENU controller sends an instruction
+//! access request to LSU, and then the LSU arbitrates the requests…").
+//!
+//! Memory map:
+//!
+//! | range | what |
+//! |---|---|
+//! | `0x0000_0000 .. RAM_SIZE` | SRAM (code + data) |
+//! | `0x1000_0000 ..` | MMIO: neuromorphic-processor registers |
+//!
+//! MMIO registers (word offsets from [`MMIO_BASE`]):
+//! `0x00` NPU status (bit0 busy, bit1 result-ready, bits 16.. timestep),
+//! `0x04..0x14` result output buffers 0–3 read ports, `0x20` cycle
+//! counter low, `0x24` wake-mask control.
+
+use crate::{Error, Result};
+
+/// Base of the MMIO window.
+pub const MMIO_BASE: u32 = 0x1000_0000;
+
+/// Default RAM size (64 KiB — matches a small MCU-class SoC).
+pub const DEFAULT_RAM: usize = 64 * 1024;
+
+/// MMIO register file mirrored between CPU and neuromorphic processor.
+#[derive(Debug, Clone, Default)]
+pub struct MmioRegs {
+    /// bit0 = network busy, bit1 = result ready; bits 16.. = timestep.
+    pub npu_status: u32,
+    /// Output-buffer read ports (head word of each of the 4 buffers).
+    pub result: [u32; 4],
+    /// Free-running cycle counter (LF domain).
+    pub cycle_lo: u32,
+    /// Wake-event mask (bit0 timestep-switch, bit1 network-finish).
+    pub wake_mask: u32,
+}
+
+/// Who issued an LSU request (arbitration accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LsuClient {
+    /// The RISC-V core datapath.
+    Core,
+    /// The extended neuromorphic unit.
+    Enu,
+}
+
+/// The shared LSU: RAM + MMIO dispatch + arbitration counters.
+#[derive(Debug, Clone)]
+pub struct Lsu {
+    ram: Vec<u8>,
+    /// MMIO registers (the SoC glue reads/writes these from outside).
+    pub mmio: MmioRegs,
+    /// Requests served per client.
+    pub served_core: u64,
+    /// Requests served for the ENU.
+    pub served_enu: u64,
+    /// Same-cycle conflicts arbitrated (ENU priority; core stalls 1 cy).
+    pub conflicts: u64,
+}
+
+impl Lsu {
+    /// LSU with `ram_size` bytes of zeroed RAM.
+    pub fn new(ram_size: usize) -> Self {
+        Lsu {
+            ram: vec![0; ram_size],
+            mmio: MmioRegs::default(),
+            served_core: 0,
+            served_enu: 0,
+            conflicts: 0,
+        }
+    }
+
+    /// RAM size in bytes.
+    pub fn ram_size(&self) -> usize {
+        self.ram.len()
+    }
+
+    /// Load a program/data image at `addr`.
+    pub fn load_image(&mut self, addr: u32, bytes: &[u8]) -> Result<()> {
+        let a = addr as usize;
+        if a + bytes.len() > self.ram.len() {
+            return Err(Error::Riscv(format!(
+                "image of {} bytes at {addr:#x} exceeds RAM",
+                bytes.len()
+            )));
+        }
+        self.ram[a..a + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    fn check(&self, addr: u32, len: u32) -> Result<usize> {
+        let a = addr as usize;
+        if addr % len != 0 {
+            return Err(Error::Riscv(format!("misaligned {len}-byte access at {addr:#x}")));
+        }
+        if a + len as usize > self.ram.len() {
+            return Err(Error::Riscv(format!("bus fault: load/store at {addr:#x}")));
+        }
+        Ok(a)
+    }
+
+    /// Read `len ∈ {1,2,4}` bytes (little-endian) as an unsigned value.
+    pub fn read(&mut self, client: LsuClient, addr: u32, len: u32) -> Result<u32> {
+        self.account(client);
+        if addr >= MMIO_BASE {
+            return self.mmio_read(addr - MMIO_BASE);
+        }
+        let a = self.check(addr, len)?;
+        let mut v = 0u32;
+        for i in 0..len as usize {
+            v |= (self.ram[a + i] as u32) << (8 * i);
+        }
+        Ok(v)
+    }
+
+    /// Write `len ∈ {1,2,4}` bytes (little-endian).
+    pub fn write(&mut self, client: LsuClient, addr: u32, len: u32, value: u32) -> Result<()> {
+        self.account(client);
+        if addr >= MMIO_BASE {
+            return self.mmio_write(addr - MMIO_BASE, value);
+        }
+        let a = self.check(addr, len)?;
+        for i in 0..len as usize {
+            self.ram[a + i] = (value >> (8 * i)) as u8;
+        }
+        Ok(())
+    }
+
+    /// Instruction fetch (no arbitration charge: separate fetch port).
+    pub fn fetch(&self, pc: u32) -> Result<u32> {
+        let a = pc as usize;
+        if pc % 4 != 0 || a + 4 > self.ram.len() {
+            return Err(Error::Riscv(format!("fetch fault at {pc:#x}")));
+        }
+        Ok(u32::from_le_bytes(self.ram[a..a + 4].try_into().unwrap()))
+    }
+
+    fn account(&mut self, client: LsuClient) {
+        match client {
+            LsuClient::Core => self.served_core += 1,
+            LsuClient::Enu => {
+                self.served_enu += 1;
+                // ENU has priority: a concurrent core access would stall.
+                self.conflicts += 1;
+            }
+        }
+    }
+
+    fn mmio_read(&self, off: u32) -> Result<u32> {
+        Ok(match off {
+            0x00 => self.mmio.npu_status,
+            0x04 => self.mmio.result[0],
+            0x08 => self.mmio.result[1],
+            0x0C => self.mmio.result[2],
+            0x10 => self.mmio.result[3],
+            0x20 => self.mmio.cycle_lo,
+            0x24 => self.mmio.wake_mask,
+            _ => return Err(Error::Riscv(format!("MMIO read at bad offset {off:#x}"))),
+        })
+    }
+
+    fn mmio_write(&mut self, off: u32, v: u32) -> Result<()> {
+        match off {
+            0x24 => self.mmio.wake_mask = v,
+            // Status is set by the neuromorphic side; software may clear
+            // the result-ready bit by writing it.
+            0x00 => self.mmio.npu_status &= !(v & 0b10),
+            _ => return Err(Error::Riscv(format!("MMIO write at bad offset {off:#x}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ram_rw_little_endian() {
+        let mut l = Lsu::new(1024);
+        l.write(LsuClient::Core, 0x10, 4, 0xAABBCCDD).unwrap();
+        assert_eq!(l.read(LsuClient::Core, 0x10, 4).unwrap(), 0xAABBCCDD);
+        assert_eq!(l.read(LsuClient::Core, 0x10, 1).unwrap(), 0xDD);
+        assert_eq!(l.read(LsuClient::Core, 0x12, 2).unwrap(), 0xAABB);
+    }
+
+    #[test]
+    fn misaligned_and_oob_fault() {
+        let mut l = Lsu::new(64);
+        assert!(l.read(LsuClient::Core, 1, 4).is_err());
+        assert!(l.read(LsuClient::Core, 64, 4).is_err());
+        assert!(l.write(LsuClient::Core, 62, 4, 0).is_err());
+        assert!(l.fetch(2).is_err());
+    }
+
+    #[test]
+    fn mmio_status_and_results() {
+        let mut l = Lsu::new(64);
+        l.mmio.npu_status = 0b11 | (7 << 16);
+        l.mmio.result[2] = 42;
+        assert_eq!(l.read(LsuClient::Core, MMIO_BASE, 4).unwrap(), 0b11 | (7 << 16));
+        assert_eq!(l.read(LsuClient::Core, MMIO_BASE + 0x0C, 4).unwrap(), 42);
+        // Clearing result-ready via write.
+        l.write(LsuClient::Core, MMIO_BASE, 4, 0b10).unwrap();
+        assert_eq!(l.mmio.npu_status & 0b10, 0);
+    }
+
+    #[test]
+    fn arbitration_counters() {
+        let mut l = Lsu::new(64);
+        l.read(LsuClient::Core, 0, 4).unwrap();
+        l.read(LsuClient::Enu, 0, 4).unwrap();
+        assert_eq!(l.served_core, 1);
+        assert_eq!(l.served_enu, 1);
+        assert_eq!(l.conflicts, 1);
+    }
+
+    #[test]
+    fn image_loading() {
+        let mut l = Lsu::new(64);
+        l.load_image(8, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(l.read(LsuClient::Core, 8, 4).unwrap(), 0x04030201);
+        assert!(l.load_image(62, &[0; 4]).is_err());
+    }
+}

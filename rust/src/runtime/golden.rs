@@ -1,0 +1,91 @@
+//! The golden functional model: an AOT-compiled JAX network step executed
+//! through PJRT, used to validate the cycle simulator bit-for-bit.
+
+use super::client::XlaExec;
+use crate::datasets::Sample;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded golden model for one network.
+pub struct GoldenModel {
+    exe: XlaExec,
+    /// Input width the model expects.
+    pub inputs: usize,
+    /// Timesteps the model expects.
+    pub timesteps: usize,
+    /// Classes it returns counts for.
+    pub classes: usize,
+}
+
+impl GoldenModel {
+    /// Load `artifacts/<name>.hlo.txt` plus its shape sidecar
+    /// `artifacts/<name>.meta.json`.
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<GoldenModel> {
+        let hlo = artifacts_dir.join(format!("{name}.hlo.txt"));
+        let meta_path = artifacts_dir.join(format!("{name}.meta.json"));
+        let meta = crate::util::json::Json::read_file(&meta_path)?;
+        Ok(GoldenModel {
+            exe: XlaExec::load_hlo_text(&hlo)?,
+            inputs: meta.get("inputs")?.as_usize()?,
+            timesteps: meta.get("timesteps")?.as_usize()?,
+            classes: meta.get("classes")?.as_usize()?,
+        })
+    }
+
+    /// Default artifacts directory (`$FSOC_ARTIFACTS` or `./artifacts`).
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("FSOC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Run one sample: returns per-class output spike counts.
+    pub fn run_sample(&self, sample: &Sample) -> Result<Vec<u32>> {
+        let raster = sample.to_raster(self.timesteps, self.inputs);
+        self.run_raster(&raster)
+    }
+
+    /// Run a dense raster (`timesteps × inputs`).
+    pub fn run_raster(&self, raster: &[Vec<bool>]) -> Result<Vec<u32>> {
+        if raster.len() != self.timesteps {
+            return Err(Error::Runtime(format!(
+                "raster has {} timesteps, model expects {}",
+                raster.len(),
+                self.timesteps
+            )));
+        }
+        let mut flat = Vec::with_capacity(self.timesteps * self.inputs);
+        for row in raster {
+            if row.len() != self.inputs {
+                return Err(Error::Runtime(format!(
+                    "raster row has {} inputs, model expects {}",
+                    row.len(),
+                    self.inputs
+                )));
+            }
+            flat.extend(row.iter().map(|&b| b as i32));
+        }
+        let out = self
+            .exe
+            .run_i32(&[(&flat, &[self.timesteps, self.inputs])])?;
+        if out.len() != self.classes {
+            return Err(Error::Runtime(format!(
+                "model returned {} outputs, expected {}",
+                out.len(),
+                self.classes
+            )));
+        }
+        Ok(out.into_iter().map(|v| v.max(0) as u32).collect())
+    }
+
+    /// Classify: argmax (ties → lowest class), matching the chip rule.
+    pub fn classify(&self, sample: &Sample) -> Result<usize> {
+        let counts = self.run_sample(sample)?;
+        Ok(counts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX golden model
+//! (`artifacts/*.hlo.txt`, HLO **text** — see `python/compile/aot.py` and
+//! `/opt/xla-example/README.md` for why text, not serialized protos) and
+//! executes it from Rust.
+//!
+//! The golden model is the *functional* definition of the chip's
+//! arithmetic: the same quantized integer network the mapper loads into
+//! the cycle simulator, lowered through JAX (whose hot spot is the Pallas
+//! sparse-codebook kernel). Integration tests assert the cycle simulator
+//! and the XLA execution produce identical output spike counts.
+
+pub mod client;
+pub mod golden;
+
+pub use client::XlaExec;
+pub use golden::GoldenModel;

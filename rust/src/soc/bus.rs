@@ -1,0 +1,74 @@
+//! The neuromorphic bus: the 32-bit interconnect between the CPU/ENU,
+//! the neuromorphic controller, the DMA engines and the external-memory
+//! interface (Fig. 7). Modeled as a beat counter with energy accounting
+//! and a simple occupancy model (one beat per cycle).
+
+use crate::energy::{EnergyLedger, EventClass};
+
+/// Bus transaction kinds (telemetry only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusOp {
+    /// ENU control write toward the neuromorphic controller.
+    Control,
+    /// DMA descriptor / data beat.
+    Dma,
+    /// External-memory window access.
+    ExtMem,
+    /// Result/output-buffer read.
+    Result,
+}
+
+/// The bus model.
+#[derive(Debug, Clone, Default)]
+pub struct NeuroBus {
+    /// Total beats transferred.
+    pub beats: u64,
+    /// Beats by kind.
+    pub control_beats: u64,
+    /// DMA beats.
+    pub dma_beats: u64,
+    /// Ext-mem beats.
+    pub extmem_beats: u64,
+    /// Result beats.
+    pub result_beats: u64,
+}
+
+impl NeuroBus {
+    /// New idle bus.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Transfer `beats` 32-bit beats of kind `op`; charges bus energy and
+    /// returns the cycles consumed (1 beat/cycle).
+    pub fn transfer(&mut self, op: BusOp, beats: u64, ledger: &mut EnergyLedger) -> u64 {
+        self.beats += beats;
+        match op {
+            BusOp::Control => self.control_beats += beats,
+            BusOp::Dma => self.dma_beats += beats,
+            BusOp::ExtMem => self.extmem_beats += beats,
+            BusOp::Result => self.result_beats += beats,
+        }
+        ledger.add(EventClass::BusBeat, beats);
+        beats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyParams;
+
+    #[test]
+    fn beats_accumulate_and_charge() {
+        let mut bus = NeuroBus::new();
+        let mut l = EnergyLedger::new();
+        let cycles = bus.transfer(BusOp::Dma, 16, &mut l);
+        bus.transfer(BusOp::Control, 2, &mut l);
+        assert_eq!(cycles, 16);
+        assert_eq!(bus.beats, 18);
+        assert_eq!(bus.dma_beats, 16);
+        let p = EnergyParams::nominal();
+        assert!((l.dynamic_pj(&p) - 18.0 * p.e_bus_beat).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,666 @@
+//! The assembled SoC: RISC-V CPU (+ENU) ⇄ neuromorphic processor
+//! (20 cores + fullerene NoC) ⇄ DMA/output-buffer plumbing, executing
+//! event-stream workloads end-to-end under the calibrated energy model.
+//!
+//! Execution model of one sample (one inference):
+//!
+//! 1. **Boot** (once per [`Soc`]): the MNIST control firmware runs on the
+//!    CPU; its ENU commands are consumed — `NetParamInit` streams the
+//!    weight-index tables through IDMA, `CoreEnable` ungates the mapped
+//!    cores, `NetworkStart` marks the network busy.
+//! 2. **Per timestep** `t`: input events are DMA'd into the layer-0
+//!    cores' ping-pong caches; each layer is ticked in order, its output
+//!    spikes **broadcast** through the fullerene NoC to the cores of the
+//!    next layer (the CMRouter broadcast mode — one flit copy per
+//!    destination core, cheap per-hop energy); final-layer spikes land in
+//!    output buffer 0. The CPU is woken by the timestep-switch signal,
+//!    acknowledges via `enu.tsack`, and goes back to sleep.
+//! 3. **Finish**: the network-finish wake lets the firmware read the
+//!    result word (`winner << 16 | spike_count`) through `enu.result`.
+//!
+//! Timestep wall-cycle model (documented, deliberately serial): layers
+//! execute back-to-back within a timestep (the chip pipelines them across
+//! timesteps; serialization is the conservative bound), so
+//! `ts_cycles = Σ_layers max(core cycles) + NoC drain + DMA cycles`.
+
+use super::bus::NeuroBus;
+use super::clockmgr::ClockManager;
+use super::dma::{Dma, DmaKind};
+use super::outbuf::OutputBuffers;
+use crate::core::NeuroCore;
+use crate::datasets::{Dataset, Sample};
+use crate::energy::{AreaModel, ChipReport, EnergyLedger, EnergyParams};
+use crate::nn::{Mapping, NetworkDesc};
+use crate::noc::{Dest, NocSim, Topology};
+use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
+use crate::riscv::enu::EnuCommand;
+use crate::riscv::firmware;
+use crate::{Error, Result};
+
+/// SoC configuration.
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    /// Physical neuromorphic cores (paper: 20).
+    pub n_cores: usize,
+    /// Max neurons per core (paper: 8192).
+    pub max_neurons_per_core: usize,
+    /// NoC FIFO depth per port.
+    pub fifo_depth: usize,
+    /// Neuromorphic-processor clock (Hz).
+    pub f_core_hz: f64,
+    /// RISC-V clock (Hz).
+    pub f_cpu_hz: f64,
+    /// Supply voltage (V).
+    pub supply_v: f64,
+    /// Route inter-layer spikes through the cycle-accurate NoC simulator
+    /// (true) or an ideal zero-latency fabric (false — for fast sweeps;
+    /// energy is still charged per hop from the topology distances).
+    pub use_noc: bool,
+    /// Run the RISC-V firmware protocol (false = drive the neuromorphic
+    /// processor directly, for benches isolating the cores).
+    pub drive_cpu: bool,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        SocConfig {
+            n_cores: 20,
+            max_neurons_per_core: 8192,
+            fifo_depth: 4,
+            f_core_hz: 100.0e6,
+            f_cpu_hz: 50.0e6,
+            supply_v: crate::energy::constants::V_NOM,
+            use_noc: true,
+            drive_cpu: true,
+        }
+    }
+}
+
+/// Result of one inference.
+#[derive(Debug, Clone)]
+pub struct SampleResult {
+    /// Predicted class.
+    pub predicted: usize,
+    /// Per-class output spike counts.
+    pub counts: Vec<u32>,
+    /// Whether the prediction matched the label.
+    pub correct: bool,
+    /// Core-clock cycles consumed by this sample.
+    pub cycles: u64,
+    /// Synapse operations performed.
+    pub sops: u64,
+    /// Spike flits routed through the NoC.
+    pub spikes_routed: u64,
+}
+
+/// The assembled chip.
+pub struct Soc {
+    /// Configuration.
+    pub config: SocConfig,
+    net: NetworkDesc,
+    mapping: Mapping,
+    cores: Vec<NeuroCore>,
+    /// physical core id → index into `cores` (usize::MAX = unused).
+    core_index: Vec<usize>,
+    noc: NocSim,
+    /// The control CPU.
+    pub cpu: Cpu,
+    bus: NeuroBus,
+    idma: Dma,
+    mpdma: Dma,
+    outbufs: OutputBuffers,
+    clocks: ClockManager,
+    energy: EnergyParams,
+    area: AreaModel,
+    ledger: EnergyLedger,
+    booted: bool,
+    params_loaded: bool,
+    // --- run accounting ---------------------------------------------------
+    total_cycles: u64,
+    total_sops: u64,
+    spikes_routed: u64,
+    samples_run: u64,
+    correct: u64,
+    /// Cached hop distance core→core for the ideal-fabric energy charge.
+    hop_table: Vec<Vec<u32>>,
+}
+
+impl Soc {
+    /// Assemble a chip running `net` under `config`.
+    pub fn new(net: NetworkDesc, config: SocConfig) -> Result<Soc> {
+        net.validate()?;
+        let energy = EnergyParams::nominal().at_voltage(config.supply_v);
+        let mapping = Mapping::plan(&net, config.n_cores, config.max_neurons_per_core)?;
+        let cores = mapping.build_cores(&net, &energy)?;
+        let mut core_index = vec![usize::MAX; config.n_cores];
+        for (i, p) in mapping.placements.iter().enumerate() {
+            core_index[p.core_id] = i;
+        }
+        let topo = Topology::fullerene();
+        if config.n_cores > topo.cores().len() {
+            return Err(Error::Soc(format!(
+                "{} cores requested but the fullerene domain has {}",
+                config.n_cores,
+                topo.cores().len()
+            )));
+        }
+        // Router-hop distances between cores (for the ideal fabric).
+        let mut hop_table = vec![vec![0u32; topo.cores().len()]; topo.cores().len()];
+        for (i, &ci) in topo.cores().iter().enumerate() {
+            let d = topo.bfs(ci);
+            for (j, &cj) in topo.cores().iter().enumerate() {
+                hop_table[i][j] = (d[cj] / 2) as u32;
+            }
+        }
+        let noc = NocSim::new(topo, config.fifo_depth, energy.clone());
+        let clocks = ClockManager::new(config.f_core_hz, config.f_cpu_hz, energy.p_clock_tree)?;
+        Ok(Soc {
+            cpu: Cpu::new(64 * 1024, true),
+            bus: NeuroBus::new(),
+            idma: Dma::new(DmaKind::Idma),
+            mpdma: Dma::new(DmaKind::Mpdma),
+            outbufs: OutputBuffers::new(),
+            ledger: EnergyLedger::new(),
+            area: AreaModel::paper_chip(),
+            booted: false,
+            params_loaded: false,
+            total_cycles: 0,
+            total_sops: 0,
+            spikes_routed: 0,
+            samples_run: 0,
+            correct: 0,
+            hop_table,
+            net,
+            mapping,
+            cores,
+            core_index,
+            noc,
+            clocks,
+            energy,
+            config,
+        })
+    }
+
+    /// The mapped network.
+    pub fn network(&self) -> &NetworkDesc {
+        &self.net
+    }
+
+    /// The core mapping.
+    pub fn mapping(&self) -> &Mapping {
+        &self.mapping
+    }
+
+    /// Total core-clock cycles so far.
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// Boot the control CPU: run the firmware protocol and consume the
+    /// resulting ENU commands. No-op when `drive_cpu` is false.
+    fn boot(&mut self) -> Result<()> {
+        self.booted = true;
+        if !self.config.drive_cpu {
+            // Directly enable mapped cores.
+            for c in &mut self.cores {
+                c.set_enabled(true);
+            }
+            return Ok(());
+        }
+        let param_words = (self.net.total_synapses() as u64
+            * self.net.layers[0].codebook.index_bits() as u64)
+            .div_ceil(16) as u32;
+        let prog = firmware::mnist_control(self.net.timesteps as u32, param_words.max(1))?;
+        self.cpu.load_program(&prog)?;
+        self.cpu.run(1_000_000)?;
+        if self.cpu.state != CpuState::Sleeping {
+            return Err(Error::Soc("firmware did not reach the sleep loop".into()));
+        }
+        self.drain_enu_commands()?;
+        Ok(())
+    }
+
+    /// Apply pending ENU commands to the neuromorphic processor.
+    fn drain_enu_commands(&mut self) -> Result<()> {
+        while let Some(cmd) = self.cpu.enu.pop_command() {
+            match cmd {
+                EnuCommand::NetParamInit { words, .. } => {
+                    if !self.params_loaded {
+                        self.params_loaded = true;
+                        let cycles =
+                            self.idma
+                                .burst(words as u64, &mut self.bus, &mut self.ledger);
+                        self.total_cycles += cycles;
+                        // The staged words land in the cores' caches.
+                        let per_core = words as u64 / self.cores.len().max(1) as u64;
+                        for c in &mut self.cores {
+                            c.charge_cache_writes(per_core);
+                        }
+                    }
+                }
+                EnuCommand::CoreEnable { mask } => {
+                    for (i, p) in self.mapping.placements.iter().enumerate() {
+                        self.cores[i].set_enabled(mask >> p.core_id & 1 == 1);
+                    }
+                }
+                EnuCommand::NetworkStart { .. } => {
+                    self.cpu.lsu.mmio.npu_status |= 1;
+                }
+                EnuCommand::TimestepAck | EnuCommand::NetworkStop => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Let the CPU run for a window of `core_cycles` (converted to its own
+    /// clock), optionally delivering a wake event first.
+    fn run_cpu_window(&mut self, core_cycles: u64, wake: Option<WakeEvent>) -> Result<()> {
+        if !self.config.drive_cpu {
+            return Ok(());
+        }
+        if let Some(ev) = wake {
+            self.cpu.wake(ev);
+        }
+        let budget = self.clocks.cpu_cycles_for(core_cycles).max(1);
+        let mut spent = 0u64;
+        // Run until the firmware sleeps again (overrunning the budget is
+        // fine — the CPU clock is slower than the window in practice).
+        while self.cpu.state == CpuState::Running {
+            spent += self.cpu.step()?;
+            if spent > 1_000_000 {
+                return Err(Error::Soc("firmware runaway in timestep window".into()));
+            }
+        }
+        // Remaining window cycles are slept through (gated).
+        while spent < budget && self.cpu.state == CpuState::Sleeping {
+            spent += self.cpu.step()?;
+        }
+        self.drain_enu_commands()?;
+        Ok(())
+    }
+
+    /// Deliver spikes from layer `li` cores to layer `li+1` cores through
+    /// the NoC (or the ideal fabric). `firing` holds (physical core id,
+    /// axon id in the next layer's input space). Returns NoC cycles.
+    fn route_spikes(&mut self, li: usize, firing: &[(usize, u32)]) -> Result<u64> {
+        let Some(dst_cores) = self.mapping.dest_cores_after(li) else {
+            return Ok(0);
+        };
+        let dst_cores = dst_cores.to_vec();
+        self.spikes_routed += firing.len() as u64 * dst_cores.len() as u64;
+        if self.config.use_noc {
+            let start = self.noc.cycle();
+            let already_delivered = self.noc.delivered().len();
+            for &(src, axon) in firing {
+                self.noc.inject(src, &Dest::Cores(dst_cores.clone()), axon);
+            }
+            self.noc.run_until_drained(1_000_000)?;
+            // Group only the *fresh* deliveries per destination core
+            // (delivered() accumulates across the whole run).
+            let mut per_core: Vec<Vec<u32>> = vec![Vec::new(); self.config.n_cores];
+            for d in &self.noc.delivered()[already_delivered..] {
+                per_core[d.flit.dst_core].push(d.flit.axon);
+            }
+            for (dst, axons) in per_core.iter().enumerate() {
+                if axons.is_empty() {
+                    continue;
+                }
+                let idx = self.core_index[dst];
+                if idx != usize::MAX {
+                    self.cores[idx].stage_input_spikes(axons);
+                    self.cores[idx].charge_cache_writes(axons.len().div_ceil(16) as u64);
+                }
+            }
+            Ok(self.noc.cycle() - start)
+        } else {
+            // Ideal fabric: zero latency, but charge broadcast-hop energy
+            // along the real topology distances.
+            use crate::energy::EventClass;
+            let mut per_core: Vec<Vec<u32>> = vec![Vec::new(); self.config.n_cores];
+            let mut hop_events = 0u64;
+            for &(src, axon) in firing {
+                for &dst in &dst_cores {
+                    per_core[dst].push(axon);
+                    hop_events += self.hop_table[src][dst] as u64;
+                }
+            }
+            self.ledger.add(EventClass::HopBroadcast, hop_events);
+            self.ledger.add(EventClass::LinkTraversal, hop_events * 2);
+            for (dst, axons) in per_core.iter().enumerate() {
+                if axons.is_empty() {
+                    continue;
+                }
+                let idx = self.core_index[dst];
+                if idx != usize::MAX {
+                    self.cores[idx].stage_input_spikes(axons);
+                    self.cores[idx].charge_cache_writes(axons.len().div_ceil(16) as u64);
+                }
+            }
+            Ok(0)
+        }
+    }
+
+    /// Run one sample through the chip.
+    pub fn run_sample(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+        if !self.booted {
+            self.boot()?;
+        }
+        // Fresh dynamic state per inference: membrane potentials are
+        // cleared through the MPDMA path (16-bit word per neuron).
+        let mut mp_words = 0u64;
+        for c in &mut self.cores {
+            c.reset_state();
+            mp_words += c.regs().neurons as u64;
+        }
+        let mpdma_cycles = self.mpdma.burst(mp_words, &mut self.bus, &mut self.ledger);
+        self.outbufs.clear(0);
+        let mut sample_cycles = mpdma_cycles;
+        let mut sample_sops = 0u64;
+        let delivered_before = self.noc.delivered().len();
+
+        for t in 0..self.net.timesteps {
+            self.noc.set_timestep(t as u32);
+            // --- input injection (IDMA path) ------------------------------
+            let spikes_in = sample.spikes_at(t as u16);
+            let mut dma_cycles = 0;
+            if !spikes_in.is_empty() {
+                let words = spikes_in.len().div_ceil(2) as u64;
+                dma_cycles = self.idma.burst(words, &mut self.bus, &mut self.ledger);
+                for &c in &self.mapping.layer_cores[0] {
+                    let idx = self.core_index[c];
+                    self.cores[idx].stage_input_spikes(&spikes_in);
+                    self.cores[idx]
+                        .charge_cache_writes(spikes_in.len().div_ceil(16) as u64);
+                }
+            }
+            // --- layer-by-layer execution ----------------------------------
+            let mut ts_cycles = dma_cycles;
+            for li in 0..self.net.layers.len() {
+                let mut layer_max_cycles = 0u64;
+                let mut firing: Vec<(usize, u32)> = Vec::new();
+                let last = li == self.net.layers.len() - 1;
+                for &pc in &self.mapping.layer_cores[li].clone() {
+                    let idx = self.core_index[pc];
+                    let placement_off = self
+                        .mapping
+                        .placement_of(pc)
+                        .expect("placed core")
+                        .neuron_offset;
+                    let out = self.cores[idx].tick_timestep();
+                    layer_max_cycles = layer_max_cycles.max(out.stats.cycles);
+                    sample_sops += out.stats.pipeline.sops;
+                    for &n in &out.spikes {
+                        let global = placement_off as u32 + n;
+                        if last {
+                            self.outbufs
+                                .record_spike(0, global as usize, &mut self.ledger)?;
+                        } else {
+                            firing.push((pc, global));
+                        }
+                    }
+                }
+                ts_cycles += layer_max_cycles;
+                if !last && !firing.is_empty() {
+                    ts_cycles += self.route_spikes(li, &firing)?;
+                }
+            }
+            // --- CPU timestep service --------------------------------------
+            self.cpu.lsu.mmio.npu_status =
+                (self.cpu.lsu.mmio.npu_status & 0xFFFF) | ((t as u32) << 16) | 1;
+            self.run_cpu_window(ts_cycles.max(1), Some(WakeEvent::TimestepSwitch))?;
+            sample_cycles += ts_cycles;
+        }
+
+        // --- finish: result readout ---------------------------------------
+        let counts = self.outbufs.counts(0, self.net.classes);
+        self.cpu.lsu.mmio.result[0] = self.outbufs.mmio_word(0, self.net.classes);
+        self.cpu.lsu.mmio.npu_status &= !1;
+        if self.config.drive_cpu {
+            // The firmware exits its loop on network finish; re-arm it for
+            // the next sample by reloading (host MCU restarting inference).
+            self.run_cpu_window(64, Some(WakeEvent::NetworkFinish))?;
+            if self.cpu.state == CpuState::Halted {
+                let prog = firmware::mnist_control(self.net.timesteps as u32, 1)?;
+                let saved = self.cpu.lsu.mmio.clone();
+                self.cpu.load_program(&prog)?;
+                self.cpu.lsu.mmio = saved;
+                self.cpu.run(1_000_000)?;
+                self.drain_enu_commands()?;
+                self.cpu.lsu.mmio.npu_status |= 1;
+            }
+        }
+
+        let predicted = self.outbufs.winner(0, self.net.classes);
+        let correct = label_known && predicted == sample.label;
+        self.total_cycles += sample_cycles;
+        self.total_sops += sample_sops;
+        self.samples_run += 1;
+        if correct {
+            self.correct += 1;
+        }
+        let _ = delivered_before;
+        Ok(SampleResult {
+            predicted,
+            counts,
+            correct,
+            cycles: sample_cycles,
+            sops: sample_sops,
+            spikes_routed: self.spikes_routed,
+        })
+    }
+
+    /// Run (up to `limit`) samples of a dataset; returns accuracy.
+    pub fn run_dataset(&mut self, ds: &Dataset, limit: usize) -> Result<f64> {
+        if ds.inputs != self.net.input_size() {
+            return Err(Error::Soc(format!(
+                "dataset has {} inputs, network expects {}",
+                ds.inputs,
+                self.net.input_size()
+            )));
+        }
+        let n = ds.samples.len().min(limit);
+        let mut correct = 0usize;
+        for s in &ds.samples[..n] {
+            if self.run_sample(s, true)?.correct {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / n.max(1) as f64)
+    }
+
+    /// Assemble the chip-level report (merges every subsystem ledger and
+    /// charges static power over the run window).
+    pub fn finish_report(&mut self, workload: &str) -> ChipReport {
+        let mut ledger = std::mem::take(&mut self.ledger);
+        let wall = self.total_cycles.max(1);
+        for c in &mut self.cores {
+            c.finish_window(wall);
+            ledger.merge(&c.take_ledger());
+        }
+        ledger.merge(&self.noc.finish_ledger());
+        // CPU: dynamic ledger + domain statics (converted to core cycles).
+        ledger.merge(&self.cpu.ledger);
+        self.cpu.ledger = EnergyLedger::new();
+        let scale = self.clocks.f_core_hz / self.clocks.f_cpu_hz;
+        ledger.add_static(
+            "cpu-hf",
+            (self.cpu.clocks.hf_active as f64 * scale) as u64,
+            (self.cpu.clocks.hf_gated as f64 * scale) as u64,
+            self.energy.p_cpu_active,
+            self.energy.p_cpu_sleep,
+        );
+        ledger.add_static(
+            "cpu-lf",
+            wall,
+            0,
+            self.energy.p_cpu_lf,
+            0.0,
+        );
+        self.clocks.charge_window(&mut ledger, wall);
+        ledger.add_static("soc-misc", wall, 0, self.energy.p_soc_misc, 0.0);
+
+        let accuracy = (self.samples_run > 0)
+            .then(|| self.correct as f64 / self.samples_run as f64);
+        ChipReport::from_ledger(
+            workload,
+            &ledger,
+            &self.energy,
+            &self.area,
+            self.clocks.f_core_hz,
+            wall,
+            self.samples_run,
+            accuracy,
+            self.spikes_routed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::nn::network::LayerDesc;
+
+    /// A small 2-layer network whose weights make spikes propagate.
+    fn small_net(inputs: usize, hidden: usize, classes: usize) -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 40,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        NetworkDesc {
+            name: "soc-test".into(),
+            layers: vec![
+                LayerDesc {
+                    name: "h".into(),
+                    inputs,
+                    neurons: hidden,
+                    codebook: cb.clone(),
+                    widx: (0..inputs * hidden)
+                        .map(|i| if i % 3 == 0 { 13 } else { 8 } as u8)
+                        .collect(),
+                    neuron_params: params.clone(),
+                },
+                LayerDesc {
+                    name: "o".into(),
+                    inputs: hidden,
+                    neurons: classes,
+                    codebook: cb,
+                    widx: (0..hidden * classes)
+                        .map(|i| if i % 2 == 0 { 14 } else { 8 } as u8)
+                        .collect(),
+                    neuron_params: params,
+                },
+            ],
+            timesteps: 5,
+            classes,
+        }
+    }
+
+    fn busy_sample(inputs: usize, timesteps: usize) -> Sample {
+        let mut events = Vec::new();
+        for t in 0..timesteps {
+            for a in (0..inputs).step_by(2) {
+                events.push((t as u16, a as u32));
+            }
+        }
+        Sample { label: 0, events }
+    }
+
+    #[test]
+    fn sample_runs_end_to_end_with_cpu_and_noc() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        let r = soc.run_sample(&s, true).unwrap();
+        assert!(r.sops > 0, "no synapse work happened");
+        assert!(r.cycles > 0);
+        assert!(r.counts.iter().sum::<u32>() > 0, "no output spikes");
+        assert!(r.spikes_routed > 0, "NoC was never used");
+    }
+
+    #[test]
+    fn cpu_slept_most_of_the_time() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        soc.run_sample(&s, true).unwrap();
+        let c = &soc.cpu.clocks;
+        assert!(
+            c.hf_gated > c.hf_active,
+            "CPU should sleep between timesteps (active {}, gated {})",
+            c.hf_active,
+            c.hf_gated
+        );
+    }
+
+    #[test]
+    fn ideal_fabric_matches_noc_functionally() {
+        let net = small_net(32, 24, 4);
+        let s = busy_sample(32, 5);
+        let mut with_noc = Soc::new(net.clone(), SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let mut ideal = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            use_noc: false,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let r1 = with_noc.run_sample(&s, true).unwrap();
+        let r2 = ideal.run_sample(&s, true).unwrap();
+        assert_eq!(r1.counts, r2.counts, "fabric choice must not change function");
+        assert_eq!(r1.sops, r2.sops);
+    }
+
+    #[test]
+    fn soc_matches_reference_network_semantics() {
+        let net = small_net(16, 12, 4);
+        let s = busy_sample(16, 5);
+        let raster = s.to_raster(5, 16);
+        let expect = net.reference_run(&raster);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 5, // force multi-core split
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let r = soc.run_sample(&s, true).unwrap();
+        assert_eq!(r.counts, expect, "chip must compute the reference function");
+    }
+
+    #[test]
+    fn report_aggregates_everything() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        soc.run_sample(&s, true).unwrap();
+        let rep = soc.finish_report("test");
+        assert!(rep.sops > 0);
+        assert!(rep.pj_per_sop.is_finite() && rep.pj_per_sop > 0.0);
+        assert!(rep.power_mw > 0.0);
+        assert_eq!(rep.samples, 1);
+    }
+
+    #[test]
+    fn network_too_big_for_chip_rejected() {
+        let net = small_net(16, 8192 * 21, 4);
+        assert!(Soc::new(net, SocConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Clock manager (Fig. 7): owns the frequency plan (RISC-V 16–100 MHz,
+//! neuromorphic processor 50–200 MHz per Table I) and the chip-level
+//! clock-tree static power.
+
+use crate::energy::EnergyLedger;
+use crate::{Error, Result};
+
+/// The clock plan.
+#[derive(Debug, Clone)]
+pub struct ClockManager {
+    /// Neuromorphic-processor clock (Hz).
+    pub f_core_hz: f64,
+    /// RISC-V HF clock (Hz).
+    pub f_cpu_hz: f64,
+    /// Clock tree + misc static power (mW), charged over wall cycles.
+    pub p_tree_mw: f64,
+}
+
+impl ClockManager {
+    /// Validated clock plan (ranges from Table I).
+    pub fn new(f_core_hz: f64, f_cpu_hz: f64, p_tree_mw: f64) -> Result<Self> {
+        if !(50.0e6..=200.0e6).contains(&f_core_hz) {
+            return Err(Error::Soc(format!(
+                "core clock {f_core_hz} outside 50–200 MHz"
+            )));
+        }
+        if !(16.0e6..=100.0e6).contains(&f_cpu_hz) {
+            return Err(Error::Soc(format!(
+                "cpu clock {f_cpu_hz} outside 16–100 MHz"
+            )));
+        }
+        Ok(ClockManager {
+            f_core_hz,
+            f_cpu_hz,
+            p_tree_mw,
+        })
+    }
+
+    /// CPU cycles elapsed during `core_cycles` of the neuromorphic clock.
+    pub fn cpu_cycles_for(&self, core_cycles: u64) -> u64 {
+        ((core_cycles as f64) * self.f_cpu_hz / self.f_core_hz).round() as u64
+    }
+
+    /// Charge clock-tree static power over a window of core cycles.
+    pub fn charge_window(&self, ledger: &mut EnergyLedger, core_cycles: u64) {
+        ledger.add_static("clock-tree", core_cycles, 0, self.p_tree_mw, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_ranges() {
+        assert!(ClockManager::new(100.0e6, 50.0e6, 0.8).is_ok());
+        assert!(ClockManager::new(300.0e6, 50.0e6, 0.8).is_err());
+        assert!(ClockManager::new(100.0e6, 5.0e6, 0.8).is_err());
+    }
+
+    #[test]
+    fn cpu_cycle_conversion() {
+        let c = ClockManager::new(100.0e6, 50.0e6, 0.8).unwrap();
+        assert_eq!(c.cpu_cycles_for(1000), 500);
+    }
+}

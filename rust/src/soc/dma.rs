@@ -1,0 +1,67 @@
+//! DMA engines (Fig. 7): **IDMA** streams weight-index/parameter data into
+//! the cores, **MPDMA** saves/restores membrane potentials. Both move
+//! 16-bit words, charge per-word energy and consume bus beats.
+
+use super::bus::{BusOp, NeuroBus};
+use crate::energy::{EnergyLedger, EventClass};
+
+/// Which DMA engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaKind {
+    /// Index/parameter DMA.
+    Idma,
+    /// Membrane-potential DMA.
+    Mpdma,
+}
+
+/// A DMA engine.
+#[derive(Debug, Clone)]
+pub struct Dma {
+    kind: DmaKind,
+    /// Total 16-bit words moved.
+    pub words: u64,
+    /// Total transfers (bursts).
+    pub bursts: u64,
+}
+
+impl Dma {
+    /// New engine.
+    pub fn new(kind: DmaKind) -> Self {
+        Dma {
+            kind,
+            words: 0,
+            bursts: 0,
+        }
+    }
+
+    /// Engine kind.
+    pub fn kind(&self) -> DmaKind {
+        self.kind
+    }
+
+    /// Move `words` 16-bit words; returns cycles consumed (2 words per
+    /// 32-bit bus beat, one beat per cycle).
+    pub fn burst(&mut self, words: u64, bus: &mut NeuroBus, ledger: &mut EnergyLedger) -> u64 {
+        self.words += words;
+        self.bursts += 1;
+        ledger.add(EventClass::DmaWord, words);
+        bus.transfer(BusOp::Dma, words.div_ceil(2), ledger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_counts_words_and_beats() {
+        let mut dma = Dma::new(DmaKind::Idma);
+        let mut bus = NeuroBus::new();
+        let mut l = EnergyLedger::new();
+        let cycles = dma.burst(17, &mut bus, &mut l);
+        assert_eq!(cycles, 9); // ceil(17/2)
+        assert_eq!(dma.words, 17);
+        assert_eq!(l.count(EventClass::DmaWord), 17);
+        assert_eq!(bus.dma_beats, 9);
+    }
+}

@@ -1,0 +1,53 @@
+//! External asynchronous SRAM interface (Fig. 7: "an external memory
+//! interface [is] connected to the bus for […] off-chip asynchronous SRAM
+//! data access"). Off-chip accesses are slow and expensive — the model
+//! charges a fixed latency and the calibrated per-word energy, which is
+//! what makes "keep weights in on-core codebooks" the winning design
+//! point in the ablation bench.
+
+use super::bus::{BusOp, NeuroBus};
+use crate::energy::{EnergyLedger, EventClass};
+
+/// External SRAM model.
+#[derive(Debug, Clone)]
+pub struct ExtMem {
+    /// Access latency in core cycles per 16-bit word.
+    pub latency: u64,
+    /// Words transferred.
+    pub words: u64,
+}
+
+impl Default for ExtMem {
+    fn default() -> Self {
+        // Async SRAM at ~10 ns per access ≈ 2 cycles at 200 MHz.
+        ExtMem { latency: 2, words: 0 }
+    }
+}
+
+impl ExtMem {
+    /// Transfer `words` 16-bit words; returns cycles consumed.
+    pub fn transfer(&mut self, words: u64, bus: &mut NeuroBus, ledger: &mut EnergyLedger) -> u64 {
+        self.words += words;
+        ledger.add(EventClass::ExtMemWord, words);
+        let bus_cycles = bus.transfer(BusOp::ExtMem, words.div_ceil(2), ledger);
+        bus_cycles + self.latency * words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyParams;
+
+    #[test]
+    fn slow_and_expensive() {
+        let p = EnergyParams::nominal();
+        let mut m = ExtMem::default();
+        let mut bus = NeuroBus::new();
+        let mut l = EnergyLedger::new();
+        let cycles = m.transfer(10, &mut bus, &mut l);
+        assert_eq!(cycles, 5 + 20);
+        // Off-chip word ≫ on-core cache access energy.
+        assert!(p.e_extmem_word > 10.0 * p.e_cache_rd);
+    }
+}

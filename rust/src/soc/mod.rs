@@ -1,0 +1,21 @@
+//! SoC plumbing (paper §II.D / Fig. 7): neuromorphic bus, IDMA/MPDMA,
+//! clock manager, output buffers and the external-memory interface.
+//!
+//! [`soc::Soc`](crate::soc::chip::Soc) assembles the whole chip: the
+//! RISC-V CPU (+ENU), 20 neuromorphic cores, the fullerene NoC, the DMA
+//! engines and the output buffers — and executes workloads end-to-end
+//! under the calibrated energy model.
+
+pub mod bus;
+pub mod chip;
+pub mod clockmgr;
+pub mod dma;
+pub mod extmem;
+pub mod outbuf;
+
+pub use bus::NeuroBus;
+pub use chip::{SampleResult, Soc, SocConfig};
+pub use clockmgr::ClockManager;
+pub use dma::{Dma, DmaKind};
+pub use extmem::ExtMem;
+pub use outbuf::OutputBuffers;

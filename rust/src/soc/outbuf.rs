@@ -1,0 +1,123 @@
+//! Output buffers (Fig. 7: "Four independent 0.2 KB output buffers are
+//! used to store the computing results of different networks").
+//!
+//! Each buffer accumulates per-class spike counts for one running network
+//! and exposes the head word to the CPU's MMIO result ports.
+
+use crate::energy::{EnergyLedger, EventClass};
+use crate::{Error, Result};
+
+/// Capacity of one buffer in 16-bit entries (0.2 KB = 100 entries).
+pub const ENTRIES_PER_BUF: usize = 100;
+
+/// The four output buffers.
+#[derive(Debug, Clone)]
+pub struct OutputBuffers {
+    bufs: [Vec<u16>; 4],
+}
+
+impl Default for OutputBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OutputBuffers {
+    /// Four empty buffers.
+    pub fn new() -> Self {
+        OutputBuffers {
+            bufs: [
+                vec![0; ENTRIES_PER_BUF],
+                vec![0; ENTRIES_PER_BUF],
+                vec![0; ENTRIES_PER_BUF],
+                vec![0; ENTRIES_PER_BUF],
+            ],
+        }
+    }
+
+    /// Clear buffer `b`.
+    pub fn clear(&mut self, b: usize) {
+        self.bufs[b].iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Record one output spike of class `class` into buffer `b`.
+    pub fn record_spike(
+        &mut self,
+        b: usize,
+        class: usize,
+        ledger: &mut EnergyLedger,
+    ) -> Result<()> {
+        if class >= ENTRIES_PER_BUF {
+            return Err(Error::Soc(format!(
+                "class {class} exceeds output buffer capacity"
+            )));
+        }
+        self.bufs[b][class] = self.bufs[b][class].saturating_add(1);
+        ledger.add1(EventClass::OutBufWrite);
+        Ok(())
+    }
+
+    /// Per-class counts of buffer `b`.
+    pub fn counts(&self, b: usize, classes: usize) -> Vec<u32> {
+        self.bufs[b][..classes.min(ENTRIES_PER_BUF)]
+            .iter()
+            .map(|&v| v as u32)
+            .collect()
+    }
+
+    /// Argmax class of buffer `b` (ties → lowest class).
+    pub fn winner(&self, b: usize, classes: usize) -> usize {
+        let counts = self.counts(b, classes);
+        counts
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.cmp(y.1).then(y.0.cmp(&x.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// The word exposed on the CPU's MMIO result port for buffer `b`:
+    /// `winner << 16 | total_spikes` (a compact status the firmware reads).
+    pub fn mmio_word(&self, b: usize, classes: usize) -> u32 {
+        let counts = self.counts(b, classes);
+        let total: u32 = counts.iter().sum::<u32>().min(0xFFFF);
+        ((self.winner(b, classes) as u32) << 16) | total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_finds_winner() {
+        let mut ob = OutputBuffers::new();
+        let mut l = EnergyLedger::new();
+        for _ in 0..3 {
+            ob.record_spike(0, 2, &mut l).unwrap();
+        }
+        ob.record_spike(0, 5, &mut l).unwrap();
+        assert_eq!(ob.winner(0, 10), 2);
+        assert_eq!(ob.counts(0, 10)[2], 3);
+        assert_eq!(ob.mmio_word(0, 10), (2 << 16) | 4);
+        assert_eq!(l.count(crate::energy::EventClass::OutBufWrite), 4);
+    }
+
+    #[test]
+    fn buffers_independent() {
+        let mut ob = OutputBuffers::new();
+        let mut l = EnergyLedger::new();
+        ob.record_spike(1, 0, &mut l).unwrap();
+        assert_eq!(ob.counts(0, 4), vec![0; 4]);
+        assert_eq!(ob.counts(1, 4)[0], 1);
+        ob.clear(1);
+        assert_eq!(ob.counts(1, 4)[0], 0);
+    }
+
+    #[test]
+    fn class_capacity_enforced() {
+        let mut ob = OutputBuffers::new();
+        let mut l = EnergyLedger::new();
+        assert!(ob.record_spike(0, 100, &mut l).is_err());
+    }
+}

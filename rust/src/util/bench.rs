@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (replaces `criterion`, unavailable offline).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use fullerene_soc::util::bench::Bench;
+//! let mut b = Bench::new("fig3_core_sparsity");
+//! b.bench("sparse-core/s=0.5", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each case runs a warmup, then timed iterations until both a minimum
+//! iteration count and a minimum total time are reached; reports median,
+//! p10/p90 and mean ns/iter. Output goes through [`crate::metrics::Table`]
+//! so `cargo bench | tee bench_output.txt` stays diff-able.
+
+use crate::metrics::Table;
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Case name.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Median ns/iter.
+    pub median_ns: f64,
+    /// 10th percentile ns/iter.
+    pub p10_ns: f64,
+    /// 90th percentile ns/iter.
+    pub p90_ns: f64,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    name: String,
+    min_iters: u64,
+    min_time: Duration,
+    warmup: Duration,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    /// New bench group with default budget (200 ms warmup, ≥ 1 s timed,
+    /// ≥ 20 iterations). Honours `FSOC_BENCH_FAST=1` for CI smoke runs.
+    pub fn new(name: &str) -> Self {
+        let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+        Bench {
+            name: name.to_string(),
+            min_iters: if fast { 3 } else { 20 },
+            min_time: Duration::from_millis(if fast { 50 } else { 1000 }),
+            warmup: Duration::from_millis(if fast { 10 } else { 200 }),
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget.
+    pub fn with_budget(mut self, min_iters: u64, min_time: Duration, warmup: Duration) -> Self {
+        self.min_iters = min_iters;
+        self.min_time = min_time;
+        self.warmup = warmup;
+        self
+    }
+
+    /// Measure `f`, preventing the compiler from eliding its result.
+    pub fn bench<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> &CaseResult {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed runs.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let tstart = Instant::now();
+        while (samples_ns.len() as u64) < self.min_iters || tstart.elapsed() < self.min_time {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break; // pathological fast case
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        self.results.push(CaseResult {
+            name: case.to_string(),
+            iters: samples_ns.len() as u64,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            mean_ns: mean,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Access results so far.
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+
+    /// Print the result table.
+    pub fn finish(&self) {
+        let mut t = Table::new(&["case", "iters", "median", "p10", "p90", "mean"]);
+        for r in &self.results {
+            t.push_row(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt_ns(r.median_ns),
+                fmt_ns(r.p10_ns),
+                fmt_ns(r.p90_ns),
+                fmt_ns(r.mean_ns),
+            ]);
+        }
+        println!("\n## bench: {}\n{}", self.name, t.render());
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("FSOC_BENCH_FAST", "1");
+        let mut b = Bench::new("test").with_budget(3, Duration::from_millis(5), Duration::ZERO);
+        let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(r.iters >= 3);
+        assert!(r.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny CLI flag parser (replaces `clap`, unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--key value | --key=value | --flag] ...`.
+//! Unknown flags are an error, so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    /// Flags seen (for unknown-flag detection).
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => {
+                        // Peek: value unless next is another flag.
+                        let next_is_val =
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if next_is_val {
+                            (stripped.to_string(), Some(it.next().unwrap()))
+                        } else {
+                            (stripped.to_string(), None)
+                        }
+                    }
+                };
+                out.seen.push(key.clone());
+                out.opts.insert(key, val.unwrap_or_else(|| "true".into()));
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the real process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; exits with a message on parse failure.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (present without value, or `--k=true`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error on flags not in `allowed` (call after reading all options).
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in &self.seen {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k} (allowed: {allowed:?})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("bench --sparsity 0.5 --out=/tmp/x --fast");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("sparsity"), Some("0.5"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run --steps 100");
+        assert_eq!(a.get_parse_or("steps", 5u32), 100);
+        assert_eq!(a.get_parse_or("other", 7u32), 7);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("run --good 1 --typo 2");
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "typo"]).is_ok());
+    }
+}

@@ -1,0 +1,523 @@
+//! Minimal JSON parser + writer (replaces `serde_json`, unavailable in the
+//! offline environment).
+//!
+//! Scope: full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null), good errors with byte offsets, and typed
+//! accessors. This is the interchange format between the Python compile
+//! path (`python/compile/aot.py` emits `artifacts/*.json`) and the Rust
+//! runtime, so strictness matters more than speed.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- typed accessors ---------------------------------------------------
+
+    /// As f64, or error.
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => Err(Error::Json(format!("expected number, got {}", other.kind()))),
+        }
+    }
+
+    /// As i64 (must be integral), or error.
+    pub fn as_i64(&self) -> Result<i64> {
+        let f = self.as_f64()?;
+        if f.fract() != 0.0 || f.abs() > 2f64.powi(53) {
+            return Err(Error::Json(format!("expected integer, got {f}")));
+        }
+        Ok(f as i64)
+    }
+
+    /// As usize, or error.
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        usize::try_from(i).map_err(|_| Error::Json(format!("expected usize, got {i}")))
+    }
+
+    /// As bool, or error.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => Err(Error::Json(format!("expected bool, got {}", other.kind()))),
+        }
+    }
+
+    /// As string slice, or error.
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(Error::Json(format!("expected string, got {}", other.kind()))),
+        }
+    }
+
+    /// As array slice, or error.
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => Err(Error::Json(format!("expected array, got {}", other.kind()))),
+        }
+    }
+
+    /// As object map, or error.
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            other => Err(Error::Json(format!("expected object, got {}", other.kind()))),
+        }
+    }
+
+    /// Object field access, or error naming the missing key.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| Error::Json(format!("missing key '{key}'")))
+    }
+
+    /// Optional object field.
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    /// Array of i64s.
+    pub fn as_i64_vec(&self) -> Result<Vec<i64>> {
+        self.as_arr()?.iter().map(|v| v.as_i64()).collect()
+    }
+
+    /// Array of f64s.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    // ---- construction helpers ----------------------------------------------
+
+    /// Object from key/value pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Array from i64 iterator.
+    pub fn from_i64s(it: impl IntoIterator<Item = i64>) -> Json {
+        Json::Arr(it.into_iter().map(|v| Json::Num(v as f64)).collect())
+    }
+
+    /// Array from f64 iterator.
+    pub fn from_f64s(it: impl IntoIterator<Item = f64>) -> Json {
+        Json::Arr(it.into_iter().map(Json::Num).collect())
+    }
+
+    // ---- parse / write -------------------------------------------------------
+
+    /// Parse a JSON document (must consume all non-whitespace input).
+    pub fn parse(input: &str) -> Result<Json> {
+        let mut p = Parser {
+            b: input.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(Error::Json(format!("trailing data at byte {}", p.i)));
+        }
+        Ok(v)
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Read and parse a JSON file.
+    pub fn read_file(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Json::parse(&text)
+    }
+
+    /// Write to a file.
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(Error::Json(format!(
+                "expected '{}' at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            )))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(Error::Json(format!("bad literal at byte {}", self.i)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(Error::Json(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|b| b as char),
+                self.i
+            ))),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => {
+                    return Err(Error::Json(format!(
+                        "expected ',' or '}}' at byte {}, found {:?}",
+                        self.i,
+                        other.map(|b| b as char)
+                    )))
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut arr = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(arr));
+        }
+        loop {
+            self.ws();
+            arr.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(arr));
+                }
+                other => {
+                    return Err(Error::Json(format!(
+                        "expected ',' or ']' at byte {}, found {:?}",
+                        self.i,
+                        other.map(|b| b as char)
+                    )))
+                }
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(Error::Json("unterminated string".into())),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let e = self
+                        .peek()
+                        .ok_or_else(|| Error::Json("unterminated escape".into()))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(Error::Json("truncated \\u escape".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| Error::Json("bad \\u escape".into()))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::Json("bad \\u escape".into()))?;
+                            self.i += 4;
+                            // Surrogate pairs: decode \uD800-\uDBFF + \uDC00-\uDFFF.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.b[self.i..].starts_with(b"\\u") {
+                                    let hex2 =
+                                        std::str::from_utf8(&self.b[self.i + 2..self.i + 6])
+                                            .map_err(|_| Error::Json("bad surrogate".into()))?;
+                                    let lo = u32::from_str_radix(hex2, 16)
+                                        .map_err(|_| Error::Json("bad surrogate".into()))?;
+                                    self.i += 6;
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(Error::Json("lone surrogate".into()));
+                                }
+                            } else {
+                                cp
+                            };
+                            s.push(
+                                char::from_u32(ch)
+                                    .ok_or_else(|| Error::Json("invalid codepoint".into()))?,
+                            );
+                        }
+                        other => {
+                            return Err(Error::Json(format!(
+                                "bad escape '\\{}'",
+                                other as char
+                            )))
+                        }
+                    }
+                }
+                Some(_) => {
+                    // Consume a maximal run of plain bytes in one step
+                    // (O(n) overall — per-char validation of the rest of
+                    // the input would be quadratic on multi-MB strings).
+                    let start = self.i;
+                    while let Some(&c) = self.b.get(self.i) {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
+                            break;
+                        }
+                        self.i += 1;
+                    }
+                    if let Some(&c) = self.b.get(self.i) {
+                        if c < 0x20 && c != b'"' && c != b'\\' {
+                            return Err(Error::Json("raw control char in string".into()));
+                        }
+                    }
+                    let run = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| Error::Json("invalid utf-8".into()))?;
+                    s.push_str(run);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| Error::Json(format!("bad number '{text}' at byte {start}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "s": "x\ny"}"#;
+        let v = Json::parse(src).unwrap();
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+        assert_eq!(v.get("a").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.5, -300.0]);
+        assert!(v.get("b").unwrap().get("c").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "x\ny");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_bad_syntax() {
+        assert!(Json::parse("{} x").is_err());
+        assert!(Json::parse("{,}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("01a").is_err());
+    }
+
+    #[test]
+    fn integer_accessors_enforce_integrality() {
+        let v = Json::parse("[1, 1.5]").unwrap();
+        assert_eq!(v.as_arr().unwrap()[0].as_i64().unwrap(), 1);
+        assert!(v.as_arr().unwrap()[1].as_i64().is_err());
+    }
+
+    #[test]
+    fn unicode_escapes_and_surrogates() {
+        let v = Json::parse(r#""Aé😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "Aé😀");
+    }
+
+    #[test]
+    fn missing_key_error_names_key() {
+        let v = Json::parse(r#"{"a": 1}"#).unwrap();
+        let err = v.get("missing").unwrap_err();
+        assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn writes_compact_integers() {
+        let v = Json::obj(vec![("n", Json::Num(42.0))]);
+        assert_eq!(v.to_string(), r#"{"n":42}"#);
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(Json::parse(" [ ] ").unwrap(), Json::Arr(vec![]));
+    }
+}

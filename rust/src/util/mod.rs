@@ -1,0 +1,23 @@
+//! In-tree replacements for crates unavailable in the offline build
+//! environment (see DESIGN.md §Offline-substitutions):
+//!
+//! - [`json`] — minimal JSON parser/writer (replaces `serde_json`) used for
+//!   the Python↔Rust artifact interchange (trained weights, codebooks,
+//!   network descriptions) and config files.
+//! - [`prng`] — seeded SplitMix64/xoshiro256** PRNG (replaces `rand`) used
+//!   by workload generators and property tests. Deterministic by seed.
+//! - [`bench`] — micro-benchmark harness (replaces `criterion`): warmup +
+//!   timed iterations, median/p10/p90, throughput, table rendering.
+//! - [`cli`] — flag parser (replaces `clap`): subcommands plus
+//!   `--key value` / `--key=value` options.
+//! - [`propcheck`] — property-testing loop (replaces `proptest`): runs a
+//!   property over N seeded random cases and reports the failing seed.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+
+pub use json::Json;
+pub use prng::Rng;

@@ -1,0 +1,56 @@
+//! Property-testing loop (replaces `proptest`, unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! panics with the offending seed so the case can be replayed with
+//! `check_one`. No shrinking — seeds are small enough to debug directly,
+//! and generators should keep cases small.
+
+use super::prng::Rng;
+
+/// Run `prop` over `n` cases seeded `base_seed + i`. Panics (failing the
+/// test) with the seed on the first violation.
+pub fn check(name: &str, n: u64, base_seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed} (case {i}/{n}): {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (debugging helper).
+pub fn check_one(seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("add-commutes", 50, 1, |r| {
+            let a = r.range_i64(-1000, 1000);
+            let b = r.range_i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn reports_seed_on_failure() {
+        check("always-fails-eventually", 50, 1, |r| {
+            assert!(r.below(10) != 3, "hit the 3");
+        });
+    }
+}

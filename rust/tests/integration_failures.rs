@@ -1,0 +1,131 @@
+//! Failure injection: the system must stall or error loudly — never
+//! silently corrupt — under router gating, timestep desync, buffer
+//! saturation, malformed artifacts and invalid configs.
+
+use fullerene_soc::config::RunConfig;
+use fullerene_soc::datasets::Dataset;
+use fullerene_soc::energy::EnergyParams;
+use fullerene_soc::nn::loader::parse_weights_json;
+use fullerene_soc::noc::{Dest, NocSim, Topology};
+
+#[test]
+fn gated_router_blocks_traffic_and_is_detected() {
+    let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+    // Gate all 12 routers.
+    for r in sim.topology().routers() {
+        sim.set_node_enabled(r, false);
+    }
+    sim.inject(0, &Dest::Core(10), 0);
+    let err = sim.run_until_drained(500).unwrap_err();
+    assert!(err.to_string().contains("not drained"));
+}
+
+#[test]
+fn single_gated_router_reroutes_or_stalls_but_never_corrupts() {
+    // Gate one router: some paths die (next-hop is static), but any flit
+    // that IS delivered must be delivered intact.
+    let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+    let victim = sim.topology().routers()[0];
+    sim.set_node_enabled(victim, false);
+    for dst in 1..20 {
+        sim.inject(0, &Dest::Core(dst), dst as u32);
+    }
+    let _ = sim.run_until_drained(5_000); // may or may not drain fully
+    for d in sim.delivered() {
+        assert_eq!(d.flit.axon, d.flit.dst_core as u32, "payload corrupted");
+    }
+}
+
+#[test]
+fn timestep_desync_hangs_link_until_resync() {
+    let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+    sim.inject(0, &Dest::Core(15), 1);
+    sim.set_timestep(3); // routers ahead of the flit
+    for _ in 0..200 {
+        sim.step();
+    }
+    assert_eq!(sim.delivered().len(), 0);
+    assert!(sim.stats().stalls_timestep > 0);
+    sim.set_timestep(0);
+    sim.run_until_drained(10_000).unwrap();
+    assert_eq!(sim.delivered().len(), 1);
+}
+
+#[test]
+fn tiny_fifos_saturate_but_still_drain() {
+    let mut sim = NocSim::new(Topology::fullerene(), 1, EnergyParams::nominal());
+    for round in 0..10 {
+        for c in 0..20 {
+            sim.inject(c, &Dest::Core((c + 7) % 20), round);
+        }
+    }
+    sim.run_until_drained(500_000).unwrap();
+    let st = sim.stats();
+    assert_eq!(st.delivered, 200);
+    assert!(st.stalls_backpressure > 0, "depth-1 FIFOs must backpressure");
+}
+
+#[test]
+fn malformed_weights_artifacts_rejected() {
+    // Truncated JSON.
+    assert!(parse_weights_json("{\"name\": \"x\"").is_err());
+    // Wrong widx length.
+    let bad = r#"{"name":"x","timesteps":2,"classes":1,"layers":[{
+        "name":"l","inputs":2,"neurons":1,"codebook":[0,0,0,0],
+        "w_bits":4,"scale":1.0,"widx":[0],"threshold":1,
+        "leak":{"mode":"none"},"reset":"zero","mp_bits":16}]}"#;
+    assert!(parse_weights_json(bad).is_err());
+    // Codebook index out of range.
+    let bad2 = bad.replace("\"widx\":[0]", "\"widx\":[9,0]");
+    assert!(parse_weights_json(&bad2).is_err());
+}
+
+#[test]
+fn malformed_dataset_rejected() {
+    let tmp = std::env::temp_dir().join("fsoc_bad_ds.json");
+    std::fs::write(
+        &tmp,
+        r#"{"name":"x","inputs":4,"timesteps":2,"classes":2,
+           "samples":[{"label":5,"events":[]}]}"#,
+    )
+    .unwrap();
+    assert!(Dataset::load_json(&tmp).is_err(), "label out of range accepted");
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn config_validation_rejects_nonsense() {
+    let write = |text: &str| {
+        let tmp = std::env::temp_dir().join(format!("fsoc_cfg_{}.json", text.len()));
+        std::fs::write(&tmp, text).unwrap();
+        let r = RunConfig::load(&tmp);
+        std::fs::remove_file(&tmp).ok();
+        r
+    };
+    assert!(write(r#"{"chip": {"n_cores": 99}}"#).is_err());
+    assert!(write(r#"{"chip": {"supply_v": 5.0}}"#).is_err());
+    assert!(write(r#"{"workload": {"name": "imagenet"}}"#).is_err());
+    assert!(write(r#"{"check": "vibes"}"#).is_err());
+    assert!(write(r#"{"chip": {"fifo_depth": 0}}"#).is_err());
+}
+
+#[test]
+fn cpu_bus_faults_are_errors_not_panics() {
+    use fullerene_soc::riscv::asm::assemble;
+    use fullerene_soc::riscv::cpu::Cpu;
+    let mut cpu = Cpu::new(1024, true);
+    // Load from way outside RAM (below MMIO).
+    cpu.load_program(&assemble("li x1, 0x0FF00000\nlw x2, 0(x1)\nebreak").unwrap())
+        .unwrap();
+    let err = cpu.run(100).unwrap_err();
+    assert!(err.to_string().contains("bus fault") || err.to_string().contains("fault"));
+}
+
+#[test]
+fn firmware_runaway_is_detected() {
+    use fullerene_soc::riscv::asm::assemble;
+    use fullerene_soc::riscv::cpu::Cpu;
+    let mut cpu = Cpu::new(1024, true);
+    cpu.load_program(&assemble("loop:\nj loop").unwrap()).unwrap();
+    assert!(cpu.run(10_000).is_err(), "infinite loop must hit the step cap");
+}

@@ -1,0 +1,90 @@
+//! The three-layer contract: the AOT-compiled JAX/Pallas golden model
+//! (executed through PJRT from Rust), the pure-Rust integer reference and
+//! the cycle-level SoC simulator must agree bit-for-bit on the exported
+//! test samples.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially with a note) when the artifacts are absent so `cargo test`
+//! works on a fresh checkout.
+
+use fullerene_soc::datasets::Dataset;
+use fullerene_soc::nn::load_weights_json;
+use fullerene_soc::runtime::GoldenModel;
+use fullerene_soc::soc::{Soc, SocConfig};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FSOC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn have_artifacts(name: &str) -> bool {
+    let d = artifacts_dir();
+    d.join(format!("{name}.hlo.txt")).exists()
+        && d.join(format!("{name}.weights.json")).exists()
+        && d.join(format!("dataset_{name}.json")).exists()
+}
+
+fn check_dataset(name: &str, samples: usize) {
+    if !have_artifacts(name) {
+        eprintln!("skipping golden check for '{name}': run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let net = load_weights_json(&dir.join(format!("{name}.weights.json"))).unwrap();
+    let ds = Dataset::load_json(&dir.join(format!("dataset_{name}.json"))).unwrap();
+    let golden = GoldenModel::load(&dir, name).unwrap();
+    assert_eq!(golden.inputs, net.input_size());
+    assert_eq!(golden.classes, net.classes);
+
+    let mut soc = Soc::new(net.clone(), SocConfig::default()).unwrap();
+    for (i, sample) in ds.samples.iter().take(samples).enumerate() {
+        let raster = sample.to_raster(net.timesteps, net.input_size());
+        let reference = net.reference_run(&raster);
+        let xla = golden.run_sample(sample).unwrap();
+        assert_eq!(
+            xla, reference,
+            "{name}[{i}]: XLA golden vs rust reference disagree"
+        );
+        let chip = soc.run_sample(sample, true).unwrap();
+        assert_eq!(
+            chip.counts, reference,
+            "{name}[{i}]: cycle simulator vs reference disagree"
+        );
+    }
+}
+
+#[test]
+fn nmnist_three_way_agreement() {
+    check_dataset("nmnist", 5);
+}
+
+#[test]
+fn dvsgesture_three_way_agreement() {
+    check_dataset("dvsgesture", 3);
+}
+
+#[test]
+fn cifar10_three_way_agreement() {
+    check_dataset("cifar10", 3);
+}
+
+#[test]
+fn trained_accuracy_is_far_above_chance() {
+    // The headline Table-I accuracy path: trained weights on the chip.
+    if !have_artifacts("nmnist") {
+        eprintln!("skipping accuracy check: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let net = load_weights_json(&dir.join("nmnist.weights.json")).unwrap();
+    let ds = Dataset::load_json(&dir.join("dataset_nmnist.json")).unwrap();
+    let mut soc = Soc::new(net, SocConfig::default()).unwrap();
+    let n = ds.samples.len().min(20);
+    let acc = soc.run_dataset(&ds, n).unwrap();
+    assert!(
+        acc > 0.5,
+        "trained NMNIST accuracy {acc} is not above chance (0.1)"
+    );
+}

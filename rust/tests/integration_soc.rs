@@ -1,0 +1,190 @@
+//! Cross-module integration: the full SoC (cores + NoC + CPU + DMA) must
+//! compute exactly the network function defined by `NetworkDesc::reference_run`
+//! across mapping splits, fabric choices and CPU involvement.
+
+use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use fullerene_soc::core::Codebook;
+use fullerene_soc::datasets::{Sample, Workload};
+use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::util::prng::Rng;
+
+fn random_net(seed: u64, inputs: usize, hidden: usize, classes: usize, t: usize) -> NetworkDesc {
+    let mut rng = Rng::new(seed);
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 50,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let mut widx = |n: usize| -> Vec<u8> {
+        (0..n)
+            .map(|_| {
+                if rng.bool(0.15) {
+                    255 // pruned
+                } else {
+                    rng.below(16) as u8
+                }
+            })
+            .collect()
+    };
+    NetworkDesc {
+        name: format!("itest-{seed}"),
+        layers: vec![
+            LayerDesc {
+                name: "h".into(),
+                inputs,
+                neurons: hidden,
+                codebook: cb.clone(),
+                widx: widx(inputs * hidden),
+                neuron_params: params.clone(),
+            },
+            LayerDesc {
+                name: "o".into(),
+                inputs: hidden,
+                neurons: classes,
+                codebook: cb,
+                widx: widx(hidden * classes),
+                neuron_params: params,
+            },
+        ],
+        timesteps: t,
+        classes,
+    }
+}
+
+fn random_sample(seed: u64, inputs: usize, t: usize, density: f64) -> Sample {
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::new();
+    for ts in 0..t {
+        for a in 0..inputs {
+            if rng.bool(density) {
+                events.push((ts as u16, a as u32));
+            }
+        }
+    }
+    Sample { label: 0, events }
+}
+
+#[test]
+fn soc_equals_reference_across_configs() {
+    for (seed, max_npc, use_noc, drive_cpu) in [
+        (1u64, 64usize, true, true),
+        (2, 7, true, false), // awkward split, no CPU
+        (3, 64, false, true),
+        (4, 13, false, false),
+    ] {
+        let net = random_net(seed, 40, 28, 5, 6);
+        let sample = random_sample(seed * 100, 40, 6, 0.25);
+        let raster = sample.to_raster(6, 40);
+        let expect = net.reference_run(&raster);
+        let mut soc = Soc::new(
+            net,
+            SocConfig {
+                max_neurons_per_core: max_npc,
+                use_noc,
+                drive_cpu,
+                ..SocConfig::default()
+            },
+        )
+        .unwrap();
+        let got = soc.run_sample(&sample, true).unwrap();
+        assert_eq!(
+            got.counts, expect,
+            "divergence at seed={seed} split={max_npc} noc={use_noc} cpu={drive_cpu}"
+        );
+    }
+}
+
+#[test]
+fn multi_sample_runs_are_independent() {
+    // Running A then B must give B the same result as running B alone
+    // (state fully reset between inferences).
+    let net = random_net(9, 32, 20, 4, 5);
+    let a = random_sample(900, 32, 5, 0.3);
+    let b = random_sample(901, 32, 5, 0.3);
+    let cfg = SocConfig {
+        max_neurons_per_core: 16,
+        ..SocConfig::default()
+    };
+    let mut soc = Soc::new(net.clone(), cfg.clone()).unwrap();
+    soc.run_sample(&a, true).unwrap();
+    let b_after_a = soc.run_sample(&b, true).unwrap();
+    let mut fresh = Soc::new(net, cfg).unwrap();
+    let b_alone = fresh.run_sample(&b, true).unwrap();
+    assert_eq!(b_after_a.counts, b_alone.counts);
+}
+
+#[test]
+fn three_layer_network_works() {
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 30,
+        leak: LeakMode::None,
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let mk = |inputs: usize, n: usize, salt: usize| LayerDesc {
+        name: format!("l{salt}"),
+        inputs,
+        neurons: n,
+        codebook: cb.clone(),
+        widx: (0..inputs * n).map(|i| ((i * 11 + salt) % 16) as u8).collect(),
+        neuron_params: params.clone(),
+    };
+    let net = NetworkDesc {
+        name: "deep".into(),
+        layers: vec![mk(24, 18, 1), mk(18, 12, 2), mk(12, 4, 3)],
+        timesteps: 5,
+        classes: 4,
+    };
+    let sample = random_sample(77, 24, 5, 0.4);
+    let expect = net.reference_run(&sample.to_raster(5, 24));
+    let mut soc = Soc::new(
+        net,
+        SocConfig {
+            max_neurons_per_core: 7,
+            ..SocConfig::default()
+        },
+    )
+    .unwrap();
+    let got = soc.run_sample(&sample, true).unwrap();
+    assert_eq!(got.counts, expect);
+}
+
+#[test]
+fn full_workload_dataset_end_to_end() {
+    // NMNIST-geometry dataset through a thin network on the full chip.
+    let net = random_net(5, Workload::Nmnist.inputs(), 48, 10, 20);
+    let ds = Workload::Nmnist.generate(3, 42);
+    let mut soc = Soc::new(net.clone(), SocConfig::default()).unwrap();
+    let acc = soc.run_dataset(&ds, 3).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    let rep = soc.finish_report("nmnist-itest");
+    assert!(rep.sops > 0);
+    assert!(rep.power_mw > 0.0 && rep.power_mw < 200.0, "power {}", rep.power_mw);
+    assert!(rep.pj_per_sop > 0.1 && rep.pj_per_sop < 100.0, "pJ/SOP {}", rep.pj_per_sop);
+}
+
+#[test]
+fn energy_scales_with_voltage() {
+    let net = random_net(6, 32, 20, 4, 5);
+    let s = random_sample(600, 32, 5, 0.3);
+    let run_at = |v: f64| {
+        let mut soc = Soc::new(
+            net.clone(),
+            SocConfig {
+                supply_v: v,
+                max_neurons_per_core: 16,
+                ..SocConfig::default()
+            },
+        )
+        .unwrap();
+        soc.run_sample(&s, true).unwrap();
+        soc.finish_report("v-sweep").pj_per_sop
+    };
+    let lo = run_at(1.08);
+    let hi = run_at(1.32);
+    assert!(hi > lo * 1.2, "voltage scaling missing: {lo} vs {hi}");
+}

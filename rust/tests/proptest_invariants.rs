@@ -1,0 +1,246 @@
+//! Cross-module property tests (in-tree `propcheck` loop; seeds reported
+//! on failure): coordinator/routing/state invariants the paper's system
+//! depends on.
+
+use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use fullerene_soc::core::{pack_spikes, unpack_spikes, Codebook, NeuroCore, SynapsesBuilder};
+use fullerene_soc::energy::EnergyParams;
+use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+use fullerene_soc::nn::Mapping;
+use fullerene_soc::noc::{Dest, NocSim, Topology};
+use fullerene_soc::util::propcheck::check;
+
+#[test]
+fn prop_noc_p2p_delivers_exactly_once() {
+    check("noc-exactly-once", 25, 0xA11CE, |r| {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let n_flits = 1 + r.below_usize(60);
+        let mut expected = std::collections::BTreeMap::new();
+        for _ in 0..n_flits {
+            let src = r.below_usize(20);
+            let mut dst = r.below_usize(19);
+            if dst >= src {
+                dst += 1;
+            }
+            let axon = r.next_u32() % 512;
+            let ids = sim.inject(src, &Dest::Core(dst), axon);
+            expected.insert(ids[0], (dst, axon));
+        }
+        sim.run_until_drained(100_000).unwrap();
+        let delivered = sim.delivered();
+        assert_eq!(delivered.len(), n_flits);
+        let mut seen = std::collections::BTreeSet::new();
+        for d in delivered {
+            assert!(seen.insert(d.flit.id), "flit {} delivered twice", d.flit.id);
+            let (dst, axon) = expected[&d.flit.id];
+            assert_eq!(d.flit.dst_core, dst);
+            assert_eq!(d.flit.axon, axon);
+        }
+    });
+}
+
+#[test]
+fn prop_noc_broadcast_reaches_every_target_once() {
+    check("noc-broadcast-cover", 20, 0xB0A5, |r| {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let src = r.below_usize(20);
+        let k = 1 + r.below_usize(8);
+        let mut dsts: Vec<usize> = r
+            .choose_k(19, k)
+            .into_iter()
+            .map(|d| if d >= src { d + 1 } else { d })
+            .collect();
+        dsts.sort_unstable();
+        sim.inject(src, &Dest::Cores(dsts.clone()), 3);
+        sim.run_until_drained(100_000).unwrap();
+        let mut got: Vec<usize> = sim.delivered().iter().map(|d| d.flit.dst_core).collect();
+        got.sort_unstable();
+        assert_eq!(got, dsts);
+    });
+}
+
+#[test]
+fn prop_zspe_never_creates_or_drops_spikes() {
+    check("pack-unpack-exact", 100, 0x5B1, |r| {
+        let n = 1 + r.below_usize(200);
+        let spikes: Vec<bool> = (0..n).map(|_| r.bool(0.3)).collect();
+        let words = pack_spikes(&spikes);
+        assert_eq!(unpack_spikes(&words, n), spikes);
+        let ones: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(ones as usize, spikes.iter().filter(|&&s| s).count());
+    });
+}
+
+#[test]
+fn prop_core_sop_count_is_sum_of_fanouts() {
+    check("core-sop-count", 20, 0xC0DE, |r| {
+        let axons = 16 + r.below_usize(64);
+        let neurons = 1 + r.below_usize(64);
+        let cb = Codebook::default_log16();
+        let mut b = SynapsesBuilder::new(axons, neurons, cb.n());
+        let mut fanout = vec![0u64; axons];
+        for a in 0..axons {
+            for n in 0..neurons {
+                if r.bool(0.4) {
+                    b.connect(a, n, r.below(16) as u8).unwrap();
+                    fanout[a] += 1;
+                }
+            }
+        }
+        let mut core = NeuroCore::new(
+            1,
+            axons,
+            neurons,
+            NeuronParams::default(),
+            cb,
+            b.build(),
+            EnergyParams::nominal(),
+        )
+        .unwrap();
+        let spikes: Vec<u32> = (0..axons)
+            .filter(|_| r.bool(0.5))
+            .map(|a| a as u32)
+            .collect();
+        let expect: u64 = spikes.iter().map(|&a| fanout[a as usize]).sum();
+        core.stage_input_spikes(&spikes);
+        let out = core.tick_timestep();
+        assert_eq!(out.stats.pipeline.sops, expect);
+        assert_eq!(out.stats.pipeline.spikes_forwarded, spikes.len() as u64);
+    });
+}
+
+#[test]
+fn prop_mapper_places_every_neuron_exactly_once() {
+    check("mapper-coverage", 30, 0x3A9, |r| {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams::default();
+        let hidden = 1 + r.below_usize(300);
+        let classes = 1 + r.below_usize(20);
+        let inputs = 1 + r.below_usize(64);
+        let net = NetworkDesc {
+            name: "prop".into(),
+            layers: vec![
+                LayerDesc {
+                    name: "h".into(),
+                    inputs,
+                    neurons: hidden,
+                    codebook: cb.clone(),
+                    widx: vec![0; inputs * hidden],
+                    neuron_params: params.clone(),
+                },
+                LayerDesc {
+                    name: "o".into(),
+                    inputs: hidden,
+                    neurons: classes,
+                    codebook: cb.clone(),
+                    widx: vec![0; hidden * classes],
+                    neuron_params: params.clone(),
+                },
+            ],
+            timesteps: 2,
+            classes,
+        };
+        let cap = 1 + r.below_usize(64);
+        match Mapping::plan(&net, 20, cap) {
+            Ok(m) => {
+                for (li, layer) in net.layers.iter().enumerate() {
+                    let mut covered = vec![false; layer.neurons];
+                    for p in m.placements.iter().filter(|p| p.layer == li) {
+                        assert!(p.neurons <= cap);
+                        for n in p.neuron_offset..p.neuron_offset + p.neurons {
+                            assert!(!covered[n], "neuron {n} placed twice");
+                            covered[n] = true;
+                        }
+                    }
+                    assert!(covered.iter().all(|&c| c), "layer {li} gap");
+                }
+                // No two placements share a physical core.
+                let mut ids: Vec<usize> = m.placements.iter().map(|p| p.core_id).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                assert_eq!(ids.len(), m.placements.len());
+            }
+            Err(_) => {
+                // Must only fail when the network genuinely doesn't fit.
+                let need: usize = net
+                    .layers
+                    .iter()
+                    .map(|l| l.neurons.div_ceil(cap))
+                    .sum();
+                assert!(need > 20, "mapper refused a fitting network (need {need})");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_neuron_mp_always_within_register_range() {
+    check("mp-range", 50, 0x90D, |r| {
+        use fullerene_soc::core::NeuronArray;
+        let bits = 8 + r.below(9) as u32; // 8..16
+        let params = NeuronParams {
+            threshold: 1 + r.below(1 << (bits - 1)) as i32,
+            leak: match r.below(3) {
+                0 => LeakMode::None,
+                1 => LeakMode::Linear(r.below(16) as i32),
+                _ => LeakMode::Shift(1 + r.below(4) as u8),
+            },
+            reset: if r.bool(0.5) { ResetMode::Zero } else { ResetMode::Subtract },
+            mp_bits: bits,
+        };
+        let (lo, hi) = params.mp_range();
+        let mut arr = NeuronArray::new(4, params);
+        for _ in 0..200 {
+            let i = r.below_usize(4);
+            let acc = r.range_i64(-40000, 40000) as i32;
+            arr.update_one(i, acc);
+            let m = arr.mp(i);
+            assert!(m >= lo && m <= hi, "mp {m} outside [{lo}, {hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_reference_run_spike_conservation() {
+    // Output spike counts can never exceed neurons × timesteps, and an
+    // all-zero raster yields zero spikes.
+    check("reference-bounds", 20, 0xFEED, |r| {
+        let cb = Codebook::default_log16();
+        let classes = 1 + r.below_usize(8);
+        let inputs = 1 + r.below_usize(32);
+        let t = 1 + r.below_usize(8);
+        let net = NetworkDesc {
+            name: "c".into(),
+            layers: vec![LayerDesc {
+                name: "o".into(),
+                inputs,
+                neurons: classes,
+                codebook: cb,
+                widx: (0..inputs * classes).map(|_| r.below(16) as u8).collect(),
+                neuron_params: NeuronParams::default(),
+            }],
+            timesteps: t,
+            classes,
+        };
+        let zero = vec![vec![false; inputs]; t];
+        assert!(net.reference_run(&zero).iter().all(|&c| c == 0));
+        let full = vec![vec![true; inputs]; t];
+        let counts = net.reference_run(&full);
+        assert!(counts.iter().all(|&c| c as usize <= t));
+    });
+}
+
+#[test]
+fn prop_quantizer_respects_codebook_geometry() {
+    check("quant-geometry", 20, 0x0B0E, |r| {
+        use fullerene_soc::nn::quant::kmeans_quantize;
+        let len = 30 + r.below_usize(200);
+        let w: Vec<f64> = (0..len).map(|_| r.normal() * 0.5).collect();
+        let n = [4usize, 8, 16][r.below_usize(3)];
+        let bits = [4usize, 8, 16][r.below_usize(3)];
+        let q = kmeans_quantize(&w, n, bits, 8).unwrap();
+        assert_eq!(q.codebook.n(), n);
+        assert_eq!(q.codebook.w_bits(), bits);
+        assert_eq!(q.widx.len(), len);
+    });
+}
