@@ -15,7 +15,7 @@ use fullerene_soc::nn::load_weights_json;
 use fullerene_soc::soc::{Soc, SocConfig};
 use std::path::Path;
 
-fn load_net() -> anyhow::Result<fullerene_soc::nn::NetworkDesc> {
+fn load_net() -> fullerene_soc::Result<fullerene_soc::nn::NetworkDesc> {
     let trained = Path::new("artifacts/dvsgesture.weights.json");
     if trained.exists() {
         println!("using trained weights: {}", trained.display());
@@ -58,7 +58,7 @@ fn load_net() -> anyhow::Result<fullerene_soc::nn::NetworkDesc> {
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fullerene_soc::Result<()> {
     let net = load_net()?;
     let w = Workload::DvsGesture;
     let ds_path = Path::new("artifacts/dataset_dvsgesture.json");

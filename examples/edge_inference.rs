@@ -18,9 +18,10 @@ use fullerene_soc::datasets::Dataset;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::nn::load_weights_json;
 use fullerene_soc::util::cli::Args;
+use fullerene_soc::{Error, Result};
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let limit: usize = args.get_parse_or("samples", 50);
@@ -61,12 +62,16 @@ fn main() -> anyhow::Result<()> {
             if out.mismatches == 0 { "✓" } else { "✗ DIVERGENCE" }
         );
         if out.mismatches > 0 {
-            anyhow::bail!("{name}: cycle simulator diverged from the golden model");
+            return Err(Error::Runtime(format!(
+                "{name}: cycle simulator diverged from the golden model"
+            )));
         }
         reports.push(out.report);
     }
     if reports.is_empty() {
-        anyhow::bail!("no artifacts found — run `make artifacts`");
+        return Err(Error::Artifact(
+            "no artifacts found — run `make artifacts`".into(),
+        ));
     }
     println!("\n=== Table I (reproduced) ===\n{}", ChipReport::table(&reports).render());
     Ok(())

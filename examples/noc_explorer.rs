@@ -21,7 +21,7 @@ fn topologies() -> Vec<Topology> {
     ]
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fullerene_soc::Result<()> {
     // --- static analytics (Fig. 5a/5b) ---------------------------------
     let stats: Vec<TopoStats> = topologies().iter().map(TopoStats::compute).collect();
     println!("## static topology comparison (Fig. 5a/5b)\n{}", TopoStats::table(&stats).render());

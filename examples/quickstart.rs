@@ -14,7 +14,7 @@ use fullerene_soc::nn::quant::kmeans_quantize;
 use fullerene_soc::soc::{Soc, SocConfig};
 use fullerene_soc::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fullerene_soc::Result<()> {
     // 1. A 2-layer SNN for the NMNIST-like geometry. Weights here are
     //    random floats quantized through the same non-uniform codebook
     //    pipeline the trained artifacts use (run `make artifacts` +
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let (inputs, hidden, classes) = (w.inputs(), 64, w.classes());
     let mut rng = Rng::new(7);
 
-    let mut make_layer = |name: &str, a: usize, n: usize| -> anyhow::Result<LayerDesc> {
+    let mut make_layer = |name: &str, a: usize, n: usize| -> fullerene_soc::Result<LayerDesc> {
         let floats: Vec<f64> = (0..a * n).map(|_| rng.normal() * 0.3).collect();
         let q = kmeans_quantize(&floats, 16, 8, 12)?;
         Ok(LayerDesc {

@@ -1,68 +1,66 @@
 //! Scale-up study (paper: "the NoC can be scaled up through extended
 //! off-chip high-level router nodes"): multi-domain systems built from
-//! fullerene level-1 domains joined by level-2 routers, from 1 domain
-//! (20 cores / 160 K neurons) to 64 domains (10 M neurons).
+//! fullerene level-1 domains joined by a ring of level-2 routers, from
+//! 1 domain (20 cores / 160 K neurons) to 64 domains (10 M neurons).
+//!
+//! Every system up to 16 domains is **cycle-simulated** — inter-domain
+//! flits really climb `core → L1 → L2`, ride the L2 ring and descend,
+//! with L2 hop/link energy ledgered — and checked against the retained
+//! analytic hop model. Beyond 16 domains the analytic model extrapolates.
 //!
 //! ```bash
 //! cargo run --release --example scaling
 //! ```
 
-use fullerene_soc::energy::EnergyParams;
+use fullerene_soc::benches_support;
 use fullerene_soc::metrics::Table;
-use fullerene_soc::noc::multilevel::MultiDomain;
-use fullerene_soc::noc::{Dest, NocSim, TopoStats, Topology};
-use fullerene_soc::util::prng::Rng;
+use fullerene_soc::noc::{AnalyticModel, TopoStats, Topology};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fullerene_soc::Result<()> {
     // --- the single-domain baseline ---------------------------------------
     let base = TopoStats::compute(&Topology::fullerene());
-    let with_l2 = TopoStats::compute(&Topology::fullerene_with_l2());
     println!(
-        "single domain: avg core-to-core distance {:.2} links ({:.2} router hops); \
-         adding the L2 centre: {:.2} links",
+        "single domain: avg core-to-core distance {:.2} links = {:.2} router \
+         hops (paper Fig. 5a: 3.16)",
         base.avg_core_hops,
-        base.avg_core_hops / 2.0,
-        with_l2.avg_core_hops
+        base.avg_core_hops / 2.0
     );
 
-    // --- multi-domain scaling ----------------------------------------------
-    let mut t = Table::new(&[
-        "domains",
-        "cores",
-        "neurons",
-        "avg router hops (uniform)",
-        "intra-domain hops",
-        "worst inter-domain hops",
-    ]);
-    for d in [1usize, 2, 4, 8, 16, 32, 64] {
-        let m = MultiDomain::new(d);
-        let worst = if d > 1 {
-            m.hops_between(0, (d / 2) * 20) // diametrically opposite domain
-        } else {
-            m.intra_hops
-        };
+    // --- cycle-simulated multi-domain scaling ------------------------------
+    // (20 cores / 0.16 M neurons per domain; 80 % of traffic intra-domain)
+    println!("\n## cycle-level scaling (simulated fabric vs analytic oracle)");
+    println!(
+        "{}",
+        benches_support::multidomain_table(&[1, 2, 4, 8, 16], 600, 0.8, 17).render()
+    );
+
+    // --- analytic extrapolation to the 10M-neuron regime --------------------
+    println!("## analytic extrapolation (uniform traffic)");
+    let mut t = Table::new(&["domains", "cores", "neurons", "avg router hops"]);
+    for d in [16usize, 32, 64] {
+        let a = AnalyticModel::new(d);
         t.push_row(vec![
             d.to_string(),
-            m.total_cores().to_string(),
-            format!("{:.2}M", m.total_neurons() as f64 / 1e6),
-            format!("{:.2}", m.avg_hops_uniform()),
-            format!("{:.2}", m.intra_hops),
-            format!("{:.2}", worst),
+            (d * 20).to_string(),
+            format!("{:.2}M", (d * 20 * 8192) as f64 / 1e6),
+            format!("{:.2}", a.avg_hops_uniform()),
         ]);
     }
     println!("{}", t.render());
 
-    // Locality analysis: what fraction of traffic must stay intra-domain
-    // for the average to stay under 2× the single-domain latency?
+    // --- locality requirement ----------------------------------------------
+    // What fraction of traffic may cross domains before the average path
+    // exceeds 2× the single-domain latency?
     println!("## locality requirement");
     let mut t = Table::new(&["domains", "max remote fraction for <=2x latency"]);
     for d in [4usize, 16, 64] {
-        let m = MultiDomain::new(d);
-        let intra = m.intra_hops;
-        let remote = 2.0 * m.to_l2_hops
-            + (1..d).map(|k| m.l2_ring_hops(0, k) as f64).sum::<f64>() / (d - 1) as f64;
+        let a = AnalyticModel::new(d);
+        let intra = a.intra_hops;
+        let ring: f64 =
+            (1..d).map(|k| a.l2_ring_hops(0, k) as f64).sum::<f64>() / (d - 1) as f64;
+        let remote = a.climb_hops + ring + a.descend_hops;
         // solve intra*(1-x) + remote*x = 2*intra
-        let x = ((2.0 * intra - intra) / (remote - intra)).clamp(0.0, 1.0);
+        let x = (intra / (remote - intra)).clamp(0.0, 1.0);
         t.push_row(vec![d.to_string(), format!("{:.1}%", x * 100.0)]);
     }
     println!("{}", t.render());
@@ -70,33 +68,6 @@ fn main() -> anyhow::Result<()> {
         "interpretation: mapping layers within domains (what nn::Mapping \
          does) keeps nearly all spike traffic on the cheap intra-domain \
          fabric; the L2 ring only carries layer-boundary crossings."
-    );
-
-    // --- cycle-level validation of the analytic model ----------------------
-    // Simulate a real 4-domain graph and compare measured hop counts with
-    // the analytic expectation (10 % locality mix).
-    println!("## cycle-level multi-domain simulation (4 domains, 80 cores)");
-    let topo = Topology::multi_domain(4);
-    let mut sim = NocSim::new(topo, 4, EnergyParams::nominal());
-    let mut rng = Rng::new(17);
-    for _ in 0..400 {
-        let src = rng.below_usize(80);
-        // 90 % intra-domain, 10 % cross-domain traffic.
-        let dst = if rng.bool(0.9) {
-            (src / 20) * 20 + rng.below_usize(20)
-        } else {
-            rng.below_usize(80)
-        };
-        if dst != src {
-            sim.inject(src, &Dest::Core(dst), 0);
-        }
-    }
-    sim.run_until_drained(1_000_000)?;
-    let st = sim.stats();
-    println!(
-        "delivered {} flits | avg latency {:.1} cycles | avg {:.2} router \
-         hops | max latency {}",
-        st.delivered, st.avg_latency, st.avg_hops, st.max_latency
     );
     Ok(())
 }

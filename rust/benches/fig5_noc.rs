@@ -1,6 +1,7 @@
 //! Fig. 5 reproduction: (a) average NoC latency across topologies,
 //! (b) node-degree statistics, (c) CMRouter throughput and transmission
-//! energy per mode.
+//! energy per mode, plus the level-2 multi-domain scaling scenario
+//! (cycle-simulated hierarchical fabric vs the analytic oracle).
 //!
 //! Paper anchors: fullerene average latency 3.16 hops (up to 39.9 % lower
 //! than the baselines), average degree 3.75 (+32 % vs 2D-mesh), degree
@@ -48,6 +49,18 @@ fn main() {
          0.2–0.4 spike/cycle at saturation"
     );
 
+    // --- multi-domain scaling (level-2 fabric, cycle-simulated) ------------
+    println!("\n## multi-domain scaling: simulated L2 fabric vs analytic oracle");
+    println!(
+        "{}",
+        benches_support::multidomain_table(&[1, 2, 4, 8], 400, 0.8, 42).render()
+    );
+    println!(
+        "80% of traffic stays intra-domain (the mapper's layer-locality \
+         regime); inter-domain flits climb core→L1→L2, ride the L2 ring \
+         and descend, every hop energy-ledgered"
+    );
+
     // --- simulator wall-clock (perf tracking) -------------------------------
     let mut b = Bench::new("fig5_noc");
     for &(name, load) in &[("light", 0.05), ("heavy", 0.4)] {
@@ -58,5 +71,11 @@ fn main() {
             sim.stats().delivered
         });
     }
+    b.bench("multidomain-4x/400-flits", || {
+        let m = fullerene_soc::noc::MultiDomain::new(4);
+        m.measure(400, 0.8, 7, EnergyParams::nominal())
+            .unwrap()
+            .delivered
+    });
     b.finish();
 }

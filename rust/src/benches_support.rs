@@ -7,6 +7,10 @@
 //!   traditional baseline (paper Fig. 3).
 //! - [`fig5c_sweep`] — CMRouter throughput (spike/cycle) and transmission
 //!   energy (pJ/hop) for P2P and 1-to-3 broadcast (paper Fig. 5c).
+//! - [`multidomain_sweep`] — level-2 scale-up: cycle-simulated hop counts,
+//!   latency and L2 energy of D-domain systems against the retained
+//!   analytic oracle (the paper's "extended off-chip high-level router
+//!   nodes" claim, measured instead of asserted).
 //! - [`fig6_power`] — RISC-V average power with sleep/clock-gating vs the
 //!   busy-wait baseline on the MNIST control protocol (paper Fig. 6).
 
@@ -16,7 +20,7 @@ use crate::energy::constants::F_CORE_HZ;
 use crate::energy::{EnergyParams, EventClass};
 use crate::metrics::Table;
 use crate::noc::traffic::{Pattern, TrafficGen};
-use crate::noc::{NocSim, Topology};
+use crate::noc::{MultiDomain, NocSim, Topology};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::firmware;
 use crate::util::prng::Rng;
@@ -226,6 +230,94 @@ pub fn fig5c_table(seed: u64) -> Table {
     t
 }
 
+/// One multi-domain scaling measurement point.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    /// Domains in the system.
+    pub domains: usize,
+    /// Total cores (20 per domain).
+    pub cores: usize,
+    /// Flits delivered in the measurement run.
+    pub delivered: u64,
+    /// Simulated mean router hops per flit.
+    pub measured_hops: f64,
+    /// Analytic-oracle expectation for the same traffic.
+    pub analytic_hops: f64,
+    /// Mean injection→ejection latency (cycles).
+    pub avg_latency: f64,
+    /// Relative deviation of the simulation from the analytic oracle.
+    pub rel_err: f64,
+    /// Hops switched through level-2 routers.
+    pub l2_hops: u64,
+    /// Dynamic NoC energy of the run (pJ).
+    pub dynamic_pj: f64,
+}
+
+/// Cycle-simulate D-domain systems under random P2P traffic (`locality`
+/// fraction intra-domain) and report measured vs analytic hop counts.
+pub fn multidomain_sweep(
+    domain_counts: &[usize],
+    flits: usize,
+    locality: f64,
+    seed: u64,
+) -> Vec<ScalePoint> {
+    domain_counts
+        .iter()
+        .map(|&d| {
+            let m = MultiDomain::new(d);
+            let r = m
+                .measure(flits, locality, seed + d as u64, EnergyParams::nominal())
+                .expect("multi-domain fabric must drain");
+            ScalePoint {
+                domains: d,
+                cores: m.total_cores(),
+                delivered: r.delivered,
+                measured_hops: r.measured_hops,
+                analytic_hops: r.analytic_hops,
+                avg_latency: r.avg_latency,
+                rel_err: r.relative_error(),
+                l2_hops: r.l2_hop_events,
+                dynamic_pj: r.dynamic_pj,
+            }
+        })
+        .collect()
+}
+
+/// The multi-domain sweep as a printable table.
+pub fn multidomain_table(
+    domain_counts: &[usize],
+    flits: usize,
+    locality: f64,
+    seed: u64,
+) -> Table {
+    let rows = multidomain_sweep(domain_counts, flits, locality, seed);
+    let mut t = Table::new(&[
+        "domains",
+        "cores",
+        "delivered",
+        "sim hops",
+        "analytic hops",
+        "err %",
+        "latency",
+        "L2 hops",
+        "NoC pJ",
+    ]);
+    for r in &rows {
+        t.push_row(vec![
+            r.domains.to_string(),
+            r.cores.to_string(),
+            r.delivered.to_string(),
+            format!("{:.2}", r.measured_hops),
+            format!("{:.2}", r.analytic_hops),
+            format!("{:.1}", r.rel_err * 100.0),
+            format!("{:.1}", r.avg_latency),
+            r.l2_hops.to_string(),
+            format!("{:.1}", r.dynamic_pj),
+        ]);
+    }
+    t
+}
+
 /// Fig. 6: run the MNIST control protocol on the ISS twice — with
 /// sleep/clock gating and as the busy-wait baseline — and report average
 /// power at `f_cpu` = 16 MHz (the paper's low-power CPU operating point).
@@ -331,6 +423,21 @@ mod tests {
         assert!(bc[0].pj_per_hop < p2p[0].pj_per_hop);
         // Throughput rises with offered load.
         assert!(p2p.last().unwrap().throughput > p2p[0].throughput);
+    }
+
+    #[test]
+    fn multidomain_sweep_tracks_the_analytic_oracle() {
+        let pts = multidomain_sweep(&[1, 2, 4], 300, 0.7, 9);
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert!(p.delivered > 200, "D={}: {} delivered", p.domains, p.delivered);
+            assert!(p.rel_err < 0.20, "D={}: err {}", p.domains, p.rel_err);
+        }
+        // Single domain never touches L2; scaled systems must.
+        assert_eq!(pts[0].l2_hops, 0);
+        assert!(pts[1].l2_hops > 0 && pts[2].l2_hops > 0);
+        // More domains → longer average paths and more NoC energy.
+        assert!(pts[2].measured_hops > pts[0].measured_hops);
     }
 
     #[test]

@@ -5,9 +5,9 @@
 //! ```json
 //! {
 //!   "chip": {
-//!     "n_cores": 20, "max_neurons_per_core": 8192, "fifo_depth": 4,
-//!     "f_core_mhz": 100, "f_cpu_mhz": 50, "supply_v": 1.08,
-//!     "use_noc": true, "drive_cpu": true
+//!     "domains": 1, "n_cores": 20, "max_neurons_per_core": 8192,
+//!     "fifo_depth": 4, "f_core_mhz": 100, "f_cpu_mhz": 50,
+//!     "supply_v": 1.08, "use_noc": true, "drive_cpu": true
 //!   },
 //!   "workload": {"name": "nmnist", "samples": 50, "seed": 7},
 //!   "check": "reference",
@@ -97,6 +97,9 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(chip) = j.get_opt("chip") {
             let s = &mut cfg.soc;
+            if let Some(v) = chip.get_opt("domains") {
+                s.domains = v.as_usize()?;
+            }
             if let Some(v) = chip.get_opt("n_cores") {
                 s.n_cores = v.as_usize()?;
             }
@@ -143,10 +146,17 @@ impl RunConfig {
 
     /// Validate ranges.
     pub fn validate(&self) -> Result<()> {
-        if self.soc.n_cores == 0 || self.soc.n_cores > 20 {
+        if !(1..=64).contains(&self.soc.domains) {
             return Err(Error::Config(format!(
-                "n_cores {} outside 1..=20 (one fullerene domain)",
-                self.soc.n_cores
+                "domains {} outside 1..=64",
+                self.soc.domains
+            )));
+        }
+        let max_cores = 20 * self.soc.domains;
+        if self.soc.n_cores == 0 || self.soc.n_cores > max_cores {
+            return Err(Error::Config(format!(
+                "n_cores {} outside 1..={max_cores} ({} fullerene domain(s))",
+                self.soc.n_cores, self.soc.domains
             )));
         }
         if self.soc.max_neurons_per_core == 0
@@ -213,6 +223,19 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.soc.supply_v = 2.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.soc.domains = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn multi_domain_config_extends_the_core_budget() {
+        let mut cfg = RunConfig::default();
+        cfg.soc.domains = 4;
+        cfg.soc.n_cores = 80;
+        assert!(cfg.validate().is_ok());
+        cfg.soc.n_cores = 81;
         assert!(cfg.validate().is_err());
     }
 

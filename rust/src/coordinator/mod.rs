@@ -1,7 +1,9 @@
 //! Experiment coordination: ties datasets, the SoC simulator and the XLA
 //! golden model together into reproducible experiment runs (the layer the
-//! CLI and benches drive).
+//! CLI and benches drive). The sharded batch runner
+//! ([`ExperimentRunner::run_parallel`]) spreads a sample set across all
+//! host cores, one simulated chip per worker, with a deterministic merge.
 
 pub mod runner;
 
-pub use runner::{ExperimentConfig, ExperimentRunner, GoldenCheck};
+pub use runner::{ExperimentConfig, ExperimentOutcome, ExperimentRunner, GoldenCheck};

@@ -1,9 +1,19 @@
 //! [`ExperimentRunner`]: run a workload on the simulated chip, optionally
 //! cross-checking every sample against the functional references (the
 //! in-process integer reference and/or the AOT-compiled XLA golden model).
+//!
+//! Heavy-traffic experiments use the **sharded batch runner**
+//! ([`ExperimentRunner::run_parallel`]): the sample list is split into
+//! contiguous shards — a pure function of `(n, workers)` — each shard
+//! runs on its own [`Soc`] on its own OS thread (`std::thread::scope`),
+//! and the shard [`ChipReport`]s merge in shard order through
+//! [`ChipReport::merged`]. Because the simulator is deterministic and the
+//! merge order is fixed, the aggregate is **bit-identical** to executing
+//! the same shards sequentially ([`ExperimentRunner::run_sharded`] with
+//! `parallel = false`), regardless of thread scheduling.
 
-use crate::datasets::Dataset;
-use crate::energy::ChipReport;
+use crate::datasets::{Dataset, Sample};
+use crate::energy::{AreaModel, ChipReport};
 use crate::nn::NetworkDesc;
 use crate::runtime::GoldenModel;
 use crate::soc::{Soc, SocConfig};
@@ -50,12 +60,47 @@ impl Default for ExperimentConfig {
 /// Outcome of an experiment run.
 #[derive(Debug)]
 pub struct ExperimentOutcome {
-    /// Chip-level report (Table-I row).
+    /// Chip-level report (Table-I row; a deterministic merge of shard
+    /// reports for sharded runs).
     pub report: ChipReport,
     /// Samples where the chip disagreed with a reference (should be 0).
     pub mismatches: u64,
     /// Samples checked against a golden model.
     pub checked: u64,
+}
+
+/// Shard `w` of `workers` over `n` items: the contiguous range
+/// `[w·n/workers, (w+1)·n/workers)`. Pure in its inputs, so sequential
+/// and parallel execution see identical work splits.
+fn shard_range(n: usize, workers: usize, w: usize) -> (usize, usize) {
+    (w * n / workers, (w + 1) * n / workers)
+}
+
+/// Run one shard of samples on a fresh [`Soc`]; returns the shard report
+/// and reference-check counters. This is the single code path both the
+/// sequential and the parallel runner execute per shard.
+fn run_shard(
+    net: &NetworkDesc,
+    config: &ExperimentConfig,
+    workload: &str,
+    samples: &[Sample],
+) -> Result<(ChipReport, u64, u64)> {
+    let mut soc = Soc::new(net.clone(), config.soc.clone())?;
+    let mut mismatches = 0u64;
+    let mut checked = 0u64;
+    let use_ref = matches!(config.check, GoldenCheck::Reference | GoldenCheck::Both);
+    for sample in samples {
+        let r = soc.run_sample(sample, true)?;
+        if use_ref {
+            let raster = sample.to_raster(net.timesteps, net.input_size());
+            let expect = net.reference_run(&raster);
+            checked += 1;
+            if expect != r.counts {
+                mismatches += 1;
+            }
+        }
+    }
+    Ok((soc.finish_report(workload), mismatches, checked))
 }
 
 /// The runner.
@@ -115,6 +160,88 @@ impl ExperimentRunner {
         }
         Ok(ExperimentOutcome {
             report: soc.finish_report(&ds.name),
+            mismatches,
+            checked,
+        })
+    }
+
+    /// Sharded batch run across all host cores: one [`Soc`] per worker
+    /// thread over a contiguous sample shard, merged deterministically.
+    /// Bit-identical to [`ExperimentRunner::run_sharded`] with
+    /// `parallel = false` for the same `(dataset, workers)` input.
+    ///
+    /// The XLA golden model holds per-process runtime state, so only
+    /// [`GoldenCheck::None`] and [`GoldenCheck::Reference`] are supported
+    /// here; use [`ExperimentRunner::run`] for XLA-checked runs.
+    pub fn run_parallel(&self, ds: &Dataset, workers: usize) -> Result<ExperimentOutcome> {
+        self.run_sharded(ds, workers, true)
+    }
+
+    /// Sharded run with explicit execution mode (`parallel = false`
+    /// executes the exact same shards one after another on the calling
+    /// thread — the reference path for the bit-identity guarantee).
+    pub fn run_sharded(
+        &self,
+        ds: &Dataset,
+        workers: usize,
+        parallel: bool,
+    ) -> Result<ExperimentOutcome> {
+        if matches!(self.config.check, GoldenCheck::Xla | GoldenCheck::Both) {
+            return Err(Error::Config(
+                "sharded runner supports check none|reference (XLA golden state \
+                 is per-process); use ExperimentRunner::run"
+                    .into(),
+            ));
+        }
+        if ds.inputs != self.net.input_size() {
+            return Err(Error::Config(format!(
+                "dataset inputs {} != network inputs {}",
+                ds.inputs,
+                self.net.input_size()
+            )));
+        }
+        let n = ds.samples.len().min(self.config.limit);
+        let workers = workers.clamp(1, n.max(1));
+        let shard_results: Vec<Result<(ChipReport, u64, u64)>> = if parallel && workers > 1 {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        let (a, b) = shard_range(n, workers, w);
+                        let net = &self.net;
+                        let config = &self.config;
+                        let name = ds.name.as_str();
+                        let shard = &ds.samples[a..b];
+                        scope.spawn(move || run_shard(net, config, name, shard))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(Error::Soc("batch worker thread panicked".into()))
+                        })
+                    })
+                    .collect()
+            })
+        } else {
+            (0..workers)
+                .map(|w| {
+                    let (a, b) = shard_range(n, workers, w);
+                    run_shard(&self.net, &self.config, &ds.name, &ds.samples[a..b])
+                })
+                .collect()
+        };
+        let mut reports = Vec::with_capacity(workers);
+        let mut mismatches = 0u64;
+        let mut checked = 0u64;
+        for r in shard_results {
+            let (rep, m, c) = r?;
+            reports.push(rep);
+            mismatches += m;
+            checked += c;
+        }
+        Ok(ExperimentOutcome {
+            report: ChipReport::merged(&reports, &AreaModel::multi_chip(self.config.soc.domains)),
             mismatches,
             checked,
         })
@@ -181,6 +308,94 @@ mod tests {
         assert_eq!(out.checked, 4);
         assert_eq!(out.mismatches, 0, "cycle sim diverged from reference");
         assert!(out.report.sops > 0);
+    }
+
+    #[test]
+    fn parallel_runner_is_bit_identical_to_sequential_sharding() {
+        let net = small_net_for(Workload::Nmnist, 30);
+        let ds = Workload::Nmnist.generate(9, 23);
+        let runner = ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                check: GoldenCheck::Reference,
+                ..ExperimentConfig::default()
+            },
+        )
+        .unwrap();
+        let par = runner.run_parallel(&ds, 4).unwrap();
+        let seq = runner.run_sharded(&ds, 4, false).unwrap();
+        assert_eq!(par.mismatches, seq.mismatches);
+        assert_eq!(par.checked, seq.checked);
+        let (a, b) = (&par.report, &seq.report);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.sops, b.sops);
+        assert_eq!(a.spikes_routed, b.spikes_routed);
+        assert_eq!(a.samples, b.samples);
+        // Floating aggregates must be bit-identical, not merely close.
+        assert_eq!(a.pj_per_sop.to_bits(), b.pj_per_sop.to_bits());
+        assert_eq!(a.core_pj_per_sop.to_bits(), b.core_pj_per_sop.to_bits());
+        assert_eq!(a.power_mw.to_bits(), b.power_mw.to_bits());
+        assert_eq!(
+            a.breakdown.dynamic_pj.to_bits(),
+            b.breakdown.dynamic_pj.to_bits()
+        );
+        assert_eq!(
+            a.breakdown.static_pj.to_bits(),
+            b.breakdown.static_pj.to_bits()
+        );
+        assert_eq!(a.breakdown.by_class, b.breakdown.by_class);
+        assert_eq!(par.mismatches, 0, "cycle sim diverged from reference");
+    }
+
+    #[test]
+    fn single_worker_shard_matches_the_plain_sequential_run() {
+        let net = small_net_for(Workload::Nmnist, 24);
+        let ds = Workload::Nmnist.generate(4, 5);
+        let runner = ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                check: GoldenCheck::Reference,
+                ..ExperimentConfig::default()
+            },
+        )
+        .unwrap();
+        let plain = runner.run(&ds).unwrap();
+        let shard = runner.run_parallel(&ds, 1).unwrap();
+        // One shard = the whole dataset through one Soc: identical counters.
+        assert_eq!(plain.report.cycles, shard.report.cycles);
+        assert_eq!(plain.report.sops, shard.report.sops);
+        assert_eq!(plain.report.samples, shard.report.samples);
+        assert_eq!(plain.checked, shard.checked);
+        assert_eq!(plain.mismatches, shard.mismatches);
+        // Derived metrics are recomputed by the merge, so compare loosely.
+        assert!((plain.report.pj_per_sop - shard.report.pj_per_sop).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_runner_rejects_xla_checks() {
+        let net = small_net_for(Workload::Nmnist, 10);
+        let ds = Workload::Nmnist.generate(2, 1);
+        let runner = ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                check: GoldenCheck::None,
+                ..ExperimentConfig::default()
+            },
+        )
+        .unwrap();
+        // GoldenCheck is copied into config before construction; emulate a
+        // caller flipping it afterwards via a fresh runner with Xla —
+        // construction itself would try to load artifacts, so instead
+        // check the public contract through run_sharded's error path by
+        // mutating a clone of the config.
+        let mut cfg = runner.config.clone();
+        cfg.check = GoldenCheck::Xla;
+        let bad = ExperimentRunner {
+            net: runner.net.clone(),
+            config: cfg,
+            golden: None,
+        };
+        assert!(bad.run_sharded(&ds, 2, false).is_err());
     }
 
     #[test]

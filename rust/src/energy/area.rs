@@ -58,6 +58,22 @@ impl AreaModel {
         }
     }
 
+    /// A scaled-up system of `domains` dies (one fullerene domain each),
+    /// for multi-domain reports: die/logic areas and core/router counts
+    /// scale linearly, so neuron density stays the paper's figure while
+    /// power density is normalized over the full silicon.
+    pub fn multi_chip(domains: usize) -> Self {
+        let d = domains.max(1);
+        let one = Self::paper_chip();
+        AreaModel {
+            die_mm2: one.die_mm2 * d as f64,
+            logic_mm2: one.logic_mm2 * d as f64,
+            n_cores: one.n_cores * d,
+            n_routers: one.n_routers * d,
+            ..one
+        }
+    }
+
     /// Total neurons on chip.
     pub fn total_neurons(&self) -> usize {
         self.n_cores * self.neurons_per_core
@@ -114,6 +130,20 @@ mod tests {
         let sum = a.block_sum_mm2();
         assert!(sum <= a.logic_mm2 * 1.05, "blocks {sum} vs logic {}", a.logic_mm2);
         assert!(sum >= a.logic_mm2 * 0.80, "blocks {sum} too small vs {}", a.logic_mm2);
+    }
+
+    #[test]
+    fn multi_chip_preserves_density_and_scales_area() {
+        let one = AreaModel::paper_chip();
+        let four = AreaModel::multi_chip(4);
+        assert_eq!(four.total_neurons(), 4 * one.total_neurons());
+        assert!((four.die_mm2 - 4.0 * one.die_mm2).abs() < 1e-12);
+        // Neuron density is scale-invariant; power density normalizes
+        // over the full (4×) silicon.
+        assert!(
+            (four.neuron_density_k_per_mm2() - one.neuron_density_k_per_mm2()).abs() < 1e-9
+        );
+        assert!((four.power_density(11.2) - one.power_density(2.8)).abs() < 1e-9);
     }
 
     #[test]

@@ -74,6 +74,18 @@ pub struct EnergyParams {
     pub p_router_active: f64,
     /// Router leakage while clock-gated. (mW)
     pub p_router_gated: f64,
+    /// Moving one flit through a level-2 (inter-domain) router. The paper
+    /// gives no silicon number for the scale-up routers; this is a
+    /// first-order extrapolation of the CMRouter P2P energy to the L2's
+    /// wider 14-port crossbar (≈2×). (pJ)
+    pub e_hop_l2: f64,
+    /// One traversal of an L1↔L2 or L2↔L2 (domain-crossing) link — longer
+    /// wires with more repeaters than the intra-domain fabric (≈4×). (pJ)
+    pub e_link_l2: f64,
+    /// Level-2 router static+clock power while enabled. (mW)
+    pub p_router_l2_active: f64,
+    /// Level-2 router leakage while clock-gated. (mW)
+    pub p_router_l2_gated: f64,
 
     // ---- RISC-V CPU -------------------------------------------------------
     /// Base energy of one integer ALU instruction. (pJ)
@@ -148,6 +160,10 @@ impl EnergyParams {
             e_link: 0.006,
             p_router_active: 0.021,
             p_router_gated: 0.0012,
+            e_hop_l2: 0.052,
+            e_link_l2: 0.024,
+            p_router_l2_active: 0.034,
+            p_router_l2_gated: 0.002,
 
             // CPU. Calibrated so the MNIST control firmware (mostly
             // sleeping between timesteps) averages ≈0.434 mW and the
@@ -195,6 +211,8 @@ impl EnergyParams {
             &mut p.e_hop_bcast,
             &mut p.e_hop_merge,
             &mut p.e_link,
+            &mut p.e_hop_l2,
+            &mut p.e_link_l2,
             &mut p.e_cpu_alu,
             &mut p.e_cpu_mem,
             &mut p.e_cpu_muldiv,
@@ -212,6 +230,8 @@ impl EnergyParams {
             &mut p.p_core_gated,
             &mut p.p_router_active,
             &mut p.p_router_gated,
+            &mut p.p_router_l2_active,
+            &mut p.p_router_l2_gated,
             &mut p.p_cpu_active,
             &mut p.p_cpu_sleep,
             &mut p.p_cpu_lf,
@@ -258,6 +278,18 @@ mod tests {
         // 1 mW for 200e6 cycles at 200 MHz = 1 mW·s = 1e9 pJ.
         let pj = EnergyParams::static_pj(1.0, 200_000_000, 200.0e6);
         assert!((pj - 1.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn l2_fabric_costlier_than_l1() {
+        let p = EnergyParams::nominal();
+        assert!(p.e_hop_l2 > p.e_hop_p2p);
+        assert!(p.e_link_l2 > p.e_link);
+        assert!(p.p_router_l2_active > p.p_router_active);
+        // L2 energies obey the same quadratic voltage scaling.
+        let hi = p.at_voltage(1.32);
+        let ratio = hi.e_hop_l2 / p.e_hop_l2;
+        assert!((ratio - (1.32f64 / 1.08).powi(2)).abs() < 1e-9);
     }
 
     #[test]

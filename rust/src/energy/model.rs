@@ -26,6 +26,11 @@ pub enum EventClass {
     HopBroadcast,
     HopMerge,
     LinkTraversal,
+    /// Flit switched through a level-2 (inter-domain) router.
+    HopL2,
+    /// Traversal of a link with a level-2 router endpoint (the longer,
+    /// repeater-heavy scale-up wires).
+    LinkL2,
     // cpu
     CpuAlu,
     CpuMem,
@@ -57,6 +62,8 @@ impl EventClass {
             HopBroadcast => p.e_hop_bcast,
             HopMerge => p.e_hop_merge,
             LinkTraversal => p.e_link,
+            HopL2 => p.e_hop_l2,
+            LinkL2 => p.e_link_l2,
             CpuAlu => p.e_cpu_alu,
             CpuMem => p.e_cpu_mem,
             CpuMulDiv => p.e_cpu_muldiv,
@@ -70,7 +77,7 @@ impl EventClass {
     }
 
     /// All classes, for iteration in reports.
-    pub const ALL: [EventClass; 22] = [
+    pub const ALL: [EventClass; 24] = [
         EventClass::Sop,
         EventClass::ZspeWord,
         EventClass::ZspeForward,
@@ -84,6 +91,8 @@ impl EventClass {
         EventClass::HopBroadcast,
         EventClass::HopMerge,
         EventClass::LinkTraversal,
+        EventClass::HopL2,
+        EventClass::LinkL2,
         EventClass::CpuAlu,
         EventClass::CpuMem,
         EventClass::CpuMulDiv,

@@ -83,6 +83,88 @@ impl ChipReport {
         }
     }
 
+    /// Total (dynamic + static) energy of this report's run (pJ).
+    pub fn total_pj(&self) -> f64 {
+        self.breakdown.dynamic_pj + self.breakdown.static_pj
+    }
+
+    /// Deterministically merge shard reports produced by independent
+    /// [`crate::soc::Soc`] instances over disjoint sample shards (the
+    /// parallel batch runner). Additive quantities (cycles, SOPs, event
+    /// energies) sum in shard order; derived metrics (pJ/SOP, power,
+    /// latency) are recomputed from the sums, so the result is
+    /// bit-identical regardless of thread scheduling.
+    ///
+    /// All shards must share the operating point (frequency, supply).
+    pub fn merged(reports: &[ChipReport], area: &AreaModel) -> ChipReport {
+        assert!(!reports.is_empty(), "nothing to merge");
+        let first = &reports[0];
+        for r in reports {
+            debug_assert_eq!(r.f_core_hz.to_bits(), first.f_core_hz.to_bits());
+            debug_assert_eq!(r.supply_v.to_bits(), first.supply_v.to_bits());
+        }
+        let mut cycles = 0u64;
+        let mut sops = 0u64;
+        let mut spikes_routed = 0u64;
+        let mut samples = 0u64;
+        let mut correct_weight = 0.0f64;
+        let mut any_accuracy = false;
+        let mut total_pj = 0.0f64;
+        let mut core_pj = 0.0f64;
+        let mut dynamic_pj = 0.0f64;
+        let mut static_pj = 0.0f64;
+        let mut by_class: std::collections::BTreeMap<String, f64> = Default::default();
+        let mut by_static: std::collections::BTreeMap<String, f64> = Default::default();
+        for r in reports {
+            cycles += r.cycles;
+            sops += r.sops;
+            spikes_routed += r.spikes_routed;
+            samples += r.samples;
+            if let Some(a) = r.accuracy {
+                any_accuracy = true;
+                correct_weight += a * r.samples as f64;
+            }
+            total_pj += r.total_pj();
+            if r.sops > 0 && r.core_pj_per_sop.is_finite() {
+                core_pj += r.core_pj_per_sop * r.sops as f64;
+            }
+            dynamic_pj += r.breakdown.dynamic_pj;
+            static_pj += r.breakdown.static_pj;
+            for (k, v) in &r.breakdown.by_class {
+                *by_class.entry(k.clone()).or_insert(0.0) += v;
+            }
+            for (k, v) in &r.breakdown.by_static {
+                *by_static.entry(k.clone()).or_insert(0.0) += v;
+            }
+        }
+        let t_s = cycles as f64 / first.f_core_hz;
+        let power_mw = if cycles > 0 { total_pj / 1.0e9 / t_s } else { 0.0 };
+        ChipReport {
+            workload: first.workload.clone(),
+            f_core_hz: first.f_core_hz,
+            supply_v: first.supply_v,
+            cycles,
+            sops,
+            spikes_routed,
+            samples,
+            accuracy: (any_accuracy && samples > 0)
+                .then(|| correct_weight / samples as f64),
+            pj_per_sop: if sops > 0 { total_pj / sops as f64 } else { f64::NAN },
+            core_pj_per_sop: if sops > 0 { core_pj / sops as f64 } else { f64::NAN },
+            power_mw,
+            power_density: area.power_density(power_mw),
+            neuron_density_k_mm2: area.neuron_density_k_per_mm2(),
+            latency_ms_per_sample: (samples > 0)
+                .then(|| cycles as f64 / first.f_core_hz * 1000.0 / samples as f64),
+            breakdown: EnergyBreakdown {
+                dynamic_pj,
+                static_pj,
+                by_class,
+                by_static,
+            },
+        }
+    }
+
     /// Render several reports as a Table-I-style comparison table.
     pub fn table(reports: &[ChipReport]) -> Table {
         let mut t = Table::new(&["metric"]);
@@ -155,6 +237,32 @@ mod tests {
         assert!(r.power_mw > 0.0);
         assert!((r.neuron_density_k_mm2 - 30.23).abs() < 1.0);
         assert!(r.latency_ms_per_sample.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn merged_sums_counts_and_recomputes_derived_metrics() {
+        let p = EnergyParams::nominal();
+        let a = AreaModel::paper_chip();
+        let mut l1 = EnergyLedger::new();
+        l1.add(EventClass::Sop, 100);
+        let mut l2 = EnergyLedger::new();
+        l2.add(EventClass::Sop, 300);
+        l2.add(EventClass::HopP2p, 7);
+        let r1 = ChipReport::from_ledger("w", &l1, &p, &a, 100e6, 1000, 1, Some(1.0), 5);
+        let r2 = ChipReport::from_ledger("w", &l2, &p, &a, 100e6, 3000, 3, Some(0.0), 7);
+        let m = ChipReport::merged(&[r1.clone(), r2.clone()], &a);
+        assert_eq!(m.cycles, 4000);
+        assert_eq!(m.sops, 400);
+        assert_eq!(m.samples, 4);
+        assert_eq!(m.spikes_routed, 12);
+        assert!((m.accuracy.unwrap() - 0.25).abs() < 1e-12);
+        // pJ/SOP is the energy-weighted recomputation, not a mean of means.
+        let expect = (r1.total_pj() + r2.total_pj()) / 400.0;
+        assert!((m.pj_per_sop - expect).abs() < 1e-12);
+        // Determinism: merging the same inputs yields bit-identical floats.
+        let m2 = ChipReport::merged(&[r1, r2], &a);
+        assert_eq!(m.pj_per_sop.to_bits(), m2.pj_per_sop.to_bits());
+        assert_eq!(m.power_mw.to_bits(), m2.power_mw.to_bits());
     }
 
     #[test]

@@ -1,59 +1,104 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build has no `thiserror`).
+
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors produced by the simulator, configuration, and runtime layers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration failed validation (bad field, inconsistent sizes, …).
-    #[error("config error: {0}")]
     Config(String),
 
     /// A network description is malformed or cannot be mapped to the chip.
-    #[error("network error: {0}")]
     Network(String),
 
     /// The neuron→core mapper could not place the network.
-    #[error("mapping error: {0}")]
     Mapping(String),
 
     /// NoC simulation error (unroutable packet, buffer misuse, …).
-    #[error("noc error: {0}")]
     Noc(String),
 
     /// Neuromorphic-core simulation error.
-    #[error("core error: {0}")]
     Core(String),
 
     /// RISC-V ISS error (illegal instruction, bus fault, …).
-    #[error("riscv error: {0}")]
     Riscv(String),
 
     /// SoC-level error (bus, DMA, clock manager).
-    #[error("soc error: {0}")]
     Soc(String),
 
     /// PJRT/XLA runtime error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact (HLO text / weights JSON) missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// JSON parse/serialize error (in-tree parser, `util::json`).
-    #[error("json error: {0}")]
     Json(String),
 
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Network(m) => write!(f, "network error: {m}"),
+            Error::Mapping(m) => write!(f, "mapping error: {m}"),
+            Error::Noc(m) => write!(f, "noc error: {m}"),
+            Error::Core(m) => write!(f, "core error: {m}"),
+            Error::Riscv(m) => write!(f, "riscv error: {m}"),
+            Error::Soc(m) => write!(f, "soc error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
     /// Shorthand constructor for configuration errors.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_layer_prefix() {
+        assert_eq!(Error::Noc("x".into()).to_string(), "noc error: x");
+        assert_eq!(Error::Config("y".into()).to_string(), "config error: y");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        fn fails() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        assert!(matches!(fails(), Err(Error::Io(_))));
     }
 }

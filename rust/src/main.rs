@@ -11,7 +11,6 @@
 //! - `inspect`   — show how a weights artifact maps onto the chip.
 //! - `gen-data`  — emit a synthetic dataset JSON (debugging aid).
 
-use anyhow::{anyhow, Result};
 use fullerene_soc::config::{parse_check, parse_workload, RunConfig};
 use fullerene_soc::coordinator::ExperimentRunner;
 use fullerene_soc::datasets::Workload;
@@ -20,6 +19,7 @@ use fullerene_soc::metrics::Table;
 use fullerene_soc::nn::load_weights_json;
 use fullerene_soc::noc::{TopoStats, Topology};
 use fullerene_soc::util::cli::Args;
+use fullerene_soc::{Error, Result};
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -41,7 +41,9 @@ fn run(args: &Args) -> Result<()> {
         Some("bench") => cmd_bench(args),
         Some("inspect") => cmd_inspect(args),
         Some("gen-data") => cmd_gen_data(args),
-        Some(other) => Err(anyhow!("unknown subcommand '{other}'; run without args for help")),
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand '{other}'; run without args for help"
+        ))),
         None => {
             print_help();
             Ok(())
@@ -58,6 +60,7 @@ fn print_help() {
          run       --workload nmnist|dvsgesture|cifar10  --samples N  --seed S\n\
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
                    --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
+                   --domains D (multi-domain chip: D fullerene domains + L2 ring)\n\
          topo      (prints the Fig. 5 topology comparison)\n\
          bench     core-sparsity | router | riscv-power  (quick figure repros)\n\
          inspect   --weights <file>   (mapping summary)\n\
@@ -123,8 +126,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         "supply",
         "hidden",
         "max-neurons-per-core",
+        "domains",
     ])
-    .map_err(|e| anyhow!(e))?;
+    .map_err(Error::Config)?;
     let mut cfg = match args.get("config") {
         Some(p) => RunConfig::load(Path::new(p))?,
         None => RunConfig::default(),
@@ -144,13 +148,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.soc.drive_cpu = false;
     }
     if let Some(f) = args.get("f-core-mhz") {
-        cfg.soc.f_core_hz = f.parse::<f64>().map_err(|_| anyhow!("bad --f-core-mhz"))? * 1e6;
+        cfg.soc.f_core_hz = f
+            .parse::<f64>()
+            .map_err(|_| Error::config("bad --f-core-mhz"))?
+            * 1e6;
     }
     if let Some(v) = args.get("supply") {
-        cfg.soc.supply_v = v.parse().map_err(|_| anyhow!("bad --supply"))?;
+        cfg.soc.supply_v = v.parse().map_err(|_| Error::config("bad --supply"))?;
     }
     if let Some(m) = args.get("max-neurons-per-core") {
-        cfg.soc.max_neurons_per_core = m.parse().map_err(|_| anyhow!("bad flag"))?;
+        cfg.soc.max_neurons_per_core =
+            m.parse().map_err(|_| Error::config("bad flag"))?;
+    }
+    if let Some(d) = args.get("domains") {
+        cfg.soc.domains = d.parse().map_err(|_| Error::config("bad --domains"))?;
     }
     cfg.validate()?;
 
@@ -234,13 +245,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
             println!("{}", t.render());
         }
         Some("riscv-power") => {
-            let t = fullerene_soc::benches_support::fig6_table().map_err(|e| anyhow!(e))?;
+            let t = fullerene_soc::benches_support::fig6_table()?;
             println!("{}", t.render());
         }
         other => {
-            return Err(anyhow!(
+            return Err(Error::Config(format!(
                 "bench expects core-sparsity | router | riscv-power, got {other:?}"
-            ))
+            )))
         }
     }
     Ok(())
@@ -249,7 +260,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args
         .get("weights")
-        .ok_or_else(|| anyhow!("--weights <file> required"))?;
+        .ok_or_else(|| Error::config("--weights <file> required"))?;
     let net = load_weights_json(Path::new(path))?;
     let mapping = fullerene_soc::nn::Mapping::plan(&net, 20, 8192)?;
     println!(

@@ -21,7 +21,8 @@
 //!   pJ/hop).
 //! - [`traffic`] — synthetic traffic generators for the router benches.
 //! - [`multilevel`] — level-2 scale-up: multiple domains joined through
-//!   central level-2 routers.
+//!   central level-2 routers into one cycle-simulatable fabric, with the
+//!   closed-form hop model retained as a cross-check oracle.
 
 pub mod metrics;
 pub mod multilevel;
@@ -32,6 +33,7 @@ pub mod topology;
 pub mod traffic;
 
 pub use metrics::TopoStats;
+pub use multilevel::{AnalyticModel, MultiDomain, MultiDomainMeasurement};
 pub use packet::{Dest, Flit, TxMode};
 pub use router::CmRouter;
 pub use sim::{NocSim, SimStats};

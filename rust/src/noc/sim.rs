@@ -12,7 +12,7 @@
 
 use super::packet::{Dest, Flit, TxMode};
 use super::router::CmRouter;
-use super::topology::{NodeId, Topology};
+use super::topology::{NodeId, NodeKind, Topology};
 use crate::energy::{EnergyLedger, EnergyParams, EventClass};
 use crate::{Error, Result};
 use std::collections::VecDeque;
@@ -222,13 +222,26 @@ impl NocSim {
                 if self.switches[nb].can_accept(back_port) {
                     let mut f = self.switches[n].out_pop(p).unwrap();
                     f.at = nb;
-                    self.ledger.add1(EventClass::LinkTraversal);
+                    // Links with an L2 endpoint are the long scale-up
+                    // wires; arrival at an L2 router charges the wider
+                    // crossbar's hop energy instead of the mode class.
+                    let nb_is_l2 = matches!(self.topo.kind(nb), NodeKind::RouterL2(_));
+                    let n_is_l2 = matches!(self.topo.kind(n), NodeKind::RouterL2(_));
+                    self.ledger.add1(if nb_is_l2 || n_is_l2 {
+                        EventClass::LinkL2
+                    } else {
+                        EventClass::LinkTraversal
+                    });
                     if self.topo.kind(nb).is_router() {
                         f.hops += 1;
-                        self.ledger.add1(match f.mode {
-                            TxMode::P2p => EventClass::HopP2p,
-                            TxMode::Broadcast => EventClass::HopBroadcast,
-                            TxMode::Merge => EventClass::HopMerge,
+                        self.ledger.add1(if nb_is_l2 {
+                            EventClass::HopL2
+                        } else {
+                            match f.mode {
+                                TxMode::P2p => EventClass::HopP2p,
+                                TxMode::Broadcast => EventClass::HopBroadcast,
+                                TxMode::Merge => EventClass::HopMerge,
+                            }
                         });
                     }
                     self.switches[nb].accept(back_port, f);
@@ -289,18 +302,32 @@ impl NocSim {
     }
 
     /// Account router static power over the simulated window and return
-    /// the accumulated ledger (dynamic events + static).
+    /// the accumulated ledger (dynamic events + static). Level-2 routers
+    /// carry their own (larger) static power class.
     pub fn finish_ledger(&mut self) -> EnergyLedger {
         for s in &self.switches {
-            if self.topo.kind(s.node).is_router() {
-                let active = s.active_cycles.min(self.cycle);
-                self.ledger.add_static(
-                    &format!("router{}", s.node),
-                    active,
-                    self.cycle - active,
-                    self.energy.p_router_active,
-                    self.energy.p_router_gated,
-                );
+            match self.topo.kind(s.node) {
+                NodeKind::Core(_) => {}
+                NodeKind::RouterL1(_) => {
+                    let active = s.active_cycles.min(self.cycle);
+                    self.ledger.add_static(
+                        &format!("router{}", s.node),
+                        active,
+                        self.cycle - active,
+                        self.energy.p_router_active,
+                        self.energy.p_router_gated,
+                    );
+                }
+                NodeKind::RouterL2(_) => {
+                    let active = s.active_cycles.min(self.cycle);
+                    self.ledger.add_static(
+                        &format!("router-l2-{}", s.node),
+                        active,
+                        self.cycle - active,
+                        self.energy.p_router_l2_active,
+                        self.energy.p_router_l2_gated,
+                    );
+                }
             }
         }
         std::mem::take(&mut self.ledger)
@@ -312,12 +339,14 @@ impl NocSim {
     }
 
     /// Dynamic energy per delivered flit-hop (pJ/hop) — Fig. 5c metric.
+    /// Includes level-2 hops when the fabric has them.
     pub fn pj_per_hop(&self) -> Option<f64> {
         let hops: u64 = self.delivered.iter().map(|d| d.flit.hops as u64).sum();
         (hops > 0).then(|| {
             let hop_pj = self.ledger.count(EventClass::HopP2p) as f64 * self.energy.e_hop_p2p
                 + self.ledger.count(EventClass::HopBroadcast) as f64 * self.energy.e_hop_bcast
-                + self.ledger.count(EventClass::HopMerge) as f64 * self.energy.e_hop_merge;
+                + self.ledger.count(EventClass::HopMerge) as f64 * self.energy.e_hop_merge
+                + self.ledger.count(EventClass::HopL2) as f64 * self.energy.e_hop_l2;
             hop_pj / hops as f64
         })
     }
@@ -442,6 +471,49 @@ mod tests {
         s.run_until_drained(10_000).unwrap();
         let pj = s.pj_per_hop().unwrap();
         assert!((pj - EnergyParams::nominal().e_hop_p2p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_domain_flit_traverses_l2_and_charges_l2_energy() {
+        let mut s = sim(Topology::multi_domain(2));
+        s.inject(0, &Dest::Core(25), 4);
+        s.run_until_drained(10_000).unwrap();
+        assert_eq!(s.delivered().len(), 1);
+        let d = &s.delivered()[0];
+        // climb (L1, L2) + one ring link (L2) + descend (L1): 4 router
+        // arrivals, two of them at L2 routers.
+        assert_eq!(d.flit.hops, 4);
+        assert_eq!(s.ledger.count(EventClass::HopL2), 2);
+        // L1→L2, L2→L2 and L2→L1 wires all charge the L2 link class.
+        assert_eq!(s.ledger.count(EventClass::LinkL2), 3);
+        assert_eq!(s.ledger.count(EventClass::HopP2p), 2);
+    }
+
+    #[test]
+    fn intra_domain_traffic_on_multidomain_charges_no_l2() {
+        let mut s = sim(Topology::multi_domain(2));
+        for dst in 1..20 {
+            s.inject(0, &Dest::Core(dst), 0);
+            s.inject(20, &Dest::Core(20 + dst), 0);
+        }
+        s.run_until_drained(100_000).unwrap();
+        assert_eq!(s.delivered().len(), 38);
+        assert_eq!(s.ledger.count(EventClass::HopL2), 0);
+        assert_eq!(s.ledger.count(EventClass::LinkL2), 0);
+    }
+
+    #[test]
+    fn l2_static_power_lands_in_its_own_ledger_entries() {
+        let mut s = sim(Topology::multi_domain(2));
+        s.inject(0, &Dest::Core(25), 0);
+        s.run_until_drained(10_000).unwrap();
+        let ledger = s.finish_ledger();
+        let b = ledger.breakdown(&EnergyParams::nominal(), 100.0e6);
+        assert!(
+            b.by_static.keys().any(|k| k.starts_with("router-l2-")),
+            "missing L2 static entries: {:?}",
+            b.by_static.keys().collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct Topology {
     nodes: Vec<NodeKind>,
     adj: Vec<Vec<NodeId>>,
     cores: Vec<NodeId>,
+    /// Routing domain of each node (all 0 for single-domain topologies).
+    domain: Vec<u32>,
+    /// Number of routing domains (1 unless built by [`Topology::multi_domain`]).
+    domains: usize,
 }
 
 impl Topology {
@@ -54,13 +58,20 @@ impl Topology {
             nodes: Vec::new(),
             adj: Vec::new(),
             cores: Vec::new(),
+            domain: Vec::new(),
+            domains: 1,
         }
     }
 
     fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        self.add_node_dom(kind, 0)
+    }
+
+    fn add_node_dom(&mut self, kind: NodeKind, dom: u32) -> NodeId {
         let id = self.nodes.len();
         self.nodes.push(kind);
         self.adj.push(Vec::new());
+        self.domain.push(dom);
         if kind.is_core() {
             self.cores.push(id);
         }
@@ -104,9 +115,21 @@ impl Topology {
         (0..self.len()).filter(|&n| self.nodes[n].is_router()).collect()
     }
 
-    /// Node id of core with domain-local id `c`.
+    /// Node id of core with (global) core id `c`. In a multi-domain
+    /// topology global core ids are `domain * 20 + local`, matching the
+    /// order the builder inserts cores.
     pub fn core_node(&self, c: usize) -> NodeId {
         self.cores[c]
+    }
+
+    /// Routing domain of a node (always 0 in single-domain topologies).
+    pub fn domain_of(&self, n: NodeId) -> u32 {
+        self.domain[n]
+    }
+
+    /// Number of routing domains in this topology.
+    pub fn n_domains(&self) -> usize {
+        self.domains
     }
 
     /// Total undirected edge count.
@@ -131,26 +154,74 @@ impl Topology {
         dist
     }
 
+    /// BFS distances from `src` over the subgraph that excludes every
+    /// level-2 router (`usize::MAX` if unreachable without L2 nodes).
+    fn bfs_no_l2(&self, src: NodeId) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; self.len()];
+        if matches!(self.nodes[src], NodeKind::RouterL2(_)) {
+            return dist;
+        }
+        let mut q = std::collections::VecDeque::new();
+        dist[src] = 0;
+        q.push_back(src);
+        while let Some(u) = q.pop_front() {
+            for &v in &self.adj[u] {
+                if dist[v] == usize::MAX && !matches!(self.nodes[v], NodeKind::RouterL2(_)) {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
     /// Next-hop routing table: `table[node][core]` = neighbor of `node` on
-    /// a shortest path toward core `core` (deterministic: lowest-id
-    /// neighbor that decreases the BFS distance). `table[n][c] == n` when
-    /// `n` *is* that core.
+    /// a path toward core `core` (deterministic: lowest-id neighbor that
+    /// decreases the distance metric). `table[n][c] == n` when `n` *is*
+    /// that core.
+    ///
+    /// Routing is **hierarchical** when the topology contains level-2
+    /// routers: traffic whose current node sits in the destination's
+    /// domain stays on the level-1 fabric (L2 nodes are never used as an
+    /// intra-domain shortcut — they are scale-up ports, matching the
+    /// paper), while traffic in any other domain follows full-graph
+    /// shortest paths, which necessarily climb `core → L1 → L2`, ride the
+    /// L2 ring, and descend. The mixed policy is loop-free: an intra-mode
+    /// step strictly decreases the L2-free distance and stays intra-mode;
+    /// a full-mode step strictly decreases the full distance or enters
+    /// intra-mode, which it never leaves.
     pub fn next_hop_table(&self) -> Vec<Vec<NodeId>> {
+        let has_l2 = self
+            .nodes
+            .iter()
+            .any(|k| matches!(k, NodeKind::RouterL2(_)));
         let mut table = vec![vec![usize::MAX; self.cores.len()]; self.len()];
         for (ci, &cnode) in self.cores.iter().enumerate() {
-            let dist = self.bfs(cnode);
+            let d_full = self.bfs(cnode);
+            let d_intra = if has_l2 { Some(self.bfs_no_l2(cnode)) } else { None };
+            let dst_dom = self.domain[cnode];
             for n in 0..self.len() {
                 if n == cnode {
                     table[n][ci] = n;
                     continue;
                 }
+                let dist: &[usize] = match &d_intra {
+                    Some(di)
+                        if self.domain[n] == dst_dom
+                            && !matches!(self.nodes[n], NodeKind::RouterL2(_))
+                            && di[n] != usize::MAX =>
+                    {
+                        di
+                    }
+                    _ => &d_full,
+                };
                 if dist[n] == usize::MAX {
                     continue;
                 }
                 // lowest-id neighbor strictly closer to the destination
                 let mut best = usize::MAX;
                 for &v in &self.adj[n] {
-                    if dist[v] + 1 == dist[n] && v < best {
+                    if dist[v] != usize::MAX && dist[v] + 1 == dist[n] && v < best {
                         best = v;
                     }
                 }
@@ -214,21 +285,23 @@ impl Topology {
     /// routers joined in a ring (the paper's off-chip extension). Global
     /// core ids are `domain * 20 + local`.
     pub fn multi_domain(domains: usize) -> Topology {
-        assert!(domains >= 1);
+        assert!((1..=256).contains(&domains));
         let (faces, _) = icosahedron();
         let mut t = Topology::new(&format!("fullerene-x{domains}"));
+        t.domains = domains;
         let mut l2s = Vec::with_capacity(domains);
         for d in 0..domains {
+            let dom = d as u32;
             let routers: Vec<NodeId> = (0..12)
-                .map(|i| t.add_node(NodeKind::RouterL1(i as u8)))
+                .map(|i| t.add_node_dom(NodeKind::RouterL1(i as u8), dom))
                 .collect();
             for (ci, face) in faces.iter().enumerate() {
-                let core = t.add_node(NodeKind::Core(ci as u8));
+                let core = t.add_node_dom(NodeKind::Core(ci as u8), dom);
                 for &v in face {
                     t.add_edge(core, routers[v]);
                 }
             }
-            let l2 = t.add_node(NodeKind::RouterL2(d as u8));
+            let l2 = t.add_node_dom(NodeKind::RouterL2(d as u8), dom);
             for &r in &routers {
                 t.add_edge(l2, r);
             }
@@ -519,6 +592,72 @@ mod tests {
         }
         // Path must pass through at least one L2 router.
         assert!(t.bfs(src)[dst] >= 5, "cross-domain path too short");
+    }
+
+    /// Follow `table` from `src` node to core id `dst_core`; returns the
+    /// node path (panics on a routing loop).
+    fn walk(t: &Topology, table: &[Vec<NodeId>], src: NodeId, dst_core: usize) -> Vec<NodeId> {
+        let dst = t.core_node(dst_core);
+        let mut path = vec![src];
+        let mut cur = src;
+        while cur != dst {
+            cur = table[cur][dst_core];
+            assert_ne!(cur, usize::MAX, "unroutable");
+            path.push(cur);
+            assert!(path.len() <= t.len() + 2, "routing loop");
+        }
+        path
+    }
+
+    #[test]
+    fn intra_domain_routing_never_uses_l2() {
+        let t = Topology::multi_domain(3);
+        let table = t.next_hop_table();
+        for d in 0..3 {
+            for dst in 1..20 {
+                let path = walk(&t, &table, t.core_node(d * 20), d * 20 + dst);
+                for &n in &path {
+                    assert!(
+                        !matches!(t.kind(n), NodeKind::RouterL2(_)),
+                        "intra-domain path used an L2 router"
+                    );
+                    assert_eq!(t.domain_of(n), d as u32, "intra path left its domain");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_domain_routing_climbs_rides_ring_descends() {
+        let t = Topology::multi_domain(4);
+        let table = t.next_hop_table();
+        for (src_d, dst_d) in [(0usize, 1usize), (0, 2), (3, 1)] {
+            let ring = {
+                let d = src_d.abs_diff(dst_d);
+                d.min(4 - d)
+            };
+            let path = walk(&t, &table, t.core_node(src_d * 20 + 3), dst_d * 20 + 7);
+            let l2s_on_path = path
+                .iter()
+                .filter(|&&n| matches!(t.kind(n), NodeKind::RouterL2(_)))
+                .count();
+            // Climb visits the source L2, the ring visits ring-1
+            // intermediates, the descend enters through the destination L2.
+            assert_eq!(l2s_on_path, ring + 1, "{src_d}->{dst_d}");
+            let router_hops = path.iter().filter(|&&n| t.kind(n).is_router()).count();
+            assert_eq!(router_hops, ring + 3, "{src_d}->{dst_d}");
+        }
+    }
+
+    #[test]
+    fn domain_tags_cover_all_nodes() {
+        let t = Topology::multi_domain(3);
+        assert_eq!(t.n_domains(), 3);
+        for d in 0..3u32 {
+            let n = (0..t.len()).filter(|&n| t.domain_of(n) == d).count();
+            assert_eq!(n, 33, "domain {d}");
+        }
+        assert_eq!(Topology::fullerene().n_domains(), 1);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::core::NeuroCore;
 use crate::datasets::{Dataset, Sample};
 use crate::energy::{AreaModel, ChipReport, EnergyLedger, EnergyParams};
 use crate::nn::{Mapping, NetworkDesc};
-use crate::noc::{Dest, NocSim, Topology};
+use crate::noc::{Dest, NocSim, NodeKind, Topology};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::enu::EnuCommand;
 use crate::riscv::firmware;
@@ -40,7 +40,12 @@ use crate::{Error, Result};
 /// SoC configuration.
 #[derive(Debug, Clone)]
 pub struct SocConfig {
-    /// Physical neuromorphic cores (paper: 20).
+    /// Fullerene routing domains. 1 = the paper's single chip; >1 builds
+    /// the scale-up system ([`Topology::multi_domain`]): each domain adds
+    /// 20 cores, 12 L1 routers and a level-2 centre router, with the L2
+    /// routers joined in a ring — all cycle-simulated.
+    pub domains: usize,
+    /// Physical neuromorphic cores (paper: 20 per domain).
     pub n_cores: usize,
     /// Max neurons per core (paper: 8192).
     pub max_neurons_per_core: usize,
@@ -64,6 +69,7 @@ pub struct SocConfig {
 impl Default for SocConfig {
     fn default() -> Self {
         SocConfig {
+            domains: 1,
             n_cores: 20,
             max_neurons_per_core: 8192,
             fifo_depth: 4,
@@ -74,6 +80,21 @@ impl Default for SocConfig {
             drive_cpu: true,
         }
     }
+}
+
+/// Ideal-fabric per-pair routing cost, derived by walking the *real*
+/// next-hop table (so the no-NoC energy path follows the same
+/// hierarchical policy as the cycle simulator, including L2 classes).
+#[derive(Debug, Clone, Copy, Default)]
+struct HopCost {
+    /// Arrivals at level-1 routers.
+    l1_hops: u32,
+    /// Arrivals at level-2 routers.
+    l2_hops: u32,
+    /// Link traversals within the level-1 fabric.
+    links: u32,
+    /// Link traversals with a level-2 endpoint.
+    l2_links: u32,
 }
 
 /// Result of one inference.
@@ -121,8 +142,8 @@ pub struct Soc {
     spikes_routed: u64,
     samples_run: u64,
     correct: u64,
-    /// Cached hop distance core→core for the ideal-fabric energy charge.
-    hop_table: Vec<Vec<u32>>,
+    /// Cached core→core routing costs for the ideal-fabric energy charge.
+    hop_table: Vec<Vec<HopCost>>,
 }
 
 impl Soc {
@@ -136,20 +157,66 @@ impl Soc {
         for (i, p) in mapping.placements.iter().enumerate() {
             core_index[p.core_id] = i;
         }
-        let topo = Topology::fullerene();
+        if config.domains == 0 {
+            return Err(Error::Soc("domains must be >= 1".into()));
+        }
+        // One plain fullerene domain for the paper's chip; the simulated
+        // hierarchical fabric (L1 + L2 ring) for scale-up systems.
+        let topo = if config.domains == 1 {
+            Topology::fullerene()
+        } else {
+            Topology::multi_domain(config.domains)
+        };
         if config.n_cores > topo.cores().len() {
             return Err(Error::Soc(format!(
-                "{} cores requested but the fullerene domain has {}",
+                "{} cores requested but {} fullerene domain(s) have {}",
                 config.n_cores,
+                config.domains,
                 topo.cores().len()
             )));
         }
-        // Router-hop distances between cores (for the ideal fabric).
-        let mut hop_table = vec![vec![0u32; topo.cores().len()]; topo.cores().len()];
+        // Core→core routing costs for the ideal fabric, by walking the
+        // same hierarchical next-hop table the cycle simulator routes
+        // with — BFS link counts would shortcut intra-domain traffic
+        // through L2 and miss the L2 energy classes.
+        let table = topo.next_hop_table();
+        let n_c = topo.cores().len();
+        let mut hop_table = vec![vec![HopCost::default(); n_c]; n_c];
         for (i, &ci) in topo.cores().iter().enumerate() {
-            let d = topo.bfs(ci);
-            for (j, &cj) in topo.cores().iter().enumerate() {
-                hop_table[i][j] = (d[cj] / 2) as u32;
+            for (j, hop) in hop_table[i].iter_mut().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dst = topo.core_node(j);
+                let mut cost = HopCost::default();
+                let mut cur = ci;
+                let mut steps = 0usize;
+                while cur != dst {
+                    let next = table[cur][j];
+                    debug_assert_ne!(next, usize::MAX, "unroutable core pair");
+                    let cur_l2 = matches!(topo.kind(cur), NodeKind::RouterL2(_));
+                    match topo.kind(next) {
+                        NodeKind::RouterL1(_) => {
+                            cost.l1_hops += 1;
+                            if cur_l2 {
+                                cost.l2_links += 1;
+                            } else {
+                                cost.links += 1;
+                            }
+                        }
+                        NodeKind::RouterL2(_) => {
+                            cost.l2_hops += 1;
+                            cost.l2_links += 1;
+                        }
+                        NodeKind::Core(_) => {
+                            cost.links += 1;
+                        }
+                    }
+                    cur = next;
+                    steps += 1;
+                    debug_assert!(steps <= topo.len(), "routing loop in hop table");
+                }
+                *hop = cost;
             }
         }
         let noc = NocSim::new(topo, config.fifo_depth, energy.clone());
@@ -161,7 +228,7 @@ impl Soc {
             mpdma: Dma::new(DmaKind::Mpdma),
             outbufs: OutputBuffers::new(),
             ledger: EnergyLedger::new(),
-            area: AreaModel::paper_chip(),
+            area: AreaModel::multi_chip(config.domains),
             booted: false,
             params_loaded: false,
             total_cycles: 0,
@@ -239,8 +306,12 @@ impl Soc {
                     }
                 }
                 EnuCommand::CoreEnable { mask } => {
+                    // The firmware's 20-bit enable mask is per-domain: in a
+                    // multi-domain system every domain applies the same
+                    // local mask (core_id mod 20), matching a broadcast
+                    // register write to all domain controllers.
                     for (i, p) in self.mapping.placements.iter().enumerate() {
-                        self.cores[i].set_enabled(mask >> p.core_id & 1 == 1);
+                        self.cores[i].set_enabled(mask >> (p.core_id % 20) & 1 == 1);
                     }
                 }
                 EnuCommand::NetworkStart { .. } => {
@@ -313,19 +384,26 @@ impl Soc {
             }
             Ok(self.noc.cycle() - start)
         } else {
-            // Ideal fabric: zero latency, but charge broadcast-hop energy
-            // along the real topology distances.
+            // Ideal fabric: zero latency, but charge hop/link energy along
+            // the real hierarchical routes (L1 hops at the broadcast rate,
+            // L2 hops/links at the scale-up rates).
             use crate::energy::EventClass;
             let mut per_core: Vec<Vec<u32>> = vec![Vec::new(); self.config.n_cores];
-            let mut hop_events = 0u64;
+            let (mut l1_hops, mut l2_hops, mut links, mut l2_links) = (0u64, 0u64, 0u64, 0u64);
             for &(src, axon) in firing {
                 for &dst in &dst_cores {
                     per_core[dst].push(axon);
-                    hop_events += self.hop_table[src][dst] as u64;
+                    let c = &self.hop_table[src][dst];
+                    l1_hops += c.l1_hops as u64;
+                    l2_hops += c.l2_hops as u64;
+                    links += c.links as u64;
+                    l2_links += c.l2_links as u64;
                 }
             }
-            self.ledger.add(EventClass::HopBroadcast, hop_events);
-            self.ledger.add(EventClass::LinkTraversal, hop_events * 2);
+            self.ledger.add(EventClass::HopBroadcast, l1_hops);
+            self.ledger.add(EventClass::HopL2, l2_hops);
+            self.ledger.add(EventClass::LinkTraversal, links);
+            self.ledger.add(EventClass::LinkL2, l2_links);
             for (dst, axons) in per_core.iter().enumerate() {
                 if axons.is_empty() {
                     continue;
@@ -662,5 +740,60 @@ mod tests {
     fn network_too_big_for_chip_rejected() {
         let net = small_net(16, 8192 * 21, 4);
         assert!(Soc::new(net, SocConfig::default()).is_err());
+    }
+
+    #[test]
+    fn multi_domain_chip_spans_domains_and_matches_reference() {
+        // 24 hidden neurons at 1 neuron/core force 28 placements: the
+        // network cannot fit one 20-core domain, so layer traffic crosses
+        // the simulated L2 ring — and must still compute the reference
+        // function bit-for-bit.
+        let net = small_net(16, 24, 4);
+        let s = busy_sample(16, 5);
+        let raster = s.to_raster(5, 16);
+        let expect = net.reference_run(&raster);
+        let cfg = SocConfig {
+            domains: 2,
+            n_cores: 40,
+            max_neurons_per_core: 1,
+            ..SocConfig::default()
+        };
+        let mut soc = Soc::new(net.clone(), cfg.clone()).unwrap();
+        let r = soc.run_sample(&s, true).unwrap();
+        assert_eq!(r.counts, expect, "multi-domain chip diverged from reference");
+        let rep = soc.finish_report("multidomain");
+        // Cross-domain spikes must have been priced on the L2 fabric, and
+        // the area model must scale with the domain count (density stays
+        // at the paper's figure).
+        assert!(
+            rep.breakdown.by_class.contains_key("HopL2"),
+            "no L2 hop energy recorded: {:?}",
+            rep.breakdown.by_class.keys().collect::<Vec<_>>()
+        );
+        assert!((rep.neuron_density_k_mm2 - 30.23).abs() < 1.0);
+
+        // The ideal (no-NoC) fabric follows the same hierarchical routes:
+        // identical function, and L2 energy classes still charged.
+        let mut ideal = Soc::new(net, SocConfig { use_noc: false, ..cfg }).unwrap();
+        let ri = ideal.run_sample(&s, true).unwrap();
+        assert_eq!(ri.counts, expect);
+        let repi = ideal.finish_report("multidomain-ideal");
+        assert!(
+            repi.breakdown.by_class.contains_key("HopL2")
+                && repi.breakdown.by_class.contains_key("LinkL2"),
+            "ideal fabric missed L2 classes: {:?}",
+            repi.breakdown.by_class.keys().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn more_cores_than_domains_provide_rejected() {
+        let net = small_net(16, 8, 4);
+        assert!(Soc::new(net, SocConfig {
+            domains: 1,
+            n_cores: 40,
+            ..SocConfig::default()
+        })
+        .is_err());
     }
 }

@@ -1,0 +1,212 @@
+//! Multi-domain (level-2 scale-up) integration: the hierarchical fabric
+//! must deliver P2P and broadcast traffic across domains, agree with the
+//! retained analytic hop model, degrade the right way under L2 failure,
+//! and feed the parallel batch runner deterministically.
+
+use fullerene_soc::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
+use fullerene_soc::datasets::Workload;
+use fullerene_soc::energy::EnergyParams;
+use fullerene_soc::noc::{Dest, MultiDomain, NocSim, NodeKind, Topology};
+
+fn sim_for(domains: usize) -> NocSim {
+    NocSim::new(
+        Topology::multi_domain(domains),
+        4,
+        EnergyParams::nominal(),
+    )
+}
+
+#[test]
+fn p2p_delivery_within_and_across_domains() {
+    for d in [1usize, 2, 4] {
+        let n = d * 20;
+        let mut sim = sim_for(d);
+        let mut expected = Vec::new();
+        // Every domain sends one intra-domain and (when possible) one
+        // cross-domain flit.
+        for dom in 0..d {
+            let src = dom * 20;
+            let intra = dom * 20 + 11;
+            sim.inject(src, &Dest::Core(intra), 1);
+            expected.push(intra);
+            if d > 1 {
+                let cross = ((dom + 1) % d) * 20 + 7;
+                sim.inject(src, &Dest::Core(cross), 2);
+                expected.push(cross);
+            }
+        }
+        sim.run_until_drained(100_000).unwrap();
+        let mut got: Vec<usize> = sim.delivered().iter().map(|f| f.flit.dst_core).collect();
+        got.sort_unstable();
+        expected.sort_unstable();
+        assert_eq!(got, expected, "D={d}");
+        assert!(got.iter().all(|&c| c < n));
+    }
+}
+
+#[test]
+fn broadcast_spans_domains() {
+    for d in [1usize, 2, 4] {
+        let mut sim = sim_for(d);
+        // Broadcast from core 0 to one core in every domain.
+        let dsts: Vec<usize> = (0..d).map(|dom| dom * 20 + 13).collect();
+        sim.inject(0, &Dest::Cores(dsts.clone()), 9);
+        sim.run_until_drained(100_000).unwrap();
+        let mut got: Vec<usize> = sim.delivered().iter().map(|f| f.flit.dst_core).collect();
+        got.sort_unstable();
+        assert_eq!(got, dsts, "D={d}");
+        for del in sim.delivered() {
+            assert_eq!(del.flit.axon, 9);
+        }
+    }
+}
+
+#[test]
+fn simulated_latency_agrees_with_analytic_model() {
+    // Tolerance: inter-domain pairs match the oracle exactly (hierarchical
+    // routing is deterministic); intra-domain pairs deviate from the
+    // domain average per-pair, so the traffic mix must land within 20 %.
+    for d in [1usize, 2, 4] {
+        let m = MultiDomain::new(d);
+        let r = m
+            .measure(500, 0.6, 101 + d as u64, EnergyParams::nominal())
+            .unwrap();
+        assert!(r.delivered > 400, "D={d}: only {} delivered", r.delivered);
+        assert!(
+            r.relative_error() < 0.20,
+            "D={d}: simulated {:.3} hops vs analytic {:.3}",
+            r.measured_hops,
+            r.analytic_hops
+        );
+        // Latency must be at least the hop count (one cycle per switch).
+        assert!(r.avg_latency >= r.measured_hops);
+        if d > 1 {
+            assert!(r.l2_hop_events > 0, "D={d}: no L2 traffic");
+        }
+    }
+}
+
+#[test]
+fn single_inter_domain_flit_hops_are_exactly_ring_plus_three() {
+    let m = MultiDomain::new(4);
+    for (src, dst) in [(0usize, 27usize), (5, 47), (61, 15)] {
+        let mut sim = m.sim(4, EnergyParams::nominal());
+        sim.inject(src, &Dest::Core(dst), 0);
+        sim.run_until_drained(10_000).unwrap();
+        let hops = sim.delivered()[0].flit.hops as f64;
+        let oracle = m.analytic.hops_between(src, dst);
+        assert!(
+            (hops - oracle).abs() < 1e-12,
+            "{src}->{dst}: simulated {hops} vs analytic {oracle}"
+        );
+    }
+}
+
+#[test]
+fn gated_l2_kills_cross_domain_but_not_intra_domain_traffic() {
+    let mut sim = sim_for(2);
+    // Gate domain 0's level-2 router.
+    let topo = sim.topology().clone();
+    let l2 = (0..topo.len())
+        .find(|&n| matches!(topo.kind(n), NodeKind::RouterL2(_)))
+        .expect("multi-domain topology has L2 routers");
+    sim.set_node_enabled(l2, false);
+
+    // Intra-domain traffic in both domains drains: hierarchical routing
+    // never sends it through an L2 router.
+    for dst in 1..20 {
+        sim.inject(0, &Dest::Core(dst), 0);
+        sim.inject(20, &Dest::Core(20 + dst), 0);
+    }
+    sim.run_until_drained(100_000).unwrap();
+    assert_eq!(sim.delivered().len(), 38);
+    assert_eq!(sim.in_flight(), 0);
+
+    // A cross-domain flit must climb through the gated L2: undrainable.
+    sim.inject(0, &Dest::Core(25), 0);
+    let err = sim.run_until_drained(5_000).unwrap_err();
+    assert!(err.to_string().contains("not drained"), "{err}");
+
+    // Re-enabling the router releases the stuck flit.
+    sim.set_node_enabled(l2, true);
+    sim.run_until_drained(100_000).unwrap();
+    assert_eq!(sim.delivered().len(), 39);
+}
+
+#[test]
+fn parallel_batch_runner_bit_identical_on_a_multidomain_chip() {
+    // The sharded runner over a 2-domain chip: the parallel aggregate must
+    // be bit-identical to the same shards executed sequentially.
+    use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use fullerene_soc::core::Codebook;
+    use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+    use fullerene_soc::soc::SocConfig;
+
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 60,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let w = Workload::Nmnist;
+    let (inputs, hidden, classes) = (w.inputs(), 26, w.classes());
+    let net = NetworkDesc {
+        name: "multidomain-batch".into(),
+        layers: vec![
+            LayerDesc {
+                name: "h".into(),
+                inputs,
+                neurons: hidden,
+                codebook: cb.clone(),
+                widx: (0..inputs * hidden).map(|i| ((i * 7) % 16) as u8).collect(),
+                neuron_params: params.clone(),
+            },
+            LayerDesc {
+                name: "o".into(),
+                inputs: hidden,
+                neurons: classes,
+                codebook: cb,
+                widx: (0..hidden * classes).map(|i| ((i * 5) % 16) as u8).collect(),
+                neuron_params: params,
+            },
+        ],
+        timesteps: w.timesteps(),
+        classes,
+    };
+    let ds = w.generate(6, 77);
+    let runner = ExperimentRunner::new(
+        net,
+        ExperimentConfig {
+            soc: SocConfig {
+                domains: 2,
+                n_cores: 40,
+                // 1 neuron/core spreads the 26-neuron hidden layer over
+                // cores 0..26 and the 10 outputs over cores 26..36 —
+                // inter-layer traffic crosses the L2 ring.
+                max_neurons_per_core: 1,
+                ..SocConfig::default()
+            },
+            check: GoldenCheck::Reference,
+            ..ExperimentConfig::default()
+        },
+    )
+    .unwrap();
+    let par = runner.run_parallel(&ds, 3).unwrap();
+    let seq = runner.run_sharded(&ds, 3, false).unwrap();
+    assert_eq!(par.mismatches, 0, "multi-domain chip diverged from reference");
+    assert_eq!(par.checked, seq.checked);
+    assert_eq!(par.report.cycles, seq.report.cycles);
+    assert_eq!(par.report.sops, seq.report.sops);
+    assert_eq!(
+        par.report.pj_per_sop.to_bits(),
+        seq.report.pj_per_sop.to_bits()
+    );
+    assert_eq!(par.report.power_mw.to_bits(), seq.report.power_mw.to_bits());
+    // The merged breakdown must carry L2 fabric energy.
+    assert!(
+        par.report.breakdown.by_class.contains_key("HopL2"),
+        "no L2 energy in {:?}",
+        par.report.breakdown.by_class.keys().collect::<Vec<_>>()
+    );
+}

@@ -1,0 +1,104 @@
+//! Regression pins for the paper's published topology metrics (Fig. 5a/5b),
+//! computed through `noc::metrics::TopoStats` over the same node convention
+//! the paper uses (cores + routers both count as communication nodes).
+//!
+//! Paper anchors: fullerene average node degree 3.75, exceeding the
+//! mesh/torus/tree baselines by ~32 %; degree variance ≈ 0.93 (exact
+//! construction value 0.9375); average core-to-core distance 3.16 links.
+
+use fullerene_soc::noc::{TopoStats, Topology};
+
+fn baselines() -> Vec<TopoStats> {
+    vec![
+        TopoStats::compute(&Topology::mesh2d(4, 5)),
+        TopoStats::compute(&Topology::torus(4, 5)),
+        TopoStats::compute(&Topology::tree(4, 20)),
+        TopoStats::compute(&Topology::ring(20)),
+    ]
+}
+
+#[test]
+fn fullerene_degree_is_exactly_the_paper_value() {
+    let f = TopoStats::compute(&Topology::fullerene());
+    assert!((f.avg_degree - 3.75).abs() < 1e-12, "avg degree {}", f.avg_degree);
+}
+
+#[test]
+fn fullerene_degree_variance_matches_paper_093() {
+    let f = TopoStats::compute(&Topology::fullerene());
+    // Exact construction value: 12 routers at degree 5, 20 cores at 3
+    // around the 3.75 mean → variance 0.9375; the paper rounds to 0.93.
+    assert!(
+        (f.degree_variance - 0.9375).abs() < 1e-12,
+        "variance {}",
+        f.degree_variance
+    );
+    assert!((f.degree_variance - 0.93).abs() < 0.01);
+}
+
+#[test]
+fn fullerene_degree_exceeds_every_baseline_and_by_about_a_third_on_average() {
+    let f = TopoStats::compute(&Topology::fullerene());
+    let base = baselines();
+    for b in &base {
+        let gain = f.avg_degree / b.avg_degree;
+        assert!(gain > 1.2, "{}: degree gain only {gain:.3}", b.name);
+    }
+    // The paper headlines "+32 %"; averaged across our four baselines the
+    // margin is comfortably above that (regression floor, not a tight pin).
+    let mean_base = base.iter().map(|b| b.avg_degree).sum::<f64>() / base.len() as f64;
+    let mean_gain = f.avg_degree / mean_base;
+    assert!(mean_gain > 1.32, "mean degree gain {mean_gain:.3}");
+}
+
+#[test]
+fn fullerene_average_core_distance_is_316_links() {
+    let f = TopoStats::compute(&Topology::fullerene());
+    // Exactly 60/19 ≈ 3.158: per core, 9 neighbors at 2 links, 9 at 4,
+    // and the antipodal face at 6.
+    assert!(
+        (f.avg_core_hops - 60.0 / 19.0).abs() < 1e-12,
+        "avg distance {}",
+        f.avg_core_hops
+    );
+    assert!((f.avg_core_hops - 3.16).abs() < 0.01);
+    assert_eq!(f.diameter_core_hops, 6);
+}
+
+#[test]
+fn fullerene_variance_is_the_smallest_of_all_topologies() {
+    let f = TopoStats::compute(&Topology::fullerene());
+    for b in baselines() {
+        assert!(
+            b.degree_variance > f.degree_variance,
+            "{}: variance {} not above fullerene's {}",
+            b.name,
+            b.degree_variance,
+            f.degree_variance
+        );
+    }
+}
+
+#[test]
+fn multi_domain_keeps_per_domain_degree_statistics_stable() {
+    // Adding domains must not distort the level-1 fabric: in a 4-domain
+    // system, L1 routers gain exactly one L2 uplink (degree 6) and cores
+    // stay at degree 3.
+    let t = Topology::multi_domain(4);
+    let mut l1 = 0usize;
+    for n in 0..t.len() {
+        match t.kind(n) {
+            fullerene_soc::noc::NodeKind::Core(_) => {
+                assert_eq!(t.neighbors(n).len(), 3)
+            }
+            fullerene_soc::noc::NodeKind::RouterL1(_) => {
+                assert_eq!(t.neighbors(n).len(), 6);
+                l1 += 1;
+            }
+            fullerene_soc::noc::NodeKind::RouterL2(_) => {
+                assert_eq!(t.neighbors(n).len(), 14)
+            }
+        }
+    }
+    assert_eq!(l1, 48);
+}
