@@ -12,7 +12,7 @@ use fullerene_soc::datasets::{Dataset, Workload};
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::metrics::Table;
 use fullerene_soc::nn::load_weights_json;
-use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::serve::SocBuilder;
 use std::path::Path;
 
 fn load_net() -> fullerene_soc::Result<fullerene_soc::nn::NetworkDesc> {
@@ -22,40 +22,14 @@ fn load_net() -> fullerene_soc::Result<fullerene_soc::nn::NetworkDesc> {
         return Ok(load_weights_json(trained)?);
     }
     println!("(untrained fallback network — run `make artifacts` for the real one)");
-    use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
-    use fullerene_soc::core::Codebook;
-    use fullerene_soc::nn::network::LayerDesc;
     let w = Workload::DvsGesture;
-    let cb = Codebook::default_log16();
-    let params = NeuronParams {
-        threshold: 90,
-        leak: LeakMode::Linear(1),
-        reset: ResetMode::Subtract,
-        mp_bits: 16,
-    };
-    Ok(fullerene_soc::nn::NetworkDesc {
-        name: "dvs-fallback".into(),
-        layers: vec![
-            LayerDesc {
-                name: "h".into(),
-                inputs: w.inputs(),
-                neurons: 96,
-                codebook: cb.clone(),
-                widx: (0..w.inputs() * 96).map(|i| ((i * 13) % 16) as u8).collect(),
-                neuron_params: params.clone(),
-            },
-            LayerDesc {
-                name: "o".into(),
-                inputs: 96,
-                neurons: w.classes(),
-                codebook: cb,
-                widx: (0..96 * w.classes()).map(|i| ((i * 11) % 16) as u8).collect(),
-                neuron_params: params,
-            },
-        ],
-        timesteps: w.timesteps(),
-        classes: w.classes(),
-    })
+    Ok(fullerene_soc::benches_support::structural_net(
+        "dvs-fallback",
+        w.inputs(),
+        96,
+        w.classes(),
+        w.timesteps(),
+    ))
 }
 
 fn main() -> fullerene_soc::Result<()> {
@@ -83,21 +57,20 @@ fn main() -> fullerene_soc::Result<()> {
     println!("{}", t.render());
 
     // --- operating-point sweep (Table I envelope) --------------------------
+    // One streaming session per operating point: the builder validates
+    // each point and the session close delivers the report (accuracy
+    // included — the session counts labelled pushes itself).
     println!("## operating-point sweep (8 samples each)");
     let mut reports = Vec::new();
     for (f_mhz, v) in [(50.0, 1.08), (100.0, 1.08), (200.0, 1.08), (100.0, 1.32)] {
-        let mut soc = Soc::new(
-            net.clone(),
-            SocConfig {
-                f_core_hz: f_mhz * 1e6,
-                supply_v: v,
-                ..SocConfig::default()
-            },
-        )?;
-        let acc = soc.run_dataset(&ds, 8)?;
-        let mut rep = soc.finish_report(&format!("{f_mhz:.0}MHz/{v}V"));
-        rep.accuracy = Some(acc);
-        reports.push(rep);
+        let mut session = SocBuilder::new()
+            .f_core_mhz(f_mhz)
+            .supply_v(v)
+            .open_session(&net, &format!("{f_mhz:.0}MHz/{v}V"))?;
+        for s in ds.samples.iter().take(8) {
+            session.push(s)?;
+        }
+        reports.push(session.close().report);
     }
     println!("{}", ChipReport::table(&reports).render());
     println!(

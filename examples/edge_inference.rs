@@ -13,10 +13,11 @@
 //!
 //! The measured numbers land in EXPERIMENTS.md §Table-I.
 
-use fullerene_soc::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
+use fullerene_soc::coordinator::GoldenCheck;
 use fullerene_soc::datasets::Dataset;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::nn::load_weights_json;
+use fullerene_soc::serve::SocBuilder;
 use fullerene_soc::util::cli::Args;
 use fullerene_soc::{Error, Result};
 use std::path::PathBuf;
@@ -45,15 +46,11 @@ fn main() -> Result<()> {
             ds.samples.len().min(limit)
         );
         let check = if use_xla { GoldenCheck::Both } else { GoldenCheck::Reference };
-        let runner = ExperimentRunner::new(
-            net,
-            ExperimentConfig {
-                limit,
-                check,
-                artifacts: artifacts.clone(),
-                ..ExperimentConfig::default()
-            },
-        )?;
+        let runner = SocBuilder::new()
+            .check(check)
+            .artifacts(artifacts.clone())
+            .limit(limit)
+            .build_runner(net)?;
         let out = runner.run(&ds)?;
         println!(
             "[{name}] golden check: {} checks, {} mismatches {}",

@@ -1,6 +1,6 @@
 //! Quickstart: build a small spiking network by hand, map it onto the
-//! simulated chip, run a handful of event-stream samples and print the
-//! chip report.
+//! simulated chip through `SocBuilder`, stream a handful of event
+//! samples through a `Session` and print the chip report.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -11,7 +11,7 @@ use fullerene_soc::datasets::Workload;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
 use fullerene_soc::nn::quant::kmeans_quantize;
-use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::serve::SocBuilder;
 use fullerene_soc::util::prng::Rng;
 
 fn main() -> fullerene_soc::Result<()> {
@@ -55,12 +55,16 @@ fn main() -> fullerene_soc::Result<()> {
         net.total_synapses()
     );
 
-    // 2. Assemble the chip (20 cores, fullerene NoC, RISC-V control CPU).
-    let mut soc = Soc::new(net, SocConfig::default())?;
+    // 2. Assemble the chip (20 cores, fullerene NoC, RISC-V control CPU)
+    //    and open a streaming session on it. The builder validates the
+    //    whole configuration; the session owns the accounting window.
+    let mut session = SocBuilder::new().open_session(&net, "quickstart")?;
     println!(
         "mapped onto {} cores: {}",
-        soc.mapping().cores_used(),
-        soc.mapping()
+        session.soc().mapping().cores_used(),
+        session
+            .soc()
+            .mapping()
             .placements
             .iter()
             .map(|p| format!(
@@ -74,18 +78,33 @@ fn main() -> fullerene_soc::Result<()> {
             .join(" ")
     );
 
-    // 3. Run a few synthetic saccade samples.
+    // 3. Stream a few synthetic saccade samples through the session.
     let ds = w.generate(5, 42);
     for (i, s) in ds.samples.iter().enumerate() {
-        let r = soc.run_sample(s, true)?;
+        let r = session.push(s)?;
         println!(
             "sample {i}: label {} → predicted {} | {} SOPs, {} cycles",
             s.label, r.predicted, r.sops, r.cycles
         );
+        if i == 1 {
+            // Incremental report mid-stream — snapshots don't disturb
+            // the session's accounting.
+            let snap = session.snapshot();
+            println!(
+                "  (snapshot after {} samples: {:.3} pJ/SOP, {:.2} mW)",
+                snap.samples, snap.pj_per_sop, snap.power_mw
+            );
+        }
     }
 
-    // 4. The Table-I-style chip report.
-    let report = soc.finish_report("quickstart");
-    println!("\n{}", ChipReport::table(std::slice::from_ref(&report)).render());
+    // 4. Close the session: the final Table-I-style chip report plus the
+    //    serving latency ledger. Forgetting this is a compile error —
+    //    `close` consumes the session.
+    let closed = session.close();
+    println!(
+        "\nsession latency: p50 {:.3} ms, p99 {:.3} ms per sample",
+        closed.stats.p50_latency_ms, closed.stats.p99_latency_ms
+    );
+    println!("{}", ChipReport::table(std::slice::from_ref(&closed.report)).render());
     Ok(())
 }

@@ -61,6 +61,28 @@ fn main() {
          and descend, every hop energy-ledgered"
     );
 
+    // --- serving path: throughput + session latency -------------------------
+    // (machine-readable BENCH_sessions.json for the perf trajectory)
+    println!("\n## serving path: SocPool sessions bench");
+    let sb = benches_support::sessions_bench(6, 8, 4, 42).expect("sessions bench");
+    println!(
+        "{} sessions x {} samples on {} workers: {:.1} samples/s host, \
+         session latency p50 {:.3} ms / p99 {:.3} ms (simulated), \
+         merged {:.3} pJ/SOP",
+        sb.sessions,
+        sb.samples_per_session,
+        sb.workers,
+        sb.throughput_samples_per_s,
+        sb.p50_session_latency_ms,
+        sb.p99_session_latency_ms,
+        sb.merged_pj_per_sop
+    );
+    let bench_json = std::path::Path::new("BENCH_sessions.json");
+    benches_support::sessions_bench_json(&sb)
+        .write_file(bench_json)
+        .expect("write BENCH_sessions.json");
+    println!("wrote {}", bench_json.display());
+
     // --- simulator wall-clock (perf tracking) -------------------------------
     let mut b = Bench::new("fig5_noc");
     for &(name, load) in &[("light", 0.05), ("heavy", 0.4)] {

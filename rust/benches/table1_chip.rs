@@ -52,9 +52,9 @@ fn main() {
         let net = load_weights_json(&wpath).expect("weights parse");
         let ds = Dataset::load_json(&dpath).expect("dataset parse");
         let mut soc = Soc::new(net.clone(), SocConfig::default()).expect("soc");
-        let acc = soc.run_dataset(&ds, samples).expect("run");
+        let out = soc.run_dataset(&ds, samples).expect("run");
         let mut rep = soc.finish_report(name);
-        rep.accuracy = Some(acc);
+        rep.accuracy = Some(out.accuracy);
         reports.push(rep);
 
         // Per-sample wall-clock of the whole-chip simulator.

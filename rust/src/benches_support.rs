@@ -13,16 +13,25 @@
 //!   nodes" claim, measured instead of asserted).
 //! - [`fig6_power`] — RISC-V average power with sleep/clock-gating vs the
 //!   busy-wait baseline on the MNIST control protocol (paper Fig. 6).
+//! - [`sessions_bench`] — serving-path throughput/latency measurement
+//!   (host samples/s, simulated p50/p99 session latency) emitted as
+//!   machine-readable `BENCH_sessions.json` by the fig5 bench target so
+//!   future PRs have a perf trajectory.
 
+use crate::coordinator::GoldenCheck;
 use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
 use crate::core::{Codebook, DenseCore, NeuroCore, SynapsesBuilder};
 use crate::energy::constants::F_CORE_HZ;
 use crate::energy::{EnergyParams, EventClass};
 use crate::metrics::Table;
+use crate::nn::network::{LayerDesc, NetworkDesc};
 use crate::noc::traffic::{Pattern, TrafficGen};
 use crate::noc::{MultiDomain, NocSim, Topology};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::firmware;
+use crate::serve::{SessionSpec, SocPool, TrafficWorkload};
+use crate::soc::SocConfig;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::Result;
 
@@ -369,6 +378,180 @@ pub fn fig6_power() -> Result<(f64, f64, f64)> {
     Ok((gated.avg_power_mw, baseline.avg_power_mw, reduction))
 }
 
+/// Geometry of the serving-bench traffic stream / network.
+const SERVE_BENCH_INPUTS: usize = 64;
+const SERVE_BENCH_CLASSES: usize = 4;
+const SERVE_BENCH_TIMESTEPS: usize = 10;
+
+/// Structural 2-layer network at explicit geometry: fixed pseudo-random
+/// codebook indexes, so the structure exercises every chip code path
+/// while accuracy stays at chance. The single recipe shared by the CLI
+/// fallback (`fullerene-soc run`/`serve` without trained artifacts),
+/// the serving bench and the examples.
+pub fn structural_net(
+    name: &str,
+    inputs: usize,
+    hidden: usize,
+    classes: usize,
+    timesteps: usize,
+) -> NetworkDesc {
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 80,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    NetworkDesc {
+        name: name.to_string(),
+        layers: vec![
+            LayerDesc {
+                name: "h".into(),
+                inputs,
+                neurons: hidden,
+                codebook: cb.clone(),
+                widx: (0..inputs * hidden)
+                    .map(|i| ((i.wrapping_mul(2654435761)) % 16) as u8)
+                    .collect(),
+                neuron_params: params.clone(),
+            },
+            LayerDesc {
+                name: "o".into(),
+                inputs: hidden,
+                neurons: classes,
+                codebook: cb,
+                widx: (0..hidden * classes)
+                    .map(|i| ((i.wrapping_mul(40503)) % 16) as u8)
+                    .collect(),
+                neuron_params: params,
+            },
+        ],
+        timesteps,
+        classes,
+    }
+}
+
+/// Structural network matching the serving-bench traffic geometry.
+fn serve_bench_net() -> NetworkDesc {
+    structural_net(
+        "serve-bench",
+        SERVE_BENCH_INPUTS,
+        48,
+        SERVE_BENCH_CLASSES,
+        SERVE_BENCH_TIMESTEPS,
+    )
+}
+
+/// Serving-path benchmark result: a [`SocPool`] serving `sessions`
+/// concurrent traffic sessions of `samples_per_session` samples each.
+#[derive(Debug, Clone)]
+pub struct SessionsBench {
+    /// Concurrent sessions served.
+    pub sessions: usize,
+    /// Samples per session.
+    pub samples_per_session: usize,
+    /// Pool worker threads.
+    pub workers: usize,
+    /// Total samples served.
+    pub total_samples: u64,
+    /// Host wall-clock of the serve call (seconds).
+    pub host_wall_s: f64,
+    /// Host serving throughput (samples/second of simulator wall time).
+    pub throughput_samples_per_s: f64,
+    /// Median whole-session latency (ms, simulated chip time).
+    pub p50_session_latency_ms: f64,
+    /// 99th-percentile whole-session latency (ms, simulated chip time).
+    pub p99_session_latency_ms: f64,
+    /// Merged chip efficiency over all sessions (pJ/SOP).
+    pub merged_pj_per_sop: f64,
+    /// Merged average chip power (mW).
+    pub merged_power_mw: f64,
+}
+
+/// Run the serving-path benchmark: seeded traffic sessions through a
+/// [`SocPool`], measuring host throughput and simulated latency.
+pub fn sessions_bench(
+    sessions: usize,
+    samples_per_session: usize,
+    workers: usize,
+    seed: u64,
+) -> Result<SessionsBench> {
+    let pool = SocPool::new(
+        serve_bench_net(),
+        SocConfig::default(),
+        workers.max(1),
+        GoldenCheck::None,
+    )?;
+    let specs: Vec<SessionSpec> = (0..sessions)
+        .map(|i| {
+            SessionSpec::new(
+                &format!("sess{i}"),
+                Box::new(TrafficWorkload::new(
+                    SERVE_BENCH_INPUTS,
+                    SERVE_BENCH_CLASSES,
+                    SERVE_BENCH_TIMESTEPS,
+                    0.08,
+                    samples_per_session,
+                    seed + i as u64,
+                )),
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = pool.serve(specs)?;
+    let host_wall_s = t0.elapsed().as_secs_f64();
+    let mut session_ms: Vec<f64> = out
+        .sessions
+        .iter()
+        .map(|s| s.stats.session_ms())
+        .collect();
+    session_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| crate::serve::session::percentile(&session_ms, p);
+    let total_samples: u64 = out.sessions.iter().map(|s| s.stats.samples).sum();
+    Ok(SessionsBench {
+        sessions,
+        samples_per_session,
+        workers: pool.workers(),
+        total_samples,
+        host_wall_s,
+        throughput_samples_per_s: if host_wall_s > 0.0 {
+            total_samples as f64 / host_wall_s
+        } else {
+            0.0
+        },
+        p50_session_latency_ms: pct(0.50),
+        p99_session_latency_ms: pct(0.99),
+        merged_pj_per_sop: out.merged.pj_per_sop,
+        merged_power_mw: out.merged.power_mw,
+    })
+}
+
+/// The serving benchmark as machine-readable JSON (the
+/// `BENCH_sessions.json` schema future PRs track).
+pub fn sessions_bench_json(b: &SessionsBench) -> Json {
+    Json::obj(vec![
+        ("sessions", Json::Num(b.sessions as f64)),
+        ("samples_per_session", Json::Num(b.samples_per_session as f64)),
+        ("workers", Json::Num(b.workers as f64)),
+        ("total_samples", Json::Num(b.total_samples as f64)),
+        ("host_wall_s", Json::Num(b.host_wall_s)),
+        (
+            "throughput_samples_per_s",
+            Json::Num(b.throughput_samples_per_s),
+        ),
+        (
+            "p50_session_latency_ms",
+            Json::Num(b.p50_session_latency_ms),
+        ),
+        (
+            "p99_session_latency_ms",
+            Json::Num(b.p99_session_latency_ms),
+        ),
+        ("merged_pj_per_sop", Json::Num(b.merged_pj_per_sop)),
+        ("merged_power_mw", Json::Num(b.merged_power_mw)),
+    ])
+}
+
 /// Fig. 6 as a printable table.
 pub fn fig6_table() -> Result<Table> {
     let (gated, baseline, reduction) = fig6_power()?;
@@ -438,6 +621,20 @@ mod tests {
         assert!(pts[1].l2_hops > 0 && pts[2].l2_hops > 0);
         // More domains → longer average paths and more NoC energy.
         assert!(pts[2].measured_hops > pts[0].measured_hops);
+    }
+
+    #[test]
+    fn sessions_bench_produces_sane_numbers() {
+        let b = sessions_bench(3, 2, 2, 11).unwrap();
+        assert_eq!(b.total_samples, 6);
+        assert!(b.throughput_samples_per_s > 0.0);
+        assert!(b.p50_session_latency_ms > 0.0);
+        assert!(b.p99_session_latency_ms >= b.p50_session_latency_ms);
+        assert!(b.merged_pj_per_sop.is_finite() && b.merged_pj_per_sop > 0.0);
+        let j = sessions_bench_json(&b);
+        let s = j.to_string();
+        assert!(s.contains("throughput_samples_per_s"));
+        assert!(s.contains("p99_session_latency_ms"));
     }
 
     #[test]

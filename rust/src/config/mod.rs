@@ -15,7 +15,7 @@
 //! }
 //! ```
 
-use crate::coordinator::{ExperimentConfig, GoldenCheck};
+use crate::coordinator::GoldenCheck;
 use crate::datasets::Workload;
 use crate::soc::SocConfig;
 use crate::util::json::Json;
@@ -61,7 +61,12 @@ impl Default for RunConfig {
     }
 }
 
-/// Parse a workload name.
+/// Parse a synthetic-dataset workload name into the enum descriptor.
+///
+/// Legacy enum dispatch for the batch CLI paths; the streaming API
+/// parses richer specs (replay files, traffic generators) through
+/// [`crate::serve::workload_from_spec`], which delegates plain dataset
+/// names here.
 pub fn parse_workload(name: &str) -> Result<Workload> {
     Ok(match name {
         "nmnist" => Workload::Nmnist,
@@ -144,53 +149,15 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    /// Validate ranges.
+    /// Validate ranges. Chip checks are delegated to the single choke
+    /// point, [`crate::serve::SocBuilder::validate`], so JSON-loaded and
+    /// CLI-flag-built configs can no longer diverge in what they accept.
     pub fn validate(&self) -> Result<()> {
-        if !(1..=64).contains(&self.soc.domains) {
-            return Err(Error::Config(format!(
-                "domains {} outside 1..=64",
-                self.soc.domains
-            )));
-        }
-        let max_cores = 20 * self.soc.domains;
-        if self.soc.n_cores == 0 || self.soc.n_cores > max_cores {
-            return Err(Error::Config(format!(
-                "n_cores {} outside 1..={max_cores} ({} fullerene domain(s))",
-                self.soc.n_cores, self.soc.domains
-            )));
-        }
-        if self.soc.max_neurons_per_core == 0
-            || self.soc.max_neurons_per_core > crate::core::MAX_NEURONS_PER_CORE
-        {
-            return Err(Error::Config(format!(
-                "max_neurons_per_core {} outside 1..={}",
-                self.soc.max_neurons_per_core,
-                crate::core::MAX_NEURONS_PER_CORE
-            )));
-        }
-        if self.soc.fifo_depth == 0 || self.soc.fifo_depth > 64 {
-            return Err(Error::Config("fifo_depth outside 1..=64".into()));
-        }
-        if !(0.9..=1.4).contains(&self.soc.supply_v) {
-            return Err(Error::Config(format!(
-                "supply {} V outside the 0.9–1.4 V model range",
-                self.soc.supply_v
-            )));
-        }
+        crate::serve::SocBuilder::from_run_config(self).validate()?;
         if self.workload.samples == 0 {
             return Err(Error::Config("samples must be > 0".into()));
         }
         Ok(())
-    }
-
-    /// Convert to an [`ExperimentConfig`].
-    pub fn experiment(&self) -> ExperimentConfig {
-        ExperimentConfig {
-            soc: self.soc.clone(),
-            limit: self.workload.samples,
-            check: self.check,
-            artifacts: self.artifacts.clone(),
-        }
     }
 }
 

@@ -1,8 +1,10 @@
-//! Experiment coordination: ties datasets, the SoC simulator and the XLA
-//! golden model together into reproducible experiment runs (the layer the
-//! CLI and benches drive). The sharded batch runner
-//! ([`ExperimentRunner::run_parallel`]) spreads a sample set across all
-//! host cores, one simulated chip per worker, with a deterministic merge.
+//! Batch experiment coordination: ties datasets, the SoC simulator and
+//! the XLA golden model together into reproducible experiment runs (the
+//! layer the CLI and benches drive for dataset-shaped work). Built on
+//! the streaming serving primitives in [`crate::serve`]: a batch run is
+//! one [`crate::serve::Session`], a sharded run
+//! ([`ExperimentRunner::run_parallel`]) is a [`crate::serve::SocPool`]
+//! serving one replay session per shard with a deterministic merge.
 
 pub mod runner;
 

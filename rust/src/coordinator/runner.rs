@@ -1,21 +1,24 @@
-//! [`ExperimentRunner`]: run a workload on the simulated chip, optionally
-//! cross-checking every sample against the functional references (the
-//! in-process integer reference and/or the AOT-compiled XLA golden model).
+//! [`ExperimentRunner`]: the batch experiment layer, rebuilt on the
+//! streaming serving primitives — run a dataset on the simulated chip,
+//! optionally cross-checking every sample against the functional
+//! references (the in-process integer reference and/or the AOT-compiled
+//! XLA golden model).
 //!
-//! Heavy-traffic experiments use the **sharded batch runner**
-//! ([`ExperimentRunner::run_parallel`]): the sample list is split into
-//! contiguous shards — a pure function of `(n, workers)` — each shard
-//! runs on its own [`Soc`] on its own OS thread (`std::thread::scope`),
-//! and the shard [`ChipReport`]s merge in shard order through
-//! [`ChipReport::merged`]. Because the simulator is deterministic and the
-//! merge order is fixed, the aggregate is **bit-identical** to executing
-//! the same shards sequentially ([`ExperimentRunner::run_sharded`] with
+//! Internally a batch run is one [`crate::serve::Session`]; a sharded
+//! run ([`ExperimentRunner::run_parallel`]) is a [`crate::serve::SocPool`]
+//! serving one [`crate::serve::EventReplay`] session per contiguous
+//! shard — a pure function of `(n, workers)` — with the per-shard
+//! [`ChipReport`]s merged in shard order through [`ChipReport::merged`].
+//! Because the simulator is deterministic and the merge order is fixed,
+//! the aggregate is **bit-identical** to executing the same shards
+//! sequentially ([`ExperimentRunner::run_sharded`] with
 //! `parallel = false`), regardless of thread scheduling.
 
-use crate::datasets::{Dataset, Sample};
-use crate::energy::{AreaModel, ChipReport};
+use crate::datasets::Dataset;
+use crate::energy::ChipReport;
 use crate::nn::NetworkDesc;
 use crate::runtime::GoldenModel;
+use crate::serve::{EventReplay, Session, SessionSpec, SocPool};
 use crate::soc::{Soc, SocConfig};
 use crate::{Error, Result};
 use std::path::PathBuf;
@@ -33,7 +36,9 @@ pub enum GoldenCheck {
     Both,
 }
 
-/// Experiment configuration.
+/// Experiment configuration. Prefer assembling it through
+/// [`crate::serve::SocBuilder::build_runner`], which validates every
+/// field on the way in.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     /// Chip configuration.
@@ -76,33 +81,6 @@ fn shard_range(n: usize, workers: usize, w: usize) -> (usize, usize) {
     (w * n / workers, (w + 1) * n / workers)
 }
 
-/// Run one shard of samples on a fresh [`Soc`]; returns the shard report
-/// and reference-check counters. This is the single code path both the
-/// sequential and the parallel runner execute per shard.
-fn run_shard(
-    net: &NetworkDesc,
-    config: &ExperimentConfig,
-    workload: &str,
-    samples: &[Sample],
-) -> Result<(ChipReport, u64, u64)> {
-    let mut soc = Soc::new(net.clone(), config.soc.clone())?;
-    let mut mismatches = 0u64;
-    let mut checked = 0u64;
-    let use_ref = matches!(config.check, GoldenCheck::Reference | GoldenCheck::Both);
-    for sample in samples {
-        let r = soc.run_sample(sample, true)?;
-        if use_ref {
-            let raster = sample.to_raster(net.timesteps, net.input_size());
-            let expect = net.reference_run(&raster);
-            checked += 1;
-            if expect != r.counts {
-                mismatches += 1;
-            }
-        }
-    }
-    Ok((soc.finish_report(workload), mismatches, checked))
-}
-
 /// The runner.
 pub struct ExperimentRunner {
     net: NetworkDesc,
@@ -122,8 +100,9 @@ impl ExperimentRunner {
         Ok(ExperimentRunner { net, config, golden })
     }
 
-    /// Run the dataset through the chip; returns the report and the
-    /// mismatch count against the requested references.
+    /// Run the dataset through the chip as one streaming session;
+    /// returns the report and the mismatch count against the requested
+    /// references.
     pub fn run(&self, ds: &Dataset) -> Result<ExperimentOutcome> {
         if ds.inputs != self.net.input_size() {
             return Err(Error::Config(format!(
@@ -132,16 +111,17 @@ impl ExperimentRunner {
                 self.net.input_size()
             )));
         }
-        let mut soc = Soc::new(self.net.clone(), self.config.soc.clone())?;
+        let soc = Soc::new(self.net.clone(), self.config.soc.clone())?;
+        let mut session = Session::open(soc, &ds.name);
         let mut mismatches = 0u64;
         let mut checked = 0u64;
+        let use_ref = matches!(
+            self.config.check,
+            GoldenCheck::Reference | GoldenCheck::Both
+        );
         let n = ds.samples.len().min(self.config.limit);
         for sample in &ds.samples[..n] {
-            let r = soc.run_sample(sample, true)?;
-            let use_ref = matches!(
-                self.config.check,
-                GoldenCheck::Reference | GoldenCheck::Both
-            );
+            let r = session.push(sample)?;
             if use_ref {
                 let raster = sample.to_raster(self.net.timesteps, self.net.input_size());
                 let expect = self.net.reference_run(&raster);
@@ -159,16 +139,17 @@ impl ExperimentRunner {
             }
         }
         Ok(ExperimentOutcome {
-            report: soc.finish_report(&ds.name),
+            report: session.close().report,
             mismatches,
             checked,
         })
     }
 
-    /// Sharded batch run across all host cores: one [`Soc`] per worker
-    /// thread over a contiguous sample shard, merged deterministically.
-    /// Bit-identical to [`ExperimentRunner::run_sharded`] with
-    /// `parallel = false` for the same `(dataset, workers)` input.
+    /// Sharded batch run across all host cores: one session per
+    /// contiguous sample shard, served by a [`SocPool`], merged
+    /// deterministically. Bit-identical to
+    /// [`ExperimentRunner::run_sharded`] with `parallel = false` for the
+    /// same `(dataset, workers)` input.
     ///
     /// The XLA golden model holds per-process runtime state, so only
     /// [`GoldenCheck::None`] and [`GoldenCheck::Reference`] are supported
@@ -178,8 +159,9 @@ impl ExperimentRunner {
     }
 
     /// Sharded run with explicit execution mode (`parallel = false`
-    /// executes the exact same shards one after another on the calling
-    /// thread — the reference path for the bit-identity guarantee).
+    /// serves the exact same shard sessions one after another on the
+    /// calling thread — the reference path for the bit-identity
+    /// guarantee).
     pub fn run_sharded(
         &self,
         ds: &Dataset,
@@ -202,48 +184,41 @@ impl ExperimentRunner {
         }
         let n = ds.samples.len().min(self.config.limit);
         let workers = workers.clamp(1, n.max(1));
-        let shard_results: Vec<Result<(ChipReport, u64, u64)>> = if parallel && workers > 1 {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..workers)
-                    .map(|w| {
-                        let (a, b) = shard_range(n, workers, w);
-                        let net = &self.net;
-                        let config = &self.config;
-                        let name = ds.name.as_str();
-                        let shard = &ds.samples[a..b];
-                        scope.spawn(move || run_shard(net, config, name, shard))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            Err(Error::Soc("batch worker thread panicked".into()))
-                        })
-                    })
-                    .collect()
+        let pool = SocPool::new(
+            self.net.clone(),
+            self.config.soc.clone(),
+            workers,
+            self.config.check,
+        )?;
+        // One shared copy of the clipped sample list; every shard is an
+        // `[a, b)` window over the same Arc, not a per-shard clone.
+        let shared = std::sync::Arc::new(ds.samples[..n].to_vec());
+        let specs: Vec<SessionSpec> = (0..workers)
+            .map(|w| {
+                let (a, b) = shard_range(n, workers, w);
+                SessionSpec::new(
+                    &ds.name,
+                    Box::new(EventReplay::shard(
+                        &ds.name,
+                        ds.inputs,
+                        ds.timesteps,
+                        ds.classes,
+                        shared.clone(),
+                        a,
+                        b,
+                    )),
+                )
             })
+            .collect();
+        let out = if parallel {
+            pool.serve(specs)?
         } else {
-            (0..workers)
-                .map(|w| {
-                    let (a, b) = shard_range(n, workers, w);
-                    run_shard(&self.net, &self.config, &ds.name, &ds.samples[a..b])
-                })
-                .collect()
+            pool.serve_sequential(specs)?
         };
-        let mut reports = Vec::with_capacity(workers);
-        let mut mismatches = 0u64;
-        let mut checked = 0u64;
-        for r in shard_results {
-            let (rep, m, c) = r?;
-            reports.push(rep);
-            mismatches += m;
-            checked += c;
-        }
         Ok(ExperimentOutcome {
-            report: ChipReport::merged(&reports, &AreaModel::multi_chip(self.config.soc.domains)),
-            mismatches,
-            checked,
+            report: out.merged,
+            mismatches: out.mismatches,
+            checked: out.checked,
         })
     }
 }

@@ -248,6 +248,16 @@ impl NeuroCore {
         self.total_cycles
     }
 
+    /// Drop accumulated energy/cycle accounting (ledger, busy/gated
+    /// counters), keeping configuration and dynamic neuron state. Used
+    /// when a chip is reused for a fresh accounting window (a new
+    /// serving session).
+    pub fn reset_accounting(&mut self) {
+        self.ledger = EnergyLedger::new();
+        self.total_cycles = 0;
+        self.gated_cycles = 0;
+    }
+
     /// Read (and keep) the core's energy ledger.
     pub fn ledger(&self) -> &EnergyLedger {
         &self.ledger

@@ -74,6 +74,13 @@ impl AreaModel {
         }
     }
 
+    /// Fullerene routing domains this area model describes (1 for the
+    /// paper's single die; the multi-chip model scales cores linearly,
+    /// 20 per domain).
+    pub fn domains(&self) -> usize {
+        (self.n_cores / Self::paper_chip().n_cores).max(1)
+    }
+
     /// Total neurons on chip.
     pub fn total_neurons(&self) -> usize {
         self.n_cores * self.neurons_per_core

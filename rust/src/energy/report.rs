@@ -3,13 +3,16 @@
 
 use super::{AreaModel, EnergyBreakdown, EnergyLedger, EnergyParams};
 use crate::metrics::table::Table;
-
+use crate::{Error, Result};
 
 /// End-to-end chip report for one workload (one Table I column).
 #[derive(Debug, Clone)]
 pub struct ChipReport {
     /// Workload name (e.g. "nmnist-syn").
     pub workload: String,
+    /// Fullerene routing domains of the chip that produced this report
+    /// (from the area model; guards against merging incompatible runs).
+    pub domains: usize,
     /// Neuromorphic-processor frequency used (Hz).
     pub f_core_hz: f64,
     /// Supply voltage (V).
@@ -22,7 +25,10 @@ pub struct ChipReport {
     pub spikes_routed: u64,
     /// Classified samples (if the workload is a classification task).
     pub samples: u64,
-    /// Classification accuracy in [0,1] (if applicable).
+    /// Samples run with a known label — the accuracy denominator
+    /// (unlabelled serving pushes are excluded).
+    pub labelled: u64,
+    /// Classification accuracy in [0,1] over the labelled samples.
     pub accuracy: Option<f64>,
     /// Chip energy per synapse op (pJ/SOP) — whole-SoC accounting.
     pub pj_per_sop: f64,
@@ -52,6 +58,7 @@ impl ChipReport {
         f_core_hz: f64,
         cycles: u64,
         samples: u64,
+        labelled: u64,
         accuracy: Option<f64>,
         spikes_routed: u64,
     ) -> Self {
@@ -66,12 +73,14 @@ impl ChipReport {
             .then(|| cycles as f64 / f_core_hz * 1000.0 / samples as f64);
         ChipReport {
             workload: workload.to_string(),
+            domains: area.domains(),
             f_core_hz,
             supply_v: params.supply_v,
             cycles,
             sops,
             spikes_routed,
             samples,
+            labelled,
             accuracy,
             pj_per_sop,
             core_pj_per_sop,
@@ -88,25 +97,49 @@ impl ChipReport {
         self.breakdown.dynamic_pj + self.breakdown.static_pj
     }
 
-    /// Deterministically merge shard reports produced by independent
-    /// [`crate::soc::Soc`] instances over disjoint sample shards (the
-    /// parallel batch runner). Additive quantities (cycles, SOPs, event
-    /// energies) sum in shard order; derived metrics (pJ/SOP, power,
-    /// latency) are recomputed from the sums, so the result is
-    /// bit-identical regardless of thread scheduling.
+    /// Deterministically merge session/shard reports produced by
+    /// independent [`crate::soc::Soc`] instances over disjoint sample
+    /// streams (the parallel serving/batch paths). Additive quantities
+    /// (cycles, SOPs, event energies) sum in input order; derived metrics
+    /// (pJ/SOP, power, latency) are recomputed from the sums, so the
+    /// result is bit-identical regardless of thread scheduling.
     ///
-    /// All shards must share the operating point (frequency, supply).
-    pub fn merged(reports: &[ChipReport], area: &AreaModel) -> ChipReport {
-        assert!(!reports.is_empty(), "nothing to merge");
-        let first = &reports[0];
+    /// Errors instead of producing silent garbage when the inputs are not
+    /// mergeable: zero reports, mismatched `domains`, a mismatched merge
+    /// area model, or differing operating points (frequency, supply).
+    pub fn merged(reports: &[ChipReport], area: &AreaModel) -> Result<ChipReport> {
+        let Some(first) = reports.first() else {
+            return Err(Error::Soc("cannot merge zero chip reports".into()));
+        };
         for r in reports {
-            debug_assert_eq!(r.f_core_hz.to_bits(), first.f_core_hz.to_bits());
-            debug_assert_eq!(r.supply_v.to_bits(), first.supply_v.to_bits());
+            if r.domains != first.domains {
+                return Err(Error::Soc(format!(
+                    "cannot merge reports from different chips: {} vs {} domain(s)",
+                    first.domains, r.domains
+                )));
+            }
+            if r.f_core_hz.to_bits() != first.f_core_hz.to_bits()
+                || r.supply_v.to_bits() != first.supply_v.to_bits()
+            {
+                return Err(Error::Soc(format!(
+                    "cannot merge reports across operating points: \
+                     {:.0} Hz/{} V vs {:.0} Hz/{} V",
+                    first.f_core_hz, first.supply_v, r.f_core_hz, r.supply_v
+                )));
+            }
+        }
+        if area.domains() != first.domains {
+            return Err(Error::Soc(format!(
+                "merge area model covers {} domain(s) but reports come from {}",
+                area.domains(),
+                first.domains
+            )));
         }
         let mut cycles = 0u64;
         let mut sops = 0u64;
         let mut spikes_routed = 0u64;
         let mut samples = 0u64;
+        let mut labelled = 0u64;
         let mut correct_weight = 0.0f64;
         let mut any_accuracy = false;
         let mut total_pj = 0.0f64;
@@ -120,9 +153,12 @@ impl ChipReport {
             sops += r.sops;
             spikes_routed += r.spikes_routed;
             samples += r.samples;
+            labelled += r.labelled;
             if let Some(a) = r.accuracy {
                 any_accuracy = true;
-                correct_weight += a * r.samples as f64;
+                // Weight by the labelled count — the accuracy denominator
+                // — so sessions with unlabelled pushes merge exactly.
+                correct_weight += a * r.labelled as f64;
             }
             total_pj += r.total_pj();
             if r.sops > 0 && r.core_pj_per_sop.is_finite() {
@@ -139,16 +175,18 @@ impl ChipReport {
         }
         let t_s = cycles as f64 / first.f_core_hz;
         let power_mw = if cycles > 0 { total_pj / 1.0e9 / t_s } else { 0.0 };
-        ChipReport {
+        Ok(ChipReport {
             workload: first.workload.clone(),
+            domains: first.domains,
             f_core_hz: first.f_core_hz,
             supply_v: first.supply_v,
             cycles,
             sops,
             spikes_routed,
             samples,
-            accuracy: (any_accuracy && samples > 0)
-                .then(|| correct_weight / samples as f64),
+            labelled,
+            accuracy: (any_accuracy && labelled > 0)
+                .then(|| correct_weight / labelled as f64),
             pj_per_sop: if sops > 0 { total_pj / sops as f64 } else { f64::NAN },
             core_pj_per_sop: if sops > 0 { core_pj / sops as f64 } else { f64::NAN },
             power_mw,
@@ -162,7 +200,7 @@ impl ChipReport {
                 by_class,
                 by_static,
             },
-        }
+        })
     }
 
     /// Render several reports as a Table-I-style comparison table.
@@ -231,7 +269,7 @@ mod tests {
         let a = AreaModel::paper_chip();
         let mut l = EnergyLedger::new();
         l.add(EventClass::Sop, 1_000_000);
-        let r = ChipReport::from_ledger("t", &l, &p, &a, 100e6, 1_000_000, 10, Some(0.9), 123);
+        let r = ChipReport::from_ledger("t", &l, &p, &a, 100e6, 1_000_000, 10, 10, Some(0.9), 123);
         assert_eq!(r.sops, 1_000_000);
         assert!(r.pj_per_sop > 0.0);
         assert!(r.power_mw > 0.0);
@@ -248,9 +286,9 @@ mod tests {
         let mut l2 = EnergyLedger::new();
         l2.add(EventClass::Sop, 300);
         l2.add(EventClass::HopP2p, 7);
-        let r1 = ChipReport::from_ledger("w", &l1, &p, &a, 100e6, 1000, 1, Some(1.0), 5);
-        let r2 = ChipReport::from_ledger("w", &l2, &p, &a, 100e6, 3000, 3, Some(0.0), 7);
-        let m = ChipReport::merged(&[r1.clone(), r2.clone()], &a);
+        let r1 = ChipReport::from_ledger("w", &l1, &p, &a, 100e6, 1000, 1, 1, Some(1.0), 5);
+        let r2 = ChipReport::from_ledger("w", &l2, &p, &a, 100e6, 3000, 3, 3, Some(0.0), 7);
+        let m = ChipReport::merged(&[r1.clone(), r2.clone()], &a).unwrap();
         assert_eq!(m.cycles, 4000);
         assert_eq!(m.sops, 400);
         assert_eq!(m.samples, 4);
@@ -260,9 +298,66 @@ mod tests {
         let expect = (r1.total_pj() + r2.total_pj()) / 400.0;
         assert!((m.pj_per_sop - expect).abs() < 1e-12);
         // Determinism: merging the same inputs yields bit-identical floats.
-        let m2 = ChipReport::merged(&[r1, r2], &a);
+        let m2 = ChipReport::merged(&[r1, r2], &a).unwrap();
         assert_eq!(m.pj_per_sop.to_bits(), m2.pj_per_sop.to_bits());
         assert_eq!(m.power_mw.to_bits(), m2.power_mw.to_bits());
+    }
+
+    #[test]
+    fn merged_accuracy_weights_by_labelled_samples() {
+        let p = EnergyParams::nominal();
+        let a = AreaModel::paper_chip();
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 10);
+        // 4 unlabelled serving samples (accuracy N.A.) + 2 labelled, all
+        // correct: merged accuracy must be 1.0, not 2/6.
+        let unlabelled = ChipReport::from_ledger("w", &l, &p, &a, 100e6, 400, 4, 0, None, 0);
+        let labelled = ChipReport::from_ledger("w", &l, &p, &a, 100e6, 200, 2, 2, Some(1.0), 0);
+        let m = ChipReport::merged(&[unlabelled, labelled], &a).unwrap();
+        assert_eq!(m.samples, 6);
+        assert_eq!(m.labelled, 2);
+        assert_eq!(m.accuracy, Some(1.0));
+    }
+
+    #[test]
+    fn merged_rejects_zero_reports() {
+        assert!(ChipReport::merged(&[], &AreaModel::paper_chip()).is_err());
+    }
+
+    #[test]
+    fn merged_single_report_preserves_counters() {
+        let p = EnergyParams::nominal();
+        let a = AreaModel::paper_chip();
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 250);
+        let r = ChipReport::from_ledger("one", &l, &p, &a, 100e6, 5000, 2, 2, Some(0.5), 9);
+        let m = ChipReport::merged(std::slice::from_ref(&r), &a).unwrap();
+        assert_eq!(m.cycles, r.cycles);
+        assert_eq!(m.sops, r.sops);
+        assert_eq!(m.samples, r.samples);
+        assert_eq!(m.spikes_routed, r.spikes_routed);
+        assert_eq!(m.domains, 1);
+        assert!((m.pj_per_sop - r.pj_per_sop).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_rejects_mismatched_domains() {
+        let p = EnergyParams::nominal();
+        let a1 = AreaModel::paper_chip();
+        let a4 = AreaModel::multi_chip(4);
+        let mut l = EnergyLedger::new();
+        l.add(EventClass::Sop, 10);
+        let r1 = ChipReport::from_ledger("w", &l, &p, &a1, 100e6, 100, 1, 0, None, 0);
+        let r4 = ChipReport::from_ledger("w", &l, &p, &a4, 100e6, 100, 1, 0, None, 0);
+        assert_eq!(r4.domains, 4);
+        // Reports from differently-sized chips must not silently merge …
+        assert!(ChipReport::merged(&[r1.clone(), r4.clone()], &a1).is_err());
+        // … and the merge area model must match the reports it merges.
+        assert!(ChipReport::merged(std::slice::from_ref(&r4), &a1).is_err());
+        assert!(ChipReport::merged(std::slice::from_ref(&r4), &a4).is_ok());
+        // Mixed operating points are likewise rejected.
+        let r_fast = ChipReport::from_ledger("w", &l, &p, &a1, 200e6, 100, 1, 0, None, 0);
+        assert!(ChipReport::merged(&[r1, r_fast], &a1).is_err());
     }
 
     #[test]
@@ -271,7 +366,7 @@ mod tests {
         let a = AreaModel::paper_chip();
         let mut l = EnergyLedger::new();
         l.add(EventClass::Sop, 100);
-        let r = ChipReport::from_ledger("w", &l, &p, &a, 100e6, 100, 0, None, 0);
+        let r = ChipReport::from_ledger("w", &l, &p, &a, 100e6, 100, 0, 0, None, 0);
         let t = ChipReport::table(&[r]);
         let s = t.render();
         assert!(s.contains("pJ/SOP"));

@@ -29,8 +29,13 @@
 //!   DVS-Gesture-like, and rate-coded CIFAR-like geometry/statistics.
 //! - [`energy`] — the calibrated 55 nm event-energy/area model that turns
 //!   simulation event counts into pJ/SOP, mW and mm² figures.
-//! - [`coordinator`] — timestep orchestration across cores, NoC and CPU
-//!   (the chip's system-level behaviour).
+//! - [`serve`] — the streaming session/serving API: [`serve::SocBuilder`]
+//!   (fluent, validated configuration), the pluggable [`serve::Workload`]
+//!   sample sources, streaming [`serve::Session`]s with incremental
+//!   reports, and the multi-session [`serve::SocPool`] with deterministic
+//!   merged reporting.
+//! - [`coordinator`] — the batch experiment layer (dataset runs +
+//!   reference/XLA cross-checking), rebuilt on top of [`serve`].
 //! - [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX golden model
 //!   (`artifacts/*.hlo.txt`) used to validate the hardware simulation.
 //!
@@ -50,6 +55,7 @@ pub mod nn;
 pub mod noc;
 pub mod riscv;
 pub mod runtime;
+pub mod serve;
 pub mod soc;
 
 pub use error::{Error, Result};

@@ -5,19 +5,25 @@
 //! - `run`       — run a workload on the simulated chip and print the
 //!                 Table-I-style report (`--workload`, `--samples`,
 //!                 `--config <json>`, `--check none|reference|xla|both`).
+//! - `serve`     — stream N concurrent sessions through a `SocPool`
+//!                 (`--sessions`, `--workload <spec>`, `--workers`) and
+//!                 print per-session latency stats + the merged report.
 //! - `topo`      — print the Fig. 5a/5b topology comparison table.
 //! - `bench`     — quick in-CLI reproductions: `core-sparsity` (Fig. 3),
 //!                 `router` (Fig. 5c), `riscv-power` (Fig. 6).
 //! - `inspect`   — show how a weights artifact maps onto the chip.
 //! - `gen-data`  — emit a synthetic dataset JSON (debugging aid).
+//!
+//! All chip configuration funnels through `serve::SocBuilder`, so CLI
+//! flags, JSON configs and fluent construction share one validator.
 
 use fullerene_soc::config::{parse_check, parse_workload, RunConfig};
-use fullerene_soc::coordinator::ExperimentRunner;
 use fullerene_soc::datasets::Workload;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::metrics::Table;
 use fullerene_soc::nn::load_weights_json;
 use fullerene_soc::noc::{TopoStats, Topology};
+use fullerene_soc::serve::{workload_from_spec, SessionSpec, SocBuilder, Workload as _};
 use fullerene_soc::util::cli::Args;
 use fullerene_soc::{Error, Result};
 use std::path::{Path, PathBuf};
@@ -37,6 +43,7 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
         Some("topo") => cmd_topo(),
         Some("bench") => cmd_bench(args),
         Some("inspect") => cmd_inspect(args),
@@ -55,12 +62,17 @@ fn print_help() {
     println!(
         "fullerene-soc — neuromorphic SoC simulator (CS.AR 2024 reproduction)\n\
          \n\
-         USAGE: fullerene-soc <run|topo|bench|inspect|gen-data> [flags]\n\
+         USAGE: fullerene-soc <run|serve|topo|bench|inspect|gen-data> [flags]\n\
          \n\
          run       --workload nmnist|dvsgesture|cifar10  --samples N  --seed S\n\
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
                    --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
                    --domains D (multi-domain chip: D fullerene domains + L2 ring)\n\
+         serve     --sessions N  --workers K  --samples S  --seed S  --check none|reference\n\
+                   --workload <spec>  (spec: nmnist | dvsgesture | cifar10 |\n\
+                   replay:<dataset.json> | traffic:<inputs>x<classes>x<timesteps>@<rate>;\n\
+                   replay shares one parsed file across sessions, --samples caps its\n\
+                   length and --seed is ignored for recorded streams)\n\
          topo      (prints the Fig. 5 topology comparison)\n\
          bench     core-sparsity | router | riscv-power  (quick figure repros)\n\
          inspect   --weights <file>   (mapping summary)\n\
@@ -68,48 +80,55 @@ fn print_help() {
     );
 }
 
-/// Fallback network used when no trained artifact is available: fixed
-/// pseudo-random codebook indexes (structure exercises every code path;
-/// accuracy is chance — the trained artifact is what Table I uses).
-fn fallback_net(w: Workload, hidden: usize) -> fullerene_soc::nn::NetworkDesc {
-    use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
-    use fullerene_soc::core::Codebook;
-    use fullerene_soc::nn::network::LayerDesc;
-    let cb = Codebook::default_log16();
-    let params = NeuronParams {
-        threshold: 80,
-        leak: LeakMode::Linear(1),
-        reset: ResetMode::Subtract,
-        mp_bits: 16,
-    };
-    let (inputs, classes) = (w.inputs(), w.classes());
-    fullerene_soc::nn::NetworkDesc {
-        name: format!("{}-fallback", w.name()),
-        layers: vec![
-            LayerDesc {
-                name: "h".into(),
-                inputs,
-                neurons: hidden,
-                codebook: cb.clone(),
-                widx: (0..inputs * hidden)
-                    .map(|i| ((i.wrapping_mul(2654435761)) % 16) as u8)
-                    .collect(),
-                neuron_params: params.clone(),
-            },
-            LayerDesc {
-                name: "o".into(),
-                inputs: hidden,
-                neurons: classes,
-                codebook: cb,
-                widx: (0..hidden * classes)
-                    .map(|i| ((i.wrapping_mul(40503)) % 16) as u8)
-                    .collect(),
-                neuron_params: params,
-            },
-        ],
-        timesteps: w.timesteps(),
+/// Fallback network at explicit geometry (the shared structural recipe:
+/// fixed pseudo-random codebook indexes — structure exercises every code
+/// path; accuracy is chance, trained artifacts are what Table I uses).
+fn fallback_net_dims(
+    name: &str,
+    inputs: usize,
+    hidden: usize,
+    classes: usize,
+    timesteps: usize,
+) -> fullerene_soc::nn::NetworkDesc {
+    fullerene_soc::benches_support::structural_net(
+        &format!("{name}-fallback"),
+        inputs,
+        hidden,
         classes,
+        timesteps,
+    )
+}
+
+/// Fallback network for a synthetic-dataset workload descriptor.
+fn fallback_net(w: Workload, hidden: usize) -> fullerene_soc::nn::NetworkDesc {
+    fallback_net_dims(w.name(), w.inputs(), hidden, w.classes(), w.timesteps())
+}
+
+/// Apply `run`/`serve`-shared chip flags onto a [`RunConfig`].
+fn apply_chip_flags(cfg: &mut RunConfig, args: &Args) -> Result<()> {
+    if args.flag("no-noc") {
+        cfg.soc.use_noc = false;
     }
+    if args.flag("no-cpu") {
+        cfg.soc.drive_cpu = false;
+    }
+    if let Some(f) = args.get("f-core-mhz") {
+        cfg.soc.f_core_hz = f
+            .parse::<f64>()
+            .map_err(|_| Error::config("bad --f-core-mhz"))?
+            * 1e6;
+    }
+    if let Some(v) = args.get("supply") {
+        cfg.soc.supply_v = v.parse().map_err(|_| Error::config("bad --supply"))?;
+    }
+    if let Some(m) = args.get("max-neurons-per-core") {
+        cfg.soc.max_neurons_per_core =
+            m.parse().map_err(|_| Error::config("bad flag"))?;
+    }
+    if let Some(d) = args.get("domains") {
+        cfg.soc.domains = d.parse().map_err(|_| Error::config("bad --domains"))?;
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -141,28 +160,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(c) = args.get("check") {
         cfg.check = parse_check(c)?;
     }
-    if args.flag("no-noc") {
-        cfg.soc.use_noc = false;
-    }
-    if args.flag("no-cpu") {
-        cfg.soc.drive_cpu = false;
-    }
-    if let Some(f) = args.get("f-core-mhz") {
-        cfg.soc.f_core_hz = f
-            .parse::<f64>()
-            .map_err(|_| Error::config("bad --f-core-mhz"))?
-            * 1e6;
-    }
-    if let Some(v) = args.get("supply") {
-        cfg.soc.supply_v = v.parse().map_err(|_| Error::config("bad --supply"))?;
-    }
-    if let Some(m) = args.get("max-neurons-per-core") {
-        cfg.soc.max_neurons_per_core =
-            m.parse().map_err(|_| Error::config("bad flag"))?;
-    }
-    if let Some(d) = args.get("domains") {
-        cfg.soc.domains = d.parse().map_err(|_| Error::config("bad --domains"))?;
-    }
+    apply_chip_flags(&mut cfg, args)?;
+    // Full-config validation (chip ranges via the builder choke point +
+    // workload sanity) before any artifact loading.
     cfg.validate()?;
 
     let w = cfg.workload.workload;
@@ -195,7 +195,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         w.generate(cfg.workload.samples, cfg.workload.seed)
     };
 
-    let runner = ExperimentRunner::new(net, cfg.experiment())?;
+    // The builder is the validation choke point: CLI-flag-assembled
+    // configs get the same range checks as JSON-loaded ones.
+    let runner = SocBuilder::from_run_config(&cfg).build_runner(net)?;
     let out = runner.run(&ds)?;
     if out.checked > 0 {
         println!(
@@ -206,6 +208,128 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!(
         "{}",
         ChipReport::table(std::slice::from_ref(&out.report)).render()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "sessions",
+        "workers",
+        "workload",
+        "samples",
+        "seed",
+        "check",
+        "hidden",
+        "no-noc",
+        "no-cpu",
+        "f-core-mhz",
+        "supply",
+        "max-neurons-per-core",
+        "domains",
+    ])
+    .map_err(Error::Config)?;
+    let sessions: usize = args.get_parse_or("sessions", 4);
+    let workers: usize = args.get_parse_or("workers", 4);
+    let samples: usize = args.get_parse_or("samples", 8);
+    let seed: u64 = args.get_parse_or("seed", 7);
+    let spec = args.get_or("workload", "nmnist");
+    let check = match args.get("check") {
+        Some(c) => parse_check(c)?,
+        None => fullerene_soc::coordinator::GoldenCheck::None,
+    };
+    if sessions == 0 {
+        return Err(Error::config("--sessions must be >= 1"));
+    }
+    if samples == 0 {
+        // Mirror the batch path's "samples must be > 0": zero-sample
+        // sessions would merge into an all-NaN report.
+        return Err(Error::config("--samples must be >= 1"));
+    }
+
+    let mut cfg = RunConfig::default();
+    apply_chip_flags(&mut cfg, args)?;
+    let hidden: usize = args.get_parse_or("hidden", 64);
+
+    // Build the structural network and the session specs. Replay specs
+    // are special-cased: the dataset file is parsed ONCE and shared
+    // across sessions via Arc shards (`--samples` caps each session's
+    // replay length; `--seed` has no effect on a recorded stream).
+    let (net, specs) = if let Some(path) = spec.strip_prefix("replay:") {
+        let ds = fullerene_soc::datasets::Dataset::load_json(Path::new(path))?;
+        let (name, inputs, timesteps, classes) =
+            (ds.name.clone(), ds.inputs, ds.timesteps, ds.classes);
+        let take = ds.samples.len().min(samples);
+        let shared = std::sync::Arc::new(ds.samples);
+        let net = fallback_net_dims(&name, inputs, hidden, classes, timesteps);
+        let specs: Vec<SessionSpec> = (0..sessions)
+            .map(|i| {
+                SessionSpec::new(
+                    &format!("sess{i}"),
+                    Box::new(fullerene_soc::serve::EventReplay::shard(
+                        &name,
+                        inputs,
+                        timesteps,
+                        classes,
+                        shared.clone(),
+                        0,
+                        take,
+                    )),
+                )
+            })
+            .collect();
+        (net, specs)
+    } else {
+        // Probe the spec for its geometry only (0 samples: the
+        // synthetic/traffic generators produce nothing for the probe).
+        let probe = workload_from_spec(&spec, 0, seed)?;
+        let net = fallback_net_dims(
+            probe.name(),
+            probe.inputs(),
+            hidden,
+            probe.classes(),
+            probe.timesteps(),
+        );
+        let specs = (0..sessions)
+            .map(|i| -> Result<SessionSpec> {
+                Ok(SessionSpec::new(
+                    &format!("sess{i}"),
+                    workload_from_spec(&spec, samples, seed + i as u64)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        (net, specs)
+    };
+
+    let pool = SocBuilder::from_soc_config(cfg.soc.clone())
+        .check(check)
+        .workers(workers)
+        .build_pool(&net)?;
+    let out = pool.serve(specs)?;
+
+    let mut t = Table::new(&["session", "samples", "cycles", "p50 ms", "p99 ms", "SOPs"]);
+    for s in &out.sessions {
+        t.push_row(vec![
+            s.name.clone(),
+            s.stats.samples.to_string(),
+            s.stats.cycles.to_string(),
+            format!("{:.3}", s.stats.p50_latency_ms),
+            format!("{:.3}", s.stats.p99_latency_ms),
+            s.stats.sops.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if out.checked > 0 {
+        println!(
+            "golden check: {} samples checked, {} mismatches",
+            out.checked, out.mismatches
+        );
+    }
+    println!(
+        "merged report ({} sessions, {} workers):\n{}",
+        out.sessions.len(),
+        pool.workers(),
+        ChipReport::table(std::slice::from_ref(&out.merged)).render()
     );
     Ok(())
 }

@@ -301,16 +301,19 @@ impl NocSim {
         }
     }
 
-    /// Account router static power over the simulated window and return
-    /// the accumulated ledger (dynamic events + static). Level-2 routers
-    /// carry their own (larger) static power class.
-    pub fn finish_ledger(&mut self) -> EnergyLedger {
+    /// Non-destructive ledger assembly: a copy of the accumulated dynamic
+    /// ledger plus router static power over the simulated window so far.
+    /// Level-2 routers carry their own (larger) static power class. The
+    /// simulator state is untouched, so this can back an incremental
+    /// report snapshot mid-run.
+    pub fn snapshot_ledger(&self) -> EnergyLedger {
+        let mut ledger = self.ledger.clone();
         for s in &self.switches {
             match self.topo.kind(s.node) {
                 NodeKind::Core(_) => {}
                 NodeKind::RouterL1(_) => {
                     let active = s.active_cycles.min(self.cycle);
-                    self.ledger.add_static(
+                    ledger.add_static(
                         &format!("router{}", s.node),
                         active,
                         self.cycle - active,
@@ -320,7 +323,7 @@ impl NocSim {
                 }
                 NodeKind::RouterL2(_) => {
                     let active = s.active_cycles.min(self.cycle);
-                    self.ledger.add_static(
+                    ledger.add_static(
                         &format!("router-l2-{}", s.node),
                         active,
                         self.cycle - active,
@@ -330,7 +333,30 @@ impl NocSim {
                 }
             }
         }
-        std::mem::take(&mut self.ledger)
+        ledger
+    }
+
+    /// Account router static power over the simulated window and return
+    /// the accumulated ledger (dynamic events + static), draining the
+    /// internal dynamic ledger.
+    pub fn finish_ledger(&mut self) -> EnergyLedger {
+        let ledger = self.snapshot_ledger();
+        self.ledger = EnergyLedger::new();
+        ledger
+    }
+
+    /// Reset energy/latency accounting (dynamic ledger, per-switch
+    /// activity counters, delivery log and the cycle counter) so a new
+    /// measurement window starts from zero. Only valid while the fabric
+    /// is drained (no flits in flight).
+    pub fn reset_accounting(&mut self) {
+        debug_assert_eq!(self.in_flight, 0, "reset_accounting on a busy fabric");
+        self.ledger = EnergyLedger::new();
+        self.delivered.clear();
+        self.cycle = 0;
+        for s in &mut self.switches {
+            s.active_cycles = 0;
+        }
     }
 
     /// Dynamic-only energy (pJ) of NoC activity so far.

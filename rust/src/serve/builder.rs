@@ -1,0 +1,285 @@
+//! Fluent chip/serving configuration with one validation choke point.
+//!
+//! [`SocBuilder`] unifies what used to be scattered across `SocConfig`
+//! (chip geometry), `ExperimentConfig` (golden checks, limits) and
+//! `RunConfig` (CLI/JSON configs): every field is set fluently and
+//! **every build path validates** — JSON-loaded, CLI-flag-built and
+//! hand-assembled configs all funnel through [`SocBuilder::validate`],
+//! so no construction route can skip range checking anymore.
+
+use super::pool::SocPool;
+use super::session::Session;
+use crate::config::RunConfig;
+use crate::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
+use crate::nn::NetworkDesc;
+use crate::runtime::GoldenModel;
+use crate::soc::{Soc, SocConfig};
+use crate::{Error, Result};
+use std::path::PathBuf;
+
+/// Fluent builder for chips, sessions, pools and experiment runners.
+#[derive(Debug, Clone)]
+pub struct SocBuilder {
+    soc: SocConfig,
+    check: GoldenCheck,
+    artifacts: PathBuf,
+    limit: usize,
+    workers: usize,
+}
+
+impl Default for SocBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SocBuilder {
+    /// Builder at the paper's nominal operating point (20 cores, one
+    /// fullerene domain, 100 MHz / 1.08 V, cycle-accurate NoC, firmware
+    /// CPU), reference checking, host-parallel workers.
+    pub fn new() -> Self {
+        SocBuilder {
+            soc: SocConfig::default(),
+            check: GoldenCheck::Reference,
+            artifacts: GoldenModel::artifacts_dir(),
+            limit: usize::MAX,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    /// Start from an existing chip config (e.g. CLI-flag assembled).
+    pub fn from_soc_config(soc: SocConfig) -> Self {
+        SocBuilder {
+            soc,
+            ..Self::new()
+        }
+    }
+
+    /// Adopt a full [`RunConfig`] (JSON/CLI layer): chip, check mode,
+    /// artifacts directory and sample limit.
+    pub fn from_run_config(cfg: &RunConfig) -> Self {
+        Self::from_soc_config(cfg.soc.clone())
+            .check(cfg.check)
+            .artifacts(cfg.artifacts.clone())
+            .limit(cfg.workload.samples)
+    }
+
+    /// The chip config assembled so far (unvalidated).
+    pub fn soc_config(&self) -> &SocConfig {
+        &self.soc
+    }
+
+    /// Fullerene routing domains (1 = the paper's chip).
+    pub fn domains(mut self, domains: usize) -> Self {
+        self.soc.domains = domains;
+        self
+    }
+
+    /// Physical neuromorphic cores.
+    pub fn n_cores(mut self, n: usize) -> Self {
+        self.soc.n_cores = n;
+        self
+    }
+
+    /// Max neurons per core.
+    pub fn max_neurons_per_core(mut self, n: usize) -> Self {
+        self.soc.max_neurons_per_core = n;
+        self
+    }
+
+    /// NoC FIFO depth per port.
+    pub fn fifo_depth(mut self, depth: usize) -> Self {
+        self.soc.fifo_depth = depth;
+        self
+    }
+
+    /// Neuromorphic-processor clock (Hz).
+    pub fn f_core_hz(mut self, hz: f64) -> Self {
+        self.soc.f_core_hz = hz;
+        self
+    }
+
+    /// Neuromorphic-processor clock (MHz convenience).
+    pub fn f_core_mhz(self, mhz: f64) -> Self {
+        self.f_core_hz(mhz * 1.0e6)
+    }
+
+    /// RISC-V clock (Hz).
+    pub fn f_cpu_hz(mut self, hz: f64) -> Self {
+        self.soc.f_cpu_hz = hz;
+        self
+    }
+
+    /// Supply voltage (V).
+    pub fn supply_v(mut self, v: f64) -> Self {
+        self.soc.supply_v = v;
+        self
+    }
+
+    /// Cycle-accurate NoC (true) vs ideal fabric (false).
+    pub fn use_noc(mut self, on: bool) -> Self {
+        self.soc.use_noc = on;
+        self
+    }
+
+    /// Run the RISC-V firmware protocol (false = drive cores directly).
+    pub fn drive_cpu(mut self, on: bool) -> Self {
+        self.soc.drive_cpu = on;
+        self
+    }
+
+    /// Golden-check mode for runners/pools built from this builder.
+    pub fn check(mut self, check: GoldenCheck) -> Self {
+        self.check = check;
+        self
+    }
+
+    /// Artifacts directory (XLA golden model, trained weights).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Max samples per batch run.
+    pub fn limit(mut self, limit: usize) -> Self {
+        self.limit = limit;
+        self
+    }
+
+    /// Worker threads for pools built from this builder.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// **The** validation choke point: every range check the chip model
+    /// imposes, applied no matter how the config was assembled (JSON
+    /// file, CLI flags, fluent calls).
+    pub fn validate(&self) -> Result<()> {
+        let s = &self.soc;
+        if !(1..=64).contains(&s.domains) {
+            return Err(Error::Config(format!(
+                "domains {} outside 1..=64",
+                s.domains
+            )));
+        }
+        let max_cores = 20 * s.domains;
+        if s.n_cores == 0 || s.n_cores > max_cores {
+            return Err(Error::Config(format!(
+                "n_cores {} outside 1..={max_cores} ({} fullerene domain(s))",
+                s.n_cores, s.domains
+            )));
+        }
+        if s.max_neurons_per_core == 0
+            || s.max_neurons_per_core > crate::core::MAX_NEURONS_PER_CORE
+        {
+            return Err(Error::Config(format!(
+                "max_neurons_per_core {} outside 1..={}",
+                s.max_neurons_per_core,
+                crate::core::MAX_NEURONS_PER_CORE
+            )));
+        }
+        if s.fifo_depth == 0 || s.fifo_depth > 64 {
+            return Err(Error::Config("fifo_depth outside 1..=64".into()));
+        }
+        if !(50.0e6..=200.0e6).contains(&s.f_core_hz) {
+            return Err(Error::Config(format!(
+                "core clock {} Hz outside the 50–200 MHz envelope",
+                s.f_core_hz
+            )));
+        }
+        if !(16.0e6..=100.0e6).contains(&s.f_cpu_hz) {
+            return Err(Error::Config(format!(
+                "cpu clock {} Hz outside the 16–100 MHz envelope",
+                s.f_cpu_hz
+            )));
+        }
+        if !(0.9..=1.4).contains(&s.supply_v) {
+            return Err(Error::Config(format!(
+                "supply {} V outside the 0.9–1.4 V model range",
+                s.supply_v
+            )));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Validate and return the chip config.
+    pub fn build_config(&self) -> Result<SocConfig> {
+        self.validate()?;
+        Ok(self.soc.clone())
+    }
+
+    /// Validate and assemble a chip running `net`.
+    pub fn build_soc(&self, net: &NetworkDesc) -> Result<Soc> {
+        self.validate()?;
+        Soc::new(net.clone(), self.soc.clone())
+    }
+
+    /// Validate, assemble a chip and open a streaming [`Session`] on it.
+    pub fn open_session(&self, net: &NetworkDesc, name: &str) -> Result<Session> {
+        Ok(Session::open(self.build_soc(net)?, name))
+    }
+
+    /// Validate and build a serving pool over `net` with this builder's
+    /// worker count and check mode.
+    pub fn build_pool(&self, net: &NetworkDesc) -> Result<SocPool> {
+        self.validate()?;
+        SocPool::new(net.clone(), self.soc.clone(), self.workers, self.check)
+    }
+
+    /// Validate and build a batch [`ExperimentRunner`] over `net`.
+    pub fn build_runner(&self, net: NetworkDesc) -> Result<ExperimentRunner> {
+        self.validate()?;
+        ExperimentRunner::new(
+            net,
+            ExperimentConfig {
+                soc: self.soc.clone(),
+                limit: self.limit,
+                check: self.check,
+                artifacts: self.artifacts.clone(),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fluent_setters_reach_the_config() {
+        let b = SocBuilder::new()
+            .domains(2)
+            .n_cores(40)
+            .f_core_mhz(200.0)
+            .supply_v(1.32)
+            .use_noc(false)
+            .drive_cpu(false)
+            .workers(3);
+        let cfg = b.build_config().unwrap();
+        assert_eq!(cfg.domains, 2);
+        assert_eq!(cfg.n_cores, 40);
+        assert!((cfg.f_core_hz - 200.0e6).abs() < 1.0);
+        assert!(!cfg.use_noc && !cfg.drive_cpu);
+    }
+
+    #[test]
+    fn every_range_check_fires() {
+        assert!(SocBuilder::new().domains(0).validate().is_err());
+        assert!(SocBuilder::new().domains(65).validate().is_err());
+        assert!(SocBuilder::new().n_cores(21).validate().is_err());
+        assert!(SocBuilder::new().domains(4).n_cores(80).validate().is_ok());
+        assert!(SocBuilder::new().max_neurons_per_core(0).validate().is_err());
+        assert!(SocBuilder::new().fifo_depth(0).validate().is_err());
+        assert!(SocBuilder::new().f_core_mhz(300.0).validate().is_err());
+        assert!(SocBuilder::new().f_cpu_hz(5.0e6).validate().is_err());
+        assert!(SocBuilder::new().supply_v(2.0).validate().is_err());
+        assert!(SocBuilder::new().workers(0).validate().is_err());
+        assert!(SocBuilder::new().validate().is_ok());
+    }
+}

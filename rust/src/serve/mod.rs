@@ -1,0 +1,34 @@
+//! Streaming session/serving API — the crate's top-level surface.
+//!
+//! The paper's chip is an always-on edge device consuming event streams
+//! continuously; this layer makes the simulator serve the same way
+//! instead of only running pre-materialized batches:
+//!
+//! - [`SocBuilder`] — fluent construction + **the** single validation
+//!   choke point for chip/run configuration (JSON, CLI flags and fluent
+//!   calls all funnel through it);
+//! - [`Workload`] — pluggable sample sources ([`SyntheticStream`],
+//!   [`EventReplay`], [`TrafficWorkload`], or anything downstream
+//!   implements), parsed from spec strings by [`workload_from_spec`];
+//! - [`Session`] — a streaming inference session with per-push results,
+//!   incremental [`Session::snapshot`] reports, per-session
+//!   energy/latency ledgers and a consuming [`Session::close`] (the
+//!   typestate makes "forgot `finish_report`" unrepresentable);
+//! - [`SocPool`] — N worker threads serving many independent sessions
+//!   concurrently, one fresh chip per session, with deterministic
+//!   merged reporting (bit-identical to sequential execution).
+//!
+//! The batch layer ([`crate::coordinator::ExperimentRunner`]) is rebuilt
+//! on top of these primitives.
+
+pub mod builder;
+pub mod pool;
+pub mod session;
+pub mod workload;
+
+pub use builder::SocBuilder;
+pub use pool::{ServeOutcome, SessionOutcome, SessionSpec, SocPool};
+pub use session::{Session, SessionReport, SessionStats};
+pub use workload::{
+    workload_from_spec, EventReplay, SyntheticStream, TrafficWorkload, Workload,
+};

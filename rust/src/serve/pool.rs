@@ -1,0 +1,234 @@
+//! Multi-session serving pool: N worker threads, one simulated chip per
+//! in-flight session, deterministic merged reporting.
+//!
+//! [`SocPool::serve`] generalizes the old "shard one dataset" parallel
+//! runner to "serve many independent sessions": each [`SessionSpec`]
+//! (name + boxed [`Workload`]) is assigned round-robin to a worker
+//! thread, runs on its **own fresh [`Soc`]** (so per-session energy and
+//! latency ledgers never bleed into each other), and the per-session
+//! [`ChipReport`]s merge in submission order through
+//! [`ChipReport::merged`]. Because every session is independent and the
+//! merge order is fixed, the aggregate is **bit-identical** to
+//! [`SocPool::serve_sequential`] over the same specs, regardless of
+//! thread scheduling.
+
+use super::session::{Session, SessionStats};
+use super::workload::Workload;
+use crate::coordinator::GoldenCheck;
+use crate::energy::{AreaModel, ChipReport};
+use crate::nn::NetworkDesc;
+use crate::soc::{Soc, SocConfig};
+use crate::{Error, Result};
+
+/// One queued session: a label plus the sample stream to serve.
+pub struct SessionSpec {
+    /// Session name (becomes the report's workload label).
+    pub name: String,
+    /// The sample source; drained to exhaustion by the pool.
+    pub workload: Box<dyn Workload>,
+}
+
+impl SessionSpec {
+    /// A named session over a boxed workload.
+    pub fn new(name: &str, workload: Box<dyn Workload>) -> Self {
+        SessionSpec {
+            name: name.to_string(),
+            workload,
+        }
+    }
+}
+
+/// Per-session serving result.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    /// Session name.
+    pub name: String,
+    /// Chip report for exactly this session's window.
+    pub report: ChipReport,
+    /// Latency/throughput statistics.
+    pub stats: SessionStats,
+    /// Samples that disagreed with the integer reference (0 unless
+    /// reference checking is enabled).
+    pub mismatches: u64,
+    /// Samples checked against the reference.
+    pub checked: u64,
+}
+
+/// Aggregate of one [`SocPool::serve`] call.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Per-session outcomes in submission order.
+    pub sessions: Vec<SessionOutcome>,
+    /// Deterministic merge of every session report (submission order).
+    pub merged: ChipReport,
+    /// Total reference mismatches across sessions.
+    pub mismatches: u64,
+    /// Total reference checks across sessions.
+    pub checked: u64,
+}
+
+/// A pool of simulated chips serving concurrent sessions.
+pub struct SocPool {
+    net: NetworkDesc,
+    config: SocConfig,
+    workers: usize,
+    check: GoldenCheck,
+}
+
+impl SocPool {
+    /// A pool over `net` at `config`, dispatching across `workers`
+    /// threads. `check` may be [`GoldenCheck::None`] or
+    /// [`GoldenCheck::Reference`]; the XLA golden model holds per-process
+    /// runtime state and cannot back concurrent sessions.
+    pub fn new(
+        net: NetworkDesc,
+        config: SocConfig,
+        workers: usize,
+        check: GoldenCheck,
+    ) -> Result<SocPool> {
+        if matches!(check, GoldenCheck::Xla | GoldenCheck::Both) {
+            return Err(Error::Config(
+                "SocPool supports check none|reference (XLA golden state is \
+                 per-process); use ExperimentRunner::run for XLA checks"
+                    .into(),
+            ));
+        }
+        if workers == 0 {
+            return Err(Error::Config("SocPool needs at least one worker".into()));
+        }
+        net.validate()?;
+        Ok(SocPool {
+            net,
+            config,
+            workers,
+            check,
+        })
+    }
+
+    /// Worker-thread count the pool dispatches across.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The network every session is served with.
+    pub fn network(&self) -> &NetworkDesc {
+        &self.net
+    }
+
+    /// Serve one session to exhaustion on a fresh chip. This is the
+    /// single code path both the sequential and the parallel dispatcher
+    /// execute, which is what makes them bit-identical.
+    fn run_session(&self, name: &str, workload: &mut dyn Workload) -> Result<SessionOutcome> {
+        if workload.inputs() != self.net.input_size() {
+            return Err(Error::Config(format!(
+                "session '{name}': workload has {} inputs, network expects {}",
+                workload.inputs(),
+                self.net.input_size()
+            )));
+        }
+        let soc = Soc::new(self.net.clone(), self.config.clone())?;
+        let mut session = Session::open(soc, name);
+        let use_ref = matches!(self.check, GoldenCheck::Reference);
+        let mut mismatches = 0u64;
+        let mut checked = 0u64;
+        while let Some(sample) = workload.next_sample() {
+            let r = session.push(&sample)?;
+            if use_ref {
+                let raster = sample.to_raster(self.net.timesteps, self.net.input_size());
+                let expect = self.net.reference_run(&raster);
+                checked += 1;
+                if expect != r.counts {
+                    mismatches += 1;
+                }
+            }
+        }
+        let closed = session.close();
+        Ok(SessionOutcome {
+            name: name.to_string(),
+            report: closed.report,
+            stats: closed.stats,
+            mismatches,
+            checked,
+        })
+    }
+
+    /// Serve every spec concurrently: sessions are assigned round-robin
+    /// to worker threads and results are returned in submission order.
+    pub fn serve(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
+        self.dispatch(specs, true)
+    }
+
+    /// Serve every spec one after another on the calling thread — the
+    /// reference path for the bit-identity guarantee.
+    pub fn serve_sequential(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
+        self.dispatch(specs, false)
+    }
+
+    fn dispatch(&self, specs: Vec<SessionSpec>, parallel: bool) -> Result<ServeOutcome> {
+        if specs.is_empty() {
+            return Err(Error::Config("no sessions to serve".into()));
+        }
+        let n = specs.len();
+        let workers = self.workers.min(n);
+        let mut slots: Vec<Option<SessionOutcome>> = (0..n).map(|_| None).collect();
+        if parallel && workers > 1 {
+            // Round-robin buckets keep each worker's load balanced while
+            // the (index, outcome) pairing keeps the result order fixed.
+            let mut buckets: Vec<Vec<(usize, SessionSpec)>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (i, spec) in specs.into_iter().enumerate() {
+                buckets[i % workers].push((i, spec));
+            }
+            let results: Vec<Result<Vec<(usize, SessionOutcome)>>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = buckets
+                        .into_iter()
+                        .map(|bucket| {
+                            scope.spawn(move || -> Result<Vec<(usize, SessionOutcome)>> {
+                                let mut out = Vec::with_capacity(bucket.len());
+                                for (i, mut spec) in bucket {
+                                    out.push((
+                                        i,
+                                        self.run_session(&spec.name, &mut *spec.workload)?,
+                                    ));
+                                }
+                                Ok(out)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| {
+                            h.join().unwrap_or_else(|_| {
+                                Err(Error::Soc("serving worker thread panicked".into()))
+                            })
+                        })
+                        .collect()
+                });
+            for r in results {
+                for (i, outcome) in r? {
+                    slots[i] = Some(outcome);
+                }
+            }
+        } else {
+            for (i, mut spec) in specs.into_iter().enumerate() {
+                slots[i] = Some(self.run_session(&spec.name, &mut *spec.workload)?);
+            }
+        }
+        let sessions: Vec<SessionOutcome> = slots
+            .into_iter()
+            .map(|s| s.expect("every session produced an outcome"))
+            .collect();
+        let reports: Vec<ChipReport> = sessions.iter().map(|s| s.report.clone()).collect();
+        let merged =
+            ChipReport::merged(&reports, &AreaModel::multi_chip(self.config.domains))?;
+        let mismatches = sessions.iter().map(|s| s.mismatches).sum();
+        let checked = sessions.iter().map(|s| s.checked).sum();
+        Ok(ServeOutcome {
+            sessions,
+            merged,
+            mismatches,
+            checked,
+        })
+    }
+}

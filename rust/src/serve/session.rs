@@ -1,0 +1,168 @@
+//! Streaming inference session over one simulated chip.
+//!
+//! A [`Session`] owns a [`Soc`] for its lifetime and replaces the
+//! batch-only `run_sample … finish_report` dance with a typestate-safe
+//! stream: [`Session::push`] runs one sample, [`Session::snapshot`]
+//! assembles an incremental [`ChipReport`] at any point without
+//! disturbing accounting, and [`Session::close`] **consumes** the
+//! session to produce the final report — forgetting `finish_report` is a
+//! compile error, not a silent accounting bug. Per-sample latency is
+//! ledgered so sessions expose p50/p99 serving percentiles.
+
+use crate::datasets::Sample;
+use crate::energy::ChipReport;
+use crate::soc::{SampleResult, Soc};
+use crate::Result;
+
+/// Per-session serving statistics (simulated time).
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    /// Samples pushed through the session.
+    pub samples: u64,
+    /// Core-clock cycles consumed by the session's samples.
+    pub cycles: u64,
+    /// Synapse operations performed.
+    pub sops: u64,
+    /// Neuromorphic-processor clock the session ran at (Hz).
+    pub f_core_hz: f64,
+    /// Median per-sample latency (ms, simulated).
+    pub p50_latency_ms: f64,
+    /// 99th-percentile per-sample latency (ms, simulated).
+    pub p99_latency_ms: f64,
+}
+
+impl SessionStats {
+    /// Total simulated session latency (ms).
+    pub fn session_ms(&self) -> f64 {
+        self.cycles as f64 / self.f_core_hz * 1e3
+    }
+}
+
+/// The final artifact of a closed session.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Chip-level energy/performance report for the session window.
+    pub report: ChipReport,
+    /// Serving statistics (latency percentiles, throughput counters).
+    pub stats: SessionStats,
+}
+
+/// A live streaming session. Create one via
+/// [`crate::serve::SocBuilder::open_session`] (or [`Session::open`] with
+/// a hand-assembled chip), push samples, close for the report.
+pub struct Session {
+    soc: Soc,
+    name: String,
+    latencies: Vec<u64>,
+    cycles: u64,
+    sops: u64,
+}
+
+impl Session {
+    /// Open a session named `name` over an assembled chip. The chip's
+    /// accounting window becomes the session's energy/latency ledger.
+    pub fn open(soc: Soc, name: &str) -> Session {
+        Session {
+            soc,
+            name: name.to_string(),
+            latencies: Vec::new(),
+            cycles: 0,
+            sops: 0,
+        }
+    }
+
+    /// Session name (the report's workload label).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The underlying chip (read-only; mapping/network introspection).
+    pub fn soc(&self) -> &Soc {
+        &self.soc
+    }
+
+    /// Run one labelled sample through the chip and ledger its latency.
+    pub fn push(&mut self, sample: &Sample) -> Result<SampleResult> {
+        self.push_inner(sample, true)
+    }
+
+    /// Run one sample whose label is unknown/ignored (pure serving: the
+    /// result's `correct` flag is always false and accuracy is not
+    /// accumulated).
+    pub fn push_unlabelled(&mut self, sample: &Sample) -> Result<SampleResult> {
+        self.push_inner(sample, false)
+    }
+
+    fn push_inner(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+        let r = self.soc.run_sample(sample, label_known)?;
+        self.latencies.push(r.cycles);
+        self.cycles += r.cycles;
+        self.sops += r.sops;
+        Ok(r)
+    }
+
+    /// Incremental chip report over the work so far. Non-destructive:
+    /// pushing more samples and snapshotting again extends the same
+    /// accounting window, and [`Session::close`] right after a snapshot
+    /// returns bit-identical numbers.
+    pub fn snapshot(&self) -> ChipReport {
+        self.soc.snapshot_report(&self.name)
+    }
+
+    /// Serving statistics so far.
+    pub fn stats(&self) -> SessionStats {
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        let f = self.soc.config.f_core_hz;
+        let to_ms = |cycles: u64| cycles as f64 / f * 1e3;
+        SessionStats {
+            samples: self.latencies.len() as u64,
+            cycles: self.cycles,
+            sops: self.sops,
+            f_core_hz: f,
+            p50_latency_ms: to_ms(percentile(&sorted, 0.50)),
+            p99_latency_ms: to_ms(percentile(&sorted, 0.99)),
+        }
+    }
+
+    /// Close the session: consume it and produce the final chip report +
+    /// serving statistics. The compiler guarantees no sample can be
+    /// pushed after the close, and the report cannot be forgotten
+    /// half-assembled.
+    pub fn close(self) -> SessionReport {
+        let stats = self.stats();
+        let mut soc = self.soc;
+        SessionReport {
+            report: soc.finish_report(&self.name),
+            stats,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (the type's
+/// default — zero — for empty input). The single implementation behind
+/// both [`SessionStats`] percentiles and the serving bench, so the two
+/// can never drift apart.
+pub(crate) fn percentile<T: Copy + Default>(sorted: &[T], p: f64) -> T {
+    if sorted.is_empty() {
+        return T::default();
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile::<u64>(&[], 0.5), 0);
+        assert_eq!(percentile(&[7u64], 0.99), 7);
+        assert_eq!(percentile(&[1u64, 2, 3, 4], 0.0), 1);
+        assert_eq!(percentile(&[1u64, 2, 3, 4], 1.0), 4);
+        assert_eq!(percentile(&[1u64, 2, 3, 4, 5], 0.5), 3);
+        assert_eq!(percentile(&[1.5f64, 2.5], 0.0), 1.5);
+        assert_eq!(percentile::<f64>(&[], 0.5), 0.0);
+    }
+}

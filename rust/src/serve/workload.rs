@@ -1,0 +1,442 @@
+//! Pluggable sample sources for the streaming serving API.
+//!
+//! A [`Workload`] is anything that can hand the chip one [`Sample`] at a
+//! time plus the geometry metadata needed to check it against a mapped
+//! network — the streaming replacement for the enum dispatch in
+//! [`crate::config::parse_workload`]. Three sources ship in-tree:
+//!
+//! - [`SyntheticStream`] — the existing synthetic datasets
+//!   ([`crate::datasets::Workload`]) exposed as a stream;
+//! - [`EventReplay`] — replay of a materialized [`Dataset`] (in-memory
+//!   or loaded from the JSON interchange format), optionally looped;
+//! - [`TrafficWorkload`] — a seeded Bernoulli event-traffic generator
+//!   for load testing at arbitrary geometry and spike rate.
+//!
+//! [`workload_from_spec`] parses a CLI-style spec string into a boxed
+//! workload, so new scenarios plug in without touching an enum.
+
+use crate::datasets::{Dataset, Sample};
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// A stream of labelled event samples plus the metadata a serving layer
+/// needs to pair it with a mapped network. Implementors must be `Send`
+/// so sessions can be dispatched across worker threads.
+pub trait Workload: Send {
+    /// Workload name (used as the session/report label).
+    fn name(&self) -> &str;
+    /// Input (axon) count of each sample.
+    fn inputs(&self) -> usize;
+    /// Class count of the labels.
+    fn classes(&self) -> usize;
+    /// Timesteps per sample.
+    fn timesteps(&self) -> usize;
+    /// Next sample, or `None` when the stream is exhausted.
+    fn next_sample(&mut self) -> Option<Sample>;
+    /// How many samples remain, when known (streams may be unbounded
+    /// until their budget runs out).
+    fn remaining_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Replays a materialized [`Dataset`] sample-by-sample, optionally for
+/// several passes (each pass replays the identical sample list). The
+/// sample list is behind an [`Arc`], so many replay workloads can shard
+/// one dataset without copying it per shard ([`EventReplay::shard`]).
+pub struct EventReplay {
+    name: String,
+    inputs: usize,
+    timesteps: usize,
+    classes: usize,
+    samples: Arc<Vec<Sample>>,
+    /// Half-open `[start, end)` range of `samples` this replay serves.
+    start: usize,
+    end: usize,
+    cursor: usize,
+    pass: usize,
+    passes: usize,
+}
+
+impl EventReplay {
+    /// Replay `ds` once.
+    pub fn new(ds: Dataset) -> Self {
+        Self::looping(ds, 1)
+    }
+
+    /// Replay `ds` for `passes` full passes.
+    pub fn looping(ds: Dataset, passes: usize) -> Self {
+        let end = ds.samples.len();
+        EventReplay {
+            name: ds.name,
+            inputs: ds.inputs,
+            timesteps: ds.timesteps,
+            classes: ds.classes,
+            samples: Arc::new(ds.samples),
+            start: 0,
+            end,
+            cursor: 0,
+            pass: 0,
+            passes,
+        }
+    }
+
+    /// Replay an explicit sample list (e.g. one shard of a dataset).
+    pub fn from_samples(
+        name: &str,
+        inputs: usize,
+        timesteps: usize,
+        classes: usize,
+        samples: Vec<Sample>,
+    ) -> Self {
+        let end = samples.len();
+        Self::shard(name, inputs, timesteps, classes, Arc::new(samples), 0, end)
+    }
+
+    /// Replay the half-open shard `[start, end)` of a **shared** sample
+    /// list — cloning the `Arc`, not the samples, so N shards of one
+    /// dataset cost no extra memory.
+    pub fn shard(
+        name: &str,
+        inputs: usize,
+        timesteps: usize,
+        classes: usize,
+        samples: Arc<Vec<Sample>>,
+        start: usize,
+        end: usize,
+    ) -> Self {
+        debug_assert!(start <= end && end <= samples.len(), "bad shard range");
+        EventReplay {
+            name: name.to_string(),
+            inputs,
+            timesteps,
+            classes,
+            samples,
+            start,
+            end,
+            cursor: 0,
+            pass: 0,
+            passes: 1,
+        }
+    }
+
+    /// Load a dataset interchange file (`Dataset::load_json`) for replay.
+    pub fn load(path: &Path) -> Result<Self> {
+        Ok(Self::new(Dataset::load_json(path)?))
+    }
+
+    /// Samples per pass of this replay's shard.
+    fn shard_len(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+impl Workload for EventReplay {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    fn next_sample(&mut self) -> Option<Sample> {
+        let n = self.shard_len();
+        if n == 0 {
+            return None;
+        }
+        if self.cursor >= n {
+            self.pass += 1;
+            self.cursor = 0;
+        }
+        if self.pass >= self.passes {
+            return None;
+        }
+        let s = self.samples[self.start + self.cursor].clone();
+        self.cursor += 1;
+        Some(s)
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        if self.pass >= self.passes {
+            return Some(0);
+        }
+        let remaining_passes = self.passes - self.pass - 1;
+        Some(remaining_passes * self.shard_len() + (self.shard_len() - self.cursor))
+    }
+}
+
+/// The existing synthetic dataset generators as a stream: materializes
+/// `kind.generate(samples, seed)` (identical samples to the batch path)
+/// and replays it once.
+pub struct SyntheticStream {
+    kind: crate::datasets::Workload,
+    replay: EventReplay,
+}
+
+impl SyntheticStream {
+    /// Stream `samples` synthetic samples of `kind` from `seed`.
+    pub fn new(kind: crate::datasets::Workload, samples: usize, seed: u64) -> Self {
+        SyntheticStream {
+            kind,
+            replay: EventReplay::new(kind.generate(samples, seed)),
+        }
+    }
+}
+
+impl Workload for SyntheticStream {
+    fn name(&self) -> &str {
+        self.kind.name()
+    }
+
+    fn inputs(&self) -> usize {
+        self.kind.inputs()
+    }
+
+    fn classes(&self) -> usize {
+        self.kind.classes()
+    }
+
+    fn timesteps(&self) -> usize {
+        self.kind.timesteps()
+    }
+
+    fn next_sample(&mut self) -> Option<Sample> {
+        self.replay.next_sample()
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        self.replay.remaining_hint()
+    }
+}
+
+/// Seeded Bernoulli event-traffic generator: every (timestep, axon) slot
+/// spikes independently with probability `rate`, labels are uniform.
+/// Samples are generated lazily, so arbitrarily long load tests cost no
+/// up-front memory.
+pub struct TrafficWorkload {
+    name: String,
+    inputs: usize,
+    classes: usize,
+    timesteps: usize,
+    rate: f64,
+    remaining: usize,
+    rng: Rng,
+}
+
+impl TrafficWorkload {
+    /// A generator of `samples` samples at the given geometry and spike
+    /// `rate` (probability per slot, clamped to [0, 1]).
+    pub fn new(
+        inputs: usize,
+        classes: usize,
+        timesteps: usize,
+        rate: f64,
+        samples: usize,
+        seed: u64,
+    ) -> Self {
+        TrafficWorkload {
+            name: format!("traffic-{inputs}x{classes}x{timesteps}@{rate}"),
+            inputs,
+            classes,
+            timesteps,
+            rate: rate.clamp(0.0, 1.0),
+            remaining: samples,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Workload for TrafficWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    fn next_sample(&mut self) -> Option<Sample> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let label = self.rng.below_usize(self.classes.max(1));
+        let mut events = Vec::new();
+        for t in 0..self.timesteps {
+            for a in 0..self.inputs {
+                if self.rng.bool(self.rate) {
+                    events.push((t as u16, a as u32));
+                }
+            }
+        }
+        Some(Sample { label, events })
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+/// Parse a workload spec string into a boxed stream:
+///
+/// - `nmnist` | `dvsgesture` | `cifar10` — synthetic stream of `samples`
+///   samples from `seed`;
+/// - `replay:<path>` — replay a dataset interchange JSON file;
+/// - `traffic:<inputs>x<classes>x<timesteps>@<rate>` — seeded traffic
+///   generator of `samples` samples.
+pub fn workload_from_spec(
+    spec: &str,
+    samples: usize,
+    seed: u64,
+) -> Result<Box<dyn Workload>> {
+    if let Some(path) = spec.strip_prefix("replay:") {
+        return Ok(Box::new(EventReplay::load(Path::new(path))?));
+    }
+    if let Some(rest) = spec.strip_prefix("traffic:") {
+        let usage = "traffic spec is traffic:<inputs>x<classes>x<timesteps>@<rate>";
+        let (dims, rate) = rest
+            .split_once('@')
+            .ok_or_else(|| Error::Config(usage.into()))?;
+        let parts: Vec<&str> = dims.split('x').collect();
+        if parts.len() != 3 {
+            return Err(Error::Config(usage.into()));
+        }
+        let parse_dim = |s: &str| -> Result<usize> {
+            s.parse().map_err(|_| Error::Config(usage.into()))
+        };
+        let inputs = parse_dim(parts[0])?;
+        let classes = parse_dim(parts[1])?;
+        let timesteps = parse_dim(parts[2])?;
+        if inputs == 0 || classes == 0 || timesteps == 0 {
+            return Err(Error::Config(usage.into()));
+        }
+        let rate: f64 = rate.parse().map_err(|_| Error::Config(usage.into()))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(Error::Config("traffic rate outside [0, 1]".into()));
+        }
+        return Ok(Box::new(TrafficWorkload::new(
+            inputs, classes, timesteps, rate, samples, seed,
+        )));
+    }
+    let kind = crate::config::parse_workload(spec)?;
+    Ok(Box::new(SyntheticStream::new(kind, samples, seed)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_stream_matches_batch_generation() {
+        let batch = crate::datasets::Workload::Nmnist.generate(4, 9);
+        let mut stream = SyntheticStream::new(crate::datasets::Workload::Nmnist, 4, 9);
+        assert_eq!(stream.inputs(), batch.inputs);
+        assert_eq!(stream.remaining_hint(), Some(4));
+        for expect in &batch.samples {
+            let got = stream.next_sample().expect("stream too short");
+            assert_eq!(&got, expect);
+        }
+        assert!(stream.next_sample().is_none());
+    }
+
+    #[test]
+    fn replay_loops_the_sample_list() {
+        let ds = Dataset {
+            name: "r".into(),
+            inputs: 4,
+            timesteps: 2,
+            classes: 2,
+            samples: vec![
+                Sample { label: 0, events: vec![(0, 1)] },
+                Sample { label: 1, events: vec![(1, 2)] },
+            ],
+        };
+        let mut r = EventReplay::looping(ds, 2);
+        assert_eq!(r.remaining_hint(), Some(4));
+        let labels: Vec<usize> = std::iter::from_fn(|| r.next_sample())
+            .map(|s| s.label)
+            .collect();
+        assert_eq!(labels, vec![0, 1, 0, 1]);
+        assert_eq!(r.remaining_hint(), Some(0));
+    }
+
+    #[test]
+    fn shards_share_one_sample_list_without_copying() {
+        let samples: Vec<Sample> = (0..5)
+            .map(|i| Sample { label: i % 2, events: vec![(0, i as u32)] })
+            .collect();
+        let shared = Arc::new(samples);
+        let mut a = EventReplay::shard("s", 4, 2, 2, shared.clone(), 0, 2);
+        let mut b = EventReplay::shard("s", 4, 2, 2, shared.clone(), 2, 5);
+        assert_eq!(a.remaining_hint(), Some(2));
+        assert_eq!(b.remaining_hint(), Some(3));
+        let got_a: Vec<u32> =
+            std::iter::from_fn(|| a.next_sample()).map(|s| s.events[0].1).collect();
+        let got_b: Vec<u32> =
+            std::iter::from_fn(|| b.next_sample()).map(|s| s.events[0].1).collect();
+        assert_eq!(got_a, vec![0, 1]);
+        assert_eq!(got_b, vec![2, 3, 4]);
+        // Same backing allocation, not per-shard copies.
+        assert_eq!(Arc::strong_count(&shared), 3);
+    }
+
+    #[test]
+    fn traffic_is_seed_deterministic() {
+        let collect = |seed: u64| -> Vec<Sample> {
+            let mut w = TrafficWorkload::new(16, 3, 4, 0.2, 3, seed);
+            std::iter::from_fn(|| w.next_sample()).collect()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6));
+        let s = collect(5);
+        assert_eq!(s.len(), 3);
+        for sample in &s {
+            assert!(sample.label < 3);
+            for &(t, a) in &sample.events {
+                assert!((t as usize) < 4 && (a as usize) < 16);
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parser_covers_all_sources() {
+        let w = workload_from_spec("nmnist", 2, 1).unwrap();
+        assert_eq!(w.inputs(), 2312);
+        let w = workload_from_spec("traffic:64x4x10@0.1", 5, 1).unwrap();
+        assert_eq!(w.inputs(), 64);
+        assert_eq!(w.classes(), 4);
+        assert_eq!(w.remaining_hint(), Some(5));
+        assert!(workload_from_spec("bogus", 1, 1).is_err());
+        assert!(workload_from_spec("traffic:64x4@0.1", 1, 1).is_err());
+        assert!(workload_from_spec("traffic:64x4x10@1.5", 1, 1).is_err());
+
+        let ds = crate::datasets::Workload::Cifar10.generate(2, 3);
+        let tmp = std::env::temp_dir().join("fsoc_replay_spec_test.json");
+        ds.to_json().write_file(&tmp).unwrap();
+        let spec = format!("replay:{}", tmp.display());
+        let mut w = workload_from_spec(&spec, 0, 0).unwrap();
+        assert_eq!(w.inputs(), 3072);
+        assert_eq!(w.remaining_hint(), Some(2));
+        assert!(w.next_sample().is_some());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

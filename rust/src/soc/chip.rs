@@ -97,6 +97,24 @@ struct HopCost {
     l2_links: u32,
 }
 
+/// Outcome of a batch [`Soc::run_dataset`] call: accuracy plus the work
+/// counters of exactly that batch (not the chip's lifetime totals).
+#[derive(Debug, Clone)]
+pub struct DatasetOutcome {
+    /// Fraction of samples classified correctly.
+    pub accuracy: f64,
+    /// Samples actually run (dataset size clipped by the limit).
+    pub samples: u64,
+    /// Correctly classified samples.
+    pub correct: u64,
+    /// Synapse operations performed by this batch.
+    pub sops: u64,
+    /// Core-clock cycles consumed by this batch.
+    pub cycles: u64,
+    /// Spike flits routed through the NoC by this batch.
+    pub spikes_routed: u64,
+}
+
 /// Result of one inference.
 #[derive(Debug, Clone)]
 pub struct SampleResult {
@@ -141,6 +159,9 @@ pub struct Soc {
     total_sops: u64,
     spikes_routed: u64,
     samples_run: u64,
+    /// Samples run with a known label (the accuracy denominator —
+    /// unlabelled serving pushes must not dilute accuracy).
+    labelled: u64,
     correct: u64,
     /// Cached core→core routing costs for the ideal-fabric energy charge.
     hop_table: Vec<Vec<HopCost>>,
@@ -235,6 +256,7 @@ impl Soc {
             total_sops: 0,
             spikes_routed: 0,
             samples_run: 0,
+            labelled: 0,
             correct: 0,
             hop_table,
             net,
@@ -513,6 +535,9 @@ impl Soc {
         self.total_cycles += sample_cycles;
         self.total_sops += sample_sops;
         self.samples_run += 1;
+        if label_known {
+            self.labelled += 1;
+        }
         if correct {
             self.correct += 1;
         }
@@ -527,8 +552,8 @@ impl Soc {
         })
     }
 
-    /// Run (up to `limit`) samples of a dataset; returns accuracy.
-    pub fn run_dataset(&mut self, ds: &Dataset, limit: usize) -> Result<f64> {
+    /// Run (up to `limit`) samples of a dataset through the chip.
+    pub fn run_dataset(&mut self, ds: &Dataset, limit: usize) -> Result<DatasetOutcome> {
         if ds.inputs != self.net.input_size() {
             return Err(Error::Soc(format!(
                 "dataset has {} inputs, network expects {}",
@@ -537,28 +562,52 @@ impl Soc {
             )));
         }
         let n = ds.samples.len().min(limit);
-        let mut correct = 0usize;
+        let spikes_before = self.spikes_routed;
+        let mut correct = 0u64;
+        let mut sops = 0u64;
+        let mut cycles = 0u64;
         for s in &ds.samples[..n] {
-            if self.run_sample(s, true)?.correct {
+            let r = self.run_sample(s, true)?;
+            if r.correct {
                 correct += 1;
             }
+            sops += r.sops;
+            cycles += r.cycles;
         }
-        Ok(correct as f64 / n.max(1) as f64)
+        Ok(DatasetOutcome {
+            accuracy: correct as f64 / n.max(1) as f64,
+            samples: n as u64,
+            correct,
+            sops,
+            cycles,
+            spikes_routed: self.spikes_routed - spikes_before,
+        })
     }
 
-    /// Assemble the chip-level report (merges every subsystem ledger and
-    /// charges static power over the run window).
-    pub fn finish_report(&mut self, workload: &str) -> ChipReport {
-        let mut ledger = std::mem::take(&mut self.ledger);
+    /// Assemble the chip-level report **without draining accounting**:
+    /// merges a copy of every subsystem ledger and charges static power
+    /// over the wall window so far. This is the incremental path behind
+    /// [`crate::serve::Session::snapshot`] — calling it twice with no
+    /// work in between yields bit-identical reports, and a subsequent
+    /// [`Soc::finish_report`] over the same window returns the same
+    /// numbers.
+    pub fn snapshot_report(&self, workload: &str) -> ChipReport {
+        let mut ledger = self.ledger.clone();
         let wall = self.total_cycles.max(1);
-        for c in &mut self.cores {
-            c.finish_window(wall);
-            ledger.merge(&c.take_ledger());
+        for c in &self.cores {
+            ledger.merge(c.ledger());
+            let active = c.busy_cycles().min(wall);
+            ledger.add_static(
+                &format!("core{}", c.regs().core_id()),
+                active,
+                wall - active,
+                self.energy.p_core_active,
+                self.energy.p_core_gated,
+            );
         }
-        ledger.merge(&self.noc.finish_ledger());
+        ledger.merge(&self.noc.snapshot_ledger());
         // CPU: dynamic ledger + domain statics (converted to core cycles).
         ledger.merge(&self.cpu.ledger);
-        self.cpu.ledger = EnergyLedger::new();
         let scale = self.clocks.f_core_hz / self.clocks.f_cpu_hz;
         ledger.add_static(
             "cpu-hf",
@@ -567,18 +616,14 @@ impl Soc {
             self.energy.p_cpu_active,
             self.energy.p_cpu_sleep,
         );
-        ledger.add_static(
-            "cpu-lf",
-            wall,
-            0,
-            self.energy.p_cpu_lf,
-            0.0,
-        );
+        ledger.add_static("cpu-lf", wall, 0, self.energy.p_cpu_lf, 0.0);
         self.clocks.charge_window(&mut ledger, wall);
         ledger.add_static("soc-misc", wall, 0, self.energy.p_soc_misc, 0.0);
 
-        let accuracy = (self.samples_run > 0)
-            .then(|| self.correct as f64 / self.samples_run as f64);
+        // Accuracy over *labelled* samples only: unlabelled serving
+        // pushes never dilute it, and an all-unlabelled run reports N.A.
+        let accuracy = (self.labelled > 0)
+            .then(|| self.correct as f64 / self.labelled as f64);
         ChipReport::from_ledger(
             workload,
             &ledger,
@@ -587,9 +632,42 @@ impl Soc {
             self.clocks.f_core_hz,
             wall,
             self.samples_run,
+            self.labelled,
             accuracy,
             self.spikes_routed,
         )
+    }
+
+    /// Assemble the chip-level report and **reset run accounting**, so a
+    /// reused chip starts its next accounting window (the next serving
+    /// session) from zero. Equivalent to [`Soc::snapshot_report`]
+    /// followed by [`Soc::reset_accounting`].
+    pub fn finish_report(&mut self, workload: &str) -> ChipReport {
+        let report = self.snapshot_report(workload);
+        self.reset_accounting();
+        report
+    }
+
+    /// Clear every energy ledger and run counter (cycles, SOPs, samples,
+    /// routed spikes) while keeping the booted chip state, weights and
+    /// mapping. The NoC must be drained (it always is between samples).
+    pub fn reset_accounting(&mut self) {
+        self.ledger = EnergyLedger::new();
+        for c in &mut self.cores {
+            c.reset_accounting();
+        }
+        self.noc.reset_accounting();
+        self.cpu.ledger = EnergyLedger::new();
+        self.cpu.clocks.hf_active = 0;
+        self.cpu.clocks.hf_gated = 0;
+        self.cpu.clocks.lf_cycles = 0;
+        self.cpu.clocks.bus_active = 0;
+        self.total_cycles = 0;
+        self.total_sops = 0;
+        self.spikes_routed = 0;
+        self.samples_run = 0;
+        self.labelled = 0;
+        self.correct = 0;
     }
 }
 
@@ -734,6 +812,98 @@ mod tests {
         assert!(rep.pj_per_sop.is_finite() && rep.pj_per_sop > 0.0);
         assert!(rep.power_mw > 0.0);
         assert_eq!(rep.samples, 1);
+    }
+
+    #[test]
+    fn snapshot_is_nondestructive_and_matches_finish() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        soc.run_sample(&s, true).unwrap();
+        let snap1 = soc.snapshot_report("t");
+        let snap2 = soc.snapshot_report("t");
+        // Snapshots are idempotent (no double-charged statics) …
+        assert_eq!(snap1.pj_per_sop.to_bits(), snap2.pj_per_sop.to_bits());
+        assert_eq!(snap1.power_mw.to_bits(), snap2.power_mw.to_bits());
+        assert_eq!(snap1.breakdown.by_static, snap2.breakdown.by_static);
+        // … and the final report over the same window is bit-identical.
+        let fin = soc.finish_report("t");
+        assert_eq!(snap1.pj_per_sop.to_bits(), fin.pj_per_sop.to_bits());
+        assert_eq!(snap1.power_mw.to_bits(), fin.power_mw.to_bits());
+        assert_eq!(snap1.cycles, fin.cycles);
+        assert_eq!(snap1.breakdown.by_class, fin.breakdown.by_class);
+    }
+
+    #[test]
+    fn finish_report_resets_accounting_for_reuse() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        soc.run_sample(&s, true).unwrap();
+        let first = soc.finish_report("w1");
+        assert_eq!(first.samples, 1);
+        // Second accounting window on the same (already booted) chip.
+        soc.run_sample(&s, true).unwrap();
+        let second = soc.finish_report("w2");
+        assert_eq!(second.samples, 1, "counters must restart per window");
+        assert!(second.sops > 0 && second.power_mw > 0.0);
+        // No boot-time IDMA parameter load in the second window, so its
+        // energy must not exceed the first window's.
+        assert!(second.total_pj() <= first.total_pj());
+    }
+
+    #[test]
+    fn unlabelled_samples_never_dilute_accuracy() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let s = busy_sample(32, 5);
+        // Pure serving: no labels → accuracy must be N.A., not 0 %.
+        soc.run_sample(&s, false).unwrap();
+        soc.run_sample(&s, false).unwrap();
+        let rep = soc.finish_report("unlabelled");
+        assert_eq!(rep.samples, 2);
+        assert_eq!(rep.accuracy, None, "unlabelled run must not report accuracy");
+        // Mixed: accuracy is over the labelled pushes only.
+        let labelled = soc.run_sample(&s, true).unwrap();
+        soc.run_sample(&s, false).unwrap();
+        let rep = soc.finish_report("mixed");
+        assert_eq!(rep.samples, 2);
+        let expect = if labelled.correct { 1.0 } else { 0.0 };
+        assert_eq!(rep.accuracy, Some(expect));
+    }
+
+    #[test]
+    fn run_dataset_reports_batch_counters() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let ds = Dataset {
+            name: "t".into(),
+            inputs: 32,
+            timesteps: 5,
+            classes: 4,
+            samples: vec![busy_sample(32, 5), busy_sample(32, 5), busy_sample(32, 5)],
+        };
+        let out = soc.run_dataset(&ds, 2).unwrap();
+        assert_eq!(out.samples, 2, "limit must clip the batch");
+        assert!(out.sops > 0 && out.cycles > 0 && out.spikes_routed > 0);
+        assert!((0.0..=1.0).contains(&out.accuracy));
+        assert_eq!(out.correct as f64 / out.samples as f64, out.accuracy);
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod extmem;
 pub mod outbuf;
 
 pub use bus::NeuroBus;
-pub use chip::{SampleResult, Soc, SocConfig};
+pub use chip::{DatasetOutcome, SampleResult, Soc, SocConfig};
 pub use clockmgr::ClockManager;
 pub use dma::{Dma, DmaKind};
 pub use extmem::ExtMem;

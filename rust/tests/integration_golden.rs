@@ -82,7 +82,7 @@ fn trained_accuracy_is_far_above_chance() {
     let ds = Dataset::load_json(&dir.join("dataset_nmnist.json")).unwrap();
     let mut soc = Soc::new(net, SocConfig::default()).unwrap();
     let n = ds.samples.len().min(20);
-    let acc = soc.run_dataset(&ds, n).unwrap();
+    let acc = soc.run_dataset(&ds, n).unwrap().accuracy;
     assert!(
         acc > 0.5,
         "trained NMNIST accuracy {acc} is not above chance (0.1)"

@@ -159,8 +159,10 @@ fn full_workload_dataset_end_to_end() {
     let net = random_net(5, Workload::Nmnist.inputs(), 48, 10, 20);
     let ds = Workload::Nmnist.generate(3, 42);
     let mut soc = Soc::new(net.clone(), SocConfig::default()).unwrap();
-    let acc = soc.run_dataset(&ds, 3).unwrap();
-    assert!((0.0..=1.0).contains(&acc));
+    let out = soc.run_dataset(&ds, 3).unwrap();
+    assert!((0.0..=1.0).contains(&out.accuracy));
+    assert_eq!(out.samples, 3);
+    assert!(out.sops > 0 && out.cycles > 0);
     let rep = soc.finish_report("nmnist-itest");
     assert!(rep.sops > 0);
     assert!(rep.power_mw > 0.0 && rep.power_mw < 200.0, "power {}", rep.power_mw);

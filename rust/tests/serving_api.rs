@@ -1,0 +1,218 @@
+//! Integration tests for the streaming serving API: `SocBuilder` as the
+//! single validation choke point, `Session` snapshot/close semantics and
+//! the `SocPool` concurrency-determinism guarantee (≥2 concurrent
+//! sessions bit-identical to the same sessions run sequentially).
+
+use fullerene_soc::config::RunConfig;
+use fullerene_soc::coordinator::GoldenCheck;
+use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use fullerene_soc::core::Codebook;
+use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+use fullerene_soc::serve::{
+    SessionSpec, SocBuilder, SocPool, TrafficWorkload, Workload,
+};
+
+fn small_net(inputs: usize, hidden: usize, classes: usize, timesteps: usize) -> NetworkDesc {
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 50,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    NetworkDesc {
+        name: "serve-test".into(),
+        layers: vec![
+            LayerDesc {
+                name: "h".into(),
+                inputs,
+                neurons: hidden,
+                codebook: cb.clone(),
+                widx: (0..inputs * hidden).map(|i| ((i * 11) % 16) as u8).collect(),
+                neuron_params: params.clone(),
+            },
+            LayerDesc {
+                name: "o".into(),
+                inputs: hidden,
+                neurons: classes,
+                codebook: cb,
+                widx: (0..hidden * classes).map(|i| ((i * 5) % 16) as u8).collect(),
+                neuron_params: params,
+            },
+        ],
+        timesteps,
+        classes,
+    }
+}
+
+fn traffic_specs(n: usize, samples: usize) -> Vec<SessionSpec> {
+    (0..n)
+        .map(|i| {
+            SessionSpec::new(
+                &format!("sess{i}"),
+                Box::new(TrafficWorkload::new(40, 4, 5, 0.15, samples, 100 + i as u64)),
+            )
+        })
+        .collect()
+}
+
+/// Acceptance criterion: ≥2 concurrent sessions produce reports
+/// bit-identical (`f64::to_bits`) to the same sessions run sequentially.
+#[test]
+fn concurrent_sessions_bit_identical_to_sequential() {
+    let net = small_net(40, 24, 4, 5);
+    let pool = SocPool::new(
+        net,
+        fullerene_soc::soc::SocConfig::default(),
+        3,
+        GoldenCheck::Reference,
+    )
+    .unwrap();
+    let par = pool.serve(traffic_specs(4, 5)).unwrap();
+    let seq = pool.serve_sequential(traffic_specs(4, 5)).unwrap();
+
+    assert_eq!(par.sessions.len(), 4);
+    assert_eq!(par.checked, 20);
+    assert_eq!(par.mismatches, 0, "chip diverged from reference");
+    assert_eq!(par.mismatches, seq.mismatches);
+
+    // Per-session reports are bit-identical in submission order …
+    for (a, b) in par.sessions.iter().zip(&seq.sessions) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.report.cycles, b.report.cycles);
+        assert_eq!(a.report.sops, b.report.sops);
+        assert_eq!(a.report.pj_per_sop.to_bits(), b.report.pj_per_sop.to_bits());
+        assert_eq!(a.report.power_mw.to_bits(), b.report.power_mw.to_bits());
+        assert_eq!(a.stats.samples, b.stats.samples);
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+    }
+    // … and so is the deterministic merge.
+    let (m, s) = (&par.merged, &seq.merged);
+    assert_eq!(m.cycles, s.cycles);
+    assert_eq!(m.sops, s.sops);
+    assert_eq!(m.samples, s.samples);
+    assert_eq!(m.pj_per_sop.to_bits(), s.pj_per_sop.to_bits());
+    assert_eq!(m.core_pj_per_sop.to_bits(), s.core_pj_per_sop.to_bits());
+    assert_eq!(m.power_mw.to_bits(), s.power_mw.to_bits());
+    assert_eq!(
+        m.breakdown.dynamic_pj.to_bits(),
+        s.breakdown.dynamic_pj.to_bits()
+    );
+    assert_eq!(
+        m.breakdown.static_pj.to_bits(),
+        s.breakdown.static_pj.to_bits()
+    );
+    assert_eq!(m.breakdown.by_class, s.breakdown.by_class);
+    assert_eq!(m.breakdown.by_static, s.breakdown.by_static);
+}
+
+/// Sessions are isolated: each runs on its own chip, so a session's
+/// report covers exactly its own samples.
+#[test]
+fn sessions_have_independent_ledgers() {
+    let net = small_net(40, 24, 4, 5);
+    let pool = SocPool::new(
+        net,
+        fullerene_soc::soc::SocConfig::default(),
+        2,
+        GoldenCheck::None,
+    )
+    .unwrap();
+    let out = pool.serve(traffic_specs(3, 4)).unwrap();
+    for s in &out.sessions {
+        assert_eq!(s.report.samples, 4);
+        assert_eq!(s.stats.samples, 4);
+        assert!(s.stats.p99_latency_ms >= s.stats.p50_latency_ms);
+        assert!(s.report.pj_per_sop.is_finite());
+    }
+    assert_eq!(out.merged.samples, 12);
+}
+
+/// Pool guard rails: XLA checks, zero workers, zero sessions and
+/// geometry mismatches are all hard errors.
+#[test]
+fn pool_rejects_invalid_setups() {
+    let net = small_net(40, 24, 4, 5);
+    let cfg = fullerene_soc::soc::SocConfig::default();
+    assert!(SocPool::new(net.clone(), cfg.clone(), 2, GoldenCheck::Xla).is_err());
+    assert!(SocPool::new(net.clone(), cfg.clone(), 0, GoldenCheck::None).is_err());
+    let pool = SocPool::new(net, cfg, 2, GoldenCheck::None).unwrap();
+    assert!(pool.serve(Vec::new()).is_err(), "zero sessions must error");
+    // 64-input traffic against a 40-input network.
+    let bad = vec![SessionSpec::new(
+        "bad",
+        Box::new(TrafficWorkload::new(64, 4, 5, 0.1, 2, 1)),
+    )];
+    assert!(pool.serve(bad).is_err());
+}
+
+/// Session streaming semantics: snapshots are incremental and the close
+/// report is bit-identical to a snapshot taken at the same point.
+#[test]
+fn session_snapshot_is_incremental_and_matches_close() {
+    let net = small_net(40, 24, 4, 5);
+    let mut wl = TrafficWorkload::new(40, 4, 5, 0.2, 3, 9);
+    let mut session = SocBuilder::new().open_session(&net, "snap").unwrap();
+    session.push(&wl.next_sample().unwrap()).unwrap();
+    let s1 = session.snapshot();
+    assert_eq!(s1.samples, 1);
+    session.push(&wl.next_sample().unwrap()).unwrap();
+    session.push(&wl.next_sample().unwrap()).unwrap();
+    let s3 = session.snapshot();
+    assert_eq!(s3.samples, 3);
+    assert!(s3.cycles > s1.cycles, "snapshot must extend the window");
+    let closed = session.close();
+    assert_eq!(closed.report.samples, 3);
+    assert_eq!(closed.report.pj_per_sop.to_bits(), s3.pj_per_sop.to_bits());
+    assert_eq!(closed.report.power_mw.to_bits(), s3.power_mw.to_bits());
+    assert_eq!(closed.stats.samples, 3);
+    assert!(closed.stats.p50_latency_ms > 0.0);
+}
+
+/// Regression for the validation choke point: configs assembled the way
+/// the CLI assembles them (mutating a default `RunConfig` from flags,
+/// never touching the JSON loader) must still be range-checked, because
+/// the builder validates on every build path.
+#[test]
+fn cli_style_configs_cannot_skip_validation() {
+    let net = small_net(40, 24, 4, 5);
+
+    // Flag-style mutation: --domains 0 used to reach Soc::new unchecked
+    // unless the caller remembered RunConfig::validate.
+    let mut cfg = RunConfig::default();
+    cfg.soc.domains = 0;
+    assert!(cfg.validate().is_err());
+    assert!(SocBuilder::from_run_config(&cfg).build_runner(net.clone()).is_err());
+    assert!(SocBuilder::from_run_config(&cfg).build_soc(&net).is_err());
+    assert!(SocBuilder::from_run_config(&cfg).build_pool(&net).is_err());
+    assert!(SocBuilder::from_run_config(&cfg)
+        .open_session(&net, "x")
+        .is_err());
+
+    let mut cfg = RunConfig::default();
+    cfg.soc.supply_v = 2.0; // --supply 2.0
+    assert!(SocBuilder::from_run_config(&cfg).build_soc(&net).is_err());
+
+    let mut cfg = RunConfig::default();
+    cfg.soc.n_cores = 21; // --domains 1 with 21 cores
+    assert!(SocBuilder::from_run_config(&cfg).build_soc(&net).is_err());
+
+    // The happy path still builds.
+    let cfg = RunConfig::default();
+    assert!(SocBuilder::from_run_config(&cfg).build_soc(&net).is_ok());
+}
+
+/// The fluent path hits the same choke point as the RunConfig path.
+#[test]
+fn builder_is_the_single_choke_point() {
+    let net = small_net(40, 24, 4, 5);
+    assert!(SocBuilder::new()
+        .fifo_depth(0)
+        .open_session(&net, "x")
+        .is_err());
+    assert!(SocBuilder::new()
+        .f_core_mhz(500.0)
+        .build_soc(&net)
+        .is_err());
+    assert!(SocBuilder::new().workers(0).build_pool(&net).is_err());
+}
