@@ -10,7 +10,7 @@
 //! cargo run --release --example serve_sessions
 //! ```
 
-use fullerene_soc::benches_support::structural_net;
+use fullerene_soc::benches_support::{saturation_workload, structural_net};
 use fullerene_soc::datasets::Workload;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::metrics::Table;
@@ -24,11 +24,23 @@ fn net() -> NetworkDesc {
     structural_net("serve-demo", w.inputs(), 48, w.classes(), w.timesteps())
 }
 
-/// The session mix: two synthetic NMNIST streams (different seeds) and
-/// two seeded traffic generators at the same geometry.
+/// The session mix: two synthetic NMNIST streams (different seeds), two
+/// seeded traffic generators at the same geometry, and one session at
+/// the shared saturation recipe — the same scenario the NoC benches and
+/// the CI perf-smoke job measure.
 fn specs() -> Vec<SessionSpec> {
     let w = Workload::Nmnist;
     vec![
+        SessionSpec::new(
+            "user4-saturation",
+            Box::new(saturation_workload(
+                w.inputs(),
+                w.classes(),
+                w.timesteps(),
+                2,
+                23,
+            )),
+        ),
         SessionSpec::new(
             "user0-nmnist",
             Box::new(SyntheticStream::new(w, 4, 7)),

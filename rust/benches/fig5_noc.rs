@@ -85,14 +85,20 @@ fn main() {
 
     // --- simulator wall-clock (perf tracking) -------------------------------
     let mut b = Bench::new("fig5_noc");
-    for &(name, load) in &[("light", 0.05), ("heavy", 0.4)] {
-        b.bench(&format!("noc-300cy/{name}"), || {
-            let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
-            let mut tg = TrafficGen::new(Pattern::Uniform, load, 20, 3);
-            tg.run(&mut sim, 300).unwrap();
-            sim.stats().delivered
-        });
-    }
+    b.bench("noc-300cy/light", || {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut tg = TrafficGen::new(Pattern::Uniform, 0.05, 20, 3);
+        tg.run(&mut sim, 300).unwrap();
+        sim.stats().delivered
+    });
+    // Saturation: the one shared recipe (same scenario as the CI
+    // perf-smoke job `noc_throughput` and the serve_sessions example).
+    b.bench("noc-sat/shared-recipe", || {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut tg = benches_support::saturation_gen(20, 3);
+        tg.run(&mut sim, benches_support::SAT_OFFER_CYCLES).unwrap();
+        sim.stats().delivered
+    });
     b.bench("multidomain-4x/400-flits", || {
         let m = fullerene_soc::noc::MultiDomain::new(4);
         m.measure(400, 0.8, 7, EnergyParams::nominal())

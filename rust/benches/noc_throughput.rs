@@ -1,0 +1,89 @@
+//! NoC hot-path perf smoke: host-side throughput (simulated cycles/sec,
+//! delivered flits/sec) of the event-driven simulator on the shared
+//! saturation recipe — fullerene saturation, 4-domain saturation, and
+//! the sparse 1-flit-in-flight scenario, the last also on the retained
+//! full-scan reference so the run carries a machine-independent speedup
+//! ratio.
+//!
+//! Emits `BENCH_noc.json` (schema `bench-noc-v1`) in the working
+//! directory and gates against a checked-in `BENCH_noc.baseline.json`
+//! (working directory, then the repository root), failing the process on
+//! a >30 % regression. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_NOC_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_NOC_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{noc_perf, noc_perf_check, noc_perf_json};
+use fullerene_soc::metrics::Table;
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_NOC_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in ["BENCH_noc.baseline.json", "../BENCH_noc.baseline.json"] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let perf = noc_perf(42, fast).expect("NoC perf scenarios must drain");
+
+    let mut t = Table::new(&[
+        "scenario",
+        "sim cycles",
+        "flits",
+        "host s",
+        "cycles/s",
+        "flits/s",
+    ]);
+    for c in &perf.cases {
+        t.push_row(vec![
+            c.name.clone(),
+            c.sim_cycles.to_string(),
+            c.flits.to_string(),
+            format!("{:.3}", c.host_s),
+            format!("{:.0}", c.cycles_per_s),
+            format!("{:.0}", c.flits_per_s),
+        ]);
+    }
+    println!("## bench: noc_throughput\n{}", t.render());
+    println!(
+        "sparse-traffic speedup (event-driven vs full-scan reference): {:.1}x",
+        perf.sparse_speedup_vs_reference
+    );
+
+    let out = Path::new("BENCH_noc.json");
+    noc_perf_json(&perf, "measured")
+        .write_file(out)
+        .expect("write BENCH_noc.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_NOC_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_NOC_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => println!("no BENCH_noc.baseline.json found; baseline check skipped"),
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = noc_perf_check(&perf, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("PERF REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

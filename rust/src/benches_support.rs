@@ -17,6 +17,13 @@
 //!   (host samples/s, simulated p50/p99 session latency) emitted as
 //!   machine-readable `BENCH_sessions.json` by the fig5 bench target so
 //!   future PRs have a perf trajectory.
+//! - [`saturation_gen`] / [`saturation_workload`] — the one shared
+//!   saturation-traffic recipe ([`SAT_LOAD`]) measured by the fig5
+//!   bench, the CI perf-smoke job and the `serve_sessions` example.
+//! - [`noc_perf`] — NoC hot-path host throughput (cycles/s, flits/s) on
+//!   the shared scenarios, optimized vs the full-scan reference, emitted
+//!   as `BENCH_noc.json` by `benches/noc_throughput.rs` and gated in CI
+//!   via [`noc_perf_check`].
 
 use crate::coordinator::GoldenCheck;
 use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
@@ -26,7 +33,7 @@ use crate::energy::{EnergyParams, EventClass};
 use crate::metrics::Table;
 use crate::nn::network::{LayerDesc, NetworkDesc};
 use crate::noc::traffic::{Pattern, TrafficGen};
-use crate::noc::{MultiDomain, NocSim, Topology};
+use crate::noc::{Dest, Fabric, MultiDomain, NocSim, ReferenceNocSim, Topology, TraceMode};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::firmware;
 use crate::serve::{SessionSpec, SocPool, TrafficWorkload};
@@ -179,6 +186,289 @@ pub fn fig3_table(points: usize, seed: u64) -> Table {
         ]);
     }
     t
+}
+
+// ===================== shared saturation recipe ============================
+
+/// Offered load of the shared saturation scenario (flits/core/cycle —
+/// past the fullerene's ~0.2–0.4 spike/cycle delivery ceiling).
+pub const SAT_LOAD: f64 = 0.4;
+/// Cycles of offered saturation load before the fabric drains.
+pub const SAT_OFFER_CYCLES: u64 = 300;
+/// Intra-domain fraction of multi-domain saturation traffic (the
+/// mapper's layer-locality regime, same figure the fig5 sweep uses).
+pub const SAT_LOCALITY: f64 = 0.8;
+
+/// The one saturation-traffic recipe shared by the Fig. 5 bench, the CI
+/// perf-smoke job (`benches/noc_throughput.rs`) and the `serve_sessions`
+/// example, so every surface measures the same scenario: uniform random
+/// P2P at [`SAT_LOAD`] flits/core/cycle.
+pub fn saturation_gen(n_cores: usize, seed: u64) -> TrafficGen {
+    TrafficGen::new(Pattern::Uniform, SAT_LOAD, n_cores, seed)
+}
+
+/// Serving-side view of the same scenario: a seeded Bernoulli traffic
+/// workload at the caller's network geometry driving the chip at
+/// [`SAT_LOAD`] events/input/timestep.
+pub fn saturation_workload(
+    inputs: usize,
+    classes: usize,
+    timesteps: usize,
+    samples: usize,
+    seed: u64,
+) -> TrafficWorkload {
+    TrafficWorkload::new(inputs, classes, timesteps, SAT_LOAD, samples, seed)
+}
+
+// ===================== NoC perf baseline (BENCH_noc.json) ==================
+
+/// One measured NoC host-throughput scenario.
+#[derive(Debug, Clone)]
+pub struct NocPerfCase {
+    /// Scenario name.
+    pub name: String,
+    /// Simulated fabric cycles executed.
+    pub sim_cycles: u64,
+    /// Flits delivered.
+    pub flits: u64,
+    /// Host wall-clock (seconds).
+    pub host_s: f64,
+    /// Simulated cycles per host second.
+    pub cycles_per_s: f64,
+    /// Delivered flits per host second.
+    pub flits_per_s: f64,
+}
+
+/// The `BENCH_noc.json` payload: event-driven simulator host throughput
+/// on the shared scenarios, plus the machine-independent speedup of the
+/// sparse scenario over the retained full-scan [`ReferenceNocSim`].
+#[derive(Debug, Clone)]
+pub struct NocPerf {
+    /// Measured scenarios (the `*-reference` entries are the full-scan
+    /// oracle on the same workload).
+    pub cases: Vec<NocPerfCase>,
+    /// Optimized / reference cycles-per-second ratio on the sparse
+    /// scenario (1 in-flight flit on a 4-domain fabric) — the
+    /// activity-proportional scheduling win, independent of host speed.
+    pub sparse_speedup_vs_reference: f64,
+}
+
+/// Time one scenario over `reps` repetitions, each driving a fresh
+/// simulator through the same workload (`run(rep)` returns that rep's
+/// `(sim cycles, delivered flits)`). The reported rates come from the
+/// **fastest** repetition, so a single scheduler preemption on a busy
+/// CI host cannot deflate the gated figures; `sim_cycles`/`flits`/
+/// `host_s` are totals across all reps.
+fn timed_case(
+    name: &str,
+    reps: u64,
+    mut run: impl FnMut(u64) -> Result<(u64, u64)>,
+) -> Result<NocPerfCase> {
+    let (mut total_cycles, mut total_flits) = (0u64, 0u64);
+    let mut total_s = 0.0f64;
+    let (mut best_cps, mut best_fps) = (0.0f64, 0.0f64);
+    for r in 0..reps {
+        let t0 = std::time::Instant::now();
+        let (cycles, flits) = run(r)?;
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        total_cycles += cycles;
+        total_flits += flits;
+        total_s += secs;
+        best_cps = best_cps.max(cycles as f64 / secs);
+        best_fps = best_fps.max(flits as f64 / secs);
+    }
+    Ok(NocPerfCase {
+        name: name.to_string(),
+        sim_cycles: total_cycles,
+        flits: total_flits,
+        host_s: total_s,
+        cycles_per_s: best_cps,
+        flits_per_s: best_fps,
+    })
+}
+
+/// Burst of locality-weighted random P2P flits over a multi-domain
+/// fabric, drained to empty (the `multidomain_sweep` traffic shape at
+/// saturation volume). Generic so the reference oracle runs the exact
+/// same scenario.
+fn multidomain_burst(
+    sim: &mut impl Fabric,
+    n_cores: usize,
+    flits: usize,
+    locality: f64,
+    seed: u64,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..flits {
+        let src = rng.below_usize(n_cores);
+        let dst = if rng.bool(locality) {
+            (src / 20) * 20 + rng.below_usize(20)
+        } else {
+            rng.below_usize(n_cores)
+        };
+        if dst == src {
+            continue;
+        }
+        sim.inject(src, &Dest::Core(dst), 0);
+    }
+    sim.run_until_drained(10_000_000)
+}
+
+/// The sparse scenario: one flit in flight at a time on a 4-domain
+/// fabric (inject one cross-domain flit, drain, repeat) — the regime
+/// where full-fabric scanning wastes almost every switch visit.
+fn sparse_drains(sim: &mut impl Fabric, drains: usize) -> Result<()> {
+    for _ in 0..drains {
+        sim.inject(0, &Dest::Core(70), 0);
+        sim.run_until_drained(100_000)?;
+    }
+    Ok(())
+}
+
+/// Run the NoC perf scenarios (fullerene saturation, 4-domain
+/// saturation, 4-domain sparse — the last also on the reference oracle
+/// for the speedup ratio). `fast` selects the CI smoke budget; the
+/// bench binary maps `FSOC_BENCH_FAST=1` onto it (a parameter rather
+/// than an env read here, so tests never mutate process-global state).
+pub fn noc_perf(seed: u64, fast: bool) -> Result<NocPerf> {
+    let reps: u64 = if fast { 1 } else { 3 };
+    // The sparse pair feeds the always-enforced 3x gate and its window
+    // is tiny, so it always gets best-of-3 regardless of the budget.
+    let sparse_reps: u64 = reps.max(3);
+    let drains: usize = if fast { 300 } else { 500 };
+    let md_flits: usize = if fast { 1200 } else { 4000 };
+
+    let fullerene_sat = timed_case("fullerene-sat", reps, |r| {
+        let mut sim = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        sim.set_trace_mode(TraceMode::Off);
+        let mut tg = saturation_gen(20, seed + r);
+        tg.run(&mut sim, SAT_OFFER_CYCLES)?;
+        Ok((sim.cycle(), sim.stats().delivered))
+    })?;
+    let md_sat = timed_case("multidomain4-sat", reps, |r| {
+        let mut sim = NocSim::new(Topology::multi_domain(4), 4, EnergyParams::nominal());
+        sim.set_trace_mode(TraceMode::Off);
+        multidomain_burst(&mut sim, 80, md_flits, SAT_LOCALITY, seed + r)?;
+        Ok((sim.cycle(), sim.stats().delivered))
+    })?;
+    let sparse = timed_case("multidomain4-sparse", sparse_reps, |_| {
+        let mut sim = NocSim::new(Topology::multi_domain(4), 4, EnergyParams::nominal());
+        sim.set_trace_mode(TraceMode::Off);
+        sparse_drains(&mut sim, drains)?;
+        Ok((sim.cycle(), sim.stats().delivered))
+    })?;
+    let sparse_ref = timed_case("multidomain4-sparse-reference", sparse_reps, |_| {
+        let mut sim = ReferenceNocSim::new(Topology::multi_domain(4), 4, EnergyParams::nominal());
+        sparse_drains(&mut sim, drains)?;
+        Ok((sim.cycle(), sim.stats().delivered))
+    })?;
+
+    let speedup = sparse.cycles_per_s / sparse_ref.cycles_per_s.max(1e-9);
+    Ok(NocPerf {
+        cases: vec![fullerene_sat, md_sat, sparse, sparse_ref],
+        sparse_speedup_vs_reference: speedup,
+    })
+}
+
+/// The NoC perf run as machine-readable JSON (the `BENCH_noc.json`
+/// schema the CI perf-smoke job tracks).
+pub fn noc_perf_json(p: &NocPerf, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-noc-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("sat_load", Json::Num(SAT_LOAD)),
+        ("sat_offer_cycles", Json::Num(SAT_OFFER_CYCLES as f64)),
+        (
+            "scenarios",
+            Json::Arr(
+                p.cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("sim_cycles", Json::Num(c.sim_cycles as f64)),
+                            ("flits", Json::Num(c.flits as f64)),
+                            ("host_s", Json::Num(c.host_s)),
+                            ("cycles_per_s", Json::Num(c.cycles_per_s)),
+                            ("flits_per_s", Json::Num(c.flits_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sparse_speedup_vs_reference",
+            Json::Num(p.sparse_speedup_vs_reference),
+        ),
+    ])
+}
+
+/// Gate a fresh NoC perf run against a checked-in baseline; returns
+/// human-readable regression descriptions (empty = pass).
+///
+/// Two kinds of gates:
+/// - the machine-independent sparse speedup must stay ≥ 3× — always
+///   enforced;
+/// - comparisons *against the baseline's numbers* (relative speedup,
+///   absolute `cycles_per_s` / `flits_per_s` per scenario) are enforced
+///   only when the baseline's `provenance` is `"measured"` — a
+///   bootstrap baseline carries hand-estimated figures that must never
+///   fail a real run.
+pub fn noc_perf_check(current: &NocPerf, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let floor = 1.0 - max_regress;
+    if current.sparse_speedup_vs_reference < 3.0 {
+        fails.push(format!(
+            "sparse speedup {:.2}x below the 3x budget",
+            current.sparse_speedup_vs_reference
+        ));
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    if let Some(base) = baseline
+        .get_opt("sparse_speedup_vs_reference")
+        .and_then(|v| v.as_f64().ok())
+    {
+        if current.sparse_speedup_vs_reference < floor * base {
+            fails.push(format!(
+                "sparse speedup regressed: {:.2}x vs baseline {:.2}x",
+                current.sparse_speedup_vs_reference, base
+            ));
+        }
+    }
+    let Some(scenarios) = baseline.get_opt("scenarios").and_then(|v| v.as_arr().ok())
+    else {
+        return fails;
+    };
+    for b in scenarios {
+        let Some(name) = b.get_opt("name").and_then(|v| v.as_str().ok()) else {
+            continue;
+        };
+        let Some(cur) = current.cases.iter().find(|c| c.name == name) else {
+            fails.push(format!("scenario '{name}' missing from the current run"));
+            continue;
+        };
+        for (metric, cur_v) in [
+            ("cycles_per_s", cur.cycles_per_s),
+            ("flits_per_s", cur.flits_per_s),
+        ] {
+            if let Some(base_v) = b.get_opt(metric).and_then(|v| v.as_f64().ok()) {
+                if cur_v < floor * base_v {
+                    fails.push(format!(
+                        "{name}/{metric} regressed: {cur_v:.0} vs baseline {base_v:.0} \
+                         (allowed floor {:.0})",
+                        floor * base_v
+                    ));
+                }
+            }
+        }
+    }
+    fails
 }
 
 /// One Fig. 5c measurement point.
@@ -621,6 +911,71 @@ mod tests {
         assert!(pts[1].l2_hops > 0 && pts[2].l2_hops > 0);
         // More domains → longer average paths and more NoC energy.
         assert!(pts[2].measured_hops > pts[0].measured_hops);
+    }
+
+    #[test]
+    fn noc_perf_scenarios_run_and_speed_up_sparse_traffic() {
+        let p = noc_perf(7, true).unwrap();
+        assert_eq!(p.cases.len(), 4);
+        for c in &p.cases {
+            assert!(c.sim_cycles > 0 && c.flits > 0, "{}: empty scenario", c.name);
+            assert!(c.cycles_per_s > 0.0 && c.flits_per_s > 0.0, "{}", c.name);
+        }
+        // Both sims executed the identical sparse workload …
+        let sparse = &p.cases[2];
+        let refr = &p.cases[3];
+        assert_eq!(sparse.sim_cycles, refr.sim_cycles, "sims diverged on cycles");
+        assert_eq!(sparse.flits, refr.flits);
+        // … and event-driven scheduling must win on it (the bench gate
+        // demands ≥3x; the unit test just pins the direction so it stays
+        // robust on loaded CI hosts).
+        assert!(
+            p.sparse_speedup_vs_reference > 1.0,
+            "no speedup: {:.2}x",
+            p.sparse_speedup_vs_reference
+        );
+        let j = noc_perf_json(&p, "measured").to_string();
+        assert!(j.contains("cycles_per_s") && j.contains("sparse_speedup_vs_reference"));
+    }
+
+    #[test]
+    fn noc_perf_check_gates_speedup_and_measured_baselines() {
+        let current = NocPerf {
+            cases: vec![NocPerfCase {
+                name: "fullerene-sat".into(),
+                sim_cycles: 1000,
+                flits: 400,
+                host_s: 0.001,
+                cycles_per_s: 1.0e6,
+                flits_per_s: 4.0e5,
+            }],
+            sparse_speedup_vs_reference: 5.0,
+        };
+        // Bootstrap baseline: only the absolute 3x floor is gated — its
+        // hand-estimated figures (even a high speedup guess) must never
+        // fail a real run.
+        let bootstrap = Json::parse(
+            r#"{"provenance":"bootstrap","sparse_speedup_vs_reference":12.0,
+                "scenarios":[{"name":"fullerene-sat","cycles_per_s":1e12,
+                              "flits_per_s":1e12}]}"#,
+        )
+        .unwrap();
+        assert!(noc_perf_check(&current, &bootstrap, 0.30).is_empty());
+        // Measured baseline: absolute throughput is gated too.
+        let measured = Json::parse(
+            r#"{"provenance":"measured","sparse_speedup_vs_reference":4.0,
+                "scenarios":[{"name":"fullerene-sat","cycles_per_s":1e12,
+                              "flits_per_s":1e12}]}"#,
+        )
+        .unwrap();
+        let fails = noc_perf_check(&current, &measured, 0.30);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        // A speedup below 3x always fails.
+        let slow = NocPerf {
+            cases: vec![],
+            sparse_speedup_vs_reference: 2.0,
+        };
+        assert!(!noc_perf_check(&slow, &bootstrap, 0.30).is_empty());
     }
 
     #[test]

@@ -17,8 +17,11 @@
 //!   channel arbiter, reconfigurable connection matrix, clock gating.
 //! - [`packet`] — spike flits and the hybrid transmission modes
 //!   (P2P / broadcast / merge).
-//! - [`sim`] — the cycle-driven NoC simulator (Fig. 5c: throughput,
-//!   pJ/hop).
+//! - [`sim`] — the event-driven cycle-level NoC simulator (Fig. 5c:
+//!   throughput, pJ/hop): active-switch worklist, precomputed port
+//!   routing, streaming delivery accounting.
+//! - [`reference`] — the pre-optimization full-scan simulator, retained
+//!   verbatim as the bit-exactness oracle and perf baseline.
 //! - [`traffic`] — synthetic traffic generators for the router benches.
 //! - [`multilevel`] — level-2 scale-up: multiple domains joined through
 //!   central level-2 routers into one cycle-simulatable fabric, with the
@@ -27,6 +30,7 @@
 pub mod metrics;
 pub mod multilevel;
 pub mod packet;
+pub mod reference;
 pub mod router;
 pub mod sim;
 pub mod topology;
@@ -35,6 +39,77 @@ pub mod traffic;
 pub use metrics::TopoStats;
 pub use multilevel::{AnalyticModel, MultiDomain, MultiDomainMeasurement};
 pub use packet::{Dest, Flit, TxMode};
+pub use reference::ReferenceNocSim;
 pub use router::CmRouter;
-pub use sim::{NocSim, SimStats};
+pub use sim::{NocSim, SimStats, TraceMode};
 pub use topology::{NodeId, NodeKind, Topology};
+
+/// The driving surface shared by the event-driven [`NocSim`] and the
+/// full-scan [`ReferenceNocSim`] oracle, so traffic generators, the
+/// equivalence suite and the perf benches can drive either simulator
+/// through one code path.
+pub trait Fabric {
+    /// Inject spikes from `src_core` toward `dest`; returns the
+    /// consecutive flit-id range created.
+    fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> std::ops::Range<u64>;
+    /// Advance one cycle.
+    fn step(&mut self);
+    /// Drain all in-flight flits or error.
+    fn run_until_drained(&mut self, max_cycles: u64) -> crate::Result<()>;
+    /// Aggregate statistics so far.
+    fn stats(&self) -> SimStats;
+    /// Current cycle.
+    fn cycle(&self) -> u64;
+    /// Flits injected but not yet delivered.
+    fn in_flight(&self) -> u64;
+    /// Advance the global timestep.
+    fn set_timestep(&mut self, ts: u32);
+}
+
+impl Fabric for NocSim {
+    fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> std::ops::Range<u64> {
+        NocSim::inject(self, src_core, dest, axon)
+    }
+    fn step(&mut self) {
+        NocSim::step(self)
+    }
+    fn run_until_drained(&mut self, max_cycles: u64) -> crate::Result<()> {
+        NocSim::run_until_drained(self, max_cycles)
+    }
+    fn stats(&self) -> SimStats {
+        NocSim::stats(self)
+    }
+    fn cycle(&self) -> u64 {
+        NocSim::cycle(self)
+    }
+    fn in_flight(&self) -> u64 {
+        NocSim::in_flight(self)
+    }
+    fn set_timestep(&mut self, ts: u32) {
+        NocSim::set_timestep(self, ts)
+    }
+}
+
+impl Fabric for ReferenceNocSim {
+    fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> std::ops::Range<u64> {
+        ReferenceNocSim::inject(self, src_core, dest, axon)
+    }
+    fn step(&mut self) {
+        ReferenceNocSim::step(self)
+    }
+    fn run_until_drained(&mut self, max_cycles: u64) -> crate::Result<()> {
+        ReferenceNocSim::run_until_drained(self, max_cycles)
+    }
+    fn stats(&self) -> SimStats {
+        ReferenceNocSim::stats(self)
+    }
+    fn cycle(&self) -> u64 {
+        ReferenceNocSim::cycle(self)
+    }
+    fn in_flight(&self) -> u64 {
+        ReferenceNocSim::in_flight(self)
+    }
+    fn set_timestep(&mut self, ts: u32) {
+        ReferenceNocSim::set_timestep(self, ts)
+    }
+}

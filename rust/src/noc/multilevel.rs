@@ -17,7 +17,7 @@
 
 use super::metrics::TopoStats;
 use super::packet::Dest;
-use super::sim::NocSim;
+use super::sim::{NocSim, TraceMode};
 use super::topology::Topology;
 use crate::energy::{EnergyParams, EventClass};
 use crate::util::prng::Rng;
@@ -174,6 +174,9 @@ impl MultiDomain {
         energy: EnergyParams,
     ) -> Result<MultiDomainMeasurement> {
         let mut sim = self.sim(4, energy);
+        // Aggregates only: the measurement never reads per-flit records,
+        // so skip trace retention (stats are exact in every mode).
+        sim.set_trace_mode(TraceMode::Off);
         let mut rng = Rng::new(seed);
         let n = self.total_cores();
         let mut analytic_sum = 0.0;

@@ -1,0 +1,345 @@
+//! The pre-optimization NoC simulator, retained **verbatim** as the
+//! bit-exactness oracle for the event-driven [`super::sim::NocSim`].
+//!
+//! Every cycle this implementation scans the *whole* fabric — injection,
+//! arbitration and link movement iterate all switches whether or not they
+//! hold flits; routing re-derives the output port with a
+//! `neighbors().position()` scan per flit; `stats` re-walks the full
+//! delivery log and every switch; `snapshot_ledger` formats its static
+//! keys per call. That O(fabric)-per-cycle behavior is exactly what the
+//! optimized simulator exists to avoid — and exactly what makes this copy
+//! valuable:
+//!
+//! - `tests/equivalence_noc.rs` drives both simulators with identical
+//!   traffic and asserts stats, ledgers and traces are bit-identical
+//!   (`f64::to_bits`) across topologies and load regimes;
+//! - `benches/noc_throughput.rs` measures both on the same scenarios so
+//!   `BENCH_noc.json` carries a machine-independent speedup ratio.
+//!
+//! Do not "fix" or speed this file up: its value is being the frozen
+//! semantics the fast path must reproduce.
+
+use super::packet::{Dest, Flit, TxMode};
+use super::router::CmRouter;
+use super::sim::{Delivered, SimStats};
+use super::topology::{NodeId, NodeKind, Topology};
+use crate::energy::{EnergyLedger, EnergyParams, EventClass};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::ops::Range;
+
+/// The full-scan reference NoC simulator (see module docs).
+pub struct ReferenceNocSim {
+    topo: Topology,
+    next_hop: Vec<Vec<NodeId>>,
+    switches: Vec<CmRouter>,
+    /// Per-node local-port index (== neighbor count).
+    local_port: Vec<usize>,
+    /// Injection staging: flits that did not fit the local FIFO yet.
+    pending: Vec<VecDeque<Flit>>,
+    delivered: Vec<Delivered>,
+    cycle: u64,
+    next_id: u64,
+    timestep: u32,
+    ledger: EnergyLedger,
+    energy: EnergyParams,
+    in_flight: u64,
+}
+
+impl ReferenceNocSim {
+    /// Build a simulator over `topo` with per-port FIFO depth `depth`.
+    pub fn new(topo: Topology, depth: usize, energy: EnergyParams) -> Self {
+        let next_hop = topo.next_hop_table();
+        let mut switches = Vec::with_capacity(topo.len());
+        let mut local_port = Vec::with_capacity(topo.len());
+        for n in 0..topo.len() {
+            let mut ports = topo.neighbors(n).to_vec();
+            local_port.push(ports.len());
+            ports.push(n); // local port loops to self
+            switches.push(CmRouter::new(n, &ports, depth));
+        }
+        let n = topo.len();
+        ReferenceNocSim {
+            topo,
+            next_hop,
+            switches,
+            local_port,
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            delivered: Vec::new(),
+            cycle: 0,
+            next_id: 0,
+            timestep: 0,
+            ledger: EnergyLedger::new(),
+            energy,
+            in_flight: 0,
+        }
+    }
+
+    /// The topology being simulated.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Current cycle.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Flits injected but not yet delivered.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+
+    /// Advance the global timestep (propagates to every switch's link
+    /// controller).
+    pub fn set_timestep(&mut self, ts: u32) {
+        self.timestep = ts;
+        for s in &mut self.switches {
+            s.timestep = ts;
+        }
+    }
+
+    /// Clock-gate a specific router node (failure/power experiments).
+    pub fn set_node_enabled(&mut self, node: NodeId, on: bool) {
+        self.switches[node].enabled = on;
+    }
+
+    /// Inject spikes from `src_core` (domain-local core id) to `dest`.
+    /// Returns the injected flit-id range (same contract as the
+    /// optimized simulator, so both can be driven interchangeably).
+    pub fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> Range<u64> {
+        let src_node = self.topo.core_node(src_core);
+        let (mode, dsts): (TxMode, Vec<usize>) = match dest {
+            Dest::Core(c) => (TxMode::P2p, vec![*c]),
+            Dest::Cores(cs) => (TxMode::Broadcast, cs.clone()),
+            Dest::Merge(c) => (TxMode::Merge, vec![*c]),
+        };
+        let first = self.next_id;
+        for dst in dsts {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.pending[src_node].push_back(Flit {
+                id,
+                src_core,
+                dst_core: dst,
+                mode,
+                axon,
+                timestep: self.timestep,
+                injected_at: self.cycle,
+                hops: 0,
+                at: src_node,
+            });
+            self.in_flight += 1;
+        }
+        first..self.next_id
+    }
+
+    /// One simulation cycle: injection → arbitration → link movement →
+    /// ejection, scanning every switch.
+    pub fn step(&mut self) {
+        self.cycle += 1;
+
+        // 1. Injection: move pending flits into local input FIFOs.
+        for n in 0..self.switches.len() {
+            let lp = self.local_port[n];
+            while self.pending[n].front().is_some() {
+                if self.switches[n].can_accept(lp) {
+                    let f = self.pending[n].pop_front().unwrap();
+                    self.switches[n].accept(lp, f);
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // 2. Arbitration at every switch.
+        for n in 0..self.switches.len() {
+            let nh = &self.next_hop;
+            let topo = &self.topo;
+            let lp = self.local_port[n];
+            let route = |f: &Flit| -> Option<usize> {
+                let dst_node = topo.core_node(f.dst_core);
+                if dst_node == n {
+                    return Some(lp);
+                }
+                let next = nh[n][f.dst_core];
+                if next == usize::MAX {
+                    return None;
+                }
+                topo.neighbors(n).iter().position(|&x| x == next)
+            };
+            self.switches[n].arbitrate(route);
+        }
+
+        // 3. Link stage: move output heads to neighbor inputs (1 per link
+        //    direction per cycle); eject local-port heads.
+        for n in 0..self.switches.len() {
+            let lp = self.local_port[n];
+            if self.switches[n].out_occupancy() == 0 {
+                continue;
+            }
+            // Ejection.
+            if let Some(f) = self.switches[n].out_pop(lp) {
+                self.in_flight -= 1;
+                self.delivered.push(Delivered {
+                    latency: self.cycle - f.injected_at,
+                    flit: f,
+                });
+            }
+            let n_ports = self.topo.neighbors(n).len();
+            for p in 0..n_ports {
+                if self.switches[n].out_head(p).is_none() {
+                    continue;
+                }
+                let nb = self.topo.neighbors(n)[p];
+                let back_port = self.switches[nb]
+                    .port_to(n)
+                    .expect("links are symmetric");
+                if self.switches[nb].can_accept(back_port) {
+                    let mut f = self.switches[n].out_pop(p).unwrap();
+                    f.at = nb;
+                    let nb_is_l2 = matches!(self.topo.kind(nb), NodeKind::RouterL2(_));
+                    let n_is_l2 = matches!(self.topo.kind(n), NodeKind::RouterL2(_));
+                    self.ledger.add1(if nb_is_l2 || n_is_l2 {
+                        EventClass::LinkL2
+                    } else {
+                        EventClass::LinkTraversal
+                    });
+                    if self.topo.kind(nb).is_router() {
+                        f.hops += 1;
+                        self.ledger.add1(if nb_is_l2 {
+                            EventClass::HopL2
+                        } else {
+                            match f.mode {
+                                TxMode::P2p => EventClass::HopP2p,
+                                TxMode::Broadcast => EventClass::HopBroadcast,
+                                TxMode::Merge => EventClass::HopMerge,
+                            }
+                        });
+                    }
+                    self.switches[nb].accept(back_port, f);
+                }
+            }
+        }
+    }
+
+    /// Run until all injected flits are delivered, or error after
+    /// `max_cycles` without full drain (no fixed-point fast path — the
+    /// reference spins the whole budget).
+    pub fn run_until_drained(&mut self, max_cycles: u64) -> Result<()> {
+        let start = self.cycle;
+        while self.in_flight > 0 {
+            if self.cycle - start >= max_cycles {
+                return Err(Error::Noc(format!(
+                    "NoC not drained after {max_cycles} cycles ({} in flight)",
+                    self.in_flight
+                )));
+            }
+            self.step();
+        }
+        Ok(())
+    }
+
+    /// Delivered flits so far (always the full trace).
+    pub fn delivered(&self) -> &[Delivered] {
+        &self.delivered
+    }
+
+    /// Aggregate statistics — O(delivered + switches) per call: re-walks
+    /// the delivery log and every switch (the cost the optimized
+    /// simulator folds away).
+    pub fn stats(&self) -> SimStats {
+        let n = self.delivered.len() as f64;
+        let (mut lat, mut hops, mut maxl) = (0.0, 0.0, 0u64);
+        for d in &self.delivered {
+            lat += d.latency as f64;
+            hops += d.flit.hops as f64;
+            maxl = maxl.max(d.latency);
+        }
+        let (mut bp, mut ts) = (0u64, 0u64);
+        for s in &self.switches {
+            bp += s.stalls_backpressure;
+            ts += s.stalls_timestep;
+        }
+        SimStats {
+            cycles: self.cycle,
+            delivered: self.delivered.len() as u64,
+            avg_latency: if n > 0.0 { lat / n } else { 0.0 },
+            avg_hops: if n > 0.0 { hops / n } else { 0.0 },
+            max_latency: maxl,
+            throughput: if self.cycle > 0 {
+                n / self.cycle as f64
+            } else {
+                0.0
+            },
+            stalls_backpressure: bp,
+            stalls_timestep: ts,
+        }
+    }
+
+    /// Non-destructive ledger assembly (formats static keys per call —
+    /// the allocation churn the optimized path precomputes away).
+    pub fn snapshot_ledger(&self) -> EnergyLedger {
+        let mut ledger = self.ledger.clone();
+        for s in &self.switches {
+            match self.topo.kind(s.node) {
+                NodeKind::Core(_) => {}
+                NodeKind::RouterL1(_) => {
+                    let active = s.active_cycles.min(self.cycle);
+                    ledger.add_static(
+                        &format!("router{}", s.node),
+                        active,
+                        self.cycle - active,
+                        self.energy.p_router_active,
+                        self.energy.p_router_gated,
+                    );
+                }
+                NodeKind::RouterL2(_) => {
+                    let active = s.active_cycles.min(self.cycle);
+                    ledger.add_static(
+                        &format!("router-l2-{}", s.node),
+                        active,
+                        self.cycle - active,
+                        self.energy.p_router_l2_active,
+                        self.energy.p_router_l2_gated,
+                    );
+                }
+            }
+        }
+        ledger
+    }
+
+    /// Dynamic-only energy (pJ) of NoC activity so far.
+    pub fn dynamic_pj(&self) -> f64 {
+        self.ledger.dynamic_pj(&self.energy)
+    }
+
+    /// Dynamic energy per delivered flit-hop (pJ/hop).
+    pub fn pj_per_hop(&self) -> Option<f64> {
+        let hops: u64 = self.delivered.iter().map(|d| d.flit.hops as u64).sum();
+        (hops > 0).then(|| {
+            let hop_pj = self.ledger.count(EventClass::HopP2p) as f64 * self.energy.e_hop_p2p
+                + self.ledger.count(EventClass::HopBroadcast) as f64 * self.energy.e_hop_bcast
+                + self.ledger.count(EventClass::HopMerge) as f64 * self.energy.e_hop_merge
+                + self.ledger.count(EventClass::HopL2) as f64 * self.energy.e_hop_l2;
+            hop_pj / hops as f64
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_delivers_p2p_on_fullerene() {
+        let mut s = ReferenceNocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let ids = s.inject(0, &Dest::Core(13), 7);
+        assert_eq!((ids.start, ids.end), (0, 1));
+        s.run_until_drained(1000).unwrap();
+        let d = &s.delivered()[0];
+        assert_eq!(d.flit.dst_core, 13);
+        assert!(d.flit.hops >= 1);
+        assert_eq!(s.stats().delivered, 1);
+    }
+}

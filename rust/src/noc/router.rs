@@ -52,6 +52,11 @@ pub struct CmRouter {
     in_buf: Vec<VecDeque<Flit>>,
     out_buf: Vec<VecDeque<Flit>>,
     depth: usize,
+    /// Total flits across input FIFOs (kept incrementally so the
+    /// simulator's active-switch scheduling reads occupancy in O(1)).
+    in_occ: usize,
+    /// Total flits across output FIFOs.
+    out_occ: usize,
     /// Reconfigurable connection matrix: `allow[in][out]`.
     allow: Vec<Vec<bool>>,
     /// Round-robin arbiter cursor (per output port).
@@ -83,6 +88,8 @@ impl CmRouter {
             in_buf: (0..p).map(|_| VecDeque::with_capacity(depth)).collect(),
             out_buf: (0..p).map(|_| VecDeque::with_capacity(depth)).collect(),
             depth,
+            in_occ: 0,
+            out_occ: 0,
             allow: vec![vec![true; p]; p],
             rr: vec![0; p],
             timestep: 0,
@@ -133,7 +140,13 @@ impl CmRouter {
             return false;
         }
         self.in_buf[port].push_back(flit);
+        self.in_occ += 1;
         true
+    }
+
+    /// Peek the head of an input FIFO.
+    pub fn in_head(&self, port: usize) -> Option<&Flit> {
+        self.in_buf[port].front()
     }
 
     /// Peek the head of an output FIFO.
@@ -143,17 +156,21 @@ impl CmRouter {
 
     /// Pop the head of an output FIFO (link stage moved it).
     pub fn out_pop(&mut self, port: usize) -> Option<Flit> {
-        self.out_buf[port].pop_front()
+        let f = self.out_buf[port].pop_front();
+        if f.is_some() {
+            self.out_occ -= 1;
+        }
+        f
     }
 
-    /// Occupancy across all input FIFOs.
+    /// Occupancy across all input FIFOs (O(1): kept incrementally).
     pub fn in_occupancy(&self) -> usize {
-        self.in_buf.iter().map(VecDeque::len).sum()
+        self.in_occ
     }
 
-    /// Occupancy across all output FIFOs.
+    /// Occupancy across all output FIFOs (O(1): kept incrementally).
     pub fn out_occupancy(&self) -> usize {
-        self.out_buf.iter().map(VecDeque::len).sum()
+        self.out_occ
     }
 
     /// One arbitration cycle: for each output port pick (round-robin over
@@ -165,7 +182,7 @@ impl CmRouter {
         }
         // Hot-path early-out: an idle switch does no work (and allocates
         // nothing) this cycle.
-        if self.in_buf.iter().all(VecDeque::is_empty) {
+        if self.in_occ == 0 {
             return 0;
         }
         let p = self.ports.len();
@@ -212,7 +229,9 @@ impl CmRouter {
             }
             if let Some(i) = granted {
                 let flit = self.in_buf[i].pop_front().expect("head exists");
+                self.in_occ -= 1;
                 self.out_buf[out].push_back(flit);
+                self.out_occ += 1;
                 want[i] = None;
                 self.rr[out] = (i + 1) % p;
                 self.switched += 1;
@@ -323,6 +342,21 @@ mod tests {
         r.accept(0, flit(1, 0, 0));
         assert_eq!(r.arbitrate(|_| Some(0)), 0);
         assert_eq!(r.switched, 0);
+    }
+
+    #[test]
+    fn occupancy_counters_track_fifo_contents() {
+        let mut r = CmRouter::new(0, &[10, 11], 4);
+        assert_eq!((r.in_occupancy(), r.out_occupancy()), (0, 0));
+        r.accept(0, flit(1, 0, 0));
+        r.accept(1, flit(2, 0, 0));
+        assert_eq!((r.in_occupancy(), r.out_occupancy()), (2, 0));
+        r.arbitrate(|_| Some(0));
+        assert_eq!(r.in_occupancy() + r.out_occupancy(), 2);
+        while r.out_pop(0).is_some() {}
+        r.arbitrate(|_| Some(0));
+        r.out_pop(0);
+        assert_eq!((r.in_occupancy(), r.out_occupancy()), (0, 0));
     }
 
     #[test]

@@ -1,7 +1,28 @@
-//! Cycle-driven NoC simulator: one [`CmRouter`] switch per topology node
-//! (routers *and* core NoC interfaces), shortest-path routing from the
-//! precomputed next-hop table, bounded FIFOs with backpressure, and
-//! energy/latency accounting (Fig. 5c).
+//! Event-driven cycle-level NoC simulator: one [`CmRouter`] switch per
+//! topology node (routers *and* core NoC interfaces), shortest-path
+//! routing from a precomputed per-port table, bounded FIFOs with
+//! backpressure, and energy/latency accounting (Fig. 5c).
+//!
+//! **Scheduling is activity-proportional**: the simulator keeps a sorted
+//! worklist of *active* switches (those holding flits or pending
+//! injections), maintained incrementally as flits enqueue/dequeue, and
+//! [`NocSim::step`] visits only that list — an idle fabric costs ~zero
+//! per cycle, so simulated time tracks traffic, not fabric size. The
+//! per-flit route decision is a single indexed load
+//! ([`Topology::out_port_table`]) and the link stage delivers through the
+//! precomputed [`Topology::back_port_table`] instead of searching for the
+//! neighbor's back-port. The pre-optimization full-scan simulator is
+//! retained verbatim as [`super::reference::ReferenceNocSim`]; the
+//! equivalence suite (`tests/equivalence_noc.rs`) asserts this simulator
+//! is bit-identical to it (stats, ledgers, traces) across topologies and
+//! load regimes.
+//!
+//! **Accounting is streaming**: latency/hop/stall aggregates fold at
+//! delivery time (so [`NocSim::stats`] is O(1)) and the per-flit trace is
+//! a [`TraceMode`] the caller picks — `Full` for tests/oracles, a
+//! fixed-size `Ring` for debugging, `Off` for long-lived serving
+//! sessions, which keep only the ledger and no longer grow without
+//! bound.
 //!
 //! Each node's switch gets one port per neighbor plus a **local port**:
 //! injection enqueues into the local input FIFO (arbitrating with relay
@@ -12,10 +33,11 @@
 
 use super::packet::{Dest, Flit, TxMode};
 use super::router::CmRouter;
-use super::topology::{NodeId, NodeKind, Topology};
+use super::topology::{NodeId, NodeKind, Topology, NO_PORT};
 use crate::energy::{EnergyLedger, EnergyParams, EventClass};
 use crate::{Error, Result};
 use std::collections::VecDeque;
+use std::ops::Range;
 
 /// A delivered flit with measured latency.
 #[derive(Debug, Clone)]
@@ -24,6 +46,22 @@ pub struct Delivered {
     pub flit: Flit,
     /// Cycles from injection to ejection.
     pub latency: u64,
+}
+
+/// What per-flit delivery record the simulator keeps. Aggregate
+/// statistics ([`NocSim::stats`], [`NocSim::pj_per_hop`]) are exact in
+/// every mode — the trace only affects [`NocSim::delivered`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Keep every delivery (unbounded — tests and oracles).
+    Full,
+    /// Keep only the most recent `n` deliveries in a fixed-size ring
+    /// (bounded memory; entries are in ring order, not delivery order).
+    Ring(usize),
+    /// Keep no per-flit records (long-lived serving sessions: the ledger
+    /// and streaming accumulators are the only state, fixing unbounded
+    /// memory growth).
+    Off,
 }
 
 /// Aggregate simulation statistics.
@@ -47,16 +85,59 @@ pub struct SimStats {
     pub stalls_timestep: u64,
 }
 
-/// The NoC simulator.
+/// The event-driven NoC simulator.
 pub struct NocSim {
     topo: Topology,
-    next_hop: Vec<Vec<NodeId>>,
+    /// `(node, dst core) → output port` (local port = neighbor count,
+    /// [`NO_PORT`] = unreachable), replacing the per-flit
+    /// `neighbors().position()` scan.
+    out_port: Vec<Vec<u16>>,
+    /// `(node, port) → receiving port at the neighbor` (link stage).
+    back_port: Vec<Vec<u16>>,
     switches: Vec<CmRouter>,
     /// Per-node local-port index (== neighbor count).
     local_port: Vec<usize>,
     /// Injection staging: flits that did not fit the local FIFO yet.
     pending: Vec<VecDeque<Flit>>,
-    delivered: Vec<Delivered>,
+    // --- active-switch worklist ----------------------------------------
+    /// Sorted ids of switches with any work (pending, input or output
+    /// flits). `step` visits exactly this list.
+    active: Vec<NodeId>,
+    /// Nodes activated since the last `step` merge (kept separate so
+    /// activation during a step never perturbs the in-flight iteration).
+    incoming: Vec<NodeId>,
+    is_active: Vec<bool>,
+    /// Cumulative switch visits across all cycles (for the idle-fabric
+    /// zero-work regression test).
+    visits: u64,
+    /// Whether the last `step` moved any flit (fixed-point detection).
+    progress: bool,
+    // --- streaming delivery accounting ---------------------------------
+    delivered_n: u64,
+    lat_sum: f64,
+    /// Total router hops over delivered flits. `avg_hops` derives from
+    /// this exactly: integer hop sums stay far below 2^53, so
+    /// `hop_total as f64` is bit-identical to the reference's
+    /// sequential f64 accumulation.
+    hop_total: u64,
+    max_latency: u64,
+    stalls_bp: u64,
+    stalls_ts: u64,
+    trace_mode: TraceMode,
+    trace: Vec<Delivered>,
+    /// Ring-mode write cursor.
+    trace_next: usize,
+    /// When set, ejections also stage `(dst_core, axon)` pairs for the
+    /// SoC to drain ([`NocSim::drain_ejected`]) — functional delivery
+    /// decoupled from the trace.
+    collect_ejected: bool,
+    ejected: Vec<(usize, u32)>,
+    // --- precomputed per-node lookups -----------------------------------
+    is_l2: Vec<bool>,
+    is_router: Vec<bool>,
+    /// Static-power ledger keys ("router{n}" / "router-l2-{n}"; empty for
+    /// cores), built once so snapshots stop `format!`-ing per switch.
+    static_keys: Vec<String>,
     cycle: u64,
     next_id: u64,
     timestep: u32,
@@ -68,23 +149,53 @@ pub struct NocSim {
 impl NocSim {
     /// Build a simulator over `topo` with per-port FIFO depth `depth`.
     pub fn new(topo: Topology, depth: usize, energy: EnergyParams) -> Self {
-        let next_hop = topo.next_hop_table();
+        let out_port = topo.out_port_table();
+        let back_port = topo.back_port_table();
         let mut switches = Vec::with_capacity(topo.len());
         let mut local_port = Vec::with_capacity(topo.len());
+        let mut is_l2 = Vec::with_capacity(topo.len());
+        let mut is_router = Vec::with_capacity(topo.len());
+        let mut static_keys = Vec::with_capacity(topo.len());
         for n in 0..topo.len() {
             let mut ports = topo.neighbors(n).to_vec();
             local_port.push(ports.len());
             ports.push(n); // local port loops to self
             switches.push(CmRouter::new(n, &ports, depth));
+            is_l2.push(matches!(topo.kind(n), NodeKind::RouterL2(_)));
+            is_router.push(topo.kind(n).is_router());
+            static_keys.push(match topo.kind(n) {
+                NodeKind::Core(_) => String::new(),
+                NodeKind::RouterL1(_) => format!("router{n}"),
+                NodeKind::RouterL2(_) => format!("router-l2-{n}"),
+            });
         }
         let n = topo.len();
         NocSim {
             topo,
-            next_hop,
+            out_port,
+            back_port,
             switches,
             local_port,
             pending: (0..n).map(|_| VecDeque::new()).collect(),
-            delivered: Vec::new(),
+            active: Vec::with_capacity(n),
+            incoming: Vec::with_capacity(n),
+            is_active: vec![false; n],
+            visits: 0,
+            progress: false,
+            delivered_n: 0,
+            lat_sum: 0.0,
+            hop_total: 0,
+            max_latency: 0,
+            stalls_bp: 0,
+            stalls_ts: 0,
+            trace_mode: TraceMode::Full,
+            trace: Vec::new(),
+            trace_next: 0,
+            collect_ejected: false,
+            ejected: Vec::new(),
+            is_l2,
+            is_router,
+            static_keys,
             cycle: 0,
             next_id: 0,
             timestep: 0,
@@ -109,6 +220,36 @@ impl NocSim {
         self.in_flight
     }
 
+    /// Select what per-flit trace the simulator keeps (only valid on a
+    /// drained fabric; the default is [`TraceMode::Full`]).
+    pub fn set_trace_mode(&mut self, mode: TraceMode) {
+        debug_assert_eq!(self.in_flight, 0, "trace mode change on a busy fabric");
+        self.trace_mode = mode;
+        self.trace.clear();
+        self.trace_next = 0;
+    }
+
+    /// Enable/disable ejection staging: every delivery also pushes its
+    /// `(dst_core, axon)` payload into a buffer the caller drains with
+    /// [`NocSim::drain_ejected`]. This is how the SoC consumes deliveries
+    /// without keeping (or rescanning) a full trace.
+    pub fn set_collect_ejected(&mut self, on: bool) {
+        self.collect_ejected = on;
+    }
+
+    /// Drain the staged `(dst_core, axon)` ejections in delivery order
+    /// (the staging buffer is retained, so steady-state serving allocates
+    /// nothing here).
+    pub fn drain_ejected(&mut self) -> std::vec::Drain<'_, (usize, u32)> {
+        self.ejected.drain(..)
+    }
+
+    /// Cumulative active-switch visits across all `step` calls: a drained
+    /// idle fabric does no per-switch work, so this counter freezes.
+    pub fn switch_visits(&self) -> u64 {
+        self.visits
+    }
+
     /// Advance the global timestep (propagates to every switch's link
     /// controller).
     pub fn set_timestep(&mut self, ts: u32) {
@@ -123,18 +264,30 @@ impl NocSim {
         self.switches[node].enabled = on;
     }
 
+    /// Put `n` on the worklist for the next step (no-op when already
+    /// listed).
+    #[inline]
+    fn activate(&mut self, n: NodeId) {
+        if !self.is_active[n] {
+            self.is_active[n] = true;
+            self.incoming.push(n);
+        }
+    }
+
     /// Inject spikes from `src_core` (domain-local core id) to `dest`.
     /// Broadcast destinations are split into per-destination copies
-    /// carrying the cheap broadcast energy class. Returns flit ids.
-    pub fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> Vec<u64> {
+    /// carrying the cheap broadcast energy class. Allocation-free: the
+    /// destination list is borrowed and the returned flit ids are the
+    /// consecutive range `first..last+1`.
+    pub fn inject(&mut self, src_core: usize, dest: &Dest, axon: u32) -> Range<u64> {
         let src_node = self.topo.core_node(src_core);
-        let (mode, dsts): (TxMode, Vec<usize>) = match dest {
-            Dest::Core(c) => (TxMode::P2p, vec![*c]),
-            Dest::Cores(cs) => (TxMode::Broadcast, cs.clone()),
-            Dest::Merge(c) => (TxMode::Merge, vec![*c]),
+        let (mode, dsts): (TxMode, &[usize]) = match dest {
+            Dest::Core(c) => (TxMode::P2p, std::slice::from_ref(c)),
+            Dest::Cores(cs) => (TxMode::Broadcast, cs),
+            Dest::Merge(c) => (TxMode::Merge, std::slice::from_ref(c)),
         };
-        let mut ids = Vec::with_capacity(dsts.len());
-        for dst in dsts {
+        let first = self.next_id;
+        for &dst in dsts {
             let id = self.next_id;
             self.next_id += 1;
             self.pending[src_node].push_back(Flit {
@@ -149,90 +302,137 @@ impl NocSim {
                 at: src_node,
             });
             self.in_flight += 1;
-            ids.push(id);
         }
-        ids
+        if !dsts.is_empty() {
+            self.activate(src_node);
+        }
+        first..self.next_id
+    }
+
+    /// Fold one delivery into the streaming accumulators (+ trace/staging
+    /// per the configured modes). Order matches the ejection order, so
+    /// the f64 sums are bit-identical to the reference's stats walk.
+    fn record_delivery(&mut self, f: Flit) {
+        let latency = self.cycle - f.injected_at;
+        self.delivered_n += 1;
+        self.lat_sum += latency as f64;
+        self.hop_total += f.hops as u64;
+        self.max_latency = self.max_latency.max(latency);
+        if self.collect_ejected {
+            self.ejected.push((f.dst_core, f.axon));
+        }
+        match self.trace_mode {
+            TraceMode::Full => self.trace.push(Delivered { latency, flit: f }),
+            TraceMode::Ring(cap) => {
+                if cap > 0 {
+                    if self.trace.len() < cap {
+                        self.trace.push(Delivered { latency, flit: f });
+                    } else {
+                        self.trace[self.trace_next] = Delivered { latency, flit: f };
+                    }
+                    self.trace_next = (self.trace_next + 1) % cap;
+                }
+            }
+            TraceMode::Off => {}
+        }
     }
 
     /// One simulation cycle: injection → arbitration → link movement →
-    /// ejection.
+    /// ejection, visiting only the active switches (in ascending node
+    /// order, matching the reference's full scan).
     pub fn step(&mut self) {
         self.cycle += 1;
+        self.progress = false;
+        if !self.incoming.is_empty() {
+            self.active.append(&mut self.incoming);
+            self.active.sort_unstable();
+        }
+        self.visits += self.active.len() as u64;
+        // Detach the worklist for the duration of the step: stages borrow
+        // `self` freely while iterating, and it is never modified mid-step
+        // (new activations land in `incoming`, merged next cycle — a
+        // switch receiving its first flit this cycle has nothing else to
+        // do this cycle anyway).
+        let active = std::mem::take(&mut self.active);
 
         // 1. Injection: move pending flits into local input FIFOs.
-        for n in 0..self.switches.len() {
+        for &n in &active {
+            if self.pending[n].is_empty() {
+                continue;
+            }
             let lp = self.local_port[n];
             while self.pending[n].front().is_some() {
                 if self.switches[n].can_accept(lp) {
                     let f = self.pending[n].pop_front().unwrap();
                     self.switches[n].accept(lp, f);
+                    self.progress = true;
                 } else {
                     break;
                 }
             }
         }
 
-        // 2. Arbitration at every switch.
-        for n in 0..self.switches.len() {
-            let nh = &self.next_hop;
-            let topo = &self.topo;
-            let lp = self.local_port[n];
-            // Copy ports mapping out of the borrow.
-            let route = |f: &Flit| -> Option<usize> {
-                let dst_node = topo.core_node(f.dst_core);
-                if dst_node == n {
-                    return Some(lp);
-                }
-                let next = nh[n][f.dst_core];
-                if next == usize::MAX {
-                    return None;
-                }
-                topo.neighbors(n).iter().position(|&x| x == next)
+        // 2. Arbitration at every active switch; stall totals fold into
+        //    the simulator-level accumulators so `stats` stays O(1).
+        for &n in &active {
+            if self.switches[n].in_occupancy() == 0 {
+                continue;
+            }
+            let (bp0, ts0) = {
+                let s = &self.switches[n];
+                (s.stalls_backpressure, s.stalls_timestep)
             };
-            self.switches[n].arbitrate(route);
+            let row: &[u16] = &self.out_port[n];
+            let moved = self.switches[n].arbitrate(|f| {
+                let p = row[f.dst_core];
+                if p == NO_PORT {
+                    None
+                } else {
+                    Some(p as usize)
+                }
+            });
+            if moved > 0 {
+                self.progress = true;
+            }
+            let s = &self.switches[n];
+            self.stalls_bp += s.stalls_backpressure - bp0;
+            self.stalls_ts += s.stalls_timestep - ts0;
         }
 
         // 3. Link stage: move output heads to neighbor inputs (1 per link
         //    direction per cycle); eject local-port heads.
-        for n in 0..self.switches.len() {
-            let lp = self.local_port[n];
-            // Hot-path early-out: nothing queued on any output.
+        for &n in &active {
             if self.switches[n].out_occupancy() == 0 {
                 continue;
             }
+            let lp = self.local_port[n];
             // Ejection.
             if let Some(f) = self.switches[n].out_pop(lp) {
                 self.in_flight -= 1;
-                self.delivered.push(Delivered {
-                    latency: self.cycle - f.injected_at,
-                    flit: f,
-                });
+                self.progress = true;
+                self.record_delivery(f);
             }
-            // Physical links (allocation-free: borrow the adjacency slice
-            // through the topology field, disjoint from `switches`).
-            let n_ports = self.topo.neighbors(n).len();
-            for p in 0..n_ports {
+            // Physical links: the receiving port is precomputed, so no
+            // neighbor-list search per flit.
+            for p in 0..lp {
                 if self.switches[n].out_head(p).is_none() {
                     continue;
                 }
                 let nb = self.topo.neighbors(n)[p];
-                let back_port = self.switches[nb]
-                    .port_to(n)
-                    .expect("links are symmetric");
-                if self.switches[nb].can_accept(back_port) {
+                let back = self.back_port[n][p] as usize;
+                if self.switches[nb].can_accept(back) {
                     let mut f = self.switches[n].out_pop(p).unwrap();
                     f.at = nb;
                     // Links with an L2 endpoint are the long scale-up
                     // wires; arrival at an L2 router charges the wider
                     // crossbar's hop energy instead of the mode class.
-                    let nb_is_l2 = matches!(self.topo.kind(nb), NodeKind::RouterL2(_));
-                    let n_is_l2 = matches!(self.topo.kind(n), NodeKind::RouterL2(_));
-                    self.ledger.add1(if nb_is_l2 || n_is_l2 {
+                    let nb_is_l2 = self.is_l2[nb];
+                    self.ledger.add1(if nb_is_l2 || self.is_l2[n] {
                         EventClass::LinkL2
                     } else {
                         EventClass::LinkTraversal
                     });
-                    if self.topo.kind(nb).is_router() {
+                    if self.is_router[nb] {
                         f.hops += 1;
                         self.ledger.add1(if nb_is_l2 {
                             EventClass::HopL2
@@ -244,14 +444,36 @@ impl NocSim {
                             }
                         });
                     }
-                    self.switches[nb].accept(back_port, f);
+                    self.switches[nb].accept(back, f);
+                    self.progress = true;
+                    self.activate(nb);
                 }
             }
         }
+
+        // 4. Re-attach the worklist, retiring switches with no remaining
+        //    work: the idle fabric does no per-switch work next cycle.
+        self.active = active;
+        let pending = &self.pending;
+        let switches = &self.switches;
+        let is_active = &mut self.is_active;
+        self.active.retain(|&n| {
+            let busy = !pending[n].is_empty()
+                || switches[n].in_occupancy() > 0
+                || switches[n].out_occupancy() > 0;
+            if !busy {
+                is_active[n] = false;
+            }
+            busy
+        });
     }
 
-    /// Run until all injected flits are delivered, or error after
-    /// `max_cycles` without full drain (deadlock/livelock detection).
+    /// Run until all injected flits are delivered. Errors after
+    /// `max_cycles` without full drain — or **immediately** when a cycle
+    /// makes no progress at all: the simulator is deterministic and
+    /// nothing changes between `step`s here, so a zero-progress cycle is
+    /// a fixed point (timestep desync, gated routers or a backpressure
+    /// deadlock) and spinning to `max_cycles` would only burn host time.
     pub fn run_until_drained(&mut self, max_cycles: u64) -> Result<()> {
         let start = self.cycle;
         while self.in_flight > 0 {
@@ -262,42 +484,59 @@ impl NocSim {
                 )));
             }
             self.step();
+            if !self.progress && self.in_flight > 0 {
+                return Err(Error::Noc(format!(
+                    "NoC not drained: fixed point after {} cycles with {} in \
+                     flight ({})",
+                    self.cycle - start,
+                    self.in_flight,
+                    self.stall_reason()
+                )));
+            }
         }
         Ok(())
     }
 
-    /// Delivered flits so far.
-    pub fn delivered(&self) -> &[Delivered] {
-        &self.delivered
+    /// Classify why the active set cannot make progress (error reporting
+    /// only — runs on the cold path).
+    fn stall_reason(&self) -> &'static str {
+        for &n in &self.active {
+            let s = &self.switches[n];
+            for p in 0..s.port_count() {
+                if let Some(f) = s.in_head(p) {
+                    if f.timestep != self.timestep {
+                        return "stalled on timestep sync — advance with set_timestep";
+                    }
+                }
+            }
+        }
+        "gated routers or a backpressure deadlock"
     }
 
-    /// Aggregate statistics.
+    /// Per-flit delivery trace under the configured [`TraceMode`]: every
+    /// delivery (`Full`), the most recent ones in ring order (`Ring`), or
+    /// empty (`Off`). Aggregate stats never depend on this.
+    pub fn delivered(&self) -> &[Delivered] {
+        &self.trace
+    }
+
+    /// Aggregate statistics — O(1): folded incrementally at delivery and
+    /// arbitration time, never re-walking switches or the trace.
     pub fn stats(&self) -> SimStats {
-        let n = self.delivered.len() as f64;
-        let (mut lat, mut hops, mut maxl) = (0.0, 0.0, 0u64);
-        for d in &self.delivered {
-            lat += d.latency as f64;
-            hops += d.flit.hops as f64;
-            maxl = maxl.max(d.latency);
-        }
-        let (mut bp, mut ts) = (0u64, 0u64);
-        for s in &self.switches {
-            bp += s.stalls_backpressure;
-            ts += s.stalls_timestep;
-        }
+        let n = self.delivered_n as f64;
         SimStats {
             cycles: self.cycle,
-            delivered: self.delivered.len() as u64,
-            avg_latency: if n > 0.0 { lat / n } else { 0.0 },
-            avg_hops: if n > 0.0 { hops / n } else { 0.0 },
-            max_latency: maxl,
+            delivered: self.delivered_n,
+            avg_latency: if n > 0.0 { self.lat_sum / n } else { 0.0 },
+            avg_hops: if n > 0.0 { self.hop_total as f64 / n } else { 0.0 },
+            max_latency: self.max_latency,
             throughput: if self.cycle > 0 {
                 n / self.cycle as f64
             } else {
                 0.0
             },
-            stalls_backpressure: bp,
-            stalls_timestep: ts,
+            stalls_backpressure: self.stalls_bp,
+            stalls_timestep: self.stalls_ts,
         }
     }
 
@@ -305,33 +544,22 @@ impl NocSim {
     /// ledger plus router static power over the simulated window so far.
     /// Level-2 routers carry their own (larger) static power class. The
     /// simulator state is untouched, so this can back an incremental
-    /// report snapshot mid-run.
+    /// report snapshot mid-run. Ledger keys are precomputed at
+    /// construction — no per-snapshot string formatting.
     pub fn snapshot_ledger(&self) -> EnergyLedger {
         let mut ledger = self.ledger.clone();
         for s in &self.switches {
-            match self.topo.kind(s.node) {
-                NodeKind::Core(_) => {}
-                NodeKind::RouterL1(_) => {
-                    let active = s.active_cycles.min(self.cycle);
-                    ledger.add_static(
-                        &format!("router{}", s.node),
-                        active,
-                        self.cycle - active,
-                        self.energy.p_router_active,
-                        self.energy.p_router_gated,
-                    );
-                }
-                NodeKind::RouterL2(_) => {
-                    let active = s.active_cycles.min(self.cycle);
-                    ledger.add_static(
-                        &format!("router-l2-{}", s.node),
-                        active,
-                        self.cycle - active,
-                        self.energy.p_router_l2_active,
-                        self.energy.p_router_l2_gated,
-                    );
-                }
+            let key = &self.static_keys[s.node];
+            if key.is_empty() {
+                continue; // core NoC interfaces carry no router static power
             }
+            let active = s.active_cycles.min(self.cycle);
+            let (p_active, p_gated) = if self.is_l2[s.node] {
+                (self.energy.p_router_l2_active, self.energy.p_router_l2_gated)
+            } else {
+                (self.energy.p_router_active, self.energy.p_router_gated)
+            };
+            ledger.add_static(key, active, self.cycle - active, p_active, p_gated);
         }
         ledger
     }
@@ -346,16 +574,31 @@ impl NocSim {
     }
 
     /// Reset energy/latency accounting (dynamic ledger, per-switch
-    /// activity counters, delivery log and the cycle counter) so a new
-    /// measurement window starts from zero. Only valid while the fabric
-    /// is drained (no flits in flight).
+    /// activity/stall counters, delivery accumulators/trace and the
+    /// cycle counter) so a new measurement window starts from zero —
+    /// on a reused chip, [`NocSim::stats`] then reports exactly the new
+    /// window (sessions must never see a predecessor's stalls). Only
+    /// valid while the fabric is drained (no flits in flight). The
+    /// [`NocSim::switch_visits`] diagnostic stays lifetime-cumulative.
     pub fn reset_accounting(&mut self) {
         debug_assert_eq!(self.in_flight, 0, "reset_accounting on a busy fabric");
         self.ledger = EnergyLedger::new();
-        self.delivered.clear();
+        self.trace.clear();
+        self.trace_next = 0;
+        self.ejected.clear();
+        self.delivered_n = 0;
+        self.lat_sum = 0.0;
+        self.hop_total = 0;
+        self.max_latency = 0;
+        self.stalls_bp = 0;
+        self.stalls_ts = 0;
         self.cycle = 0;
         for s in &mut self.switches {
             s.active_cycles = 0;
+            s.switched = 0;
+            s.stalls_backpressure = 0;
+            s.stalls_timestep = 0;
+            s.stalls_matrix = 0;
         }
     }
 
@@ -367,7 +610,7 @@ impl NocSim {
     /// Dynamic energy per delivered flit-hop (pJ/hop) — Fig. 5c metric.
     /// Includes level-2 hops when the fabric has them.
     pub fn pj_per_hop(&self) -> Option<f64> {
-        let hops: u64 = self.delivered.iter().map(|d| d.flit.hops as u64).sum();
+        let hops = self.hop_total;
         (hops > 0).then(|| {
             let hop_pj = self.ledger.count(EventClass::HopP2p) as f64 * self.energy.e_hop_p2p
                 + self.ledger.count(EventClass::HopBroadcast) as f64 * self.energy.e_hop_bcast
@@ -461,6 +704,17 @@ mod tests {
     }
 
     #[test]
+    fn timestep_desync_fails_a_drain_fast_with_cause() {
+        let mut s = sim(Topology::fullerene());
+        s.inject(0, &Dest::Core(10), 0);
+        s.set_timestep(5);
+        let err = s.run_until_drained(1_000_000).unwrap_err();
+        assert!(err.to_string().contains("timestep"), "{err}");
+        // Fast-forwarded: nowhere near the cycle budget was burned.
+        assert!(s.cycle() < 100, "spun {} cycles", s.cycle());
+    }
+
+    #[test]
     fn gated_router_detected_as_undrained() {
         let mut s = sim(Topology::ring(6));
         // Gate every router: flits can never move.
@@ -548,5 +802,96 @@ mod tests {
         s.inject(0, &Dest::Core(19), 0);
         s.run_until_drained(1000).unwrap();
         assert_eq!(s.delivered().len(), 1);
+    }
+
+    #[test]
+    fn reset_accounting_starts_a_fresh_stall_window() {
+        let mut s = sim(Topology::fullerene());
+        s.inject(0, &Dest::Core(10), 0);
+        s.set_timestep(1); // desync → stalls accumulate
+        for _ in 0..10 {
+            s.step();
+        }
+        s.set_timestep(0);
+        s.run_until_drained(1000).unwrap();
+        assert!(s.stats().stalls_timestep > 0);
+        s.reset_accounting();
+        let st = s.stats();
+        assert_eq!(st.delivered, 0);
+        assert_eq!(st.cycles, 0);
+        assert_eq!(st.stalls_timestep, 0, "stalls must be per-window");
+        assert_eq!(st.stalls_backpressure, 0);
+    }
+
+    #[test]
+    fn idle_fabric_does_no_per_switch_work() {
+        let mut s = sim(Topology::multi_domain(4));
+        s.inject(0, &Dest::Core(70), 0);
+        s.run_until_drained(10_000).unwrap();
+        let v = s.switch_visits();
+        assert!(v > 0);
+        for _ in 0..1000 {
+            s.step();
+        }
+        assert_eq!(s.switch_visits(), v, "drained fabric still visited switches");
+    }
+
+    #[test]
+    fn trace_ring_bounds_memory_and_keeps_stats_exact() {
+        let run = |mode: TraceMode| {
+            let mut s = sim(Topology::fullerene());
+            s.set_trace_mode(mode);
+            for round in 0..5u32 {
+                for c in 0..20 {
+                    s.inject(c, &Dest::Core((c + 9) % 20), round);
+                }
+            }
+            s.run_until_drained(100_000).unwrap();
+            s
+        };
+        let full = run(TraceMode::Full);
+        let ring = run(TraceMode::Ring(8));
+        let off = run(TraceMode::Off);
+        assert_eq!(full.delivered().len(), 100);
+        assert_eq!(ring.delivered().len(), 8, "ring must stay fixed-size");
+        assert!(off.delivered().is_empty());
+        // Streaming aggregates are exact regardless of trace mode.
+        for other in [&ring, &off] {
+            let (a, b) = (full.stats(), other.stats());
+            assert_eq!(a.delivered, b.delivered);
+            assert_eq!(a.avg_latency.to_bits(), b.avg_latency.to_bits());
+            assert_eq!(a.avg_hops.to_bits(), b.avg_hops.to_bits());
+            assert_eq!(a.max_latency, b.max_latency);
+            assert_eq!(
+                full.pj_per_hop().unwrap().to_bits(),
+                other.pj_per_hop().unwrap().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn ejection_staging_carries_payloads_in_delivery_order() {
+        let mut s = sim(Topology::fullerene());
+        s.set_trace_mode(TraceMode::Off);
+        s.set_collect_ejected(true);
+        s.inject(0, &Dest::Cores(vec![3, 7, 11]), 42);
+        s.run_until_drained(10_000).unwrap();
+        let got: Vec<(usize, u32)> = s.drain_ejected().collect();
+        let mut dsts: Vec<usize> = got.iter().map(|&(d, _)| d).collect();
+        dsts.sort_unstable();
+        assert_eq!(dsts, vec![3, 7, 11]);
+        assert!(got.iter().all(|&(_, a)| a == 42));
+        // Drained: second drain yields nothing.
+        assert_eq!(s.drain_ejected().count(), 0);
+    }
+
+    #[test]
+    fn inject_returns_consecutive_id_range() {
+        let mut s = sim(Topology::fullerene());
+        let a = s.inject(0, &Dest::Core(5), 0);
+        assert_eq!((a.start, a.end), (0, 1));
+        let b = s.inject(1, &Dest::Cores(vec![2, 3, 4]), 0);
+        assert_eq!((b.start, b.end), (1, 4));
+        assert_eq!(s.in_flight(), 4);
     }
 }

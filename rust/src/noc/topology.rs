@@ -14,6 +14,10 @@ use crate::{Error, Result};
 /// Index of a node within a [`Topology`].
 pub type NodeId = usize;
 
+/// Sentinel entry in [`Topology::out_port_table`]: no output port routes
+/// the flit (unreachable destination).
+pub const NO_PORT: u16 = u16::MAX;
+
 /// What a communication node is.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NodeKind {
@@ -229,6 +233,57 @@ impl Topology {
             }
         }
         table
+    }
+
+    /// Precomputed output-port routing table: `table[node][core]` is the
+    /// index of `node`'s output port toward core `core` under the
+    /// [`Topology::next_hop_table`] policy — the simulator's per-flit
+    /// routing becomes a single indexed load instead of a linear
+    /// `neighbors().position()` scan. When `node` *is* that core the entry
+    /// is the **local port** (`neighbors(node).len()`); unreachable pairs
+    /// hold [`NO_PORT`].
+    pub fn out_port_table(&self) -> Vec<Vec<u16>> {
+        let next_hop = self.next_hop_table();
+        let mut table = vec![vec![NO_PORT; self.cores.len()]; self.len()];
+        for n in 0..self.len() {
+            for (ci, &cnode) in self.cores.iter().enumerate() {
+                if n == cnode {
+                    table[n][ci] = self.adj[n].len() as u16;
+                    continue;
+                }
+                let nh = next_hop[n][ci];
+                if nh == usize::MAX {
+                    continue;
+                }
+                let p = self
+                    .adj[n]
+                    .iter()
+                    .position(|&x| x == nh)
+                    .expect("next hop must be a neighbor");
+                table[n][ci] = p as u16;
+            }
+        }
+        table
+    }
+
+    /// Reverse port map: `table[node][port]` is the port index *at the
+    /// neighbor on that port* that points back to `node` — the link stage
+    /// delivers a flit into the right input FIFO without searching the
+    /// neighbor's port list.
+    pub fn back_port_table(&self) -> Vec<Vec<u16>> {
+        (0..self.len())
+            .map(|n| {
+                self.adj[n]
+                    .iter()
+                    .map(|&nb| {
+                        self.adj[nb]
+                            .iter()
+                            .position(|&x| x == n)
+                            .expect("links are symmetric") as u16
+                    })
+                    .collect()
+            })
+            .collect()
     }
 
     /// Validate basic invariants (connected, no isolated cores).
@@ -554,6 +609,44 @@ mod tests {
                     cur = table[cur][ci];
                     hops += 1;
                     assert!(hops <= t.len(), "routing loop from {start} to core {ci}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_port_table_agrees_with_next_hop_table() {
+        for t in [
+            Topology::fullerene(),
+            Topology::mesh2d(4, 5),
+            Topology::ring(20),
+            Topology::multi_domain(2),
+        ] {
+            let nh = t.next_hop_table();
+            let ports = t.out_port_table();
+            for n in 0..t.len() {
+                for (ci, &cnode) in t.cores().iter().enumerate() {
+                    let p = ports[n][ci];
+                    if n == cnode {
+                        assert_eq!(p as usize, t.neighbors(n).len(), "{}: local", t.name);
+                    } else if nh[n][ci] == usize::MAX {
+                        assert_eq!(p, NO_PORT, "{}", t.name);
+                    } else {
+                        assert_eq!(t.neighbors(n)[p as usize], nh[n][ci], "{}", t.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn back_port_table_inverts_every_link() {
+        for t in [Topology::fullerene(), Topology::multi_domain(3)] {
+            let back = t.back_port_table();
+            for n in 0..t.len() {
+                for (p, &nb) in t.neighbors(n).iter().enumerate() {
+                    let q = back[n][p] as usize;
+                    assert_eq!(t.neighbors(nb)[q], n, "{}: {n} port {p}", t.name);
                 }
             }
         }

@@ -3,7 +3,7 @@
 //! Poisson injection process.
 
 use super::packet::Dest;
-use super::sim::NocSim;
+use super::Fabric;
 use crate::util::prng::Rng;
 
 /// A traffic pattern: maps (source core, rng) to a destination.
@@ -80,20 +80,22 @@ impl TrafficGen {
         }
     }
 
-    /// Inject one cycle's worth of traffic into `sim`.
-    pub fn tick(&mut self, sim: &mut NocSim) {
+    /// Inject one cycle's worth of traffic into `sim` (any [`Fabric`]:
+    /// the event-driven simulator or the reference oracle).
+    pub fn tick(&mut self, sim: &mut impl Fabric) {
         for src in 0..self.n_cores {
             let k = self.rng.poisson(self.rate);
             for _ in 0..k {
                 let dest = self.dest_for(src);
                 let axon = self.rng.next_u32() % 1024;
-                self.injected += sim.inject(src, &dest, axon).len() as u64;
+                let ids = sim.inject(src, &dest, axon);
+                self.injected += ids.end - ids.start;
             }
         }
     }
 
     /// Drive `sim` for `cycles` of offered load then drain.
-    pub fn run(&mut self, sim: &mut NocSim, cycles: u64) -> crate::Result<()> {
+    pub fn run(&mut self, sim: &mut impl Fabric, cycles: u64) -> crate::Result<()> {
         for _ in 0..cycles {
             self.tick(sim);
             sim.step();
@@ -107,6 +109,7 @@ mod tests {
     use super::*;
     use crate::energy::EnergyParams;
     use crate::noc::topology::Topology;
+    use crate::noc::NocSim;
 
     #[test]
     fn uniform_load_delivers_everything() {
@@ -132,6 +135,21 @@ mod tests {
             hot > uni,
             "hotspot latency {hot} should exceed uniform {uni}"
         );
+    }
+
+    #[test]
+    fn generator_drives_optimized_and_reference_identically() {
+        use crate::noc::ReferenceNocSim;
+        let mut a = NocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut b = ReferenceNocSim::new(Topology::fullerene(), 4, EnergyParams::nominal());
+        let mut ta = TrafficGen::new(Pattern::Uniform, 0.1, 20, 5);
+        let mut tb = TrafficGen::new(Pattern::Uniform, 0.1, 20, 5);
+        ta.run(&mut a, 100).unwrap();
+        tb.run(&mut b, 100).unwrap();
+        assert_eq!(ta.injected(), tb.injected());
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.delivered, sb.delivered);
+        assert_eq!(sa.avg_latency.to_bits(), sb.avg_latency.to_bits());
     }
 
     #[test]

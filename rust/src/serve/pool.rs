@@ -47,6 +47,9 @@ pub struct SessionOutcome {
     pub report: ChipReport,
     /// Latency/throughput statistics.
     pub stats: SessionStats,
+    /// NoC fabric statistics for exactly this session's window (delivered
+    /// flits, latency/hop aggregates, stall totals).
+    pub noc: crate::noc::SimStats,
     /// Samples that disagreed with the integer reference (0 unless
     /// reference checking is enabled).
     pub mismatches: u64,
@@ -142,11 +145,13 @@ impl SocPool {
                 }
             }
         }
+        let noc = session.noc_stats();
         let closed = session.close();
         Ok(SessionOutcome {
             name: name.to_string(),
             report: closed.report,
             stats: closed.stats,
+            noc,
             mismatches,
             checked,
         })

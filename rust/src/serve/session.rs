@@ -81,6 +81,15 @@ impl Session {
         &self.soc
     }
 
+    /// NoC fabric statistics for this session's accounting window
+    /// (delivered flits, latency/hop aggregates, stall totals). O(1):
+    /// folded incrementally by the event-driven simulator, so polling it
+    /// per push costs nothing — and the session chip keeps no per-flit
+    /// trace, so long-lived sessions hold only this ledger.
+    pub fn noc_stats(&self) -> crate::noc::SimStats {
+        self.soc.noc_stats()
+    }
+
     /// Run one labelled sample through the chip and ledger its latency.
     pub fn push(&mut self, sample: &Sample) -> Result<SampleResult> {
         self.push_inner(sample, true)

@@ -24,7 +24,7 @@ fn prop_noc_p2p_delivers_exactly_once() {
             }
             let axon = r.next_u32() % 512;
             let ids = sim.inject(src, &Dest::Core(dst), axon);
-            expected.insert(ids[0], (dst, axon));
+            expected.insert(ids.start, (dst, axon));
         }
         sim.run_until_drained(100_000).unwrap();
         let delivered = sim.delivered();
@@ -93,8 +93,8 @@ fn prop_flit_conservation_on_every_topology() {
                             .into_iter()
                             .map(|d| if d >= src { d + 1 } else { d })
                             .collect();
-                        injected +=
-                            sim.inject(src, &Dest::Cores(dsts.clone()), src as u32).len() as u64;
+                        let ids = sim.inject(src, &Dest::Cores(dsts.clone()), src as u32);
+                        injected += ids.end - ids.start;
                         for d in dsts {
                             *expected.entry(d).or_insert(0) += 1;
                         }
@@ -103,7 +103,8 @@ fn prop_flit_conservation_on_every_topology() {
                         if dst >= src {
                             dst += 1;
                         }
-                        injected += sim.inject(src, &Dest::Core(dst), src as u32).len() as u64;
+                        let ids = sim.inject(src, &Dest::Core(dst), src as u32);
+                        injected += ids.end - ids.start;
                         *expected.entry(dst).or_insert(0) += 1;
                     }
                 }
