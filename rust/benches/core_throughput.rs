@@ -1,0 +1,92 @@
+//! Core hot-path perf smoke: host-side throughput (wall timesteps/sec)
+//! of the activity-proportional core engine on the shared Fig. 3 core
+//! geometry — a dense every-timestep workload and a sparse duty-cycled
+//! event stream, the latter also on the frozen always-tick
+//! `ReferenceCore` discipline so the run carries a machine-independent
+//! speedup ratio (the second perf-trajectory axis next to
+//! `BENCH_noc.json`).
+//!
+//! Emits `BENCH_core.json` (schema `bench-core-v1`) in the working
+//! directory and gates against a checked-in `BENCH_core.baseline.json`
+//! (working directory, then the repository root), failing the process on
+//! a >30 % regression. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_CORE_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_CORE_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{core_perf, core_perf_check, core_perf_json};
+use fullerene_soc::metrics::Table;
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_CORE_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in ["BENCH_core.baseline.json", "../BENCH_core.baseline.json"] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let perf = core_perf(42, fast);
+
+    let mut t = Table::new(&[
+        "scenario",
+        "timesteps",
+        "ticks",
+        "sops",
+        "busy cycles",
+        "host s",
+        "timesteps/s",
+    ]);
+    for c in &perf.cases {
+        t.push_row(vec![
+            c.name.clone(),
+            c.timesteps.to_string(),
+            c.ticks.to_string(),
+            c.sops.to_string(),
+            c.busy_cycles.to_string(),
+            format!("{:.3}", c.host_s),
+            format!("{:.0}", c.timesteps_per_s),
+        ]);
+    }
+    println!("## bench: core_throughput\n{}", t.render());
+    println!(
+        "sparse-workload speedup (worklist engine vs always-tick reference): {:.1}x",
+        perf.sparse_speedup_vs_reference
+    );
+
+    let out = Path::new("BENCH_core.json");
+    core_perf_json(&perf, "measured")
+        .write_file(out)
+        .expect("write BENCH_core.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_CORE_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_CORE_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => println!("no BENCH_core.baseline.json found; baseline check skipped"),
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = core_perf_check(&perf, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("PERF REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -53,6 +53,13 @@ impl<T: Clone + Default> PingPong<T> {
     }
 
     /// Bulk-fill the shadow bank (counts one write per element).
+    ///
+    /// **Overwrite** semantics: a second fill within the same timestep
+    /// replaces the first. Staging paths that can receive spikes from
+    /// several sources per timestep must use [`Self::merge_shadow`]
+    /// instead; this method is kept for single-writer fills (and for the
+    /// frozen [`crate::core::ReferenceCore`], whose old overwrite bug it
+    /// preserves verbatim).
     pub fn fill_shadow(&mut self, data: &[T]) {
         let shadow = &mut self.banks[1 - self.active];
         for (i, v) in data.iter().enumerate() {
@@ -92,6 +99,27 @@ impl<T: Clone + Default> PingPong<T> {
     }
 }
 
+impl<T: Clone + Default + std::ops::BitOrAssign> PingPong<T> {
+    /// OR-merge `data` into the shadow bank (counts one write per
+    /// element). Unlike [`Self::fill_shadow`] this is **accumulative**
+    /// within a timestep: a core staged by several sources (IDMA input,
+    /// routed spikes, multiple upstream layers) keeps the union of all
+    /// stagings until the bank is swapped in and consumed. The shadow
+    /// bank is guaranteed zeroed at the start of each staging window
+    /// (consume-on-read clears every bank as it drains), so the first
+    /// merge behaves exactly like a fill.
+    pub fn merge_shadow(&mut self, data: &[T]) {
+        let shadow = &mut self.banks[1 - self.active];
+        // Indexing panics on data beyond the bank capacity — the same
+        // contract as `fill_shadow`, so misuse can't silently drop
+        // spikes or skew the write counter.
+        for (i, v) in data.iter().enumerate() {
+            shadow[i] |= v.clone();
+        }
+        self.writes += data.len() as u64;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +141,31 @@ mod tests {
         pp.fill_shadow(&[9]);
         pp.swap();
         assert_eq!(pp.active_bank(), &[9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn merge_shadow_accumulates_within_a_timestep() {
+        let mut pp = PingPong::<u16>::new(4);
+        // Two sources staging into the same timestep: the union survives.
+        pp.merge_shadow(&[0x000F, 0, 0, 0]);
+        pp.merge_shadow(&[0x00F0, 0x0001, 0, 0]);
+        pp.swap();
+        assert_eq!(pp.active_bank(), &[0x00FF, 0x0001, 0, 0]);
+        // fill_shadow (single-writer path) keeps overwrite semantics.
+        pp.clear_active();
+        pp.fill_shadow(&[1, 0, 0, 0]);
+        pp.fill_shadow(&[2, 0, 0, 0]);
+        pp.swap();
+        assert_eq!(pp.active_bank(), &[2, 0, 0, 0]);
+    }
+
+    #[test]
+    fn merge_shadow_short_data_leaves_tail_untouched() {
+        let mut pp = PingPong::<u16>::new(4);
+        pp.merge_shadow(&[0, 0, 0, 0x8000]);
+        pp.merge_shadow(&[3]);
+        pp.swap();
+        assert_eq!(pp.active_bank(), &[3, 0, 0, 0x8000]);
     }
 
     #[test]

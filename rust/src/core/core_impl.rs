@@ -52,10 +52,19 @@ pub struct NeuroCore {
     acc: Vec<i32>,
     touched: Vec<bool>,
     touched_list: Vec<u32>,
+    /// Reusable staging scratch (one spike-word bank), so per-timestep
+    /// staging allocates nothing on the hot path.
+    stage_scratch: Vec<u16>,
+    /// Spike words have been staged since the last consumed timestep —
+    /// the activity signal the SoC worklist schedules ticks from.
+    pending_input: bool,
     ledger: EnergyLedger,
     energy: EnergyParams,
     total_cycles: u64,
     gated_cycles: u64,
+    /// Static-ledger key, precomputed once (the hot `finish_window` path
+    /// must not rebuild it per window).
+    static_label: String,
 }
 
 impl NeuroCore {
@@ -88,10 +97,13 @@ impl NeuroCore {
             acc: vec![0; neurons],
             touched: vec![false; neurons],
             touched_list: Vec::with_capacity(neurons),
+            stage_scratch: vec![0; words],
+            pending_input: false,
             ledger: EnergyLedger::new(),
             energy,
             total_cycles: 0,
             gated_cycles: 0,
+            static_label: format!("core{core_id}"),
         })
     }
 
@@ -128,23 +140,36 @@ impl NeuroCore {
     /// Stage input spikes (axon ids) for the *next* timestep into the
     /// shadow bank of the ping-pong spike cache. Out-of-range axons are an
     /// error at debug level and ignored in release (hardware would drop).
+    ///
+    /// Staging **OR-merges**: a core that receives spikes from several
+    /// sources within one timestep (IDMA input plus routed spikes, or
+    /// several upstream layers) accumulates the union — a second staging
+    /// no longer silently drops the first. The merged bank is consumed
+    /// (and cleared) by the next non-gated [`Self::tick_timestep`].
     pub fn stage_input_spikes(&mut self, axons: &[u32]) {
-        let words = self.regs.spike_words();
-        let mut packed = vec![0u16; words];
-        for &a in axons {
-            let a = a as usize;
-            debug_assert!(a < self.regs.axons, "axon {a} out of range");
-            if a < self.regs.axons {
-                packed[a / super::SPIKE_WORD_BITS] |= 1 << (a % super::SPIKE_WORD_BITS);
-            }
-        }
-        self.spike_cache.fill_shadow(&packed);
+        // Packs into the reusable scratch sized to the highest staged
+        // word, so sparse staging costs O(activity), not O(core width);
+        // the merge leaves words beyond the scratch untouched (zero).
+        super::pack_spikes_into(axons, self.regs.axons, &mut self.stage_scratch);
+        self.spike_cache.merge_shadow(&self.stage_scratch);
+        self.pending_input = true;
     }
 
-    /// Stage a full boolean spike vector for the next timestep.
+    /// Stage a full boolean spike vector for the next timestep
+    /// (OR-merging, like [`Self::stage_input_spikes`]).
     pub fn stage_input_vector(&mut self, spikes: &[bool]) {
         debug_assert!(spikes.len() <= self.regs.axons);
-        self.spike_cache.fill_shadow(&super::pack_spikes(spikes));
+        let n = spikes.len().min(self.regs.axons);
+        super::pack_spike_vector_into(&spikes[..n], &mut self.stage_scratch);
+        self.spike_cache.merge_shadow(&self.stage_scratch);
+        self.pending_input = true;
+    }
+
+    /// True when spike words have been staged since the last consumed
+    /// timestep. The SoC scheduler ticks only cores with pending input —
+    /// an idle core costs zero active cycles.
+    pub fn pending_input(&self) -> bool {
+        self.pending_input
     }
 
     /// Execute one timestep: swap the ping-pong cache, run the pipeline
@@ -158,26 +183,28 @@ impl NeuroCore {
             // integrated by the caller via `finish_window`.
             return TimestepOutput::default();
         }
+        self.pending_input = false;
         self.spike_cache.swap();
 
         // ---- stages 1–3: accumulate -------------------------------------
-        let words: Vec<u16> = self.spike_cache.active_bank().to_vec();
-        // Consume-on-read: a timestep without fresh staging must see an
-        // empty cache, not a replay of two timesteps ago.
-        self.spike_cache.clear_active();
+        // The pipeline reads the active bank by borrow (no per-timestep
+        // copy); disjoint-field borrows keep the SPE/scratch mutable.
         let mut ctx = AccumCtx {
             acc: &mut self.acc,
             touched: &mut self.touched,
             touched_list: &mut self.touched_list,
         };
         let pstats = pipeline::run_accumulation(
-            &words,
+            self.spike_cache.active_bank(),
             self.regs.axons,
             &self.synapses,
             &self.codebook,
             &mut self.spe,
             &mut ctx,
         );
+        // Consume-on-read: a timestep without fresh staging must see an
+        // empty cache, not a replay of two timesteps ago.
+        self.spike_cache.clear_active();
 
         // ---- stage 4: partial neuron update (touched only) ---------------
         self.touched_list.sort_unstable();
@@ -226,26 +253,47 @@ impl NeuroCore {
         self.ledger.add(EventClass::CacheWrite, words);
     }
 
+    /// Charge spike-cache write energy for staging `spikes` spike events,
+    /// packed at [`super::SPIKE_WORD_BITS`] spikes per cache word. The one
+    /// place the pack width enters staging energy accounting — callers
+    /// must not hand-roll the word math (a word-width change would desync
+    /// the ledger).
+    pub fn charge_spike_writes(&mut self, spikes: usize) {
+        self.charge_cache_writes(spikes.div_ceil(super::SPIKE_WORD_BITS) as u64);
+    }
+
     /// Account a window of `window_cycles` wall cycles: the core was
     /// active for its recorded busy cycles and gated for the rest.
+    ///
+    /// Busy cycles beyond the window are **carried into the next window**
+    /// rather than silently truncated, so a busy core's total active
+    /// cycles are conserved across windows however the caller slices
+    /// them.
     pub fn finish_window(&mut self, window_cycles: u64) {
         let active = self.total_cycles.min(window_cycles);
         let gated = window_cycles - active;
         self.gated_cycles += gated;
-        let label = format!("core{}", self.regs.core_id());
         self.ledger.add_static(
-            &label,
+            &self.static_label,
             active,
             gated,
             self.energy.p_core_active,
             self.energy.p_core_gated,
         );
-        self.total_cycles = 0;
+        self.total_cycles -= active;
     }
 
     /// Busy cycles since the last `finish_window`.
     pub fn busy_cycles(&self) -> u64 {
         self.total_cycles
+    }
+
+    /// The core's precomputed static-ledger key (`core<id>`). Callers
+    /// charging this core's static power into their own ledger (the SoC's
+    /// per-snapshot report) must use this instead of rebuilding the
+    /// string per call.
+    pub fn static_label(&self) -> &str {
+        &self.static_label
     }
 
     /// Drop accumulated energy/cycle accounting (ledger, busy/gated
@@ -277,6 +325,34 @@ impl NeuroCore {
         self.acc.iter_mut().for_each(|a| *a = 0);
         self.touched.iter_mut().for_each(|t| *t = false);
         self.touched_list.clear();
+        self.pending_input = false;
+    }
+}
+
+impl super::CoreEngine for NeuroCore {
+    fn stage_input_spikes(&mut self, axons: &[u32]) {
+        NeuroCore::stage_input_spikes(self, axons);
+    }
+    fn stage_input_vector(&mut self, spikes: &[bool]) {
+        NeuroCore::stage_input_vector(self, spikes);
+    }
+    fn tick_timestep(&mut self) -> TimestepOutput {
+        NeuroCore::tick_timestep(self)
+    }
+    fn finish_window(&mut self, window_cycles: u64) {
+        NeuroCore::finish_window(self, window_cycles);
+    }
+    fn busy_cycles(&self) -> u64 {
+        NeuroCore::busy_cycles(self)
+    }
+    fn ledger(&self) -> &EnergyLedger {
+        NeuroCore::ledger(self)
+    }
+    fn mps(&self) -> &[i32] {
+        self.neurons.mps()
+    }
+    fn set_enabled(&mut self, on: bool) {
+        NeuroCore::set_enabled(self, on);
     }
 }
 
@@ -389,5 +465,85 @@ mod tests {
         assert_eq!(c.busy_cycles(), 0);
         let pj = c.ledger().static_pj(200.0e6);
         assert!(pj > 0.0);
+    }
+
+    #[test]
+    fn finish_window_carries_overflow_and_conserves_active_cycles() {
+        let mut c = small_core();
+        c.stage_input_spikes(&[0, 1, 2, 3]);
+        c.tick_timestep();
+        let busy = c.busy_cycles();
+        assert!(busy > 1, "need a multi-cycle timestep for the split");
+        let mut split = c.clone();
+        // One window covering everything: active = busy, gated = 0.
+        c.finish_window(busy);
+        assert_eq!(c.busy_cycles(), 0);
+        // Two windows whose first is too short: the overflow must carry
+        // (the old code dropped it), and the summed static energy must
+        // equal the single-window accounting bit for bit.
+        let w1 = busy / 2;
+        split.finish_window(w1);
+        assert_eq!(split.busy_cycles(), busy - w1, "overflow must carry");
+        split.finish_window(busy - w1);
+        assert_eq!(split.busy_cycles(), 0);
+        let f = 200.0e6;
+        assert_eq!(
+            c.ledger().static_pj(f).to_bits(),
+            split.ledger().static_pj(f).to_bits(),
+            "active cycles not conserved across windows"
+        );
+    }
+
+    #[test]
+    fn multi_source_staging_or_merges() {
+        // Two sources in one timestep (IDMA input + routed spikes): the
+        // union must be consumed. weight(12) = 14; 8 spikes × 14 = 112.
+        let mut c = small_core(); // threshold 50
+        c.stage_input_spikes(&[0, 5, 16, 31]);
+        c.stage_input_spikes(&[1, 6, 17, 30]);
+        assert!(c.pending_input());
+        let out = c.tick_timestep();
+        assert!(!c.pending_input(), "tick consumes the staged words");
+        assert_eq!(out.stats.pipeline.spikes_forwarded, 8);
+        assert_eq!(out.stats.pipeline.sops, 8 * 8);
+        // 112 ≥ 50 → fire, residue 62 ≥ 50 would need a second threshold:
+        // subtract-reset leaves 112 - 50 = 62.
+        assert_eq!(out.spikes, (0..8).collect::<Vec<u32>>());
+        assert!(c.neurons().mps().iter().all(|&m| m == 62));
+    }
+
+    #[test]
+    fn overlapping_stagings_or_not_add() {
+        // The same axon staged twice is ONE spike (bit OR), not two.
+        let mut c = small_core();
+        c.stage_input_spikes(&[0, 1]);
+        c.stage_input_spikes(&[1, 2]);
+        let out = c.tick_timestep();
+        assert_eq!(out.stats.pipeline.spikes_forwarded, 3);
+        // 3 spikes × weight 14 = 42 < 50: no fire.
+        assert!(out.spikes.is_empty());
+        assert!(c.neurons().mps().iter().all(|&m| m == 42));
+    }
+
+    #[test]
+    fn pending_input_tracks_staging_and_gating() {
+        let mut c = small_core();
+        assert!(!c.pending_input());
+        c.stage_input_spikes(&[0]);
+        assert!(c.pending_input());
+        // A gated tick must not consume (nor clear) the staged words.
+        c.set_enabled(false);
+        c.tick_timestep();
+        assert!(c.pending_input(), "gated tick must keep input pending");
+        c.set_enabled(true);
+        let out = c.tick_timestep();
+        assert_eq!(out.stats.pipeline.spikes_forwarded, 1);
+        assert!(!c.pending_input());
+        // reset_state clears pending staging.
+        c.stage_input_spikes(&[2]);
+        c.reset_state();
+        assert!(!c.pending_input());
+        let out = c.tick_timestep();
+        assert_eq!(out.stats.pipeline.spikes_forwarded, 0);
     }
 }

@@ -24,6 +24,12 @@
 //! zero-skip (every axon, spiking or not, walks the full synapse list) and
 //! full MP updates (every neuron read-modified-written every timestep).
 //! Fig. 3's 2.69× energy-efficiency claim is the ratio between the two.
+//!
+//! [`reference::ReferenceCore`] is the pre-optimization engine frozen
+//! verbatim (overwrite staging, per-timestep allocations, truncating
+//! windows) — the bit-exactness oracle and perf baseline for the
+//! optimized [`NeuroCore`], driven through the shared [`CoreEngine`]
+//! trait.
 
 pub mod cache;
 pub mod codebook;
@@ -31,6 +37,7 @@ pub mod core_impl;
 pub mod dense;
 pub mod neuron;
 pub mod pipeline;
+pub mod reference;
 pub mod regtable;
 pub mod spe;
 pub mod synapses;
@@ -41,8 +48,32 @@ pub use codebook::Codebook;
 pub use core_impl::{CoreStats, NeuroCore, TimestepOutput};
 pub use dense::DenseCore;
 pub use neuron::{LeakMode, NeuronArray, NeuronParams, ResetMode};
+pub use reference::ReferenceCore;
 pub use regtable::{RegTable, WeightConfig};
 pub use synapses::{Synapses, SynapsesBuilder};
+
+/// The driving surface shared by the optimized [`NeuroCore`] and the
+/// frozen [`ReferenceCore`] oracle, so the equivalence suite and the core
+/// perf bench can drive either engine through one code path (mirroring
+/// [`crate::noc::Fabric`] for the NoC simulators).
+pub trait CoreEngine {
+    /// Stage input spikes (axon ids) for the next timestep.
+    fn stage_input_spikes(&mut self, axons: &[u32]);
+    /// Stage a full boolean spike vector for the next timestep.
+    fn stage_input_vector(&mut self, spikes: &[bool]);
+    /// Execute one timestep over the staged spike bank.
+    fn tick_timestep(&mut self) -> TimestepOutput;
+    /// Account a window of wall cycles (active vs gated static split).
+    fn finish_window(&mut self, window_cycles: u64);
+    /// Busy cycles since the last finished window.
+    fn busy_cycles(&self) -> u64;
+    /// The engine's energy ledger.
+    fn ledger(&self) -> &crate::energy::EnergyLedger;
+    /// Membrane potentials (bit-exactness comparisons).
+    fn mps(&self) -> &[i32];
+    /// Set the clock-gate enable bit.
+    fn set_enabled(&mut self, on: bool);
+}
 
 /// Width of one spike word processed by the ZSPE per cycle (paper: 16).
 pub const SPIKE_WORD_BITS: usize = 16;
@@ -55,13 +86,43 @@ pub const MAX_NEURONS_PER_CORE: usize = 8192;
 
 /// Pack a boolean spike vector into 16-bit words, LSB = lowest axon id.
 pub fn pack_spikes(spikes: &[bool]) -> Vec<u16> {
-    let mut words = vec![0u16; spikes.len().div_ceil(SPIKE_WORD_BITS)];
+    let mut words = Vec::new();
+    pack_spike_vector_into(spikes, &mut words);
+    words
+}
+
+/// [`pack_spikes`] into a caller-provided buffer (cleared and resized;
+/// reusing one scratch keeps repeated staging allocation-free).
+pub fn pack_spike_vector_into(spikes: &[bool], out: &mut Vec<u16>) {
+    out.clear();
+    out.resize(spikes.len().div_ceil(SPIKE_WORD_BITS), 0);
     for (i, &s) in spikes.iter().enumerate() {
         if s {
-            words[i / SPIKE_WORD_BITS] |= 1 << (i % SPIKE_WORD_BITS);
+            out[i / SPIKE_WORD_BITS] |= 1 << (i % SPIKE_WORD_BITS);
         }
     }
-    words
+}
+
+/// Pack spike axon ids into 16-bit words inside `out`, which is cleared
+/// and sized to just cover the highest staged axon — so staging k spikes
+/// costs O(highest word), not O(core width), and a reused scratch never
+/// allocates. Out-of-range axons (≥ `axons`) are a debug-level error and
+/// dropped in release (hardware would drop them). This is the one
+/// id-based copy of the packing formula, shared with [`pack_spikes`]'s
+/// vector form.
+pub fn pack_spikes_into(axon_ids: &[u32], axons: usize, out: &mut Vec<u16>) {
+    out.clear();
+    for &a in axon_ids {
+        let a = a as usize;
+        debug_assert!(a < axons, "axon {a} out of range");
+        if a < axons {
+            let w = a / SPIKE_WORD_BITS;
+            if w >= out.len() {
+                out.resize(w + 1, 0);
+            }
+            out[w] |= 1 << (a % SPIKE_WORD_BITS);
+        }
+    }
 }
 
 /// Unpack 16-bit spike words into a boolean vector of length `n`.
@@ -89,5 +150,26 @@ mod tests {
         spikes[0] = true;
         spikes[15] = true;
         assert_eq!(pack_spikes(&spikes), vec![0x8001]);
+    }
+
+    #[test]
+    fn pack_ids_into_covers_only_staged_words() {
+        let mut out = vec![0xFFFF; 4]; // stale scratch must be cleared
+        pack_spikes_into(&[0, 2, 15], 64, &mut out);
+        assert_eq!(out, vec![0x8005]);
+        // Highest staged axon bounds the packed width, not the core.
+        pack_spikes_into(&[17], 64, &mut out);
+        assert_eq!(out, vec![0, 2]);
+        // Empty staging packs zero words.
+        pack_spikes_into(&[], 64, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pack_vector_into_matches_pack_spikes() {
+        let spikes: Vec<bool> = (0..37).map(|i| i % 5 == 0).collect();
+        let mut out = vec![7u16; 1];
+        pack_spike_vector_into(&spikes, &mut out);
+        assert_eq!(out, pack_spikes(&spikes));
     }
 }

@@ -1,0 +1,268 @@
+//! The pre-optimization neuromorphic core, retained **verbatim** as the
+//! bit-exactness oracle for the optimized [`super::NeuroCore`].
+//!
+//! This is the core engine exactly as it shipped before the
+//! activity-proportional rewrite, bugs and all:
+//!
+//! - staging **overwrites** the shadow bank (`PingPong::fill_shadow`):
+//!   a core staged by two sources in one timestep silently drops the
+//!   first staging — the defect the optimized engine's OR-merge fixes
+//!   (`tests/equivalence_core.rs` pins both behaviors);
+//! - `tick_timestep` copies the active bank with `to_vec()` and staging
+//!   allocates a fresh packed vector per call — the per-timestep
+//!   allocations the optimized engine's scratch buffers remove;
+//! - `finish_window` rebuilds its static-ledger key with `format!` every
+//!   window and **truncates** busy cycles beyond the window instead of
+//!   carrying them.
+//!
+//! That behavior is exactly what makes this copy valuable:
+//!
+//! - `tests/equivalence_core.rs` drives both engines with identical
+//!   single-source workloads and asserts spikes, stats, membrane
+//!   potentials, ledgers and cycle counts are bit-identical;
+//! - `benches/core_throughput.rs` measures both on the same workloads so
+//!   `BENCH_core.json` carries a machine-independent speedup ratio.
+//!
+//! Do not "fix" or speed this file up: its value is being the frozen
+//! semantics the fast path must reproduce (and the frozen bug the
+//! OR-merge test must demonstrate).
+
+use super::cache::PingPong;
+use super::codebook::Codebook;
+use super::core_impl::{CoreStats, SPE_QUEUE_DEPTH, TimestepOutput};
+use super::neuron::{NeuronArray, NeuronParams};
+use super::pipeline;
+use super::regtable::RegTable;
+use super::spe::{AccumCtx, Spe};
+use super::synapses::Synapses;
+use crate::energy::{EnergyLedger, EnergyParams, EventClass};
+use crate::Result;
+
+/// The frozen pre-optimization core (see module docs).
+#[derive(Debug, Clone)]
+pub struct ReferenceCore {
+    regs: RegTable,
+    codebook: Codebook,
+    synapses: Synapses,
+    neurons: NeuronArray,
+    spike_cache: PingPong<u16>,
+    spe: Spe,
+    acc: Vec<i32>,
+    touched: Vec<bool>,
+    touched_list: Vec<u32>,
+    ledger: EnergyLedger,
+    energy: EnergyParams,
+    total_cycles: u64,
+    gated_cycles: u64,
+}
+
+impl ReferenceCore {
+    /// Assemble a core. `synapses.axons()` must match `axons` — the same
+    /// constructor contract as [`super::NeuroCore::new`].
+    pub fn new(
+        core_id: u8,
+        axons: usize,
+        neurons: usize,
+        neuron_params: NeuronParams,
+        codebook: Codebook,
+        synapses: Synapses,
+        energy: EnergyParams,
+    ) -> Result<Self> {
+        let regs = RegTable::new(core_id, axons, neurons, neuron_params.clone(), &codebook)?;
+        if synapses.axons() != axons {
+            return Err(crate::Error::Core(format!(
+                "synapse table covers {} axons, core has {}",
+                synapses.axons(),
+                axons
+            )));
+        }
+        let words = regs.spike_words();
+        Ok(ReferenceCore {
+            regs,
+            codebook,
+            synapses,
+            neurons: NeuronArray::new(neurons, neuron_params),
+            spike_cache: PingPong::new(words),
+            spe: Spe::new(SPE_QUEUE_DEPTH),
+            acc: vec![0; neurons],
+            touched: vec![false; neurons],
+            touched_list: Vec::with_capacity(neurons),
+            ledger: EnergyLedger::new(),
+            energy,
+            total_cycles: 0,
+            gated_cycles: 0,
+        })
+    }
+
+    /// Register table (read/write: enable bit etc.).
+    pub fn regs(&self) -> &RegTable {
+        &self.regs
+    }
+
+    /// Set the clock-gate enable bit.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.regs.enabled = on;
+    }
+
+    /// The core's neuron array (bit-exactness comparison).
+    pub fn neurons(&self) -> &NeuronArray {
+        &self.neurons
+    }
+
+    /// Stage input spikes (axon ids) for the next timestep. Frozen
+    /// **overwrite** semantics: a second staging within the same timestep
+    /// replaces (drops) the first — the pre-OR-merge bug.
+    pub fn stage_input_spikes(&mut self, axons: &[u32]) {
+        let words = self.regs.spike_words();
+        let mut packed = vec![0u16; words];
+        for &a in axons {
+            let a = a as usize;
+            debug_assert!(a < self.regs.axons, "axon {a} out of range");
+            if a < self.regs.axons {
+                packed[a / super::SPIKE_WORD_BITS] |= 1 << (a % super::SPIKE_WORD_BITS);
+            }
+        }
+        self.spike_cache.fill_shadow(&packed);
+    }
+
+    /// Stage a full boolean spike vector (frozen overwrite semantics).
+    pub fn stage_input_vector(&mut self, spikes: &[bool]) {
+        debug_assert!(spikes.len() <= self.regs.axons);
+        self.spike_cache.fill_shadow(&super::pack_spikes(spikes));
+    }
+
+    /// Execute one timestep exactly as the pre-optimization engine did:
+    /// swap, **copy** the active bank, clear it, run the pipeline over
+    /// the copy, drain the updater, fire spikes.
+    pub fn tick_timestep(&mut self) -> TimestepOutput {
+        if !self.regs.enabled {
+            return TimestepOutput::default();
+        }
+        self.spike_cache.swap();
+
+        let words: Vec<u16> = self.spike_cache.active_bank().to_vec();
+        self.spike_cache.clear_active();
+        let mut ctx = AccumCtx {
+            acc: &mut self.acc,
+            touched: &mut self.touched,
+            touched_list: &mut self.touched_list,
+        };
+        let pstats = pipeline::run_accumulation(
+            &words,
+            self.regs.axons,
+            &self.synapses,
+            &self.codebook,
+            &mut self.spe,
+            &mut ctx,
+        );
+
+        self.touched_list.sort_unstable();
+        let mut spikes = Vec::new();
+        for &t in self.touched_list.iter() {
+            if self.neurons.update_one(t as usize, self.acc[t as usize]) {
+                spikes.push(t);
+            }
+        }
+        let neurons_updated = self.touched_list.len() as u64;
+        let update_cycles = neurons_updated;
+        for &t in self.touched_list.iter() {
+            self.acc[t as usize] = 0;
+            self.touched[t as usize] = false;
+        }
+        self.touched_list.clear();
+
+        let cycles = pstats.cycles + update_cycles;
+        self.ledger.add(EventClass::CacheRead, pstats.words_read);
+        self.ledger.add(EventClass::ZspeWord, pstats.words_scanned);
+        self.ledger
+            .add(EventClass::ZspeForward, pstats.spikes_forwarded);
+        self.ledger.add(EventClass::ZeroSkip, pstats.zeros_skipped);
+        self.ledger.add(EventClass::Sop, pstats.sops);
+        self.ledger.add(EventClass::MpUpdate, neurons_updated);
+        self.ledger
+            .add(EventClass::SpikeFire, spikes.len() as u64);
+        self.total_cycles += cycles;
+
+        TimestepOutput {
+            stats: CoreStats {
+                pipeline: pstats,
+                neurons_updated,
+                spikes_fired: spikes.len() as u64,
+                cycles,
+            },
+            spikes,
+        }
+    }
+
+    /// Charge spike-cache write energy for `words` staged words.
+    pub fn charge_cache_writes(&mut self, words: u64) {
+        self.ledger.add(EventClass::CacheWrite, words);
+    }
+
+    /// Account a window of wall cycles — frozen semantics: the static key
+    /// is rebuilt with `format!` per window and busy cycles beyond the
+    /// window are silently truncated (the defect the optimized engine's
+    /// carry fixes).
+    pub fn finish_window(&mut self, window_cycles: u64) {
+        let active = self.total_cycles.min(window_cycles);
+        let gated = window_cycles - active;
+        self.gated_cycles += gated;
+        let label = format!("core{}", self.regs.core_id());
+        self.ledger.add_static(
+            &label,
+            active,
+            gated,
+            self.energy.p_core_active,
+            self.energy.p_core_gated,
+        );
+        self.total_cycles = 0;
+    }
+
+    /// Busy cycles since the last `finish_window`.
+    pub fn busy_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// Read (and keep) the core's energy ledger.
+    pub fn ledger(&self) -> &EnergyLedger {
+        &self.ledger
+    }
+
+    /// Reset dynamic state (MPs, caches) keeping configuration.
+    pub fn reset_state(&mut self) {
+        self.neurons.reset_all();
+        let words = self.regs.spike_words();
+        self.spike_cache = PingPong::new(words);
+        self.spe = Spe::new(SPE_QUEUE_DEPTH);
+        self.acc.iter_mut().for_each(|a| *a = 0);
+        self.touched.iter_mut().for_each(|t| *t = false);
+        self.touched_list.clear();
+    }
+}
+
+impl super::CoreEngine for ReferenceCore {
+    fn stage_input_spikes(&mut self, axons: &[u32]) {
+        ReferenceCore::stage_input_spikes(self, axons);
+    }
+    fn stage_input_vector(&mut self, spikes: &[bool]) {
+        ReferenceCore::stage_input_vector(self, spikes);
+    }
+    fn tick_timestep(&mut self) -> TimestepOutput {
+        ReferenceCore::tick_timestep(self)
+    }
+    fn finish_window(&mut self, window_cycles: u64) {
+        ReferenceCore::finish_window(self, window_cycles);
+    }
+    fn busy_cycles(&self) -> u64 {
+        ReferenceCore::busy_cycles(self)
+    }
+    fn ledger(&self) -> &EnergyLedger {
+        ReferenceCore::ledger(self)
+    }
+    fn mps(&self) -> &[i32] {
+        self.neurons.mps()
+    }
+    fn set_enabled(&mut self, on: bool) {
+        ReferenceCore::set_enabled(self, on);
+    }
+}

@@ -174,4 +174,27 @@ mod tests {
         assert_eq!(percentile(&[1.5f64, 2.5], 0.0), 1.5);
         assert_eq!(percentile::<f64>(&[], 0.5), 0.0);
     }
+
+    #[test]
+    fn percentile_edge_cases_pin_nearest_rank_semantics() {
+        // Empty input: the type's default, at every p.
+        assert_eq!(percentile::<u64>(&[], 0.0), 0);
+        assert_eq!(percentile::<u64>(&[], 1.0), 0);
+        assert_eq!(percentile::<f64>(&[], 0.99), 0.0);
+        // Single element: every percentile is that element.
+        assert_eq!(percentile(&[42u64], 0.0), 42);
+        assert_eq!(percentile(&[42u64], 0.5), 42);
+        assert_eq!(percentile(&[42u64], 1.0), 42);
+        // Two elements: p50 rounds ((2-1)·0.5) = 0.5 away from zero →
+        // index 1, the UPPER of the pair. This is the ledger's pinned
+        // nearest-rank convention (not an interpolated midpoint).
+        assert_eq!(percentile(&[10u64, 20], 0.5), 20);
+        assert_eq!(percentile(&[10u64, 20], 0.0), 10);
+        assert_eq!(percentile(&[10u64, 20], 1.0), 20);
+        // p99 of 100 ascending elements: index round(99·0.99) = 98.
+        let v: Vec<u64> = (0..100).collect();
+        assert_eq!(percentile(&v, 0.99), 98);
+        // Out-of-range p never reads past the end.
+        assert_eq!(percentile(&[1u64, 2, 3], 2.0), 3);
+    }
 }

@@ -9,8 +9,12 @@
 //!    weight-index tables through IDMA, `CoreEnable` ungates the mapped
 //!    cores, `NetworkStart` marks the network busy.
 //! 2. **Per timestep** `t`: input events are DMA'd into the layer-0
-//!    cores' ping-pong caches; each layer is ticked in order, its output
-//!    spikes **broadcast** through the fullerene NoC to the cores of the
+//!    cores' ping-pong caches (staging **OR-merges**, so multiple sources
+//!    within a timestep compose); each layer's **staged** cores are
+//!    ticked in order — the scheduler's worklist skips cores with no
+//!    pending spike words, so an idle core costs zero active cycles
+//!    (pinned by the `cores_ticked` counter) — and output spikes are
+//!    **broadcast** through the fullerene NoC to the cores of the
 //!    next layer (the CMRouter broadcast mode — one flit copy per
 //!    destination core, cheap per-hop energy); final-layer spikes land in
 //!    output buffer 0. The CPU is woken by the timestep-switch signal,
@@ -128,8 +132,15 @@ pub struct SampleResult {
     pub cycles: u64,
     /// Synapse operations performed.
     pub sops: u64,
-    /// Spike flits routed through the NoC.
+    /// Spike flits routed through the NoC **by this sample** (like
+    /// `cycles`/`sops`, a per-sample figure — the accounting-window total
+    /// lives in [`crate::energy::ChipReport::spikes_routed`]).
     pub spikes_routed: u64,
+    /// Core ticks executed for this sample. The scheduler ticks only
+    /// cores with pending spike words, so this is an activity measure:
+    /// an idle layer-timestep contributes zero (the pre-worklist engine
+    /// would have contributed every placed core every timestep).
+    pub cores_ticked: u64,
 }
 
 /// The assembled chip.
@@ -163,8 +174,20 @@ pub struct Soc {
     /// unlabelled serving pushes must not dilute accuracy).
     labelled: u64,
     correct: u64,
+    /// Core ticks executed this accounting window (the worklist
+    /// regression counter: idle layer-timesteps must not grow it).
+    cores_ticked: u64,
     /// Cached core→core routing costs for the ideal-fabric energy charge.
     hop_table: Vec<Vec<HopCost>>,
+    /// Per-layer broadcast destination sets, precomputed so the routing
+    /// hot path builds no `Dest` per layer per timestep (`None` for the
+    /// last layer — its spikes go to the output buffer).
+    layer_dests: Vec<Option<Dest>>,
+    // --- hot-path scratch (reused across layers/timesteps) ----------------
+    /// Per-destination-core staging lists for spike delivery.
+    route_scratch: Vec<Vec<u32>>,
+    /// (source core, axon) pairs firing out of the current layer.
+    firing_scratch: Vec<(usize, u32)>,
 }
 
 impl Soc {
@@ -248,6 +271,9 @@ impl Soc {
         noc.set_trace_mode(crate::noc::TraceMode::Off);
         noc.set_collect_ejected(true);
         let clocks = ClockManager::new(config.f_core_hz, config.f_cpu_hz, energy.p_clock_tree)?;
+        let layer_dests = (0..net.layers.len())
+            .map(|li| mapping.dest_cores_after(li).map(|d| Dest::Cores(d.to_vec())))
+            .collect();
         Ok(Soc {
             cpu: Cpu::new(64 * 1024, true),
             bus: NeuroBus::new(),
@@ -264,7 +290,11 @@ impl Soc {
             samples_run: 0,
             labelled: 0,
             correct: 0,
+            cores_ticked: 0,
             hop_table,
+            layer_dests,
+            route_scratch: vec![Vec::new(); config.n_cores],
+            firing_scratch: Vec::new(),
             net,
             mapping,
             cores,
@@ -289,6 +319,14 @@ impl Soc {
     /// Total core-clock cycles so far.
     pub fn total_cycles(&self) -> u64 {
         self.total_cycles
+    }
+
+    /// Core ticks executed in the current accounting window. The
+    /// activity-proportional scheduler ticks only cores with pending
+    /// spike words, so an idle layer-timestep adds zero here — the
+    /// regression counter pinning the worklist semantics.
+    pub fn cores_ticked(&self) -> u64 {
+        self.cores_ticked
     }
 
     /// NoC fabric statistics for the current accounting window — O(1):
@@ -388,48 +426,47 @@ impl Soc {
     /// Deliver spikes from layer `li` cores to layer `li+1` cores through
     /// the NoC (or the ideal fabric). `firing` holds (physical core id,
     /// axon id in the next layer's input space). Returns NoC cycles.
+    ///
+    /// Allocation-free on the hot path: the broadcast [`Dest`] is
+    /// precomputed per layer at construction and the per-destination
+    /// staging lists are reused scratch. Staging OR-merges in the cores,
+    /// so deliveries compose with any earlier staging this timestep.
     fn route_spikes(&mut self, li: usize, firing: &[(usize, u32)]) -> Result<u64> {
         let Some(dst_cores) = self.mapping.dest_cores_after(li) else {
             return Ok(0);
         };
-        let dst_cores = dst_cores.to_vec();
         self.spikes_routed += firing.len() as u64 * dst_cores.len() as u64;
-        if self.config.use_noc {
+        // Group deliveries per destination core into the reusable
+        // scratch lists (taken out of `self` for the fill so the NoC and
+        // ledger stay freely borrowable; restored before returning).
+        let mut per_core = std::mem::take(&mut self.route_scratch);
+        let cycles = if self.config.use_noc {
             let start = self.noc.cycle();
-            // One Dest for the whole layer: inject borrows the destination
-            // list, so the broadcast fan-out allocates nothing per flit.
-            let dest = Dest::Cores(dst_cores);
+            // One precomputed Dest for the whole layer: inject borrows
+            // the destination list, so the broadcast fan-out allocates
+            // nothing per flit.
+            let dest = self.layer_dests[li].as_ref().expect("non-last layer has dests");
             for &(src, axon) in firing {
-                self.noc.inject(src, &dest, axon);
+                self.noc.inject(src, dest, axon);
             }
-            self.noc.run_until_drained(1_000_000)?;
-            // Group this call's deliveries per destination core from the
-            // ejection staging buffer (drained here every layer, so it
-            // never accumulates across the run).
-            let mut per_core: Vec<Vec<u32>> = vec![Vec::new(); self.config.n_cores];
+            if let Err(e) = self.noc.run_until_drained(1_000_000) {
+                self.route_scratch = per_core;
+                return Err(e);
+            }
+            // The ejection staging buffer is drained here every layer, so
+            // it never accumulates across the run.
             for (dst_core, axon) in self.noc.drain_ejected() {
                 per_core[dst_core].push(axon);
             }
-            for (dst, axons) in per_core.iter().enumerate() {
-                if axons.is_empty() {
-                    continue;
-                }
-                let idx = self.core_index[dst];
-                if idx != usize::MAX {
-                    self.cores[idx].stage_input_spikes(axons);
-                    self.cores[idx].charge_cache_writes(axons.len().div_ceil(16) as u64);
-                }
-            }
-            Ok(self.noc.cycle() - start)
+            self.noc.cycle() - start
         } else {
             // Ideal fabric: zero latency, but charge hop/link energy along
             // the real hierarchical routes (L1 hops at the broadcast rate,
             // L2 hops/links at the scale-up rates).
             use crate::energy::EventClass;
-            let mut per_core: Vec<Vec<u32>> = vec![Vec::new(); self.config.n_cores];
             let (mut l1_hops, mut l2_hops, mut links, mut l2_links) = (0u64, 0u64, 0u64, 0u64);
             for &(src, axon) in firing {
-                for &dst in &dst_cores {
+                for &dst in dst_cores {
                     per_core[dst].push(axon);
                     let c = &self.hop_table[src][dst];
                     l1_hops += c.l1_hops as u64;
@@ -442,18 +479,21 @@ impl Soc {
             self.ledger.add(EventClass::HopL2, l2_hops);
             self.ledger.add(EventClass::LinkTraversal, links);
             self.ledger.add(EventClass::LinkL2, l2_links);
-            for (dst, axons) in per_core.iter().enumerate() {
-                if axons.is_empty() {
-                    continue;
-                }
-                let idx = self.core_index[dst];
-                if idx != usize::MAX {
-                    self.cores[idx].stage_input_spikes(axons);
-                    self.cores[idx].charge_cache_writes(axons.len().div_ceil(16) as u64);
-                }
+            0
+        };
+        for (dst, axons) in per_core.iter_mut().enumerate() {
+            if axons.is_empty() {
+                continue;
             }
-            Ok(0)
+            let idx = self.core_index[dst];
+            if idx != usize::MAX {
+                self.cores[idx].stage_input_spikes(axons);
+                self.cores[idx].charge_spike_writes(axons.len());
+            }
+            axons.clear();
         }
+        self.route_scratch = per_core;
+        Ok(cycles)
     }
 
     /// Run one sample through the chip.
@@ -472,6 +512,8 @@ impl Soc {
         self.outbufs.clear(0);
         let mut sample_cycles = mpdma_cycles;
         let mut sample_sops = 0u64;
+        let ticked_before = self.cores_ticked;
+        let routed_before = self.spikes_routed;
 
         for t in 0..self.net.timesteps {
             self.noc.set_timestep(t as u32);
@@ -484,24 +526,34 @@ impl Soc {
                 for &c in &self.mapping.layer_cores[0] {
                     let idx = self.core_index[c];
                     self.cores[idx].stage_input_spikes(&spikes_in);
-                    self.cores[idx]
-                        .charge_cache_writes(spikes_in.len().div_ceil(16) as u64);
+                    self.cores[idx].charge_spike_writes(spikes_in.len());
                 }
             }
             // --- layer-by-layer execution ----------------------------------
+            // Activity-proportional scheduling: only cores with pending
+            // spike words are ticked. An un-staged (or gated) core is
+            // skipped outright — identical function (partial MP updates
+            // mean untouched neurons never change or fire) at zero active
+            // cycles, instead of paying a full zero-word cache scan per
+            // idle core per timestep.
             let mut ts_cycles = dma_cycles;
             for li in 0..self.net.layers.len() {
                 let mut layer_max_cycles = 0u64;
-                let mut firing: Vec<(usize, u32)> = Vec::new();
+                let mut firing = std::mem::take(&mut self.firing_scratch);
+                firing.clear();
                 let last = li == self.net.layers.len() - 1;
-                for &pc in &self.mapping.layer_cores[li].clone() {
+                for &pc in &self.mapping.layer_cores[li] {
                     let idx = self.core_index[pc];
+                    if !self.cores[idx].pending_input() || !self.cores[idx].regs().enabled {
+                        continue;
+                    }
                     let placement_off = self
                         .mapping
                         .placement_of(pc)
                         .expect("placed core")
                         .neuron_offset;
                     let out = self.cores[idx].tick_timestep();
+                    self.cores_ticked += 1;
                     layer_max_cycles = layer_max_cycles.max(out.stats.cycles);
                     sample_sops += out.stats.pipeline.sops;
                     for &n in &out.spikes {
@@ -515,9 +567,13 @@ impl Soc {
                     }
                 }
                 ts_cycles += layer_max_cycles;
-                if !last && !firing.is_empty() {
-                    ts_cycles += self.route_spikes(li, &firing)?;
-                }
+                let routed = if !last && !firing.is_empty() {
+                    self.route_spikes(li, &firing)
+                } else {
+                    Ok(0)
+                };
+                self.firing_scratch = firing;
+                ts_cycles += routed?;
             }
             // --- CPU timestep service --------------------------------------
             self.cpu.lsu.mmio.npu_status =
@@ -562,7 +618,8 @@ impl Soc {
             correct,
             cycles: sample_cycles,
             sops: sample_sops,
-            spikes_routed: self.spikes_routed,
+            spikes_routed: self.spikes_routed - routed_before,
+            cores_ticked: self.cores_ticked - ticked_before,
         })
     }
 
@@ -612,7 +669,7 @@ impl Soc {
             ledger.merge(c.ledger());
             let active = c.busy_cycles().min(wall);
             ledger.add_static(
-                &format!("core{}", c.regs().core_id()),
+                c.static_label(),
                 active,
                 wall - active,
                 self.energy.p_core_active,
@@ -682,6 +739,7 @@ impl Soc {
         self.samples_run = 0;
         self.labelled = 0;
         self.correct = 0;
+        self.cores_ticked = 0;
     }
 }
 
@@ -937,6 +995,48 @@ mod tests {
         // aggregates above stay exact — and reset with the window.
         soc.finish_report("w");
         assert_eq!(soc.noc_stats().delivered, 0);
+    }
+
+    #[test]
+    fn idle_layer_timesteps_tick_zero_cores() {
+        let net = small_net(32, 24, 4);
+        let mut soc = Soc::new(net, SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        })
+        .unwrap();
+        let placed = soc.mapping().cores_used() as u64;
+        // A sample with no input events: every layer-timestep is idle, so
+        // the worklist must tick zero cores end to end.
+        let empty = Sample { label: 0, events: vec![] };
+        let r = soc.run_sample(&empty, true).unwrap();
+        assert_eq!(r.cores_ticked, 0, "idle timesteps must tick zero cores");
+        assert_eq!(soc.cores_ticked(), 0);
+        // Input only at t=0 of 5 timesteps: cores tick in the first
+        // timestep only (layer 1 consumes its routed spikes within t=0),
+        // so the total is bounded by one tick per placed core.
+        let burst = Sample {
+            label: 0,
+            events: (0..32).step_by(2).map(|a| (0u16, a as u32)).collect(),
+        };
+        let r = soc.run_sample(&burst, true).unwrap();
+        assert!(r.cores_ticked > 0, "staged cores must tick");
+        assert!(
+            r.cores_ticked <= placed,
+            "idle-layer timesteps ticked cores: {} ticks for {} placed cores",
+            r.cores_ticked,
+            placed
+        );
+        // A busy sample ticks more, but never more than every placed core
+        // every timestep (the old always-tick bound).
+        let busy = busy_sample(32, 5);
+        let r = soc.run_sample(&busy, true).unwrap();
+        assert!(r.cores_ticked > placed);
+        assert!(r.cores_ticked <= placed * 5);
+        // The window counter resets with the accounting window.
+        assert!(soc.cores_ticked() > 0);
+        soc.finish_report("w");
+        assert_eq!(soc.cores_ticked(), 0);
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Bit-exactness of the activity-proportional core engine against the
+//! frozen pre-optimization [`ReferenceCore`], plus the OR-merge staging
+//! fix the reference deliberately does not have.
+//!
+//! Mirrors `tests/equivalence_noc.rs` at the core layer: both engines are
+//! driven through the shared [`CoreEngine`] trait with identical
+//! workloads, and every observable — spike order, per-timestep stats
+//! (cycles, sops, stalls), membrane potentials, dynamic ledger counts,
+//! static energy — must agree bit for bit on **single-source** workloads
+//! (one staging per timestep, the only regime the old engine handled
+//! correctly). On **multi-source** workloads (two stagings in one
+//! timestep: IDMA input plus routed spikes) the engines must differ in
+//! exactly the way the bug report describes: the reference drops the
+//! first staging, the optimized engine consumes the union — pinned
+//! against a hand-computed oracle.
+
+use fullerene_soc::core::{
+    Codebook, CoreEngine, LeakMode, NeuroCore, NeuronParams, ReferenceCore, ResetMode,
+    SynapsesBuilder,
+};
+use fullerene_soc::energy::{EnergyParams, EventClass};
+use fullerene_soc::util::prng::Rng;
+
+const AXONS: usize = 70; // deliberately not a multiple of 16
+const NEURONS: usize = 48;
+
+fn params(threshold: i32, leak: LeakMode) -> NeuronParams {
+    NeuronParams {
+        threshold,
+        leak,
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    }
+}
+
+/// Irregular synapse table: variable fan-out, pseudo-random weights,
+/// some axons with no synapses at all.
+fn synapses() -> fullerene_soc::core::Synapses {
+    let cb = Codebook::default_log16();
+    let mut b = SynapsesBuilder::new(AXONS, NEURONS, cb.n());
+    for a in 0..AXONS {
+        if a % 7 == 3 {
+            continue; // pruned axon: zero fan-out
+        }
+        for n in 0..NEURONS {
+            if (a * 13 + n * 5) % 3 != 0 {
+                b.connect(a, n, ((a * 31 + n * 7) % 16) as u8).unwrap();
+            }
+        }
+    }
+    b.build()
+}
+
+fn optimized(threshold: i32, leak: LeakMode) -> NeuroCore {
+    NeuroCore::new(
+        4,
+        AXONS,
+        NEURONS,
+        params(threshold, leak),
+        Codebook::default_log16(),
+        synapses(),
+        EnergyParams::nominal(),
+    )
+    .unwrap()
+}
+
+fn reference(threshold: i32, leak: LeakMode) -> ReferenceCore {
+    ReferenceCore::new(
+        4,
+        AXONS,
+        NEURONS,
+        params(threshold, leak),
+        Codebook::default_log16(),
+        synapses(),
+        EnergyParams::nominal(),
+    )
+    .unwrap()
+}
+
+/// Drive both engines through the same single-source workload (one
+/// staging per timestep, `p_active` chance of any input, `k_max` spikes
+/// when active) and assert bit-identity of every observable.
+fn assert_bit_identical(
+    opt: &mut dyn CoreEngine,
+    refc: &mut dyn CoreEngine,
+    timesteps: usize,
+    p_active: f64,
+    k_max: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    for t in 0..timesteps {
+        if rng.bool(p_active) {
+            let k = 1 + rng.below_usize(k_max);
+            let spikes: Vec<u32> = rng.choose_k(AXONS, k).into_iter().map(|a| a as u32).collect();
+            opt.stage_input_spikes(&spikes);
+            refc.stage_input_spikes(&spikes);
+        }
+        let a = opt.tick_timestep();
+        let b = refc.tick_timestep();
+        assert_eq!(a, b, "timestep {t} diverged");
+    }
+    assert_eq!(opt.mps(), refc.mps(), "membrane potentials diverged");
+    assert_eq!(opt.busy_cycles(), refc.busy_cycles(), "cycle counts diverged");
+    for c in EventClass::ALL {
+        assert_eq!(
+            opt.ledger().count(c),
+            refc.ledger().count(c),
+            "ledger count diverged for {c:?}"
+        );
+    }
+    // Static accounting over the same wall window must price identically
+    // (same label, same active/gated split) — compared at the bit level.
+    let window = opt.busy_cycles() + 1000;
+    opt.finish_window(window);
+    refc.finish_window(window);
+    let f = 200.0e6;
+    assert_eq!(
+        opt.ledger().static_pj(f).to_bits(),
+        refc.ledger().static_pj(f).to_bits(),
+        "static energy diverged"
+    );
+}
+
+#[test]
+fn single_source_dense_bit_identical() {
+    // Every timestep staged, heavy input, with leak and firing.
+    let mut opt = optimized(60, LeakMode::Linear(1));
+    let mut refc = reference(60, LeakMode::Linear(1));
+    assert_bit_identical(&mut opt, &mut refc, 24, 1.0, AXONS, 11);
+}
+
+#[test]
+fn single_source_sparse_bit_identical() {
+    // Mostly idle timesteps (both engines still ticked every timestep —
+    // this pins the tick path itself, independent of the SoC worklist).
+    let mut opt = optimized(45, LeakMode::Linear(2));
+    let mut refc = reference(45, LeakMode::Linear(2));
+    assert_bit_identical(&mut opt, &mut refc, 80, 0.15, 6, 12);
+}
+
+#[test]
+fn single_source_no_leak_shift_variants_bit_identical() {
+    let mut opt = optimized(30, LeakMode::None);
+    let mut refc = reference(30, LeakMode::None);
+    assert_bit_identical(&mut opt, &mut refc, 30, 0.5, 16, 13);
+    let mut opt = optimized(200, LeakMode::Shift(3));
+    let mut refc = reference(200, LeakMode::Shift(3));
+    assert_bit_identical(&mut opt, &mut refc, 30, 0.5, 16, 14);
+}
+
+#[test]
+fn staged_vector_path_bit_identical() {
+    let mut opt = optimized(50, LeakMode::Linear(1));
+    let mut refc = reference(50, LeakMode::Linear(1));
+    let mut rng = Rng::new(21);
+    for _ in 0..16 {
+        let spikes: Vec<bool> = (0..AXONS).map(|_| rng.bool(0.3)).collect();
+        opt.stage_input_vector(&spikes);
+        refc.stage_input_vector(&spikes);
+        assert_eq!(opt.tick_timestep(), refc.tick_timestep());
+    }
+    assert_eq!(opt.mps(), refc.mps());
+}
+
+/// The bug and its fix, against a hand-computed oracle. Scenario: within
+/// one timestep a core is staged twice — first the IDMA input burst,
+/// then spikes routed in from an upstream layer (exactly what
+/// `Soc::run_sample`'s two staging paths deliver when they land on one
+/// core). A dense all-weight-12 core (weight(12) = 14 in the log16
+/// codebook) makes the arithmetic checkable by hand.
+#[test]
+fn multi_source_staging_drops_first_on_reference_and_merges_on_optimized() {
+    let cb = Codebook::default_log16();
+    let make_syn = || {
+        let mut b = SynapsesBuilder::new(32, 8, cb.n());
+        b.connect_dense(|_, _| 12).unwrap(); // weight 14
+        b.build()
+    };
+    let p = params(100, LeakMode::None);
+    let mut opt = NeuroCore::new(
+        0,
+        32,
+        8,
+        p.clone(),
+        cb.clone(),
+        make_syn(),
+        EnergyParams::nominal(),
+    )
+    .unwrap();
+    let mut refc = ReferenceCore::new(
+        0,
+        32,
+        8,
+        p,
+        cb.clone(),
+        make_syn(),
+        EnergyParams::nominal(),
+    )
+    .unwrap();
+
+    let idma_input: [u32; 4] = [0, 5, 16, 31]; // source 1: IDMA burst
+    let routed: [u32; 4] = [1, 6, 17, 30]; // source 2: NoC delivery
+    opt.stage_input_spikes(&idma_input);
+    opt.stage_input_spikes(&routed);
+    refc.stage_input_spikes(&idma_input);
+    refc.stage_input_spikes(&routed);
+    let o = opt.tick_timestep();
+    let r = refc.tick_timestep();
+
+    // Hand oracle for the union (8 spikes × weight 14 = 112 per neuron):
+    // 112 ≥ 100 → every neuron fires, subtract-reset residue 12.
+    assert_eq!(o.stats.pipeline.spikes_forwarded, 8, "union must be consumed");
+    assert_eq!(o.stats.pipeline.sops, 8 * 8);
+    assert_eq!(o.spikes, (0..8).collect::<Vec<u32>>());
+    assert!(opt.neurons().mps().iter().all(|&m| m == 12));
+
+    // The frozen engine demonstrates the old fill_shadow bug: the IDMA
+    // burst is silently dropped, only the routed spikes survive
+    // (4 × 14 = 56 < 100 → no neuron fires). This assertion is the test
+    // that "fails against the old semantics": the oracle outcome above
+    // does not hold on the reference.
+    assert_eq!(
+        r.stats.pipeline.spikes_forwarded,
+        4,
+        "reference must exhibit the frozen overwrite bug"
+    );
+    assert!(r.spikes.is_empty());
+    assert!(refc.neurons().mps().iter().all(|&m| m == 56));
+    assert_ne!(o, r, "multi-source staging must distinguish the engines");
+}
+
+/// OR-merge is a set union, not addition: overlapping stagings must not
+/// double-count a spike, and merging must compose with the consume-on-
+/// read clearing across timesteps.
+#[test]
+fn overlapping_multi_source_staging_is_a_union() {
+    let cb = Codebook::default_log16();
+    let mut b = SynapsesBuilder::new(32, 8, cb.n());
+    b.connect_dense(|_, _| 12).unwrap();
+    let mut core = NeuroCore::new(
+        0,
+        32,
+        8,
+        params(1000, LeakMode::None),
+        cb,
+        b.build(),
+        EnergyParams::nominal(),
+    )
+    .unwrap();
+    core.stage_input_spikes(&[0, 1, 2]);
+    core.stage_input_spikes(&[2, 3]); // axon 2 staged twice → one spike
+    let out = core.tick_timestep();
+    assert_eq!(out.stats.pipeline.spikes_forwarded, 4);
+    assert!(core.neurons().mps().iter().all(|&m| m == 4 * 14));
+    // Next timestep starts from a clean bank: a single fresh staging is
+    // not polluted by the previous timestep's merge.
+    core.stage_input_spikes(&[7]);
+    let out = core.tick_timestep();
+    assert_eq!(out.stats.pipeline.spikes_forwarded, 1);
+    assert!(core.neurons().mps().iter().all(|&m| m == 5 * 14));
+}
