@@ -1,10 +1,13 @@
 //! Streaming serving demo: many independent edge sessions — different
-//! users, different traffic — served concurrently by a `SocPool`, one
-//! simulated chip per session, with deterministic merged reporting.
+//! users, different traffic — submitted to the persistent `ServeRuntime`
+//! and served by pull-based workers on **warm, reused chips**.
 //!
-//! The pool result is **bit-identical** to serving the same sessions
-//! sequentially (asserted below down to `f64::to_bits`), so heavy
-//! multi-threaded serving never changes the physics.
+//! Results stream back in completion order (short sessions surface while
+//! the saturation session is still running — no head-of-line blocking),
+//! and the final merged report is **bit-identical** to serving the same
+//! sessions sequentially on fresh chips (asserted below down to
+//! `f64::to_bits`), so neither multi-threading nor warm chip reuse ever
+//! changes the physics.
 //!
 //! ```bash
 //! cargo run --release --example serve_sessions
@@ -24,10 +27,10 @@ fn net() -> NetworkDesc {
     structural_net("serve-demo", w.inputs(), 48, w.classes(), w.timesteps())
 }
 
-/// The session mix: two synthetic NMNIST streams (different seeds), two
-/// seeded traffic generators at the same geometry, and one session at
-/// the shared saturation recipe — the same scenario the NoC benches and
-/// the CI perf-smoke job measure.
+/// The session mix: one session at the shared saturation recipe — the
+/// same scenario the NoC benches and the CI perf-smoke job measure —
+/// submitted FIRST, then two synthetic NMNIST streams (different seeds)
+/// and two seeded traffic generators at the same geometry.
 fn specs() -> Vec<SessionSpec> {
     let w = Workload::Nmnist;
     vec![
@@ -76,15 +79,32 @@ fn specs() -> Vec<SessionSpec> {
 
 fn main() -> fullerene_soc::Result<()> {
     let net = net();
-    let pool = SocBuilder::new().workers(4).build_pool(&net)?;
+    let builder = SocBuilder::new().workers(4).queue_depth(8).keep_warm(true);
 
-    println!(
-        "serving {} sessions across {} workers …",
-        specs().len(),
-        pool.workers()
-    );
-    let par = pool.serve(specs())?;
-    let seq = pool.serve_sequential(specs())?;
+    // The persistent runtime: submit sessions as they "arrive" (here, all
+    // at once), stream outcomes back as they finish.
+    let mut rt = builder.build_serve_runtime(&net)?;
+    println!("serving {} sessions across {} workers …", specs().len(), rt.workers());
+    let tickets: Vec<_> = specs()
+        .into_iter()
+        .map(|s| rt.submit(s))
+        .collect::<fullerene_soc::Result<_>>()?;
+    for r in rt.outcomes() {
+        match &r.outcome {
+            Ok(o) => println!(
+                "  finished {:16} (#{}) — {} samples, queue wait {:.3} ms",
+                r.name,
+                r.index,
+                o.stats.samples,
+                o.queue_wait_s * 1e3
+            ),
+            Err(e) => println!("  FAILED {:16} (#{}) — {e}", r.name, r.index),
+        }
+    }
+    // Tickets are an equivalent per-session view (waits return instantly
+    // now that everything is done).
+    assert!(tickets.iter().all(|t| t.wait().is_ok()));
+    let par = rt.finish()?;
 
     let mut t = Table::new(&["session", "samples", "p50 ms", "p99 ms", "SOPs", "pJ/SOP"]);
     for s in &par.sessions {
@@ -99,14 +119,16 @@ fn main() -> fullerene_soc::Result<()> {
     }
     println!("{}", t.render());
 
-    // Determinism: concurrent serving is bit-identical to sequential.
+    // Determinism: warm concurrent serving is bit-identical to a
+    // sequential pass on fresh chips (the reference path).
+    let seq = builder.build_pool(&net)?.serve_sequential(specs())?;
     assert_eq!(
         par.merged.pj_per_sop.to_bits(),
         seq.merged.pj_per_sop.to_bits()
     );
     assert_eq!(par.merged.power_mw.to_bits(), seq.merged.power_mw.to_bits());
     assert_eq!(par.merged.cycles, seq.merged.cycles);
-    println!("parallel == sequential (bit-identical merged report) ✓\n");
+    println!("runtime (warm, 4 workers) == sequential (cold) — bit-identical merge ✓\n");
 
     println!(
         "merged report:\n{}",

@@ -63,7 +63,7 @@ fn main() {
 
     // --- serving path: throughput + session latency -------------------------
     // (machine-readable BENCH_sessions.json for the perf trajectory)
-    println!("\n## serving path: SocPool sessions bench");
+    println!("\n## serving path: ServeRuntime sessions bench");
     let sb = benches_support::sessions_bench(6, 8, 4, 42).expect("sessions bench");
     println!(
         "{} sessions x {} samples on {} workers: {:.1} samples/s host, \

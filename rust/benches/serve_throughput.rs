@@ -1,0 +1,100 @@
+//! Serving-layer perf smoke: host-side session throughput of the
+//! persistent `ServeRuntime` — a uniform session mix and a skewed mix
+//! (one long + N short sessions) across 2 pull-based workers, plus a
+//! warm-vs-cold chip pair on 1 worker whose sessions-per-second ratio is
+//! the machine-independent win of `Soc::reset_for_session` over paying
+//! `Soc::new` per session (the third perf-trajectory axis next to
+//! `BENCH_noc.json` and `BENCH_core.json`).
+//!
+//! Emits `BENCH_serve.json` (schema `bench-serve-v1`) in the working
+//! directory and gates against a checked-in `BENCH_serve.baseline.json`
+//! (working directory, then the repository root), failing the process on
+//! a >30 % regression. The warm-vs-cold speedup must stay > 1.0 and the
+//! skewed mix's short sessions must finish before the long one,
+//! whatever the baseline. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_SERVE_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_SERVE_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{serve_perf, serve_perf_check, serve_perf_json};
+use fullerene_soc::metrics::Table;
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_SERVE_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in ["BENCH_serve.baseline.json", "../BENCH_serve.baseline.json"] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let perf = serve_perf(42, fast).expect("serve perf scenarios run");
+
+    let mut t = Table::new(&[
+        "scenario",
+        "sessions",
+        "samples",
+        "workers",
+        "host s",
+        "sessions/s",
+        "q-wait p50 ms",
+        "q-wait p99 ms",
+    ]);
+    for c in &perf.cases {
+        t.push_row(vec![
+            c.name.clone(),
+            c.sessions.to_string(),
+            c.samples.to_string(),
+            c.workers.to_string(),
+            format!("{:.3}", c.host_s),
+            format!("{:.1}", c.sessions_per_s),
+            format!("{:.3}", c.queue_wait_p50_s * 1e3),
+            format!("{:.3}", c.queue_wait_p99_s * 1e3),
+        ]);
+    }
+    println!("## bench: serve_throughput\n{}", t.render());
+    println!(
+        "warm-vs-cold chip speedup (reset_for_session vs Soc::new per session): {:.2}x",
+        perf.warm_vs_cold_speedup
+    );
+    println!(
+        "skewed mix: short sessions finished before the long one: {}",
+        perf.skewed_shorts_finished_first
+    );
+
+    let out = Path::new("BENCH_serve.json");
+    serve_perf_json(&perf, "measured")
+        .write_file(out)
+        .expect("write BENCH_serve.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_SERVE_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_SERVE_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => println!("no BENCH_serve.baseline.json found; baseline check skipped"),
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = serve_perf_check(&perf, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("PERF REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

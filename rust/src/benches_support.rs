@@ -30,6 +30,12 @@
 //!   `BENCH_core.json` by `benches/core_throughput.rs` and gated in CI
 //!   via [`core_perf_check`] — the second perf-trajectory axis next to
 //!   `BENCH_noc.json`.
+//! - [`serve_perf`] — serving-layer host throughput (sessions/s on
+//!   uniform vs skewed session mixes, warm-vs-cold chip speedup as a
+//!   machine-independent ratio, queue-wait percentiles) of the
+//!   [`ServeRuntime`], emitted as `BENCH_serve.json` by
+//!   `benches/serve_throughput.rs` and gated in CI via
+//!   [`serve_perf_check`] — the third perf-trajectory axis.
 
 use crate::coordinator::GoldenCheck;
 use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
@@ -42,7 +48,7 @@ use crate::noc::traffic::{Pattern, TrafficGen};
 use crate::noc::{Dest, Fabric, MultiDomain, NocSim, ReferenceNocSim, Topology, TraceMode};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::firmware;
-use crate::serve::{SessionSpec, SocPool, TrafficWorkload};
+use crate::serve::{ServeRuntime, SessionSpec, TrafficWorkload};
 use crate::soc::SocConfig;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -785,6 +791,384 @@ pub fn core_perf_check(current: &CorePerf, baseline: &Json, max_regress: f64) ->
     fails
 }
 
+// ===================== serve perf baseline (BENCH_serve.json) ==============
+
+/// Geometry of the serve-perf network/stream: big enough that
+/// `Soc::new` (mapping planning, synapse-table builds, hop-table
+/// precompute) is a visible per-session cost for the warm-vs-cold pair,
+/// small enough for the CI smoke budget.
+pub const SERVE_PERF_INPUTS: usize = 512;
+const SERVE_PERF_HIDDEN: usize = 256;
+const SERVE_PERF_CLASSES: usize = 4;
+const SERVE_PERF_TIMESTEPS: usize = 2;
+/// Event rate of the serve-perf traffic streams.
+pub const SERVE_PERF_RATE: f64 = 0.05;
+
+fn serve_perf_net() -> NetworkDesc {
+    structural_net(
+        "serve-perf",
+        SERVE_PERF_INPUTS,
+        SERVE_PERF_HIDDEN,
+        SERVE_PERF_CLASSES,
+        SERVE_PERF_TIMESTEPS,
+    )
+}
+
+fn serve_perf_spec(name: &str, samples: usize, seed: u64) -> SessionSpec {
+    SessionSpec::new(
+        name,
+        Box::new(TrafficWorkload::new(
+            SERVE_PERF_INPUTS,
+            SERVE_PERF_CLASSES,
+            SERVE_PERF_TIMESTEPS,
+            SERVE_PERF_RATE,
+            samples,
+            seed,
+        )),
+    )
+}
+
+/// One timed pass through a [`ServeRuntime`].
+struct ServeRun {
+    /// Wall seconds from first submit to last outcome.
+    host_s: f64,
+    /// Per-session host queue waits (seconds), completion order.
+    waits: Vec<f64>,
+    /// Session names in completion order.
+    completion: Vec<String>,
+}
+
+/// Serve `specs` through a fresh runtime and record wall time, queue
+/// waits and completion order. `queue_depth` is sized to the spec list
+/// so submission never blocks (the mixes measure serving, not admission).
+fn serve_run(
+    net: &NetworkDesc,
+    workers: usize,
+    keep_warm: bool,
+    specs: Vec<SessionSpec>,
+) -> Result<ServeRun> {
+    let depth = specs.len().max(1);
+    let mut rt = ServeRuntime::new(
+        net.clone(),
+        SocConfig::default(),
+        workers,
+        GoldenCheck::None,
+        depth,
+        keep_warm,
+    )?;
+    let t0 = std::time::Instant::now();
+    for spec in specs {
+        rt.submit(spec)?;
+    }
+    let mut waits = Vec::new();
+    let mut completion = Vec::new();
+    for r in rt.outcomes() {
+        let o = r.outcome?;
+        waits.push(o.queue_wait_s);
+        completion.push(r.name);
+    }
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(ServeRun {
+        host_s,
+        waits,
+        completion,
+    })
+}
+
+/// One measured serving scenario.
+#[derive(Debug, Clone)]
+pub struct ServePerfCase {
+    /// Scenario name (`uniform`, `skewed`, `warm`, `cold`).
+    pub name: String,
+    /// Sessions served per repetition.
+    pub sessions: u64,
+    /// Samples served per repetition (across all sessions).
+    pub samples: u64,
+    /// Worker threads.
+    pub workers: u64,
+    /// Host wall-clock total across reps (seconds).
+    pub host_s: f64,
+    /// Sessions per host second (best repetition, same best-of policy as
+    /// [`NocPerfCase`]/[`CorePerfCase`] rates).
+    pub sessions_per_s: f64,
+    /// Median host queue wait (seconds, pooled over reps): submission →
+    /// a worker picking the session up.
+    pub queue_wait_p50_s: f64,
+    /// 99th-percentile host queue wait (seconds, pooled over reps).
+    pub queue_wait_p99_s: f64,
+}
+
+/// The `BENCH_serve.json` payload: [`ServeRuntime`] host throughput on a
+/// uniform and a skewed session mix, the warm-vs-cold chip speedup (the
+/// machine-independent ratio — how much `Soc::reset_for_session` saves
+/// over `Soc::new` per session), queue-wait percentiles, and whether the
+/// skewed mix's short sessions finished before the long one (the
+/// no-head-of-line-blocking witness).
+#[derive(Debug, Clone)]
+pub struct ServePerf {
+    /// Measured scenarios: `uniform`, `skewed` (2 workers), `warm`,
+    /// `cold` (1 worker, 1-sample sessions).
+    pub cases: Vec<ServePerfCase>,
+    /// Warm / cold sessions-per-second ratio — the chip-reuse win,
+    /// independent of host speed.
+    pub warm_vs_cold_speedup: f64,
+    /// True when, in at least one skewed repetition, every short
+    /// session's outcome surfaced before the long session finished
+    /// (any-rep, like the best-of rate policy: one scheduler preemption
+    /// on a busy CI host must not fail the gate).
+    pub skewed_shorts_finished_first: bool,
+}
+
+/// Pooled queue-wait percentiles of a scenario's runs.
+fn wait_percentiles(runs: &[ServeRun]) -> (f64, f64) {
+    let mut all: Vec<f64> = runs.iter().flat_map(|r| r.waits.iter().copied()).collect();
+    all.sort_by(|a, b| a.partial_cmp(b).expect("queue waits are finite"));
+    (
+        crate::serve::session::percentile(&all, 0.50),
+        crate::serve::session::percentile(&all, 0.99),
+    )
+}
+
+/// Fold repeated [`ServeRun`]s into one [`ServePerfCase`] (best-of rate,
+/// pooled waits, summed wall time).
+fn serve_case(
+    name: &str,
+    sessions: u64,
+    samples: u64,
+    workers: u64,
+    runs: &[ServeRun],
+) -> ServePerfCase {
+    let host_s: f64 = runs.iter().map(|r| r.host_s).sum();
+    let best_sps = runs
+        .iter()
+        .map(|r| sessions as f64 / r.host_s)
+        .fold(0.0f64, f64::max);
+    let (p50, p99) = wait_percentiles(runs);
+    ServePerfCase {
+        name: name.to_string(),
+        sessions,
+        samples,
+        workers,
+        host_s,
+        sessions_per_s: best_sps,
+        queue_wait_p50_s: p50,
+        queue_wait_p99_s: p99,
+    }
+}
+
+/// Samples in the skewed mix's long session (`fast` = CI smoke budget).
+pub fn serve_skew_long_samples(fast: bool) -> usize {
+    if fast {
+        24
+    } else {
+        40
+    }
+}
+/// Short sessions in the skewed mix.
+pub const SERVE_SKEW_SHORTS: usize = 4;
+
+/// Run the serving perf scenarios:
+///
+/// - `uniform` — equal-length sessions across 2 workers (the serving
+///   steady state);
+/// - `skewed` — one long session submitted **first**, then
+///   [`SERVE_SKEW_SHORTS`] one-sample sessions, across 2 workers: with
+///   pull-based dispatch the long session occupies exactly one worker
+///   and every short outcome surfaces while it is still running (static
+///   `i % workers` buckets would have parked half the shorts behind it);
+/// - `warm` / `cold` — identical 1-sample session lists on one worker,
+///   with and without [`crate::soc::Soc::reset_for_session`] chip reuse;
+///   their sessions-per-second ratio is the machine-independent
+///   warm-reuse win.
+pub fn serve_perf(seed: u64, fast: bool) -> Result<ServePerf> {
+    let net = serve_perf_net();
+    // Every scenario feeds a gate figure (speedup ratio, HOL witness, or
+    // a measured-baseline throughput floor), and every window is small —
+    // so all run best-of-3 like the core bench; `fast` shrinks windows.
+    let reps = 3u64;
+    let uniform_sessions: usize = if fast { 4 } else { 6 };
+    let uniform_samples: usize = if fast { 2 } else { 4 };
+    let long_samples = serve_skew_long_samples(fast);
+    let wc_sessions: usize = if fast { 6 } else { 8 };
+
+    let mut uniform_runs = Vec::new();
+    for r in 0..reps {
+        let specs: Vec<SessionSpec> = (0..uniform_sessions)
+            .map(|i| {
+                serve_perf_spec(
+                    &format!("uni{i}"),
+                    uniform_samples,
+                    seed + 10 * r + i as u64,
+                )
+            })
+            .collect();
+        uniform_runs.push(serve_run(&net, 2, true, specs)?);
+    }
+
+    let mut skewed_runs = Vec::new();
+    for r in 0..reps {
+        let mut specs = vec![serve_perf_spec("long", long_samples, seed + 100 + r)];
+        for i in 0..SERVE_SKEW_SHORTS {
+            specs.push(serve_perf_spec(
+                &format!("short{i}"),
+                1,
+                seed + 200 + 10 * r + i as u64,
+            ));
+        }
+        skewed_runs.push(serve_run(&net, 2, true, specs)?);
+    }
+    // No head-of-line blocking: the long session (submitted first) must
+    // finish after every short session.
+    let shorts_first = skewed_runs.iter().any(|run| {
+        run.completion
+            .iter()
+            .position(|n| n == "long")
+            .is_some_and(|p| p == run.completion.len() - 1)
+    });
+
+    let wc_specs = |base: u64| -> Vec<SessionSpec> {
+        (0..wc_sessions)
+            .map(|i| serve_perf_spec(&format!("s{i}"), 1, base + i as u64))
+            .collect()
+    };
+    let mut warm_runs = Vec::new();
+    let mut cold_runs = Vec::new();
+    for r in 0..reps {
+        warm_runs.push(serve_run(&net, 1, true, wc_specs(seed + 300 + 10 * r))?);
+        cold_runs.push(serve_run(&net, 1, false, wc_specs(seed + 300 + 10 * r))?);
+    }
+
+    let uniform = serve_case(
+        "uniform",
+        uniform_sessions as u64,
+        (uniform_sessions * uniform_samples) as u64,
+        2,
+        &uniform_runs,
+    );
+    let skewed = serve_case(
+        "skewed",
+        (1 + SERVE_SKEW_SHORTS) as u64,
+        (long_samples + SERVE_SKEW_SHORTS) as u64,
+        2,
+        &skewed_runs,
+    );
+    let warm = serve_case("warm", wc_sessions as u64, wc_sessions as u64, 1, &warm_runs);
+    let cold = serve_case("cold", wc_sessions as u64, wc_sessions as u64, 1, &cold_runs);
+    let speedup = warm.sessions_per_s / cold.sessions_per_s.max(1e-9);
+    Ok(ServePerf {
+        cases: vec![uniform, skewed, warm, cold],
+        warm_vs_cold_speedup: speedup,
+        skewed_shorts_finished_first: shorts_first,
+    })
+}
+
+/// The serve perf run as machine-readable JSON (the `BENCH_serve.json`
+/// schema the CI perf-smoke job tracks).
+pub fn serve_perf_json(p: &ServePerf, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-serve-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("inputs", Json::Num(SERVE_PERF_INPUTS as f64)),
+        ("rate", Json::Num(SERVE_PERF_RATE)),
+        (
+            "scenarios",
+            Json::Arr(
+                p.cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("sessions", Json::Num(c.sessions as f64)),
+                            ("samples", Json::Num(c.samples as f64)),
+                            ("workers", Json::Num(c.workers as f64)),
+                            ("host_s", Json::Num(c.host_s)),
+                            ("sessions_per_s", Json::Num(c.sessions_per_s)),
+                            ("queue_wait_p50_s", Json::Num(c.queue_wait_p50_s)),
+                            ("queue_wait_p99_s", Json::Num(c.queue_wait_p99_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("warm_vs_cold_speedup", Json::Num(p.warm_vs_cold_speedup)),
+        (
+            "skewed_shorts_finished_first",
+            Json::Bool(p.skewed_shorts_finished_first),
+        ),
+    ])
+}
+
+/// Gate a fresh serve perf run against a checked-in baseline; returns
+/// human-readable regression descriptions (empty = pass). Same arming
+/// rule as [`noc_perf_check`]/[`core_perf_check`]:
+///
+/// - the warm-vs-cold speedup must stay **> 1.0** and the skewed mix's
+///   short sessions must have finished before the long one — always
+///   enforced (the acceptance floor of the serving redesign);
+/// - comparisons against the baseline's numbers (relative speedup,
+///   absolute `sessions_per_s` per scenario) are enforced only when the
+///   baseline's `provenance` is `"measured"` — a bootstrap baseline
+///   carries hand-estimated figures that must never fail a real run.
+pub fn serve_perf_check(current: &ServePerf, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let floor = 1.0 - max_regress;
+    if current.warm_vs_cold_speedup <= 1.0 {
+        fails.push(format!(
+            "warm-vs-cold speedup {:.3}x is not > 1.0 (chip reuse saves nothing)",
+            current.warm_vs_cold_speedup
+        ));
+    }
+    if !current.skewed_shorts_finished_first {
+        fails.push(
+            "head-of-line blocking: short sessions did not finish before the \
+             long one in any skewed repetition"
+                .to_string(),
+        );
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    if let Some(base) = baseline
+        .get_opt("warm_vs_cold_speedup")
+        .and_then(|v| v.as_f64().ok())
+    {
+        if current.warm_vs_cold_speedup < floor * base {
+            fails.push(format!(
+                "warm-vs-cold speedup regressed: {:.2}x vs baseline {:.2}x",
+                current.warm_vs_cold_speedup, base
+            ));
+        }
+    }
+    let Some(scenarios) = baseline.get_opt("scenarios").and_then(|v| v.as_arr().ok())
+    else {
+        return fails;
+    };
+    for b in scenarios {
+        let Some(name) = b.get_opt("name").and_then(|v| v.as_str().ok()) else {
+            continue;
+        };
+        let Some(cur) = current.cases.iter().find(|c| c.name == name) else {
+            fails.push(format!("scenario '{name}' missing from the current run"));
+            continue;
+        };
+        if let Some(base_v) = b.get_opt("sessions_per_s").and_then(|v| v.as_f64().ok()) {
+            if cur.sessions_per_s < floor * base_v {
+                fails.push(format!(
+                    "{name}/sessions_per_s regressed: {:.1} vs baseline {base_v:.1} \
+                     (allowed floor {:.1})",
+                    cur.sessions_per_s,
+                    floor * base_v
+                ));
+            }
+        }
+    }
+    fails
+}
+
 /// One Fig. 5c measurement point.
 #[derive(Debug, Clone)]
 pub struct Fig5cPoint {
@@ -1073,18 +1457,22 @@ pub struct SessionsBench {
 }
 
 /// Run the serving-path benchmark: seeded traffic sessions through a
-/// [`SocPool`], measuring host throughput and simulated latency.
+/// [`ServeRuntime`] (warm chips, pull-based dispatch), measuring host
+/// throughput and simulated latency.
 pub fn sessions_bench(
     sessions: usize,
     samples_per_session: usize,
     workers: usize,
     seed: u64,
 ) -> Result<SessionsBench> {
-    let pool = SocPool::new(
+    let workers = workers.max(1);
+    let mut rt = ServeRuntime::new(
         serve_bench_net(),
         SocConfig::default(),
-        workers.max(1),
+        workers,
         GoldenCheck::None,
+        sessions.max(1),
+        true,
     )?;
     let specs: Vec<SessionSpec> = (0..sessions)
         .map(|i| {
@@ -1102,7 +1490,10 @@ pub fn sessions_bench(
         })
         .collect();
     let t0 = std::time::Instant::now();
-    let out = pool.serve(specs)?;
+    for spec in specs {
+        rt.submit(spec)?;
+    }
+    let out = rt.finish()?;
     let host_wall_s = t0.elapsed().as_secs_f64();
     let mut session_ms: Vec<f64> = out
         .sessions
@@ -1115,7 +1506,7 @@ pub fn sessions_bench(
     Ok(SessionsBench {
         sessions,
         samples_per_session,
-        workers: pool.workers(),
+        workers,
         total_samples,
         host_wall_s,
         throughput_samples_per_s: if host_wall_s > 0.0 {
@@ -1373,6 +1764,78 @@ mod tests {
             sparse_speedup_vs_reference: 2.0,
         };
         assert!(!core_perf_check(&slow, &bootstrap, 0.30).is_empty());
+    }
+
+    #[test]
+    fn serve_perf_scenarios_run_and_shorts_beat_the_long_session() {
+        let p = serve_perf(7, true).unwrap();
+        assert_eq!(p.cases.len(), 4);
+        let names: Vec<&str> = p.cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["uniform", "skewed", "warm", "cold"]);
+        for c in &p.cases {
+            assert!(c.sessions > 0 && c.samples > 0, "{}: empty scenario", c.name);
+            assert!(c.sessions_per_s > 0.0, "{}", c.name);
+            assert!(c.host_s > 0.0);
+            assert!(
+                c.queue_wait_p99_s >= c.queue_wait_p50_s,
+                "{}: wait percentiles inverted",
+                c.name
+            );
+        }
+        // Pull-based dispatch: the long session never blocks the shorts.
+        assert!(
+            p.skewed_shorts_finished_first,
+            "head-of-line blocking in the skewed mix"
+        );
+        // The ratio is a gate figure in the bench binary (release mode,
+        // > 1.0); the unit test pins that it is well-formed.
+        assert!(p.warm_vs_cold_speedup.is_finite() && p.warm_vs_cold_speedup > 0.0);
+        let j = serve_perf_json(&p, "measured").to_string();
+        assert!(j.contains("sessions_per_s") && j.contains("warm_vs_cold_speedup"));
+        assert!(j.contains("skewed_shorts_finished_first"));
+    }
+
+    #[test]
+    fn serve_perf_check_gates_floors_and_measured_baselines() {
+        let case = |name: &str, sps: f64| ServePerfCase {
+            name: name.into(),
+            sessions: 5,
+            samples: 10,
+            workers: 2,
+            host_s: 0.01,
+            sessions_per_s: sps,
+            queue_wait_p50_s: 0.0001,
+            queue_wait_p99_s: 0.0010,
+        };
+        let current = ServePerf {
+            cases: vec![case("uniform", 100.0), case("warm", 200.0)],
+            warm_vs_cold_speedup: 1.5,
+            skewed_shorts_finished_first: true,
+        };
+        // Bootstrap baseline: only the absolute floors are gated — its
+        // hand-estimated figures must never fail a real run.
+        let bootstrap = Json::parse(
+            r#"{"provenance":"bootstrap","warm_vs_cold_speedup":9.0,
+                "scenarios":[{"name":"uniform","sessions_per_s":1e9}]}"#,
+        )
+        .unwrap();
+        assert!(serve_perf_check(&current, &bootstrap, 0.30).is_empty());
+        // Measured baseline: absolute throughput + relative speedup gated.
+        let measured = Json::parse(
+            r#"{"provenance":"measured","warm_vs_cold_speedup":9.0,
+                "scenarios":[{"name":"uniform","sessions_per_s":1e9}]}"#,
+        )
+        .unwrap();
+        let fails = serve_perf_check(&current, &measured, 0.30);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        // The acceptance floors always fire, whatever the baseline.
+        let regressed = ServePerf {
+            cases: vec![],
+            warm_vs_cold_speedup: 0.9,
+            skewed_shorts_finished_first: false,
+        };
+        let fails = serve_perf_check(&regressed, &bootstrap, 0.30);
+        assert_eq!(fails.len(), 2, "{fails:?}");
     }
 
     #[test]

@@ -210,6 +210,11 @@ impl ExperimentRunner {
                 )
             })
             .collect();
+        // The batch-compat wrapper is exactly the semantics a sharded
+        // batch run wants (all specs known up front, all-or-nothing
+        // error contract), so the deprecation nudge toward streaming
+        // ServeRuntime does not apply here.
+        #[allow(deprecated)]
         let out = if parallel {
             pool.serve(specs)?
         } else {

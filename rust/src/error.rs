@@ -39,8 +39,37 @@ pub enum Error {
     /// JSON parse/serialize error (in-tree parser, `util::json`).
     Json(String),
 
+    /// A bounded serving submission queue is full (backpressure signal
+    /// from [`crate::serve::ServeRuntime::try_submit`]); carries the
+    /// queue depth that was exceeded.
+    QueueFull(usize),
+
     /// I/O error.
     Io(std::io::Error),
+}
+
+/// Errors are cloneable so one serving outcome can be observed from
+/// several places (a [`crate::serve::SessionTicket`], the streaming
+/// outcome iterator and the final merged report) without draining it.
+/// `Io` carries `std::io::Error` (not `Clone`); its clone preserves the
+/// kind and message.
+impl Clone for Error {
+    fn clone(&self) -> Self {
+        match self {
+            Error::Config(m) => Error::Config(m.clone()),
+            Error::Network(m) => Error::Network(m.clone()),
+            Error::Mapping(m) => Error::Mapping(m.clone()),
+            Error::Noc(m) => Error::Noc(m.clone()),
+            Error::Core(m) => Error::Core(m.clone()),
+            Error::Riscv(m) => Error::Riscv(m.clone()),
+            Error::Soc(m) => Error::Soc(m.clone()),
+            Error::Runtime(m) => Error::Runtime(m.clone()),
+            Error::Artifact(m) => Error::Artifact(m.clone()),
+            Error::Json(m) => Error::Json(m.clone()),
+            Error::QueueFull(d) => Error::QueueFull(*d),
+            Error::Io(e) => Error::Io(std::io::Error::new(e.kind(), e.to_string())),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -56,6 +85,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Json(m) => write!(f, "json error: {m}"),
+            Error::QueueFull(d) => {
+                write!(f, "serve queue full (depth {d}); retry or use submit()")
+            }
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -91,6 +123,17 @@ mod tests {
     fn display_includes_layer_prefix() {
         assert_eq!(Error::Noc("x".into()).to_string(), "noc error: x");
         assert_eq!(Error::Config("y".into()).to_string(), "config error: y");
+    }
+
+    #[test]
+    fn clone_preserves_variant_and_message() {
+        let e = Error::QueueFull(4);
+        assert!(matches!(e.clone(), Error::QueueFull(4)));
+        assert!(e.to_string().contains("depth 4"));
+        let io = Error::Io(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let c = io.clone();
+        assert_eq!(io.to_string(), c.to_string());
+        assert!(matches!(c, Error::Io(_)));
     }
 
     #[test]

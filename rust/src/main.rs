@@ -5,9 +5,11 @@
 //! - `run`       — run a workload on the simulated chip and print the
 //!                 Table-I-style report (`--workload`, `--samples`,
 //!                 `--config <json>`, `--check none|reference|xla|both`).
-//! - `serve`     — stream N concurrent sessions through a `SocPool`
-//!                 (`--sessions`, `--workload <spec>`, `--workers`) and
-//!                 print per-session latency stats + the merged report.
+//! - `serve`     — stream N concurrent sessions through the persistent
+//!                 `ServeRuntime` (`--sessions`, `--workload <spec>`,
+//!                 `--workers`, `--queue-depth`, `--no-warm`), printing
+//!                 outcomes as sessions finish plus per-session latency
+//!                 stats and the merged report.
 //! - `topo`      — print the Fig. 5a/5b topology comparison table.
 //! - `bench`     — quick in-CLI reproductions: `core-sparsity` (Fig. 3),
 //!                 `router` (Fig. 5c), `riscv-power` (Fig. 6).
@@ -69,8 +71,11 @@ fn print_help() {
                    --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
                    --domains D (multi-domain chip: D fullerene domains + L2 ring)\n\
          serve     --sessions N  --workers K  --samples S  --seed S  --check none|reference\n\
+                   --queue-depth Q (bounded submission queue; default = N)\n\
+                   --no-warm (fresh chip per session instead of warm reuse)\n\
                    --workload <spec>  (spec: nmnist | dvsgesture | cifar10 |\n\
-                   replay:<dataset.json> | traffic:<inputs>x<classes>x<timesteps>@<rate>;\n\
+                   replay:<dataset.json> | traffic:<inputs>x<classes>x<timesteps>@<rate> |\n\
+                   synthetic:<inputs>x<classes>x<timesteps>@<rate>;\n\
                    replay shares one parsed file across sessions, --samples caps its\n\
                    length and --seed is ignored for recorded streams)\n\
          topo      (prints the Fig. 5 topology comparison)\n\
@@ -221,6 +226,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "seed",
         "check",
         "hidden",
+        "queue-depth",
+        "no-warm",
         "no-noc",
         "no-cpu",
         "f-core-mhz",
@@ -234,6 +241,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let samples: usize = args.get_parse_or("samples", 8);
     let seed: u64 = args.get_parse_or("seed", 7);
     let spec = args.get_or("workload", "nmnist");
+    // Default queue depth: the whole mix fits (clamped to the builder's
+    // ceiling so a huge --sessions never fails validation on a flag the
+    // user didn't pass), so the CLI submit loop never blocks; an
+    // explicit smaller --queue-depth exercises backpressure. Explicit
+    // values are range-checked by SocBuilder::validate, like every
+    // other chip/serving knob.
+    let queue_depth: usize = args.get_parse_or(
+        "queue-depth",
+        sessions.clamp(1, fullerene_soc::serve::builder::MAX_QUEUE_DEPTH),
+    );
+    let keep_warm = !args.flag("no-warm");
     let check = match args.get("check") {
         Some(c) => parse_check(c)?,
         None => fullerene_soc::coordinator::GoldenCheck::None,
@@ -301,11 +319,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (net, specs)
     };
 
-    let pool = SocBuilder::from_soc_config(cfg.soc.clone())
+    // The streaming runtime: persistent workers, bounded submission
+    // queue, warm chip reuse. All serving knobs (including --queue-depth
+    // and --no-warm) funnel through SocBuilder::validate.
+    let mut rt = SocBuilder::from_soc_config(cfg.soc.clone())
         .check(check)
         .workers(workers)
-        .build_pool(&net)?;
-    let out = pool.serve(specs)?;
+        .queue_depth(queue_depth)
+        .keep_warm(keep_warm)
+        .build_serve_runtime(&net)?;
+    for spec in specs {
+        rt.submit(spec)?;
+    }
+    // Stream results as sessions finish (completion order) …
+    for r in rt.outcomes() {
+        match &r.outcome {
+            Ok(o) => println!(
+                "done {:12} #{:<3} {} samples, queue wait {:.3} ms",
+                r.name,
+                r.index,
+                o.stats.samples,
+                o.queue_wait_s * 1e3
+            ),
+            Err(e) => println!("FAILED {:10} #{:<3} {e}", r.name, r.index),
+        }
+    }
+    // … then fold the submission-order aggregate. Failed sessions are
+    // isolated: listed below, excluded from the merge.
+    let out = rt.finish()?;
 
     let mut t = Table::new(&["session", "samples", "cycles", "p50 ms", "p99 ms", "SOPs"]);
     for s in &out.sessions {
@@ -319,6 +360,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    for f in &out.failures {
+        eprintln!("session '{}' (#{}) failed: {}", f.name, f.index, f.error);
+    }
     if out.checked > 0 {
         println!(
             "golden check: {} samples checked, {} mismatches",
@@ -326,9 +370,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "merged report ({} sessions, {} workers):\n{}",
+        "merged report ({} sessions, {} workers, {}):\n{}",
         out.sessions.len(),
-        pool.workers(),
+        workers,
+        if keep_warm { "warm chips" } else { "cold chips" },
         ChipReport::table(std::slice::from_ref(&out.merged)).render()
     );
     Ok(())

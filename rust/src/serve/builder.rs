@@ -8,6 +8,7 @@
 //! so no construction route can skip range checking anymore.
 
 use super::pool::SocPool;
+use super::runtime::ServeRuntime;
 use super::session::Session;
 use crate::config::RunConfig;
 use crate::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
@@ -25,7 +26,16 @@ pub struct SocBuilder {
     artifacts: PathBuf,
     limit: usize,
     workers: usize,
+    queue_depth: usize,
+    keep_warm: bool,
 }
+
+/// Default bounded submission-queue depth for serve runtimes built
+/// without an explicit [`SocBuilder::queue_depth`].
+pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+/// Upper bound on the submission-queue depth (each pending entry holds a
+/// boxed workload; an unbounded queue would defeat backpressure).
+pub const MAX_QUEUE_DEPTH: usize = 65_536;
 
 impl Default for SocBuilder {
     fn default() -> Self {
@@ -46,6 +56,8 @@ impl SocBuilder {
             workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            keep_warm: true,
         }
     }
 
@@ -148,9 +160,28 @@ impl SocBuilder {
         self
     }
 
-    /// Worker threads for pools built from this builder.
+    /// Worker threads for pools/runtimes built from this builder.
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Bounded submission-queue depth for serve runtimes built from this
+    /// builder: [`ServeRuntime::submit`] blocks (and
+    /// [`ServeRuntime::try_submit`] returns [`Error::QueueFull`]) once
+    /// this many sessions are queued ahead of the workers.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Warm chip reuse for serve runtimes built from this builder:
+    /// `true` (default) re-arms each worker's chip via
+    /// [`crate::soc::Soc::reset_for_session`] between sessions;
+    /// `false` builds a fresh chip per session (the cold baseline the
+    /// serve bench measures against).
+    pub fn keep_warm(mut self, on: bool) -> Self {
+        self.keep_warm = on;
         self
     }
 
@@ -205,6 +236,12 @@ impl SocBuilder {
         if self.workers == 0 {
             return Err(Error::Config("workers must be >= 1".into()));
         }
+        if !(1..=MAX_QUEUE_DEPTH).contains(&self.queue_depth) {
+            return Err(Error::Config(format!(
+                "queue_depth {} outside 1..={MAX_QUEUE_DEPTH}",
+                self.queue_depth
+            )));
+        }
         Ok(())
     }
 
@@ -230,6 +267,23 @@ impl SocBuilder {
     pub fn build_pool(&self, net: &NetworkDesc) -> Result<SocPool> {
         self.validate()?;
         SocPool::new(net.clone(), self.soc.clone(), self.workers, self.check)
+    }
+
+    /// Validate and spawn a persistent [`ServeRuntime`] over `net` with
+    /// this builder's worker count, check mode, queue depth and
+    /// warm-reuse policy — the validation choke point in front of the
+    /// serving engine (CLI `serve --queue-depth/--no-warm` funnels
+    /// through here too).
+    pub fn build_serve_runtime(&self, net: &NetworkDesc) -> Result<ServeRuntime> {
+        self.validate()?;
+        ServeRuntime::new(
+            net.clone(),
+            self.soc.clone(),
+            self.workers,
+            self.check,
+            self.queue_depth,
+            self.keep_warm,
+        )
     }
 
     /// Validate and build a batch [`ExperimentRunner`] over `net`.
@@ -280,6 +334,13 @@ mod tests {
         assert!(SocBuilder::new().f_cpu_hz(5.0e6).validate().is_err());
         assert!(SocBuilder::new().supply_v(2.0).validate().is_err());
         assert!(SocBuilder::new().workers(0).validate().is_err());
+        assert!(SocBuilder::new().queue_depth(0).validate().is_err());
+        assert!(SocBuilder::new()
+            .queue_depth(MAX_QUEUE_DEPTH + 1)
+            .validate()
+            .is_err());
+        assert!(SocBuilder::new().queue_depth(1).validate().is_ok());
+        assert!(SocBuilder::new().keep_warm(false).validate().is_ok());
         assert!(SocBuilder::new().validate().is_ok());
     }
 }

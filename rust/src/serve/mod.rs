@@ -5,8 +5,8 @@
 //! instead of only running pre-materialized batches:
 //!
 //! - [`SocBuilder`] — fluent construction + **the** single validation
-//!   choke point for chip/run configuration (JSON, CLI flags and fluent
-//!   calls all funnel through it);
+//!   choke point for chip/run/serving configuration (JSON, CLI flags
+//!   and fluent calls all funnel through it);
 //! - [`Workload`] — pluggable sample sources ([`SyntheticStream`],
 //!   [`EventReplay`], [`TrafficWorkload`], or anything downstream
 //!   implements), parsed from spec strings by [`workload_from_spec`];
@@ -14,20 +14,31 @@
 //!   incremental [`Session::snapshot`] reports, per-session
 //!   energy/latency ledgers and a consuming [`Session::close`] (the
 //!   typestate makes "forgot `finish_report`" unrepresentable);
-//! - [`SocPool`] — N worker threads serving many independent sessions
-//!   concurrently, one fresh chip per session, with deterministic
-//!   merged reporting (bit-identical to sequential execution).
+//! - [`ServeRuntime`] — the serving engine: persistent worker threads
+//!   pulling from a bounded submission queue ([`ServeRuntime::submit`]
+//!   blocks on backpressure, [`ServeRuntime::try_submit`] surfaces
+//!   [`crate::Error::QueueFull`]), **warm chip reuse** via
+//!   [`crate::soc::Soc::reset_for_session`] (bit-identical to fresh
+//!   chips), per-[`SessionTicket`] waits, an [`ServeRuntime::outcomes`]
+//!   iterator yielding results as sessions finish, and per-session
+//!   failure isolation;
+//! - [`SocPool`] — the batch-compatibility wrapper over the runtime
+//!   (`serve` submits everything and waits; `serve_sequential` is the
+//!   fresh-chip sequential reference path the runtime's bit-identity
+//!   guarantee is stated against).
 //!
 //! The batch layer ([`crate::coordinator::ExperimentRunner`]) is rebuilt
 //! on top of these primitives.
 
 pub mod builder;
 pub mod pool;
+pub mod runtime;
 pub mod session;
 pub mod workload;
 
 pub use builder::SocBuilder;
-pub use pool::{ServeOutcome, SessionOutcome, SessionSpec, SocPool};
+pub use pool::{ServeOutcome, SessionFailure, SessionOutcome, SessionSpec, SocPool};
+pub use runtime::{Outcomes, ServeRuntime, SessionResult, SessionTicket};
 pub use session::{Session, SessionReport, SessionStats};
 pub use workload::{
     workload_from_spec, EventReplay, SyntheticStream, TrafficWorkload, Workload,

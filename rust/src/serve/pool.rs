@@ -1,17 +1,19 @@
-//! Multi-session serving pool: N worker threads, one simulated chip per
-//! in-flight session, deterministic merged reporting.
+//! Multi-session serving pool — the **batch-compatibility** surface over
+//! the persistent [`ServeRuntime`](super::runtime::ServeRuntime).
 //!
-//! [`SocPool::serve`] generalizes the old "shard one dataset" parallel
-//! runner to "serve many independent sessions": each [`SessionSpec`]
-//! (name + boxed [`Workload`]) is assigned round-robin to a worker
-//! thread, runs on its **own fresh [`Soc`]** (so per-session energy and
-//! latency ledgers never bleed into each other), and the per-session
-//! [`ChipReport`]s merge in submission order through
-//! [`ChipReport::merged`]. Because every session is independent and the
-//! merge order is fixed, the aggregate is **bit-identical** to
-//! [`SocPool::serve_sequential`] over the same specs, regardless of
-//! thread scheduling.
+//! Historically `SocPool::serve` was the crate's serving entry point: all
+//! [`SessionSpec`]s up front, static `i % workers` round-robin buckets,
+//! threads spawned per call and nothing returned until the last session
+//! drained. That dispatch now lives in the runtime (dynamic pull-based
+//! scheduling, warm chip reuse, streaming submission); `SocPool::serve`
+//! remains as a thin wrapper that builds a runtime, submits every spec
+//! and waits for the aggregate, preserving the old all-or-nothing error
+//! contract. [`SocPool::serve_sequential`] is unchanged: the one-thread,
+//! fresh-chip-per-session **reference path** that the runtime's
+//! determinism guarantee is stated against (merged reports fold in
+//! submission order, so the two are bit-identical).
 
+use super::runtime::ServeRuntime;
 use super::session::{Session, SessionStats};
 use super::workload::Workload;
 use crate::coordinator::GoldenCheck;
@@ -55,19 +57,136 @@ pub struct SessionOutcome {
     pub mismatches: u64,
     /// Samples checked against the reference.
     pub checked: u64,
+    /// Host-side seconds the session spent queued between submission and
+    /// a worker picking it up (0 on the sequential path). A load signal,
+    /// not simulated physics — deliberately absent from every
+    /// determinism comparison.
+    pub queue_wait_s: f64,
 }
 
-/// Aggregate of one [`SocPool::serve`] call.
+/// A session that failed in isolation: its siblings kept serving and the
+/// aggregate report simply excludes it.
+#[derive(Debug, Clone)]
+pub struct SessionFailure {
+    /// Submission index of the failed session.
+    pub index: u64,
+    /// Session name.
+    pub name: String,
+    /// What went wrong (workload error, geometry mismatch, worker panic —
+    /// panics are attributed to the session name/index).
+    pub error: Error,
+}
+
+/// Aggregate of one serve call ([`SocPool::serve`],
+/// [`SocPool::serve_sequential`] or
+/// [`ServeRuntime::finish`](super::runtime::ServeRuntime::finish)).
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
-    /// Per-session outcomes in submission order.
+    /// Per-session outcomes of the **successful** sessions, in
+    /// submission order.
     pub sessions: Vec<SessionOutcome>,
-    /// Deterministic merge of every session report (submission order).
+    /// Deterministic merge of every successful session report
+    /// (submission order).
     pub merged: ChipReport,
     /// Total reference mismatches across sessions.
     pub mismatches: u64,
     /// Total reference checks across sessions.
     pub checked: u64,
+    /// Sessions that failed, in submission order (empty on the strict
+    /// wrapper paths, which convert the first failure into an `Err`).
+    pub failures: Vec<SessionFailure>,
+}
+
+/// Reject a workload whose geometry cannot drive `net`. Runs both as
+/// the runtime worker's pre-chip-arming check (a misconfigured
+/// submission must not cost a pristine warm chip) and at the top of
+/// [`run_session_on`].
+pub(crate) fn check_geometry(
+    net: &NetworkDesc,
+    name: &str,
+    workload: &dyn Workload,
+) -> Result<()> {
+    if workload.inputs() != net.input_size() {
+        return Err(Error::Config(format!(
+            "session '{name}': workload has {} inputs, network expects {}",
+            workload.inputs(),
+            net.input_size()
+        )));
+    }
+    Ok(())
+}
+
+/// Serve one session to exhaustion on the given chip. This is the single
+/// session-execution code path shared by [`SocPool::serve_sequential`]
+/// and the [`ServeRuntime`](super::runtime::ServeRuntime) workers, which
+/// is what makes the two bit-identical. Returns the chip alongside the
+/// outcome so warm-serving callers can re-arm it; error paths drop the
+/// chip (a failed session must never leak state into a later one).
+pub(crate) fn run_session_on(
+    soc: Soc,
+    net: &NetworkDesc,
+    check: GoldenCheck,
+    name: &str,
+    workload: &mut dyn Workload,
+    queue_wait_s: f64,
+) -> Result<(SessionOutcome, Soc)> {
+    check_geometry(net, name, workload)?;
+    let mut session = Session::open(soc, name);
+    let use_ref = matches!(check, GoldenCheck::Reference);
+    let mut mismatches = 0u64;
+    let mut checked = 0u64;
+    while let Some(sample) = workload.next_sample() {
+        let r = session.push(&sample)?;
+        if use_ref {
+            let raster = sample.to_raster(net.timesteps, net.input_size());
+            let expect = net.reference_run(&raster);
+            checked += 1;
+            if expect != r.counts {
+                mismatches += 1;
+            }
+        }
+    }
+    let noc = session.noc_stats();
+    let (closed, soc) = session.close_reuse();
+    Ok((
+        SessionOutcome {
+            name: name.to_string(),
+            report: closed.report,
+            stats: closed.stats,
+            noc,
+            mismatches,
+            checked,
+            queue_wait_s,
+        },
+        soc,
+    ))
+}
+
+/// Merge successful session outcomes (already in submission order) into
+/// a [`ServeOutcome`]. Errors when no session succeeded — there is
+/// nothing to report over.
+pub(crate) fn merge_outcomes(
+    sessions: Vec<SessionOutcome>,
+    failures: Vec<SessionFailure>,
+    domains: usize,
+) -> Result<ServeOutcome> {
+    if sessions.is_empty() {
+        return Err(match failures.into_iter().next() {
+            Some(f) => f.error,
+            None => Error::Config("no sessions to serve".into()),
+        });
+    }
+    let reports: Vec<ChipReport> = sessions.iter().map(|s| s.report.clone()).collect();
+    let merged = ChipReport::merged(&reports, &AreaModel::multi_chip(domains))?;
+    let mismatches = sessions.iter().map(|s| s.mismatches).sum();
+    let checked = sessions.iter().map(|s| s.checked).sum();
+    Ok(ServeOutcome {
+        sessions,
+        merged,
+        mismatches,
+        checked,
+        failures,
+    })
 }
 
 /// A pool of simulated chips serving concurrent sessions.
@@ -118,122 +237,61 @@ impl SocPool {
         &self.net
     }
 
-    /// Serve one session to exhaustion on a fresh chip. This is the
-    /// single code path both the sequential and the parallel dispatcher
-    /// execute, which is what makes them bit-identical.
-    fn run_session(&self, name: &str, workload: &mut dyn Workload) -> Result<SessionOutcome> {
-        if workload.inputs() != self.net.input_size() {
-            return Err(Error::Config(format!(
-                "session '{name}': workload has {} inputs, network expects {}",
-                workload.inputs(),
-                self.net.input_size()
-            )));
-        }
-        let soc = Soc::new(self.net.clone(), self.config.clone())?;
-        let mut session = Session::open(soc, name);
-        let use_ref = matches!(self.check, GoldenCheck::Reference);
-        let mut mismatches = 0u64;
-        let mut checked = 0u64;
-        while let Some(sample) = workload.next_sample() {
-            let r = session.push(&sample)?;
-            if use_ref {
-                let raster = sample.to_raster(self.net.timesteps, self.net.input_size());
-                let expect = self.net.reference_run(&raster);
-                checked += 1;
-                if expect != r.counts {
-                    mismatches += 1;
-                }
-            }
-        }
-        let noc = session.noc_stats();
-        let closed = session.close();
-        Ok(SessionOutcome {
-            name: name.to_string(),
-            report: closed.report,
-            stats: closed.stats,
-            noc,
-            mismatches,
-            checked,
-        })
-    }
-
-    /// Serve every spec concurrently: sessions are assigned round-robin
-    /// to worker threads and results are returned in submission order.
+    /// Serve every spec concurrently and return results in submission
+    /// order — a batch-compatibility wrapper: builds a
+    /// [`ServeRuntime`](super::runtime::ServeRuntime) sized to the spec
+    /// list, submits everything and waits for the aggregate. Any session
+    /// failure is converted back into a whole-call `Err` (the historical
+    /// contract); use the runtime directly for streaming submission,
+    /// backpressure and per-session failure isolation.
+    #[deprecated(
+        since = "0.3.0",
+        note = "batch dispatch; prefer serve::ServeRuntime (streaming \
+                submission, warm chip reuse, per-session failure isolation)"
+    )]
     pub fn serve(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
-        self.dispatch(specs, true)
-    }
-
-    /// Serve every spec one after another on the calling thread — the
-    /// reference path for the bit-identity guarantee.
-    pub fn serve_sequential(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
-        self.dispatch(specs, false)
-    }
-
-    fn dispatch(&self, specs: Vec<SessionSpec>, parallel: bool) -> Result<ServeOutcome> {
         if specs.is_empty() {
             return Err(Error::Config("no sessions to serve".into()));
         }
-        let n = specs.len();
-        let workers = self.workers.min(n);
-        let mut slots: Vec<Option<SessionOutcome>> = (0..n).map(|_| None).collect();
-        if parallel && workers > 1 {
-            // Round-robin buckets keep each worker's load balanced while
-            // the (index, outcome) pairing keeps the result order fixed.
-            let mut buckets: Vec<Vec<(usize, SessionSpec)>> =
-                (0..workers).map(|_| Vec::new()).collect();
-            for (i, spec) in specs.into_iter().enumerate() {
-                buckets[i % workers].push((i, spec));
-            }
-            let results: Vec<Result<Vec<(usize, SessionOutcome)>>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = buckets
-                        .into_iter()
-                        .map(|bucket| {
-                            scope.spawn(move || -> Result<Vec<(usize, SessionOutcome)>> {
-                                let mut out = Vec::with_capacity(bucket.len());
-                                for (i, mut spec) in bucket {
-                                    out.push((
-                                        i,
-                                        self.run_session(&spec.name, &mut *spec.workload)?,
-                                    ));
-                                }
-                                Ok(out)
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| {
-                            h.join().unwrap_or_else(|_| {
-                                Err(Error::Soc("serving worker thread panicked".into()))
-                            })
-                        })
-                        .collect()
-                });
-            for r in results {
-                for (i, outcome) in r? {
-                    slots[i] = Some(outcome);
-                }
-            }
-        } else {
-            for (i, mut spec) in specs.into_iter().enumerate() {
-                slots[i] = Some(self.run_session(&spec.name, &mut *spec.workload)?);
-            }
+        let mut rt = ServeRuntime::new(
+            self.net.clone(),
+            self.config.clone(),
+            self.workers.min(specs.len()),
+            self.check,
+            specs.len(),
+            true,
+        )?;
+        for spec in specs {
+            rt.submit(spec)?;
         }
-        let sessions: Vec<SessionOutcome> = slots
-            .into_iter()
-            .map(|s| s.expect("every session produced an outcome"))
-            .collect();
-        let reports: Vec<ChipReport> = sessions.iter().map(|s| s.report.clone()).collect();
-        let merged =
-            ChipReport::merged(&reports, &AreaModel::multi_chip(self.config.domains))?;
-        let mismatches = sessions.iter().map(|s| s.mismatches).sum();
-        let checked = sessions.iter().map(|s| s.checked).sum();
-        Ok(ServeOutcome {
-            sessions,
-            merged,
-            mismatches,
-            checked,
-        })
+        let out = rt.finish()?;
+        if let Some(f) = out.failures.first() {
+            return Err(f.error.clone());
+        }
+        Ok(out)
+    }
+
+    /// Serve every spec one after another on the calling thread, a fresh
+    /// chip per session — the reference path for the bit-identity
+    /// guarantee (the runtime's merged report must match this one down
+    /// to `f64::to_bits`).
+    pub fn serve_sequential(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
+        if specs.is_empty() {
+            return Err(Error::Config("no sessions to serve".into()));
+        }
+        let mut sessions = Vec::with_capacity(specs.len());
+        for mut spec in specs {
+            let soc = Soc::new(self.net.clone(), self.config.clone())?;
+            let (outcome, _soc) = run_session_on(
+                soc,
+                &self.net,
+                self.check,
+                &spec.name,
+                &mut *spec.workload,
+                0.0,
+            )?;
+            sessions.push(outcome);
+        }
+        merge_outcomes(sessions, Vec::new(), self.config.domains)
     }
 }

@@ -1,0 +1,511 @@
+//! Persistent-worker, warm-chip, streaming-submission serving runtime —
+//! the crate's top-level serving surface.
+//!
+//! The paper's chip is an always-on edge device: sessions arrive
+//! continuously, lengths are skewed, and the processor is never torn
+//! down between users. [`ServeRuntime`] serves the simulator the same
+//! way, replacing the batch `SocPool::serve` dispatch (all specs up
+//! front, static `i % workers` buckets, a fresh chip per session, one
+//! aggregate at the end):
+//!
+//! - **Persistent workers, pull-based dispatch.** N worker threads live
+//!   for the runtime's lifetime and pull from one shared bounded queue,
+//!   so a long session occupies exactly one worker while its siblings
+//!   drain every short session behind it — no head-of-line blocking
+//!   from static buckets (pinned in `tests/serving_api.rs`).
+//! - **Warm chip reuse.** Each worker keeps its [`Soc`] between
+//!   sessions and re-arms it via [`Soc::reset_for_session`] instead of
+//!   paying `Soc::new` (mapping planning, synapse tables, hop-table
+//!   precompute) per session. Warm reuse is proven **bit-identical** to
+//!   fresh chips — simulated physics cannot tell the difference.
+//! - **Streaming submission.** [`ServeRuntime::submit`] blocks while
+//!   the bounded queue is full; [`ServeRuntime::try_submit`] returns
+//!   [`Error::QueueFull`] instead (backpressure the caller can act on).
+//!   Both hand back a [`SessionTicket`] whose
+//!   [`wait`](SessionTicket::wait) blocks for that session's outcome;
+//!   [`ServeRuntime::outcomes`] yields results **as sessions finish**.
+//! - **Per-session failure isolation.** A bad workload (error or panic)
+//!   fails its own ticket — attributed to the session name and
+//!   submission index — and its siblings keep serving; the worker's
+//!   chip is discarded so no failed-session state leaks forward.
+//! - **Determinism.** Sessions are independent and merged reports fold
+//!   in **submission order**, so [`ServeRuntime::finish`] is
+//!   bit-identical (`f64::to_bits`) to `SocPool::serve_sequential` over
+//!   the same specs, for every worker count and queue depth.
+
+use super::builder::MAX_QUEUE_DEPTH;
+use super::pool::{
+    check_geometry, merge_outcomes, run_session_on, ServeOutcome, SessionFailure,
+    SessionOutcome, SessionSpec,
+};
+use crate::coordinator::GoldenCheck;
+use crate::nn::NetworkDesc;
+use crate::soc::{Soc, SocConfig};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One submitted-but-not-yet-served session.
+struct Pending {
+    index: u64,
+    spec: SessionSpec,
+    ticket: Arc<TicketInner>,
+    submitted_at: Instant,
+}
+
+/// Mutable queue state behind [`Shared::q`].
+struct QueueState {
+    /// Bounded submission queue (capacity = `Shared::queue_depth`).
+    pending: VecDeque<Pending>,
+    /// No further submissions; workers drain `pending` and exit.
+    closed: bool,
+    /// Sessions submitted so far (also the next submission index).
+    submitted: u64,
+    /// Sessions fully served (ticket resolved).
+    finished: u64,
+    /// Finished tickets not yet yielded by [`ServeRuntime::outcomes`].
+    completions: VecDeque<Arc<TicketInner>>,
+    /// Per-worker "session currently being served" labels — the panic
+    /// attribution of last resort should a worker die outside the
+    /// per-session catch (the session-level catch normally resolves the
+    /// ticket itself).
+    running: Vec<Option<String>>,
+}
+
+/// State shared between the runtime handle and its workers.
+struct Shared {
+    net: NetworkDesc,
+    config: SocConfig,
+    check: GoldenCheck,
+    keep_warm: bool,
+    queue_depth: usize,
+    q: Mutex<QueueState>,
+    /// Workers wait here for work (or close).
+    work: Condvar,
+    /// Submitters wait here for queue space.
+    space: Condvar,
+    /// Outcome consumers wait here for completions.
+    done: Condvar,
+}
+
+/// Resolution slot of one submitted session.
+struct TicketInner {
+    index: u64,
+    name: String,
+    slot: Mutex<Option<Result<SessionOutcome>>>,
+    ready: Condvar,
+}
+
+/// Handle to one submitted session: identifies it (submission index +
+/// name) and blocks for its outcome independently of every sibling.
+pub struct SessionTicket {
+    inner: Arc<TicketInner>,
+}
+
+impl SessionTicket {
+    /// Submission index (0-based, global over the runtime's lifetime).
+    pub fn index(&self) -> u64 {
+        self.inner.index
+    }
+
+    /// Session name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Block until this session finishes and return its outcome. Failure
+    /// isolation: an `Err` here is *this* session's failure — siblings
+    /// are unaffected. May be called more than once (the result is
+    /// cloned out, never drained).
+    pub fn wait(&self) -> Result<SessionOutcome> {
+        let slot = self
+            .inner
+            .ready
+            .wait_while(self.inner.slot.lock().unwrap(), |s| s.is_none())
+            .unwrap();
+        slot.as_ref().expect("waited for a resolved slot").clone()
+    }
+
+    /// Non-blocking probe: the outcome if the session already finished.
+    pub fn try_result(&self) -> Option<Result<SessionOutcome>> {
+        self.inner.slot.lock().unwrap().clone()
+    }
+}
+
+/// One entry of the streaming outcome feed: which session (submission
+/// index + name) and how it ended.
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    /// Submission index.
+    pub index: u64,
+    /// Session name.
+    pub name: String,
+    /// The session's outcome (failures are isolated to this entry).
+    pub outcome: Result<SessionOutcome>,
+}
+
+/// The long-lived serving runtime. See the module docs for the model;
+/// construct via [`crate::serve::SocBuilder::build_serve_runtime`] (the
+/// validation choke point) or [`ServeRuntime::new`].
+///
+/// **Retention contract:** every submitted session's resolved outcome
+/// (one [`SessionOutcome`] — a chip report plus stats, a few KB) is
+/// retained for the runtime's lifetime so [`ServeRuntime::finish`] can
+/// fold the aggregate in submission order and late
+/// [`SessionTicket::wait`]s always resolve. Memory therefore grows with
+/// *sessions submitted*, not with samples served (per-sample state
+/// stays on the chips, which are bounded by the worker count). An
+/// unbounded 24/7 deployment should `finish()` a runtime at window
+/// boundaries (e.g. per million sessions) and spawn a fresh one — the
+/// warm chips cost one `Soc::new` per worker to rebuild.
+pub struct ServeRuntime {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Every ticket ever issued, in submission order — the submission-
+    /// order fold behind [`ServeRuntime::finish`].
+    tickets: Vec<Arc<TicketInner>>,
+}
+
+impl ServeRuntime {
+    /// Spawn a runtime: `workers` persistent threads over a bounded
+    /// submission queue of `queue_depth` entries, serving sessions on
+    /// `net` at `config`. `keep_warm` re-arms each worker's chip via
+    /// [`Soc::reset_for_session`] between sessions instead of building a
+    /// new one. `check` may be [`GoldenCheck::None`] or
+    /// [`GoldenCheck::Reference`] (the XLA golden model holds
+    /// per-process state and cannot back concurrent sessions).
+    pub fn new(
+        net: NetworkDesc,
+        config: SocConfig,
+        workers: usize,
+        check: GoldenCheck,
+        queue_depth: usize,
+        keep_warm: bool,
+    ) -> Result<ServeRuntime> {
+        if matches!(check, GoldenCheck::Xla | GoldenCheck::Both) {
+            return Err(Error::Config(
+                "ServeRuntime supports check none|reference (XLA golden state \
+                 is per-process); use ExperimentRunner::run for XLA checks"
+                    .into(),
+            ));
+        }
+        if workers == 0 {
+            return Err(Error::Config(
+                "ServeRuntime needs at least one worker".into(),
+            ));
+        }
+        if !(1..=MAX_QUEUE_DEPTH).contains(&queue_depth) {
+            // Same ceiling as SocBuilder::validate — the direct
+            // constructor must not be a hole in the choke point.
+            return Err(Error::Config(format!(
+                "queue_depth {queue_depth} outside 1..={MAX_QUEUE_DEPTH}"
+            )));
+        }
+        net.validate()?;
+        let shared = Arc::new(Shared {
+            net,
+            config,
+            check,
+            keep_warm,
+            queue_depth,
+            q: Mutex::new(QueueState {
+                // Grows to actual occupancy (bounded by queue_depth);
+                // pre-allocating the full depth would waste memory at
+                // large depths for nothing.
+                pending: VecDeque::new(),
+                closed: false,
+                submitted: 0,
+                finished: 0,
+                completions: VecDeque::new(),
+                running: vec![None; workers],
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared, wid))
+            })
+            .collect();
+        Ok(ServeRuntime {
+            shared,
+            workers: handles,
+            tickets: Vec::new(),
+        })
+    }
+
+    /// Worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.shared.q.lock().unwrap().running.len()
+    }
+
+    /// Bounded submission-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_depth
+    }
+
+    /// Whether workers re-arm their chip between sessions.
+    pub fn keep_warm(&self) -> bool {
+        self.shared.keep_warm
+    }
+
+    /// Sessions submitted over the runtime's lifetime.
+    pub fn submitted(&self) -> u64 {
+        self.shared.q.lock().unwrap().submitted
+    }
+
+    /// Sessions submitted but not yet finished.
+    pub fn in_flight(&self) -> u64 {
+        let q = self.shared.q.lock().unwrap();
+        q.submitted - q.finished
+    }
+
+    /// Submit a session, **blocking while the queue is full** until a
+    /// worker frees a slot. Returns the session's [`SessionTicket`].
+    pub fn submit(&mut self, spec: SessionSpec) -> Result<SessionTicket> {
+        self.enqueue(spec, true)
+    }
+
+    /// Submit without blocking: [`Error::QueueFull`] when the bounded
+    /// queue has no free slot — the backpressure signal an admission
+    /// layer shapes traffic on. The spec is dropped on refusal; clone
+    /// upstream if retry is intended.
+    pub fn try_submit(&mut self, spec: SessionSpec) -> Result<SessionTicket> {
+        self.enqueue(spec, false)
+    }
+
+    fn enqueue(&mut self, spec: SessionSpec, block: bool) -> Result<SessionTicket> {
+        let mut q = self.shared.q.lock().unwrap();
+        while q.pending.len() >= self.shared.queue_depth {
+            if !block {
+                return Err(Error::QueueFull(self.shared.queue_depth));
+            }
+            q = self.shared.space.wait(q).unwrap();
+        }
+        let index = q.submitted;
+        q.submitted += 1;
+        let ticket = Arc::new(TicketInner {
+            index,
+            name: spec.name.clone(),
+            slot: Mutex::new(None),
+            ready: Condvar::new(),
+        });
+        q.pending.push_back(Pending {
+            index,
+            spec,
+            ticket: ticket.clone(),
+            submitted_at: Instant::now(),
+        });
+        drop(q);
+        self.shared.work.notify_one();
+        self.tickets.push(ticket.clone());
+        Ok(SessionTicket { inner: ticket })
+    }
+
+    /// Iterator over session results **in completion order**, blocking
+    /// until the next session finishes and ending once every session
+    /// submitted so far has been yielded. Short sessions surface here
+    /// while a long sibling is still running — the streaming view the
+    /// batch API could not express. Calling it again later resumes with
+    /// newly finished sessions.
+    pub fn outcomes(&mut self) -> Outcomes<'_> {
+        Outcomes { rt: self }
+    }
+
+    /// Close the queue (no further submissions), let the workers drain
+    /// every pending session, join them, and fold the per-session
+    /// reports **in submission order** into a [`ServeOutcome`]. Failed
+    /// sessions are excluded from the merge and listed in
+    /// [`ServeOutcome::failures`]; the call errors only when *no*
+    /// session succeeded (or none was submitted).
+    pub fn finish(mut self) -> Result<ServeOutcome> {
+        self.close_and_join()?;
+        let tickets = std::mem::take(&mut self.tickets);
+        let mut sessions = Vec::with_capacity(tickets.len());
+        let mut failures = Vec::new();
+        for t in &tickets {
+            let slot = t.slot.lock().unwrap();
+            match slot.as_ref().expect("workers resolve every ticket on drain") {
+                Ok(o) => sessions.push(o.clone()),
+                Err(e) => failures.push(SessionFailure {
+                    index: t.index,
+                    name: t.name.clone(),
+                    error: e.clone(),
+                }),
+            }
+        }
+        merge_outcomes(sessions, failures, self.shared.config.domains)
+    }
+
+    /// Close the queue and join every worker, attributing a worker death
+    /// to the session it was serving (the per-session catch normally
+    /// resolves the ticket first, so this path is the backstop).
+    fn close_and_join(&mut self) -> Result<()> {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.work.notify_all();
+        let mut first_err = None;
+        for (wid, h) in std::mem::take(&mut self.workers).into_iter().enumerate() {
+            if h.join().is_err() && first_err.is_none() {
+                let running = self.shared.q.lock().unwrap().running[wid].take();
+                first_err = Some(Error::Soc(match running {
+                    Some(s) => {
+                        format!("serving worker {wid} died while serving session {s}")
+                    }
+                    None => format!("serving worker {wid} died between sessions"),
+                }));
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServeRuntime {
+    /// Dropping the runtime closes the queue, drains every already
+    /// submitted session (tickets always resolve) and joins the workers.
+    fn drop(&mut self) {
+        let _ = self.close_and_join();
+    }
+}
+
+/// Streaming completion-order iterator over a runtime's session results;
+/// see [`ServeRuntime::outcomes`].
+pub struct Outcomes<'a> {
+    rt: &'a mut ServeRuntime,
+}
+
+impl Iterator for Outcomes<'_> {
+    type Item = SessionResult;
+
+    fn next(&mut self) -> Option<SessionResult> {
+        let shared = &self.rt.shared;
+        let mut q = shared.q.lock().unwrap();
+        loop {
+            if let Some(t) = q.completions.pop_front() {
+                let slot = t.slot.lock().unwrap();
+                let outcome = slot
+                    .as_ref()
+                    .expect("completed ticket carries a result")
+                    .clone();
+                return Some(SessionResult {
+                    index: t.index,
+                    name: t.name.clone(),
+                    outcome,
+                });
+            }
+            if q.finished == q.submitted {
+                return None; // nothing in flight and nothing queued
+            }
+            q = shared.done.wait(q).unwrap();
+        }
+    }
+}
+
+/// Best-effort panic-payload rendering for failure attribution.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The persistent worker: pull a session, arm a chip (warm when
+/// possible), serve it, resolve its ticket, repeat until the queue is
+/// closed **and** drained.
+fn worker_loop(shared: &Arc<Shared>, wid: usize) {
+    let mut warm: Option<Soc> = None;
+    loop {
+        let pending = {
+            let mut q = shared
+                .work
+                .wait_while(shared.q.lock().unwrap(), |q| {
+                    q.pending.is_empty() && !q.closed
+                })
+                .unwrap();
+            match q.pending.pop_front() {
+                Some(p) => {
+                    q.running[wid] =
+                        Some(format!("'{}' (#{})", p.spec.name, p.index));
+                    p
+                }
+                None => return, // closed and drained
+            }
+        };
+        shared.space.notify_one();
+        let mut p = pending;
+        let queue_wait_s = p.submitted_at.elapsed().as_secs_f64();
+        let result = serve_one(shared, &mut warm, &mut p, queue_wait_s);
+        *p.ticket.slot.lock().unwrap() = Some(result);
+        p.ticket.ready.notify_all();
+        {
+            let mut q = shared.q.lock().unwrap();
+            q.running[wid] = None;
+            q.finished += 1;
+            q.completions.push_back(p.ticket.clone());
+        }
+        shared.done.notify_all();
+    }
+}
+
+/// Serve one pulled session with failure isolation: workload errors and
+/// panics resolve *this* session's outcome (panics attributed to the
+/// session name/index — never a bare "worker thread panicked") and
+/// discard the worker's chip so no partial state survives into the next
+/// session.
+fn serve_one(
+    shared: &Arc<Shared>,
+    warm: &mut Option<Soc>,
+    p: &mut Pending,
+    queue_wait_s: f64,
+) -> Result<SessionOutcome> {
+    let name = p.spec.name.clone();
+    let index = p.index;
+    // Geometry precheck BEFORE arming a chip: a misconfigured submission
+    // must not cost the worker its pristine warm chip (the discard rule
+    // below is for sessions that actually ran on it).
+    check_geometry(&shared.net, &name, &*p.spec.workload)?;
+    let caught = catch_unwind(AssertUnwindSafe(|| -> Result<SessionOutcome> {
+        let soc = match warm.take() {
+            Some(mut s) => {
+                s.reset_for_session();
+                s
+            }
+            None => Soc::new(shared.net.clone(), shared.config.clone())?,
+        };
+        let (outcome, soc) = run_session_on(
+            soc,
+            &shared.net,
+            shared.check,
+            &name,
+            &mut *p.spec.workload,
+            queue_wait_s,
+        )?;
+        if shared.keep_warm {
+            *warm = Some(soc);
+        }
+        Ok(outcome)
+    }));
+    match caught {
+        Ok(r) => r,
+        Err(payload) => {
+            *warm = None; // a panicking session must not leave a chip behind
+            Err(Error::Soc(format!(
+                "session '{name}' (#{index}) panicked: {}",
+                panic_message(&*payload)
+            )))
+        }
+    }
+}

@@ -139,12 +139,20 @@ impl Session {
     /// pushed after the close, and the report cannot be forgotten
     /// half-assembled.
     pub fn close(self) -> SessionReport {
+        self.close_reuse().0
+    }
+
+    /// Close the session but hand the chip back instead of dropping it —
+    /// the warm-serving path: [`crate::serve::ServeRuntime`] re-arms the
+    /// returned `Soc` via [`Soc::reset_for_session`] for the next session
+    /// rather than paying `Soc::new` again. The report is exactly what
+    /// [`Session::close`] would have produced (`close` is this plus a
+    /// drop).
+    pub fn close_reuse(self) -> (SessionReport, Soc) {
         let stats = self.stats();
         let mut soc = self.soc;
-        SessionReport {
-            report: soc.finish_report(&self.name),
-            stats,
-        }
+        let report = soc.finish_report(&self.name);
+        (SessionReport { report, stats }, soc)
     }
 }
 

@@ -143,6 +143,14 @@ pub struct SampleResult {
     pub cores_ticked: u64,
 }
 
+/// The one power-on control-CPU recipe, shared by [`Soc::new`] and
+/// [`Soc::reset_for_session`] so the warm-equals-fresh bit-identity
+/// contract cannot be broken by editing one construction site without
+/// the other.
+fn power_on_cpu() -> Cpu {
+    Cpu::new(64 * 1024, true)
+}
+
 /// The assembled chip.
 pub struct Soc {
     /// Configuration.
@@ -275,7 +283,7 @@ impl Soc {
             .map(|li| mapping.dest_cores_after(li).map(|d| Dest::Cores(d.to_vec())))
             .collect();
         Ok(Soc {
-            cpu: Cpu::new(64 * 1024, true),
+            cpu: power_on_cpu(),
             bus: NeuroBus::new(),
             idma: Dma::new(DmaKind::Idma),
             mpdma: Dma::new(DmaKind::Mpdma),
@@ -719,6 +727,38 @@ impl Soc {
         report
     }
 
+    /// Re-arm a served chip for a fresh session so that the next session
+    /// is **bit-identical** to one run on a brand-new [`Soc::new`] chip,
+    /// while skipping the expensive host-side construction (mapping
+    /// planning, synapse-table builds, topology + hop-table precompute —
+    /// all of which depend only on `(net, config)` and are kept).
+    ///
+    /// Built on [`Soc::reset_accounting`] plus a return of every piece of
+    /// *dynamic* chip state to its power-on value: core membrane
+    /// potentials / spike caches / enables, the control CPU (fresh ISS,
+    /// zeroed clock domains), DMA/bus beat counters, output buffers, and
+    /// the boot latches — so the next sample re-runs the firmware boot
+    /// protocol and re-charges the parameter-load DMA exactly like a
+    /// fresh chip does. Warm reuse is therefore a pure host-side
+    /// optimization: simulated physics, reports and ledgers cannot tell
+    /// the difference (pinned bit-for-bit in `tests/serving_api.rs`).
+    pub fn reset_for_session(&mut self) {
+        self.reset_accounting();
+        for c in &mut self.cores {
+            c.reset_state();
+            // Fresh cores come up enabled (RegTable default); boot
+            // re-applies the firmware's enable mask.
+            c.set_enabled(true);
+        }
+        self.cpu = power_on_cpu();
+        self.bus = NeuroBus::new();
+        self.idma = Dma::new(DmaKind::Idma);
+        self.mpdma = Dma::new(DmaKind::Mpdma);
+        self.outbufs = OutputBuffers::new();
+        self.booted = false;
+        self.params_loaded = false;
+    }
+
     /// Clear every energy ledger and run counter (cycles, SOPs, samples,
     /// routed spikes) while keeping the booted chip state, weights and
     /// mapping. The NoC must be drained (it always is between samples).
@@ -930,6 +970,37 @@ mod tests {
         // No boot-time IDMA parameter load in the second window, so its
         // energy must not exceed the first window's.
         assert!(second.total_pj() <= first.total_pj());
+    }
+
+    #[test]
+    fn reset_for_session_reproduces_a_fresh_chip_bit_for_bit() {
+        let net = small_net(32, 24, 4);
+        let cfg = SocConfig {
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        };
+        let s = busy_sample(32, 5);
+        // Warm path: serve one session, re-arm, serve another.
+        let mut warm = Soc::new(net.clone(), cfg.clone()).unwrap();
+        warm.run_sample(&s, true).unwrap();
+        warm.finish_report("first");
+        warm.reset_for_session();
+        let wr = warm.run_sample(&s, true).unwrap();
+        let wrep = warm.finish_report("w");
+        // Cold oracle: a brand-new chip serving the same session.
+        let mut cold = Soc::new(net, cfg).unwrap();
+        let cr = cold.run_sample(&s, true).unwrap();
+        let crep = cold.finish_report("w");
+        assert_eq!(wr.counts, cr.counts, "warm chip diverged functionally");
+        assert_eq!(wr.cycles, cr.cycles);
+        assert_eq!(wr.sops, cr.sops);
+        assert_eq!(wr.spikes_routed, cr.spikes_routed);
+        assert_eq!(wr.cores_ticked, cr.cores_ticked);
+        assert_eq!(wrep.cycles, crep.cycles);
+        assert_eq!(wrep.pj_per_sop.to_bits(), crep.pj_per_sop.to_bits());
+        assert_eq!(wrep.power_mw.to_bits(), crep.power_mw.to_bits());
+        assert_eq!(wrep.breakdown.by_class, crep.breakdown.by_class);
+        assert_eq!(wrep.breakdown.by_static, crep.breakdown.by_static);
     }
 
     #[test]

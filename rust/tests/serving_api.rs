@@ -1,16 +1,24 @@
 //! Integration tests for the streaming serving API: `SocBuilder` as the
-//! single validation choke point, `Session` snapshot/close semantics and
-//! the `SocPool` concurrency-determinism guarantee (≥2 concurrent
-//! sessions bit-identical to the same sessions run sequentially).
+//! single validation choke point, `Session` snapshot/close semantics,
+//! the `ServeRuntime` determinism/backpressure/failure-isolation
+//! contracts (warm multi-worker serving bit-identical to sequential
+//! fresh-chip serving; short sessions never blocked behind a long one;
+//! a bad workload fails only its own outcome) and the `SocPool`
+//! compatibility wrappers.
 
 use fullerene_soc::config::RunConfig;
 use fullerene_soc::coordinator::GoldenCheck;
 use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
 use fullerene_soc::core::Codebook;
+use fullerene_soc::datasets::Sample;
+use fullerene_soc::energy::ChipReport;
 use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
 use fullerene_soc::serve::{
     SessionSpec, SocBuilder, SocPool, TrafficWorkload, Workload,
 };
+use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::util::prng::Rng;
+use fullerene_soc::Error;
 
 fn small_net(inputs: usize, hidden: usize, classes: usize, timesteps: usize) -> NetworkDesc {
     let cb = Codebook::default_log16();
@@ -56,8 +64,36 @@ fn traffic_specs(n: usize, samples: usize) -> Vec<SessionSpec> {
         .collect()
 }
 
+/// Assert two merged reports agree down to the bit.
+fn assert_reports_bit_identical(m: &ChipReport, s: &ChipReport, ctx: &str) {
+    assert_eq!(m.cycles, s.cycles, "{ctx}: cycles");
+    assert_eq!(m.sops, s.sops, "{ctx}: sops");
+    assert_eq!(m.samples, s.samples, "{ctx}: samples");
+    assert_eq!(m.spikes_routed, s.spikes_routed, "{ctx}: spikes_routed");
+    assert_eq!(m.pj_per_sop.to_bits(), s.pj_per_sop.to_bits(), "{ctx}: pj/SOP");
+    assert_eq!(
+        m.core_pj_per_sop.to_bits(),
+        s.core_pj_per_sop.to_bits(),
+        "{ctx}: core pj/SOP"
+    );
+    assert_eq!(m.power_mw.to_bits(), s.power_mw.to_bits(), "{ctx}: power");
+    assert_eq!(
+        m.breakdown.dynamic_pj.to_bits(),
+        s.breakdown.dynamic_pj.to_bits(),
+        "{ctx}: dynamic pJ"
+    );
+    assert_eq!(
+        m.breakdown.static_pj.to_bits(),
+        s.breakdown.static_pj.to_bits(),
+        "{ctx}: static pJ"
+    );
+    assert_eq!(m.breakdown.by_class, s.breakdown.by_class, "{ctx}: by_class");
+    assert_eq!(m.breakdown.by_static, s.breakdown.by_static, "{ctx}: by_static");
+}
+
 /// Acceptance criterion: ≥2 concurrent sessions produce reports
 /// bit-identical (`f64::to_bits`) to the same sessions run sequentially.
+#[allow(deprecated)] // the wrapper must keep honoring the old contract
 #[test]
 fn concurrent_sessions_bit_identical_to_sequential() {
     let net = small_net(40, 24, 4, 5);
@@ -106,8 +142,10 @@ fn concurrent_sessions_bit_identical_to_sequential() {
     assert_eq!(m.breakdown.by_static, s.breakdown.by_static);
 }
 
-/// Sessions are isolated: each runs on its own chip, so a session's
-/// report covers exactly its own samples.
+/// Sessions are isolated: each runs on its own chip (or a warm chip
+/// reset to indistinguishability), so a session's report covers exactly
+/// its own samples.
+#[allow(deprecated)]
 #[test]
 fn sessions_have_independent_ledgers() {
     let net = small_net(40, 24, 4, 5);
@@ -130,6 +168,7 @@ fn sessions_have_independent_ledgers() {
 
 /// Pool guard rails: XLA checks, zero workers, zero sessions and
 /// geometry mismatches are all hard errors.
+#[allow(deprecated)]
 #[test]
 fn pool_rejects_invalid_setups() {
     let net = small_net(40, 24, 4, 5);
@@ -215,4 +254,374 @@ fn builder_is_the_single_choke_point() {
         .build_soc(&net)
         .is_err());
     assert!(SocBuilder::new().workers(0).build_pool(&net).is_err());
+    // The serving-runtime knobs are range-checked at the same choke
+    // point (the CLI's --queue-depth funnels through here).
+    assert!(SocBuilder::new()
+        .queue_depth(0)
+        .build_serve_runtime(&net)
+        .is_err());
+    assert!(SocBuilder::new()
+        .workers(0)
+        .build_serve_runtime(&net)
+        .is_err());
+    // The direct constructor enforces the same queue-depth ceiling as
+    // the builder — no construction route skips range checking.
+    assert!(fullerene_soc::serve::ServeRuntime::new(
+        net,
+        SocConfig::default(),
+        1,
+        GoldenCheck::None,
+        usize::MAX,
+        true,
+    )
+    .is_err());
+}
+
+// ===================== ServeRuntime =======================================
+
+/// Acceptance criterion: the streaming runtime's merged output is
+/// `f64::to_bits`-identical to `serve_sequential` under randomized
+/// session mixes × worker counts × queue depths. The runtime serves on
+/// **warm, reused chips** across dynamically scheduled workers; the
+/// sequential oracle serves on a fresh chip per session, in submission
+/// order, on one thread — so this simultaneously re-proves the
+/// submission-order merge fold and the warm≡fresh chip contract.
+#[test]
+fn runtime_bit_identical_to_sequential_under_randomized_mixes() {
+    let net = small_net(40, 24, 4, 5);
+    let mut rng = Rng::new(20260729);
+    for &(workers, queue_depth) in &[(1usize, 1usize), (2, 2), (3, 8), (4, 3)] {
+        // Randomized mix: 3–6 sessions, each 1–4 samples at a random
+        // rate/seed. Reconstructed identically for both execution modes.
+        let n_sessions = 3 + rng.below_usize(4);
+        let mix: Vec<(usize, f64, u64)> = (0..n_sessions)
+            .map(|_| {
+                (
+                    1 + rng.below_usize(4),
+                    0.05 + 0.05 * rng.below_usize(4) as f64,
+                    1000 + rng.below_usize(5000) as u64,
+                )
+            })
+            .collect();
+        let specs = |mix: &[(usize, f64, u64)]| -> Vec<SessionSpec> {
+            mix.iter()
+                .enumerate()
+                .map(|(i, &(samples, rate, seed))| {
+                    SessionSpec::new(
+                        &format!("mix{i}"),
+                        Box::new(TrafficWorkload::new(40, 4, 5, rate, samples, seed)),
+                    )
+                })
+                .collect()
+        };
+
+        let builder = SocBuilder::new()
+            .check(GoldenCheck::Reference)
+            .workers(workers)
+            .queue_depth(queue_depth)
+            .keep_warm(true);
+        let mut rt = builder.build_serve_runtime(&net).unwrap();
+        for spec in specs(&mix) {
+            rt.submit(spec).unwrap(); // blocks on small queues; workers drain
+        }
+        let par = rt.finish().unwrap();
+        let seq = builder
+            .build_pool(&net)
+            .unwrap()
+            .serve_sequential(specs(&mix))
+            .unwrap();
+
+        let ctx = format!("workers={workers} depth={queue_depth}");
+        assert!(par.failures.is_empty(), "{ctx}: unexpected failures");
+        assert_eq!(par.sessions.len(), seq.sessions.len(), "{ctx}");
+        assert_eq!(par.mismatches, 0, "{ctx}: chip diverged from reference");
+        assert_eq!(par.checked, seq.checked, "{ctx}");
+        for (a, b) in par.sessions.iter().zip(&seq.sessions) {
+            assert_eq!(a.name, b.name, "{ctx}: submission order lost");
+            assert_reports_bit_identical(&a.report, &b.report, &ctx);
+            assert_eq!(a.stats.samples, b.stats.samples, "{ctx}");
+            assert_eq!(a.stats.cycles, b.stats.cycles, "{ctx}");
+        }
+        assert_reports_bit_identical(&par.merged, &seq.merged, &ctx);
+    }
+}
+
+/// Acceptance criterion (warm-reuse contract, chip level): a
+/// `reset_for_session`'d chip reproduces a fresh chip's spikes, ledgers
+/// and cycles bit-for-bit — across several sessions of reuse.
+#[test]
+fn warm_reused_chip_reproduces_fresh_chip_bit_for_bit() {
+    let net = small_net(40, 24, 4, 5);
+    let cfg = SocConfig::default();
+    let session_samples = |seed: u64| -> Vec<Sample> {
+        let mut w = TrafficWorkload::new(40, 4, 5, 0.2, 3, seed);
+        std::iter::from_fn(|| w.next_sample()).collect()
+    };
+    let mut warm = Soc::new(net.clone(), cfg.clone()).unwrap();
+    for session in 0..3u64 {
+        if session > 0 {
+            warm.reset_for_session();
+        }
+        let samples = session_samples(50 + session);
+        let mut fresh = Soc::new(net.clone(), cfg.clone()).unwrap();
+        for s in &samples {
+            let a = warm.run_sample(s, true).unwrap();
+            let b = fresh.run_sample(s, true).unwrap();
+            // Spikes (per-class counts + prediction) and work counters.
+            assert_eq!(a.counts, b.counts, "session {session}: spike counts");
+            assert_eq!(a.predicted, b.predicted, "session {session}");
+            assert_eq!(a.cycles, b.cycles, "session {session}: cycles");
+            assert_eq!(a.sops, b.sops, "session {session}");
+            assert_eq!(a.spikes_routed, b.spikes_routed, "session {session}");
+            assert_eq!(a.cores_ticked, b.cores_ticked, "session {session}");
+        }
+        // Ledgers: the full report (dynamic classes, static windows,
+        // derived efficiency figures) must be bit-identical.
+        let wa = warm.snapshot_report("s");
+        let fa = fresh.finish_report("s");
+        assert_reports_bit_identical(&wa, &fa, &format!("session {session}"));
+        warm.finish_report("s");
+    }
+}
+
+/// Acceptance criterion: no head-of-line blocking. A skewed mix — one
+/// long session submitted FIRST, then several one-sample sessions — on
+/// 2 pull-based workers completes every short session's outcome before
+/// the long one finishes (the old static `i % workers` buckets parked
+/// half the shorts behind the long session).
+#[test]
+fn skewed_mix_completes_short_sessions_before_the_long_one() {
+    let net = small_net(40, 24, 4, 5);
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(2)
+        .queue_depth(8)
+        .build_serve_runtime(&net)
+        .unwrap();
+    rt.submit(SessionSpec::new(
+        "long",
+        Box::new(TrafficWorkload::new(40, 4, 5, 0.2, 60, 1)),
+    ))
+    .unwrap();
+    for i in 0..4 {
+        rt.submit(SessionSpec::new(
+            &format!("short{i}"),
+            Box::new(TrafficWorkload::new(40, 4, 5, 0.2, 1, 2 + i as u64)),
+        ))
+        .unwrap();
+    }
+    let order: Vec<String> = rt.outcomes().map(|r| {
+        r.outcome.expect("every session succeeds");
+        r.name
+    }).collect();
+    assert_eq!(order.len(), 5);
+    assert_eq!(
+        order.last().map(String::as_str),
+        Some("long"),
+        "short sessions were blocked behind the long one: {order:?}"
+    );
+    rt.finish().unwrap();
+}
+
+/// A workload that panics mid-stream (after `gate` samples).
+struct PanickingWorkload {
+    inner: TrafficWorkload,
+    gate: usize,
+    served: usize,
+}
+
+impl Workload for PanickingWorkload {
+    fn name(&self) -> &str {
+        "panicker"
+    }
+    fn inputs(&self) -> usize {
+        self.inner.inputs()
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn timesteps(&self) -> usize {
+        self.inner.timesteps()
+    }
+    fn next_sample(&mut self) -> Option<Sample> {
+        if self.served >= self.gate {
+            panic!("synthetic workload failure for the isolation test");
+        }
+        self.served += 1;
+        self.inner.next_sample()
+    }
+}
+
+/// Acceptance criterion: per-session failure isolation — a panicking
+/// workload fails its own outcome, attributed to the session name and
+/// submission index, while sibling sessions serve to completion and
+/// still merge. (This also replaces the old dispatch's anonymous
+/// "serving worker thread panicked" report.)
+#[test]
+fn panicking_workload_fails_only_its_own_session() {
+    let net = small_net(40, 24, 4, 5);
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(2)
+        .queue_depth(4)
+        .build_serve_runtime(&net)
+        .unwrap();
+    let good0 = rt
+        .submit(SessionSpec::new(
+            "good0",
+            Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 3, 7)),
+        ))
+        .unwrap();
+    let bad = rt
+        .submit(SessionSpec::new(
+            "bad",
+            Box::new(PanickingWorkload {
+                inner: TrafficWorkload::new(40, 4, 5, 0.15, 3, 8),
+                gate: 1,
+                served: 0,
+            }),
+        ))
+        .unwrap();
+    let good1 = rt
+        .submit(SessionSpec::new(
+            "good1",
+            Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 3, 9)),
+        ))
+        .unwrap();
+
+    // The failed ticket carries an attributed error; siblings are fine.
+    let err = bad.wait().unwrap_err().to_string();
+    assert!(
+        err.contains("'bad'") && err.contains("#1"),
+        "panic not attributed to the session: {err}"
+    );
+    assert!(good0.wait().is_ok());
+    assert!(good1.wait().is_ok());
+
+    let out = rt.finish().unwrap();
+    assert_eq!(out.sessions.len(), 2, "good sessions must merge");
+    assert_eq!(out.failures.len(), 1);
+    assert_eq!(out.failures[0].name, "bad");
+    assert_eq!(out.failures[0].index, 1);
+    assert_eq!(out.merged.samples, 6);
+
+    // The batch wrapper keeps the historical all-or-nothing contract,
+    // but with the failure attributed instead of anonymous.
+    #[allow(deprecated)]
+    let res = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(2)
+        .build_pool(&net)
+        .unwrap()
+        .serve(vec![
+            SessionSpec::new(
+                "ok",
+                Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 2, 3)),
+            ),
+            SessionSpec::new(
+                "boom",
+                Box::new(PanickingWorkload {
+                    inner: TrafficWorkload::new(40, 4, 5, 0.15, 2, 4),
+                    gate: 0,
+                    served: 0,
+                }),
+            ),
+        ]);
+    let msg = res.unwrap_err().to_string();
+    assert!(
+        msg.contains("'boom'") && msg.contains("#1"),
+        "wrapper lost the attribution: {msg}"
+    );
+}
+
+/// A workload whose first sample announces that a worker has started it
+/// and then blocks until the test releases it — makes queue-occupancy
+/// assertions deterministic.
+struct GatedWorkload {
+    started: std::sync::mpsc::Sender<()>,
+    release: std::sync::mpsc::Receiver<()>,
+    inner: TrafficWorkload,
+    gated: bool,
+}
+
+impl Workload for GatedWorkload {
+    fn name(&self) -> &str {
+        "gated"
+    }
+    fn inputs(&self) -> usize {
+        self.inner.inputs()
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn timesteps(&self) -> usize {
+        self.inner.timesteps()
+    }
+    fn next_sample(&mut self) -> Option<Sample> {
+        if self.gated {
+            self.gated = false;
+            let _ = self.started.send(());
+            // Sender dropped == released; either way, proceed.
+            let _ = self.release.recv();
+        }
+        self.inner.next_sample()
+    }
+}
+
+/// Backpressure contract: `try_submit` fails with `Error::QueueFull`
+/// exactly when the bounded queue is at depth, while `submit`ted
+/// sessions are admitted and eventually served.
+#[test]
+fn try_submit_surfaces_queue_full_backpressure() {
+    let net = small_net(40, 24, 4, 5);
+    let (started_tx, started_rx) = std::sync::mpsc::channel();
+    let (release_tx, release_rx) = std::sync::mpsc::channel();
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(1)
+        .queue_depth(1)
+        .build_serve_runtime(&net)
+        .unwrap();
+    assert_eq!(rt.queue_depth(), 1);
+    // Session 0 is picked up by the single worker and parks inside its
+    // first sample (the queue itself is empty again).
+    let t0 = rt
+        .submit(SessionSpec::new(
+            "gated",
+            Box::new(GatedWorkload {
+                started: started_tx,
+                release: release_rx,
+                inner: TrafficWorkload::new(40, 4, 5, 0.15, 2, 5),
+                gated: true,
+            }),
+        ))
+        .unwrap();
+    started_rx
+        .recv_timeout(std::time::Duration::from_secs(30))
+        .expect("worker never picked up the gated session");
+    // Session 1 fills the depth-1 queue (the worker is provably busy) …
+    let t1 = rt
+        .try_submit(SessionSpec::new(
+            "queued",
+            Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 1, 6)),
+        ))
+        .unwrap();
+    // … so a third submission must be refused with QueueFull.
+    match rt.try_submit(SessionSpec::new(
+        "refused",
+        Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 1, 7)),
+    )) {
+        Err(Error::QueueFull(d)) => assert_eq!(d, 1),
+        Err(e) => panic!("expected QueueFull, got error: {e}"),
+        Ok(_) => panic!("expected QueueFull, got an accepted ticket"),
+    }
+    assert_eq!(rt.in_flight(), 2, "gated + queued");
+    // Release the gated session; everything drains and the refused spec
+    // was simply never admitted.
+    drop(release_tx);
+    assert!(t0.wait().is_ok());
+    assert!(t1.wait().is_ok());
+    let out = rt.finish().unwrap();
+    assert_eq!(out.sessions.len(), 2);
+    assert!(out.failures.is_empty());
 }
