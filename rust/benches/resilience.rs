@@ -1,0 +1,112 @@
+//! Degraded-fabric resilience smoke: the fullerene fabric vs mesh/torus
+//! baselines of the same core count under seeded fractional router
+//! kills, all offered the identical seeded P2P burst — delivered
+//! fraction, rerouted hops and latency inflation per (topology, kill
+//! fraction) point, the measured form of the paper's degree-variance
+//! claim.
+//!
+//! Emits `BENCH_resilience.json` (schema `bench-resilience-v1`) in the
+//! working directory and gates against a checked-in
+//! `BENCH_resilience.baseline.json` (working directory, then the
+//! repository root), failing the process on a >30 % regression or a
+//! structural-floor violation. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_RESILIENCE_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_RESILIENCE_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{resilience_check, resilience_json, resilience_sweep};
+use fullerene_soc::metrics::Table;
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_RESILIENCE_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in [
+        "BENCH_resilience.baseline.json",
+        "../BENCH_resilience.baseline.json",
+    ] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let r = resilience_sweep(42, fast).expect("resilience sweep must drain");
+
+    let mut t = Table::new(&[
+        "topology",
+        "kill frac",
+        "dead",
+        "delivered",
+        "dropped",
+        "delivered %",
+        "rerouted hops",
+        "latency x",
+    ]);
+    for p in &r.points {
+        t.push_row(vec![
+            p.topology.clone(),
+            format!("{:.1}", p.kill_frac),
+            p.dead_routers.to_string(),
+            p.delivered.to_string(),
+            p.dropped.to_string(),
+            format!("{:.1}", p.delivered_frac * 100.0),
+            p.rerouted_hops.to_string(),
+            format!("{:.2}", p.latency_inflation),
+        ]);
+    }
+    println!("## bench: resilience\n{}", t.render());
+    println!(
+        "worst delivered fraction — fullerene {:.3}, mesh {:.3}, torus {:.3}",
+        r.fullerene_min_delivered_frac,
+        r.mesh_min_delivered_frac,
+        r.torus_min_delivered_frac
+    );
+
+    let out = Path::new("BENCH_resilience.json");
+    resilience_json(&r, "measured")
+        .write_file(out)
+        .expect("write BENCH_resilience.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_RESILIENCE_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_RESILIENCE_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => {
+            // The structural floors hold without any baseline — enforce
+            // them with an empty one rather than skipping outright.
+            let fails = resilience_check(&r, &Json::obj(vec![]), 0.30);
+            if fails.is_empty() {
+                println!("no BENCH_resilience.baseline.json found; structural floors passed");
+            } else {
+                eprintln!("RESILIENCE FLOOR VIOLATION:");
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = resilience_check(&r, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("RESILIENCE REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -36,6 +36,12 @@
 //!   [`ServeRuntime`], emitted as `BENCH_serve.json` by
 //!   `benches/serve_throughput.rs` and gated in CI via
 //!   [`serve_perf_check`] — the third perf-trajectory axis.
+//! - [`resilience_sweep`] — degraded-fabric comparison (fullerene vs
+//!   mesh/torus of the same core count under seeded fractional router
+//!   kills: delivered fraction, rerouted hops, latency inflation),
+//!   emitted as `BENCH_resilience.json` by `benches/resilience.rs` and
+//!   gated in CI via [`resilience_check`] — the graceful-degradation
+//!   axis backing the paper's degree-variance claim.
 
 use crate::coordinator::GoldenCheck;
 use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
@@ -1169,6 +1175,292 @@ pub fn serve_perf_check(current: &ServePerf, baseline: &Json, max_regress: f64) 
     fails
 }
 
+// ================ resilience sweep (BENCH_resilience.json) =================
+
+/// Router-kill fractions swept by [`resilience_sweep`].
+pub const RESILIENCE_KILL_FRACS: [f64; 4] = [0.0, 0.1, 0.2, 0.3];
+
+/// One topology × kill-fraction degradation measurement.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    /// Topology name (`fullerene`, `mesh-4x5`, `torus-4x5`).
+    pub topology: String,
+    /// Fraction of routers killed (rounded to a whole count at arm time).
+    pub kill_frac: f64,
+    /// Routers actually killed.
+    pub dead_routers: u64,
+    /// Flits offered (identical seeded P2P pair list for every point).
+    pub injected: u64,
+    /// Flits that survived to ejection.
+    pub delivered: u64,
+    /// Flits discarded by the degraded fabric.
+    pub dropped: u64,
+    /// `delivered / injected`.
+    pub delivered_frac: f64,
+    /// Hops taken over ports the pristine route tables would not have
+    /// chosen — the fabric redundancy the traffic actually consumed.
+    pub rerouted_hops: u64,
+    /// Mean injection→ejection latency of the delivered flits (cycles).
+    pub avg_latency: f64,
+    /// `avg_latency / (this topology's kill-frac-0 avg_latency)`. Can dip
+    /// below 1 on heavily degraded low-connectivity fabrics: dropping the
+    /// long-path traffic shortens the surviving average.
+    pub latency_inflation: f64,
+}
+
+/// The `BENCH_resilience.json` payload: graceful-degradation comparison
+/// of the paper's fullerene fabric against mesh/torus baselines of the
+/// same core count under seeded fractional router kills. The structural
+/// asymmetry being measured: every fullerene core attaches to 3 routers
+/// (any single kill reroutes), while mesh/torus cores hang off exactly
+/// one router (a kill strands the core outright) — the paper's
+/// degree-variance argument, measured instead of asserted.
+#[derive(Debug, Clone)]
+pub struct Resilience {
+    /// All topology × kill-fraction points.
+    pub points: Vec<ResiliencePoint>,
+    /// Worst delivered fraction across the fullerene sweep.
+    pub fullerene_min_delivered_frac: f64,
+    /// Worst delivered fraction across the mesh sweep.
+    pub mesh_min_delivered_frac: f64,
+    /// Worst delivered fraction across the torus sweep.
+    pub torus_min_delivered_frac: f64,
+}
+
+/// Run one (topology, kill fraction) point: arm a seeded [`FaultKind::
+/// KillFrac`](crate::noc::FaultKind) plan firing on the first cycle,
+/// offer the shared pair list as a burst, drain, and read the health
+/// counters. Kill-only plans always drain: a dead router eagerly drops
+/// the flits it holds and unroutable traffic is discarded at arbitration,
+/// so no fixed point can strand the run.
+fn resilience_point(
+    topo: Topology,
+    kill_frac: f64,
+    kill_seed: u64,
+    pairs: &[(usize, usize)],
+) -> Result<ResiliencePoint> {
+    use crate::noc::{FaultPlan, When};
+    let name = topo.name.clone();
+    let mut sim = NocSim::new(topo, 4, EnergyParams::nominal());
+    sim.set_trace_mode(TraceMode::Off);
+    if kill_frac > 0.0 {
+        sim.set_fault_plan(
+            FaultPlan::none().kill_frac(kill_frac, kill_seed, When::Cycle(1)),
+        )?;
+    }
+    for &(src, dst) in pairs {
+        sim.inject(src, &Dest::Core(dst), 0);
+    }
+    sim.run_until_drained(10_000_000)?;
+    let st = sim.stats();
+    let h = sim.fabric_health();
+    let injected = pairs.len() as u64;
+    if st.delivered + h.dropped != injected {
+        return Err(crate::Error::Noc(format!(
+            "resilience conservation broken on {name} @ {kill_frac}: \
+             {injected} injected != {} delivered + {} dropped",
+            st.delivered, h.dropped
+        )));
+    }
+    Ok(ResiliencePoint {
+        topology: name,
+        kill_frac,
+        dead_routers: h.dead_routers,
+        injected,
+        delivered: st.delivered,
+        dropped: h.dropped,
+        delivered_frac: st.delivered as f64 / injected as f64,
+        rerouted_hops: h.rerouted_hops,
+        avg_latency: st.avg_latency,
+        latency_inflation: 1.0, // filled by the sweep from the frac-0 point
+    })
+}
+
+/// Sweep [`RESILIENCE_KILL_FRACS`] over fullerene vs mesh-4x5 vs
+/// torus-4x5 (all 20 cores), offering the **identical** seeded P2P burst
+/// to every point so delivered fractions are directly comparable. `fast`
+/// selects the CI smoke budget.
+pub fn resilience_sweep(seed: u64, fast: bool) -> Result<Resilience> {
+    let n_flits: usize = if fast { 400 } else { 1200 };
+    let n_cores = 20usize;
+    let mut rng = Rng::new(seed);
+    let mut pairs = Vec::with_capacity(n_flits);
+    while pairs.len() < n_flits {
+        let src = rng.below_usize(n_cores);
+        let dst = rng.below_usize(n_cores);
+        if src != dst {
+            pairs.push((src, dst));
+        }
+    }
+
+    let mut points = Vec::new();
+    for topo_fn in [
+        Topology::fullerene as fn() -> Topology,
+        || Topology::mesh2d(4, 5),
+        || Topology::torus(4, 5),
+    ] {
+        let mut base_latency = 0.0f64;
+        for (i, &frac) in RESILIENCE_KILL_FRACS.iter().enumerate() {
+            let mut p = resilience_point(topo_fn(), frac, seed ^ (0xD00D + i as u64), &pairs)?;
+            if i == 0 {
+                base_latency = p.avg_latency;
+            }
+            p.latency_inflation = if base_latency > 0.0 {
+                p.avg_latency / base_latency
+            } else {
+                1.0
+            };
+            points.push(p);
+        }
+    }
+
+    let min_frac = |name: &str| {
+        points
+            .iter()
+            .filter(|p| p.topology == name)
+            .map(|p| p.delivered_frac)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let fullerene_min = min_frac("fullerene");
+    let mesh_min = min_frac("mesh-4x5");
+    let torus_min = min_frac("torus-4x5");
+    Ok(Resilience {
+        points,
+        fullerene_min_delivered_frac: fullerene_min,
+        mesh_min_delivered_frac: mesh_min,
+        torus_min_delivered_frac: torus_min,
+    })
+}
+
+/// The resilience sweep as machine-readable JSON (the
+/// `BENCH_resilience.json` schema the CI perf-smoke job tracks).
+pub fn resilience_json(r: &Resilience, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-resilience-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        (
+            "kill_fracs",
+            Json::Arr(RESILIENCE_KILL_FRACS.iter().map(|&f| Json::Num(f)).collect()),
+        ),
+        (
+            "points",
+            Json::Arr(
+                r.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("topology", Json::Str(p.topology.clone())),
+                            ("kill_frac", Json::Num(p.kill_frac)),
+                            ("dead_routers", Json::Num(p.dead_routers as f64)),
+                            ("injected", Json::Num(p.injected as f64)),
+                            ("delivered", Json::Num(p.delivered as f64)),
+                            ("dropped", Json::Num(p.dropped as f64)),
+                            ("delivered_frac", Json::Num(p.delivered_frac)),
+                            ("rerouted_hops", Json::Num(p.rerouted_hops as f64)),
+                            ("avg_latency", Json::Num(p.avg_latency)),
+                            ("latency_inflation", Json::Num(p.latency_inflation)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "fullerene_min_delivered_frac",
+            Json::Num(r.fullerene_min_delivered_frac),
+        ),
+        ("mesh_min_delivered_frac", Json::Num(r.mesh_min_delivered_frac)),
+        ("torus_min_delivered_frac", Json::Num(r.torus_min_delivered_frac)),
+    ])
+}
+
+/// Gate a fresh resilience run against a checked-in baseline; returns
+/// human-readable regression descriptions (empty = pass). Same arming
+/// rule as the other perf checks:
+///
+/// - structural floors — always enforced: the healthy (kill-frac-0)
+///   points must deliver everything, and the fullerene fabric must
+///   deliver at least the mesh fraction at every matched kill fraction
+///   (the degree-variance claim this subsystem exists to measure);
+/// - comparisons against the baseline's numbers (per-point
+///   `delivered_frac`, the sweep-wide fullerene minimum) are enforced
+///   only when the baseline's `provenance` is `"measured"` — a
+///   bootstrap baseline carries hand-estimated figures that must never
+///   fail a real run.
+pub fn resilience_check(current: &Resilience, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let floor = 1.0 - max_regress;
+    for p in &current.points {
+        if p.kill_frac == 0.0 && (p.delivered_frac != 1.0 || p.dropped != 0) {
+            fails.push(format!(
+                "{}: healthy fabric dropped {} flits (delivered_frac {:.4})",
+                p.topology, p.dropped, p.delivered_frac
+            ));
+        }
+    }
+    for f in &current.points {
+        if f.topology != "fullerene" {
+            continue;
+        }
+        for other in &current.points {
+            if other.topology != "fullerene"
+                && other.kill_frac == f.kill_frac
+                && f.delivered_frac < other.delivered_frac
+            {
+                fails.push(format!(
+                    "fullerene delivered {:.4} below {} {:.4} at kill frac {}",
+                    f.delivered_frac, other.topology, other.delivered_frac, f.kill_frac
+                ));
+            }
+        }
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    if let Some(base) = baseline
+        .get_opt("fullerene_min_delivered_frac")
+        .and_then(|v| v.as_f64().ok())
+    {
+        if current.fullerene_min_delivered_frac < floor * base {
+            fails.push(format!(
+                "fullerene min delivered_frac regressed: {:.4} vs baseline {:.4}",
+                current.fullerene_min_delivered_frac, base
+            ));
+        }
+    }
+    let Some(points) = baseline.get_opt("points").and_then(|v| v.as_arr().ok()) else {
+        return fails;
+    };
+    for b in points {
+        let (Some(topo), Some(frac)) = (
+            b.get_opt("topology").and_then(|v| v.as_str().ok()),
+            b.get_opt("kill_frac").and_then(|v| v.as_f64().ok()),
+        ) else {
+            continue;
+        };
+        let Some(cur) = current
+            .points
+            .iter()
+            .find(|p| p.topology == topo && p.kill_frac == frac)
+        else {
+            fails.push(format!("point {topo}@{frac} missing from the current run"));
+            continue;
+        };
+        if let Some(base_v) = b.get_opt("delivered_frac").and_then(|v| v.as_f64().ok()) {
+            if cur.delivered_frac < floor * base_v {
+                fails.push(format!(
+                    "{topo}@{frac} delivered_frac regressed: {:.4} vs baseline {base_v:.4}",
+                    cur.delivered_frac
+                ));
+            }
+        }
+    }
+    fails
+}
+
 /// One Fig. 5c measurement point.
 #[derive(Debug, Clone)]
 pub struct Fig5cPoint {
@@ -1850,6 +2142,111 @@ mod tests {
         let s = j.to_string();
         assert!(s.contains("throughput_samples_per_s"));
         assert!(s.contains("p99_session_latency_ms"));
+    }
+
+    #[test]
+    fn resilience_sweep_degrades_gracefully_and_deterministically() {
+        let r = resilience_sweep(13, true).unwrap();
+        // 3 topologies × 4 kill fractions, in sweep order.
+        assert_eq!(r.points.len(), 12);
+        for p in &r.points {
+            // Conservation holds at every point (the sweep re-checks it
+            // internally; pin it here too).
+            assert_eq!(p.delivered + p.dropped, p.injected, "{}@{}", p.topology, p.kill_frac);
+            if p.kill_frac == 0.0 {
+                assert_eq!(p.dropped, 0, "{} dropped on a healthy fabric", p.topology);
+                assert_eq!(p.delivered_frac, 1.0);
+                assert_eq!(p.dead_routers, 0);
+                assert_eq!(p.latency_inflation, 1.0);
+            } else {
+                assert!(p.dead_routers > 0, "{}@{}: no kill fired", p.topology, p.kill_frac);
+            }
+        }
+        // The structural claim: the fullerene fabric (3 router attaches
+        // per core) never delivers less than the degree-1-attach
+        // mesh/torus baselines at any matched kill fraction.
+        for f in r.points.iter().filter(|p| p.topology == "fullerene") {
+            for o in r.points.iter().filter(|p| p.topology != "fullerene") {
+                if o.kill_frac == f.kill_frac {
+                    assert!(
+                        f.delivered_frac >= o.delivered_frac,
+                        "fullerene {} < {} {} at {}",
+                        f.delivered_frac,
+                        o.topology,
+                        o.delivered_frac,
+                        f.kill_frac
+                    );
+                }
+            }
+        }
+        assert!(r.fullerene_min_delivered_frac >= r.mesh_min_delivered_frac);
+        assert!(r.fullerene_min_delivered_frac >= r.torus_min_delivered_frac);
+        // Seeded kills + seeded traffic: the whole sweep is reproducible
+        // bit for bit.
+        let r2 = resilience_sweep(13, true).unwrap();
+        for (a, b) in r.points.iter().zip(r2.points.iter()) {
+            assert_eq!(a.delivered, b.delivered);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.rerouted_hops, b.rerouted_hops);
+            assert_eq!(a.avg_latency.to_bits(), b.avg_latency.to_bits());
+        }
+        let j = resilience_json(&r, "measured").to_string();
+        assert!(j.contains("delivered_frac") && j.contains("fullerene_min_delivered_frac"));
+    }
+
+    #[test]
+    fn resilience_check_gates_structure_and_measured_baselines() {
+        let point = |topo: &str, frac: f64, df: f64| ResiliencePoint {
+            topology: topo.into(),
+            kill_frac: frac,
+            dead_routers: if frac > 0.0 { 2 } else { 0 },
+            injected: 400,
+            delivered: (400.0 * df) as u64,
+            dropped: 400 - (400.0 * df) as u64,
+            delivered_frac: df,
+            rerouted_hops: 9,
+            avg_latency: 6.0,
+            latency_inflation: 1.1,
+        };
+        let current = Resilience {
+            points: vec![
+                point("fullerene", 0.0, 1.0),
+                point("fullerene", 0.2, 0.95),
+                point("mesh-4x5", 0.0, 1.0),
+                point("mesh-4x5", 0.2, 0.60),
+            ],
+            fullerene_min_delivered_frac: 0.95,
+            mesh_min_delivered_frac: 0.60,
+            torus_min_delivered_frac: 0.70,
+        };
+        // Bootstrap baseline: only the structural floors are gated — its
+        // hand-estimated figures must never fail a real run.
+        let bootstrap = Json::parse(
+            r#"{"provenance":"bootstrap","fullerene_min_delivered_frac":0.999,
+                "points":[{"topology":"fullerene","kill_frac":0.2,
+                           "delivered_frac":0.9999}]}"#,
+        )
+        .unwrap();
+        assert!(resilience_check(&current, &bootstrap, 0.30).is_empty());
+        // Measured baseline: per-point and sweep-minimum floors gated too.
+        let measured = Json::parse(
+            r#"{"provenance":"measured","fullerene_min_delivered_frac":3.0,
+                "points":[{"topology":"fullerene","kill_frac":0.2,
+                           "delivered_frac":3.0}]}"#,
+        )
+        .unwrap();
+        let fails = resilience_check(&current, &measured, 0.30);
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        // The structural floors always fire, whatever the baseline:
+        // a lossy healthy fabric …
+        let mut broken = current.clone();
+        broken.points[0].delivered_frac = 0.9;
+        broken.points[0].dropped = 40;
+        assert!(!resilience_check(&broken, &bootstrap, 0.30).is_empty());
+        // … or a fullerene fabric degrading worse than the mesh.
+        let mut inverted = current.clone();
+        inverted.points[1].delivered_frac = 0.5;
+        assert!(!resilience_check(&inverted, &bootstrap, 0.30).is_empty());
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!   "chip": {
 //!     "domains": 1, "n_cores": 20, "max_neurons_per_core": 8192,
 //!     "fifo_depth": 4, "f_core_mhz": 100, "f_cpu_mhz": 50,
-//!     "supply_v": 1.08, "use_noc": true, "drive_cpu": true
+//!     "supply_v": 1.08, "use_noc": true, "drive_cpu": true,
+//!     "fault_plan": "kill-router:0@t2"
 //!   },
 //!   "workload": {"name": "nmnist", "samples": 50, "seed": 7},
 //!   "check": "reference",
@@ -129,6 +130,9 @@ impl RunConfig {
             if let Some(v) = chip.get_opt("drive_cpu") {
                 s.drive_cpu = v.as_bool()?;
             }
+            if let Some(v) = chip.get_opt("fault_plan") {
+                s.fault_plan = crate::noc::FaultPlan::parse(v.as_str()?)?;
+            }
         }
         if let Some(w) = j.get_opt("workload") {
             cfg.workload.workload = parse_workload(w.get("name")?.as_str()?)?;
@@ -180,6 +184,31 @@ mod tests {
         assert!(!cfg.soc.use_noc);
         assert_eq!(cfg.workload.samples, 5);
         assert_eq!(cfg.check, GoldenCheck::None);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn fault_plan_key_parses_and_validates() {
+        let tmp = std::env::temp_dir().join("fsoc_cfg_fault_test.json");
+        // Valid spec: router 0 killed at timestep 2.
+        std::fs::write(
+            &tmp,
+            r#"{"chip": {"fault_plan": "kill-router:0@t2"}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&tmp).unwrap();
+        assert!(!cfg.soc.fault_plan.is_empty());
+        // Malformed spec string is a load error.
+        std::fs::write(&tmp, r#"{"chip": {"fault_plan": "bogus"}}"#).unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        // Well-formed but topologically invalid (node 15 is a core, not a
+        // router) is rejected by the builder validation choke point.
+        std::fs::write(
+            &tmp,
+            r#"{"chip": {"fault_plan": "kill-router:15@1"}}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
     }
 

@@ -86,6 +86,10 @@ pub struct EnergyParams {
     pub p_router_l2_active: f64,
     /// Level-2 router leakage while clock-gated. (mW)
     pub p_router_l2_gated: f64,
+    /// Discarding one undeliverable flit on a degraded fabric (buffer
+    /// invalidate + credit return — no crossbar traversal). Only charged
+    /// under an armed fault plan; a healthy fabric never drops. (pJ)
+    pub e_flit_drop: f64,
 
     // ---- RISC-V CPU -------------------------------------------------------
     /// Base energy of one integer ALU instruction. (pJ)
@@ -164,6 +168,7 @@ impl EnergyParams {
             e_link_l2: 0.024,
             p_router_l2_active: 0.034,
             p_router_l2_gated: 0.002,
+            e_flit_drop: 0.002,
 
             // CPU. Calibrated so the MNIST control firmware (mostly
             // sleeping between timesteps) averages ≈0.434 mW and the
@@ -213,6 +218,7 @@ impl EnergyParams {
             &mut p.e_link,
             &mut p.e_hop_l2,
             &mut p.e_link_l2,
+            &mut p.e_flit_drop,
             &mut p.e_cpu_alu,
             &mut p.e_cpu_mem,
             &mut p.e_cpu_muldiv,

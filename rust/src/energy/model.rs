@@ -31,6 +31,10 @@ pub enum EventClass {
     /// Traversal of a link with a level-2 router endpoint (the longer,
     /// repeater-heavy scale-up wires).
     LinkL2,
+    /// Flit discarded on a degraded fabric (dead router or severed route
+    /// under an armed [`crate::noc::FaultPlan`]); never charged on a
+    /// healthy fabric.
+    FlitDropped,
     // cpu
     CpuAlu,
     CpuMem,
@@ -64,6 +68,7 @@ impl EventClass {
             LinkTraversal => p.e_link,
             HopL2 => p.e_hop_l2,
             LinkL2 => p.e_link_l2,
+            FlitDropped => p.e_flit_drop,
             CpuAlu => p.e_cpu_alu,
             CpuMem => p.e_cpu_mem,
             CpuMulDiv => p.e_cpu_muldiv,
@@ -77,7 +82,7 @@ impl EventClass {
     }
 
     /// All classes, for iteration in reports.
-    pub const ALL: [EventClass; 24] = [
+    pub const ALL: [EventClass; 25] = [
         EventClass::Sop,
         EventClass::ZspeWord,
         EventClass::ZspeForward,
@@ -93,6 +98,7 @@ impl EventClass {
         EventClass::LinkTraversal,
         EventClass::HopL2,
         EventClass::LinkL2,
+        EventClass::FlitDropped,
         EventClass::CpuAlu,
         EventClass::CpuMem,
         EventClass::CpuMulDiv,

@@ -70,6 +70,12 @@ fn print_help() {
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
                    --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
                    --domains D (multi-domain chip: D fullerene domains + L2 ring)\n\
+                   --fault-plan <spec>  (';'-separated degradation events:\n\
+                   kill-router:<node>@<when> | kill-link:<a>-<b>@<when> |\n\
+                   throttle-l1:<factor>@<when> | throttle-l2:<factor>@<when> |\n\
+                   congest:<node>+<cycles>@<when> | kill-frac:<frac>#<seed>@<when>,\n\
+                   <when> = cycle number or t<timestep>, e.g.\n\
+                   \"kill-router:3@200;kill-frac:0.2#7@t4\"; also accepted by serve)\n\
          serve     --sessions N  --workers K  --samples S  --seed S  --check none|reference\n\
                    --queue-depth Q (bounded submission queue; default = N)\n\
                    --no-warm (fresh chip per session instead of warm reuse)\n\
@@ -133,6 +139,9 @@ fn apply_chip_flags(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(d) = args.get("domains") {
         cfg.soc.domains = d.parse().map_err(|_| Error::config("bad --domains"))?;
     }
+    if let Some(spec) = args.get("fault-plan") {
+        cfg.soc.fault_plan = fullerene_soc::noc::FaultPlan::parse(spec)?;
+    }
     Ok(())
 }
 
@@ -151,6 +160,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "hidden",
         "max-neurons-per-core",
         "domains",
+        "fault-plan",
     ])
     .map_err(Error::Config)?;
     let mut cfg = match args.get("config") {
@@ -234,6 +244,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "supply",
         "max-neurons-per-core",
         "domains",
+        "fault-plan",
     ])
     .map_err(Error::Config)?;
     let sessions: usize = args.get_parse_or("sessions", 4);
@@ -360,6 +371,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    for s in out.sessions.iter().filter(|s| s.degradation.armed) {
+        let d = &s.degradation;
+        println!(
+            "degraded {}: {:.1}% delivered ({} dropped, {} rerouted hops, \
+             {} dead routers, {} dead links)",
+            s.name,
+            d.delivered_frac() * 100.0,
+            d.dropped,
+            d.rerouted_hops,
+            d.dead_routers,
+            d.dead_links
+        );
+    }
     for f in &out.failures {
         eprintln!("session '{}' (#{}) failed: {}", f.name, f.index, f.error);
     }

@@ -1,0 +1,628 @@
+//! Deterministic fault injection for the NoC fabric.
+//!
+//! A [`FaultPlan`] is a seeded schedule of degradation events — router
+//! kills, link kills, level-wide link throttles and transient congestion
+//! windows — each with a cycle- or timestep-keyed activation. The
+//! simulator arms a plan by resolving it against its topology (seeded
+//! `kill-frac` events expand to a concrete router set here, so the same
+//! plan + seed always kills the same routers) into a [`FaultState`] it
+//! consults on its hot path.
+//!
+//! **Determinism contract** (pinned by `tests/chaos_faults.rs` and the
+//! equivalence suite):
+//! * An empty plan arms to nothing — the simulator stores `None` and its
+//!   behavior is bit-identical to one that never saw a plan, including
+//!   `switch_visits()`.
+//! * Every degraded run is a pure function of (topology, traffic, plan):
+//!   event expansion is seeded, activation order is `(when, plan order)`,
+//!   and rerouting reuses the topology's deterministic lowest-id policy
+//!   over the alive subgraph ([`Topology::out_port_table_masked`]).
+//! * Flits are conserved: `injected == delivered + dropped + in-flight`
+//!   at every cycle. Kills drop eagerly (the dead switch and the links
+//!   feeding it drain into the `FlitDropped` ledger class); link kills
+//!   strand flits already committed to the severed link, which the drain
+//!   loop classifies as `FabricDegraded` instead of spinning.
+
+use super::topology::{NodeId, Topology};
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// When a fault event activates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum When {
+    /// At the start of simulation cycle `c` (the first stepped cycle
+    /// is 1; `Cycle(0)` fires on the first step).
+    Cycle(u64),
+    /// When [`crate::noc::NocSim::set_timestep`] first reaches `t`.
+    Timestep(u32),
+}
+
+/// Which link level a throttle applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkLevel {
+    /// Intra-domain links (core↔L1 wires).
+    L1,
+    /// Scale-up links (either endpoint is a level-2 router).
+    L2,
+}
+
+/// What breaks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Permanently kill a router node: its buffers (and flits already
+    /// committed onto its links) drop, routing recomputes around it, and
+    /// it never re-enters the active worklist.
+    RouterKill {
+        /// The router's node id.
+        node: NodeId,
+    },
+    /// Permanently sever the link between adjacent nodes `a` and `b`:
+    /// routing recomputes around it; flits already committed to the
+    /// link's output FIFO strand (→ `FabricDegraded`).
+    LinkKill {
+        /// One endpoint.
+        a: NodeId,
+        /// The other endpoint.
+        b: NodeId,
+    },
+    /// Throttle every link of one fabric level to one traversal per
+    /// `factor` cycles (`factor == 1` is a no-op).
+    LinkThrottle {
+        /// Which links slow down.
+        level: LinkLevel,
+        /// Period in cycles between permitted traversals.
+        factor: u64,
+    },
+    /// Transient congestion: the node's arbiter stalls for `duration`
+    /// cycles (upstream traffic backpressures), then recovers.
+    Congest {
+        /// The congested node.
+        node: NodeId,
+        /// Window length in cycles.
+        duration: u64,
+    },
+    /// Seeded random kill of `round(frac × router count)` routers,
+    /// resolved deterministically when the plan is armed.
+    KillFrac {
+        /// Fraction of routers to kill, in `[0, 1]`.
+        frac: f64,
+        /// PRNG seed for the router choice.
+        seed: u64,
+    },
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Activation point.
+    pub when: When,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seeded schedule of fabric faults. The empty plan is
+/// the no-fault contract: arming it changes nothing, bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Scheduled events (plan order breaks activation-cycle ties).
+    pub events: Vec<FaultEvent>,
+}
+
+/// CLI grammar for `--fault-plan` (also `FaultPlan::parse`).
+pub const FAULT_SPEC_USAGE: &str = "fault plan spec: ';'-separated events \
+     — kill-router:<node>@<when>; kill-link:<a>-<b>@<when>; \
+     throttle-l1:<factor>@<when>; throttle-l2:<factor>@<when>; \
+     congest:<node>+<cycles>@<when>; kill-frac:<frac>#<seed>@<when> \
+     — with <when> a cycle number or t<timestep> (e.g. \
+     \"kill-router:3@200;kill-frac:0.2#7@t4\")";
+
+impl FaultPlan {
+    /// The empty plan: no faults, provably free when armed.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Schedule a router kill.
+    pub fn kill_router(mut self, node: NodeId, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::RouterKill { node } });
+        self
+    }
+
+    /// Schedule a link kill.
+    pub fn kill_link(mut self, a: NodeId, b: NodeId, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::LinkKill { a, b } });
+        self
+    }
+
+    /// Schedule a level-wide link throttle.
+    pub fn throttle(mut self, level: LinkLevel, factor: u64, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::LinkThrottle { level, factor } });
+        self
+    }
+
+    /// Schedule a transient congestion window.
+    pub fn congest(mut self, node: NodeId, duration: u64, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::Congest { node, duration } });
+        self
+    }
+
+    /// Schedule a seeded fractional router kill.
+    pub fn kill_frac(mut self, frac: f64, seed: u64, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::KillFrac { frac, seed } });
+        self
+    }
+
+    /// Parse the CLI spec grammar ([`FAULT_SPEC_USAGE`]). The empty
+    /// string parses to [`FaultPlan::none`].
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let bad = |ev: &str| Error::Config(format!("bad fault event '{ev}' — {FAULT_SPEC_USAGE}"));
+        let mut plan = FaultPlan::none();
+        for ev in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (head, when) = ev.rsplit_once('@').ok_or_else(|| bad(ev))?;
+            let when = parse_when(when.trim()).ok_or_else(|| bad(ev))?;
+            let kind = if let Some(rest) = head.strip_prefix("kill-router:") {
+                FaultKind::RouterKill { node: rest.trim().parse().map_err(|_| bad(ev))? }
+            } else if let Some(rest) = head.strip_prefix("kill-link:") {
+                let (a, b) = rest.split_once('-').ok_or_else(|| bad(ev))?;
+                FaultKind::LinkKill {
+                    a: a.trim().parse().map_err(|_| bad(ev))?,
+                    b: b.trim().parse().map_err(|_| bad(ev))?,
+                }
+            } else if let Some(rest) = head.strip_prefix("throttle-l1:") {
+                FaultKind::LinkThrottle {
+                    level: LinkLevel::L1,
+                    factor: rest.trim().parse().map_err(|_| bad(ev))?,
+                }
+            } else if let Some(rest) = head.strip_prefix("throttle-l2:") {
+                FaultKind::LinkThrottle {
+                    level: LinkLevel::L2,
+                    factor: rest.trim().parse().map_err(|_| bad(ev))?,
+                }
+            } else if let Some(rest) = head.strip_prefix("congest:") {
+                let (node, dur) = rest.split_once('+').ok_or_else(|| bad(ev))?;
+                FaultKind::Congest {
+                    node: node.trim().parse().map_err(|_| bad(ev))?,
+                    duration: dur.trim().parse().map_err(|_| bad(ev))?,
+                }
+            } else if let Some(rest) = head.strip_prefix("kill-frac:") {
+                let (frac, seed) = rest.split_once('#').ok_or_else(|| bad(ev))?;
+                FaultKind::KillFrac {
+                    frac: frac.trim().parse().map_err(|_| bad(ev))?,
+                    seed: seed.trim().parse().map_err(|_| bad(ev))?,
+                }
+            } else {
+                return Err(bad(ev));
+            };
+            plan.events.push(FaultEvent { when, kind });
+        }
+        plan.validate_values()?;
+        Ok(plan)
+    }
+
+    /// Topology-free value checks (ranges a builder can verify before the
+    /// fabric exists).
+    pub fn validate_values(&self) -> Result<()> {
+        for ev in &self.events {
+            match &ev.kind {
+                FaultKind::LinkThrottle { factor, .. } if *factor == 0 => {
+                    return Err(Error::Config("fault plan: throttle factor must be ≥ 1".into()));
+                }
+                FaultKind::Congest { duration, .. } if *duration == 0 => {
+                    return Err(Error::Config(
+                        "fault plan: congestion duration must be ≥ 1 cycle".into(),
+                    ));
+                }
+                FaultKind::KillFrac { frac, .. } if !(0.0..=1.0).contains(frac) => {
+                    return Err(Error::Config(format!(
+                        "fault plan: kill fraction {frac} outside [0, 1]"
+                    )));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Full validation against the fabric the plan will run on: killed
+    /// nodes must be routers (cores are compute endpoints, not fabric),
+    /// severed links must exist.
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        self.validate_values()?;
+        for ev in &self.events {
+            match &ev.kind {
+                FaultKind::RouterKill { node } | FaultKind::Congest { node, .. } => {
+                    if *node >= topo.len() || !topo.kind(*node).is_router() {
+                        return Err(Error::Config(format!(
+                            "fault plan: node {node} is not a router of {}",
+                            topo.name
+                        )));
+                    }
+                }
+                FaultKind::LinkKill { a, b } => {
+                    if *a >= topo.len() || *b >= topo.len() || !topo.neighbors(*a).contains(b) {
+                        return Err(Error::Config(format!(
+                            "fault plan: no link {a}-{b} in {}",
+                            topo.name
+                        )));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_when(s: &str) -> Option<When> {
+    if let Some(t) = s.strip_prefix('t') {
+        t.parse().ok().map(When::Timestep)
+    } else {
+        s.parse().ok().map(When::Cycle)
+    }
+}
+
+/// Degradation counters surfaced by `NocSim::fabric_health` — all zero
+/// (and `armed == false`) when no fault plan is armed. Counters follow
+/// the accounting window (`reset_accounting` zeroes them and re-arms the
+/// plan, healing the fabric — warm chips stay bit-identical to fresh).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FabricHealth {
+    /// A fault plan with at least one event is armed.
+    pub armed: bool,
+    /// Flits discarded (dead-router drain or severed route).
+    pub dropped: u64,
+    /// Flit-hops taken over links that differ from the pristine route
+    /// (the redundancy actually exercised).
+    pub rerouted_hops: u64,
+    /// Routers killed so far.
+    pub dead_routers: u64,
+    /// Links severed so far (a router kill does not count its links).
+    pub dead_links: u64,
+}
+
+/// One concrete, topology-resolved action (`KillFrac` already expanded).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Action {
+    Kill(NodeId),
+    CutLink(NodeId, NodeId),
+    Throttle(LinkLevel, u64),
+    Congest(NodeId, u64),
+}
+
+/// An armed plan: the resolved schedule plus the degradation state the
+/// simulator mutates as events fire. Created by [`FaultState::arm`].
+#[derive(Debug, Clone)]
+pub(crate) struct FaultState {
+    /// The source plan, retained so `reset_accounting` can re-arm.
+    pub plan: FaultPlan,
+    /// Cycle-keyed actions sorted by activation cycle (stable sort: plan
+    /// order breaks ties); `cursor` marks the first unapplied entry.
+    by_cycle: Vec<(u64, Action)>,
+    cursor: usize,
+    /// Timestep-keyed actions; each fires once, whenever the timestep
+    /// first reaches it.
+    by_timestep: Vec<(u32, Action, bool)>,
+    /// Kills applied so far.
+    pub node_dead: Vec<bool>,
+    /// Severed links applied so far (normalized `a < b`, sorted).
+    pub dead_links: Vec<(NodeId, NodeId)>,
+    /// Degraded routing table (pristine until the first kill/cut).
+    pub out_port: Vec<Vec<u16>>,
+    /// Open congestion windows: `(node, re-enable cycle)`.
+    pub congested: Vec<(NodeId, u64)>,
+    /// Active throttle period per level (1 = unthrottled).
+    pub throttle_l1: u64,
+    /// Active throttle period for scale-up links.
+    pub throttle_l2: u64,
+    /// Any kill or cut applied: routes differ from pristine, unroutable
+    /// heads must drop, and fixed points classify as `FabricDegraded`.
+    pub degraded: bool,
+    /// Flits discarded this accounting window.
+    pub dropped: u64,
+    /// Detour flit-hops this accounting window.
+    pub rerouted_hops: u64,
+}
+
+impl FaultState {
+    /// Resolve `plan` against `topo`: validate, expand seeded `KillFrac`
+    /// events into concrete router kills, sort the cycle schedule. The
+    /// caller passes the pristine out-port table (cloned) as the initial
+    /// degraded table.
+    pub(crate) fn arm(
+        plan: &FaultPlan,
+        topo: &Topology,
+        pristine: Vec<Vec<u16>>,
+    ) -> Result<Box<FaultState>> {
+        plan.validate(topo)?;
+        let mut by_cycle = Vec::new();
+        let mut by_timestep = Vec::new();
+        for ev in &plan.events {
+            let actions: Vec<Action> = match &ev.kind {
+                FaultKind::RouterKill { node } => vec![Action::Kill(*node)],
+                FaultKind::LinkKill { a, b } => {
+                    vec![Action::CutLink((*a).min(*b), (*a).max(*b))]
+                }
+                FaultKind::LinkThrottle { level, factor } => {
+                    vec![Action::Throttle(*level, *factor)]
+                }
+                FaultKind::Congest { node, duration } => {
+                    vec![Action::Congest(*node, *duration)]
+                }
+                FaultKind::KillFrac { frac, seed } => {
+                    let routers = topo.routers();
+                    let k = ((frac * routers.len() as f64).round() as usize).min(routers.len());
+                    let mut rng = Rng::new(*seed);
+                    let mut picks = rng.choose_k(routers.len(), k);
+                    picks.sort_unstable();
+                    picks.into_iter().map(|i| Action::Kill(routers[i])).collect()
+                }
+            };
+            for a in actions {
+                match ev.when {
+                    When::Cycle(c) => by_cycle.push((c, a)),
+                    When::Timestep(t) => by_timestep.push((t, a, false)),
+                }
+            }
+        }
+        by_cycle.sort_by_key(|&(c, _)| c);
+        Ok(Box::new(FaultState {
+            plan: plan.clone(),
+            by_cycle,
+            cursor: 0,
+            by_timestep,
+            node_dead: vec![false; topo.len()],
+            dead_links: Vec::new(),
+            out_port: pristine,
+            congested: Vec::new(),
+            throttle_l1: 1,
+            throttle_l2: 1,
+            degraded: false,
+            dropped: 0,
+            rerouted_hops: 0,
+        }))
+    }
+
+    /// Cycle-keyed actions due at/before `cycle`; advances the cursor.
+    /// Returns an empty (allocation-free) vec when nothing is due.
+    pub(crate) fn take_due_cycle(&mut self, cycle: u64) -> Vec<Action> {
+        if self.cursor >= self.by_cycle.len() || self.by_cycle[self.cursor].0 > cycle {
+            return Vec::new();
+        }
+        let mut due = Vec::new();
+        while self.cursor < self.by_cycle.len() && self.by_cycle[self.cursor].0 <= cycle {
+            due.push(self.by_cycle[self.cursor].1.clone());
+            self.cursor += 1;
+        }
+        due
+    }
+
+    /// Timestep-keyed actions due at `ts`, each fired at most once.
+    pub(crate) fn take_due_timestep(&mut self, ts: u32) -> Vec<Action> {
+        if self.by_timestep.iter().all(|&(t, _, fired)| fired || t > ts) {
+            return Vec::new();
+        }
+        let mut due = Vec::new();
+        for (t, a, fired) in &mut self.by_timestep {
+            if !*fired && *t <= ts {
+                *fired = true;
+                due.push(a.clone());
+            }
+        }
+        due
+    }
+
+    /// Congestion windows expired by `cycle` (removed; the simulator
+    /// re-enables the switches).
+    pub(crate) fn take_expired_congestion(&mut self, cycle: u64) -> Vec<NodeId> {
+        if self.congested.iter().all(|&(_, until)| until > cycle) {
+            return Vec::new();
+        }
+        let mut expired = Vec::new();
+        self.congested.retain(|&(n, until)| {
+            if until <= cycle {
+                expired.push(n);
+                false
+            } else {
+                true
+            }
+        });
+        expired
+    }
+
+    /// True when the link `a`–`b` must not move a flit: either endpoint
+    /// is dead or the link itself is severed.
+    pub(crate) fn link_blocked(&self, a: NodeId, b: NodeId) -> bool {
+        if self.node_dead[a] || self.node_dead[b] {
+            return true;
+        }
+        if self.dead_links.is_empty() {
+            return false;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.dead_links.binary_search(&key).is_ok()
+    }
+
+    /// True when a link of the given level sits out cycle `cycle` under
+    /// an active throttle.
+    pub(crate) fn throttled(&self, l2: bool, cycle: u64) -> bool {
+        let f = if l2 { self.throttle_l2 } else { self.throttle_l1 };
+        f > 1 && cycle % f != 0
+    }
+
+    /// How many consecutive zero-progress cycles the drain loop should
+    /// tolerate at `cycle`: pending cycle-keyed activations, open
+    /// congestion windows and throttle periods can all unblock the
+    /// fabric without external input. 0 = a zero-progress cycle is a
+    /// true fixed point.
+    pub(crate) fn zero_progress_tolerance(&self, cycle: u64) -> u64 {
+        let mut tol = 0u64;
+        if self.cursor < self.by_cycle.len() {
+            tol = tol.max(self.by_cycle[self.cursor].0.saturating_sub(cycle) + 1);
+        }
+        for &(_, until) in &self.congested {
+            tol = tol.max(until.saturating_sub(cycle) + 1);
+        }
+        if self.throttle_l1 > 1 {
+            tol = tol.max(self.throttle_l1);
+        }
+        if self.throttle_l2 > 1 {
+            tol = tol.max(self.throttle_l2);
+        }
+        tol
+    }
+
+    /// Current degradation counters.
+    pub(crate) fn health(&self) -> FabricHealth {
+        FabricHealth {
+            armed: true,
+            dropped: self.dropped,
+            rerouted_hops: self.rerouted_hops,
+            dead_routers: self.node_dead.iter().filter(|&&d| d).count() as u64,
+            dead_links: self.dead_links.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_event_kind() {
+        let plan = FaultPlan::parse(
+            "kill-router:3@200; kill-link:0-12@t2; throttle-l1:4@0; \
+             throttle-l2:8@t1; congest:5+30@100; kill-frac:0.25#42@t3",
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 6);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { when: When::Cycle(200), kind: FaultKind::RouterKill { node: 3 } }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent { when: When::Timestep(2), kind: FaultKind::LinkKill { a: 0, b: 12 } }
+        );
+        assert_eq!(
+            plan.events[2],
+            FaultEvent {
+                when: When::Cycle(0),
+                kind: FaultKind::LinkThrottle { level: LinkLevel::L1, factor: 4 }
+            }
+        );
+        assert_eq!(
+            plan.events[4],
+            FaultEvent { when: When::Cycle(100), kind: FaultKind::Congest { node: 5, duration: 30 } }
+        );
+        assert_eq!(
+            plan.events[5],
+            FaultEvent { when: When::Timestep(3), kind: FaultKind::KillFrac { frac: 0.25, seed: 42 } }
+        );
+    }
+
+    #[test]
+    fn empty_spec_parses_to_none() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "kill-router:3",        // no @when
+            "kill-router:x@5",      // bad node
+            "kill-link:3@5",        // missing endpoint
+            "warp-core:3@5",        // unknown kind
+            "congest:5@100",        // missing +duration
+            "kill-frac:0.5@3",      // missing #seed
+            "throttle-l1:0@5",      // factor 0
+            "kill-frac:1.5#2@3",    // frac out of range
+            "congest:5+0@9",        // zero-length window
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("fault"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cores_and_missing_links() {
+        let t = Topology::fullerene(); // nodes 0..12 routers, 12..32 cores
+        let core_kill = FaultPlan::none().kill_router(15, When::Cycle(1));
+        assert!(core_kill.validate(&t).is_err(), "killed a core");
+        let no_such_link = FaultPlan::none().kill_link(0, 1, When::Cycle(1));
+        assert!(no_such_link.validate(&t).is_err(), "routers 0-1 are not adjacent");
+        let ok = FaultPlan::none()
+            .kill_router(3, When::Cycle(1))
+            .kill_link(12, 0, When::Cycle(2));
+        ok.validate(&t).unwrap();
+    }
+
+    #[test]
+    fn kill_frac_resolution_is_seed_deterministic() {
+        let t = Topology::fullerene();
+        let plan = FaultPlan::none().kill_frac(0.25, 7, When::Cycle(5));
+        let a = FaultState::arm(&plan, &t, t.out_port_table()).unwrap();
+        let b = FaultState::arm(&plan, &t, t.out_port_table()).unwrap();
+        let kills = |s: &FaultState| {
+            s.clone_by_cycle()
+        };
+        let (ka, kb) = (kills(&a), kills(&b));
+        assert_eq!(ka, kb, "same seed must kill the same routers");
+        // 25 % of 12 routers rounds to 3 kills.
+        assert_eq!(ka.len(), 3);
+        for (c, act) in &ka {
+            assert_eq!(*c, 5);
+            match act {
+                Action::Kill(n) => assert!(t.kind(*n).is_router()),
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+        let other_seed = FaultPlan::none().kill_frac(0.25, 8, When::Cycle(5));
+        let c = FaultState::arm(&other_seed, &t, t.out_port_table()).unwrap();
+        assert_ne!(ka, c.clone_by_cycle(), "different seed, different routers (w.h.p.)");
+    }
+
+    #[test]
+    fn schedule_cursor_and_timestep_firing() {
+        let t = Topology::fullerene();
+        let plan = FaultPlan::none()
+            .kill_router(2, When::Cycle(10))
+            .kill_router(4, When::Cycle(3))
+            .kill_router(6, When::Timestep(2));
+        let mut s = FaultState::arm(&plan, &t, t.out_port_table()).unwrap();
+        assert!(s.take_due_cycle(2).is_empty());
+        assert_eq!(s.take_due_cycle(3), vec![Action::Kill(4)]);
+        assert!(s.take_due_cycle(9).is_empty());
+        assert_eq!(s.take_due_cycle(50), vec![Action::Kill(2)]);
+        assert!(s.take_due_timestep(1).is_empty());
+        assert_eq!(s.take_due_timestep(2), vec![Action::Kill(6)]);
+        assert!(s.take_due_timestep(2).is_empty(), "timestep events fire once");
+    }
+
+    #[test]
+    fn zero_progress_tolerance_tracks_self_unblocking_faults() {
+        let t = Topology::fullerene();
+        let plan = FaultPlan::none().kill_router(2, When::Cycle(100));
+        let mut s = FaultState::arm(&plan, &t, t.out_port_table()).unwrap();
+        assert!(s.zero_progress_tolerance(10) >= 90, "pending event must keep the loop alive");
+        s.take_due_cycle(100);
+        assert_eq!(s.zero_progress_tolerance(101), 0, "spent schedule tolerates nothing");
+        s.throttle_l1 = 4;
+        assert_eq!(s.zero_progress_tolerance(101), 4);
+        s.congested.push((3, 150));
+        assert!(s.zero_progress_tolerance(101) >= 49);
+    }
+
+    impl FaultState {
+        /// Test helper: the resolved cycle schedule.
+        fn clone_by_cycle(&self) -> Vec<(u64, Action)> {
+            self.by_cycle.clone()
+        }
+    }
+}

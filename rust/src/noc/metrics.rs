@@ -22,6 +22,12 @@ pub struct TopoStats {
     pub avg_core_hops: f64,
     /// Maximum core-to-core distance.
     pub diameter_core_hops: usize,
+    /// Smallest number of routers any core attaches to — the static
+    /// single-point-of-failure bound behind the resilience sweep: a
+    /// fabric with `min_core_attach == 1` strands a core outright when
+    /// its one router dies (mesh/torus/ring baselines), while the
+    /// fullerene's 3 attaches reroute around any single kill.
+    pub min_core_attach: usize,
 }
 
 impl TopoStats {
@@ -37,6 +43,11 @@ impl TopoStats {
             / n as f64;
 
         let cores = t.cores();
+        let min_attach = cores
+            .iter()
+            .map(|&c| t.neighbors(c).len())
+            .min()
+            .unwrap_or(0);
         let mut total = 0usize;
         let mut pairs = 0usize;
         let mut diameter = 0usize;
@@ -58,6 +69,7 @@ impl TopoStats {
             degree_variance: var,
             avg_core_hops: total as f64 / pairs as f64,
             diameter_core_hops: diameter,
+            min_core_attach: min_attach,
         }
     }
 
@@ -71,6 +83,7 @@ impl TopoStats {
             "degree var",
             "avg hops",
             "diameter",
+            "min attach",
         ]);
         for s in stats {
             t.push_row(vec![
@@ -81,6 +94,7 @@ impl TopoStats {
                 format!("{:.2}", s.degree_variance),
                 format!("{:.2}", s.avg_core_hops),
                 s.diameter_core_hops.to_string(),
+                s.min_core_attach.to_string(),
             ]);
         }
         t
@@ -137,6 +151,16 @@ mod tests {
                 f.degree_variance
             );
         }
+    }
+
+    #[test]
+    fn core_attach_degrees_pin_the_resilience_asymmetry() {
+        // Every fullerene core (a face of the icosahedron) attaches to 3
+        // routers; every baseline core hangs off exactly one.
+        assert_eq!(TopoStats::compute(&Topology::fullerene()).min_core_attach, 3);
+        assert_eq!(TopoStats::compute(&Topology::mesh2d(4, 5)).min_core_attach, 1);
+        assert_eq!(TopoStats::compute(&Topology::torus(4, 5)).min_core_attach, 1);
+        assert_eq!(TopoStats::compute(&Topology::ring(20)).min_core_attach, 1);
     }
 
     #[test]

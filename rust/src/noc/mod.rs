@@ -20,6 +20,9 @@
 //! - [`sim`] — the event-driven cycle-level NoC simulator (Fig. 5c:
 //!   throughput, pJ/hop): active-switch worklist, precomputed port
 //!   routing, streaming delivery accounting.
+//! - [`fault`] — deterministic fault injection: seeded [`FaultPlan`]
+//!   schedules (router/link kills, throttles, transient congestion)
+//!   consumed by [`NocSim`] to model degraded fabrics.
 //! - [`reference`] — the pre-optimization full-scan simulator, retained
 //!   verbatim as the bit-exactness oracle and perf baseline.
 //! - [`traffic`] — synthetic traffic generators for the router benches.
@@ -27,6 +30,7 @@
 //!   central level-2 routers into one cycle-simulatable fabric, with the
 //!   closed-form hop model retained as a cross-check oracle.
 
+pub mod fault;
 pub mod metrics;
 pub mod multilevel;
 pub mod packet;
@@ -36,6 +40,7 @@ pub mod sim;
 pub mod topology;
 pub mod traffic;
 
+pub use fault::{FabricHealth, FaultEvent, FaultKind, FaultPlan, LinkLevel, When, FAULT_SPEC_USAGE};
 pub use metrics::TopoStats;
 pub use multilevel::{AnalyticModel, MultiDomain, MultiDomainMeasurement};
 pub use packet::{Dest, Flit, TxMode};

@@ -163,6 +163,17 @@ impl CmRouter {
         f
     }
 
+    /// Pop the head of an input FIFO. Only the fault-injection path uses
+    /// this (draining a killed router, discarding unroutable heads) —
+    /// normal forwarding always goes through [`CmRouter::arbitrate`].
+    pub fn in_pop(&mut self, port: usize) -> Option<Flit> {
+        let f = self.in_buf[port].pop_front();
+        if f.is_some() {
+            self.in_occ -= 1;
+        }
+        f
+    }
+
     /// Occupancy across all input FIFOs (O(1): kept incrementally).
     pub fn in_occupancy(&self) -> usize {
         self.in_occ
@@ -357,6 +368,21 @@ mod tests {
         r.arbitrate(|_| Some(0));
         r.out_pop(0);
         assert_eq!((r.in_occupancy(), r.out_occupancy()), (0, 0));
+    }
+
+    #[test]
+    fn in_pop_drains_and_tracks_occupancy() {
+        let mut r = CmRouter::new(0, &[10, 11], 4);
+        r.accept(0, flit(1, 0, 0));
+        r.accept(0, flit(2, 0, 0));
+        r.accept(1, flit(3, 0, 0));
+        assert_eq!(r.in_occupancy(), 3);
+        assert_eq!(r.in_pop(0).unwrap().id, 1);
+        assert_eq!(r.in_pop(0).unwrap().id, 2);
+        assert!(r.in_pop(0).is_none());
+        assert_eq!(r.in_occupancy(), 1);
+        assert_eq!(r.in_pop(1).unwrap().id, 3);
+        assert_eq!(r.in_occupancy(), 0);
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //! matching the paper's hop definition; link traversals are charged
 //! separately.
 
+use super::fault::{Action, FabricHealth, FaultPlan, FaultState, LinkLevel};
 use super::packet::{Dest, Flit, TxMode};
 use super::router::CmRouter;
 use super::topology::{NodeId, NodeKind, Topology, NO_PORT};
@@ -144,6 +145,11 @@ pub struct NocSim {
     ledger: EnergyLedger,
     energy: EnergyParams,
     in_flight: u64,
+    /// Armed fault-injection state. `None` for the empty plan, so the
+    /// unfaulted hot path pays exactly one predictable branch and stays
+    /// bit-identical to a simulator that never saw a plan (pinned by the
+    /// equivalence suite, `switch_visits` included).
+    faults: Option<Box<FaultState>>,
 }
 
 impl NocSim {
@@ -202,7 +208,29 @@ impl NocSim {
             ledger: EnergyLedger::new(),
             energy,
             in_flight: 0,
+            faults: None,
         }
+    }
+
+    /// Arm `plan` (replacing any previous one), resolving it against the
+    /// topology — seeded `kill-frac` events expand to concrete routers
+    /// here. Only valid on a drained fabric. An empty plan disarms
+    /// entirely: the simulator stores `None` and behaves bit-identically
+    /// to one that never saw a plan.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        debug_assert_eq!(self.in_flight, 0, "fault plan change on a busy fabric");
+        if plan.is_empty() {
+            self.faults = None;
+            return Ok(());
+        }
+        self.faults = Some(FaultState::arm(&plan, &self.topo, self.out_port.clone())?);
+        Ok(())
+    }
+
+    /// Degradation counters for the current accounting window (all zero,
+    /// `armed == false`, when no fault plan is armed).
+    pub fn fabric_health(&self) -> FabricHealth {
+        self.faults.as_deref().map_or_else(FabricHealth::default, FaultState::health)
     }
 
     /// The topology being simulated.
@@ -251,17 +279,135 @@ impl NocSim {
     }
 
     /// Advance the global timestep (propagates to every switch's link
-    /// controller).
+    /// controller; timestep-keyed fault events whose activation this
+    /// reaches fire now).
     pub fn set_timestep(&mut self, ts: u32) {
         self.timestep = ts;
         for s in &mut self.switches {
             s.timestep = ts;
+        }
+        if self.faults.is_some() {
+            let due = self.faults.as_mut().unwrap().take_due_timestep(ts);
+            for action in due {
+                self.apply_fault_action(action);
+            }
         }
     }
 
     /// Clock-gate a specific router node (failure/power experiments).
     pub fn set_node_enabled(&mut self, node: NodeId, on: bool) {
         self.switches[node].enabled = on;
+    }
+
+    // ------------------- fault injection (cold paths) --------------------
+
+    /// Activate cycle-keyed fault events due this cycle and expire
+    /// congestion windows. Called from `step` only while a plan is armed.
+    fn apply_due_faults(&mut self) {
+        let cycle = self.cycle;
+        let expired = self.faults.as_mut().unwrap().take_expired_congestion(cycle);
+        for node in expired {
+            if !self.faults.as_deref().unwrap().node_dead[node] {
+                self.switches[node].enabled = true;
+            }
+        }
+        let due = self.faults.as_mut().unwrap().take_due_cycle(cycle);
+        for action in due {
+            self.apply_fault_action(action);
+        }
+    }
+
+    fn apply_fault_action(&mut self, action: Action) {
+        match action {
+            Action::Kill(node) => self.kill_router(node),
+            Action::CutLink(a, b) => self.cut_link(a, b),
+            Action::Throttle(level, factor) => {
+                let fs = self.faults.as_mut().unwrap();
+                match level {
+                    LinkLevel::L1 => fs.throttle_l1 = factor.max(1),
+                    LinkLevel::L2 => fs.throttle_l2 = factor.max(1),
+                }
+            }
+            Action::Congest(node, duration) => {
+                let until = self.cycle + duration;
+                let fs = self.faults.as_mut().unwrap();
+                if fs.node_dead[node] {
+                    return;
+                }
+                fs.congested.push((node, until));
+                self.switches[node].enabled = false;
+            }
+        }
+    }
+
+    /// Kill `node`: permanently disable its switch, eagerly drop every
+    /// flit it holds plus flits neighbors already committed onto its
+    /// links, and recompute routing around it. Dropped flits leave
+    /// `in_flight` (drains terminate, conservation holds as
+    /// `injected == delivered + dropped + in-flight`) and each charges
+    /// the `FlitDropped` ledger class.
+    fn kill_router(&mut self, node: NodeId) {
+        {
+            let fs = self.faults.as_mut().unwrap();
+            if fs.node_dead[node] {
+                return;
+            }
+            fs.node_dead[node] = true;
+            fs.degraded = true;
+            fs.congested.retain(|&(n, _)| n != node);
+        }
+        self.switches[node].enabled = false;
+        for p in 0..self.switches[node].port_count() {
+            while self.switches[node].in_pop(p).is_some() {
+                self.drop_flit();
+            }
+            while self.switches[node].out_pop(p).is_some() {
+                self.drop_flit();
+            }
+        }
+        // Routers stage no injections today, but drain defensively.
+        for _ in 0..self.pending[node].len() {
+            self.drop_flit();
+        }
+        self.pending[node].clear();
+        // Flits neighbors already committed onto the now-dead links.
+        for p in 0..self.local_port[node] {
+            let nb = self.topo.neighbors(node)[p];
+            let back = self.back_port[node][p] as usize;
+            while self.switches[nb].out_pop(back).is_some() {
+                self.drop_flit();
+            }
+        }
+        self.recompute_degraded_routes();
+    }
+
+    /// Sever the link `a`–`b`: routing recomputes around it, but flits
+    /// already committed to either side's output FIFO strand — the drain
+    /// loop classifies that fixed point as `FabricDegraded`.
+    fn cut_link(&mut self, a: NodeId, b: NodeId) {
+        let (a, b) = (a.min(b), a.max(b));
+        {
+            let fs = self.faults.as_mut().unwrap();
+            match fs.dead_links.binary_search(&(a, b)) {
+                Ok(_) => return,
+                Err(i) => fs.dead_links.insert(i, (a, b)),
+            }
+            fs.degraded = true;
+        }
+        self.recompute_degraded_routes();
+    }
+
+    fn recompute_degraded_routes(&mut self) {
+        let fs = self.faults.as_mut().unwrap();
+        fs.out_port = self.topo.out_port_table_masked(&fs.node_dead, &fs.dead_links);
+    }
+
+    /// Account one discarded flit (dead-router drain or severed route).
+    fn drop_flit(&mut self) {
+        self.in_flight -= 1;
+        self.ledger.add1(EventClass::FlitDropped);
+        self.faults.as_mut().unwrap().dropped += 1;
+        self.progress = true;
     }
 
     /// Put `n` on the worklist for the next step (no-op when already
@@ -343,6 +489,9 @@ impl NocSim {
     pub fn step(&mut self) {
         self.cycle += 1;
         self.progress = false;
+        if self.faults.is_some() {
+            self.apply_due_faults();
+        }
         if !self.incoming.is_empty() {
             self.active.append(&mut self.incoming);
             self.active.sort_unstable();
@@ -378,11 +527,38 @@ impl NocSim {
             if self.switches[n].in_occupancy() == 0 {
                 continue;
             }
+            // Degraded fabric only: discard input heads whose destination
+            // lost its last route (dead-router fallout) so they never
+            // wedge a FIFO, then arbitrate over the degraded table.
+            if matches!(self.faults.as_deref(), Some(fs) if fs.degraded) {
+                for p in 0..self.switches[n].port_count() {
+                    loop {
+                        let unroutable = {
+                            let fs = self.faults.as_deref().unwrap();
+                            match self.switches[n].in_head(p) {
+                                Some(f) => fs.out_port[n][f.dst_core] == NO_PORT,
+                                None => false,
+                            }
+                        };
+                        if !unroutable {
+                            break;
+                        }
+                        self.switches[n].in_pop(p);
+                        self.drop_flit();
+                    }
+                }
+                if self.switches[n].in_occupancy() == 0 {
+                    continue;
+                }
+            }
             let (bp0, ts0) = {
                 let s = &self.switches[n];
                 (s.stalls_backpressure, s.stalls_timestep)
             };
-            let row: &[u16] = &self.out_port[n];
+            let row: &[u16] = match self.faults.as_deref() {
+                Some(fs) if fs.degraded => &fs.out_port[n],
+                _ => &self.out_port[n],
+            };
             let moved = self.switches[n].arbitrate(|f| {
                 let p = row[f.dst_core];
                 if p == NO_PORT {
@@ -419,14 +595,31 @@ impl NocSim {
                     continue;
                 }
                 let nb = self.topo.neighbors(n)[p];
+                let nb_is_l2 = self.is_l2[nb];
+                // Fault gates (armed plans only): severed links and dead
+                // endpoints strand committed flits; throttled links move
+                // only on period-aligned cycles.
+                if let Some(fs) = self.faults.as_deref() {
+                    if fs.link_blocked(n, nb)
+                        || fs.throttled(nb_is_l2 || self.is_l2[n], self.cycle)
+                    {
+                        continue;
+                    }
+                }
                 let back = self.back_port[n][p] as usize;
                 if self.switches[nb].can_accept(back) {
                     let mut f = self.switches[n].out_pop(p).unwrap();
                     f.at = nb;
+                    // A hop over a port the pristine table would not have
+                    // chosen is redundancy in action — count it.
+                    if let Some(fs) = self.faults.as_deref_mut() {
+                        if fs.degraded && self.out_port[n][f.dst_core] != p as u16 {
+                            fs.rerouted_hops += 1;
+                        }
+                    }
                     // Links with an L2 endpoint are the long scale-up
                     // wires; arrival at an L2 router charges the wider
                     // crossbar's hop energy instead of the mode class.
-                    let nb_is_l2 = self.is_l2[nb];
                     self.ledger.add1(if nb_is_l2 || self.is_l2[n] {
                         EventClass::LinkL2
                     } else {
@@ -468,14 +661,20 @@ impl NocSim {
         });
     }
 
-    /// Run until all injected flits are delivered. Errors after
-    /// `max_cycles` without full drain — or **immediately** when a cycle
-    /// makes no progress at all: the simulator is deterministic and
-    /// nothing changes between `step`s here, so a zero-progress cycle is
-    /// a fixed point (timestep desync, gated routers or a backpressure
-    /// deadlock) and spinning to `max_cycles` would only burn host time.
+    /// Run until all injected flits are delivered (or dropped by an
+    /// armed fault plan). Errors after `max_cycles` without full drain —
+    /// or **immediately** when a cycle makes no progress at all: the
+    /// simulator is deterministic and nothing changes between `step`s
+    /// here, so a zero-progress cycle is a fixed point (timestep desync,
+    /// a degraded fabric stranding flits, gated routers or a
+    /// backpressure deadlock) and spinning to `max_cycles` would only
+    /// burn host time. The one exception: an armed fault plan can
+    /// unblock the fabric by itself (pending activations, congestion
+    /// expiry, throttle periods), so stagnation is tolerated exactly as
+    /// long as the plan can still change state.
     pub fn run_until_drained(&mut self, max_cycles: u64) -> Result<()> {
         let start = self.cycle;
+        let mut stagnant = 0u64;
         while self.in_flight > 0 {
             if self.cycle - start >= max_cycles {
                 return Err(Error::Noc(format!(
@@ -484,33 +683,54 @@ impl NocSim {
                 )));
             }
             self.step();
-            if !self.progress && self.in_flight > 0 {
-                return Err(Error::Noc(format!(
-                    "NoC not drained: fixed point after {} cycles with {} in \
-                     flight ({})",
-                    self.cycle - start,
-                    self.in_flight,
-                    self.stall_reason()
-                )));
+            if self.progress {
+                stagnant = 0;
+                continue;
             }
+            if self.in_flight == 0 {
+                break;
+            }
+            stagnant += 1;
+            let tolerance = self
+                .faults
+                .as_deref()
+                .map_or(0, |fs| fs.zero_progress_tolerance(self.cycle));
+            if stagnant <= tolerance {
+                continue;
+            }
+            return Err(Error::Noc(format!(
+                "NoC not drained: fixed point after {} cycles with {} in \
+                 flight ({})",
+                self.cycle - start,
+                self.in_flight,
+                self.stall_reason()
+            )));
         }
         Ok(())
     }
 
     /// Classify why the active set cannot make progress (error reporting
     /// only — runs on the cold path).
-    fn stall_reason(&self) -> &'static str {
+    fn stall_reason(&self) -> String {
         for &n in &self.active {
             let s = &self.switches[n];
             for p in 0..s.port_count() {
                 if let Some(f) = s.in_head(p) {
                     if f.timestep != self.timestep {
-                        return "stalled on timestep sync — advance with set_timestep";
+                        return "stalled on timestep sync — advance with set_timestep".into();
                     }
                 }
             }
         }
-        "gated routers or a backpressure deadlock"
+        if let Some(fs) = self.faults.as_deref() {
+            if fs.degraded {
+                return format!(
+                    "FabricDegraded: {} flits stranded by killed routers/links",
+                    self.in_flight
+                );
+            }
+        }
+        "gated routers or a backpressure deadlock".into()
     }
 
     /// Per-flit delivery trace under the configured [`TraceMode`]: every
@@ -577,9 +797,13 @@ impl NocSim {
     /// activity/stall counters, delivery accumulators/trace and the
     /// cycle counter) so a new measurement window starts from zero —
     /// on a reused chip, [`NocSim::stats`] then reports exactly the new
-    /// window (sessions must never see a predecessor's stalls). Only
-    /// valid while the fabric is drained (no flits in flight). The
-    /// [`NocSim::switch_visits`] diagnostic stays lifetime-cumulative.
+    /// window (sessions must never see a predecessor's stalls). An armed
+    /// fault plan is healed and **re-armed from scratch** (switches
+    /// re-enabled, routes restored, counters zeroed, schedule rewound):
+    /// a warm chip after a faulted session must be bit-identical to a
+    /// fresh one. Only valid while the fabric is drained (no flits in
+    /// flight). The [`NocSim::switch_visits`] diagnostic stays
+    /// lifetime-cumulative.
     pub fn reset_accounting(&mut self) {
         debug_assert_eq!(self.in_flight, 0, "reset_accounting on a busy fabric");
         self.ledger = EnergyLedger::new();
@@ -599,6 +823,21 @@ impl NocSim {
             s.stalls_backpressure = 0;
             s.stalls_timestep = 0;
             s.stalls_matrix = 0;
+        }
+        if let Some(fs) = self.faults.as_deref() {
+            for n in 0..self.switches.len() {
+                if fs.node_dead[n] {
+                    self.switches[n].enabled = true;
+                }
+            }
+            for &(n, _) in &fs.congested {
+                self.switches[n].enabled = true;
+            }
+            let plan = fs.plan.clone();
+            self.faults = Some(
+                FaultState::arm(&plan, &self.topo, self.out_port.clone())
+                    .expect("a previously armed plan re-validates"),
+            );
         }
     }
 
@@ -893,5 +1132,228 @@ mod tests {
         let b = s.inject(1, &Dest::Cores(vec![2, 3, 4]), 0);
         assert_eq!((b.start, b.end), (1, 4));
         assert_eq!(s.in_flight(), 4);
+    }
+
+    // ---------------------- fault injection ----------------------------
+
+    use super::super::fault::When;
+
+    /// A `(src core, dst core)` pair whose pristine route leaves the
+    /// source over the link to `router` — traffic guaranteed to feel a
+    /// fault at that router.
+    fn pair_via_router(t: &Topology, router: NodeId) -> (usize, usize) {
+        let out = t.out_port_table();
+        for c in 0..t.cores().len() {
+            let n = t.core_node(c);
+            for dst in 0..t.cores().len() {
+                if dst == c {
+                    continue;
+                }
+                let p = out[n][dst];
+                if p != NO_PORT && t.neighbors(n)[p as usize] == router {
+                    return (c, dst);
+                }
+            }
+        }
+        panic!("no pristine route uses router {router}");
+    }
+
+    #[test]
+    fn empty_fault_plan_is_disarmed_and_free() {
+        let drive = |s: &mut NocSim| {
+            for c in 0..20 {
+                s.inject(c, &Dest::Core((c + 7) % 20), 0);
+            }
+            s.run_until_drained(10_000).unwrap();
+        };
+        let mut plain = sim(Topology::fullerene());
+        drive(&mut plain);
+        let mut armed = sim(Topology::fullerene());
+        armed.set_fault_plan(FaultPlan::none()).unwrap();
+        assert_eq!(armed.fabric_health(), FabricHealth::default());
+        assert!(!armed.fabric_health().armed);
+        drive(&mut armed);
+        let (a, b) = (plain.stats(), armed.stats());
+        assert_eq!(a.avg_latency.to_bits(), b.avg_latency.to_bits());
+        assert_eq!(a.delivered, b.delivered);
+        assert_eq!(plain.switch_visits(), armed.switch_visits());
+    }
+
+    #[test]
+    fn invalid_fault_plan_is_rejected_at_arm() {
+        let mut s = sim(Topology::fullerene());
+        // Node 15 is a core, not a router.
+        let plan = FaultPlan::none().kill_router(15, When::Cycle(1));
+        assert!(s.set_fault_plan(plan).is_err());
+        // The rejected plan leaves the simulator disarmed.
+        assert!(!s.fabric_health().armed);
+    }
+
+    #[test]
+    fn single_router_kill_on_fullerene_reroutes_and_delivers_everything() {
+        let t = Topology::fullerene();
+        let (c, dst) = pair_via_router(&t, 0);
+        let mut s = sim(t);
+        s.set_fault_plan(FaultPlan::none().kill_router(0, When::Cycle(0)))
+            .unwrap();
+        for src in 0..20 {
+            s.inject(src, &Dest::Core((src + 7) % 20), 0);
+        }
+        s.inject(c, &Dest::Core(dst), 1);
+        s.run_until_drained(10_000).unwrap();
+        let h = s.fabric_health();
+        // Every core keeps 2 live routers: nothing drops, detours absorb
+        // the kill — the degree-redundancy the paper's topology buys.
+        assert_eq!(s.stats().delivered, 21);
+        assert_eq!(h.dropped, 0);
+        assert_eq!(h.dead_routers, 1);
+        assert_eq!(h.dead_links, 0);
+        assert!(h.rerouted_hops >= 1, "kill must force a detour");
+        assert_eq!(s.ledger.count(EventClass::FlitDropped), 0);
+    }
+
+    #[test]
+    fn kill_drops_flits_inside_the_dead_router() {
+        let t = Topology::fullerene();
+        let (c, dst) = pair_via_router(&t, 0);
+        let mut s = sim(t);
+        s.set_fault_plan(FaultPlan::none().kill_router(0, When::Cycle(2)))
+            .unwrap();
+        s.inject(c, &Dest::Core(dst), 0);
+        s.step(); // flit now sits in router 0's input FIFO
+        assert_eq!(s.in_flight(), 1);
+        s.step(); // cycle 2: the kill fires and drains it
+        assert_eq!(s.in_flight(), 0);
+        let h = s.fabric_health();
+        assert_eq!(h.dropped, 1);
+        assert_eq!(s.ledger.count(EventClass::FlitDropped), 1);
+        assert_eq!(s.stats().delivered, 0);
+        // Nothing in flight: the drain returns immediately.
+        s.run_until_drained(10).unwrap();
+    }
+
+    #[test]
+    fn kill_mid_burst_conserves_flits_and_is_deterministic() {
+        let run = || {
+            let mut s = sim(Topology::fullerene());
+            s.set_fault_plan(
+                FaultPlan::none()
+                    .kill_router(3, When::Cycle(5))
+                    .kill_router(7, When::Cycle(9)),
+            )
+            .unwrap();
+            for round in 0..10 {
+                for c in 0..20 {
+                    s.inject(c, &Dest::Core((c + 9) % 20), round);
+                }
+            }
+            s.run_until_drained(100_000).unwrap();
+            s
+        };
+        let a = run();
+        let h = a.fabric_health();
+        assert_eq!(a.stats().delivered + h.dropped, 200, "flit conservation");
+        assert_eq!(a.in_flight(), 0);
+        assert_eq!(a.ledger.count(EventClass::FlitDropped), h.dropped);
+        assert_eq!(h.dead_routers, 2);
+        let b = run();
+        assert_eq!(a.fabric_health(), b.fabric_health());
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.delivered, sb.delivered);
+        assert_eq!(sa.avg_latency.to_bits(), sb.avg_latency.to_bits());
+        assert_eq!(sa.avg_hops.to_bits(), sb.avg_hops.to_bits());
+        assert_eq!(a.switch_visits(), b.switch_visits());
+    }
+
+    #[test]
+    fn congestion_stalls_then_recovers() {
+        let t = Topology::fullerene();
+        let out = t.out_port_table();
+        let n0 = t.core_node(0);
+        let r = t.neighbors(n0)[out[n0][10] as usize];
+        let lat0 = {
+            let mut s = sim(t.clone());
+            s.inject(0, &Dest::Core(10), 0);
+            s.run_until_drained(1000).unwrap();
+            s.delivered()[0].latency
+        };
+        let mut s = sim(t);
+        s.set_fault_plan(FaultPlan::none().congest(r, 40, When::Cycle(2)))
+            .unwrap();
+        s.inject(0, &Dest::Core(10), 0);
+        // The drain survives the zero-progress window: the plan knows the
+        // congestion self-expires.
+        s.run_until_drained(10_000).unwrap();
+        let lat = s.delivered()[0].latency;
+        assert!(lat > lat0 + 30, "congested {lat} vs clean {lat0}");
+        let h = s.fabric_health();
+        assert_eq!(h.dropped, 0);
+        assert_eq!(h.dead_routers, 0);
+        assert!(h.armed);
+    }
+
+    #[test]
+    fn throttled_links_slow_traffic_but_deliver() {
+        let lat0 = {
+            let mut s = sim(Topology::fullerene());
+            s.inject(0, &Dest::Core(10), 0);
+            s.run_until_drained(1000).unwrap();
+            s.delivered()[0].latency
+        };
+        let mut s = sim(Topology::fullerene());
+        s.set_fault_plan(FaultPlan::none().throttle(LinkLevel::L1, 4, When::Cycle(0)))
+            .unwrap();
+        s.inject(0, &Dest::Core(10), 0);
+        s.run_until_drained(10_000).unwrap();
+        let lat = s.delivered()[0].latency;
+        assert!(lat > lat0, "throttled {lat} vs clean {lat0}");
+        let h = s.fabric_health();
+        assert_eq!(h.dropped, 0);
+        assert_eq!(h.dead_routers, 0);
+    }
+
+    #[test]
+    fn timestep_keyed_fault_fires_when_the_timestep_arrives() {
+        let mut s = sim(Topology::fullerene());
+        s.set_fault_plan(FaultPlan::none().kill_router(0, When::Timestep(2)))
+            .unwrap();
+        s.set_timestep(1);
+        assert_eq!(s.fabric_health().dead_routers, 0);
+        s.set_timestep(2);
+        assert_eq!(s.fabric_health().dead_routers, 1);
+        s.set_timestep(3); // fires once
+        assert_eq!(s.fabric_health().dead_routers, 1);
+    }
+
+    #[test]
+    fn reset_accounting_heals_and_re_arms_bit_identically() {
+        let t = Topology::fullerene();
+        let (c, dst) = pair_via_router(&t, 0);
+        let mut s = sim(t);
+        s.set_fault_plan(FaultPlan::none().kill_router(0, When::Cycle(2)))
+            .unwrap();
+        let window = |s: &mut NocSim| {
+            s.inject(c, &Dest::Core(dst), 0);
+            for src in 0..20 {
+                s.inject(src, &Dest::Core((src + 7) % 20), 0);
+            }
+            s.run_until_drained(10_000).unwrap();
+            (s.stats(), s.fabric_health())
+        };
+        let (st1, h1) = window(&mut s);
+        assert_eq!(h1.dead_routers, 1);
+        s.reset_accounting();
+        // Healed + rewound: nothing dead, nothing counted, still armed.
+        let h = s.fabric_health();
+        assert!(h.armed);
+        assert_eq!(h.dead_routers, 0);
+        assert_eq!(h.dropped, 0);
+        assert_eq!(h.rerouted_hops, 0);
+        let (st2, h2) = window(&mut s);
+        assert_eq!(h1, h2, "warm window must replay the fault identically");
+        assert_eq!(st1.delivered, st2.delivered);
+        assert_eq!(st1.avg_latency.to_bits(), st2.avg_latency.to_bits());
+        assert_eq!(st1.avg_hops.to_bits(), st2.avg_hops.to_bits());
+        assert_eq!(st1.max_latency, st2.max_latency);
     }
 }

@@ -158,11 +158,22 @@ impl Topology {
         dist
     }
 
-    /// BFS distances from `src` over the subgraph that excludes every
-    /// level-2 router (`usize::MAX` if unreachable without L2 nodes).
-    fn bfs_no_l2(&self, src: NodeId) -> Vec<usize> {
+    /// BFS distances from `src` over the alive subgraph: dead nodes and
+    /// dead links are excluded, and `skip_l2` additionally excludes every
+    /// level-2 router (the intra-domain metric). `usize::MAX` marks
+    /// unreachable nodes. With empty masks this is exactly
+    /// [`Topology::bfs`] (same queue order, hence the same distances and
+    /// the same deterministic tie-breaks downstream).
+    fn bfs_masked(
+        &self,
+        src: NodeId,
+        skip_l2: bool,
+        node_dead: &[bool],
+        dead_links: &[(NodeId, NodeId)],
+    ) -> Vec<usize> {
+        let dead = |n: NodeId| node_dead.get(n).copied().unwrap_or(false);
         let mut dist = vec![usize::MAX; self.len()];
-        if matches!(self.nodes[src], NodeKind::RouterL2(_)) {
+        if dead(src) || (skip_l2 && matches!(self.nodes[src], NodeKind::RouterL2(_))) {
             return dist;
         }
         let mut q = std::collections::VecDeque::new();
@@ -170,13 +181,23 @@ impl Topology {
         q.push_back(src);
         while let Some(u) = q.pop_front() {
             for &v in &self.adj[u] {
-                if dist[v] == usize::MAX && !matches!(self.nodes[v], NodeKind::RouterL2(_)) {
+                if dist[v] == usize::MAX
+                    && !dead(v)
+                    && !(skip_l2 && matches!(self.nodes[v], NodeKind::RouterL2(_)))
+                    && !link_is_dead(dead_links, u, v)
+                {
                     dist[v] = dist[u] + 1;
                     q.push_back(v);
                 }
             }
         }
         dist
+    }
+
+    /// BFS distances from `src` over the subgraph that excludes every
+    /// level-2 router (`usize::MAX` if unreachable without L2 nodes).
+    fn bfs_no_l2(&self, src: NodeId) -> Vec<usize> {
+        self.bfs_masked(src, true, &[], &[])
     }
 
     /// Next-hop routing table: `table[node][core]` = neighbor of `node` on
@@ -195,18 +216,46 @@ impl Topology {
     /// a full-mode step strictly decreases the full distance or enters
     /// intra-mode, which it never leaves.
     pub fn next_hop_table(&self) -> Vec<Vec<NodeId>> {
+        self.next_hop_table_masked(&[], &[])
+    }
+
+    /// [`Topology::next_hop_table`] over the **alive subgraph**: routes
+    /// avoid `node_dead` nodes and `dead_links` (normalized `(min, max)`
+    /// pairs, sorted ascending). Same hierarchical policy and the same
+    /// lowest-id tie-break, so with empty masks the result is identical
+    /// to the pristine table — the fault-injection subsystem's
+    /// "no-fault is bit-identical" contract rests on that. Entries from
+    /// dead nodes, and toward cores severed from the alive component,
+    /// stay `usize::MAX` (the simulator drops such flits).
+    pub fn next_hop_table_masked(
+        &self,
+        node_dead: &[bool],
+        dead_links: &[(NodeId, NodeId)],
+    ) -> Vec<Vec<NodeId>> {
+        debug_assert!(
+            dead_links.windows(2).all(|w| w[0] < w[1]),
+            "dead links must be sorted"
+        );
+        let dead = |n: NodeId| node_dead.get(n).copied().unwrap_or(false);
         let has_l2 = self
             .nodes
             .iter()
             .any(|k| matches!(k, NodeKind::RouterL2(_)));
         let mut table = vec![vec![usize::MAX; self.cores.len()]; self.len()];
         for (ci, &cnode) in self.cores.iter().enumerate() {
-            let d_full = self.bfs(cnode);
-            let d_intra = if has_l2 { Some(self.bfs_no_l2(cnode)) } else { None };
+            let d_full = self.bfs_masked(cnode, false, node_dead, dead_links);
+            let d_intra = if has_l2 {
+                Some(self.bfs_masked(cnode, true, node_dead, dead_links))
+            } else {
+                None
+            };
             let dst_dom = self.domain[cnode];
             for n in 0..self.len() {
                 if n == cnode {
                     table[n][ci] = n;
+                    continue;
+                }
+                if dead(n) {
                     continue;
                 }
                 let dist: &[usize] = match &d_intra {
@@ -223,9 +272,15 @@ impl Topology {
                     continue;
                 }
                 // lowest-id neighbor strictly closer to the destination
+                // (a masked-BFS distance is finite only for alive nodes,
+                // but the direct link must also be alive).
                 let mut best = usize::MAX;
                 for &v in &self.adj[n] {
-                    if dist[v] != usize::MAX && dist[v] + 1 == dist[n] && v < best {
+                    if dist[v] != usize::MAX
+                        && dist[v] + 1 == dist[n]
+                        && !link_is_dead(dead_links, n, v)
+                        && v < best
+                    {
                         best = v;
                     }
                 }
@@ -243,7 +298,18 @@ impl Topology {
     /// is the **local port** (`neighbors(node).len()`); unreachable pairs
     /// hold [`NO_PORT`].
     pub fn out_port_table(&self) -> Vec<Vec<u16>> {
-        let next_hop = self.next_hop_table();
+        self.out_port_table_masked(&[], &[])
+    }
+
+    /// [`Topology::out_port_table`] over the alive subgraph (see
+    /// [`Topology::next_hop_table_masked`]). Unroutable entries — dead
+    /// source node, destination core cut off — hold [`NO_PORT`].
+    pub fn out_port_table_masked(
+        &self,
+        node_dead: &[bool],
+        dead_links: &[(NodeId, NodeId)],
+    ) -> Vec<Vec<u16>> {
+        let next_hop = self.next_hop_table_masked(node_dead, dead_links);
         let mut table = vec![vec![NO_PORT; self.cores.len()]; self.len()];
         for n in 0..self.len() {
             for (ci, &cnode) in self.cores.iter().enumerate() {
@@ -478,6 +544,15 @@ impl Topology {
         }
         t
     }
+}
+
+/// Membership test over a sorted, normalized (`a < b`) dead-link list.
+fn link_is_dead(dead_links: &[(NodeId, NodeId)], a: NodeId, b: NodeId) -> bool {
+    if dead_links.is_empty() {
+        return false;
+    }
+    let key = if a < b { (a, b) } else { (b, a) };
+    dead_links.binary_search(&key).is_ok()
 }
 
 /// Icosahedron combinatorics: returns (20 faces as vertex triples, 30
@@ -759,6 +834,90 @@ mod tests {
         let f = Topology::fullerene_with_l2();
         assert_eq!(m.len(), f.len());
         assert_eq!(m.edge_count(), f.edge_count());
+    }
+
+    #[test]
+    fn masked_tables_with_empty_masks_equal_pristine() {
+        for t in [
+            Topology::fullerene(),
+            Topology::mesh2d(4, 5),
+            Topology::ring(20),
+            Topology::multi_domain(2),
+        ] {
+            assert_eq!(t.next_hop_table(), t.next_hop_table_masked(&[], &[]), "{}", t.name);
+            assert_eq!(t.out_port_table(), t.out_port_table_masked(&[], &[]), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn fullerene_reroutes_around_any_single_dead_router() {
+        // Every core attaches to 3 routers, so killing any one router
+        // leaves every core pair routable — the decentralization claim.
+        let t = Topology::fullerene();
+        for r in t.routers() {
+            let mut dead = vec![false; t.len()];
+            dead[r] = true;
+            let table = t.next_hop_table_masked(&dead, &[]);
+            for (ci, &cnode) in t.cores().iter().enumerate() {
+                for n in 0..t.len() {
+                    if n == r {
+                        continue;
+                    }
+                    let mut cur = n;
+                    let mut hops = 0;
+                    while cur != cnode {
+                        cur = table[cur][ci];
+                        assert_ne!(cur, usize::MAX, "router {r} cut core {ci} off");
+                        assert_ne!(cur, r, "route used the dead router {r}");
+                        hops += 1;
+                        assert!(hops <= t.len(), "routing loop around dead router {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_single_dead_router_strands_its_core() {
+        // Mesh cores hang off exactly one router (degree 1): killing that
+        // router makes the core unreachable — the structural contrast the
+        // resilience sweep measures.
+        let t = Topology::mesh2d(4, 5);
+        let core0 = t.core_node(0);
+        let router = t.neighbors(core0)[0];
+        let mut dead = vec![false; t.len()];
+        dead[router] = true;
+        let table = t.out_port_table_masked(&dead, &[]);
+        let far = t.core_node(19);
+        assert_eq!(table[far][0], NO_PORT, "stranded core still routable");
+    }
+
+    #[test]
+    fn dead_link_is_avoided_by_masked_routes() {
+        let t = Topology::fullerene();
+        let c0 = t.core_node(0);
+        let r = t.neighbors(c0)[0];
+        let cut = if c0 < r { (c0, r) } else { (r, c0) };
+        let nh = t.next_hop_table_masked(&[], &[cut]);
+        // Core 0 still reaches every core, never over the cut link.
+        for ci in 1..20 {
+            let mut cur = c0;
+            let mut hops = 0;
+            loop {
+                let next = nh[cur][ci];
+                assert_ne!(next, usize::MAX, "link cut severed core {ci}");
+                assert!(
+                    !(cur == c0 && next == r),
+                    "route used the dead link {c0}-{r}"
+                );
+                cur = next;
+                if cur == t.core_node(ci) {
+                    break;
+                }
+                hops += 1;
+                assert!(hops <= t.len(), "routing loop");
+            }
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::session::Session;
 use crate::config::RunConfig;
 use crate::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
 use crate::nn::NetworkDesc;
+use crate::noc::{FaultPlan, Topology};
 use crate::runtime::GoldenModel;
 use crate::soc::{Soc, SocConfig};
 use crate::{Error, Result};
@@ -142,6 +143,16 @@ impl SocBuilder {
         self
     }
 
+    /// Deterministic fabric fault schedule, armed on every chip built
+    /// from this builder (resilience experiments; see
+    /// [`crate::noc::fault`]). [`SocBuilder::validate`] checks the plan
+    /// against the configured topology, so a kill naming a core or an
+    /// absent link fails at build time, not mid-session.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.soc.fault_plan = plan;
+        self
+    }
+
     /// Golden-check mode for runners/pools built from this builder.
     pub fn check(mut self, check: GoldenCheck) -> Self {
         self.check = check;
@@ -241,6 +252,17 @@ impl SocBuilder {
                 "queue_depth {} outside 1..={MAX_QUEUE_DEPTH}",
                 self.queue_depth
             )));
+        }
+        if !s.fault_plan.is_empty() {
+            // Resolve the configured topology so plan/topology mismatches
+            // (a kill naming a core, a cut naming an absent link) fail
+            // here instead of mid-session.
+            let topo = if s.domains == 1 {
+                Topology::fullerene()
+            } else {
+                Topology::multi_domain(s.domains)
+            };
+            s.fault_plan.validate(&topo)?;
         }
         Ok(())
     }
@@ -342,5 +364,28 @@ mod tests {
         assert!(SocBuilder::new().queue_depth(1).validate().is_ok());
         assert!(SocBuilder::new().keep_warm(false).validate().is_ok());
         assert!(SocBuilder::new().validate().is_ok());
+    }
+
+    #[test]
+    fn fault_plan_reaches_the_config_and_is_validated() {
+        use crate::noc::When;
+        let plan = FaultPlan::none().kill_router(3, When::Cycle(100));
+        let cfg = SocBuilder::new()
+            .fault_plan(plan.clone())
+            .build_config()
+            .unwrap();
+        assert_eq!(cfg.fault_plan, plan);
+        // Node 15 is a core of the single fullerene domain — rejected.
+        let bad = FaultPlan::none().kill_router(15, When::Cycle(1));
+        assert!(SocBuilder::new().fault_plan(bad).validate().is_err());
+        // Router ids shift across topologies: validate against the real one.
+        let t = Topology::multi_domain(2);
+        let r = t.routers()[0];
+        assert!(SocBuilder::new()
+            .domains(2)
+            .n_cores(40)
+            .fault_plan(FaultPlan::none().kill_router(r, When::Cycle(1)))
+            .validate()
+            .is_ok());
     }
 }

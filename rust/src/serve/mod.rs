@@ -39,7 +39,7 @@ pub mod workload;
 pub use builder::SocBuilder;
 pub use pool::{ServeOutcome, SessionFailure, SessionOutcome, SessionSpec, SocPool};
 pub use runtime::{Outcomes, ServeRuntime, SessionResult, SessionTicket};
-pub use session::{Session, SessionReport, SessionStats};
+pub use session::{DegradationStats, Session, SessionReport, SessionStats};
 pub use workload::{
     workload_from_spec, EventReplay, SyntheticStream, TrafficWorkload, Workload,
 };

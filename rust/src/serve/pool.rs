@@ -14,7 +14,7 @@
 //! submission order, so the two are bit-identical).
 
 use super::runtime::ServeRuntime;
-use super::session::{Session, SessionStats};
+use super::session::{DegradationStats, Session, SessionStats};
 use super::workload::Workload;
 use crate::coordinator::GoldenCheck;
 use crate::energy::{AreaModel, ChipReport};
@@ -52,6 +52,10 @@ pub struct SessionOutcome {
     /// NoC fabric statistics for exactly this session's window (delivered
     /// flits, latency/hop aggregates, stall totals).
     pub noc: crate::noc::SimStats,
+    /// Fabric-degradation statistics for the window: dropped/rerouted
+    /// flits and dead fabric under the chip's fault plan (all zero with
+    /// `armed == false` on a healthy chip).
+    pub degradation: DegradationStats,
     /// Samples that disagreed with the integer reference (0 unless
     /// reference checking is enabled).
     pub mismatches: u64,
@@ -147,6 +151,7 @@ pub(crate) fn run_session_on(
         }
     }
     let noc = session.noc_stats();
+    let degradation = session.degradation();
     let (closed, soc) = session.close_reuse();
     Ok((
         SessionOutcome {
@@ -154,6 +159,7 @@ pub(crate) fn run_session_on(
             report: closed.report,
             stats: closed.stats,
             noc,
+            degradation,
             mismatches,
             checked,
             queue_wait_s,

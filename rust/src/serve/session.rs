@@ -14,6 +14,41 @@ use crate::energy::ChipReport;
 use crate::soc::{SampleResult, Soc};
 use crate::Result;
 
+/// Fabric-degradation view of one session's accounting window: the
+/// chip's [`crate::noc::FabricHealth`] counters joined with the window's
+/// delivery totals, so serving callers can judge *how gracefully* a
+/// session degraded without reaching into the NoC. All-zero (with
+/// `armed == false`) for sessions on a healthy fabric.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DegradationStats {
+    /// A fault plan with at least one event was armed on the chip.
+    pub armed: bool,
+    /// Spike flits delivered this window.
+    pub delivered: u64,
+    /// Spike flits discarded (dead-router drain or severed route).
+    pub dropped: u64,
+    /// Flit-hops taken over links the pristine route would not have used
+    /// (the fabric redundancy the session actually consumed).
+    pub rerouted_hops: u64,
+    /// Routers killed during the window.
+    pub dead_routers: u64,
+    /// Links severed during the window.
+    pub dead_links: u64,
+}
+
+impl DegradationStats {
+    /// Fraction of routed flits that survived to delivery (1.0 for an
+    /// idle or healthy window).
+    pub fn delivered_frac(&self) -> f64 {
+        let total = self.delivered + self.dropped;
+        if total == 0 {
+            1.0
+        } else {
+            self.delivered as f64 / total as f64
+        }
+    }
+}
+
 /// Per-session serving statistics (simulated time).
 #[derive(Debug, Clone)]
 pub struct SessionStats {
@@ -88,6 +123,20 @@ impl Session {
     /// trace, so long-lived sessions hold only this ledger.
     pub fn noc_stats(&self) -> crate::noc::SimStats {
         self.soc.noc_stats()
+    }
+
+    /// Fabric-degradation statistics for this session's window (all zero
+    /// with `armed == false` on a chip without a fault plan).
+    pub fn degradation(&self) -> DegradationStats {
+        let h = self.soc.fabric_health();
+        DegradationStats {
+            armed: h.armed,
+            delivered: self.soc.noc_stats().delivered,
+            dropped: h.dropped,
+            rerouted_hops: h.rerouted_hops,
+            dead_routers: h.dead_routers,
+            dead_links: h.dead_links,
+        }
     }
 
     /// Run one labelled sample through the chip and ledger its latency.

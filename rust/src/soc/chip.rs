@@ -35,7 +35,7 @@ use crate::core::NeuroCore;
 use crate::datasets::{Dataset, Sample};
 use crate::energy::{AreaModel, ChipReport, EnergyLedger, EnergyParams};
 use crate::nn::{Mapping, NetworkDesc};
-use crate::noc::{Dest, NocSim, NodeKind, Topology};
+use crate::noc::{Dest, FabricHealth, FaultPlan, NocSim, NodeKind, Topology};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::enu::EnuCommand;
 use crate::riscv::firmware;
@@ -68,6 +68,11 @@ pub struct SocConfig {
     /// Run the RISC-V firmware protocol (false = drive the neuromorphic
     /// processor directly, for benches isolating the cores).
     pub drive_cpu: bool,
+    /// Deterministic fabric fault schedule, armed on the NoC at build
+    /// time (resilience experiments; see [`crate::noc::fault`]). The
+    /// default empty plan is provably free: the chip is bit-identical to
+    /// one built before fault injection existed.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for SocConfig {
@@ -82,6 +87,7 @@ impl Default for SocConfig {
             supply_v: crate::energy::constants::V_NOM,
             use_noc: true,
             drive_cpu: true,
+            fault_plan: FaultPlan::none(),
         }
     }
 }
@@ -278,6 +284,9 @@ impl Soc {
         let mut noc = NocSim::new(topo, config.fifo_depth, energy.clone());
         noc.set_trace_mode(crate::noc::TraceMode::Off);
         noc.set_collect_ejected(true);
+        // Arm the (possibly empty) fault schedule; invalid plans — kills
+        // naming cores or absent links — are rejected at build time.
+        noc.set_fault_plan(config.fault_plan.clone())?;
         let clocks = ClockManager::new(config.f_core_hz, config.f_cpu_hz, energy.p_clock_tree)?;
         let layer_dests = (0..net.layers.len())
             .map(|li| mapping.dest_cores_after(li).map(|d| Dest::Cores(d.to_vec())))
@@ -342,6 +351,12 @@ impl Soc {
     /// poll this per sample without rescanning the fabric.
     pub fn noc_stats(&self) -> crate::noc::SimStats {
         self.noc.stats()
+    }
+
+    /// Fabric degradation counters for the current accounting window
+    /// (all zero with `armed == false` when no fault plan is configured).
+    pub fn fabric_health(&self) -> FabricHealth {
+        self.noc.fabric_health()
     }
 
     /// Boot the control CPU: run the firmware protocol and consume the
@@ -1001,6 +1016,58 @@ mod tests {
         assert_eq!(wrep.power_mw.to_bits(), crep.power_mw.to_bits());
         assert_eq!(wrep.breakdown.by_class, crep.breakdown.by_class);
         assert_eq!(wrep.breakdown.by_static, crep.breakdown.by_static);
+    }
+
+    #[test]
+    fn invalid_fault_plan_rejected_at_build() {
+        use crate::noc::When;
+        let net = small_net(32, 24, 4);
+        let cfg = SocConfig {
+            max_neurons_per_core: 16,
+            // Node 15 is a core of the fullerene domain, not a router.
+            fault_plan: FaultPlan::none().kill_router(15, When::Cycle(1)),
+            ..SocConfig::default()
+        };
+        assert!(Soc::new(net, cfg).is_err());
+    }
+
+    #[test]
+    fn faulted_session_heals_and_replays_identically_after_reset() {
+        use crate::noc::When;
+        let net = small_net(32, 24, 4);
+        let cfg = SocConfig {
+            max_neurons_per_core: 16,
+            fault_plan: FaultPlan::none().kill_router(0, When::Timestep(1)),
+            ..SocConfig::default()
+        };
+        let s = busy_sample(32, 5);
+        let mut warm = Soc::new(net.clone(), cfg.clone()).unwrap();
+        let first = warm.run_sample(&s, true).unwrap();
+        assert!(warm.fabric_health().armed);
+        assert_eq!(
+            warm.fabric_health().dead_routers,
+            1,
+            "timestep-keyed kill must fire mid-sample"
+        );
+        warm.finish_report("first");
+        warm.reset_for_session();
+        assert_eq!(
+            warm.fabric_health().dead_routers,
+            0,
+            "session reset must heal the fabric"
+        );
+        let wr = warm.run_sample(&s, true).unwrap();
+        let wrep = warm.finish_report("w");
+        // Cold oracle: a brand-new chip with the same fault plan.
+        let mut cold = Soc::new(net, cfg).unwrap();
+        let cr = cold.run_sample(&s, true).unwrap();
+        let crep = cold.finish_report("w");
+        assert_eq!(wr.counts, cr.counts, "healed chip diverged functionally");
+        assert_eq!(wr.cycles, cr.cycles);
+        assert_eq!(first.counts, cr.counts, "same plan + session → same outcome");
+        assert_eq!(wrep.pj_per_sop.to_bits(), crep.pj_per_sop.to_bits());
+        assert_eq!(wrep.breakdown.by_class, crep.breakdown.by_class);
+        assert_eq!(warm.fabric_health(), cold.fabric_health());
     }
 
     #[test]

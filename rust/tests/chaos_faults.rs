@@ -1,0 +1,225 @@
+//! Chaos regression suite for the fault-injection subsystem: the
+//! degraded-fabric **failure modes** users actually hit, pinned at the
+//! integration boundary (public `fullerene_soc::noc` API only).
+//!
+//! The headline regression: a severed link must strand committed flits
+//! at a **fast-failing fixed point** classified `FabricDegraded` — not
+//! spin the drain loop until its cycle budget dies. The rest pins the
+//! fullerene-vs-mesh single-kill asymmetry (the paper's degree-3 core
+//! attach buys reroutes where a mesh strands cores outright), kill-storm
+//! determinism through the string spec grammar, and the parse surface.
+
+use fullerene_soc::energy::{EnergyParams, EventClass};
+use fullerene_soc::noc::topology::NO_PORT;
+use fullerene_soc::noc::{Dest, FaultPlan, NocSim, NodeId, Topology, When, FAULT_SPEC_USAGE};
+
+fn sim(t: Topology) -> NocSim {
+    NocSim::new(t, 4, EnergyParams::nominal())
+}
+
+/// A `(src core, dst core)` pair whose pristine route leaves the source
+/// over the link to `router` — traffic guaranteed to feel a fault there.
+fn pair_via_router(t: &Topology, router: NodeId) -> (usize, usize) {
+    let out = t.out_port_table();
+    for c in 0..t.cores().len() {
+        let n = t.core_node(c);
+        for dst in 0..t.cores().len() {
+            if dst == c {
+                continue;
+            }
+            let p = out[n][dst];
+            if p != NO_PORT && t.neighbors(n)[p as usize] == router {
+                return (c, dst);
+            }
+        }
+    }
+    panic!("no pristine route uses router {router}");
+}
+
+/// The killed-link fixed point fails **fast** with a `FabricDegraded`
+/// stall classification and a stranded-flit count — it must never spin
+/// until the caller's cycle budget is exhausted.
+///
+/// Stranding a flit on a link cut takes backpressure: at a cycle
+/// boundary an idle fabric holds nothing in output FIFOs, and routing
+/// recomputes around the dead link before the next arbitration. So the
+/// recipe congests the first-hop router until flits back up into the
+/// source's output FIFO, then cuts the source→router link underneath
+/// them. Flits already committed to that FIFO have nowhere to go.
+#[test]
+fn killed_link_reports_fabric_degraded_instead_of_spinning() {
+    let t = Topology::fullerene();
+    let (c, dst) = pair_via_router(&t, 0);
+    let src_node = t.core_node(c);
+    let run = || {
+        let mut s = sim(t.clone());
+        s.set_fault_plan(
+            FaultPlan::none()
+                .congest(0, 300, When::Cycle(1))
+                .kill_link(src_node, 0, When::Cycle(20)),
+        )
+        .unwrap();
+        // Enough traffic through the congested router to fill its input
+        // FIFO (depth 4) and back the overflow up into the source core's
+        // output FIFO before the cycle-20 cut.
+        let injected = 12u64;
+        for _ in 0..injected {
+            s.inject(c, &Dest::Core(dst), 0);
+        }
+        let budget = 1_000_000;
+        let err = s.run_until_drained(budget).unwrap_err().to_string();
+        assert!(
+            err.contains("FabricDegraded"),
+            "stall misclassified: {err}"
+        );
+        assert!(err.contains("flits stranded"), "no stranded count: {err}");
+        // Fast fail: the congestion window self-expires around cycle 300
+        // and the fixed point is classified within the plan's
+        // zero-progress tolerance — nowhere near the million-cycle
+        // budget a spinning drain would burn.
+        assert!(
+            s.cycle() < 5_000,
+            "drain spun to cycle {} against a {budget} budget",
+            s.cycle()
+        );
+        let h = s.fabric_health();
+        let st = s.stats();
+        assert_eq!(h.dead_links, 1);
+        assert!(s.in_flight() > 0, "nothing stranded — the cut missed");
+        assert_eq!(
+            st.delivered + h.dropped + s.in_flight(),
+            injected,
+            "conservation must hold at the degraded fixed point"
+        );
+        assert_eq!(s.snapshot_ledger().count(EventClass::FlitDropped), h.dropped);
+        (st, h, s.in_flight(), s.cycle())
+    };
+    let (sa, ha, ia, ca) = run();
+    let (sb, hb, ib, cb) = run();
+    // The degraded fixed point itself is deterministic.
+    assert_eq!(ha, hb);
+    assert_eq!(ia, ib);
+    assert_eq!(ca, cb);
+    assert_eq!(sa.delivered, sb.delivered);
+    assert_eq!(sa.avg_latency.to_bits(), sb.avg_latency.to_bits());
+}
+
+/// The resilience asymmetry the paper's topology buys, at flit level:
+/// a mesh core hangs off exactly one router, so killing it strands every
+/// flit addressed to (or sourced at) that core — while the fullerene's
+/// 3-router core attach reroutes around any single kill and delivers
+/// everything. Either way the fabric **drains**: undeliverable flits go
+/// to the dropped ledger, never into a busy-loop.
+#[test]
+fn single_kill_strands_a_mesh_core_but_not_a_fullerene_core() {
+    // Mesh: kill core 0's only router, aim every core at core 0.
+    let t = Topology::mesh2d(4, 5);
+    let victim_router = t.neighbors(t.core_node(0))[0];
+    let n_cores = t.cores().len();
+    let mut m = sim(t);
+    m.set_fault_plan(FaultPlan::none().kill_router(victim_router, When::Cycle(1)))
+        .unwrap();
+    for c in 1..n_cores {
+        m.inject(c, &Dest::Core(0), 0);
+    }
+    m.inject(0, &Dest::Core(7), 0);
+    m.run_until_drained(100_000)
+        .expect("a kill-only plan must always drain (dropped, not stuck)");
+    let h = m.fabric_health();
+    assert_eq!(m.in_flight(), 0);
+    assert_eq!(h.dead_routers, 1);
+    assert_eq!(
+        h.dropped,
+        n_cores as u64,
+        "every flit to/from the orphaned core must drop"
+    );
+    assert_eq!(m.stats().delivered, 0);
+
+    // Fullerene: same shape of attack, zero loss.
+    let t = Topology::fullerene();
+    let (c, dst) = pair_via_router(&t, 0);
+    let mut f = sim(t);
+    f.set_fault_plan(FaultPlan::none().kill_router(0, When::Cycle(1)))
+        .unwrap();
+    for src in 0..20 {
+        f.inject(src, &Dest::Core((src + 7) % 20), 0);
+    }
+    f.inject(c, &Dest::Core(dst), 1);
+    f.run_until_drained(100_000).unwrap();
+    let h = f.fabric_health();
+    assert_eq!(h.dead_routers, 1);
+    assert_eq!(h.dropped, 0, "fullerene must reroute a single kill");
+    assert_eq!(f.stats().delivered, 21);
+    assert!(h.rerouted_hops >= 1, "the kill must force a detour");
+}
+
+/// A kill storm armed through the **string grammar** (the CLI/config
+/// path) is bit-identically deterministic run to run, including the
+/// seeded `kill-frac` expansion, and conserves every flit.
+#[test]
+fn parsed_kill_storm_is_deterministic_and_conserves_flits() {
+    let spec = "throttle-l1:2@1;congest:7+25@3;kill-router:3@5;kill-frac:0.2#77@9";
+    let run = || {
+        let mut s = sim(Topology::fullerene());
+        s.set_fault_plan(FaultPlan::parse(spec).unwrap()).unwrap();
+        let mut injected = 0u64;
+        for round in 0..10u32 {
+            for c in 0..20 {
+                s.inject(c, &Dest::Core((c + 9) % 20), round);
+                injected += 1;
+            }
+        }
+        s.run_until_drained(1_000_000).unwrap();
+        (s.stats(), s.fabric_health(), s.switch_visits(), injected)
+    };
+    let (sa, ha, va, injected) = run();
+    // fullerene: 12 routers, kill-frac 0.2 → round(2.4) = 2 seeded kills,
+    // plus the explicit kill of router 3 (the seeded picks may overlap it).
+    assert!(ha.armed);
+    assert!((2..=3).contains(&ha.dead_routers), "dead {}", ha.dead_routers);
+    assert_eq!(sa.delivered + ha.dropped, injected, "flit conservation");
+    let (sb, hb, vb, _) = run();
+    assert_eq!(ha, hb, "fabric health must replay bit-identically");
+    assert_eq!(va, vb, "worklist activity must replay bit-identically");
+    assert_eq!(sa.delivered, sb.delivered);
+    assert_eq!(sa.avg_latency.to_bits(), sb.avg_latency.to_bits());
+    assert_eq!(sa.avg_hops.to_bits(), sb.avg_hops.to_bits());
+    assert_eq!(sa.max_latency, sb.max_latency);
+}
+
+/// The spec grammar's public contract: usage text exists, round-trip
+/// parses hold, and malformed specs are rejected with the usage hint —
+/// the same strings `--fault-plan` and the JSON `fault_plan` key accept.
+#[test]
+fn fault_spec_grammar_round_trips_and_rejects_garbage() {
+    assert!(FAULT_SPEC_USAGE.contains("kill-router"));
+    assert!(FAULT_SPEC_USAGE.contains("kill-frac"));
+
+    let plan =
+        FaultPlan::parse("kill-router:0@t2; kill-link:1-2@30; throttle-l2:3@7; congest:4+50@9")
+            .unwrap();
+    assert!(!plan.is_empty());
+    assert_eq!(plan.events.len(), 4);
+
+    // Whitespace/empty specs mean "no faults".
+    assert!(FaultPlan::parse("").unwrap().is_empty());
+    assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+
+    for bad in [
+        "bogus",
+        "kill-router:zzz@1",
+        "kill-router:1",          // missing @when
+        "kill-link:5@1",          // missing -b endpoint
+        "throttle-l1:0@1",        // factor < 1
+        "congest:1+0@1",          // zero-length window
+        "kill-frac:1.5#9@1",      // frac out of [0,1]
+        "kill-router:1@t",        // empty timestep
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
+    }
+
+    // Structurally valid specs can still name a non-router: that is the
+    // arming-time validation's job (node 15 is a fullerene core).
+    let plan = FaultPlan::parse("kill-router:15@1").unwrap();
+    assert!(sim(Topology::fullerene()).set_fault_plan(plan).is_err());
+}

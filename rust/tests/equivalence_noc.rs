@@ -9,7 +9,7 @@
 
 use fullerene_soc::energy::{EnergyParams, EventClass};
 use fullerene_soc::noc::traffic::{Pattern, TrafficGen};
-use fullerene_soc::noc::{Dest, Fabric, NocSim, ReferenceNocSim, Topology};
+use fullerene_soc::noc::{Dest, Fabric, FaultPlan, NocSim, ReferenceNocSim, Topology};
 use fullerene_soc::util::prng::Rng;
 
 /// Every event class the NoC charges.
@@ -23,10 +23,12 @@ const NOC_CLASSES: [EventClass; 6] = [
 ];
 
 fn new_pair(topo: &Topology) -> (NocSim, ReferenceNocSim) {
-    (
-        NocSim::new(topo.clone(), 4, EnergyParams::nominal()),
-        ReferenceNocSim::new(topo.clone(), 4, EnergyParams::nominal()),
-    )
+    let mut opt = NocSim::new(topo.clone(), 4, EnergyParams::nominal());
+    // The empty fault plan is the no-fault contract: arming it here makes
+    // every regime in this suite prove that an armed-but-empty plan is
+    // bit-identical to the (plan-free) reference simulator.
+    opt.set_fault_plan(FaultPlan::none()).unwrap();
+    (opt, ReferenceNocSim::new(topo.clone(), 4, EnergyParams::nominal()))
 }
 
 /// Assert both simulators are in bit-identical observable state.
@@ -255,6 +257,61 @@ fn equivalent_under_timestep_desync_stalls() {
     opt.run_until_drained(10_000).unwrap();
     refr.run_until_drained(10_000).unwrap();
     assert_equiv(&opt, &refr, "resynced");
+}
+
+#[test]
+fn empty_fault_plans_are_bit_identical_to_an_unarmed_sim() {
+    // Both spellings of "no faults" — `FaultPlan::none()` and a plan with
+    // an empty schedule parsed from the CLI grammar — must leave the sim
+    // byte-for-byte on the unarmed hot path, **including** the
+    // event-driven scheduler's switch-visit count (the one observable a
+    // pessimized-but-correct fault hook would inflate).
+    for topo in [
+        Topology::fullerene(),
+        Topology::mesh2d(4, 5),
+        Topology::ring(20),
+        Topology::multi_domain(2),
+        Topology::multi_domain(4),
+    ] {
+        let n = topo.cores().len();
+        let mut plain = NocSim::new(topo.clone(), 4, EnergyParams::nominal());
+        let mut armed_none = NocSim::new(topo.clone(), 4, EnergyParams::nominal());
+        armed_none.set_fault_plan(FaultPlan::none()).unwrap();
+        let mut armed_parsed = NocSim::new(topo.clone(), 4, EnergyParams::nominal());
+        armed_parsed
+            .set_fault_plan(FaultPlan::parse("  ;  ; ").unwrap())
+            .unwrap();
+
+        for sim in [&mut plain, &mut armed_none, &mut armed_parsed] {
+            for round in 0..5u32 {
+                for c in 0..n {
+                    sim.inject(c, &Dest::Core((c + 7) % n), round);
+                }
+            }
+            sim.run_until_drained(1_000_000).unwrap();
+        }
+        for sim in [&armed_none, &armed_parsed] {
+            let ctx = format!("empty plan on {}", topo.name);
+            let (a, b) = (plain.stats(), sim.stats());
+            assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+            assert_eq!(a.delivered, b.delivered, "{ctx}: delivered");
+            assert_eq!(a.avg_latency.to_bits(), b.avg_latency.to_bits(), "{ctx}: latency");
+            assert_eq!(a.stalls_backpressure, b.stalls_backpressure, "{ctx}: bp");
+            assert_eq!(
+                plain.switch_visits(),
+                sim.switch_visits(),
+                "{ctx}: switch visits diverged — the empty plan cost scheduler work"
+            );
+            assert_eq!(
+                plain.dynamic_pj().to_bits(),
+                sim.dynamic_pj().to_bits(),
+                "{ctx}: energy"
+            );
+            let h = sim.fabric_health();
+            assert!(!h.armed, "{ctx}: empty plan must stay disarmed");
+            assert_eq!(h.dropped, 0, "{ctx}");
+        }
+    }
 }
 
 #[test]

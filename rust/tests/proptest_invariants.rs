@@ -137,6 +137,116 @@ fn prop_flit_conservation_on_every_topology() {
 }
 
 #[test]
+fn prop_flit_conservation_survives_fault_plans() {
+    // The degraded-fabric conservation law: with an armed fault plan,
+    //   injected == delivered + dropped + in_flight
+    // at EVERY cycle — kills drop eagerly, severed links strand (still
+    // in flight), and nothing is ever double-counted. The `FlitDropped`
+    // ledger class must agree exactly with the health counter.
+    use fullerene_soc::energy::EventClass;
+    use fullerene_soc::noc::{FaultPlan, LinkLevel, When};
+    check("noc-fault-conservation", 12, 0xFA17, |r| {
+        for topo in [
+            Topology::fullerene(),
+            Topology::mesh2d(4, 5),
+            Topology::multi_domain(2),
+        ] {
+            let name = topo.name.clone();
+            let n = topo.cores().len();
+            let routers = topo.routers();
+            // Random schedule: router kills, fractional kills, congestion
+            // windows, link throttles, and sometimes a severed
+            // router-router link (the one fault class that strands).
+            let mut plan = FaultPlan::none();
+            for _ in 0..1 + r.below_usize(3) {
+                let router = routers[r.below_usize(routers.len())];
+                plan = match r.below(4) {
+                    0 => plan.kill_router(router, When::Cycle(r.below(60))),
+                    1 => plan.congest(router, 1 + r.below(15), When::Cycle(r.below(40))),
+                    2 => plan.throttle(
+                        if r.bool(0.5) { LinkLevel::L1 } else { LinkLevel::L2 },
+                        1 + r.below(4),
+                        When::Cycle(r.below(30)),
+                    ),
+                    _ => plan.kill_frac(
+                        r.below(30) as f64 / 100.0,
+                        r.next_u32() as u64,
+                        When::Cycle(r.below(50)),
+                    ),
+                };
+            }
+            if r.bool(0.4) {
+                let a = routers[r.below_usize(routers.len())];
+                let nbs: Vec<usize> = topo
+                    .neighbors(a)
+                    .iter()
+                    .copied()
+                    .filter(|&b| topo.kind(b).is_router())
+                    .collect();
+                if !nbs.is_empty() {
+                    let b = nbs[r.below_usize(nbs.len())];
+                    plan = plan.kill_link(a, b, When::Cycle(r.below(40)));
+                }
+            }
+
+            let mut sim = NocSim::new(topo, 4, EnergyParams::nominal());
+            sim.set_fault_plan(plan).unwrap();
+            let mut injected = 0u64;
+            let conserved = |sim: &NocSim, injected: u64, at: &str| {
+                let dropped = sim.fabric_health().dropped;
+                assert_eq!(
+                    injected,
+                    sim.delivered().len() as u64 + dropped + sim.in_flight(),
+                    "{name}: conservation violated {at} \
+                     (delivered {} dropped {dropped} in-flight {})",
+                    sim.delivered().len(),
+                    sim.in_flight()
+                );
+                assert_eq!(
+                    sim.snapshot_ledger().count(EventClass::FlitDropped),
+                    dropped,
+                    "{name}: FlitDropped ledger diverged from the health counter {at}"
+                );
+            };
+            for _ in 0..2 + r.below_usize(3) {
+                for _ in 0..1 + r.below_usize(25) {
+                    let src = r.below_usize(n);
+                    let mut dst = r.below_usize(n - 1);
+                    if dst >= src {
+                        dst += 1;
+                    }
+                    let ids = sim.inject(src, &Dest::Core(dst), src as u32);
+                    injected += ids.end - ids.start;
+                }
+                for _ in 0..r.below_usize(40) {
+                    sim.step();
+                    conserved(&sim, injected, "mid-flight");
+                }
+            }
+            // Kill-only degradation drains; severed links may legitimately
+            // strand flits, surfacing the FabricDegraded fixed point. The
+            // law holds either way.
+            match sim.run_until_drained(200_000) {
+                Ok(()) => assert_eq!(sim.in_flight(), 0, "{name}: drained but in flight"),
+                Err(e) => {
+                    assert!(sim.in_flight() > 0, "{name}: drain failed with nothing in flight");
+                    assert!(
+                        e.to_string().contains("not drained"),
+                        "{name}: unexpected drain error {e}"
+                    );
+                }
+            }
+            conserved(&sim, injected, "after the drain");
+            // No flit is ever double-counted: delivered ids are unique.
+            let mut seen = std::collections::BTreeSet::new();
+            for d in sim.delivered() {
+                assert!(seen.insert(d.flit.id), "{name}: flit {} duplicated", d.flit.id);
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_zspe_never_creates_or_drops_spikes() {
     check("pack-unpack-exact", 100, 0x5B1, |r| {
         let n = 1 + r.below_usize(200);

@@ -423,6 +423,128 @@ fn skewed_mix_completes_short_sessions_before_the_long_one() {
     rt.finish().unwrap();
 }
 
+/// Chaos test: a router kill scheduled by NoC cycle count fires only in
+/// sessions that accumulate enough fabric work to reach it. The long
+/// session degrades (gracefully — fullerene cores attach to 3 routers,
+/// so a single kill reroutes); every short session finishes before the
+/// kill cycle and must be **bit-identical to a fault-free run** — the
+/// armed-but-unfired plan is free. And the whole degraded serve is
+/// deterministic: the warm multi-worker runtime reproduces the
+/// fresh-chip sequential path bit for bit, fault plan and all (which
+/// also proves `Soc::reset_for_session` heals and re-arms the plan —
+/// the kill fires at the same session-relative cycle on a reused chip).
+#[test]
+fn chaos_router_kills_degrade_sessions_in_isolation_and_deterministically() {
+    use fullerene_soc::noc::{FaultPlan, Topology, When};
+
+    let net = small_net(40, 24, 4, 5);
+    let short_samples = 2usize;
+    let long_samples = 10usize;
+    let wl = |samples: usize| TrafficWorkload::new(40, 4, 5, 0.2, samples, 77);
+
+    // Fault-free probes measure the NoC cycles each session length
+    // consumes, so the kill lands past every short session's whole
+    // window but inside the long one's.
+    let probe = |samples: usize| -> u64 {
+        let mut w = wl(samples);
+        let mut s = SocBuilder::new().open_session(&net, "probe").unwrap();
+        while let Some(sample) = w.next_sample() {
+            s.push(&sample).unwrap();
+        }
+        s.noc_stats().cycles
+    };
+    let short_cycles = probe(short_samples);
+    let long_cycles = probe(long_samples);
+    let kill_at = short_cycles + 1;
+    assert!(
+        long_cycles > kill_at,
+        "probe: long session never reaches the kill cycle ({long_cycles} <= {kill_at})"
+    );
+
+    let router = Topology::fullerene().routers()[0];
+    let plan = FaultPlan::none().kill_router(router, When::Cycle(kill_at));
+
+    let specs = || -> Vec<SessionSpec> {
+        let mut v = vec![SessionSpec::new("long", Box::new(wl(long_samples)))];
+        for i in 0..3 {
+            v.push(SessionSpec::new(
+                &format!("short{i}"),
+                Box::new(wl(short_samples)),
+            ));
+        }
+        v
+    };
+    let serve = |fault: Option<&FaultPlan>| {
+        let mut b = SocBuilder::new()
+            .check(GoldenCheck::None)
+            .workers(2)
+            .queue_depth(8)
+            .keep_warm(true);
+        if let Some(p) = fault {
+            b = b.fault_plan(p.clone());
+        }
+        let mut rt = b.build_serve_runtime(&net).unwrap();
+        for spec in specs() {
+            rt.submit(spec).unwrap();
+        }
+        rt.finish().unwrap()
+    };
+
+    let faulted = serve(Some(&plan));
+    let clean = serve(None);
+    assert!(faulted.failures.is_empty(), "degradation must not fail sessions");
+    assert_eq!(faulted.sessions.len(), 4);
+
+    // The long session reached the kill and degraded — without failing.
+    let long = &faulted.sessions[0];
+    assert!(long.degradation.armed);
+    assert_eq!(
+        long.degradation.dead_routers, 1,
+        "the kill never fired inside the long session"
+    );
+    assert!(long.degradation.delivered > 0);
+    assert_eq!(long.stats.samples, long_samples as u64);
+
+    // Every short session is isolated from the long one's fault: the
+    // plan is armed on its chip too, but never fires inside its window,
+    // and its entire outcome is bit-identical to the fault-free run.
+    for i in 1..4 {
+        let (f, c) = (&faulted.sessions[i], &clean.sessions[i]);
+        let ctx = format!("short session {}", f.name);
+        assert!(f.degradation.armed, "{ctx}");
+        assert_eq!(f.degradation.dead_routers, 0, "{ctx}: kill leaked into a short window");
+        assert_eq!(f.degradation.dropped, 0, "{ctx}");
+        assert_reports_bit_identical(&f.report, &c.report, &ctx);
+        assert_eq!(f.stats.cycles, c.stats.cycles, "{ctx}");
+        assert_eq!(f.noc.cycles, c.noc.cycles, "{ctx}: NoC cycles");
+        assert_eq!(f.noc.delivered, c.noc.delivered, "{ctx}: NoC delivered");
+        assert_eq!(
+            f.noc.avg_latency.to_bits(),
+            c.noc.avg_latency.to_bits(),
+            "{ctx}: NoC latency"
+        );
+    }
+
+    // Degraded serving is deterministic end to end: warm multi-worker
+    // runtime ≡ fresh-chip sequential, fault plan armed on both.
+    let seq = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(2)
+        .fault_plan(plan)
+        .build_pool(&net)
+        .unwrap()
+        .serve_sequential(specs())
+        .unwrap();
+    for (a, b) in faulted.sessions.iter().zip(&seq.sessions) {
+        let ctx = format!("faulted warm-vs-sequential '{}'", a.name);
+        assert_eq!(a.name, b.name, "{ctx}");
+        assert_reports_bit_identical(&a.report, &b.report, &ctx);
+        assert_eq!(a.degradation, b.degradation, "{ctx}: degradation stats");
+        assert_eq!(a.noc.delivered, b.noc.delivered, "{ctx}");
+    }
+    assert_reports_bit_identical(&faulted.merged, &seq.merged, "faulted merge");
+}
+
 /// A workload that panics mid-stream (after `gate` samples).
 struct PanickingWorkload {
     inner: TrafficWorkload,
