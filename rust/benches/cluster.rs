@@ -1,0 +1,116 @@
+//! Cluster scale-out smoke: for each swept chip count (1/2/4), find the
+//! largest network the ring can serve (probed through the real
+//! `ClusterMapper::plan` feasibility rule), build the cluster, and time
+//! warm-reused sessions over it — sessions/s, inter-chip L3 flits/s,
+//! cluster-wide flit conservation, and the headline
+//! largest-servable-network scaling factor vs one chip (the measured
+//! form of the paper's "extended off-chip high-level router nodes"
+//! claim at serving granularity).
+//!
+//! Emits `BENCH_cluster.json` (schema `bench-cluster-v1`) in the
+//! working directory and gates against a checked-in
+//! `BENCH_cluster.baseline.json` (working directory, then the
+//! repository root), failing the process on a >30 % regression or a
+//! structural-floor violation (scaling < 4×, a multi-chip point with no
+//! ring traffic, broken conservation). Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_CLUSTER_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_CLUSTER_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{cluster_perf, cluster_perf_check, cluster_perf_json};
+use fullerene_soc::metrics::Table;
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_CLUSTER_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in [
+        "BENCH_cluster.baseline.json",
+        "../BENCH_cluster.baseline.json",
+    ] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let p = cluster_perf(42, fast).expect("cluster sweep must build and drain");
+
+    let mut t = Table::new(&[
+        "chips",
+        "hidden",
+        "neurons",
+        "shards",
+        "cut",
+        "sessions/s",
+        "L3 flits",
+        "L3 flits/s",
+        "conserved",
+    ]);
+    for c in &p.cases {
+        t.push_row(vec![
+            c.chips.to_string(),
+            c.hidden_layers.to_string(),
+            c.neurons.to_string(),
+            c.shards.to_string(),
+            c.cut_neurons.to_string(),
+            format!("{:.1}", c.sessions_per_s),
+            c.interchip_flits.to_string(),
+            format!("{:.0}", c.interchip_flits_per_s),
+            c.conservation_holds.to_string(),
+        ]);
+    }
+    println!("## bench: cluster\n{}", t.render());
+    println!(
+        "largest-servable-network scaling: {:.2}x at {} chips",
+        p.scaling_factor,
+        p.cases.last().map_or(0, |c| c.chips)
+    );
+
+    let out = Path::new("BENCH_cluster.json");
+    cluster_perf_json(&p, "measured")
+        .write_file(out)
+        .expect("write BENCH_cluster.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_CLUSTER_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_CLUSTER_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => {
+            // The structural floors hold without any baseline — enforce
+            // them with an empty one rather than skipping outright.
+            let fails = cluster_perf_check(&p, &Json::obj(vec![]), 0.30);
+            if fails.is_empty() {
+                println!("no BENCH_cluster.baseline.json found; structural floors passed");
+            } else {
+                eprintln!("CLUSTER FLOOR VIOLATION:");
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Some(path) => {
+            let baseline = Json::read_file(&path).expect("parse baseline");
+            let fails = cluster_perf_check(&p, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", path.display());
+            } else {
+                eprintln!("CLUSTER REGRESSION vs {}:", path.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

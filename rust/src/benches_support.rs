@@ -42,10 +42,18 @@
 //!   emitted as `BENCH_resilience.json` by `benches/resilience.rs` and
 //!   gated in CI via [`resilience_check`] — the graceful-degradation
 //!   axis backing the paper's degree-variance claim.
+//! - [`cluster_perf`] — cluster scale-out axis: sessions/s and
+//!   inter-chip flits/s at 1/2/4 chips plus the largest-servable-network
+//!   scaling factor vs one chip (the paper's "extended off-chip
+//!   high-level router nodes" claim at serving granularity), emitted as
+//!   `BENCH_cluster.json` by `benches/cluster.rs` and gated in CI via
+//!   [`cluster_perf_check`] — the fifth perf-trajectory axis.
 
+use crate::cluster::{Cluster, ClusterMapper};
 use crate::coordinator::GoldenCheck;
 use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
 use crate::core::{Codebook, CoreEngine, DenseCore, NeuroCore, ReferenceCore, SynapsesBuilder};
+use crate::datasets::Sample;
 use crate::energy::constants::F_CORE_HZ;
 use crate::energy::{EnergyParams, EventClass};
 use crate::metrics::Table;
@@ -1461,6 +1469,358 @@ pub fn resilience_check(current: &Resilience, baseline: &Json, max_regress: f64)
     fails
 }
 
+// ================ cluster scale-out (BENCH_cluster.json) ===================
+
+/// Chip counts swept by [`cluster_perf`].
+pub const CLUSTER_PERF_CHIPS: [usize; 3] = [1, 2, 4];
+/// Cores per chip at the cluster-bench operating point — deliberately
+/// tiny so chip *capacity*, not host time, is the binding constraint
+/// and the scale-out factor is visible within the CI smoke budget.
+pub const CLUSTER_PERF_CORES: usize = 4;
+/// Neurons per core at the cluster-bench operating point.
+pub const CLUSTER_PERF_NPC: usize = 16;
+const CLUSTER_PERF_INPUTS: usize = 16;
+const CLUSTER_PERF_WIDTH: usize = 32;
+const CLUSTER_PERF_CLASSES: usize = 10;
+const CLUSTER_PERF_TIMESTEPS: usize = 4;
+
+/// A deep chain at the cluster-bench operating point: `hidden` layers
+/// of [`CLUSTER_PERF_WIDTH`] neurons feeding a classifier layer. The
+/// threshold/weight recipe is chosen so spikes survive the full depth
+/// (and therefore cross every shard cut) — the inter-chip-traffic floor
+/// of [`cluster_perf_check`] depends on it.
+fn cluster_perf_net(hidden: usize) -> NetworkDesc {
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 40,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let widths: Vec<usize> = (0..hidden)
+        .map(|_| CLUSTER_PERF_WIDTH)
+        .chain(std::iter::once(CLUSTER_PERF_CLASSES))
+        .collect();
+    let mut layers = Vec::new();
+    let mut prev = CLUSTER_PERF_INPUTS;
+    for (i, &w) in widths.iter().enumerate() {
+        layers.push(LayerDesc {
+            name: format!("l{i}"),
+            inputs: prev,
+            neurons: w,
+            codebook: cb.clone(),
+            widx: (0..prev * w).map(|j| ((j * 7) % 16) as u8).collect(),
+            neuron_params: params.clone(),
+        });
+        prev = w;
+    }
+    NetworkDesc {
+        name: format!("cluster-perf-{hidden}h"),
+        layers,
+        timesteps: CLUSTER_PERF_TIMESTEPS,
+        classes: CLUSTER_PERF_CLASSES,
+    }
+}
+
+/// The deepest [`cluster_perf_net`] a `chips`-node ring can serve,
+/// probed through [`ClusterMapper::plan`] — the exact feasibility rule
+/// the real build path applies, so "servable" here means "`--chips N`
+/// would actually build it". Depth feasibility is monotone (dropping a
+/// layer from a feasible partition stays feasible), so linear probing
+/// finds the true capacity edge.
+pub fn cluster_capacity_layers(chips: usize) -> usize {
+    let mut hidden = 0;
+    while ClusterMapper::plan(
+        &cluster_perf_net(hidden + 1),
+        chips,
+        CLUSTER_PERF_CORES,
+        CLUSTER_PERF_NPC,
+    )
+    .is_ok()
+    {
+        hidden += 1;
+    }
+    hidden
+}
+
+/// Total neurons of the capacity-edge network at `hidden` layers.
+fn cluster_capacity_neurons(hidden: usize) -> u64 {
+    (hidden * CLUSTER_PERF_WIDTH + CLUSTER_PERF_CLASSES) as u64
+}
+
+/// Deterministic synthetic spike streams for the cluster bench, dense
+/// enough (one axon in three per timestep) that every timestep pushes
+/// traffic across every shard boundary.
+fn cluster_perf_samples(n: usize, seed: u64) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let mut events = Vec::new();
+            for t in 0..CLUSTER_PERF_TIMESTEPS {
+                for a in 0..CLUSTER_PERF_INPUTS {
+                    if (a as u64 * 7 + t as u64 * 13 + i as u64 * 31 + seed) % 3 == 0 {
+                        events.push((t as u16, a as u32));
+                    }
+                }
+            }
+            Sample {
+                label: i % CLUSTER_PERF_CLASSES,
+                events,
+            }
+        })
+        .collect()
+}
+
+/// One timed pass: `sessions` warm-reused sessions of `samples_per`
+/// samples each on an already-built cluster (what a serving worker's
+/// steady state looks like — build cost is the serve bench's axis, not
+/// this one's).
+struct ClusterRun {
+    /// Wall seconds over the session loop.
+    host_s: f64,
+    /// Flits that crossed the L3 ring (0 on a single chip — no ring).
+    interchip_flits: u64,
+    /// Cluster-wide flit books balanced at every session boundary.
+    conservation_holds: bool,
+}
+
+fn cluster_run(
+    cluster: &mut Cluster,
+    sessions: usize,
+    samples_per: usize,
+    seed: u64,
+) -> Result<ClusterRun> {
+    let mut flits = 0u64;
+    let mut holds = true;
+    let t0 = std::time::Instant::now();
+    for s in 0..sessions {
+        for sample in &cluster_perf_samples(samples_per, seed + s as u64) {
+            cluster.run_sample(sample, true)?;
+        }
+        holds &= cluster.conservation().holds();
+        flits += cluster.l3_stats().map_or(0, |l3| l3.injected);
+        cluster.reset_for_session();
+    }
+    Ok(ClusterRun {
+        host_s: t0.elapsed().as_secs_f64().max(1e-9),
+        interchip_flits: flits,
+        conservation_holds: holds,
+    })
+}
+
+/// One measured chip-count point of the scale-out axis. Each point
+/// serves the **largest** network its ring can hold (that is the
+/// scale-out story — more chips buy capacity, not speed on a fixed
+/// net), so throughputs across points are not directly comparable;
+/// the gate compares each point only against its own baseline entry.
+#[derive(Debug, Clone)]
+pub struct ClusterPerfCase {
+    /// Ring size (1 = plain chip, no ring).
+    pub chips: u64,
+    /// Hidden layers of the capacity-edge network this ring serves.
+    pub hidden_layers: u64,
+    /// Total neurons of that network.
+    pub neurons: u64,
+    /// Shards the min-cut planner used.
+    pub shards: u64,
+    /// Neurons on shard boundaries (the per-timestep flit bound).
+    pub cut_neurons: u64,
+    /// Sessions served per repetition.
+    pub sessions: u64,
+    /// Host wall-clock total across reps (seconds).
+    pub host_s: f64,
+    /// Sessions per host second (best repetition, the shared best-of
+    /// policy of the other perf axes).
+    pub sessions_per_s: f64,
+    /// Flits that crossed the L3 ring per repetition.
+    pub interchip_flits: u64,
+    /// Ring flits per host second (best repetition).
+    pub interchip_flits_per_s: f64,
+    /// `injected == delivered + dropped + in_flight` cluster-wide at
+    /// every session boundary.
+    pub conservation_holds: bool,
+}
+
+/// The `BENCH_cluster.json` payload: one [`ClusterPerfCase`] per entry
+/// of [`CLUSTER_PERF_CHIPS`], each serving its ring's capacity-edge
+/// network, plus the headline scaling factor.
+#[derive(Debug, Clone)]
+pub struct ClusterPerf {
+    /// Measured points, in [`CLUSTER_PERF_CHIPS`] order.
+    pub cases: Vec<ClusterPerfCase>,
+    /// Largest-servable-network scaling: neurons at the largest swept
+    /// ring over neurons at one chip. The cluster layer's acceptance
+    /// floor is ≥ 4× at 4 chips.
+    pub scaling_factor: f64,
+}
+
+/// Measure the cluster scale-out axis: for each chip count in
+/// [`CLUSTER_PERF_CHIPS`], find the capacity-edge network, build the
+/// cluster once, then time warm-reused sessions over it (best-of-3,
+/// like the other perf axes; `fast` shrinks the session windows to the
+/// CI smoke budget).
+pub fn cluster_perf(seed: u64, fast: bool) -> Result<ClusterPerf> {
+    let reps = 3u64;
+    let sessions: usize = if fast { 2 } else { 3 };
+    let samples_per: usize = if fast { 3 } else { 6 };
+    let mut cases = Vec::new();
+    for &chips in &CLUSTER_PERF_CHIPS {
+        let hidden = cluster_capacity_layers(chips);
+        let net = cluster_perf_net(hidden);
+        let plan = ClusterMapper::plan(&net, chips, CLUSTER_PERF_CORES, CLUSTER_PERF_NPC)?;
+        let config = SocConfig {
+            chips,
+            n_cores: CLUSTER_PERF_CORES,
+            max_neurons_per_core: CLUSTER_PERF_NPC,
+            ..SocConfig::default()
+        };
+        let mut cluster = Cluster::new(net, config)?;
+        let mut runs = Vec::new();
+        for r in 0..reps {
+            runs.push(cluster_run(&mut cluster, sessions, samples_per, seed + 10 * r)?);
+        }
+        let best_sps = runs
+            .iter()
+            .map(|r| sessions as f64 / r.host_s)
+            .fold(0.0f64, f64::max);
+        let best_fps = runs
+            .iter()
+            .map(|r| r.interchip_flits as f64 / r.host_s)
+            .fold(0.0f64, f64::max);
+        cases.push(ClusterPerfCase {
+            chips: chips as u64,
+            hidden_layers: hidden as u64,
+            neurons: cluster_capacity_neurons(hidden),
+            shards: plan.shards() as u64,
+            cut_neurons: plan.cut_neurons as u64,
+            sessions: sessions as u64,
+            host_s: runs.iter().map(|r| r.host_s).sum(),
+            sessions_per_s: best_sps,
+            interchip_flits: runs[0].interchip_flits,
+            interchip_flits_per_s: best_fps,
+            conservation_holds: runs.iter().all(|r| r.conservation_holds),
+        });
+    }
+    let base = cases.first().expect("chip sweep is non-empty").neurons as f64;
+    let top = cases.last().expect("chip sweep is non-empty").neurons as f64;
+    Ok(ClusterPerf {
+        cases,
+        scaling_factor: top / base.max(1.0),
+    })
+}
+
+/// The cluster perf run as machine-readable JSON (the
+/// `BENCH_cluster.json` schema the CI perf-smoke job tracks).
+pub fn cluster_perf_json(p: &ClusterPerf, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-cluster-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("cores_per_chip", Json::Num(CLUSTER_PERF_CORES as f64)),
+        ("neurons_per_core", Json::Num(CLUSTER_PERF_NPC as f64)),
+        (
+            "cases",
+            Json::Arr(
+                p.cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("chips", Json::Num(c.chips as f64)),
+                            ("hidden_layers", Json::Num(c.hidden_layers as f64)),
+                            ("neurons", Json::Num(c.neurons as f64)),
+                            ("shards", Json::Num(c.shards as f64)),
+                            ("cut_neurons", Json::Num(c.cut_neurons as f64)),
+                            ("sessions", Json::Num(c.sessions as f64)),
+                            ("host_s", Json::Num(c.host_s)),
+                            ("sessions_per_s", Json::Num(c.sessions_per_s)),
+                            ("interchip_flits", Json::Num(c.interchip_flits as f64)),
+                            (
+                                "interchip_flits_per_s",
+                                Json::Num(c.interchip_flits_per_s),
+                            ),
+                            ("conservation_holds", Json::Bool(c.conservation_holds)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("scaling_factor", Json::Num(p.scaling_factor)),
+    ])
+}
+
+/// Gate a fresh cluster perf run against a checked-in baseline; returns
+/// human-readable regression descriptions (empty = pass). Same arming
+/// rule as the other perf axes:
+///
+/// - the structural floors — capacity scaling **≥ 4×** at the largest
+///   swept ring, traffic actually crossing the ring at every multi-chip
+///   point, cluster-wide flit conservation — are always enforced (the
+///   acceptance floor of the cluster layer);
+/// - throughput comparisons (sessions/s, ring flits/s per chip count)
+///   are enforced only when the baseline's `provenance` is
+///   `"measured"` — a bootstrap baseline carries hand-estimated figures
+///   that must never fail a real run.
+pub fn cluster_perf_check(current: &ClusterPerf, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let floor = 1.0 - max_regress;
+    if current.scaling_factor < 4.0 {
+        fails.push(format!(
+            "largest-servable-network scaling is {:.2}x at {} chips — the scale-out \
+             floor is 4x",
+            current.scaling_factor,
+            CLUSTER_PERF_CHIPS[CLUSTER_PERF_CHIPS.len() - 1]
+        ));
+    }
+    for c in &current.cases {
+        if !c.conservation_holds {
+            fails.push(format!(
+                "chips={}: cluster-wide flit conservation broke",
+                c.chips
+            ));
+        }
+        if c.chips > 1 && c.interchip_flits == 0 {
+            fails.push(format!(
+                "chips={}: no flits crossed the L3 ring (single-shard partition or \
+                 dead boundary traffic)",
+                c.chips
+            ));
+        }
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    let Some(cases) = baseline.get_opt("cases").and_then(|v| v.as_arr().ok()) else {
+        return fails;
+    };
+    for b in cases {
+        let Some(chips) = b.get_opt("chips").and_then(|v| v.as_f64().ok()) else {
+            continue;
+        };
+        let Some(cur) = current.cases.iter().find(|c| c.chips as f64 == chips) else {
+            fails.push(format!("chips={chips} missing from the current run"));
+            continue;
+        };
+        for (key, cur_v) in [
+            ("sessions_per_s", cur.sessions_per_s),
+            ("interchip_flits_per_s", cur.interchip_flits_per_s),
+        ] {
+            if let Some(base_v) = b.get_opt(key).and_then(|v| v.as_f64().ok()) {
+                if base_v > 0.0 && cur_v < floor * base_v {
+                    fails.push(format!(
+                        "chips={}/{key} regressed: {cur_v:.1} vs baseline {base_v:.1} \
+                         (allowed floor {:.1})",
+                        cur.chips,
+                        floor * base_v
+                    ));
+                }
+            }
+        }
+    }
+    fails
+}
+
 /// One Fig. 5c measurement point.
 #[derive(Debug, Clone)]
 pub struct Fig5cPoint {
@@ -2247,6 +2607,46 @@ mod tests {
         let mut inverted = current.clone();
         inverted.points[1].delivered_frac = 0.5;
         assert!(!resilience_check(&inverted, &bootstrap, 0.30).is_empty());
+    }
+
+    #[test]
+    fn cluster_perf_scales_4x_and_keeps_the_books() {
+        let p = cluster_perf(7, true).unwrap();
+        assert_eq!(p.cases.len(), CLUSTER_PERF_CHIPS.len());
+        assert!(
+            p.scaling_factor >= 4.0,
+            "scale-out factor {:.2} below the 4x acceptance floor",
+            p.scaling_factor
+        );
+        assert_eq!(p.cases[0].chips, 1);
+        assert_eq!(p.cases[0].interchip_flits, 0, "one chip has no ring");
+        for c in &p.cases[1..] {
+            assert!(c.shards > 1, "chips={} stayed single-shard", c.chips);
+            assert!(c.cut_neurons > 0);
+            assert!(
+                c.interchip_flits > 0,
+                "chips={}: nothing crossed the ring",
+                c.chips
+            );
+        }
+        assert!(p.cases.iter().all(|c| c.conservation_holds));
+        // Capacity grows monotonically with the ring.
+        for w in p.cases.windows(2) {
+            assert!(w[1].neurons > w[0].neurons);
+        }
+        // Structural floors hold with no baseline at all, and a measured
+        // self-baseline passes its own comparisons.
+        assert!(cluster_perf_check(&p, &Json::obj(vec![]), 0.30).is_empty());
+        let selfbase = cluster_perf_json(&p, "measured");
+        assert!(cluster_perf_check(&p, &selfbase, 0.30).is_empty());
+        // A measured baseline with unreachable figures fails both keys.
+        let inflated = Json::parse(
+            r#"{"provenance":"measured",
+                "cases":[{"chips":4,"sessions_per_s":1e12,
+                          "interchip_flits_per_s":1e12}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cluster_perf_check(&p, &inflated, 0.30).len(), 2);
     }
 
     #[test]

@@ -1,0 +1,569 @@
+//! [`Cluster`]: N simulated chips joined by the off-chip L3 ring,
+//! serving one logical network partitioned across them.
+//!
+//! ## Lockstep semantics
+//!
+//! The chip propagates spikes through **all** layers within one
+//! timestep (the pipelined-reference contract of
+//! [`NetworkDesc::reference_run`]), so the cluster must do the same
+//! across chips: within timestep `t`, shard 0 runs its layers, its
+//! terminal spikes cross the ring, shard 1 runs its layers on them —
+//! still at `t` — and so on down the chain. The cycle-interleaved
+//! driver therefore serializes shards *within* a timestep (that is also
+//! the latency truth: a sample's spikes physically traverse the chips
+//! in sequence) while every chip keeps its own ledgers, clocks and
+//! fault state.
+//!
+//! ## Shard contract
+//!
+//! Each shard is an unmodified [`Soc`] running a contiguous-layer
+//! sub-network (see [`crate::cluster::ClusterMapper`]), driven through
+//! the decomposed `sample_begin`/`sample_timestep`/`sample_end` path.
+//! Non-terminal shards emit their last-layer spikes as **layer-local
+//! neuron ids** — exactly the next shard's input axon space — and skip
+//! the readout path entirely; only the terminal shard accounts the
+//! logical sample (prediction, accuracy, sample counters). On-chip
+//! fault plans arm identically on every shard fabric; L3 events arm on
+//! the ring ([`crate::noc::FaultPlan::split_l3`]).
+//!
+//! ## The N = 1 oracle
+//!
+//! A single-chip cluster holds one shard over the whole network and no
+//! ring, and every public method delegates straight to that [`Soc`] —
+//! so an N = 1 cluster is **bit-identical** to a plain chip (reports,
+//! ledgers, spike order, `f64::to_bits`), which anchors the cluster to
+//! every existing equivalence chain. Pinned in `tests/cluster.rs`.
+
+use super::l3::{L3Fabric, L3Stats};
+use super::mapper::{ClusterMapper, Partition};
+use crate::datasets::Sample;
+use crate::energy::{AreaModel, ChipReport, EnergyParams};
+use crate::nn::NetworkDesc;
+use crate::noc::{FabricHealth, SimStats};
+use crate::soc::{SampleResult, Soc, SocConfig};
+use crate::{Error, Result};
+
+/// Cluster-wide flit accounting: every spike flit handed to any fabric
+/// (the shard NoCs and the L3 ring) must be delivered, dropped, or in
+/// flight — nothing may leak. [`Cluster::conservation`] sums the books;
+/// `tests/cluster.rs` holds the equality under random fault plans.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterConservation {
+    /// Flits injected: on-chip routed spikes (one per destination core)
+    /// plus flits handed to the L3 ring.
+    pub injected: u64,
+    /// Flits that reached a destination core or crossed the ring.
+    pub delivered: u64,
+    /// Flits discarded on degraded fabric (on-chip or L3).
+    pub dropped: u64,
+    /// Flits still inside a shard NoC (always 0 at sample boundaries;
+    /// the L3 ring never holds flits across a boundary).
+    pub in_flight: u64,
+}
+
+impl ClusterConservation {
+    /// `injected == delivered + dropped + in_flight` — the invariant.
+    pub fn holds(&self) -> bool {
+        self.injected == self.delivered + self.dropped + self.in_flight
+    }
+}
+
+/// N simulated chips + the off-chip L3 ring, serving one logical
+/// network. Mirrors the [`Soc`] serving surface (`run_sample`,
+/// `snapshot_report`, `finish_report`, `reset_for_session`…) so
+/// [`crate::cluster::Engine`] can dispatch sessions to either.
+pub struct Cluster {
+    config: SocConfig,
+    net: NetworkDesc,
+    partition: Partition,
+    /// One Soc per partition shard, in layer order. Shard `i` maps to
+    /// ring node `i`; ring nodes `shards..chips` exist (physical chips,
+    /// targetable by `kill-l3`) but carry no mapped layers.
+    shards: Vec<Soc>,
+    /// `None` on a single-chip cluster (no off-chip ring exists).
+    l3: Option<L3Fabric>,
+    energy: EnergyParams,
+    area: AreaModel,
+}
+
+impl Cluster {
+    /// Assemble a cluster of `config.chips` chips running `net`. With
+    /// `chips == 1` this is a boxed plain chip (the oracle case); with
+    /// more, the network is min-cut partitioned and the ring built. The
+    /// config's fault plan splits at this choke point: on-chip events
+    /// validate against every shard fabric, L3 events against the ring.
+    pub fn new(net: NetworkDesc, config: SocConfig) -> Result<Cluster> {
+        if config.chips == 0 {
+            return Err(Error::Soc("chips must be >= 1".into()));
+        }
+        let energy = EnergyParams::nominal().at_voltage(config.supply_v);
+        let area = AreaModel::multi_chip(config.domains);
+        if config.chips == 1 {
+            // Soc::new rejects L3 fault events via the fabric validator.
+            let soc = Soc::new(net.clone(), config.clone())?;
+            return Ok(Cluster {
+                config,
+                partition: Partition {
+                    ranges: vec![(0, net.layers.len())],
+                    cut_neurons: 0,
+                },
+                net,
+                shards: vec![soc],
+                l3: None,
+                energy,
+                area,
+            });
+        }
+        let (chip_plan, l3_plan) = config.fault_plan.split_l3();
+        let partition = ClusterMapper::plan(
+            &net,
+            config.chips,
+            config.n_cores,
+            config.max_neurons_per_core,
+        )?;
+        let mut shards = Vec::with_capacity(partition.shards());
+        for s in 0..partition.shards() {
+            let shard_config = SocConfig {
+                chips: 1,
+                fault_plan: chip_plan.clone(),
+                ..config.clone()
+            };
+            shards.push(Soc::new(partition.sub_net(&net, s), shard_config)?);
+        }
+        let l3 = L3Fabric::new(config.chips, &l3_plan)?;
+        Ok(Cluster {
+            config,
+            net,
+            partition,
+            shards,
+            l3: Some(l3),
+            energy,
+            area,
+        })
+    }
+
+    /// The cluster's configuration (`config.chips` is the ring size).
+    pub fn config(&self) -> &SocConfig {
+        &self.config
+    }
+
+    /// The logical network served (pre-partitioning).
+    pub fn network(&self) -> &NetworkDesc {
+        &self.net
+    }
+
+    /// How the network is split across chips.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Physical chips in the cluster (the L3 ring size).
+    pub fn chips(&self) -> usize {
+        self.config.chips
+    }
+
+    /// Chips actually carrying mapped layers (≤ [`Cluster::chips`]).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Ring counters, when a ring exists (`chips > 1`).
+    pub fn l3_stats(&self) -> Option<L3Stats> {
+        self.l3.as_ref().map(|l3| l3.stats())
+    }
+
+    /// Run one sample across the cluster. The aggregate
+    /// [`SampleResult`] sums compute over shards (cycles additionally
+    /// include the ring's transfer latency — within a timestep the
+    /// shards are pipeline stages of one sample, so their cycles add);
+    /// prediction/accuracy come from the terminal shard's readout.
+    pub fn run_sample(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+        if self.l3.is_none() {
+            // Single chip: the exact Soc path, bit for bit.
+            return self.shards[0].run_sample(sample, label_known);
+        }
+        let (l3_cycles0, l3_injected0) = {
+            let s = self.l3.as_ref().expect("multi-chip cluster has a ring").stats();
+            (s.cycles, s.injected)
+        };
+        for s in &mut self.shards {
+            s.sample_begin()?;
+        }
+        let n = self.shards.len();
+        let mut egress: Vec<u32> = Vec::new();
+        for t in 0..self.net.timesteps {
+            if let Some(l3) = &mut self.l3 {
+                l3.set_timestep(t as u32);
+            }
+            let mut ingress: Vec<u32> = sample.spikes_at(t as u16);
+            for si in 0..n {
+                if si + 1 == n {
+                    self.shards[si].sample_timestep(t, &ingress, None)?;
+                } else {
+                    egress.clear();
+                    self.shards[si].sample_timestep(t, &ingress, Some(&mut egress))?;
+                    // Placement order already yields ascending ids, but
+                    // the input contract (sorted axons) is the next
+                    // chip's, so enforce it at the boundary.
+                    egress.sort_unstable();
+                    let l3 = self.l3.as_mut().expect("multi-chip cluster has a ring");
+                    let delivered = l3.transfer(si, si + 1, egress.len() as u64)?;
+                    ingress.clear();
+                    if delivered {
+                        ingress.extend_from_slice(&egress);
+                    }
+                }
+            }
+        }
+        let mut agg = SampleResult {
+            predicted: 0,
+            counts: Vec::new(),
+            correct: false,
+            cycles: 0,
+            sops: 0,
+            spikes_routed: 0,
+            cores_ticked: 0,
+        };
+        for si in 0..n {
+            let r = if si + 1 == n {
+                self.shards[si].sample_end(sample.label, label_known, true)?
+            } else {
+                self.shards[si].sample_end(0, false, false)?
+            };
+            agg.cycles += r.cycles;
+            agg.sops += r.sops;
+            agg.spikes_routed += r.spikes_routed;
+            agg.cores_ticked += r.cores_ticked;
+            if si + 1 == n {
+                agg.predicted = r.predicted;
+                agg.counts = r.counts;
+                agg.correct = r.correct;
+            }
+        }
+        let l3s = self.l3.as_ref().expect("multi-chip cluster has a ring").stats();
+        agg.cycles += l3s.cycles - l3_cycles0;
+        agg.spikes_routed += l3s.injected - l3_injected0;
+        Ok(agg)
+    }
+
+    /// Cluster wall clock: the slowest shard's accounting window (ring
+    /// statics are charged over this span).
+    fn wall(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.total_cycles())
+            .max()
+            .unwrap_or(0)
+            .max(1)
+    }
+
+    /// Incremental cluster report: shard chip reports merged with the
+    /// ring's ledger (as a compute-free pseudo-report contributing the
+    /// off-chip transport energy) through [`ChipReport::merged`] — the
+    /// same deterministic fold the multi-session serving paths use, so
+    /// downstream merges keep composing. Single-chip clusters return
+    /// the shard's report verbatim (bit-identity).
+    pub fn snapshot_report(&self, workload: &str) -> ChipReport {
+        let Some(l3) = &self.l3 else {
+            return self.shards[0].snapshot_report(workload);
+        };
+        let mut reports: Vec<ChipReport> = self
+            .shards
+            .iter()
+            .map(|s| s.snapshot_report(workload))
+            .collect();
+        reports.push(ChipReport::from_ledger(
+            workload,
+            &l3.snapshot_ledger(self.wall(), &self.energy),
+            &self.energy,
+            &self.area,
+            self.config.f_core_hz,
+            0,
+            0,
+            0,
+            None,
+            0,
+        ));
+        ChipReport::merged(&reports, &self.area)
+            .expect("shard reports share one operating point by construction")
+    }
+
+    /// Final report + accounting reset (shards and ring), mirroring
+    /// [`Soc::finish_report`].
+    pub fn finish_report(&mut self, workload: &str) -> ChipReport {
+        let report = self.snapshot_report(workload);
+        self.reset_accounting();
+        report
+    }
+
+    /// Re-arm every shard for a fresh session and heal/re-arm the ring —
+    /// the cluster half of the warm == fresh contract
+    /// ([`Soc::reset_for_session`] per shard).
+    pub fn reset_for_session(&mut self) {
+        for s in &mut self.shards {
+            s.reset_for_session();
+        }
+        if let Some(l3) = &mut self.l3 {
+            l3.reset_accounting();
+        }
+    }
+
+    /// Zero every ledger and counter (shards + ring) while keeping the
+    /// built cluster, mirroring [`Soc::reset_accounting`].
+    pub fn reset_accounting(&mut self) {
+        for s in &mut self.shards {
+            s.reset_accounting();
+        }
+        if let Some(l3) = &mut self.l3 {
+            l3.reset_accounting();
+        }
+    }
+
+    /// Fabric statistics summed over shard NoCs (the serving surface's
+    /// delivery/stall view). Averages are delivery-weighted; latency
+    /// extrema take the cluster-wide max. The L3 ring is reported
+    /// separately via [`Cluster::l3_stats`].
+    pub fn noc_stats(&self) -> SimStats {
+        let stats: Vec<SimStats> = self.shards.iter().map(|s| s.noc_stats()).collect();
+        let delivered: u64 = stats.iter().map(|s| s.delivered).sum();
+        let cycles: u64 = stats.iter().map(|s| s.cycles).sum();
+        let wsum = |f: fn(&SimStats) -> f64| -> f64 {
+            if delivered == 0 {
+                return 0.0;
+            }
+            stats.iter().map(|s| f(s) * s.delivered as f64).sum::<f64>() / delivered as f64
+        };
+        SimStats {
+            cycles,
+            delivered,
+            avg_latency: wsum(|s| s.avg_latency),
+            avg_hops: wsum(|s| s.avg_hops),
+            max_latency: stats.iter().map(|s| s.max_latency).max().unwrap_or(0),
+            throughput: if cycles == 0 {
+                0.0
+            } else {
+                delivered as f64 / cycles as f64
+            },
+            stalls_backpressure: stats.iter().map(|s| s.stalls_backpressure).sum(),
+            stalls_timestep: stats.iter().map(|s| s.stalls_timestep).sum(),
+        }
+    }
+
+    /// Degradation counters summed across every fabric — shard NoCs and
+    /// the L3 ring (dead ring nodes count as dead routers).
+    pub fn fabric_health(&self) -> FabricHealth {
+        let mut h = FabricHealth::default();
+        for s in &self.shards {
+            let sh = s.fabric_health();
+            h.armed |= sh.armed;
+            h.dropped += sh.dropped;
+            h.rerouted_hops += sh.rerouted_hops;
+            h.dead_routers += sh.dead_routers;
+            h.dead_links += sh.dead_links;
+        }
+        if let Some(l3) = &self.l3 {
+            let lh = l3.fabric_health();
+            h.armed |= lh.armed;
+            h.dropped += lh.dropped;
+            h.rerouted_hops += lh.rerouted_hops;
+            h.dead_routers += lh.dead_routers;
+            h.dead_links += lh.dead_links;
+        }
+        h
+    }
+
+    /// The cluster-wide flit books (see [`ClusterConservation`]).
+    pub fn conservation(&self) -> ClusterConservation {
+        let mut c = ClusterConservation::default();
+        for s in &self.shards {
+            c.injected += s.spikes_routed_window();
+            c.delivered += s.noc_stats().delivered;
+            c.dropped += s.fabric_health().dropped;
+            c.in_flight += s.noc_in_flight();
+        }
+        if let Some(l3) = &self.l3 {
+            let ls = l3.stats();
+            c.injected += ls.injected;
+            c.delivered += ls.delivered;
+            c.dropped += ls.dropped;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::nn::network::LayerDesc;
+
+    /// Deterministic synthetic spike streams (dense enough to cross
+    /// every shard boundary).
+    fn samples(n: usize, inputs: usize, timesteps: usize, seed: u64) -> Vec<Sample> {
+        (0..n)
+            .map(|i| {
+                let mut events = Vec::new();
+                for t in 0..timesteps {
+                    for a in 0..inputs {
+                        if (a as u64 * 7 + t as u64 * 13 + i as u64 * 31 + seed) % 4 == 0 {
+                            events.push((t as u16, a as u32));
+                        }
+                    }
+                }
+                Sample {
+                    label: i % 10,
+                    events,
+                }
+            })
+            .collect()
+    }
+
+    /// A deep chain that propagates spikes, sized so `max_cores` per
+    /// chip forces a multi-shard partition.
+    fn deep_net(inputs: usize, widths: &[usize], classes: usize, timesteps: usize) -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 40,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        let mut layers = Vec::new();
+        let mut prev = inputs;
+        for (i, &w) in widths.iter().chain(std::iter::once(&classes)).enumerate() {
+            layers.push(LayerDesc {
+                name: format!("l{i}"),
+                inputs: prev,
+                neurons: w,
+                codebook: cb.clone(),
+                widx: (0..prev * w).map(|j| ((j * 7) % 16) as u8).collect(),
+                neuron_params: params.clone(),
+            });
+            prev = w;
+        }
+        NetworkDesc {
+            name: "cluster-test".into(),
+            layers,
+            timesteps,
+            classes,
+        }
+    }
+
+    fn tight_config(chips: usize, n_cores: usize) -> SocConfig {
+        SocConfig {
+            chips,
+            n_cores,
+            max_neurons_per_core: 16,
+            ..SocConfig::default()
+        }
+    }
+
+    #[test]
+    fn multi_shard_cluster_matches_the_functional_reference() {
+        // 3 layers × 2 cores at 3 cores/chip → 2 shards minimum.
+        let net = deep_net(16, &[32, 32], 10, 6);
+        let data = samples(5, 16, 6, 77);
+        let mut cluster = Cluster::new(net.clone(), tight_config(2, 3)).unwrap();
+        assert_eq!(cluster.shards(), 2);
+        assert!(cluster.partition().cut_neurons > 0);
+        for s in &data {
+            let r = cluster.run_sample(s, true).unwrap();
+            let raster = s.to_raster(net.timesteps, net.input_size());
+            assert_eq!(
+                r.counts,
+                net.reference_run(&raster),
+                "partitioned execution must match the unpartitioned reference"
+            );
+        }
+        let c = cluster.conservation();
+        assert!(c.holds(), "{c:?}");
+        assert_eq!(c.in_flight, 0, "drained at sample boundaries");
+        let l3 = cluster.l3_stats().unwrap();
+        assert_eq!(l3.injected, l3.delivered, "healthy ring drops nothing");
+        // The report merges shard compute with ring transport energy.
+        let report = cluster.snapshot_report("t");
+        assert!(report.sops > 0);
+        assert!(
+            report.breakdown.by_class.get("HopL3").copied().unwrap_or(0.0) > 0.0
+                || l3.injected == 0,
+            "cross-chip traffic must charge HopL3"
+        );
+    }
+
+    #[test]
+    fn warm_cluster_is_bit_identical_to_fresh() {
+        let net = deep_net(16, &[32, 32], 10, 5);
+        let data = samples(3, 16, 5, 13);
+        let cfg = tight_config(2, 3);
+        let mut warm = Cluster::new(net.clone(), cfg.clone()).unwrap();
+        for s in &data {
+            warm.run_sample(s, true).unwrap();
+        }
+        warm.reset_for_session();
+        let mut fresh = Cluster::new(net, cfg).unwrap();
+        for s in &data {
+            let a = warm.run_sample(s, true).unwrap();
+            let b = fresh.run_sample(s, true).unwrap();
+            assert_eq!(a.counts, b.counts);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.sops, b.sops);
+        }
+        let (ra, rb) = (warm.snapshot_report("w"), fresh.snapshot_report("w"));
+        assert_eq!(ra.cycles, rb.cycles);
+        assert_eq!(ra.sops, rb.sops);
+        assert_eq!(
+            ra.breakdown.dynamic_pj.to_bits(),
+            rb.breakdown.dynamic_pj.to_bits()
+        );
+        assert_eq!(
+            ra.breakdown.static_pj.to_bits(),
+            rb.breakdown.static_pj.to_bits()
+        );
+    }
+
+    #[test]
+    fn dead_ring_degrades_gracefully_and_keeps_the_books() {
+        let net = deep_net(16, &[32, 32], 10, 6);
+        let mut cfg = tight_config(2, 3);
+        // Kill the terminal shard's ring node mid-run: cross-chip spikes
+        // must drop (conservation intact), not crash or wedge.
+        cfg.fault_plan = crate::noc::FaultPlan::none()
+            .kill_l3(1, crate::noc::When::Timestep(3));
+        let data = samples(4, 16, 6, 5);
+        let mut cluster = Cluster::new(net, cfg).unwrap();
+        for s in &data {
+            cluster.run_sample(s, true).unwrap();
+        }
+        let c = cluster.conservation();
+        assert!(c.holds(), "{c:?}");
+        let l3 = cluster.l3_stats().unwrap();
+        assert!(l3.dropped > 0, "the dead ring node must drop traffic");
+        let h = cluster.fabric_health();
+        assert!(h.armed);
+        assert_eq!(h.dead_routers, 1);
+        // finish_report heals: the next window starts clean and armed.
+        let _ = cluster.finish_report("k");
+        assert_eq!(cluster.fabric_health().dead_routers, 0);
+        assert_eq!(cluster.l3_stats().unwrap().injected, 0);
+    }
+
+    #[test]
+    fn oversubscribed_ring_leaves_unmapped_chips_targetable() {
+        // The network fits one chip, but the config buys a 4-ring: the
+        // physical routers exist and kill-l3:3 must validate.
+        let net = deep_net(16, &[16], 10, 4);
+        let mut cfg = SocConfig {
+            chips: 4,
+            ..SocConfig::default()
+        };
+        cfg.fault_plan =
+            crate::noc::FaultPlan::none().kill_l3(3, crate::noc::When::Cycle(1));
+        let cluster = Cluster::new(net, cfg).unwrap();
+        assert_eq!(cluster.chips(), 4);
+        assert_eq!(cluster.shards(), 1, "everything fits on chip 0");
+        // Ring exists → its statics appear in the merged report.
+        let report = cluster.snapshot_report("idle");
+        assert!(report.breakdown.static_pj > 0.0);
+    }
+}

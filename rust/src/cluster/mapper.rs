@@ -1,0 +1,288 @@
+//! Min-cut-flavored partitioning of one logical network across the
+//! chips of a cluster.
+//!
+//! The partition unit is the **layer**: every shard runs a contiguous
+//! block of layers on its own chip, and the only inter-chip traffic is
+//! the spike stream crossing each block boundary over the off-chip L3
+//! ring. That makes the cut size of a boundary exactly the width (in
+//! neurons) of the layer feeding it — so the planner is a small dynamic
+//! program over contiguous layer splits that minimizes the summed
+//! boundary width, the min-cut objective Moradi & Manohar's off-chip
+//! cost gap (arxiv 1809.06016) says to minimize: every cut neuron is a
+//! potential flit on a link an order of magnitude costlier than any
+//! on-chip wire.
+//!
+//! Per-shard feasibility reuses the exact capacity rule of
+//! [`crate::nn::Mapping::plan`] (greedy packing of `ceil(neurons /
+//! max_neurons_per_core)` cores per layer), so a plan accepted here can
+//! always be built by the per-chip mapper.
+
+use crate::nn::NetworkDesc;
+use crate::{Error, Result};
+
+/// A contiguous-layer partition of one network across cluster shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Per-shard half-open layer ranges `[start, end)`, in shard order,
+    /// covering every layer exactly once.
+    pub ranges: Vec<(usize, usize)>,
+    /// Neurons sitting on shard boundaries — the summed width of every
+    /// cut layer interface, i.e. the min-cut objective value. Each one
+    /// can fire at most once per timestep, so this also bounds the
+    /// per-timestep inter-chip flit count.
+    pub cut_neurons: usize,
+}
+
+impl Partition {
+    /// Number of shards (chips actually used; at most the ring size).
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Cores the per-chip mapper will pack for shard `s` of `net`.
+    pub fn cores_of(&self, net: &NetworkDesc, s: usize, max_neurons_per_core: usize) -> usize {
+        let (a, b) = self.ranges[s];
+        net.layers[a..b]
+            .iter()
+            .map(|l| l.neurons.div_ceil(max_neurons_per_core))
+            .sum()
+    }
+
+    /// The sub-network shard `s` runs: the range's layers verbatim, with
+    /// the shard's last layer acting as its "classes" (its spikes leave
+    /// the chip over the ring — or the readout path, on the terminal
+    /// shard). Axon ids crossing a boundary are layer-local neuron
+    /// indices, which is exactly the next shard's input axon space, so
+    /// no id translation happens at the cut.
+    pub fn sub_net(&self, net: &NetworkDesc, s: usize) -> NetworkDesc {
+        let (a, b) = self.ranges[s];
+        NetworkDesc {
+            name: format!("{}#shard{}", net.name, s),
+            layers: net.layers[a..b].to_vec(),
+            timesteps: net.timesteps,
+            classes: net.layers[b - 1].neurons,
+        }
+    }
+}
+
+/// Plans [`Partition`]s. Stateless; the cluster calls
+/// [`ClusterMapper::plan`] once at build time.
+pub struct ClusterMapper;
+
+impl ClusterMapper {
+    /// Partition `net` across at most `chips` shards, each with
+    /// `n_cores` cores of `max_neurons_per_core` neurons.
+    ///
+    /// Objective (lexicographic): minimize cut neurons, then use fewer
+    /// shards, then minimize the largest shard's core count (balance).
+    /// The optimum is exact for the first objective and for shard count;
+    /// balance is resolved by the same DP and is exact among min-cut,
+    /// min-shard solutions reachable through its optimal substructure —
+    /// the tie-break regression tests pin the behavior.
+    pub fn plan(
+        net: &NetworkDesc,
+        chips: usize,
+        n_cores: usize,
+        max_neurons_per_core: usize,
+    ) -> Result<Partition> {
+        if chips == 0 {
+            return Err(Error::Config("cluster needs at least one chip".into()));
+        }
+        net.validate()?;
+        let nl = net.layers.len();
+        let cores: Vec<usize> = net
+            .layers
+            .iter()
+            .map(|l| l.neurons.div_ceil(max_neurons_per_core))
+            .collect();
+        if let Some((li, &c)) = cores.iter().enumerate().find(|&(_, &c)| c > n_cores) {
+            return Err(Error::Config(format!(
+                "layer {li} ('{}') alone needs {c} cores but one chip has {n_cores} — \
+                 layer-contiguous partitioning cannot split it across chips",
+                net.layers[li].name
+            )));
+        }
+        // prefix[i] = cores of layers[0..i]; a segment [a, b) is feasible
+        // iff prefix[b] - prefix[a] <= n_cores.
+        let mut prefix = vec![0usize; nl + 1];
+        for (i, &c) in cores.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + c;
+        }
+        // best[i][k] = minimal (cut, max_shard_cores) covering layers
+        // [0, i) with exactly k shards; from[i][k] reconstructs the split.
+        let inf = (usize::MAX, usize::MAX);
+        let kmax = chips.min(nl);
+        let mut best = vec![vec![inf; kmax + 1]; nl + 1];
+        let mut from = vec![vec![usize::MAX; kmax + 1]; nl + 1];
+        best[0][0] = (0, 0);
+        for i in 1..=nl {
+            for k in 1..=kmax.min(i) {
+                for j in (k - 1)..i {
+                    if best[j][k - 1] == inf || prefix[i] - prefix[j] > n_cores {
+                        continue;
+                    }
+                    let (pc, pm) = best[j][k - 1];
+                    // Boundary before layer j exists only when shard
+                    // k isn't the first; its width is layer j's input
+                    // interface = layer j-1's neurons.
+                    let cut = pc + if j > 0 { net.layers[j - 1].neurons } else { 0 };
+                    let cand = (cut, pm.max(prefix[i] - prefix[j]));
+                    if cand < best[i][k] {
+                        best[i][k] = cand;
+                        from[i][k] = j;
+                    }
+                }
+            }
+        }
+        // Pick (cut, shard count, balance) lexicographically over k.
+        let mut pick: Option<(usize, usize, usize)> = None; // (cut, k, maxc)
+        for (k, &(cut, maxc)) in best[nl].iter().enumerate().skip(1) {
+            if (cut, maxc) == inf {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => (cut, k, maxc) < p,
+            };
+            if better {
+                pick = Some((cut, k, maxc));
+            }
+        }
+        let Some((cut, k, _)) = pick else {
+            return Err(Error::Config(format!(
+                "network '{}' needs more than {chips} chips ({} cores total, \
+                 {n_cores} per chip)",
+                net.name, prefix[nl]
+            )));
+        };
+        let mut ranges = Vec::with_capacity(k);
+        let (mut i, mut kk) = (nl, k);
+        while kk > 0 {
+            let j = from[i][kk];
+            ranges.push((j, i));
+            i = j;
+            kk -= 1;
+        }
+        ranges.reverse();
+        Ok(Partition {
+            ranges,
+            cut_neurons: cut,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::nn::network::LayerDesc;
+
+    /// A chain of fully-connected layers with the given widths.
+    fn chain(widths: &[(usize, usize)]) -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 40,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        let layers: Vec<LayerDesc> = widths
+            .iter()
+            .enumerate()
+            .map(|(i, &(inputs, neurons))| LayerDesc {
+                name: format!("l{i}"),
+                inputs,
+                neurons,
+                codebook: cb.clone(),
+                widx: (0..inputs * neurons).map(|j| ((j * 7) % 16) as u8).collect(),
+                neuron_params: params.clone(),
+            })
+            .collect();
+        let classes = widths.last().unwrap().1;
+        NetworkDesc {
+            name: "chain".into(),
+            layers,
+            timesteps: 4,
+            classes,
+        }
+    }
+
+    #[test]
+    fn single_chip_preferred_when_everything_fits() {
+        let net = chain(&[(8, 16), (16, 16), (16, 4)]);
+        // 16-neuron layers at 16/core: 1+1+1 = 3 cores, one chip of 20.
+        let p = ClusterMapper::plan(&net, 4, 20, 16).unwrap();
+        assert_eq!(p.ranges, vec![(0, 3)]);
+        assert_eq!(p.cut_neurons, 0, "no boundary, no cut");
+        assert_eq!(p.sub_net(&net, 0).layers.len(), 3);
+    }
+
+    #[test]
+    fn cut_lands_on_the_narrowest_interface() {
+        // 3 layers, 2 cores each at capacity 3 per chip: must split 2|1
+        // or 1|2. The interface after l0 is 32 neurons, after l1 only 4 —
+        // min-cut must choose the narrow waist.
+        let net = chain(&[(8, 32), (32, 4), (4, 32)]);
+        let p = ClusterMapper::plan(&net, 2, 3, 16).unwrap();
+        assert_eq!(p.ranges, vec![(0, 2), (2, 3)]);
+        assert_eq!(p.cut_neurons, 4);
+        // Shard sub-networks chain correctly and validate.
+        let s0 = p.sub_net(&net, 0);
+        let s1 = p.sub_net(&net, 1);
+        s0.validate().unwrap();
+        s1.validate().unwrap();
+        assert_eq!(s0.classes, 4, "shard output = boundary width");
+        assert_eq!(s1.input_size(), 4, "next shard consumes the boundary");
+    }
+
+    #[test]
+    fn balance_breaks_ties_between_equal_cuts() {
+        // Four 16-neuron layers: every interface is 16 wide, so any
+        // single cut costs 16. With 2 chips of 3 cores, a 2|2 split
+        // (max 2 cores/shard) must win over 3|1 (max 3).
+        let net = chain(&[(8, 16), (16, 16), (16, 16), (16, 16)]);
+        let p = ClusterMapper::plan(&net, 2, 3, 16).unwrap();
+        assert_eq!(p.cut_neurons, 16);
+        assert_eq!(p.ranges, vec![(0, 2), (2, 4)]);
+        assert_eq!(p.cores_of(&net, 0, 16), 2);
+        assert_eq!(p.cores_of(&net, 1, 16), 2);
+    }
+
+    #[test]
+    fn infeasible_plans_are_rejected_with_cause() {
+        let net = chain(&[(8, 64), (64, 4)]);
+        // One 64-neuron layer needs 4 cores; a 3-core chip can never
+        // host it, no matter how many chips the ring has.
+        let err = ClusterMapper::plan(&net, 8, 3, 16).unwrap_err().to_string();
+        assert!(err.contains("alone needs"), "{err}");
+        // Feasible per layer but not within the chip budget.
+        let net = chain(&[(8, 32), (32, 32), (32, 32), (32, 4)]);
+        let err = ClusterMapper::plan(&net, 1, 3, 16).unwrap_err().to_string();
+        assert!(err.contains("more than 1 chips"), "{err}");
+        assert!(ClusterMapper::plan(&net, 0, 3, 16).is_err(), "chips = 0");
+    }
+
+    #[test]
+    fn ranges_always_cover_all_layers_contiguously() {
+        let net = chain(&[(8, 32), (32, 16), (16, 32), (32, 8), (8, 4)]);
+        for chips in 1..=4 {
+            let Ok(p) = ClusterMapper::plan(&net, chips, 4, 16) else {
+                continue;
+            };
+            assert!(p.shards() <= chips);
+            assert_eq!(p.ranges[0].0, 0);
+            assert_eq!(p.ranges.last().unwrap().1, net.layers.len());
+            for w in p.ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous, gap-free cover");
+            }
+            let cut: usize = p
+                .ranges
+                .iter()
+                .skip(1)
+                .map(|&(a, _)| net.layers[a - 1].neurons)
+                .sum();
+            assert_eq!(cut, p.cut_neurons, "reported cut matches the ranges");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Multi-chip scale-out: one logical network served by a [`Cluster`] of
+//! simulated chips joined through an extended off-chip L3 router ring.
+//!
+//! The paper's fullerene NoC "can be scaled up through extended
+//! off-chip high-level router nodes"; this subsystem exercises that
+//! claim end to end:
+//!
+//! * [`ClusterMapper`] — min-cut-flavored contiguous-layer partitioning
+//!   of one network across chips (boundary neurons are the objective,
+//!   because every cut neuron rides a link an order of magnitude
+//!   costlier than any on-chip wire — Moradi & Manohar, arxiv
+//!   1809.06016).
+//! * [`L3Fabric`] — the off-chip router ring, with its own energy
+//!   classes (`HopL3`/`LinkL3`), latency constants
+//!   ([`L3_HOP_CYCLES`]/[`L3_LINK_CYCLES`]), static power per ring
+//!   router, and the `kill-l3`/`throttle-l3` half of the fault grammar.
+//! * [`Cluster`] — the cycle-interleaved lockstep driver: cross-chip
+//!   spikes climb core→L1→L2→L3, cross the ring, and descend, with
+//!   flit conservation holding cluster-wide
+//!   ([`Cluster::conservation`]).
+//! * [`Engine`] — the serving dispatch: `chips == 1` runs the plain
+//!   [`Soc`] (bit-identical to the pre-cluster paths), `chips > 1`
+//!   builds a [`Cluster`]. [`crate::serve::Session`] and the serving
+//!   runtime run over an `Engine`, so one session can span chips.
+
+mod cluster;
+mod l3;
+mod mapper;
+
+pub use cluster::{Cluster, ClusterConservation};
+pub use l3::{L3Fabric, L3Stats, L3_HOP_CYCLES, L3_LINK_CYCLES};
+pub use mapper::{ClusterMapper, Partition};
+
+use crate::datasets::Sample;
+use crate::energy::ChipReport;
+use crate::nn::NetworkDesc;
+use crate::noc::{FabricHealth, SimStats};
+use crate::soc::{SampleResult, Soc, SocConfig};
+use crate::Result;
+
+/// The serving engine behind a session: a single chip or a cluster,
+/// chosen by `config.chips`. Every delegated method is the same call on
+/// either arm, so the `chips == 1` serving path executes exactly the
+/// pre-cluster [`Soc`] code — the bit-identity oracle that anchors the
+/// cluster layer to the existing equivalence chains.
+pub enum Engine {
+    /// One simulated chip (`chips == 1`).
+    Chip(Box<Soc>),
+    /// N chips over the off-chip L3 ring (`chips > 1`).
+    Cluster(Box<Cluster>),
+}
+
+impl Engine {
+    /// Build the engine `config` asks for.
+    pub fn new(net: NetworkDesc, config: SocConfig) -> Result<Engine> {
+        if config.chips <= 1 {
+            Ok(Engine::Chip(Box::new(Soc::new(net, config)?)))
+        } else {
+            Ok(Engine::Cluster(Box::new(Cluster::new(net, config)?)))
+        }
+    }
+
+    /// The single chip, when this engine is one (`None` for clusters).
+    pub fn as_soc(&self) -> Option<&Soc> {
+        match self {
+            Engine::Chip(s) => Some(s),
+            Engine::Cluster(_) => None,
+        }
+    }
+
+    /// The cluster, when this engine is one (`None` for single chips).
+    pub fn as_cluster(&self) -> Option<&Cluster> {
+        match self {
+            Engine::Chip(_) => None,
+            Engine::Cluster(c) => Some(c),
+        }
+    }
+
+    /// Chips behind this engine (1 for the plain chip).
+    pub fn chips(&self) -> usize {
+        match self {
+            Engine::Chip(_) => 1,
+            Engine::Cluster(c) => c.chips(),
+        }
+    }
+
+    /// The engine's configuration.
+    pub fn config(&self) -> &SocConfig {
+        match self {
+            Engine::Chip(s) => &s.config,
+            Engine::Cluster(c) => c.config(),
+        }
+    }
+
+    /// Run one sample (see [`Soc::run_sample`] / [`Cluster::run_sample`]).
+    pub fn run_sample(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+        match self {
+            Engine::Chip(s) => s.run_sample(sample, label_known),
+            Engine::Cluster(c) => c.run_sample(sample, label_known),
+        }
+    }
+
+    /// Incremental report over the window so far.
+    pub fn snapshot_report(&self, workload: &str) -> ChipReport {
+        match self {
+            Engine::Chip(s) => s.snapshot_report(workload),
+            Engine::Cluster(c) => c.snapshot_report(workload),
+        }
+    }
+
+    /// Final report + accounting reset.
+    pub fn finish_report(&mut self, workload: &str) -> ChipReport {
+        match self {
+            Engine::Chip(s) => s.finish_report(workload),
+            Engine::Cluster(c) => c.finish_report(workload),
+        }
+    }
+
+    /// Re-arm for a fresh session (warm == fresh, bit for bit).
+    pub fn reset_for_session(&mut self) {
+        match self {
+            Engine::Chip(s) => s.reset_for_session(),
+            Engine::Cluster(c) => c.reset_for_session(),
+        }
+    }
+
+    /// Fabric statistics for the window (summed across shards on a
+    /// cluster; the ring reports separately via [`Cluster::l3_stats`]).
+    pub fn noc_stats(&self) -> SimStats {
+        match self {
+            Engine::Chip(s) => s.noc_stats(),
+            Engine::Cluster(c) => c.noc_stats(),
+        }
+    }
+
+    /// Degradation counters for the window (cluster: shard NoCs + ring).
+    pub fn fabric_health(&self) -> FabricHealth {
+        match self {
+            Engine::Chip(s) => s.fabric_health(),
+            Engine::Cluster(c) => c.fabric_health(),
+        }
+    }
+}

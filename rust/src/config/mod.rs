@@ -8,7 +8,7 @@
 //!     "domains": 1, "n_cores": 20, "max_neurons_per_core": 8192,
 //!     "fifo_depth": 4, "f_core_mhz": 100, "f_cpu_mhz": 50,
 //!     "supply_v": 1.08, "use_noc": true, "drive_cpu": true,
-//!     "fault_plan": "kill-router:0@t2"
+//!     "chips": 1, "fault_plan": "kill-router:0@t2"
 //!   },
 //!   "workload": {"name": "nmnist", "samples": 50, "seed": 7},
 //!   "check": "reference",
@@ -130,6 +130,9 @@ impl RunConfig {
             if let Some(v) = chip.get_opt("drive_cpu") {
                 s.drive_cpu = v.as_bool()?;
             }
+            if let Some(v) = chip.get_opt("chips") {
+                s.chips = v.as_usize()?;
+            }
             if let Some(v) = chip.get_opt("fault_plan") {
                 s.fault_plan = crate::noc::FaultPlan::parse(v.as_str()?)?;
             }
@@ -208,6 +211,28 @@ mod tests {
             r#"{"chip": {"fault_plan": "kill-router:15@1"}}"#,
         )
         .unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn chips_key_parses_and_validates_against_the_ring() {
+        let tmp = std::env::temp_dir().join("fsoc_cfg_chips_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{"chip": {"chips": 4, "fault_plan": "kill-l3:2@t3"}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&tmp).unwrap();
+        assert_eq!(cfg.soc.chips, 4);
+        assert!(cfg.soc.fault_plan.has_l3_events());
+        // An L3 event on a single-chip config fails at the choke point.
+        std::fs::write(&tmp, r#"{"chip": {"fault_plan": "kill-l3:0@t1"}}"#).unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        // Ring size is range-checked like every other chip knob.
+        std::fs::write(&tmp, r#"{"chip": {"chips": 0}}"#).unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        std::fs::write(&tmp, r#"{"chip": {"chips": 17}}"#).unwrap();
         assert!(RunConfig::load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
     }

@@ -4,22 +4,27 @@
 //! references (the in-process integer reference and/or the AOT-compiled
 //! XLA golden model).
 //!
-//! Internally a batch run is one [`crate::serve::Session`]; a sharded
-//! run ([`ExperimentRunner::run_parallel`]) is a [`crate::serve::SocPool`]
-//! serving one [`crate::serve::EventReplay`] session per contiguous
-//! shard — a pure function of `(n, workers)` — with the per-shard
-//! [`ChipReport`]s merged in shard order through [`ChipReport::merged`].
-//! Because the simulator is deterministic and the merge order is fixed,
-//! the aggregate is **bit-identical** to executing the same shards
-//! sequentially ([`ExperimentRunner::run_sharded`] with
-//! `parallel = false`), regardless of thread scheduling.
+//! Internally a batch run is one [`crate::serve::Session`] over the
+//! serving [`Engine`] the config asks for (one chip, or a whole cluster
+//! when `soc.chips > 1`); a sharded run
+//! ([`ExperimentRunner::run_parallel`]) submits one
+//! [`crate::serve::EventReplay`] session per contiguous shard — a pure
+//! function of `(n, workers)` — to a [`crate::serve::ServeRuntime`],
+//! with the per-shard [`ChipReport`]s merged in submission order through
+//! [`ChipReport::merged`]. Because the simulator is deterministic and
+//! the merge order is fixed, the aggregate is **bit-identical** to
+//! executing the same shards sequentially
+//! ([`ExperimentRunner::run_sharded`] with `parallel = false`, the
+//! [`crate::serve::SocPool`] reference path), regardless of thread
+//! scheduling.
 
+use crate::cluster::Engine;
 use crate::datasets::Dataset;
 use crate::energy::ChipReport;
 use crate::nn::NetworkDesc;
 use crate::runtime::GoldenModel;
-use crate::serve::{EventReplay, Session, SessionSpec, SocPool};
-use crate::soc::{Soc, SocConfig};
+use crate::serve::{EventReplay, ServeRuntime, Session, SessionSpec, SocPool};
+use crate::soc::SocConfig;
 use crate::{Error, Result};
 use std::path::PathBuf;
 
@@ -100,9 +105,9 @@ impl ExperimentRunner {
         Ok(ExperimentRunner { net, config, golden })
     }
 
-    /// Run the dataset through the chip as one streaming session;
-    /// returns the report and the mismatch count against the requested
-    /// references.
+    /// Run the dataset through the configured engine (one chip, or a
+    /// `soc.chips`-shard cluster) as one streaming session; returns the
+    /// report and the mismatch count against the requested references.
     pub fn run(&self, ds: &Dataset) -> Result<ExperimentOutcome> {
         if ds.inputs != self.net.input_size() {
             return Err(Error::Config(format!(
@@ -111,8 +116,8 @@ impl ExperimentRunner {
                 self.net.input_size()
             )));
         }
-        let soc = Soc::new(self.net.clone(), self.config.soc.clone())?;
-        let mut session = Session::open(soc, &ds.name);
+        let engine = Engine::new(self.net.clone(), self.config.soc.clone())?;
+        let mut session = Session::open_engine(engine, &ds.name);
         let mut mismatches = 0u64;
         let mut checked = 0u64;
         let use_ref = matches!(
@@ -184,12 +189,6 @@ impl ExperimentRunner {
         }
         let n = ds.samples.len().min(self.config.limit);
         let workers = workers.clamp(1, n.max(1));
-        let pool = SocPool::new(
-            self.net.clone(),
-            self.config.soc.clone(),
-            workers,
-            self.config.check,
-        )?;
         // One shared copy of the clipped sample list; every shard is an
         // `[a, b)` window over the same Arc, not a per-shard clone.
         let shared = std::sync::Arc::new(ds.samples[..n].to_vec());
@@ -210,14 +209,34 @@ impl ExperimentRunner {
                 )
             })
             .collect();
-        // The batch-compat wrapper is exactly the semantics a sharded
-        // batch run wants (all specs known up front, all-or-nothing
-        // error contract), so the deprecation nudge toward streaming
-        // ServeRuntime does not apply here.
-        #[allow(deprecated)]
         let out = if parallel {
-            pool.serve(specs)?
+            // A batch run knows every spec up front, so the runtime is
+            // sized to the spec list (queue never blocks) and the first
+            // per-session failure is converted back into a whole-call
+            // `Err` — the batch all-or-nothing contract.
+            let mut rt = ServeRuntime::new(
+                self.net.clone(),
+                self.config.soc.clone(),
+                workers,
+                self.config.check,
+                specs.len(),
+                true,
+            )?;
+            for spec in specs {
+                rt.submit(spec)?;
+            }
+            let out = rt.finish()?;
+            if let Some(f) = out.failures.first() {
+                return Err(f.error.clone());
+            }
+            out
         } else {
+            let pool = SocPool::new(
+                self.net.clone(),
+                self.config.soc.clone(),
+                workers,
+                self.config.check,
+            )?;
             pool.serve_sequential(specs)?
         };
         Ok(ExperimentOutcome {

@@ -86,6 +86,19 @@ pub struct EnergyParams {
     pub p_router_l2_active: f64,
     /// Level-2 router leakage while clock-gated. (mW)
     pub p_router_l2_gated: f64,
+    /// Moving one flit through a level-3 (off-chip, inter-chip) router —
+    /// the extended scale-out node of the cluster fabric. Calibrated an
+    /// order of magnitude above the L2 hop, after the on- vs off-chip
+    /// cost gap Moradi & Manohar measure for multi-chip neuromorphic
+    /// interconnect (arxiv 1809.06016). (pJ)
+    pub e_hop_l3: f64,
+    /// One traversal of an off-chip chip↔chip link (SerDes + board
+    /// trace) — the dominant inter-chip energy term, ≈10× the L2 link. (pJ)
+    pub e_link_l3: f64,
+    /// Level-3 router static+clock power while enabled. (mW)
+    pub p_router_l3_active: f64,
+    /// Level-3 router leakage while clock-gated. (mW)
+    pub p_router_l3_gated: f64,
     /// Discarding one undeliverable flit on a degraded fabric (buffer
     /// invalidate + credit return — no crossbar traversal). Only charged
     /// under an armed fault plan; a healthy fabric never drops. (pJ)
@@ -168,6 +181,13 @@ impl EnergyParams {
             e_link_l2: 0.024,
             p_router_l2_active: 0.034,
             p_router_l2_gated: 0.002,
+            // L3 (off-chip). No silicon anchor in the paper; an order of
+            // magnitude over L2 per the Moradi & Manohar off-chip gap —
+            // the link (SerDes + trace) dominates.
+            e_hop_l3: 0.52,
+            e_link_l3: 0.24,
+            p_router_l3_active: 0.12,
+            p_router_l3_gated: 0.008,
             e_flit_drop: 0.002,
 
             // CPU. Calibrated so the MNIST control firmware (mostly
@@ -218,6 +238,8 @@ impl EnergyParams {
             &mut p.e_link,
             &mut p.e_hop_l2,
             &mut p.e_link_l2,
+            &mut p.e_hop_l3,
+            &mut p.e_link_l3,
             &mut p.e_flit_drop,
             &mut p.e_cpu_alu,
             &mut p.e_cpu_mem,
@@ -238,6 +260,8 @@ impl EnergyParams {
             &mut p.p_router_gated,
             &mut p.p_router_l2_active,
             &mut p.p_router_l2_gated,
+            &mut p.p_router_l3_active,
+            &mut p.p_router_l3_gated,
             &mut p.p_cpu_active,
             &mut p.p_cpu_sleep,
             &mut p.p_cpu_lf,
@@ -296,6 +320,22 @@ mod tests {
         let hi = p.at_voltage(1.32);
         let ratio = hi.e_hop_l2 / p.e_hop_l2;
         assert!((ratio - (1.32f64 / 1.08).powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l3_fabric_costlier_than_l2_by_an_order_of_magnitude() {
+        let p = EnergyParams::nominal();
+        // The Moradi & Manohar gap: off-chip ≈10× on-chip, so the
+        // partitioner has a real asymmetry to minimize.
+        assert!(p.e_hop_l3 >= 8.0 * p.e_hop_l2);
+        assert!(p.e_link_l3 >= 8.0 * p.e_link_l2);
+        assert!(p.p_router_l3_active > p.p_router_l2_active);
+        // L3 energies obey the same quadratic voltage scaling.
+        let hi = p.at_voltage(1.32);
+        let ratio = hi.e_hop_l3 / p.e_hop_l3;
+        assert!((ratio - (1.32f64 / 1.08).powi(2)).abs() < 1e-9);
+        let sratio = hi.p_router_l3_active / p.p_router_l3_active;
+        assert!((sratio - 1.32 / 1.08).abs() < 1e-9);
     }
 
     #[test]

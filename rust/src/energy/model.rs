@@ -31,6 +31,14 @@ pub enum EventClass {
     /// Traversal of a link with a level-2 router endpoint (the longer,
     /// repeater-heavy scale-up wires).
     LinkL2,
+    /// Flit switched through a level-3 (off-chip, inter-chip) router —
+    /// the extended scale-out nodes of the cluster layer. (pJ constants
+    /// an order of magnitude above L2, after Moradi & Manohar's on- vs
+    /// off-chip cost gap.)
+    HopL3,
+    /// One traversal of an off-chip chip↔chip serial link (SerDes +
+    /// board trace), the dominant inter-chip energy term.
+    LinkL3,
     /// Flit discarded on a degraded fabric (dead router or severed route
     /// under an armed [`crate::noc::FaultPlan`]); never charged on a
     /// healthy fabric.
@@ -68,6 +76,8 @@ impl EventClass {
             LinkTraversal => p.e_link,
             HopL2 => p.e_hop_l2,
             LinkL2 => p.e_link_l2,
+            HopL3 => p.e_hop_l3,
+            LinkL3 => p.e_link_l3,
             FlitDropped => p.e_flit_drop,
             CpuAlu => p.e_cpu_alu,
             CpuMem => p.e_cpu_mem,
@@ -82,7 +92,7 @@ impl EventClass {
     }
 
     /// All classes, for iteration in reports.
-    pub const ALL: [EventClass; 25] = [
+    pub const ALL: [EventClass; 27] = [
         EventClass::Sop,
         EventClass::ZspeWord,
         EventClass::ZspeForward,
@@ -98,6 +108,8 @@ impl EventClass {
         EventClass::LinkTraversal,
         EventClass::HopL2,
         EventClass::LinkL2,
+        EventClass::HopL3,
+        EventClass::LinkL3,
         EventClass::FlitDropped,
         EventClass::CpuAlu,
         EventClass::CpuMem,

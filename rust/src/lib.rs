@@ -29,11 +29,17 @@
 //!   DVS-Gesture-like, and rate-coded CIFAR-like geometry/statistics.
 //! - [`energy`] — the calibrated 55 nm event-energy/area model that turns
 //!   simulation event counts into pJ/SOP, mW and mm² figures.
+//! - [`cluster`] — multi-chip scale-out: min-cut layer partitioning
+//!   ([`cluster::ClusterMapper`]), the off-chip L3 router ring with its
+//!   own energy/latency/fault model ([`cluster::L3Fabric`]), and the
+//!   lockstep multi-chip driver ([`cluster::Cluster`]) behind the
+//!   [`cluster::Engine`] serving dispatch.
 //! - [`serve`] — the streaming session/serving API: [`serve::SocBuilder`]
 //!   (fluent, validated configuration), the pluggable [`serve::Workload`]
 //!   sample sources, streaming [`serve::Session`]s with incremental
 //!   reports, and the multi-session [`serve::SocPool`] with deterministic
-//!   merged reporting.
+//!   merged reporting. Sessions run on an [`cluster::Engine`], so one
+//!   session can span a whole cluster (`--chips N`).
 //! - [`coordinator`] — the batch experiment layer (dataset runs +
 //!   reference/XLA cross-checking), rebuilt on top of [`serve`].
 //! - [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX golden model
@@ -45,6 +51,7 @@
 pub mod config;
 pub mod util;
 pub mod benches_support;
+pub mod cluster;
 pub mod coordinator;
 pub mod core;
 pub mod datasets;

@@ -70,15 +70,19 @@ fn print_help() {
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
                    --config cfg.json  --no-noc  --no-cpu  --f-core-mhz F  --supply V\n\
                    --domains D (multi-domain chip: D fullerene domains + L2 ring)\n\
+                   --chips C (C > 1: partition the network across a C-chip cluster\n\
+                   joined by the off-chip L3 router ring)\n\
                    --fault-plan <spec>  (';'-separated degradation events:\n\
                    kill-router:<node>@<when> | kill-link:<a>-<b>@<when> |\n\
                    throttle-l1:<factor>@<when> | throttle-l2:<factor>@<when> |\n\
-                   congest:<node>+<cycles>@<when> | kill-frac:<frac>#<seed>@<when>,\n\
+                   congest:<node>+<cycles>@<when> | kill-frac:<frac>#<seed>@<when> |\n\
+                   kill-l3:<chip>@<when> | throttle-l3:<factor>@<when> (need --chips > 1),\n\
                    <when> = cycle number or t<timestep>, e.g.\n\
                    \"kill-router:3@200;kill-frac:0.2#7@t4\"; also accepted by serve)\n\
          serve     --sessions N  --workers K  --samples S  --seed S  --check none|reference\n\
                    --queue-depth Q (bounded submission queue; default = N)\n\
-                   --no-warm (fresh chip per session instead of warm reuse)\n\
+                   --chips C (each worker serves a whole C-chip cluster)\n\
+                   --no-warm (fresh engine per session instead of warm reuse)\n\
                    --workload <spec>  (spec: nmnist | dvsgesture | cifar10 |\n\
                    replay:<dataset.json> | traffic:<inputs>x<classes>x<timesteps>@<rate> |\n\
                    synthetic:<inputs>x<classes>x<timesteps>@<rate>;\n\
@@ -139,6 +143,9 @@ fn apply_chip_flags(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(d) = args.get("domains") {
         cfg.soc.domains = d.parse().map_err(|_| Error::config("bad --domains"))?;
     }
+    if let Some(c) = args.get("chips") {
+        cfg.soc.chips = c.parse().map_err(|_| Error::config("bad --chips"))?;
+    }
     if let Some(spec) = args.get("fault-plan") {
         cfg.soc.fault_plan = fullerene_soc::noc::FaultPlan::parse(spec)?;
     }
@@ -160,6 +167,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "hidden",
         "max-neurons-per-core",
         "domains",
+        "chips",
         "fault-plan",
     ])
     .map_err(Error::Config)?;
@@ -244,6 +252,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "supply",
         "max-neurons-per-core",
         "domains",
+        "chips",
         "fault-plan",
     ])
     .map_err(Error::Config)?;

@@ -89,6 +89,21 @@ pub enum FaultKind {
         /// PRNG seed for the router choice.
         seed: u64,
     },
+    /// Permanently kill one off-chip level-3 router of a cluster ring
+    /// (the extended scale-out node attached to chip `chip`). Only
+    /// meaningful on a multi-chip [`crate::cluster::Cluster`]; a plain
+    /// on-chip fabric rejects it at validation.
+    RouterKillL3 {
+        /// Chip index whose L3 ring node dies.
+        chip: usize,
+    },
+    /// Throttle every off-chip (chip↔chip) ring link to one traversal
+    /// per `factor` L3 cycles (`factor == 1` is a no-op). Only
+    /// meaningful on a multi-chip cluster.
+    LinkThrottleL3 {
+        /// Period in L3 cycles between permitted traversals.
+        factor: u64,
+    },
 }
 
 /// One scheduled fault.
@@ -112,8 +127,9 @@ pub struct FaultPlan {
 pub const FAULT_SPEC_USAGE: &str = "fault plan spec: ';'-separated events \
      — kill-router:<node>@<when>; kill-link:<a>-<b>@<when>; \
      throttle-l1:<factor>@<when>; throttle-l2:<factor>@<when>; \
-     congest:<node>+<cycles>@<when>; kill-frac:<frac>#<seed>@<when> \
-     — with <when> a cycle number or t<timestep> (e.g. \
+     congest:<node>+<cycles>@<when>; kill-frac:<frac>#<seed>@<when>; \
+     kill-l3:<chip>@<when>; throttle-l3:<factor>@<when> (L3 events need \
+     --chips > 1) — with <when> a cycle number or t<timestep> (e.g. \
      \"kill-router:3@200;kill-frac:0.2#7@t4\")";
 
 impl FaultPlan {
@@ -157,6 +173,77 @@ impl FaultPlan {
         self
     }
 
+    /// Schedule an off-chip level-3 router kill (cluster rings only).
+    pub fn kill_l3(mut self, chip: usize, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::RouterKillL3 { chip } });
+        self
+    }
+
+    /// Schedule an off-chip ring-link throttle (cluster rings only).
+    pub fn throttle_l3(mut self, factor: u64, when: When) -> Self {
+        self.events.push(FaultEvent { when, kind: FaultKind::LinkThrottleL3 { factor } });
+        self
+    }
+
+    /// True when the plan schedules off-chip (L3) events.
+    pub fn has_l3_events(&self) -> bool {
+        self.events.iter().any(|ev| {
+            matches!(
+                ev.kind,
+                FaultKind::RouterKillL3 { .. } | FaultKind::LinkThrottleL3 { .. }
+            )
+        })
+    }
+
+    /// Split into the on-chip plan (armed identically on every shard
+    /// fabric of a cluster) and the L3-only plan (armed on the off-chip
+    /// ring). Event order within each half is preserved.
+    pub fn split_l3(&self) -> (FaultPlan, FaultPlan) {
+        let mut chip = FaultPlan::none();
+        let mut l3 = FaultPlan::none();
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::RouterKillL3 { .. } | FaultKind::LinkThrottleL3 { .. } => {
+                    l3.events.push(ev.clone());
+                }
+                _ => chip.events.push(ev.clone()),
+            }
+        }
+        (chip, l3)
+    }
+
+    /// Validate the L3 half of the plan against a cluster of `chips`
+    /// chips: killed ring nodes must exist, and any L3 event at all
+    /// requires more than one chip (a single chip has no off-chip ring).
+    pub fn validate_l3(&self, chips: usize) -> Result<()> {
+        for ev in &self.events {
+            match ev.kind {
+                FaultKind::RouterKillL3 { chip } => {
+                    if chips < 2 {
+                        return Err(Error::Config(
+                            "fault plan: kill-l3 requires a multi-chip cluster (--chips > 1)"
+                                .into(),
+                        ));
+                    }
+                    if chip >= chips {
+                        return Err(Error::Config(format!(
+                            "fault plan: kill-l3 chip {chip} out of range (cluster has \
+                             {chips} chips)"
+                        )));
+                    }
+                }
+                FaultKind::LinkThrottleL3 { .. } if chips < 2 => {
+                    return Err(Error::Config(
+                        "fault plan: throttle-l3 requires a multi-chip cluster (--chips > 1)"
+                            .into(),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
     /// Parse the CLI spec grammar ([`FAULT_SPEC_USAGE`]). The empty
     /// string parses to [`FaultPlan::none`].
     pub fn parse(spec: &str) -> Result<FaultPlan> {
@@ -195,6 +282,10 @@ impl FaultPlan {
                     frac: frac.trim().parse().map_err(|_| bad(ev))?,
                     seed: seed.trim().parse().map_err(|_| bad(ev))?,
                 }
+            } else if let Some(rest) = head.strip_prefix("kill-l3:") {
+                FaultKind::RouterKillL3 { chip: rest.trim().parse().map_err(|_| bad(ev))? }
+            } else if let Some(rest) = head.strip_prefix("throttle-l3:") {
+                FaultKind::LinkThrottleL3 { factor: rest.trim().parse().map_err(|_| bad(ev))? }
             } else {
                 return Err(bad(ev));
             };
@@ -221,6 +312,11 @@ impl FaultPlan {
                     return Err(Error::Config(format!(
                         "fault plan: kill fraction {frac} outside [0, 1]"
                     )));
+                }
+                FaultKind::LinkThrottleL3 { factor } if *factor == 0 => {
+                    return Err(Error::Config(
+                        "fault plan: throttle-l3 factor must be ≥ 1".into(),
+                    ));
                 }
                 _ => {}
             }
@@ -250,6 +346,13 @@ impl FaultPlan {
                             topo.name
                         )));
                     }
+                }
+                FaultKind::RouterKillL3 { .. } | FaultKind::LinkThrottleL3 { .. } => {
+                    return Err(Error::Config(format!(
+                        "fault plan: L3 events target the off-chip cluster ring, not the \
+                         on-chip fabric {} — they require a multi-chip cluster (--chips > 1)",
+                        topo.name
+                    )));
                 }
                 _ => {}
             }
@@ -361,6 +464,9 @@ impl FaultState {
                     picks.sort_unstable();
                     picks.into_iter().map(|i| Action::Kill(routers[i])).collect()
                 }
+                // Rejected by `validate` above: L3 events never reach an
+                // on-chip fabric (the cluster arms them on its ring).
+                FaultKind::RouterKillL3 { .. } | FaultKind::LinkThrottleL3 { .. } => Vec::new(),
             };
             for a in actions {
                 match ev.when {
@@ -523,6 +629,35 @@ mod tests {
             plan.events[5],
             FaultEvent { when: When::Timestep(3), kind: FaultKind::KillFrac { frac: 0.25, seed: 42 } }
         );
+    }
+
+    #[test]
+    fn l3_grammar_parses_splits_and_validates() {
+        let plan = FaultPlan::parse("kill-l3:1@t2; throttle-l3:4@100; kill-router:3@5").unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert!(plan.has_l3_events());
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { when: When::Timestep(2), kind: FaultKind::RouterKillL3 { chip: 1 } }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent { when: When::Cycle(100), kind: FaultKind::LinkThrottleL3 { factor: 4 } }
+        );
+        // The split keeps on-chip and L3 halves in plan order.
+        let (chip, l3) = plan.split_l3();
+        assert_eq!(chip.events.len(), 1);
+        assert_eq!(l3.events.len(), 2);
+        assert!(!chip.has_l3_events() && l3.has_l3_events());
+        // The on-chip fabric refuses L3 events outright.
+        let err = plan.validate(&Topology::fullerene()).unwrap_err().to_string();
+        assert!(err.contains("multi-chip"), "{err}");
+        // Cluster-side checks: chip index range and the chips > 1 rule.
+        l3.validate_l3(4).unwrap();
+        assert!(l3.validate_l3(1).is_err(), "L3 events need chips > 1");
+        let oob = FaultPlan::none().kill_l3(4, When::Cycle(1));
+        assert!(oob.validate_l3(4).is_err(), "chip 4 of a 4-chip ring");
+        assert!(FaultPlan::parse("throttle-l3:0@5").is_err(), "factor 0");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use super::pool::SocPool;
 use super::runtime::ServeRuntime;
 use super::session::Session;
+use crate::cluster::{Cluster, Engine};
 use crate::config::RunConfig;
 use crate::coordinator::{ExperimentConfig, ExperimentRunner, GoldenCheck};
 use crate::nn::NetworkDesc;
@@ -90,6 +91,14 @@ impl SocBuilder {
         self
     }
 
+    /// Chips in the serving engine (1 = a single chip; > 1 builds a
+    /// [`Cluster`] joined by the off-chip L3 router ring, and sessions
+    /// opened from this builder span all of them).
+    pub fn chips(mut self, chips: usize) -> Self {
+        self.soc.chips = chips;
+        self
+    }
+
     /// Physical neuromorphic cores.
     pub fn n_cores(mut self, n: usize) -> Self {
         self.soc.n_cores = n;
@@ -145,9 +154,11 @@ impl SocBuilder {
 
     /// Deterministic fabric fault schedule, armed on every chip built
     /// from this builder (resilience experiments; see
-    /// [`crate::noc::fault`]). [`SocBuilder::validate`] checks the plan
-    /// against the configured topology, so a kill naming a core or an
-    /// absent link fails at build time, not mid-session.
+    /// [`crate::noc::fault`]). [`SocBuilder::validate`] checks the
+    /// on-chip half of the plan against the configured topology and the
+    /// `kill-l3`/`throttle-l3` half against the configured cluster ring,
+    /// so a kill naming a core, an absent link or an out-of-range ring
+    /// node fails at build time, not mid-session.
     pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
         self.soc.fault_plan = plan;
         self
@@ -186,11 +197,11 @@ impl SocBuilder {
         self
     }
 
-    /// Warm chip reuse for serve runtimes built from this builder:
-    /// `true` (default) re-arms each worker's chip via
-    /// [`crate::soc::Soc::reset_for_session`] between sessions;
-    /// `false` builds a fresh chip per session (the cold baseline the
-    /// serve bench measures against).
+    /// Warm engine reuse for serve runtimes built from this builder:
+    /// `true` (default) re-arms each worker's engine via
+    /// [`Engine::reset_for_session`] between sessions; `false` builds a
+    /// fresh engine per session (the cold baseline the serve bench
+    /// measures against).
     pub fn keep_warm(mut self, on: bool) -> Self {
         self.keep_warm = on;
         self
@@ -244,6 +255,13 @@ impl SocBuilder {
                 s.supply_v
             )));
         }
+        if !(1..=16).contains(&s.chips) {
+            return Err(Error::Config(format!(
+                "chips {} outside 1..=16 (the extended L3 ring tops out at \
+                 16 scale-out nodes)",
+                s.chips
+            )));
+        }
         if self.workers == 0 {
             return Err(Error::Config("workers must be >= 1".into()));
         }
@@ -254,15 +272,21 @@ impl SocBuilder {
             )));
         }
         if !s.fault_plan.is_empty() {
-            // Resolve the configured topology so plan/topology mismatches
-            // (a kill naming a core, a cut naming an absent link) fail
-            // here instead of mid-session.
-            let topo = if s.domains == 1 {
-                Topology::fullerene()
-            } else {
-                Topology::multi_domain(s.domains)
-            };
-            s.fault_plan.validate(&topo)?;
+            // Split the plan: the on-chip half is checked against the
+            // configured topology (a kill naming a core, a cut naming an
+            // absent link fails here instead of mid-session); the
+            // kill-l3/throttle-l3 half against the actual cluster ring
+            // (out-of-range node, or any L3 event at chips == 1).
+            let (chip_plan, l3_plan) = s.fault_plan.split_l3();
+            if !chip_plan.is_empty() {
+                let topo = if s.domains == 1 {
+                    Topology::fullerene()
+                } else {
+                    Topology::multi_domain(s.domains)
+                };
+                chip_plan.validate(&topo)?;
+            }
+            l3_plan.validate_l3(s.chips)?;
         }
         Ok(())
     }
@@ -273,15 +297,34 @@ impl SocBuilder {
         Ok(self.soc.clone())
     }
 
-    /// Validate and assemble a chip running `net`.
+    /// Validate and assemble a chip running `net`. Refused when the
+    /// builder is configured for more than one chip — use
+    /// [`SocBuilder::build_cluster`] or [`SocBuilder::build_engine`].
     pub fn build_soc(&self, net: &NetworkDesc) -> Result<Soc> {
         self.validate()?;
         Soc::new(net.clone(), self.soc.clone())
     }
 
-    /// Validate, assemble a chip and open a streaming [`Session`] on it.
+    /// Validate and assemble a multi-chip [`Cluster`] running `net`
+    /// across `chips` shards over the off-chip L3 ring. Works at
+    /// `chips == 1` too (a degenerate cluster with no ring, bit-identical
+    /// to the plain chip).
+    pub fn build_cluster(&self, net: &NetworkDesc) -> Result<Cluster> {
+        self.validate()?;
+        Cluster::new(net.clone(), self.soc.clone())
+    }
+
+    /// Validate and assemble the serving [`Engine`] this builder's
+    /// `chips` setting asks for: the plain chip at 1, a cluster above.
+    pub fn build_engine(&self, net: &NetworkDesc) -> Result<Engine> {
+        self.validate()?;
+        Engine::new(net.clone(), self.soc.clone())
+    }
+
+    /// Validate, assemble the configured engine (chip or cluster) and
+    /// open a streaming [`Session`] on it.
     pub fn open_session(&self, net: &NetworkDesc, name: &str) -> Result<Session> {
-        Ok(Session::open(self.build_soc(net)?, name))
+        Ok(Session::open_engine(self.build_engine(net)?, name))
     }
 
     /// Validate and build a serving pool over `net` with this builder's
@@ -363,6 +406,9 @@ mod tests {
             .is_err());
         assert!(SocBuilder::new().queue_depth(1).validate().is_ok());
         assert!(SocBuilder::new().keep_warm(false).validate().is_ok());
+        assert!(SocBuilder::new().chips(0).validate().is_err());
+        assert!(SocBuilder::new().chips(17).validate().is_err());
+        assert!(SocBuilder::new().chips(16).validate().is_ok());
         assert!(SocBuilder::new().validate().is_ok());
     }
 
@@ -387,5 +433,36 @@ mod tests {
             .fault_plan(FaultPlan::none().kill_router(r, When::Cycle(1)))
             .validate()
             .is_ok());
+    }
+
+    #[test]
+    fn l3_fault_events_validate_against_the_configured_ring() {
+        use crate::noc::When;
+        // L3 events need a cluster: rejected at chips == 1 (the default)…
+        let plan = FaultPlan::none().kill_l3(1, When::Timestep(2));
+        let err = SocBuilder::new()
+            .fault_plan(plan.clone())
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("multi-chip"), "{err}");
+        // …accepted on a ring that has the named node…
+        assert!(SocBuilder::new().chips(4).fault_plan(plan).validate().is_ok());
+        // …and range-checked against the actual ring size.
+        let oob = FaultPlan::none().kill_l3(4, When::Cycle(10));
+        let err = SocBuilder::new()
+            .chips(4)
+            .fault_plan(oob)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // Mixed plans validate each half against its own fabric: the
+        // on-chip kill against the topology, the throttle against the ring.
+        let mixed = FaultPlan::none()
+            .kill_router(3, When::Cycle(5))
+            .throttle_l3(4, When::Cycle(100));
+        assert!(SocBuilder::new().chips(2).fault_plan(mixed.clone()).validate().is_ok());
+        assert!(SocBuilder::new().fault_plan(mixed).validate().is_err());
     }
 }

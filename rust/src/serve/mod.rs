@@ -6,7 +6,10 @@
 //!
 //! - [`SocBuilder`] — fluent construction + **the** single validation
 //!   choke point for chip/run/serving configuration (JSON, CLI flags
-//!   and fluent calls all funnel through it);
+//!   and fluent calls all funnel through it), including the cluster
+//!   surface: `chips > 1` makes every engine it builds a
+//!   [`crate::cluster::Cluster`] spanning the off-chip L3 ring
+//!   ([`SocBuilder::build_cluster`] / [`SocBuilder::build_engine`]);
 //! - [`Workload`] — pluggable sample sources ([`SyntheticStream`],
 //!   [`EventReplay`], [`TrafficWorkload`], or anything downstream
 //!   implements), parsed from spec strings by [`workload_from_spec`];
@@ -14,18 +17,18 @@
 //!   incremental [`Session::snapshot`] reports, per-session
 //!   energy/latency ledgers and a consuming [`Session::close`] (the
 //!   typestate makes "forgot `finish_report`" unrepresentable);
-//! - [`ServeRuntime`] — the serving engine: persistent worker threads
+//! - [`ServeRuntime`] — the serving runtime: persistent worker threads
 //!   pulling from a bounded submission queue ([`ServeRuntime::submit`]
 //!   blocks on backpressure, [`ServeRuntime::try_submit`] surfaces
-//!   [`crate::Error::QueueFull`]), **warm chip reuse** via
-//!   [`crate::soc::Soc::reset_for_session`] (bit-identical to fresh
-//!   chips), per-[`SessionTicket`] waits, an [`ServeRuntime::outcomes`]
+//!   [`crate::Error::QueueFull`]), **warm engine reuse** via
+//!   [`crate::cluster::Engine::reset_for_session`] (bit-identical to
+//!   fresh engines — one chip each, or whole clusters at `chips > 1`),
+//!   per-[`SessionTicket`] waits, an [`ServeRuntime::outcomes`]
 //!   iterator yielding results as sessions finish, and per-session
 //!   failure isolation;
-//! - [`SocPool`] — the batch-compatibility wrapper over the runtime
-//!   (`serve` submits everything and waits; `serve_sequential` is the
-//!   fresh-chip sequential reference path the runtime's bit-identity
-//!   guarantee is stated against).
+//! - [`SocPool`] — the sequential reference pool (`serve_sequential`
+//!   runs a fresh engine per session on the calling thread; the
+//!   runtime's bit-identity guarantee is stated against it).
 //!
 //! The batch layer ([`crate::coordinator::ExperimentRunner`]) is rebuilt
 //! on top of these primitives.

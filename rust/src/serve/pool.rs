@@ -1,25 +1,29 @@
-//! Multi-session serving pool — the **batch-compatibility** surface over
-//! the persistent [`ServeRuntime`](super::runtime::ServeRuntime).
+//! Serving plumbing shared by the sequential reference path and the
+//! persistent [`ServeRuntime`](super::runtime::ServeRuntime), plus
+//! [`SocPool`] itself — the one-thread **reference pool**.
 //!
-//! Historically `SocPool::serve` was the crate's serving entry point: all
-//! [`SessionSpec`]s up front, static `i % workers` round-robin buckets,
-//! threads spawned per call and nothing returned until the last session
-//! drained. That dispatch now lives in the runtime (dynamic pull-based
-//! scheduling, warm chip reuse, streaming submission); `SocPool::serve`
-//! remains as a thin wrapper that builds a runtime, submits every spec
-//! and waits for the aggregate, preserving the old all-or-nothing error
-//! contract. [`SocPool::serve_sequential`] is unchanged: the one-thread,
-//! fresh-chip-per-session **reference path** that the runtime's
+//! Historically `SocPool::serve` was the crate's concurrent serving
+//! entry point: all [`SessionSpec`]s up front, static `i % workers`
+//! round-robin buckets, threads spawned per call and nothing returned
+//! until the last session drained. That dispatch lived on as a
+//! deprecated runtime-backed wrapper for one release and is now
+//! **removed** — concurrent serving goes through the runtime
+//! (streaming submission, warm engine reuse, per-session failure
+//! isolation). What stays here is everything the runtime and the tests
+//! still share: the spec/outcome types, [`run_session_on`] (the single
+//! session-execution code path — what makes runtime and sequential
+//! serving bit-identical), and [`SocPool::serve_sequential`], the
+//! fresh-engine-per-session **reference path** the runtime's
 //! determinism guarantee is stated against (merged reports fold in
-//! submission order, so the two are bit-identical).
+//! submission order, so the two match down to `f64::to_bits`).
 
-use super::runtime::ServeRuntime;
 use super::session::{DegradationStats, Session, SessionStats};
 use super::workload::Workload;
+use crate::cluster::Engine;
 use crate::coordinator::GoldenCheck;
 use crate::energy::{AreaModel, ChipReport};
 use crate::nn::NetworkDesc;
-use crate::soc::{Soc, SocConfig};
+use crate::soc::SocConfig;
 use crate::{Error, Result};
 
 /// One queued session: a label plus the sample stream to serve.
@@ -81,8 +85,7 @@ pub struct SessionFailure {
     pub error: Error,
 }
 
-/// Aggregate of one serve call ([`SocPool::serve`],
-/// [`SocPool::serve_sequential`] or
+/// Aggregate of one serve call ([`SocPool::serve_sequential`] or
 /// [`ServeRuntime::finish`](super::runtime::ServeRuntime::finish)).
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
@@ -120,22 +123,23 @@ pub(crate) fn check_geometry(
     Ok(())
 }
 
-/// Serve one session to exhaustion on the given chip. This is the single
-/// session-execution code path shared by [`SocPool::serve_sequential`]
-/// and the [`ServeRuntime`](super::runtime::ServeRuntime) workers, which
-/// is what makes the two bit-identical. Returns the chip alongside the
-/// outcome so warm-serving callers can re-arm it; error paths drop the
-/// chip (a failed session must never leak state into a later one).
+/// Serve one session to exhaustion on the given engine (one chip or a
+/// cluster). This is the single session-execution code path shared by
+/// [`SocPool::serve_sequential`] and the
+/// [`ServeRuntime`](super::runtime::ServeRuntime) workers, which is what
+/// makes the two bit-identical. Returns the engine alongside the outcome
+/// so warm-serving callers can re-arm it; error paths drop the engine (a
+/// failed session must never leak state into a later one).
 pub(crate) fn run_session_on(
-    soc: Soc,
+    engine: Engine,
     net: &NetworkDesc,
     check: GoldenCheck,
     name: &str,
     workload: &mut dyn Workload,
     queue_wait_s: f64,
-) -> Result<(SessionOutcome, Soc)> {
+) -> Result<(SessionOutcome, Engine)> {
     check_geometry(net, name, workload)?;
-    let mut session = Session::open(soc, name);
+    let mut session = Session::open_engine(engine, name);
     let use_ref = matches!(check, GoldenCheck::Reference);
     let mut mismatches = 0u64;
     let mut checked = 0u64;
@@ -152,7 +156,7 @@ pub(crate) fn run_session_on(
     }
     let noc = session.noc_stats();
     let degradation = session.degradation();
-    let (closed, soc) = session.close_reuse();
+    let (closed, engine) = session.close_reuse();
     Ok((
         SessionOutcome {
             name: name.to_string(),
@@ -164,7 +168,7 @@ pub(crate) fn run_session_on(
             checked,
             queue_wait_s,
         },
-        soc,
+        engine,
     ))
 }
 
@@ -195,7 +199,10 @@ pub(crate) fn merge_outcomes(
     })
 }
 
-/// A pool of simulated chips serving concurrent sessions.
+/// A pool of serving engines: the sequential reference path
+/// ([`SocPool::serve_sequential`]) that the concurrent
+/// [`ServeRuntime`](super::runtime::ServeRuntime) is proven
+/// bit-identical against.
 pub struct SocPool {
     net: NetworkDesc,
     config: SocConfig,
@@ -204,8 +211,9 @@ pub struct SocPool {
 }
 
 impl SocPool {
-    /// A pool over `net` at `config`, dispatching across `workers`
-    /// threads. `check` may be [`GoldenCheck::None`] or
+    /// A pool over `net` at `config`. `workers` is retained as the
+    /// concurrency hint callers pass on when they build a runtime from
+    /// this pool's parameters. `check` may be [`GoldenCheck::None`] or
     /// [`GoldenCheck::Reference`]; the XLA golden model holds per-process
     /// runtime state and cannot back concurrent sessions.
     pub fn new(
@@ -243,53 +251,21 @@ impl SocPool {
         &self.net
     }
 
-    /// Serve every spec concurrently and return results in submission
-    /// order — a batch-compatibility wrapper: builds a
-    /// [`ServeRuntime`](super::runtime::ServeRuntime) sized to the spec
-    /// list, submits everything and waits for the aggregate. Any session
-    /// failure is converted back into a whole-call `Err` (the historical
-    /// contract); use the runtime directly for streaming submission,
-    /// backpressure and per-session failure isolation.
-    #[deprecated(
-        since = "0.3.0",
-        note = "batch dispatch; prefer serve::ServeRuntime (streaming \
-                submission, warm chip reuse, per-session failure isolation)"
-    )]
-    pub fn serve(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
-        if specs.is_empty() {
-            return Err(Error::Config("no sessions to serve".into()));
-        }
-        let mut rt = ServeRuntime::new(
-            self.net.clone(),
-            self.config.clone(),
-            self.workers.min(specs.len()),
-            self.check,
-            specs.len(),
-            true,
-        )?;
-        for spec in specs {
-            rt.submit(spec)?;
-        }
-        let out = rt.finish()?;
-        if let Some(f) = out.failures.first() {
-            return Err(f.error.clone());
-        }
-        Ok(out)
-    }
-
     /// Serve every spec one after another on the calling thread, a fresh
-    /// chip per session — the reference path for the bit-identity
+    /// engine per session — the reference path for the bit-identity
     /// guarantee (the runtime's merged report must match this one down
-    /// to `f64::to_bits`).
+    /// to `f64::to_bits`). For concurrent dispatch, build a
+    /// [`ServeRuntime`](super::runtime::ServeRuntime) (the removed
+    /// `SocPool::serve` wrapper used to do exactly that).
     pub fn serve_sequential(&self, specs: Vec<SessionSpec>) -> Result<ServeOutcome> {
         if specs.is_empty() {
             return Err(Error::Config("no sessions to serve".into()));
         }
         let mut sessions = Vec::with_capacity(specs.len());
         for mut spec in specs {
-            let soc = Soc::new(self.net.clone(), self.config.clone())?;
-            let (outcome, _soc) = run_session_on(
-                soc,
+            let engine = Engine::new(self.net.clone(), self.config.clone())?;
+            let (outcome, _engine) = run_session_on(
+                engine,
                 &self.net,
                 self.check,
                 &spec.name,

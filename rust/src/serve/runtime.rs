@@ -4,20 +4,22 @@
 //! The paper's chip is an always-on edge device: sessions arrive
 //! continuously, lengths are skewed, and the processor is never torn
 //! down between users. [`ServeRuntime`] serves the simulator the same
-//! way, replacing the batch `SocPool::serve` dispatch (all specs up
-//! front, static `i % workers` buckets, a fresh chip per session, one
-//! aggregate at the end):
+//! way, replacing the removed batch `SocPool::serve` dispatch (all
+//! specs up front, static `i % workers` buckets, a fresh chip per
+//! session, one aggregate at the end):
 //!
 //! - **Persistent workers, pull-based dispatch.** N worker threads live
 //!   for the runtime's lifetime and pull from one shared bounded queue,
 //!   so a long session occupies exactly one worker while its siblings
 //!   drain every short session behind it — no head-of-line blocking
 //!   from static buckets (pinned in `tests/serving_api.rs`).
-//! - **Warm chip reuse.** Each worker keeps its [`Soc`] between
-//!   sessions and re-arms it via [`Soc::reset_for_session`] instead of
-//!   paying `Soc::new` (mapping planning, synapse tables, hop-table
-//!   precompute) per session. Warm reuse is proven **bit-identical** to
-//!   fresh chips — simulated physics cannot tell the difference.
+//! - **Warm engine reuse.** Each worker keeps its serving
+//!   [`Engine`] — one chip, or a whole cluster when the runtime was
+//!   built with `chips > 1` — between sessions and re-arms it via
+//!   [`Engine::reset_for_session`] instead of paying a fresh build
+//!   (mapping planning, synapse tables, hop-table precompute, cluster
+//!   partitioning) per session. Warm reuse is proven **bit-identical**
+//!   to fresh engines — simulated physics cannot tell the difference.
 //! - **Streaming submission.** [`ServeRuntime::submit`] blocks while
 //!   the bounded queue is full; [`ServeRuntime::try_submit`] returns
 //!   [`Error::QueueFull`] instead (backpressure the caller can act on).
@@ -38,9 +40,10 @@ use super::pool::{
     check_geometry, merge_outcomes, run_session_on, ServeOutcome, SessionFailure,
     SessionOutcome, SessionSpec,
 };
+use crate::cluster::Engine;
 use crate::coordinator::GoldenCheck;
 use crate::nn::NetworkDesc;
-use crate::soc::{Soc, SocConfig};
+use crate::soc::SocConfig;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -172,9 +175,10 @@ pub struct ServeRuntime {
 impl ServeRuntime {
     /// Spawn a runtime: `workers` persistent threads over a bounded
     /// submission queue of `queue_depth` entries, serving sessions on
-    /// `net` at `config`. `keep_warm` re-arms each worker's chip via
-    /// [`Soc::reset_for_session`] between sessions instead of building a
-    /// new one. `check` may be [`GoldenCheck::None`] or
+    /// `net` at `config` (`config.chips > 1` gives every worker a whole
+    /// cluster). `keep_warm` re-arms each worker's engine via
+    /// [`Engine::reset_for_session`] between sessions instead of building
+    /// a new one. `check` may be [`GoldenCheck::None`] or
     /// [`GoldenCheck::Reference`] (the XLA golden model holds
     /// per-process state and cannot back concurrent sessions).
     pub fn new(
@@ -249,7 +253,7 @@ impl ServeRuntime {
         self.shared.queue_depth
     }
 
-    /// Whether workers re-arm their chip between sessions.
+    /// Whether workers re-arm their engine between sessions.
     pub fn keep_warm(&self) -> bool {
         self.shared.keep_warm
     }
@@ -422,11 +426,11 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// The persistent worker: pull a session, arm a chip (warm when
+/// The persistent worker: pull a session, arm an engine (warm when
 /// possible), serve it, resolve its ticket, repeat until the queue is
 /// closed **and** drained.
 fn worker_loop(shared: &Arc<Shared>, wid: usize) {
-    let mut warm: Option<Soc> = None;
+    let mut warm: Option<Engine> = None;
     loop {
         let pending = {
             let mut q = shared
@@ -463,30 +467,30 @@ fn worker_loop(shared: &Arc<Shared>, wid: usize) {
 /// Serve one pulled session with failure isolation: workload errors and
 /// panics resolve *this* session's outcome (panics attributed to the
 /// session name/index — never a bare "worker thread panicked") and
-/// discard the worker's chip so no partial state survives into the next
-/// session.
+/// discard the worker's engine so no partial state survives into the
+/// next session.
 fn serve_one(
     shared: &Arc<Shared>,
-    warm: &mut Option<Soc>,
+    warm: &mut Option<Engine>,
     p: &mut Pending,
     queue_wait_s: f64,
 ) -> Result<SessionOutcome> {
     let name = p.spec.name.clone();
     let index = p.index;
-    // Geometry precheck BEFORE arming a chip: a misconfigured submission
-    // must not cost the worker its pristine warm chip (the discard rule
-    // below is for sessions that actually ran on it).
+    // Geometry precheck BEFORE arming an engine: a misconfigured
+    // submission must not cost the worker its pristine warm engine (the
+    // discard rule below is for sessions that actually ran on it).
     check_geometry(&shared.net, &name, &*p.spec.workload)?;
     let caught = catch_unwind(AssertUnwindSafe(|| -> Result<SessionOutcome> {
-        let soc = match warm.take() {
-            Some(mut s) => {
-                s.reset_for_session();
-                s
+        let engine = match warm.take() {
+            Some(mut e) => {
+                e.reset_for_session();
+                e
             }
-            None => Soc::new(shared.net.clone(), shared.config.clone())?,
+            None => Engine::new(shared.net.clone(), shared.config.clone())?,
         };
-        let (outcome, soc) = run_session_on(
-            soc,
+        let (outcome, engine) = run_session_on(
+            engine,
             &shared.net,
             shared.check,
             &name,
@@ -494,14 +498,14 @@ fn serve_one(
             queue_wait_s,
         )?;
         if shared.keep_warm {
-            *warm = Some(soc);
+            *warm = Some(engine);
         }
         Ok(outcome)
     }));
     match caught {
         Ok(r) => r,
         Err(payload) => {
-            *warm = None; // a panicking session must not leave a chip behind
+            *warm = None; // a panicking session must not leave an engine behind
             Err(Error::Soc(format!(
                 "session '{name}' (#{index}) panicked: {}",
                 panic_message(&*payload)

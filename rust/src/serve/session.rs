@@ -1,6 +1,7 @@
-//! Streaming inference session over one simulated chip.
+//! Streaming inference session over one serving engine — a single
+//! simulated chip or a whole multi-chip cluster.
 //!
-//! A [`Session`] owns a [`Soc`] for its lifetime and replaces the
+//! A [`Session`] owns an [`Engine`] for its lifetime and replaces the
 //! batch-only `run_sample … finish_report` dance with a typestate-safe
 //! stream: [`Session::push`] runs one sample, [`Session::snapshot`]
 //! assembles an incremental [`ChipReport`] at any point without
@@ -9,6 +10,7 @@
 //! compile error, not a silent accounting bug. Per-sample latency is
 //! ledgered so sessions expose p50/p99 serving percentiles.
 
+use crate::cluster::Engine;
 use crate::datasets::Sample;
 use crate::energy::ChipReport;
 use crate::soc::{SampleResult, Soc};
@@ -83,10 +85,11 @@ pub struct SessionReport {
 }
 
 /// A live streaming session. Create one via
-/// [`crate::serve::SocBuilder::open_session`] (or [`Session::open`] with
-/// a hand-assembled chip), push samples, close for the report.
+/// [`crate::serve::SocBuilder::open_session`] (or [`Session::open`] /
+/// [`Session::open_engine`] with a hand-assembled engine), push samples,
+/// close for the report.
 pub struct Session {
-    soc: Soc,
+    engine: Engine,
     name: String,
     latencies: Vec<u64>,
     cycles: u64,
@@ -94,11 +97,19 @@ pub struct Session {
 }
 
 impl Session {
-    /// Open a session named `name` over an assembled chip. The chip's
-    /// accounting window becomes the session's energy/latency ledger.
+    /// Open a session named `name` over an assembled single chip. The
+    /// chip's accounting window becomes the session's energy/latency
+    /// ledger. (Convenience wrapper over [`Session::open_engine`].)
     pub fn open(soc: Soc, name: &str) -> Session {
+        Session::open_engine(Engine::Chip(Box::new(soc)), name)
+    }
+
+    /// Open a session named `name` over any serving engine — one chip or
+    /// a cluster. The engine's accounting window becomes the session's
+    /// energy/latency ledger.
+    pub fn open_engine(engine: Engine, name: &str) -> Session {
         Session {
-            soc,
+            engine,
             name: name.to_string(),
             latencies: Vec::new(),
             cycles: 0,
@@ -111,9 +122,15 @@ impl Session {
         &self.name
     }
 
-    /// The underlying chip (read-only; mapping/network introspection).
-    pub fn soc(&self) -> &Soc {
-        &self.soc
+    /// The underlying engine (read-only; mapping/network introspection).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The underlying chip when the session runs on exactly one (`None`
+    /// for multi-chip sessions — use [`Session::engine`] there).
+    pub fn soc(&self) -> Option<&Soc> {
+        self.engine.as_soc()
     }
 
     /// NoC fabric statistics for this session's accounting window
@@ -122,16 +139,17 @@ impl Session {
     /// per push costs nothing — and the session chip keeps no per-flit
     /// trace, so long-lived sessions hold only this ledger.
     pub fn noc_stats(&self) -> crate::noc::SimStats {
-        self.soc.noc_stats()
+        self.engine.noc_stats()
     }
 
     /// Fabric-degradation statistics for this session's window (all zero
-    /// with `armed == false` on a chip without a fault plan).
+    /// with `armed == false` on a chip without a fault plan). On a
+    /// cluster, counters fold the per-shard NoCs *and* the L3 ring.
     pub fn degradation(&self) -> DegradationStats {
-        let h = self.soc.fabric_health();
+        let h = self.engine.fabric_health();
         DegradationStats {
             armed: h.armed,
-            delivered: self.soc.noc_stats().delivered,
+            delivered: self.engine.noc_stats().delivered,
             dropped: h.dropped,
             rerouted_hops: h.rerouted_hops,
             dead_routers: h.dead_routers,
@@ -152,7 +170,7 @@ impl Session {
     }
 
     fn push_inner(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
-        let r = self.soc.run_sample(sample, label_known)?;
+        let r = self.engine.run_sample(sample, label_known)?;
         self.latencies.push(r.cycles);
         self.cycles += r.cycles;
         self.sops += r.sops;
@@ -164,14 +182,14 @@ impl Session {
     /// accounting window, and [`Session::close`] right after a snapshot
     /// returns bit-identical numbers.
     pub fn snapshot(&self) -> ChipReport {
-        self.soc.snapshot_report(&self.name)
+        self.engine.snapshot_report(&self.name)
     }
 
     /// Serving statistics so far.
     pub fn stats(&self) -> SessionStats {
         let mut sorted = self.latencies.clone();
         sorted.sort_unstable();
-        let f = self.soc.config.f_core_hz;
+        let f = self.engine.config().f_core_hz;
         let to_ms = |cycles: u64| cycles as f64 / f * 1e3;
         SessionStats {
             samples: self.latencies.len() as u64,
@@ -191,17 +209,17 @@ impl Session {
         self.close_reuse().0
     }
 
-    /// Close the session but hand the chip back instead of dropping it —
-    /// the warm-serving path: [`crate::serve::ServeRuntime`] re-arms the
-    /// returned `Soc` via [`Soc::reset_for_session`] for the next session
-    /// rather than paying `Soc::new` again. The report is exactly what
-    /// [`Session::close`] would have produced (`close` is this plus a
-    /// drop).
-    pub fn close_reuse(self) -> (SessionReport, Soc) {
+    /// Close the session but hand the engine back instead of dropping it
+    /// — the warm-serving path: [`crate::serve::ServeRuntime`] re-arms
+    /// the returned [`Engine`] via [`Engine::reset_for_session`] for the
+    /// next session rather than paying a fresh build. The report is
+    /// exactly what [`Session::close`] would have produced (`close` is
+    /// this plus a drop).
+    pub fn close_reuse(self) -> (SessionReport, Engine) {
         let stats = self.stats();
-        let mut soc = self.soc;
-        let report = soc.finish_report(&self.name);
-        (SessionReport { report, stats }, soc)
+        let mut engine = self.engine;
+        let report = engine.finish_report(&self.name);
+        (SessionReport { report, stats }, engine)
     }
 }
 

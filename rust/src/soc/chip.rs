@@ -73,6 +73,12 @@ pub struct SocConfig {
     /// default empty plan is provably free: the chip is bit-identical to
     /// one built before fault injection existed.
     pub fault_plan: FaultPlan,
+    /// Chips in the simulated cluster (1 = the paper's single device).
+    /// A multi-chip config cannot assemble a bare [`Soc`] — it builds a
+    /// [`crate::cluster::Cluster`] (one `Soc` per network shard plus the
+    /// off-chip L3 router ring joining them) through
+    /// [`crate::serve::SocBuilder`] or the serving runtime.
+    pub chips: usize,
 }
 
 impl Default for SocConfig {
@@ -88,6 +94,7 @@ impl Default for SocConfig {
             use_noc: true,
             drive_cpu: true,
             fault_plan: FaultPlan::none(),
+            chips: 1,
         }
     }
 }
@@ -202,6 +209,18 @@ pub struct Soc {
     route_scratch: Vec<Vec<u32>>,
     /// (source core, axon) pairs firing out of the current layer.
     firing_scratch: Vec<(usize, u32)>,
+    // --- in-progress sample accounting -------------------------------------
+    // Valid between `sample_begin` and `sample_end`; written by the
+    // decomposed sample path so `run_sample` and the cluster's
+    // timestep-interleaved driver share one accounting implementation.
+    /// Cycles consumed by the in-progress sample so far.
+    cur_cycles: u64,
+    /// Synapse operations performed by the in-progress sample so far.
+    cur_sops: u64,
+    /// `cores_ticked` at `sample_begin` (per-sample delta baseline).
+    cur_ticked_before: u64,
+    /// `spikes_routed` at `sample_begin` (per-sample delta baseline).
+    cur_routed_before: u64,
 }
 
 impl Soc {
@@ -217,6 +236,16 @@ impl Soc {
         }
         if config.domains == 0 {
             return Err(Error::Soc("domains must be >= 1".into()));
+        }
+        if config.chips == 0 {
+            return Err(Error::Soc("chips must be >= 1".into()));
+        }
+        if config.chips > 1 {
+            return Err(Error::Soc(format!(
+                "config asks for {} chips: a bare Soc is a single chip — build a \
+                 cluster instead (serve::SocBuilder / --chips)",
+                config.chips
+            )));
         }
         // One plain fullerene domain for the paper's chip; the simulated
         // hierarchical fabric (L1 + L2 ring) for scale-up systems.
@@ -312,6 +341,10 @@ impl Soc {
             layer_dests,
             route_scratch: vec![Vec::new(); config.n_cores],
             firing_scratch: Vec::new(),
+            cur_cycles: 0,
+            cur_sops: 0,
+            cur_ticked_before: 0,
+            cur_routed_before: 0,
             net,
             mapping,
             cores,
@@ -357,6 +390,20 @@ impl Soc {
     /// (all zero with `armed == false` when no fault plan is configured).
     pub fn fabric_health(&self) -> FabricHealth {
         self.noc.fabric_health()
+    }
+
+    /// Spike flits injected into the on-chip fabric in the current
+    /// accounting window (one per destination core, matching the NoC's
+    /// per-copy broadcast semantics). Cluster-side conservation input.
+    pub(crate) fn spikes_routed_window(&self) -> u64 {
+        self.spikes_routed
+    }
+
+    /// Flits currently in flight inside the on-chip fabric — zero at
+    /// every timestep boundary on a healthy chip. Cluster-side
+    /// conservation input.
+    pub(crate) fn noc_in_flight(&self) -> u64 {
+        self.noc.in_flight()
     }
 
     /// Boot the control CPU: run the firmware protocol and consume the
@@ -519,8 +566,11 @@ impl Soc {
         Ok(cycles)
     }
 
-    /// Run one sample through the chip.
-    pub fn run_sample(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+    /// Begin one inference: boot if needed, clear the dynamic neuron
+    /// state through the MPDMA path and zero the per-sample accounting
+    /// scratch. First third of [`Soc::run_sample`], split out so the
+    /// cluster layer can interleave timesteps across shard chips.
+    pub(crate) fn sample_begin(&mut self) -> Result<()> {
         if !self.booted {
             self.boot()?;
         }
@@ -533,81 +583,122 @@ impl Soc {
         }
         let mpdma_cycles = self.mpdma.burst(mp_words, &mut self.bus, &mut self.ledger);
         self.outbufs.clear(0);
-        let mut sample_cycles = mpdma_cycles;
-        let mut sample_sops = 0u64;
-        let ticked_before = self.cores_ticked;
-        let routed_before = self.spikes_routed;
+        self.cur_cycles = mpdma_cycles;
+        self.cur_sops = 0;
+        self.cur_ticked_before = self.cores_ticked;
+        self.cur_routed_before = self.spikes_routed;
+        Ok(())
+    }
 
-        for t in 0..self.net.timesteps {
-            self.noc.set_timestep(t as u32);
-            // --- input injection (IDMA path) ------------------------------
-            let spikes_in = sample.spikes_at(t as u16);
-            let mut dma_cycles = 0;
-            if !spikes_in.is_empty() {
-                let words = spikes_in.len().div_ceil(2) as u64;
-                dma_cycles = self.idma.burst(words, &mut self.bus, &mut self.ledger);
-                for &c in &self.mapping.layer_cores[0] {
-                    let idx = self.core_index[c];
-                    self.cores[idx].stage_input_spikes(&spikes_in);
-                    self.cores[idx].charge_spike_writes(spikes_in.len());
-                }
+    /// Execute timestep `t` of the in-progress sample: inject `spikes_in`
+    /// into the layer-0 cores (IDMA path), tick every staged layer, route
+    /// inter-layer spikes and service the CPU timestep window. Middle
+    /// third of [`Soc::run_sample`]; returns the timestep's wall cycles.
+    ///
+    /// `egress` is the cluster hook: when `Some`, final-layer spikes are
+    /// pushed there (as layer-local neuron ids — exactly the next
+    /// shard's input axon space) instead of landing in output buffer 0,
+    /// because a non-terminal shard's output leaves the chip over the
+    /// off-chip L3 fabric rather than through the readout path. `None`
+    /// reproduces the single-chip semantics bit for bit.
+    pub(crate) fn sample_timestep(
+        &mut self,
+        t: usize,
+        spikes_in: &[u32],
+        mut egress: Option<&mut Vec<u32>>,
+    ) -> Result<u64> {
+        self.noc.set_timestep(t as u32);
+        // --- input injection (IDMA path) ------------------------------
+        let mut dma_cycles = 0;
+        if !spikes_in.is_empty() {
+            let words = spikes_in.len().div_ceil(2) as u64;
+            dma_cycles = self.idma.burst(words, &mut self.bus, &mut self.ledger);
+            for &c in &self.mapping.layer_cores[0] {
+                let idx = self.core_index[c];
+                self.cores[idx].stage_input_spikes(spikes_in);
+                self.cores[idx].charge_spike_writes(spikes_in.len());
             }
-            // --- layer-by-layer execution ----------------------------------
-            // Activity-proportional scheduling: only cores with pending
-            // spike words are ticked. An un-staged (or gated) core is
-            // skipped outright — identical function (partial MP updates
-            // mean untouched neurons never change or fire) at zero active
-            // cycles, instead of paying a full zero-word cache scan per
-            // idle core per timestep.
-            let mut ts_cycles = dma_cycles;
-            for li in 0..self.net.layers.len() {
-                let mut layer_max_cycles = 0u64;
-                let mut firing = std::mem::take(&mut self.firing_scratch);
-                firing.clear();
-                let last = li == self.net.layers.len() - 1;
-                for &pc in &self.mapping.layer_cores[li] {
-                    let idx = self.core_index[pc];
-                    if !self.cores[idx].pending_input() || !self.cores[idx].regs().enabled {
-                        continue;
-                    }
-                    let placement_off = self
-                        .mapping
-                        .placement_of(pc)
-                        .expect("placed core")
-                        .neuron_offset;
-                    let out = self.cores[idx].tick_timestep();
-                    self.cores_ticked += 1;
-                    layer_max_cycles = layer_max_cycles.max(out.stats.cycles);
-                    sample_sops += out.stats.pipeline.sops;
-                    for &n in &out.spikes {
-                        let global = placement_off as u32 + n;
-                        if last {
-                            self.outbufs
-                                .record_spike(0, global as usize, &mut self.ledger)?;
-                        } else {
-                            firing.push((pc, global));
-                        }
-                    }
-                }
-                ts_cycles += layer_max_cycles;
-                let routed = if !last && !firing.is_empty() {
-                    self.route_spikes(li, &firing)
-                } else {
-                    Ok(0)
-                };
-                self.firing_scratch = firing;
-                ts_cycles += routed?;
-            }
-            // --- CPU timestep service --------------------------------------
-            self.cpu.lsu.mmio.npu_status =
-                (self.cpu.lsu.mmio.npu_status & 0xFFFF) | ((t as u32) << 16) | 1;
-            self.run_cpu_window(ts_cycles.max(1), Some(WakeEvent::TimestepSwitch))?;
-            sample_cycles += ts_cycles;
         }
+        // --- layer-by-layer execution ----------------------------------
+        // Activity-proportional scheduling: only cores with pending
+        // spike words are ticked. An un-staged (or gated) core is
+        // skipped outright — identical function (partial MP updates
+        // mean untouched neurons never change or fire) at zero active
+        // cycles, instead of paying a full zero-word cache scan per
+        // idle core per timestep.
+        let mut ts_cycles = dma_cycles;
+        for li in 0..self.net.layers.len() {
+            let mut layer_max_cycles = 0u64;
+            let mut firing = std::mem::take(&mut self.firing_scratch);
+            firing.clear();
+            let last = li == self.net.layers.len() - 1;
+            for &pc in &self.mapping.layer_cores[li] {
+                let idx = self.core_index[pc];
+                if !self.cores[idx].pending_input() || !self.cores[idx].regs().enabled {
+                    continue;
+                }
+                let placement_off = self
+                    .mapping
+                    .placement_of(pc)
+                    .expect("placed core")
+                    .neuron_offset;
+                let out = self.cores[idx].tick_timestep();
+                self.cores_ticked += 1;
+                layer_max_cycles = layer_max_cycles.max(out.stats.cycles);
+                self.cur_sops += out.stats.pipeline.sops;
+                for &n in &out.spikes {
+                    let global = placement_off as u32 + n;
+                    if !last {
+                        firing.push((pc, global));
+                    } else if let Some(out_of_chip) = egress.as_deref_mut() {
+                        out_of_chip.push(global);
+                    } else {
+                        self.outbufs
+                            .record_spike(0, global as usize, &mut self.ledger)?;
+                    }
+                }
+            }
+            ts_cycles += layer_max_cycles;
+            let routed = if !last && !firing.is_empty() {
+                self.route_spikes(li, &firing)
+            } else {
+                Ok(0)
+            };
+            self.firing_scratch = firing;
+            ts_cycles += routed?;
+        }
+        // --- CPU timestep service --------------------------------------
+        self.cpu.lsu.mmio.npu_status =
+            (self.cpu.lsu.mmio.npu_status & 0xFFFF) | ((t as u32) << 16) | 1;
+        self.run_cpu_window(ts_cycles.max(1), Some(WakeEvent::TimestepSwitch))?;
+        self.cur_cycles += ts_cycles;
+        Ok(ts_cycles)
+    }
 
+    /// Finish the in-progress sample: result readout, the firmware
+    /// finish protocol and run-counter accumulation. Final third of
+    /// [`Soc::run_sample`].
+    ///
+    /// `readout == false` is the non-terminal-shard variant: this chip
+    /// ran its layers, but the logical sample's prediction lives on the
+    /// cluster's terminal shard, so the output-buffer readout and the
+    /// samples/accuracy counters are skipped here — the terminal shard
+    /// alone accounts the logical sample, keeping cluster reports from
+    /// multiplying sample counts by the shard count.
+    pub(crate) fn sample_end(
+        &mut self,
+        label: usize,
+        label_known: bool,
+        readout: bool,
+    ) -> Result<SampleResult> {
         // --- finish: result readout ---------------------------------------
-        let counts = self.outbufs.counts(0, self.net.classes);
-        self.cpu.lsu.mmio.result[0] = self.outbufs.mmio_word(0, self.net.classes);
+        let counts = if readout {
+            let counts = self.outbufs.counts(0, self.net.classes);
+            self.cpu.lsu.mmio.result[0] = self.outbufs.mmio_word(0, self.net.classes);
+            counts
+        } else {
+            Vec::new()
+        };
         self.cpu.lsu.mmio.npu_status &= !1;
         if self.config.drive_cpu {
             // The firmware exits its loop on network finish; re-arm it for
@@ -624,26 +715,47 @@ impl Soc {
             }
         }
 
-        let predicted = self.outbufs.winner(0, self.net.classes);
-        let correct = label_known && predicted == sample.label;
-        self.total_cycles += sample_cycles;
-        self.total_sops += sample_sops;
-        self.samples_run += 1;
-        if label_known {
-            self.labelled += 1;
-        }
-        if correct {
-            self.correct += 1;
+        let predicted = if readout {
+            self.outbufs.winner(0, self.net.classes)
+        } else {
+            0
+        };
+        let correct = readout && label_known && predicted == label;
+        self.total_cycles += self.cur_cycles;
+        self.total_sops += self.cur_sops;
+        if readout {
+            self.samples_run += 1;
+            if label_known {
+                self.labelled += 1;
+            }
+            if correct {
+                self.correct += 1;
+            }
         }
         Ok(SampleResult {
             predicted,
             counts,
             correct,
-            cycles: sample_cycles,
-            sops: sample_sops,
-            spikes_routed: self.spikes_routed - routed_before,
-            cores_ticked: self.cores_ticked - ticked_before,
+            cycles: self.cur_cycles,
+            sops: self.cur_sops,
+            spikes_routed: self.spikes_routed - self.cur_routed_before,
+            cores_ticked: self.cores_ticked - self.cur_ticked_before,
         })
+    }
+
+    /// Run one sample through the chip. Exactly
+    /// [`Soc::sample_begin`] + one [`Soc::sample_timestep`] per network
+    /// timestep + [`Soc::sample_end`] — the decomposition the cluster
+    /// layer drives piecewise, recomposed here so the single-chip path
+    /// is the same code (and stays bit-identical to its pre-cluster
+    /// behaviour).
+    pub fn run_sample(&mut self, sample: &Sample, label_known: bool) -> Result<SampleResult> {
+        self.sample_begin()?;
+        for t in 0..self.net.timesteps {
+            let spikes_in = sample.spikes_at(t as u16);
+            self.sample_timestep(t, &spikes_in, None)?;
+        }
+        self.sample_end(sample.label, label_known, true)
     }
 
     /// Run (up to `limit`) samples of a dataset through the chip.

@@ -1,0 +1,249 @@
+//! Cluster-layer integration tests — the load-bearing guarantees of the
+//! multi-chip scale-out:
+//!
+//! - the **N = 1 oracle**: a single-chip cluster is bit-identical to a
+//!   plain [`Soc`] (per-sample results, reports, energy ledgers, down to
+//!   `f64::to_bits`), anchoring the cluster to every existing
+//!   equivalence chain;
+//! - **cluster-wide flit conservation**: delivered + dropped + in-flight
+//!   equals injected, summed over every shard NoC and the L3 ring, under
+//!   randomized fault plans mixing on-chip and L3 events (in-tree
+//!   `propcheck` loop, seeds reported on failure);
+//! - the **partition-balance regression** at Fig. 3 geometry: equal-cut
+//!   splits must break ties toward balanced shards.
+
+use fullerene_soc::benches_support::{FIG3_AXONS, FIG3_NEURONS};
+use fullerene_soc::cluster::{Cluster, ClusterMapper, Engine};
+use fullerene_soc::core::neuron::{LeakMode, NeuronParams, ResetMode};
+use fullerene_soc::core::Codebook;
+use fullerene_soc::datasets::Sample;
+use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
+use fullerene_soc::noc::{FaultPlan, LinkLevel, When};
+use fullerene_soc::serve::SocBuilder;
+use fullerene_soc::soc::{Soc, SocConfig};
+use fullerene_soc::util::propcheck::check;
+
+/// A chain of fully-connected layers that actually propagates spikes
+/// (the same recipe the cluster unit tests pin against the functional
+/// reference).
+fn chain_net(inputs: usize, widths: &[usize], classes: usize, timesteps: usize) -> NetworkDesc {
+    let cb = Codebook::default_log16();
+    let params = NeuronParams {
+        threshold: 40,
+        leak: LeakMode::Linear(1),
+        reset: ResetMode::Subtract,
+        mp_bits: 16,
+    };
+    let mut layers = Vec::new();
+    let mut prev = inputs;
+    for (i, &w) in widths.iter().chain(std::iter::once(&classes)).enumerate() {
+        layers.push(LayerDesc {
+            name: format!("l{i}"),
+            inputs: prev,
+            neurons: w,
+            codebook: cb.clone(),
+            widx: (0..prev * w).map(|j| ((j * 7) % 16) as u8).collect(),
+            neuron_params: params.clone(),
+        });
+        prev = w;
+    }
+    NetworkDesc {
+        name: "cluster-it".into(),
+        layers,
+        timesteps,
+        classes,
+    }
+}
+
+/// Deterministic synthetic spike streams dense enough to cross every
+/// shard boundary.
+fn samples(n: usize, inputs: usize, timesteps: usize, seed: u64) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let mut events = Vec::new();
+            for t in 0..timesteps {
+                for a in 0..inputs {
+                    if (a as u64 * 7 + t as u64 * 13 + i as u64 * 31 + seed) % 4 == 0 {
+                        events.push((t as u16, a as u32));
+                    }
+                }
+            }
+            Sample {
+                label: i % 10,
+                events,
+            }
+        })
+        .collect()
+}
+
+/// The N = 1 oracle: every observable of a single-chip cluster — sample
+/// results, report counters, and both energy ledgers — is bit-identical
+/// to the plain chip's, so the cluster layer costs nothing at one chip
+/// and inherits the whole single-chip equivalence chain.
+#[test]
+fn single_chip_cluster_is_bit_identical_to_the_plain_soc() {
+    let net = chain_net(16, &[32], 10, 6);
+    let data = samples(6, 16, 6, 99);
+    let config = SocConfig::default();
+    let mut soc = Soc::new(net.clone(), config.clone()).unwrap();
+    let mut cluster = Cluster::new(net.clone(), config.clone()).unwrap();
+    assert_eq!(cluster.chips(), 1);
+    assert_eq!(cluster.shards(), 1);
+    assert!(cluster.l3_stats().is_none(), "one chip has no ring");
+
+    for s in &data {
+        let a = soc.run_sample(s, true).unwrap();
+        let b = cluster.run_sample(s, true).unwrap();
+        // Spike order/content: per-class counts are the readout's spike
+        // stream in arrival order.
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.predicted, b.predicted);
+        assert_eq!(a.correct, b.correct);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.sops, b.sops);
+        assert_eq!(a.spikes_routed, b.spikes_routed);
+        assert_eq!(a.cores_ticked, b.cores_ticked);
+    }
+
+    let ra = soc.snapshot_report("oracle");
+    let rb = cluster.snapshot_report("oracle");
+    assert_eq!(ra.cycles, rb.cycles);
+    assert_eq!(ra.sops, rb.sops);
+    assert_eq!(ra.spikes_routed, rb.spikes_routed);
+    assert_eq!(ra.samples, rb.samples);
+    assert_eq!(
+        ra.accuracy.map(f64::to_bits),
+        rb.accuracy.map(f64::to_bits)
+    );
+    assert_eq!(ra.pj_per_sop.to_bits(), rb.pj_per_sop.to_bits());
+    assert_eq!(ra.power_mw.to_bits(), rb.power_mw.to_bits());
+    assert_eq!(
+        ra.breakdown.dynamic_pj.to_bits(),
+        rb.breakdown.dynamic_pj.to_bits()
+    );
+    assert_eq!(
+        ra.breakdown.static_pj.to_bits(),
+        rb.breakdown.static_pj.to_bits()
+    );
+    // Every ledger line, dynamic and static, bit for bit.
+    assert_eq!(ra.breakdown.by_class.len(), rb.breakdown.by_class.len());
+    for (k, v) in &ra.breakdown.by_class {
+        assert_eq!(
+            Some(v.to_bits()),
+            rb.breakdown.by_class.get(k).map(|x| x.to_bits()),
+            "dynamic ledger diverged at {k}"
+        );
+    }
+    assert_eq!(ra.breakdown.by_static.len(), rb.breakdown.by_static.len());
+    for (k, v) in &ra.breakdown.by_static {
+        assert_eq!(
+            Some(v.to_bits()),
+            rb.breakdown.by_static.get(k).map(|x| x.to_bits()),
+            "static ledger diverged at {k}"
+        );
+    }
+
+    // The serving dispatch agrees: at chips == 1 the engine is a plain
+    // chip, not a degenerate cluster.
+    let engine = Engine::new(net.clone(), config).unwrap();
+    assert!(engine.as_soc().is_some());
+    assert!(engine.as_cluster().is_none());
+    // And the builder choke point hands out the same single-shard shape.
+    let built = SocBuilder::new().build_cluster(&net).unwrap();
+    assert_eq!(built.shards(), 1);
+}
+
+/// Cluster-wide flit conservation under randomized fault plans: however
+/// the fabrics are killed or throttled — on-chip routers, ring nodes,
+/// ring links, at cycle or timestep granularity — every flit handed to
+/// any fabric is delivered, dropped, or in flight, and nothing is in
+/// flight at sample boundaries.
+#[test]
+fn prop_cluster_conservation_under_random_fault_plans() {
+    check("cluster-conservation", 12, 0xC1057E8, |r| {
+        let chips = 2 + r.below_usize(3); // 2..=4 chips
+        // Chip capacity is 3 cores; a 32-wide layer packs 2 cores, so a
+        // chip holds exactly one hidden layer (the terminal chip adds
+        // the 1-core classifier): `depth ≤ chips` is the exact
+        // layer-contiguous feasibility rule, and `depth ≥ 2` forces a
+        // real multi-shard split.
+        let depth = 2 + r.below_usize(chips - 1); // 2..=chips
+        let widths: Vec<usize> = (0..depth).map(|_| 32).collect();
+        let net = chain_net(16, &widths, 10, 5);
+        let mut plan = FaultPlan::none();
+        // Up to three random events, mixing the on-chip and L3 halves.
+        for _ in 0..(1 + r.below_usize(3)) {
+            let when = if r.below_usize(2) == 0 {
+                When::Timestep(r.below_usize(5) as u32)
+            } else {
+                When::Cycle(1 + r.below_usize(200) as u64)
+            };
+            match r.below_usize(4) {
+                0 => plan = plan.kill_l3(r.below_usize(chips), when),
+                1 => plan = plan.throttle_l3(2 + r.below_usize(3) as u64, when),
+                2 => plan = plan.kill_router(r.below_usize(12), when),
+                _ => {
+                    plan = plan.throttle(
+                        LinkLevel::L1,
+                        2 + r.below_usize(3) as u64,
+                        when,
+                    )
+                }
+            }
+        }
+        let config = SocConfig {
+            chips,
+            n_cores: 3,
+            max_neurons_per_core: 16,
+            fault_plan: plan,
+            ..SocConfig::default()
+        };
+        let mut cluster = Cluster::new(net, config).unwrap();
+        assert!(cluster.shards() > 1, "geometry must force a real split");
+        for s in &samples(4, 16, 5, r.next_u32() as u64) {
+            cluster.run_sample(s, true).unwrap();
+            let c = cluster.conservation();
+            assert!(
+                c.holds(),
+                "injected {} != delivered {} + dropped {} + in_flight {}",
+                c.injected,
+                c.delivered,
+                c.dropped,
+                c.in_flight
+            );
+            assert_eq!(c.in_flight, 0, "fabrics drain at sample boundaries");
+        }
+        // The books stay balanced across a warm session boundary too.
+        cluster.reset_for_session();
+        let c = cluster.conservation();
+        assert_eq!(c, Default::default(), "reset zeroes every counter");
+    });
+}
+
+/// Partition-balance regression at Fig. 3 geometry: a chain of
+/// [`FIG3_NEURONS`]-wide layers has equal-width interfaces everywhere,
+/// so the min-cut DP must break the tie toward balanced shards — the
+/// 2|2 split, never 3|1 — and report the cut as exactly one interface.
+#[test]
+fn fig3_geometry_partitions_balance() {
+    let widths = [FIG3_NEURONS; 3];
+    let net = chain_net(FIG3_AXONS, &widths, FIG3_NEURONS, 4);
+    // One Fig. 3 core holds a full 256-neuron layer: 4 one-core layers
+    // over two 3-core chips.
+    let p = ClusterMapper::plan(&net, 2, 3, FIG3_NEURONS).unwrap();
+    assert_eq!(p.shards(), 2);
+    assert_eq!(p.ranges, vec![(0, 2), (2, 4)]);
+    assert_eq!(p.cut_neurons, FIG3_NEURONS, "exactly one cut interface");
+    assert_eq!(p.cores_of(&net, 0, FIG3_NEURONS), 2);
+    assert_eq!(p.cores_of(&net, 1, FIG3_NEURONS), 2);
+
+    // Same geometry, four chips: the balanced 1|1|1|1 cover wins and the
+    // cut is every interface — capacity scaling never trades balance
+    // away when the cuts are equal.
+    let p4 = ClusterMapper::plan(&net, 4, 1, FIG3_NEURONS).unwrap();
+    assert_eq!(p4.shards(), 4);
+    assert_eq!(p4.cut_neurons, 3 * FIG3_NEURONS);
+    for s in 0..4 {
+        assert_eq!(p4.cores_of(&net, s, FIG3_NEURONS), 1);
+    }
+}

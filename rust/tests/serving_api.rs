@@ -4,7 +4,7 @@
 //! contracts (warm multi-worker serving bit-identical to sequential
 //! fresh-chip serving; short sessions never blocked behind a long one;
 //! a bad workload fails only its own outcome) and the `SocPool`
-//! compatibility wrappers.
+//! sequential reference path.
 
 use fullerene_soc::config::RunConfig;
 use fullerene_soc::coordinator::GoldenCheck;
@@ -93,19 +93,24 @@ fn assert_reports_bit_identical(m: &ChipReport, s: &ChipReport, ctx: &str) {
 
 /// Acceptance criterion: ≥2 concurrent sessions produce reports
 /// bit-identical (`f64::to_bits`) to the same sessions run sequentially.
-#[allow(deprecated)] // the wrapper must keep honoring the old contract
 #[test]
 fn concurrent_sessions_bit_identical_to_sequential() {
     let net = small_net(40, 24, 4, 5);
-    let pool = SocPool::new(
-        net,
-        fullerene_soc::soc::SocConfig::default(),
-        3,
-        GoldenCheck::Reference,
-    )
-    .unwrap();
-    let par = pool.serve(traffic_specs(4, 5)).unwrap();
-    let seq = pool.serve_sequential(traffic_specs(4, 5)).unwrap();
+    let builder = SocBuilder::new()
+        .check(GoldenCheck::Reference)
+        .workers(3)
+        .queue_depth(4);
+    let mut rt = builder.build_serve_runtime(&net).unwrap();
+    for spec in traffic_specs(4, 5) {
+        rt.submit(spec).unwrap();
+    }
+    let par = rt.finish().unwrap();
+    assert!(par.failures.is_empty());
+    let seq = builder
+        .build_pool(&net)
+        .unwrap()
+        .serve_sequential(traffic_specs(4, 5))
+        .unwrap();
 
     assert_eq!(par.sessions.len(), 4);
     assert_eq!(par.checked, 20);
@@ -145,18 +150,19 @@ fn concurrent_sessions_bit_identical_to_sequential() {
 /// Sessions are isolated: each runs on its own chip (or a warm chip
 /// reset to indistinguishability), so a session's report covers exactly
 /// its own samples.
-#[allow(deprecated)]
 #[test]
 fn sessions_have_independent_ledgers() {
     let net = small_net(40, 24, 4, 5);
-    let pool = SocPool::new(
-        net,
-        fullerene_soc::soc::SocConfig::default(),
-        2,
-        GoldenCheck::None,
-    )
-    .unwrap();
-    let out = pool.serve(traffic_specs(3, 4)).unwrap();
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(2)
+        .queue_depth(3)
+        .build_serve_runtime(&net)
+        .unwrap();
+    for spec in traffic_specs(3, 4) {
+        rt.submit(spec).unwrap();
+    }
+    let out = rt.finish().unwrap();
     for s in &out.sessions {
         assert_eq!(s.report.samples, 4);
         assert_eq!(s.stats.samples, 4);
@@ -166,23 +172,43 @@ fn sessions_have_independent_ledgers() {
     assert_eq!(out.merged.samples, 12);
 }
 
-/// Pool guard rails: XLA checks, zero workers, zero sessions and
-/// geometry mismatches are all hard errors.
-#[allow(deprecated)]
+/// Serving guard rails: XLA checks, zero workers, zero sessions and
+/// geometry mismatches are all hard errors — on the sequential reference
+/// pool and the runtime alike.
 #[test]
 fn pool_rejects_invalid_setups() {
     let net = small_net(40, 24, 4, 5);
     let cfg = fullerene_soc::soc::SocConfig::default();
     assert!(SocPool::new(net.clone(), cfg.clone(), 2, GoldenCheck::Xla).is_err());
     assert!(SocPool::new(net.clone(), cfg.clone(), 0, GoldenCheck::None).is_err());
-    let pool = SocPool::new(net, cfg, 2, GoldenCheck::None).unwrap();
-    assert!(pool.serve(Vec::new()).is_err(), "zero sessions must error");
+    let pool = SocPool::new(net.clone(), cfg, 2, GoldenCheck::None).unwrap();
+    assert!(
+        pool.serve_sequential(Vec::new()).is_err(),
+        "zero sessions must error"
+    );
     // 64-input traffic against a 40-input network.
-    let bad = vec![SessionSpec::new(
-        "bad",
-        Box::new(TrafficWorkload::new(64, 4, 5, 0.1, 2, 1)),
-    )];
-    assert!(pool.serve(bad).is_err());
+    let bad = || -> Vec<SessionSpec> {
+        vec![SessionSpec::new(
+            "bad",
+            Box::new(TrafficWorkload::new(64, 4, 5, 0.1, 2, 1)),
+        )]
+    };
+    assert!(pool.serve_sequential(bad()).is_err());
+    // The runtime hits the same walls: an empty drain has nothing to
+    // merge, and a geometry mismatch fails its (only) session.
+    let build_rt = || {
+        SocBuilder::new()
+            .check(GoldenCheck::None)
+            .workers(2)
+            .build_serve_runtime(&net)
+            .unwrap()
+    };
+    assert!(build_rt().finish().is_err(), "zero sessions must error");
+    let mut rt = build_rt();
+    for spec in bad() {
+        rt.submit(spec).unwrap();
+    }
+    assert!(rt.finish().is_err());
 }
 
 /// Session streaming semantics: snapshots are incremental and the close
@@ -627,32 +653,36 @@ fn panicking_workload_fails_only_its_own_session() {
     assert_eq!(out.failures[0].index, 1);
     assert_eq!(out.merged.samples, 6);
 
-    // The batch wrapper keeps the historical all-or-nothing contract,
-    // but with the failure attributed instead of anonymous.
-    #[allow(deprecated)]
-    let res = SocBuilder::new()
+    // The attribution also survives the aggregate fold: the failures
+    // list carries the session name and submission index, never an
+    // anonymous "worker thread panicked".
+    let mut rt = SocBuilder::new()
         .check(GoldenCheck::None)
         .workers(2)
-        .build_pool(&net)
-        .unwrap()
-        .serve(vec![
-            SessionSpec::new(
-                "ok",
-                Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 2, 3)),
-            ),
-            SessionSpec::new(
-                "boom",
-                Box::new(PanickingWorkload {
-                    inner: TrafficWorkload::new(40, 4, 5, 0.15, 2, 4),
-                    gate: 0,
-                    served: 0,
-                }),
-            ),
-        ]);
-    let msg = res.unwrap_err().to_string();
+        .queue_depth(4)
+        .build_serve_runtime(&net)
+        .unwrap();
+    rt.submit(SessionSpec::new(
+        "ok",
+        Box::new(TrafficWorkload::new(40, 4, 5, 0.15, 2, 3)),
+    ))
+    .unwrap();
+    rt.submit(SessionSpec::new(
+        "boom",
+        Box::new(PanickingWorkload {
+            inner: TrafficWorkload::new(40, 4, 5, 0.15, 2, 4),
+            gate: 0,
+            served: 0,
+        }),
+    ))
+    .unwrap();
+    let out = rt.finish().unwrap();
+    assert_eq!(out.sessions.len(), 1);
+    assert_eq!(out.failures.len(), 1);
+    let msg = out.failures[0].error.to_string();
     assert!(
         msg.contains("'boom'") && msg.contains("#1"),
-        "wrapper lost the attribution: {msg}"
+        "aggregate lost the attribution: {msg}"
     );
 }
 
