@@ -1,0 +1,89 @@
+//! Self-healing serving smoke: a calibrated congestion storm catches
+//! the long sessions of a mixed workload mid-run, and the same mix is
+//! served twice — recovery on (simulated-cycle deadline + deterministic
+//! seeded retry) vs recovery off (deadline alone). The axis guards the
+//! recovery layer's reason to exist: the recovery arm must complete a
+//! strictly higher session fraction than the no-recovery arm, at a
+//! bounded simulated-cycle overhead.
+//!
+//! Emits `BENCH_recovery.json` (schema `bench-recovery-v1`) in the
+//! working directory and gates against a checked-in
+//! `BENCH_recovery.baseline.json` (working directory, then the
+//! repository root), failing the process on a >30 % regression or a
+//! structural-floor violation. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_RECOVERY_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_RECOVERY_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{recovery_check, recovery_json, recovery_perf, recovery_table};
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_RECOVERY_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in [
+        "BENCH_recovery.baseline.json",
+        "../BENCH_recovery.baseline.json",
+    ] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let r = recovery_perf(42, fast).expect("recovery bench must serve");
+
+    println!("## bench: recovery\n{}", recovery_table(&r).render());
+    println!(
+        "storm: every router congested for {} cycles at cycle {}; deadline {} cycles; \
+         recovery overhead {:.4} of the clean-run cycles",
+        r.storm_window, r.storm_at_cycle, r.deadline_cycles, r.recovery_overhead_frac
+    );
+
+    let out = Path::new("BENCH_recovery.json");
+    recovery_json(&r, "measured")
+        .write_file(out)
+        .expect("write BENCH_recovery.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_RECOVERY_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_RECOVERY_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => {
+            // The structural floors hold without any baseline — enforce
+            // them with an empty one rather than skipping outright.
+            let fails = recovery_check(&r, &Json::obj(vec![]), 0.30);
+            if fails.is_empty() {
+                println!("no BENCH_recovery.baseline.json found; structural floors passed");
+            } else {
+                eprintln!("RECOVERY FLOOR VIOLATION:");
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = recovery_check(&r, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("RECOVERY REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

@@ -48,6 +48,12 @@
 //!   high-level router nodes" claim at serving granularity), emitted as
 //!   `BENCH_cluster.json` by `benches/cluster.rs` and gated in CI via
 //!   [`cluster_perf_check`] — the fifth perf-trajectory axis.
+//! - [`recovery_perf`] — self-healing serving axis: completed-session
+//!   fraction under a deterministic congestion storm with the recovery
+//!   policy (deadlines + seeded retry) on vs off, emitted as
+//!   `BENCH_recovery.json` by `benches/recovery.rs` and gated in CI via
+//!   [`recovery_check`] — the sixth perf-trajectory axis (recovery on
+//!   must complete strictly more sessions than recovery off).
 
 use crate::cluster::{Cluster, ClusterMapper};
 use crate::coordinator::GoldenCheck;
@@ -62,7 +68,9 @@ use crate::noc::traffic::{Pattern, TrafficGen};
 use crate::noc::{Dest, Fabric, MultiDomain, NocSim, ReferenceNocSim, Topology, TraceMode};
 use crate::riscv::cpu::{Cpu, CpuState, WakeEvent};
 use crate::riscv::firmware;
-use crate::serve::{ServeRuntime, SessionSpec, TrafficWorkload};
+use crate::serve::{
+    RecoveryPolicy, ServeRuntime, SessionSpec, SocBuilder, TrafficWorkload, Workload,
+};
 use crate::soc::SocConfig;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -869,6 +877,7 @@ fn serve_run(
         GoldenCheck::None,
         depth,
         keep_warm,
+        RecoveryPolicy::disabled(),
     )?;
     let t0 = std::time::Instant::now();
     for spec in specs {
@@ -1188,6 +1197,12 @@ pub fn serve_perf_check(current: &ServePerf, baseline: &Json, max_regress: f64) 
 /// Router-kill fractions swept by [`resilience_sweep`].
 pub const RESILIENCE_KILL_FRACS: [f64; 4] = [0.0, 0.1, 0.2, 0.3];
 
+/// Nominal kill fraction recorded for the kill-mid-congestion storm
+/// point (one router of ~20 dies mid-storm). Deliberately distinct from
+/// every [`RESILIENCE_KILL_FRACS`] entry so the storm points never
+/// collide with the matched-fraction fullerene-vs-baseline comparisons.
+pub const STORM_KILL_FRAC: f64 = 0.05;
+
 /// One topology × kill-fraction degradation measurement.
 #[derive(Debug, Clone)]
 pub struct ResiliencePoint {
@@ -1284,10 +1299,60 @@ fn resilience_point(
     })
 }
 
+/// Kill-mid-congestion storm point: one router is congested from the
+/// first cycle, and while the backlog is still queued behind it a
+/// *different* router is killed outright. This is the compound failure
+/// the per-fraction sweep cannot see — rerouting pressure from the kill
+/// lands on a fabric already carrying a hotspot. Congest+kill plans
+/// always drain: the congested router resumes after its window and the
+/// dead router eagerly drops what it holds.
+fn resilience_storm_point(topo: Topology, pairs: &[(usize, usize)]) -> Result<ResiliencePoint> {
+    use crate::noc::{FaultPlan, When};
+    let name = format!("{}-storm", topo.name);
+    let routers = topo.routers();
+    let congested = routers[0];
+    let killed = routers[routers.len() / 2];
+    let mut sim = NocSim::new(topo, 4, EnergyParams::nominal());
+    sim.set_trace_mode(TraceMode::Off);
+    sim.set_fault_plan(
+        FaultPlan::none()
+            .congest(congested, 120, When::Cycle(1))
+            .kill_router(killed, When::Cycle(40)),
+    )?;
+    for &(src, dst) in pairs {
+        sim.inject(src, &Dest::Core(dst), 0);
+    }
+    sim.run_until_drained(10_000_000)?;
+    let st = sim.stats();
+    let h = sim.fabric_health();
+    let injected = pairs.len() as u64;
+    if st.delivered + h.dropped != injected {
+        return Err(crate::Error::Noc(format!(
+            "storm conservation broken on {name}: {injected} injected != \
+             {} delivered + {} dropped",
+            st.delivered, h.dropped
+        )));
+    }
+    Ok(ResiliencePoint {
+        topology: name,
+        kill_frac: STORM_KILL_FRAC,
+        dead_routers: h.dead_routers,
+        injected,
+        delivered: st.delivered,
+        dropped: h.dropped,
+        delivered_frac: st.delivered as f64 / injected as f64,
+        rerouted_hops: h.rerouted_hops,
+        avg_latency: st.avg_latency,
+        latency_inflation: 1.0, // filled by the sweep from the frac-0 point
+    })
+}
+
 /// Sweep [`RESILIENCE_KILL_FRACS`] over fullerene vs mesh-4x5 vs
 /// torus-4x5 (all 20 cores), offering the **identical** seeded P2P burst
-/// to every point so delivered fractions are directly comparable. `fast`
-/// selects the CI smoke budget.
+/// to every point so delivered fractions are directly comparable, then
+/// append one [`resilience_storm_point`] per topology (kill mid
+/// congestion — the compound failure the per-fraction sweep cannot
+/// see). `fast` selects the CI smoke budget.
 pub fn resilience_sweep(seed: u64, fast: bool) -> Result<Resilience> {
     let n_flits: usize = if fast { 400 } else { 1200 };
     let n_cores = 20usize;
@@ -1320,6 +1385,13 @@ pub fn resilience_sweep(seed: u64, fast: bool) -> Result<Resilience> {
             };
             points.push(p);
         }
+        let mut storm = resilience_storm_point(topo_fn(), &pairs)?;
+        storm.latency_inflation = if base_latency > 0.0 {
+            storm.avg_latency / base_latency
+        } else {
+            1.0
+        };
+        points.push(storm);
     }
 
     let min_frac = |name: &str| {
@@ -1386,9 +1458,11 @@ pub fn resilience_json(r: &Resilience, provenance: &str) -> Json {
 /// rule as the other perf checks:
 ///
 /// - structural floors — always enforced: the healthy (kill-frac-0)
-///   points must deliver everything, and the fullerene fabric must
+///   points must deliver everything, the fullerene fabric must
 ///   deliver at least the mesh fraction at every matched kill fraction
-///   (the degree-variance claim this subsystem exists to measure);
+///   (the degree-variance claim this subsystem exists to measure), and
+///   the fullerene kill-mid-congestion storm point must deliver at
+///   least the mesh/torus storm fractions;
 /// - comparisons against the baseline's numbers (per-point
 ///   `delivered_frac`, the sweep-wide fullerene minimum) are enforced
 ///   only when the baseline's `provenance` is `"measured"` — a
@@ -1417,6 +1491,19 @@ pub fn resilience_check(current: &Resilience, baseline: &Json, max_regress: f64)
                 fails.push(format!(
                     "fullerene delivered {:.4} below {} {:.4} at kill frac {}",
                     f.delivered_frac, other.topology, other.delivered_frac, f.kill_frac
+                ));
+            }
+        }
+    }
+    if let Some(f) = current.points.iter().find(|p| p.topology == "fullerene-storm") {
+        for other in &current.points {
+            if other.topology.ends_with("-storm")
+                && other.topology != "fullerene-storm"
+                && f.delivered_frac < other.delivered_frac
+            {
+                fails.push(format!(
+                    "fullerene-storm delivered {:.4} below {} {:.4}",
+                    f.delivered_frac, other.topology, other.delivered_frac
                 ));
             }
         }
@@ -2125,6 +2212,7 @@ pub fn sessions_bench(
         GoldenCheck::None,
         sessions.max(1),
         true,
+        RecoveryPolicy::disabled(),
     )?;
     let specs: Vec<SessionSpec> = (0..sessions)
         .map(|i| {
@@ -2207,6 +2295,427 @@ pub fn fig6_table() -> Result<Table> {
     t.push_row(vec!["busy-wait baseline".into(), format!("{baseline:.3}")]);
     t.push_row(vec!["reduction".into(), format!("{:.1}%", reduction * 100.0)]);
     Ok(t)
+}
+
+// ================ recovery bench (BENCH_recovery.json) =====================
+
+/// Input width of the recovery-bench network.
+const RECOVERY_INPUTS: usize = 64;
+/// Hidden width of the recovery-bench network.
+const RECOVERY_HIDDEN: usize = 32;
+/// Output classes of the recovery-bench network.
+const RECOVERY_CLASSES: usize = 4;
+/// Timesteps per sample of the recovery-bench network.
+const RECOVERY_TIMESTEPS: usize = 4;
+/// Input spike rate of the recovery-bench traffic.
+const RECOVERY_RATE: f64 = 0.15;
+/// Samples per *short* recovery-bench session (finishes before the
+/// storm opens).
+const RECOVERY_SHORT_SAMPLES: usize = 1;
+/// Samples per *long* recovery-bench session (still running when the
+/// storm opens — the 6× margin over the shorts guarantees it).
+const RECOVERY_LONG_SAMPLES: usize = 6;
+
+/// The fixed network served by the recovery bench.
+fn recovery_net() -> NetworkDesc {
+    structural_net(
+        "recovery",
+        RECOVERY_INPUTS,
+        RECOVERY_HIDDEN,
+        RECOVERY_CLASSES,
+        RECOVERY_TIMESTEPS,
+    )
+}
+
+/// The workload a recovery-bench session serves. Seeds are per-session
+/// so the calibration probe below replays the *exact* traffic the
+/// measured run will see.
+fn recovery_workload(samples: usize, seed: u64) -> TrafficWorkload {
+    TrafficWorkload::new(
+        RECOVERY_INPUTS,
+        RECOVERY_CLASSES,
+        RECOVERY_TIMESTEPS,
+        RECOVERY_RATE,
+        samples,
+        seed,
+    )
+}
+
+/// Simulated cycles a session of `samples` seeded samples takes on a
+/// clean (fault-free) chip — the calibration that places the storm
+/// window and the deadline. Returns `(noc_cycles, core_cycles)`:
+/// fault-plan `When::Cycle` events key off the NoC clock while the
+/// serving deadline keys off the core clock, so the two placements must
+/// be calibrated in their own domains. Deterministic: same seed, same
+/// cycles.
+fn recovery_probe_cycles(samples: usize, seed: u64) -> Result<(u64, u64)> {
+    let mut session = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .open_session(&recovery_net(), "probe")?;
+    let mut w = recovery_workload(samples, seed);
+    while let Some(s) = w.next_sample() {
+        session.push(&s)?;
+    }
+    Ok((session.noc_stats().cycles, session.cycles()))
+}
+
+/// One arm (recovery on / recovery off) of the recovery bench.
+#[derive(Debug, Clone)]
+pub struct RecoveryArm {
+    /// Sessions submitted.
+    pub sessions: u64,
+    /// Sessions that produced a report.
+    pub completed: u64,
+    /// `completed / sessions`.
+    pub completed_frac: f64,
+    /// Sessions killed by the simulated-cycle deadline (terminal, i.e.
+    /// after exhausting any retry budget).
+    pub deadline_exceeded: u64,
+    /// Retry attempts beyond each session's first.
+    pub retries: u64,
+    /// Simulated cycles burned by failed attempts plus backoff.
+    pub retry_cycles_burned: u64,
+    /// Host wall seconds from first submit to last outcome.
+    pub host_s: f64,
+}
+
+/// The `BENCH_recovery.json` payload: completed-session fraction under
+/// a deterministic all-router congestion storm, with the recovery
+/// policy (deadline + seeded retry) on vs off. The claim this axis
+/// guards: recovery-on completes **strictly more** sessions than
+/// recovery-off under the same storm, at a bounded simulated-cycle
+/// overhead.
+#[derive(Debug, Clone)]
+pub struct RecoveryPerf {
+    /// Total sessions per arm.
+    pub sessions: u64,
+    /// Long sessions (the ones the storm catches).
+    pub storm_sessions: u64,
+    /// Simulated-cycle deadline both arms enforce.
+    pub deadline_cycles: u64,
+    /// Cycle at which the storm congests every router.
+    pub storm_at_cycle: u64,
+    /// Per-router congestion window (cycles).
+    pub storm_window: u64,
+    /// The arm served with deadline + retry enabled.
+    pub with_recovery: RecoveryArm,
+    /// The arm served with the deadline alone (no retry).
+    pub without_recovery: RecoveryArm,
+    /// Retry cycles burned by the recovery arm relative to the total
+    /// clean-run cycles of the whole session mix.
+    pub recovery_overhead_frac: f64,
+}
+
+/// Serve one arm of the recovery bench: the session mix through a
+/// 2-worker [`ServeRuntime`] armed with the storm plan and `policy`,
+/// counting completions via [`crate::serve::HealthReport`].
+fn recovery_arm(
+    plan: &crate::noc::FaultPlan,
+    policy: RecoveryPolicy,
+    n_shorts: usize,
+    n_longs: usize,
+    seed: u64,
+) -> Result<RecoveryArm> {
+    let net = recovery_net();
+    let total = n_shorts + n_longs;
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .fault_plan(plan.clone())
+        .workers(2)
+        .queue_depth(total)
+        .recovery(policy)
+        .build_serve_runtime(&net)?;
+    let t0 = std::time::Instant::now();
+    // Interleave longs and shorts so both workers see storm-caught
+    // sessions regardless of pull order.
+    for i in 0..n_shorts.max(n_longs) {
+        if i < n_longs {
+            rt.submit(SessionSpec::new(
+                &format!("long-{i}"),
+                Box::new(recovery_workload(
+                    RECOVERY_LONG_SAMPLES,
+                    recovery_long_seed(seed, i),
+                )),
+            ))?;
+        }
+        if i < n_shorts {
+            rt.submit(SessionSpec::new(
+                &format!("short-{i}"),
+                Box::new(recovery_workload(
+                    RECOVERY_SHORT_SAMPLES,
+                    recovery_short_seed(seed, i),
+                )),
+            ))?;
+        }
+    }
+    // Failed sessions surface as per-session errors here; the arm counts
+    // them through the health ledger instead of propagating.
+    for r in rt.outcomes() {
+        let _ = r.outcome;
+    }
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let h = rt.health_report();
+    // finish() errors only when *no* session succeeded; the shorts
+    // always do, but the counters above are already final either way.
+    let _ = rt.finish();
+    Ok(RecoveryArm {
+        sessions: h.sessions,
+        completed: h.completed,
+        completed_frac: h.completed as f64 / h.sessions.max(1) as f64,
+        deadline_exceeded: h.deadline_exceeded,
+        retries: h.retries,
+        retry_cycles_burned: h.retry_cycles_burned,
+        host_s,
+    })
+}
+
+/// Workload seed of long session `i` — shared by probe and run.
+fn recovery_long_seed(seed: u64, i: usize) -> u64 {
+    seed.wrapping_add(1000).wrapping_add(13 * i as u64)
+}
+
+/// Workload seed of short session `i` — shared by probe and run.
+fn recovery_short_seed(seed: u64, i: usize) -> u64 {
+    seed.wrapping_add(1).wrapping_add(11 * i as u64)
+}
+
+/// Run the recovery bench: calibrate a congestion storm that lets every
+/// short session finish clean but catches every long session mid-run,
+/// then serve the identical mix twice — recovery on (deadline + seeded
+/// retry) vs recovery off (deadline alone) — and compare completed
+/// fractions.
+///
+/// Calibration places the storm with margins, not magic numbers —
+/// minding that fault events fire on the **NoC clock** while the
+/// deadline meters the **core clock**: the storm opens at NoC cycle
+/// `c0 = max(short clean NoC cycles) + 1` (shorts are already done),
+/// every router congests for `W = 4 × max(long clean core cycles)` NoC
+/// cycles (the stall feeds straight into the core-clock ledger, so a
+/// caught long overruns the deadline), and the deadline is `D = 2 ×
+/// max(long clean core cycles)` (a clean run — including a retry on a
+/// power-cycled chip, which is bit-identical to fresh — always fits; a
+/// stalled run, at ≥ `W > D` core cycles, never does). The retried
+/// attempt starts `burned ≥ W > c0` cycles into the schedule, so
+/// [`crate::noc::FaultPlan::shifted`] drops the already-fired congest
+/// events and the retry runs clean. Everything is seeded: both arms are
+/// bit-reproducible run to run.
+pub fn recovery_perf(seed: u64, fast: bool) -> Result<RecoveryPerf> {
+    use crate::noc::{FaultPlan, When};
+    let n_shorts: usize = if fast { 4 } else { 6 };
+    let n_longs: usize = if fast { 2 } else { 4 };
+
+    let mut short_noc = Vec::with_capacity(n_shorts);
+    let mut short_core = Vec::with_capacity(n_shorts);
+    for i in 0..n_shorts {
+        let (noc, core) = recovery_probe_cycles(
+            RECOVERY_SHORT_SAMPLES,
+            recovery_short_seed(seed, i),
+        )?;
+        short_noc.push(noc);
+        short_core.push(core);
+    }
+    let mut long_noc = Vec::with_capacity(n_longs);
+    let mut long_core = Vec::with_capacity(n_longs);
+    for i in 0..n_longs {
+        let (noc, core) = recovery_probe_cycles(
+            RECOVERY_LONG_SAMPLES,
+            recovery_long_seed(seed, i),
+        )?;
+        long_noc.push(noc);
+        long_core.push(core);
+    }
+    let max_short_noc = short_noc.iter().copied().max().unwrap_or(0);
+    let max_long_core = long_core.iter().copied().max().unwrap_or(0);
+    let c0 = max_short_noc + 1;
+    let window = 4 * max_long_core;
+    let deadline = 2 * max_long_core;
+    for (i, &c) in long_noc.iter().enumerate() {
+        if c <= c0 {
+            return Err(crate::Error::Runtime(format!(
+                "recovery bench calibration broken: long session {i} finishes \
+                 at NoC cycle {c}, before the storm opens at {c0}"
+            )));
+        }
+    }
+
+    // The storm: every fullerene router (the default single-domain chip
+    // fabric) goes busy for `window` cycles at cycle `c0`.
+    let mut plan = FaultPlan::none();
+    for r in Topology::fullerene().routers() {
+        plan = plan.congest(r, window, When::Cycle(c0));
+    }
+
+    let on = RecoveryPolicy {
+        deadline_cycles: deadline,
+        retries: 2,
+        backoff_cycles: 64,
+        retry_seed: seed,
+        ..RecoveryPolicy::disabled()
+    };
+    let off = RecoveryPolicy {
+        deadline_cycles: deadline,
+        ..RecoveryPolicy::disabled()
+    };
+    let with_recovery = recovery_arm(&plan, on, n_shorts, n_longs, seed)?;
+    let without_recovery = recovery_arm(&plan, off, n_shorts, n_longs, seed)?;
+
+    // Core-clock total of a clean serve of the whole mix — the
+    // denominator of the recovery-overhead figure.
+    let clean_total: u64 = short_core.iter().sum::<u64>() + long_core.iter().sum::<u64>();
+    Ok(RecoveryPerf {
+        sessions: (n_shorts + n_longs) as u64,
+        storm_sessions: n_longs as u64,
+        deadline_cycles: deadline,
+        storm_at_cycle: c0,
+        storm_window: window,
+        recovery_overhead_frac: with_recovery.retry_cycles_burned as f64
+            / clean_total.max(1) as f64,
+        with_recovery,
+        without_recovery,
+    })
+}
+
+fn recovery_arm_json(a: &RecoveryArm) -> Json {
+    Json::obj(vec![
+        ("sessions", Json::Num(a.sessions as f64)),
+        ("completed", Json::Num(a.completed as f64)),
+        ("completed_frac", Json::Num(a.completed_frac)),
+        ("deadline_exceeded", Json::Num(a.deadline_exceeded as f64)),
+        ("retries", Json::Num(a.retries as f64)),
+        ("retry_cycles_burned", Json::Num(a.retry_cycles_burned as f64)),
+        ("host_s", Json::Num(a.host_s)),
+    ])
+}
+
+/// The recovery bench as machine-readable JSON (the
+/// `BENCH_recovery.json` schema the CI perf-smoke job tracks).
+pub fn recovery_json(p: &RecoveryPerf, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-recovery-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("sessions", Json::Num(p.sessions as f64)),
+        ("storm_sessions", Json::Num(p.storm_sessions as f64)),
+        ("deadline_cycles", Json::Num(p.deadline_cycles as f64)),
+        ("storm_at_cycle", Json::Num(p.storm_at_cycle as f64)),
+        ("storm_window", Json::Num(p.storm_window as f64)),
+        ("with_recovery", recovery_arm_json(&p.with_recovery)),
+        ("without_recovery", recovery_arm_json(&p.without_recovery)),
+        (
+            "recovery_overhead_frac",
+            Json::Num(p.recovery_overhead_frac),
+        ),
+    ])
+}
+
+/// Gate a fresh recovery run against a checked-in baseline; returns
+/// human-readable regression descriptions (empty = pass). Same arming
+/// rule as the other perf checks:
+///
+/// - structural floors — always enforced: the recovery arm must
+///   complete a **strictly higher** session fraction than the
+///   no-recovery arm (the claim this axis exists to guard), the storm
+///   must actually kill at least one no-recovery session, the recovery
+///   arm must actually retry, and with retries available it must
+///   complete everything;
+/// - comparisons against the baseline's numbers (per-arm
+///   `completed_frac`, the recovery overhead) are enforced only when
+///   the baseline's `provenance` is `"measured"`.
+pub fn recovery_check(current: &RecoveryPerf, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let w = &current.with_recovery;
+    let wo = &current.without_recovery;
+    if w.completed_frac <= wo.completed_frac {
+        fails.push(format!(
+            "recovery-on completed_frac {:.4} is not strictly above \
+             recovery-off {:.4}",
+            w.completed_frac, wo.completed_frac
+        ));
+    }
+    if wo.deadline_exceeded == 0 {
+        fails.push(
+            "the storm killed no session in the no-recovery arm — the bench \
+             is not exercising the deadline"
+                .into(),
+        );
+    }
+    if w.retries == 0 {
+        fails.push(
+            "the recovery arm never retried — the bench is not exercising \
+             the retry path"
+                .into(),
+        );
+    }
+    if w.completed_frac < 1.0 {
+        fails.push(format!(
+            "recovery arm left sessions unserved: completed_frac {:.4} < 1.0",
+            w.completed_frac
+        ));
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    let floor = 1.0 - max_regress;
+    for (arm_key, cur_frac) in [
+        ("with_recovery", w.completed_frac),
+        ("without_recovery", wo.completed_frac),
+    ] {
+        if let Some(base_v) = baseline
+            .get_opt(arm_key)
+            .and_then(|a| a.get_opt("completed_frac"))
+            .and_then(|v| v.as_f64().ok())
+        {
+            if cur_frac < floor * base_v {
+                fails.push(format!(
+                    "{arm_key} completed_frac regressed: {cur_frac:.4} vs \
+                     baseline {base_v:.4}"
+                ));
+            }
+        }
+    }
+    if let Some(base_v) = baseline
+        .get_opt("recovery_overhead_frac")
+        .and_then(|v| v.as_f64().ok())
+    {
+        if base_v > 0.0 && current.recovery_overhead_frac > (1.0 + max_regress) * base_v {
+            fails.push(format!(
+                "recovery overhead grew: {:.4} vs baseline {base_v:.4}",
+                current.recovery_overhead_frac
+            ));
+        }
+    }
+    fails
+}
+
+/// The recovery bench as a printable table.
+pub fn recovery_table(p: &RecoveryPerf) -> Table {
+    let mut t = Table::new(&[
+        "arm",
+        "completed",
+        "frac",
+        "deadline-x",
+        "retries",
+        "burned cycles",
+        "host s",
+    ]);
+    for (name, a) in [
+        ("recovery on", &p.with_recovery),
+        ("recovery off", &p.without_recovery),
+    ] {
+        t.push_row(vec![
+            name.into(),
+            format!("{}/{}", a.completed, a.sessions),
+            format!("{:.3}", a.completed_frac),
+            format!("{}", a.deadline_exceeded),
+            format!("{}", a.retries),
+            format!("{}", a.retry_cycles_burned),
+            format!("{:.2}", a.host_s),
+        ]);
+    }
+    t
 }
 
 #[cfg(test)]
@@ -2507,8 +3016,8 @@ mod tests {
     #[test]
     fn resilience_sweep_degrades_gracefully_and_deterministically() {
         let r = resilience_sweep(13, true).unwrap();
-        // 3 topologies × 4 kill fractions, in sweep order.
-        assert_eq!(r.points.len(), 12);
+        // 3 topologies × (4 kill fractions + 1 storm point), in sweep order.
+        assert_eq!(r.points.len(), 15);
         for p in &r.points {
             // Conservation holds at every point (the sweep re-checks it
             // internally; pin it here too).
@@ -2521,6 +3030,24 @@ mod tests {
             } else {
                 assert!(p.dead_routers > 0, "{}@{}: no kill fired", p.topology, p.kill_frac);
             }
+            if p.topology.ends_with("-storm") {
+                // Exactly the one mid-storm router kill fired.
+                assert_eq!(p.dead_routers, 1, "{}: storm kill count", p.topology);
+            }
+        }
+        // The compound-failure floor: under kill-mid-congestion the
+        // fullerene fabric still delivers at least the baseline storms.
+        let fs = r.points.iter().find(|p| p.topology == "fullerene-storm").unwrap();
+        for o in r.points.iter().filter(|p| {
+            p.topology.ends_with("-storm") && p.topology != "fullerene-storm"
+        }) {
+            assert!(
+                fs.delivered_frac >= o.delivered_frac,
+                "fullerene-storm {} < {} {}",
+                fs.delivered_frac,
+                o.topology,
+                o.delivered_frac
+            );
         }
         // The structural claim: the fullerene fabric (3 router attaches
         // per core) never delivers less than the degree-1-attach
@@ -2662,5 +3189,49 @@ mod tests {
             reduction > 0.3 && reduction < 0.6,
             "reduction {reduction} (gated {gated}, baseline {baseline})"
         );
+    }
+
+    #[test]
+    fn recovery_bench_heals_the_storm_deterministically() {
+        let p = recovery_perf(7, true).unwrap();
+        // The storm catches every long session; the deadline kills them
+        // all without recovery and none survive by accident.
+        assert_eq!(p.sessions, 6);
+        assert_eq!(p.storm_sessions, 2);
+        let wo = &p.without_recovery;
+        assert_eq!(wo.sessions, 6);
+        assert_eq!(wo.deadline_exceeded, p.storm_sessions, "{wo:?}");
+        assert_eq!(wo.completed, p.sessions - p.storm_sessions, "{wo:?}");
+        assert_eq!(wo.retries, 0);
+        // With the retry budget, every session completes — the shifted
+        // plan drops the already-fired storm and the retry runs clean.
+        let w = &p.with_recovery;
+        assert_eq!(w.sessions, 6);
+        assert_eq!(w.completed, 6, "{w:?}");
+        assert!(w.retries >= p.storm_sessions, "{w:?}");
+        assert!(w.retry_cycles_burned > 0);
+        assert!(w.completed_frac > wo.completed_frac);
+        assert!(p.recovery_overhead_frac > 0.0);
+        // Fully seeded: the whole bench is reproducible bit for bit
+        // (host_s aside).
+        let p2 = recovery_perf(7, true).unwrap();
+        assert_eq!(w.retry_cycles_burned, p2.with_recovery.retry_cycles_burned);
+        assert_eq!(w.retries, p2.with_recovery.retries);
+        assert_eq!(p.deadline_cycles, p2.deadline_cycles);
+        assert_eq!(p.storm_at_cycle, p2.storm_at_cycle);
+        // Structural floors hold with no baseline at all, and a measured
+        // self-baseline passes its own comparisons.
+        assert!(recovery_check(&p, &Json::obj(vec![]), 0.30).is_empty());
+        let selfbase = recovery_json(&p, "measured");
+        assert!(recovery_check(&p, &selfbase, 0.30).is_empty());
+        // A measured baseline with unreachable figures fails.
+        let inflated = Json::parse(
+            r#"{"provenance":"measured",
+                "with_recovery":{"completed_frac":2.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(recovery_check(&p, &inflated, 0.30).len(), 1);
+        let j = recovery_json(&p, "measured").to_string();
+        assert!(j.contains("bench-recovery-v1") && j.contains("completed_frac"));
     }
 }

@@ -39,7 +39,7 @@ use super::mapper::{ClusterMapper, Partition};
 use crate::datasets::Sample;
 use crate::energy::{AreaModel, ChipReport, EnergyParams};
 use crate::nn::NetworkDesc;
-use crate::noc::{FabricHealth, SimStats};
+use crate::noc::{FabricHealth, FaultPlan, SimStats};
 use crate::soc::{SampleResult, Soc, SocConfig};
 use crate::{Error, Result};
 
@@ -77,11 +77,22 @@ pub struct Cluster {
     net: NetworkDesc,
     partition: Partition,
     /// One Soc per partition shard, in layer order. Shard `i` maps to
-    /// ring node `i`; ring nodes `shards..chips` exist (physical chips,
-    /// targetable by `kill-l3`) but carry no mapped layers.
+    /// ring node `shard_nodes[i]` — the identity on the base partition;
+    /// ring nodes not hosting a shard exist (physical chips, targetable
+    /// by `kill-l3`) but carry no mapped layers.
     shards: Vec<Soc>,
+    /// Ring node hosting each shard. Diverges from the identity only
+    /// after a failover replan excludes dead nodes.
+    shard_nodes: Vec<usize>,
     /// `None` on a single-chip cluster (no off-chip ring exists).
     l3: Option<L3Fabric>,
+    /// Failover replans performed this accounting window.
+    replans: u64,
+    /// Flit books of shards retired by failover rebuilds, folded so
+    /// [`Cluster::conservation`] spans the whole session including the
+    /// pre-replan configuration (`in_flight` is always 0 — replans only
+    /// happen at sample boundaries, where every shard NoC is drained).
+    saved: ClusterConservation,
     energy: EnergyParams,
     area: AreaModel,
 }
@@ -109,7 +120,10 @@ impl Cluster {
                 },
                 net,
                 shards: vec![soc],
+                shard_nodes: vec![0],
                 l3: None,
+                replans: 0,
+                saved: ClusterConservation::default(),
                 energy,
                 area,
             });
@@ -131,12 +145,16 @@ impl Cluster {
             shards.push(Soc::new(partition.sub_net(&net, s), shard_config)?);
         }
         let l3 = L3Fabric::new(config.chips, &l3_plan)?;
+        let shard_nodes = (0..partition.shards()).collect();
         Ok(Cluster {
             config,
             net,
             partition,
             shards,
+            shard_nodes,
             l3: Some(l3),
+            replans: 0,
+            saved: ClusterConservation::default(),
             energy,
             area,
         })
@@ -172,6 +190,66 @@ impl Cluster {
         self.l3.as_ref().map(|l3| l3.stats())
     }
 
+    /// Failover replans performed this accounting window (0 unless
+    /// `config.failover` and a shard's ring node died).
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Ring node hosting each shard (the identity until a failover
+    /// replan moves shards off dead nodes).
+    pub fn shard_nodes(&self) -> &[usize] {
+        &self.shard_nodes
+    }
+
+    /// Failover at a sample boundary: when any shard's ring node has
+    /// died, re-partition the network over the surviving nodes and
+    /// rebuild the shard chips fresh ([`ClusterMapper::replan`]). The
+    /// retired shards' flit books fold into `saved` so cluster-wide
+    /// conservation spans the replan; the L3 ring is **not** rebuilt —
+    /// its dead nodes, counters and pending schedule carry the session's
+    /// degradation history forward. When the survivors cannot host the
+    /// network the cluster simply stays in its degraded configuration
+    /// (drops keep the books; the next boundary retries).
+    fn maybe_replan(&mut self) -> Result<()> {
+        let Some(l3) = &self.l3 else {
+            return Ok(());
+        };
+        if !self.shard_nodes.iter().any(|&n| l3.node_dead(n)) {
+            return Ok(());
+        }
+        let dead: Vec<bool> = (0..self.config.chips).map(|c| l3.node_dead(c)).collect();
+        let Ok((partition, nodes)) = ClusterMapper::replan(
+            &self.net,
+            self.config.chips,
+            &dead,
+            self.config.n_cores,
+            self.config.max_neurons_per_core,
+        ) else {
+            return Ok(());
+        };
+        for s in &self.shards {
+            self.saved.injected += s.spikes_routed_window();
+            self.saved.delivered += s.noc_stats().delivered;
+            self.saved.dropped += s.fabric_health().dropped;
+        }
+        let (chip_plan, _) = self.config.fault_plan.split_l3();
+        let mut shards = Vec::with_capacity(partition.shards());
+        for s in 0..partition.shards() {
+            let shard_config = SocConfig {
+                chips: 1,
+                fault_plan: chip_plan.clone(),
+                ..self.config.clone()
+            };
+            shards.push(Soc::new(partition.sub_net(&self.net, s), shard_config)?);
+        }
+        self.shards = shards;
+        self.partition = partition;
+        self.shard_nodes = nodes;
+        self.replans += 1;
+        Ok(())
+    }
+
     /// Run one sample across the cluster. The aggregate
     /// [`SampleResult`] sums compute over shards (cycles additionally
     /// include the ring's transfer latency — within a timestep the
@@ -181,6 +259,9 @@ impl Cluster {
         if self.l3.is_none() {
             // Single chip: the exact Soc path, bit for bit.
             return self.shards[0].run_sample(sample, label_known);
+        }
+        if self.config.failover {
+            self.maybe_replan()?;
         }
         let (l3_cycles0, l3_injected0) = {
             let s = self.l3.as_ref().expect("multi-chip cluster has a ring").stats();
@@ -207,7 +288,11 @@ impl Cluster {
                     // chip's, so enforce it at the boundary.
                     egress.sort_unstable();
                     let l3 = self.l3.as_mut().expect("multi-chip cluster has a ring");
-                    let delivered = l3.transfer(si, si + 1, egress.len() as u64)?;
+                    let delivered = l3.transfer(
+                        self.shard_nodes[si],
+                        self.shard_nodes[si + 1],
+                        egress.len() as u64,
+                    )?;
                     ingress.clear();
                     if delivered {
                         ingress.extend_from_slice(&egress);
@@ -298,8 +383,37 @@ impl Cluster {
 
     /// Re-arm every shard for a fresh session and heal/re-arm the ring —
     /// the cluster half of the warm == fresh contract
-    /// ([`Soc::reset_for_session`] per shard).
+    /// ([`Soc::reset_for_session`] per shard). A cluster that failed
+    /// over mid-session first restores the **base** partition (the one a
+    /// fresh build would plan), so warm == fresh survives failover.
     pub fn reset_for_session(&mut self) {
+        if self.replans > 0 {
+            let partition = ClusterMapper::plan(
+                &self.net,
+                self.config.chips,
+                self.config.n_cores,
+                self.config.max_neurons_per_core,
+            )
+            .expect("base partition planned successfully at construction");
+            let (chip_plan, _) = self.config.fault_plan.split_l3();
+            let mut shards = Vec::with_capacity(partition.shards());
+            for s in 0..partition.shards() {
+                let shard_config = SocConfig {
+                    chips: 1,
+                    fault_plan: chip_plan.clone(),
+                    ..self.config.clone()
+                };
+                shards.push(
+                    Soc::new(partition.sub_net(&self.net, s), shard_config)
+                        .expect("base shards built successfully at construction"),
+                );
+            }
+            self.shards = shards;
+            self.shard_nodes = (0..partition.shards()).collect();
+            self.partition = partition;
+            self.replans = 0;
+        }
+        self.saved = ClusterConservation::default();
         for s in &mut self.shards {
             s.reset_for_session();
         }
@@ -309,14 +423,37 @@ impl Cluster {
     }
 
     /// Zero every ledger and counter (shards + ring) while keeping the
-    /// built cluster, mirroring [`Soc::reset_accounting`].
+    /// built cluster, mirroring [`Soc::reset_accounting`]. A replanned
+    /// cluster keeps its degraded-capacity layout (the next window keeps
+    /// serving on the survivors); only [`Cluster::reset_for_session`]
+    /// restores the base partition.
     pub fn reset_accounting(&mut self) {
+        self.saved = ClusterConservation::default();
+        self.replans = 0;
         for s in &mut self.shards {
             s.reset_accounting();
         }
         if let Some(l3) = &mut self.l3 {
             l3.reset_accounting();
         }
+    }
+
+    /// Replace the armed fault plan cluster-wide: the on-chip half
+    /// re-arms on every shard fabric, the L3 half on a rebuilt ring.
+    /// Only valid between sessions (drained fabrics, zeroed windows) —
+    /// the serving retry loop calls this right after
+    /// [`Cluster::reset_for_session`] to install a plan's unfired tail.
+    pub fn rearm_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        let (chip_plan, l3_plan) = plan.split_l3();
+        l3_plan.validate_l3(self.config.chips)?;
+        for s in &mut self.shards {
+            s.rearm_fault_plan(chip_plan.clone())?;
+        }
+        if self.l3.is_some() {
+            self.l3 = Some(L3Fabric::new(self.config.chips, &l3_plan)?);
+        }
+        self.config.fault_plan = plan;
+        Ok(())
     }
 
     /// Fabric statistics summed over shard NoCs (the serving surface's
@@ -372,9 +509,10 @@ impl Cluster {
         h
     }
 
-    /// The cluster-wide flit books (see [`ClusterConservation`]).
+    /// The cluster-wide flit books (see [`ClusterConservation`]),
+    /// including any shards retired by failover replans this window.
     pub fn conservation(&self) -> ClusterConservation {
-        let mut c = ClusterConservation::default();
+        let mut c = self.saved;
         for s in &self.shards {
             c.injected += s.spikes_routed_window();
             c.delivered += s.noc_stats().delivered;
@@ -546,6 +684,52 @@ mod tests {
         let _ = cluster.finish_report("k");
         assert_eq!(cluster.fabric_health().dead_routers, 0);
         assert_eq!(cluster.l3_stats().unwrap().injected, 0);
+    }
+
+    #[test]
+    fn failover_replans_onto_surviving_chips_and_keeps_the_books() {
+        // 3 layers × 2 cores at 4 cores/chip → 2 shards; a 3-ring leaves
+        // one spare node for the terminal shard to fail over onto.
+        let net = deep_net(16, &[32, 32], 10, 6);
+        let mut cfg = tight_config(3, 4);
+        cfg.failover = true;
+        cfg.fault_plan = crate::noc::FaultPlan::none()
+            .kill_l3(1, crate::noc::When::Timestep(2));
+        let data = samples(4, 16, 6, 9);
+        let mut cluster = Cluster::new(net.clone(), cfg.clone()).unwrap();
+        assert_eq!(cluster.shards(), 2);
+        assert_eq!(cluster.shard_nodes(), &[0, 1]);
+        // Sample 0 hits the kill mid-flight: cross-chip flits drop.
+        cluster.run_sample(&data[0], true).unwrap();
+        assert!(cluster.l3_stats().unwrap().dropped > 0);
+        assert_eq!(cluster.replans(), 0, "replans happen at boundaries");
+        // The next boundary fails over: shard 1 moves to node 2, and the
+        // remaining samples match the unpartitioned reference again.
+        for s in &data[1..] {
+            let r = cluster.run_sample(s, true).unwrap();
+            let raster = s.to_raster(net.timesteps, net.input_size());
+            assert_eq!(r.counts, net.reference_run(&raster), "post-replan divergence");
+        }
+        assert_eq!(cluster.replans(), 1);
+        assert_eq!(cluster.shard_nodes(), &[0, 2]);
+        let c = cluster.conservation();
+        assert!(c.holds(), "conservation must span the replan: {c:?}");
+        assert_eq!(c.in_flight, 0);
+        assert!(c.dropped > 0, "pre-replan drops stay on the books");
+        // Warm reset restores the base layout (warm == fresh survives).
+        cluster.reset_for_session();
+        assert_eq!(cluster.replans(), 0);
+        assert_eq!(cluster.shard_nodes(), &[0, 1]);
+        // Failover off (the default): same storm, no replan.
+        let mut off = cfg;
+        off.failover = false;
+        let mut degraded = Cluster::new(net, off).unwrap();
+        for s in &data {
+            degraded.run_sample(s, true).unwrap();
+        }
+        assert_eq!(degraded.replans(), 0);
+        assert!(degraded.conservation().holds());
+        assert!(degraded.l3_stats().unwrap().dropped > 0, "stays degraded");
     }
 
     #[test]

@@ -263,6 +263,13 @@ impl L3Fabric {
         self.stats
     }
 
+    /// Whether ring node `chip` is currently dead (out-of-ring indices
+    /// read as alive). Failover consults this at sample boundaries to
+    /// decide whether any shard has become unreachable.
+    pub fn node_dead(&self, chip: usize) -> bool {
+        self.node_dead.get(chip).copied().unwrap_or(false)
+    }
+
     /// Degradation view in the same shape as an on-chip fabric's:
     /// `dead_routers` are dead ring nodes; the ring model severs no
     /// individual links, so `dead_links` stays 0.

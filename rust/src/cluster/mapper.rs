@@ -169,6 +169,35 @@ impl ClusterMapper {
             cut_neurons: cut,
         })
     }
+
+    /// Failover replanning: re-partition `net` over the **surviving**
+    /// chips of a `chips`-node ring whose `dead` mask marks unreachable
+    /// L3 nodes. Same DP, same objective — the exclusion mask only
+    /// shrinks the chip budget — plus the assignment of each new shard
+    /// to a concrete surviving ring node (ascending node order, so the
+    /// shard chain still travels the ring in one direction and the
+    /// replan is a pure function of `(net, dead mask, geometry)`).
+    ///
+    /// Errors when every chip is dead or the survivors cannot host the
+    /// network (the cluster then stays in its degraded configuration).
+    pub fn replan(
+        net: &NetworkDesc,
+        chips: usize,
+        dead: &[bool],
+        n_cores: usize,
+        max_neurons_per_core: usize,
+    ) -> Result<(Partition, Vec<usize>)> {
+        debug_assert_eq!(dead.len(), chips);
+        let alive: Vec<usize> = (0..chips).filter(|&c| !dead.get(c).copied().unwrap_or(false)).collect();
+        if alive.is_empty() {
+            return Err(Error::Config(format!(
+                "cluster failover: all {chips} chips are dead — nothing to replan onto"
+            )));
+        }
+        let partition = Self::plan(net, alive.len(), n_cores, max_neurons_per_core)?;
+        let nodes = alive[..partition.shards()].to_vec();
+        Ok((partition, nodes))
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +290,33 @@ mod tests {
         let err = ClusterMapper::plan(&net, 1, 3, 16).unwrap_err().to_string();
         assert!(err.contains("more than 1 chips"), "{err}");
         assert!(ClusterMapper::plan(&net, 0, 3, 16).is_err(), "chips = 0");
+    }
+
+    #[test]
+    fn replan_excludes_dead_chips_deterministically() {
+        // Depth-4 chain, 2 cores/layer at 3 cores per chip → needs ≥ 3
+        // shards on a healthy 4-ring; killing one chip still fits.
+        let net = chain(&[(8, 32), (32, 32), (32, 32), (32, 4)]);
+        let healthy = ClusterMapper::plan(&net, 4, 3, 16).unwrap();
+        assert!(healthy.shards() >= 3);
+        let (p, nodes) = ClusterMapper::replan(&net, 4, &[false, true, false, false], 3, 16).unwrap();
+        assert_eq!(p.shards(), nodes.len());
+        assert!(nodes.iter().all(|&n| n != 1), "dead chip must not host a shard");
+        let mut sorted = nodes.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, nodes, "shard chain travels the ring in node order");
+        // Deterministic: same mask, same outcome.
+        assert_eq!(
+            ClusterMapper::replan(&net, 4, &[false, true, false, false], 3, 16).unwrap(),
+            (p, nodes)
+        );
+        // Too few survivors → error, not a bogus plan.
+        assert!(ClusterMapper::replan(&net, 4, &[true, true, true, false], 3, 16).is_err());
+        assert!(ClusterMapper::replan(&net, 4, &[true; 4], 3, 16).is_err(), "all dead");
+        // No dead chips reduces to the base plan on the full ring.
+        let (p0, nodes0) = ClusterMapper::replan(&net, 4, &[false; 4], 3, 16).unwrap();
+        assert_eq!(p0, ClusterMapper::plan(&net, 4, 3, 16).unwrap());
+        assert_eq!(nodes0, (0..p0.shards()).collect::<Vec<_>>());
     }
 
     #[test]

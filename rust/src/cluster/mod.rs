@@ -34,7 +34,7 @@ pub use mapper::{ClusterMapper, Partition};
 use crate::datasets::Sample;
 use crate::energy::ChipReport;
 use crate::nn::NetworkDesc;
-use crate::noc::{FabricHealth, SimStats};
+use crate::noc::{FabricHealth, FaultPlan, SimStats};
 use crate::soc::{SampleResult, Soc, SocConfig};
 use crate::Result;
 
@@ -121,6 +121,19 @@ impl Engine {
         match self {
             Engine::Chip(s) => s.reset_for_session(),
             Engine::Cluster(c) => c.reset_for_session(),
+        }
+    }
+
+    /// Replace the engine's armed fault plan (drained fabric only — i.e.
+    /// between sessions). The retry path power-cycles an engine with
+    /// [`Engine::reset_for_session`], which re-arms the *original*
+    /// schedule; retry then installs the plan's unfired tail
+    /// ([`crate::noc::FaultPlan::shifted`]) so transient events that
+    /// already fired don't replay against the retried attempt.
+    pub fn rearm_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        match self {
+            Engine::Chip(s) => s.rearm_fault_plan(plan),
+            Engine::Cluster(c) => c.rearm_fault_plan(plan),
         }
     }
 

@@ -8,16 +8,21 @@
 //!     "domains": 1, "n_cores": 20, "max_neurons_per_core": 8192,
 //!     "fifo_depth": 4, "f_core_mhz": 100, "f_cpu_mhz": 50,
 //!     "supply_v": 1.08, "use_noc": true, "drive_cpu": true,
-//!     "chips": 1, "fault_plan": "kill-router:0@t2"
+//!     "chips": 1, "fault_plan": "kill-router:0@t2", "failover": false
 //!   },
 //!   "workload": {"name": "nmnist", "samples": 50, "seed": 7},
 //!   "check": "reference",
-//!   "artifacts": "artifacts"
+//!   "artifacts": "artifacts",
+//!   "recovery": {
+//!     "deadline_cycles": 0, "deadline_wall_ms": 0, "retries": 0,
+//!     "backoff_cycles": 0, "retry_seed": 0, "quarantine_after": 0
+//!   }
 //! }
 //! ```
 
 use crate::coordinator::GoldenCheck;
 use crate::datasets::Workload;
+use crate::serve::RecoveryPolicy;
 use crate::soc::SocConfig;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -45,6 +50,9 @@ pub struct RunConfig {
     pub check: GoldenCheck,
     /// Artifacts directory.
     pub artifacts: PathBuf,
+    /// Serving recovery policy (deadlines, retry, quarantine). All-zero
+    /// (the default) disables every mechanism.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for RunConfig {
@@ -58,6 +66,7 @@ impl Default for RunConfig {
             },
             check: GoldenCheck::Reference,
             artifacts: PathBuf::from("artifacts"),
+            recovery: RecoveryPolicy::disabled(),
         }
     }
 }
@@ -136,6 +145,9 @@ impl RunConfig {
             if let Some(v) = chip.get_opt("fault_plan") {
                 s.fault_plan = crate::noc::FaultPlan::parse(v.as_str()?)?;
             }
+            if let Some(v) = chip.get_opt("failover") {
+                s.failover = v.as_bool()?;
+            }
         }
         if let Some(w) = j.get_opt("workload") {
             cfg.workload.workload = parse_workload(w.get("name")?.as_str()?)?;
@@ -151,6 +163,27 @@ impl RunConfig {
         }
         if let Some(a) = j.get_opt("artifacts") {
             cfg.artifacts = PathBuf::from(a.as_str()?);
+        }
+        if let Some(r) = j.get_opt("recovery") {
+            let p = &mut cfg.recovery;
+            if let Some(v) = r.get_opt("deadline_cycles") {
+                p.deadline_cycles = v.as_i64()? as u64;
+            }
+            if let Some(v) = r.get_opt("deadline_wall_ms") {
+                p.deadline_wall_ms = v.as_i64()? as u64;
+            }
+            if let Some(v) = r.get_opt("retries") {
+                p.retries = v.as_usize()? as u32;
+            }
+            if let Some(v) = r.get_opt("backoff_cycles") {
+                p.backoff_cycles = v.as_i64()? as u64;
+            }
+            if let Some(v) = r.get_opt("retry_seed") {
+                p.retry_seed = v.as_i64()? as u64;
+            }
+            if let Some(v) = r.get_opt("quarantine_after") {
+                p.quarantine_after = v.as_i64()? as u64;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -233,6 +266,41 @@ mod tests {
         std::fs::write(&tmp, r#"{"chip": {"chips": 0}}"#).unwrap();
         assert!(RunConfig::load(&tmp).is_err());
         std::fs::write(&tmp, r#"{"chip": {"chips": 17}}"#).unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn recovery_and_failover_keys_parse_and_validate() {
+        let tmp = std::env::temp_dir().join("fsoc_cfg_recovery_test.json");
+        std::fs::write(
+            &tmp,
+            r#"{
+                "chip": {"chips": 2, "failover": true},
+                "recovery": {
+                    "deadline_cycles": 500000, "retries": 2,
+                    "backoff_cycles": 64, "retry_seed": 9,
+                    "quarantine_after": 3
+                }
+            }"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::load(&tmp).unwrap();
+        assert!(cfg.soc.failover);
+        assert_eq!(cfg.recovery.deadline_cycles, 500_000);
+        assert_eq!(cfg.recovery.retries, 2);
+        assert_eq!(cfg.recovery.backoff_cycles, 64);
+        assert_eq!(cfg.recovery.retry_seed, 9);
+        assert_eq!(cfg.recovery.quarantine_after, 3);
+        assert!(cfg.recovery.enabled());
+        // Defaults stay fully disabled.
+        assert!(!RunConfig::default().recovery.enabled());
+        assert!(!RunConfig::default().soc.failover);
+        // Policy nonsense is rejected at the same choke point as the
+        // chip knobs (retries capped, orphan backoff).
+        std::fs::write(&tmp, r#"{"recovery": {"retries": 33}}"#).unwrap();
+        assert!(RunConfig::load(&tmp).is_err());
+        std::fs::write(&tmp, r#"{"recovery": {"backoff_cycles": 8}}"#).unwrap();
         assert!(RunConfig::load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
     }

@@ -44,6 +44,12 @@ pub enum Error {
     /// queue depth that was exceeded.
     QueueFull(usize),
 
+    /// A serving session overran its simulated-cycle or host-wall
+    /// deadline (see [`crate::serve::RecoveryPolicy`]). Distinct from
+    /// `Noc`'s `FabricDegraded` stall classification: the fabric made
+    /// progress, just not fast enough.
+    Deadline(String),
+
     /// I/O error.
     Io(std::io::Error),
 }
@@ -67,6 +73,7 @@ impl Clone for Error {
             Error::Artifact(m) => Error::Artifact(m.clone()),
             Error::Json(m) => Error::Json(m.clone()),
             Error::QueueFull(d) => Error::QueueFull(*d),
+            Error::Deadline(m) => Error::Deadline(m.clone()),
             Error::Io(e) => Error::Io(std::io::Error::new(e.kind(), e.to_string())),
         }
     }
@@ -88,6 +95,7 @@ impl fmt::Display for Error {
             Error::QueueFull(d) => {
                 write!(f, "serve queue full (depth {d}); retry or use submit()")
             }
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }

@@ -83,6 +83,15 @@ fn print_help() {
                    --queue-depth Q (bounded submission queue; default = N)\n\
                    --chips C (each worker serves a whole C-chip cluster)\n\
                    --no-warm (fresh engine per session instead of warm reuse)\n\
+                   --deadline-cycles N (kill a session past N simulated cycles)\n\
+                   --deadline-wall-ms M (host wall-clock watchdog per session)\n\
+                   --retries R --backoff-cycles B --retry-seed S (deterministic\n\
+                   retry of failed/degraded/deadline-killed sessions with\n\
+                   exponential simulated-cycle backoff; all default 0 = off)\n\
+                   --quarantine-after T (discard a warm engine once dead routers\n\
+                   + dead links + dropped flits reach T)\n\
+                   --failover (with --chips > 1: re-partition onto surviving\n\
+                   chips when a fault makes a shard unreachable)\n\
                    --workload <spec>  (spec: nmnist | dvsgesture | cifar10 |\n\
                    replay:<dataset.json> | traffic:<inputs>x<classes>x<timesteps>@<rate> |\n\
                    synthetic:<inputs>x<classes>x<timesteps>@<rate>;\n\
@@ -149,6 +158,9 @@ fn apply_chip_flags(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(spec) = args.get("fault-plan") {
         cfg.soc.fault_plan = fullerene_soc::noc::FaultPlan::parse(spec)?;
     }
+    if args.flag("failover") {
+        cfg.soc.failover = true;
+    }
     Ok(())
 }
 
@@ -169,6 +181,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "domains",
         "chips",
         "fault-plan",
+        "failover",
     ])
     .map_err(Error::Config)?;
     let mut cfg = match args.get("config") {
@@ -254,6 +267,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "domains",
         "chips",
         "fault-plan",
+        "failover",
+        "deadline-cycles",
+        "deadline-wall-ms",
+        "retries",
+        "backoff-cycles",
+        "retry-seed",
+        "quarantine-after",
     ])
     .map_err(Error::Config)?;
     let sessions: usize = args.get_parse_or("sessions", 4);
@@ -275,6 +295,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let check = match args.get("check") {
         Some(c) => parse_check(c)?,
         None => fullerene_soc::coordinator::GoldenCheck::None,
+    };
+    // Self-healing knobs (all default to 0 = off; range-checked by the
+    // builder choke point like every other serving knob).
+    let recovery = fullerene_soc::serve::RecoveryPolicy {
+        deadline_cycles: args.get_parse_or("deadline-cycles", 0),
+        deadline_wall_ms: args.get_parse_or("deadline-wall-ms", 0),
+        retries: args.get_parse_or("retries", 0),
+        backoff_cycles: args.get_parse_or("backoff-cycles", 0),
+        retry_seed: args.get_parse_or("retry-seed", 0),
+        quarantine_after: args.get_parse_or("quarantine-after", 0),
     };
     if sessions == 0 {
         return Err(Error::config("--sessions must be >= 1"));
@@ -347,6 +377,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .workers(workers)
         .queue_depth(queue_depth)
         .keep_warm(keep_warm)
+        .recovery(recovery)
         .build_serve_runtime(&net)?;
     for spec in specs {
         rt.submit(spec)?;
@@ -363,6 +394,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ),
             Err(e) => println!("FAILED {:10} #{:<3} {e}", r.name, r.index),
         }
+    }
+    // Every submitted session has resolved once the outcome stream ends,
+    // so the health counters are final here (and printed before finish,
+    // which errors when no session succeeded — the recovery tallies are
+    // most interesting exactly then).
+    if recovery.enabled() {
+        let h = rt.health_report();
+        println!(
+            "recovery: {}/{} sessions completed, {} retries ({} cycles burned), \
+             {} deadline-exceeded, {} fabric-degraded, {} failed, \
+             {} quarantines, {} rebuilds, {} replans",
+            h.completed,
+            h.sessions,
+            h.retries,
+            h.retry_cycles_burned,
+            h.deadline_exceeded,
+            h.fabric_degraded,
+            h.failed,
+            h.quarantines,
+            h.rebuilds,
+            h.replans
+        );
     }
     // … then fold the submission-order aggregate. Failed sessions are
     // isolated: listed below, excluded from the merge.

@@ -185,6 +185,35 @@ impl FaultPlan {
         self
     }
 
+    /// The plan as seen by a retry attempt that starts `offset` cycles
+    /// into the original schedule: cycle-keyed events that would already
+    /// have fired are dropped (a kill that fired is healed by the
+    /// power-cycle; a congest window that opened has closed), and later
+    /// ones shift earlier by `offset` so the storm's *remaining* tail
+    /// still hits the retried session at the same absolute point.
+    /// Timestep-keyed events re-fire unchanged — they key off workload
+    /// progress, which the retry replays from the start. `offset == 0`
+    /// is an exact clone, so retry-disabled paths stay bit-identical.
+    pub fn shifted(&self, offset: u64) -> FaultPlan {
+        if offset == 0 {
+            return self.clone();
+        }
+        let mut plan = FaultPlan::none();
+        for ev in &self.events {
+            match ev.when {
+                When::Cycle(c) if c > offset => {
+                    plan.events.push(FaultEvent {
+                        when: When::Cycle(c - offset),
+                        kind: ev.kind.clone(),
+                    });
+                }
+                When::Cycle(_) => {}
+                When::Timestep(_) => plan.events.push(ev.clone()),
+            }
+        }
+        plan
+    }
+
     /// True when the plan schedules off-chip (L3) events.
     pub fn has_l3_events(&self) -> bool {
         self.events.iter().any(|ev| {
@@ -658,6 +687,38 @@ mod tests {
         let oob = FaultPlan::none().kill_l3(4, When::Cycle(1));
         assert!(oob.validate_l3(4).is_err(), "chip 4 of a 4-chip ring");
         assert!(FaultPlan::parse("throttle-l3:0@5").is_err(), "factor 0");
+    }
+
+    #[test]
+    fn shifted_drops_fired_cycles_and_keeps_timesteps() {
+        let plan = FaultPlan::none()
+            .congest(0, 300, When::Cycle(100))
+            .kill_router(3, When::Cycle(500))
+            .throttle(LinkLevel::L2, 4, When::Timestep(2));
+        // Zero offset is an exact clone (the retry-off contract).
+        assert_eq!(plan.shifted(0), plan);
+        // Offset past the congest window: it has fired and healed; the
+        // later kill shifts earlier; the timestep event re-fires as-is.
+        let s = plan.shifted(200);
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(
+            s.events[0],
+            FaultEvent { when: When::Cycle(300), kind: FaultKind::RouterKill { node: 3 } }
+        );
+        assert_eq!(
+            s.events[1],
+            FaultEvent {
+                when: When::Timestep(2),
+                kind: FaultKind::LinkThrottle { level: LinkLevel::L2, factor: 4 }
+            }
+        );
+        // Offset past everything cycle-keyed: only timesteps remain.
+        let s = plan.shifted(10_000);
+        assert_eq!(s.events.len(), 1);
+        assert!(matches!(s.events[0].when, When::Timestep(2)));
+        // An event exactly at the offset boundary counts as fired.
+        let edge = FaultPlan::none().kill_router(1, When::Cycle(200));
+        assert!(edge.shifted(200).is_empty());
     }
 
     #[test]

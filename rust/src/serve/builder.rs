@@ -8,6 +8,7 @@
 //! so no construction route can skip range checking anymore.
 
 use super::pool::SocPool;
+use super::recovery::RecoveryPolicy;
 use super::runtime::ServeRuntime;
 use super::session::Session;
 use crate::cluster::{Cluster, Engine};
@@ -30,6 +31,7 @@ pub struct SocBuilder {
     workers: usize,
     queue_depth: usize,
     keep_warm: bool,
+    recovery: RecoveryPolicy,
 }
 
 /// Default bounded submission-queue depth for serve runtimes built
@@ -60,6 +62,7 @@ impl SocBuilder {
                 .unwrap_or(1),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             keep_warm: true,
+            recovery: RecoveryPolicy::disabled(),
         }
     }
 
@@ -72,12 +75,13 @@ impl SocBuilder {
     }
 
     /// Adopt a full [`RunConfig`] (JSON/CLI layer): chip, check mode,
-    /// artifacts directory and sample limit.
+    /// artifacts directory, sample limit and recovery policy.
     pub fn from_run_config(cfg: &RunConfig) -> Self {
         Self::from_soc_config(cfg.soc.clone())
             .check(cfg.check)
             .artifacts(cfg.artifacts.clone())
             .limit(cfg.workload.samples)
+            .recovery(cfg.recovery)
     }
 
     /// The chip config assembled so far (unvalidated).
@@ -207,6 +211,68 @@ impl SocBuilder {
         self
     }
 
+    /// Install a whole [`RecoveryPolicy`] for pools/runtimes built from
+    /// this builder (deadlines, deterministic retry, quarantine).
+    /// Disabled by default; validated by [`SocBuilder::validate`] like
+    /// every other knob.
+    pub fn recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
+    }
+
+    /// Kill a session once its simulated core-clock cycles exceed this
+    /// budget (0 = no deadline; see [`RecoveryPolicy::deadline_cycles`]).
+    pub fn deadline_cycles(mut self, cycles: u64) -> Self {
+        self.recovery.deadline_cycles = cycles;
+        self
+    }
+
+    /// Host wall-clock watchdog per session, in milliseconds (0 = off;
+    /// see [`RecoveryPolicy::deadline_wall_ms`]).
+    pub fn deadline_wall_ms(mut self, ms: u64) -> Self {
+        self.recovery.deadline_wall_ms = ms;
+        self
+    }
+
+    /// Retry budget for failed/degraded/deadline-killed sessions (0 =
+    /// never retry; see [`RecoveryPolicy::retries`]).
+    pub fn retries(mut self, retries: u32) -> Self {
+        self.recovery.retries = retries;
+        self
+    }
+
+    /// Base simulated-cycle backoff before the first retry, doubling per
+    /// attempt (see [`RecoveryPolicy::backoff_cycles`]).
+    pub fn backoff_cycles(mut self, cycles: u64) -> Self {
+        self.recovery.backoff_cycles = cycles;
+        self
+    }
+
+    /// Seed of the deterministic retry-backoff jitter (0 = no jitter;
+    /// see [`RecoveryPolicy::retry_seed`]).
+    pub fn retry_seed(mut self, seed: u64) -> Self {
+        self.recovery.retry_seed = seed;
+        self
+    }
+
+    /// Quarantine a warm engine after a session whose degradation
+    /// counters reach this threshold (0 = never; see
+    /// [`RecoveryPolicy::quarantine_after`]).
+    pub fn quarantine_after(mut self, threshold: u64) -> Self {
+        self.recovery.quarantine_after = threshold;
+        self
+    }
+
+    /// Cluster shard failover: on a mid-session chip/ring fault that
+    /// makes a shard unreachable, re-partition the network over the
+    /// surviving chips at the next sample boundary
+    /// ([`crate::cluster::Cluster`]). Off by default; meaningless (and
+    /// ignored) at `chips == 1`.
+    pub fn failover(mut self, on: bool) -> Self {
+        self.soc.failover = on;
+        self
+    }
+
     /// **The** validation choke point: every range check the chip model
     /// imposes, applied no matter how the config was assembled (JSON
     /// file, CLI flags, fluent calls).
@@ -271,6 +337,7 @@ impl SocBuilder {
                 self.queue_depth
             )));
         }
+        self.recovery.validate()?;
         if !s.fault_plan.is_empty() {
             // Split the plan: the on-chip half is checked against the
             // configured topology (a kill naming a core, a cut naming an
@@ -328,10 +395,13 @@ impl SocBuilder {
     }
 
     /// Validate and build a serving pool over `net` with this builder's
-    /// worker count and check mode.
+    /// worker count, check mode and recovery policy.
     pub fn build_pool(&self, net: &NetworkDesc) -> Result<SocPool> {
         self.validate()?;
-        SocPool::new(net.clone(), self.soc.clone(), self.workers, self.check)
+        Ok(
+            SocPool::new(net.clone(), self.soc.clone(), self.workers, self.check)?
+                .with_recovery(self.recovery),
+        )
     }
 
     /// Validate and spawn a persistent [`ServeRuntime`] over `net` with
@@ -348,6 +418,7 @@ impl SocBuilder {
             self.check,
             self.queue_depth,
             self.keep_warm,
+            self.recovery,
         )
     }
 
@@ -410,6 +481,45 @@ mod tests {
         assert!(SocBuilder::new().chips(17).validate().is_err());
         assert!(SocBuilder::new().chips(16).validate().is_ok());
         assert!(SocBuilder::new().validate().is_ok());
+        // Recovery knobs validate through the same choke point.
+        assert!(SocBuilder::new().retries(33).validate().is_err());
+        assert!(SocBuilder::new().backoff_cycles(10).validate().is_err());
+        assert!(SocBuilder::new()
+            .retries(2)
+            .backoff_cycles(64)
+            .deadline_cycles(1_000_000)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn recovery_and_failover_knobs_reach_their_configs() {
+        let b = SocBuilder::new()
+            .deadline_cycles(500_000)
+            .deadline_wall_ms(2_000)
+            .retries(3)
+            .backoff_cycles(128)
+            .retry_seed(42)
+            .quarantine_after(5)
+            .chips(2)
+            .failover(true);
+        let cfg = b.build_config().unwrap();
+        assert!(cfg.failover);
+        let expected = RecoveryPolicy {
+            deadline_cycles: 500_000,
+            deadline_wall_ms: 2_000,
+            retries: 3,
+            backoff_cycles: 128,
+            retry_seed: 42,
+            quarantine_after: 5,
+        };
+        assert_eq!(b.recovery, expected);
+        assert!(expected.enabled());
+        // The whole-policy setter overrides the per-knob ones; failover
+        // lives on the chip config and is untouched by it.
+        let b = b.recovery(RecoveryPolicy::disabled());
+        assert!(!b.recovery.enabled());
+        assert!(b.build_config().unwrap().failover);
     }
 
     #[test]

@@ -28,19 +28,26 @@
 //!   failure isolation;
 //! - [`SocPool`] — the sequential reference pool (`serve_sequential`
 //!   runs a fresh engine per session on the calling thread; the
-//!   runtime's bit-identity guarantee is stated against it).
+//!   runtime's bit-identity guarantee is stated against it);
+//! - [`RecoveryPolicy`] — opt-in self-healing: per-session deadlines,
+//!   deterministic seeded retry with simulated-cycle backoff, warm-engine
+//!   quarantine thresholds, and runtime [`HealthReport`] counters
+//!   ([`ServeRuntime::health_report`]); disabled by default and
+//!   bit-identical to the pre-recovery behavior when off.
 //!
 //! The batch layer ([`crate::coordinator::ExperimentRunner`]) is rebuilt
 //! on top of these primitives.
 
 pub mod builder;
 pub mod pool;
+pub mod recovery;
 pub mod runtime;
 pub mod session;
 pub mod workload;
 
 pub use builder::SocBuilder;
 pub use pool::{ServeOutcome, SessionFailure, SessionOutcome, SessionSpec, SocPool};
+pub use recovery::{HealthReport, RecoveryPolicy, SessionVerdict};
 pub use runtime::{Outcomes, ServeRuntime, SessionResult, SessionTicket};
 pub use session::{DegradationStats, Session, SessionReport, SessionStats};
 pub use workload::{

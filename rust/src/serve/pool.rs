@@ -17,10 +17,12 @@
 //! determinism guarantee is stated against (merged reports fold in
 //! submission order, so the two match down to `f64::to_bits`).
 
+use super::recovery::{RecoveryPolicy, SessionVerdict};
 use super::session::{DegradationStats, Session, SessionStats};
 use super::workload::Workload;
 use crate::cluster::Engine;
 use crate::coordinator::GoldenCheck;
+use crate::datasets::Sample;
 use crate::energy::{AreaModel, ChipReport};
 use crate::nn::NetworkDesc;
 use crate::soc::SocConfig;
@@ -70,6 +72,20 @@ pub struct SessionOutcome {
     /// not simulated physics — deliberately absent from every
     /// determinism comparison.
     pub queue_wait_s: f64,
+    /// Attempts it took to complete the session (1 = first try; > 1 only
+    /// with a [`RecoveryPolicy`] retry budget).
+    pub attempts: u32,
+    /// Simulated cycles burned by failed attempts plus deterministic
+    /// retry backoff — the recovery overhead ledger. 0 without retries.
+    pub retry_cycles_burned: u64,
+    /// Terminal verdict. A returned outcome is always
+    /// [`SessionVerdict::Completed`]; failed sessions surface their
+    /// verdict through [`crate::serve::HealthReport`] classification of
+    /// the error instead.
+    pub verdict: SessionVerdict,
+    /// Cluster failover replans performed during the session (0 on
+    /// single-chip engines or with `failover` disabled).
+    pub replans: u64,
 }
 
 /// A session that failed in isolation: its siblings kept serving and the
@@ -123,28 +139,88 @@ pub(crate) fn check_geometry(
     Ok(())
 }
 
-/// Serve one session to exhaustion on the given engine (one chip or a
-/// cluster). This is the single session-execution code path shared by
-/// [`SocPool::serve_sequential`] and the
-/// [`ServeRuntime`](super::runtime::ServeRuntime) workers, which is what
-/// makes the two bit-identical. Returns the engine alongside the outcome
-/// so warm-serving callers can re-arm it; error paths drop the engine (a
-/// failed session must never leak state into a later one).
-pub(crate) fn run_session_on(
+/// Buffers samples pulled from a workload so retry attempts replay the
+/// **exact** stream the failed attempt saw — a retried session is a pure
+/// function of (net, config, plan, samples), never of how far the
+/// upstream workload happened to advance.
+struct ReplayBuffer<'a> {
+    inner: &'a mut dyn Workload,
+    seen: Vec<Sample>,
+    cursor: usize,
+}
+
+impl<'a> ReplayBuffer<'a> {
+    fn new(inner: &'a mut dyn Workload) -> Self {
+        ReplayBuffer {
+            inner,
+            seen: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    fn next(&mut self) -> Option<Sample> {
+        if self.cursor < self.seen.len() {
+            let s = self.seen[self.cursor].clone();
+            self.cursor += 1;
+            return Some(s);
+        }
+        let s = self.inner.next_sample()?;
+        self.seen.push(s.clone());
+        self.cursor += 1;
+        Some(s)
+    }
+
+    fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// The sample stream one attempt drains: the raw workload (retry-off
+/// fast path — zero buffering, today's behavior bit for bit) or a
+/// rewindable [`ReplayBuffer`].
+enum SampleSource<'a, 'b> {
+    Stream(&'a mut dyn Workload),
+    Replay(&'a mut ReplayBuffer<'b>),
+}
+
+impl SampleSource<'_, '_> {
+    fn next(&mut self) -> Option<Sample> {
+        match self {
+            SampleSource::Stream(w) => w.next_sample(),
+            SampleSource::Replay(r) => r.next(),
+        }
+    }
+}
+
+/// One session attempt on one engine. Returns `(result, engine,
+/// simulated cycles consumed)`; unlike the pre-recovery path, an erroring
+/// attempt hands its engine back so the retry loop can power-cycle it
+/// instead of paying a fresh build. Deadlines are checked **after** each
+/// push — a session whose final sample completes inside the budget never
+/// sees a kill, regardless of pull order.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
     engine: Engine,
     net: &NetworkDesc,
     check: GoldenCheck,
     name: &str,
-    workload: &mut dyn Workload,
+    source: &mut SampleSource<'_, '_>,
+    deadline_cycles: u64,
+    wall_deadline: Option<std::time::Instant>,
     queue_wait_s: f64,
-) -> Result<(SessionOutcome, Engine)> {
-    check_geometry(net, name, workload)?;
+) -> (Result<SessionOutcome>, Option<Engine>, u64) {
     let mut session = Session::open_engine(engine, name);
     let use_ref = matches!(check, GoldenCheck::Reference);
     let mut mismatches = 0u64;
     let mut checked = 0u64;
-    while let Some(sample) = workload.next_sample() {
-        let r = session.push(&sample)?;
+    while let Some(sample) = source.next() {
+        let r = match session.push(&sample) {
+            Ok(r) => r,
+            Err(e) => {
+                let cycles = session.cycles();
+                return (Err(e), Some(session.into_engine()), cycles);
+            }
+        };
         if use_ref {
             let raster = sample.to_raster(net.timesteps, net.input_size());
             let expect = net.reference_run(&raster);
@@ -153,12 +229,36 @@ pub(crate) fn run_session_on(
                 mismatches += 1;
             }
         }
+        if deadline_cycles > 0 && session.cycles() > deadline_cycles {
+            let cycles = session.cycles();
+            let e = Error::Deadline(format!(
+                "session '{name}' burned {cycles} simulated cycles against a \
+                 {deadline_cycles}-cycle budget"
+            ));
+            return (Err(e), Some(session.into_engine()), cycles);
+        }
+        if let Some(dl) = wall_deadline {
+            if std::time::Instant::now() >= dl {
+                let cycles = session.cycles();
+                let e = Error::Deadline(format!(
+                    "session '{name}' overran its host wall-clock deadline"
+                ));
+                return (Err(e), Some(session.into_engine()), cycles);
+            }
+        }
     }
     let noc = session.noc_stats();
     let degradation = session.degradation();
+    // Read before close: finish_report resets the window counters.
+    let replans = session
+        .engine()
+        .as_cluster()
+        .map(|c| c.replans())
+        .unwrap_or(0);
     let (closed, engine) = session.close_reuse();
-    Ok((
-        SessionOutcome {
+    let cycles = closed.stats.cycles;
+    (
+        Ok(SessionOutcome {
             name: name.to_string(),
             report: closed.report,
             stats: closed.stats,
@@ -167,9 +267,115 @@ pub(crate) fn run_session_on(
             mismatches,
             checked,
             queue_wait_s,
-        },
-        engine,
-    ))
+            attempts: 1,
+            retry_cycles_burned: 0,
+            verdict: SessionVerdict::Completed,
+            replans,
+        }),
+        Some(engine),
+        cycles,
+    )
+}
+
+/// Serve one session to exhaustion on the given engine (one chip or a
+/// cluster). This is the single session-execution code path shared by
+/// [`SocPool::serve_sequential`] and the
+/// [`ServeRuntime`](super::runtime::ServeRuntime) workers, which is what
+/// makes the two bit-identical — including recovery: deadline kills and
+/// seeded retry run the same code on either path. With the default
+/// disabled [`RecoveryPolicy`] this streams samples exactly like the
+/// pre-recovery code (no buffering, no extra checks firing), and error
+/// paths drop the engine (a failed session must never leak state into a
+/// later one). With a retry budget, failed attempts power-cycle the
+/// engine via [`Engine::reset_for_session`], re-arm the fault plan's
+/// unfired tail ([`crate::noc::FaultPlan::shifted`] — transients that
+/// already fired do not replay), replay the same samples, and ledger the
+/// burned cycles into the outcome.
+pub(crate) fn run_session_on(
+    engine: Engine,
+    net: &NetworkDesc,
+    check: GoldenCheck,
+    name: &str,
+    workload: &mut dyn Workload,
+    queue_wait_s: f64,
+    policy: &RecoveryPolicy,
+) -> Result<(SessionOutcome, Engine)> {
+    check_geometry(net, name, workload)?;
+    let wall_deadline = if policy.deadline_wall_ms > 0 {
+        Some(std::time::Instant::now() + std::time::Duration::from_millis(policy.deadline_wall_ms))
+    } else {
+        None
+    };
+    if policy.retries == 0 {
+        let (r, engine, _) = run_attempt(
+            engine,
+            net,
+            check,
+            name,
+            &mut SampleSource::Stream(workload),
+            policy.deadline_cycles,
+            wall_deadline,
+            queue_wait_s,
+        );
+        let outcome = r?;
+        return Ok((
+            outcome,
+            engine.expect("a successful attempt returns its engine"),
+        ));
+    }
+    // Retry path: capture the build recipe up front (the engine may be
+    // replaced), buffer the stream for bit-exact replay.
+    let config = engine.config().clone();
+    let base_plan = config.fault_plan.clone();
+    let mut replay = ReplayBuffer::new(workload);
+    let mut engine = engine;
+    let mut burned = 0u64;
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        let (r, engine_back, cycles) = run_attempt(
+            engine,
+            net,
+            check,
+            name,
+            &mut SampleSource::Replay(&mut replay),
+            policy.deadline_cycles,
+            wall_deadline,
+            queue_wait_s,
+        );
+        match r {
+            Ok(mut outcome) => {
+                outcome.attempts = attempts;
+                outcome.retry_cycles_burned = burned;
+                let mut engine = engine_back.expect("a successful attempt returns its engine");
+                if attempts > 1 {
+                    // The winning attempt ran the plan's shifted tail;
+                    // hand the engine back with the *original* plan so
+                    // warm reuse stays bit-identical to a fresh chip.
+                    engine.rearm_fault_plan(base_plan.clone())?;
+                }
+                return Ok((outcome, engine));
+            }
+            Err(e) => {
+                if attempts > policy.retries {
+                    return Err(e);
+                }
+                burned = burned
+                    .saturating_add(cycles)
+                    .saturating_add(policy.backoff_for(attempts));
+                let mut eng = match engine_back {
+                    Some(mut eng) => {
+                        eng.reset_for_session();
+                        eng
+                    }
+                    None => Engine::new(net.clone(), config.clone())?,
+                };
+                eng.rearm_fault_plan(base_plan.shifted(burned))?;
+                replay.rewind();
+                engine = eng;
+            }
+        }
+    }
 }
 
 /// Merge successful session outcomes (already in submission order) into
@@ -208,6 +414,7 @@ pub struct SocPool {
     config: SocConfig,
     workers: usize,
     check: GoldenCheck,
+    recovery: RecoveryPolicy,
 }
 
 impl SocPool {
@@ -238,7 +445,18 @@ impl SocPool {
             config,
             workers,
             check,
+            recovery: RecoveryPolicy::default(),
         })
+    }
+
+    /// Arm a recovery policy on the sequential path (deadlines + retry;
+    /// the pool has no warm engines, so quarantine never applies here).
+    /// The default disabled policy leaves serving bit-identical to a
+    /// pool built before recovery existed — which keeps the
+    /// runtime ≡ sequential oracle meaningful under recovery too.
+    pub fn with_recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
     }
 
     /// Worker-thread count the pool dispatches across.
@@ -271,6 +489,7 @@ impl SocPool {
                 &spec.name,
                 &mut *spec.workload,
                 0.0,
+                &self.recovery,
             )?;
             sessions.push(outcome);
         }

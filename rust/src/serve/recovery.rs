@@ -1,0 +1,307 @@
+//! Policy-driven session recovery: deadlines, deterministic retry with
+//! simulated-cycle backoff, and engine quarantine thresholds.
+//!
+//! The fault-injection subsystem (PR 6/7) stops at *detection* — a
+//! degraded session is faithfully reported and thrown away. This module
+//! closes the detect→react loop for the serving layer:
+//!
+//! - [`RecoveryPolicy`] — the knob bundle carried from
+//!   [`crate::serve::SocBuilder`] into [`crate::serve::SocPool`] and
+//!   [`crate::serve::ServeRuntime`]. All-zero (the default) disables
+//!   every mechanism, and the disabled path is **bit-identical** to the
+//!   pre-recovery serving code: the determinism oracles (warm≡fresh,
+//!   runtime≡sequential, N=1 cluster≡chip) are untouched unless a user
+//!   opts in.
+//! - [`SessionVerdict`] — the terminal classification of a session
+//!   attempt. `DeadlineExceeded` is distinct from `FabricDegraded`: the
+//!   former means the fabric made progress but not fast enough, the
+//!   latter that it reached a zero-progress fixed point.
+//! - [`HealthReport`] — runtime-level recovery counters (retries,
+//!   deadline kills, quarantines, rebuilds) aggregated across workers.
+//!
+//! Determinism contract: every recovery decision is a pure function of
+//! (policy, session cycle counts, fault plan). Backoff is charged in
+//! **simulated cycles** with a seeded jitter term — no wall-clock
+//! randomness — so a retried session replays `f64::to_bits`-identically
+//! run to run. The only wall-clock mechanism is the optional
+//! `deadline_wall_ms` host watchdog, which by construction only fires on
+//! a hung host and never participates in the simulated ledger.
+
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// Recovery knobs for the serving layer. Zero means "off" for every
+/// field; [`RecoveryPolicy::default`] is fully disabled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Kill a session once its accumulated simulated core-clock cycles
+    /// exceed this budget (checked at sample granularity). 0 = no
+    /// simulated deadline.
+    pub deadline_cycles: u64,
+    /// Kill a session once its host wall-clock run time exceeds this
+    /// many milliseconds — a watchdog for hung hosts, deliberately
+    /// outside the simulated ledger. 0 = no wall deadline.
+    pub deadline_wall_ms: u64,
+    /// Re-run a failed/degraded/deadline-killed session up to this many
+    /// times on a power-cycled engine. 0 = never retry (today's
+    /// behavior, bit for bit).
+    pub retries: u32,
+    /// Base simulated-cycle backoff charged before the first retry;
+    /// doubles per attempt (capped). 0 = retry immediately (the failed
+    /// attempt's own cycles are still charged).
+    pub backoff_cycles: u64,
+    /// Seed of the deterministic backoff jitter. 0 = no jitter.
+    pub retry_seed: u64,
+    /// Quarantine a warm engine after a session whose degradation
+    /// counters (dead routers + dead links + dropped flits) reach this
+    /// threshold: the engine is discarded and the next session builds a
+    /// fresh one. 0 = never quarantine.
+    pub quarantine_after: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            deadline_cycles: 0,
+            deadline_wall_ms: 0,
+            retries: 0,
+            backoff_cycles: 0,
+            retry_seed: 0,
+            quarantine_after: 0,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// The fully-disabled policy (same as `default`, named for clarity
+    /// at call sites that must pin pre-recovery behavior).
+    pub fn disabled() -> Self {
+        RecoveryPolicy::default()
+    }
+
+    /// True when any recovery mechanism is armed.
+    pub fn enabled(&self) -> bool {
+        self.deadline_cycles > 0
+            || self.deadline_wall_ms > 0
+            || self.retries > 0
+            || self.quarantine_after > 0
+    }
+
+    /// Range-check the policy (called from the `SocBuilder` choke
+    /// point, so no construction route skips it).
+    pub fn validate(&self) -> Result<()> {
+        if self.retries > 32 {
+            return Err(Error::config(format!(
+                "retries is {} (max 32 — a session that fails 33 times is not \
+                 transiently unlucky)",
+                self.retries
+            )));
+        }
+        if self.backoff_cycles > 0 && self.retries == 0 {
+            return Err(Error::config(
+                "backoff_cycles is set but retries is 0 — backoff only applies \
+                 between retry attempts",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Simulated-cycle backoff charged before retry attempt `attempt`
+    /// (1-based: the first retry is attempt 1). Exponential with a
+    /// seeded deterministic jitter — a pure function of (policy,
+    /// attempt), never of wall time.
+    pub fn backoff_for(&self, attempt: u32) -> u64 {
+        if self.backoff_cycles == 0 {
+            return 0;
+        }
+        let shift = attempt.saturating_sub(1).min(20);
+        let base = self.backoff_cycles.saturating_mul(1u64 << shift);
+        let jitter = if self.retry_seed == 0 {
+            0
+        } else {
+            let mut rng = Rng::new(self.retry_seed ^ (0x9E3779B9_u64.wrapping_mul(attempt as u64 + 1)));
+            rng.below_usize(16) as u64
+        };
+        base.saturating_add(jitter)
+    }
+}
+
+/// Terminal classification of one session attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionVerdict {
+    /// The session served every sample and closed its report.
+    Completed,
+    /// The fabric reached a zero-progress fixed point (stranded flits)
+    /// and the attempt fast-failed with the `FabricDegraded` stall
+    /// classification.
+    FabricDegraded,
+    /// The attempt overran its simulated-cycle or host-wall deadline.
+    DeadlineExceeded,
+    /// Any other failure (workload panic, geometry mismatch, engine
+    /// error).
+    Failed,
+}
+
+impl SessionVerdict {
+    /// Classify a session error. The `FabricDegraded` marker string is
+    /// the stall classification minted by the NoC drain loop.
+    pub fn from_error(e: &Error) -> SessionVerdict {
+        match e {
+            Error::Deadline(_) => SessionVerdict::DeadlineExceeded,
+            Error::Noc(m) if m.contains("FabricDegraded") => SessionVerdict::FabricDegraded,
+            _ => SessionVerdict::Failed,
+        }
+    }
+
+    /// Stable lowercase label (bench JSON / CLI output).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SessionVerdict::Completed => "completed",
+            SessionVerdict::FabricDegraded => "fabric-degraded",
+            SessionVerdict::DeadlineExceeded => "deadline-exceeded",
+            SessionVerdict::Failed => "failed",
+        }
+    }
+}
+
+/// Runtime-level recovery counters, aggregated across every worker of a
+/// [`crate::serve::ServeRuntime`] (and, for the sequential reference
+/// path, across a [`crate::serve::SocPool`] serve). Monotonic for the
+/// runtime's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Sessions whose terminal outcome was recorded (completed + failed).
+    pub sessions: u64,
+    /// Sessions that completed (possibly after retries).
+    pub completed: u64,
+    /// Retry attempts performed (a session completed on its 3rd attempt
+    /// contributes 2).
+    pub retries: u64,
+    /// Simulated cycles burned by failed attempts + backoff (the
+    /// recovery overhead ledger).
+    pub retry_cycles_burned: u64,
+    /// Sessions whose terminal verdict was `DeadlineExceeded`.
+    pub deadline_exceeded: u64,
+    /// Sessions whose terminal verdict was `FabricDegraded`.
+    pub fabric_degraded: u64,
+    /// Sessions whose terminal verdict was `Failed` (other errors).
+    pub failed: u64,
+    /// Warm engines discarded by the quarantine threshold.
+    pub quarantines: u64,
+    /// Fresh engine builds in keep-warm mode (first session per worker
+    /// plus every post-quarantine / post-failure rebuild).
+    pub rebuilds: u64,
+    /// Cluster shard replans performed by failover (folded from session
+    /// outcomes).
+    pub replans: u64,
+}
+
+impl HealthReport {
+    /// Record a terminal session result: `Ok` outcomes carry their
+    /// attempt ledger; `Err` outcomes are classified by verdict.
+    pub(crate) fn record_outcome(
+        &mut self,
+        result: &Result<crate::serve::pool::SessionOutcome>,
+    ) {
+        self.sessions += 1;
+        match result {
+            Ok(o) => {
+                self.completed += 1;
+                self.retries += o.attempts.saturating_sub(1) as u64;
+                self.retry_cycles_burned += o.retry_cycles_burned;
+                self.replans += o.replans;
+            }
+            Err(e) => match SessionVerdict::from_error(e) {
+                SessionVerdict::DeadlineExceeded => self.deadline_exceeded += 1,
+                SessionVerdict::FabricDegraded => self.fabric_degraded += 1,
+                _ => self.failed += 1,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_fully_disabled() {
+        let p = RecoveryPolicy::default();
+        assert!(!p.enabled());
+        assert_eq!(p, RecoveryPolicy::disabled());
+        assert_eq!(p.backoff_for(1), 0);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_exponential_and_wall_clock_free() {
+        let p = RecoveryPolicy {
+            retries: 3,
+            backoff_cycles: 100,
+            retry_seed: 7,
+            ..RecoveryPolicy::default()
+        };
+        // Pure function of (policy, attempt): identical across calls.
+        assert_eq!(p.backoff_for(1), p.backoff_for(1));
+        assert_eq!(p.backoff_for(2), p.backoff_for(2));
+        // Exponential base: attempt 2 at least doubles attempt 1's base.
+        assert!(p.backoff_for(1) >= 100 && p.backoff_for(1) < 100 + 16);
+        assert!(p.backoff_for(2) >= 200 && p.backoff_for(2) < 200 + 16);
+        // Jitter off when unseeded.
+        let q = RecoveryPolicy { retry_seed: 0, ..p };
+        assert_eq!(q.backoff_for(1), 100);
+        assert_eq!(q.backoff_for(3), 400);
+        // Saturates instead of overflowing at absurd attempt counts.
+        let r = RecoveryPolicy {
+            backoff_cycles: u64::MAX / 2,
+            ..q
+        };
+        assert_eq!(r.backoff_for(33), u64::MAX);
+    }
+
+    #[test]
+    fn verdicts_classify_the_error_taxonomy() {
+        assert_eq!(
+            SessionVerdict::from_error(&Error::Deadline("x".into())),
+            SessionVerdict::DeadlineExceeded
+        );
+        assert_eq!(
+            SessionVerdict::from_error(&Error::Noc(
+                "FabricDegraded: NoC not drained: fixed point".into()
+            )),
+            SessionVerdict::FabricDegraded
+        );
+        assert_eq!(
+            SessionVerdict::from_error(&Error::Noc("unroutable".into())),
+            SessionVerdict::Failed
+        );
+        assert_eq!(
+            SessionVerdict::from_error(&Error::Runtime("panic".into())),
+            SessionVerdict::Failed
+        );
+        assert_eq!(SessionVerdict::DeadlineExceeded.as_str(), "deadline-exceeded");
+    }
+
+    #[test]
+    fn policy_validation_rejects_nonsense() {
+        let p = RecoveryPolicy {
+            retries: 33,
+            ..RecoveryPolicy::default()
+        };
+        assert!(p.validate().is_err());
+        let p = RecoveryPolicy {
+            backoff_cycles: 10,
+            retries: 0,
+            ..RecoveryPolicy::default()
+        };
+        assert!(p.validate().is_err());
+        let p = RecoveryPolicy {
+            deadline_cycles: 1_000_000,
+            retries: 2,
+            backoff_cycles: 64,
+            ..RecoveryPolicy::default()
+        };
+        assert!(p.validate().is_ok());
+        assert!(p.enabled());
+    }
+}

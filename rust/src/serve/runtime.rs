@@ -40,6 +40,7 @@ use super::pool::{
     check_geometry, merge_outcomes, run_session_on, ServeOutcome, SessionFailure,
     SessionOutcome, SessionSpec,
 };
+use super::recovery::{HealthReport, RecoveryPolicy};
 use crate::cluster::Engine;
 use crate::coordinator::GoldenCheck;
 use crate::nn::NetworkDesc;
@@ -47,9 +48,38 @@ use crate::soc::SocConfig;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Lock a runtime mutex, shrugging off poisoning. A session that panics
+/// resolves its own ticket through the catch in [`serve_one`]; should a
+/// thread ever die while *holding* one of the runtime's locks, the data
+/// behind it (queue counters, ticket slots, health tallies) is plain
+/// state that stays internally consistent between guard acquisitions —
+/// so abandoning every sibling session over a lost guard would turn one
+/// isolated failure into a runtime-wide outage. The runtime therefore
+/// treats poison as noise: take the guard and keep serving (pinned by
+/// the poison regression test below).
+fn lock_q<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Wait on `cv` until `pred` holds, re-checking after every wake and
+/// recovering from poisoning exactly like [`lock_q`]. `Condvar::wait`
+/// surfaces poison *before* the predicate re-check, so a plain
+/// `wait_while(..).unwrap_or_else(..)` could return with the predicate
+/// still false — this helper never does.
+fn wait_until<'a, T>(
+    cv: &Condvar,
+    mut guard: MutexGuard<'a, T>,
+    mut pred: impl FnMut(&T) -> bool,
+) -> MutexGuard<'a, T> {
+    while !pred(&guard) {
+        guard = cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+    }
+    guard
+}
 
 /// One submitted-but-not-yet-served session.
 struct Pending {
@@ -85,6 +115,9 @@ struct Shared {
     check: GoldenCheck,
     keep_warm: bool,
     queue_depth: usize,
+    recovery: RecoveryPolicy,
+    /// Runtime-wide recovery counters; see [`ServeRuntime::health_report`].
+    health: Mutex<HealthReport>,
     q: Mutex<QueueState>,
     /// Workers wait here for work (or close).
     work: Condvar,
@@ -124,17 +157,15 @@ impl SessionTicket {
     /// are unaffected. May be called more than once (the result is
     /// cloned out, never drained).
     pub fn wait(&self) -> Result<SessionOutcome> {
-        let slot = self
-            .inner
-            .ready
-            .wait_while(self.inner.slot.lock().unwrap(), |s| s.is_none())
-            .unwrap();
+        let slot = wait_until(&self.inner.ready, lock_q(&self.inner.slot), |s| {
+            s.is_some()
+        });
         slot.as_ref().expect("waited for a resolved slot").clone()
     }
 
     /// Non-blocking probe: the outcome if the session already finished.
     pub fn try_result(&self) -> Option<Result<SessionOutcome>> {
-        self.inner.slot.lock().unwrap().clone()
+        lock_q(&self.inner.slot).clone()
     }
 }
 
@@ -181,6 +212,9 @@ impl ServeRuntime {
     /// a new one. `check` may be [`GoldenCheck::None`] or
     /// [`GoldenCheck::Reference`] (the XLA golden model holds
     /// per-process state and cannot back concurrent sessions).
+    /// `recovery` arms the self-healing layer — deadlines, deterministic
+    /// retry, quarantine ([`RecoveryPolicy::disabled`] keeps today's
+    /// behavior bit for bit).
     pub fn new(
         net: NetworkDesc,
         config: SocConfig,
@@ -188,6 +222,7 @@ impl ServeRuntime {
         check: GoldenCheck,
         queue_depth: usize,
         keep_warm: bool,
+        recovery: RecoveryPolicy,
     ) -> Result<ServeRuntime> {
         if matches!(check, GoldenCheck::Xla | GoldenCheck::Both) {
             return Err(Error::Config(
@@ -209,12 +244,15 @@ impl ServeRuntime {
             )));
         }
         net.validate()?;
+        recovery.validate()?;
         let shared = Arc::new(Shared {
             net,
             config,
             check,
             keep_warm,
             queue_depth,
+            recovery,
+            health: Mutex::new(HealthReport::default()),
             q: Mutex::new(QueueState {
                 // Grows to actual occupancy (bounded by queue_depth);
                 // pre-allocating the full depth would waste memory at
@@ -245,7 +283,20 @@ impl ServeRuntime {
 
     /// Worker-thread count.
     pub fn workers(&self) -> usize {
-        self.shared.q.lock().unwrap().running.len()
+        lock_q(&self.shared.q).running.len()
+    }
+
+    /// The recovery policy this runtime was built with.
+    pub fn recovery(&self) -> RecoveryPolicy {
+        self.shared.recovery
+    }
+
+    /// Snapshot of the runtime-wide recovery counters: sessions served,
+    /// retries and their simulated-cycle overhead, verdict tallies,
+    /// quarantines and engine rebuilds. Monotonic for the runtime's
+    /// lifetime; all-zero activity fields when the policy is disabled.
+    pub fn health_report(&self) -> HealthReport {
+        *lock_q(&self.shared.health)
     }
 
     /// Bounded submission-queue depth.
@@ -260,12 +311,12 @@ impl ServeRuntime {
 
     /// Sessions submitted over the runtime's lifetime.
     pub fn submitted(&self) -> u64 {
-        self.shared.q.lock().unwrap().submitted
+        lock_q(&self.shared.q).submitted
     }
 
     /// Sessions submitted but not yet finished.
     pub fn in_flight(&self) -> u64 {
-        let q = self.shared.q.lock().unwrap();
+        let q = lock_q(&self.shared.q);
         q.submitted - q.finished
     }
 
@@ -284,12 +335,16 @@ impl ServeRuntime {
     }
 
     fn enqueue(&mut self, spec: SessionSpec, block: bool) -> Result<SessionTicket> {
-        let mut q = self.shared.q.lock().unwrap();
+        let mut q = lock_q(&self.shared.q);
         while q.pending.len() >= self.shared.queue_depth {
             if !block {
                 return Err(Error::QueueFull(self.shared.queue_depth));
             }
-            q = self.shared.space.wait(q).unwrap();
+            q = self
+                .shared
+                .space
+                .wait(q)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         let index = q.submitted;
         q.submitted += 1;
@@ -333,7 +388,7 @@ impl ServeRuntime {
         let mut sessions = Vec::with_capacity(tickets.len());
         let mut failures = Vec::new();
         for t in &tickets {
-            let slot = t.slot.lock().unwrap();
+            let slot = lock_q(&t.slot);
             match slot.as_ref().expect("workers resolve every ticket on drain") {
                 Ok(o) => sessions.push(o.clone()),
                 Err(e) => failures.push(SessionFailure {
@@ -351,14 +406,14 @@ impl ServeRuntime {
     /// resolves the ticket first, so this path is the backstop).
     fn close_and_join(&mut self) -> Result<()> {
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = lock_q(&self.shared.q);
             q.closed = true;
         }
         self.shared.work.notify_all();
         let mut first_err = None;
         for (wid, h) in std::mem::take(&mut self.workers).into_iter().enumerate() {
             if h.join().is_err() && first_err.is_none() {
-                let running = self.shared.q.lock().unwrap().running[wid].take();
+                let running = lock_q(&self.shared.q).running[wid].take();
                 first_err = Some(Error::Soc(match running {
                     Some(s) => {
                         format!("serving worker {wid} died while serving session {s}")
@@ -393,10 +448,10 @@ impl Iterator for Outcomes<'_> {
 
     fn next(&mut self) -> Option<SessionResult> {
         let shared = &self.rt.shared;
-        let mut q = shared.q.lock().unwrap();
+        let mut q = lock_q(&shared.q);
         loop {
             if let Some(t) = q.completions.pop_front() {
-                let slot = t.slot.lock().unwrap();
+                let slot = lock_q(&t.slot);
                 let outcome = slot
                     .as_ref()
                     .expect("completed ticket carries a result")
@@ -410,7 +465,7 @@ impl Iterator for Outcomes<'_> {
             if q.finished == q.submitted {
                 return None; // nothing in flight and nothing queued
             }
-            q = shared.done.wait(q).unwrap();
+            q = shared.done.wait(q).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -433,12 +488,9 @@ fn worker_loop(shared: &Arc<Shared>, wid: usize) {
     let mut warm: Option<Engine> = None;
     loop {
         let pending = {
-            let mut q = shared
-                .work
-                .wait_while(shared.q.lock().unwrap(), |q| {
-                    q.pending.is_empty() && !q.closed
-                })
-                .unwrap();
+            let mut q = wait_until(&shared.work, lock_q(&shared.q), |q| {
+                !q.pending.is_empty() || q.closed
+            });
             match q.pending.pop_front() {
                 Some(p) => {
                     q.running[wid] =
@@ -452,10 +504,11 @@ fn worker_loop(shared: &Arc<Shared>, wid: usize) {
         let mut p = pending;
         let queue_wait_s = p.submitted_at.elapsed().as_secs_f64();
         let result = serve_one(shared, &mut warm, &mut p, queue_wait_s);
-        *p.ticket.slot.lock().unwrap() = Some(result);
+        lock_q(&shared.health).record_outcome(&result);
+        *lock_q(&p.ticket.slot) = Some(result);
         p.ticket.ready.notify_all();
         {
-            let mut q = shared.q.lock().unwrap();
+            let mut q = lock_q(&shared.q);
             q.running[wid] = None;
             q.finished += 1;
             q.completions.push_back(p.ticket.clone());
@@ -487,7 +540,10 @@ fn serve_one(
                 e.reset_for_session();
                 e
             }
-            None => Engine::new(shared.net.clone(), shared.config.clone())?,
+            None => {
+                lock_q(&shared.health).rebuilds += 1;
+                Engine::new(shared.net.clone(), shared.config.clone())?
+            }
         };
         let (outcome, engine) = run_session_on(
             engine,
@@ -496,8 +552,17 @@ fn serve_one(
             &name,
             &mut *p.spec.workload,
             queue_wait_s,
+            &shared.recovery,
         )?;
-        if shared.keep_warm {
+        let wear = outcome.degradation.dead_routers
+            + outcome.degradation.dead_links
+            + outcome.degradation.dropped;
+        if shared.recovery.quarantine_after > 0 && wear >= shared.recovery.quarantine_after {
+            // Quarantine: this engine's fabric crossed the dead-fabric /
+            // dropped-flit threshold. Drop it even in keep-warm mode so
+            // the next session on this worker builds fresh silicon.
+            lock_q(&shared.health).quarantines += 1;
+        } else if shared.keep_warm {
             *warm = Some(engine);
         }
         Ok(outcome)
@@ -511,5 +576,129 @@ fn serve_one(
                 panic_message(&*payload)
             )))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::neuron::{LeakMode, NeuronParams, ResetMode};
+    use crate::core::Codebook;
+    use crate::nn::network::{LayerDesc, NetworkDesc};
+    use crate::serve::TrafficWorkload;
+
+    fn tiny_net() -> NetworkDesc {
+        let cb = Codebook::default_log16();
+        let params = NeuronParams {
+            threshold: 50,
+            leak: LeakMode::Linear(1),
+            reset: ResetMode::Subtract,
+            mp_bits: 16,
+        };
+        NetworkDesc {
+            name: "runtime-test".into(),
+            layers: vec![
+                LayerDesc {
+                    name: "h".into(),
+                    inputs: 16,
+                    neurons: 8,
+                    codebook: cb.clone(),
+                    widx: (0..16 * 8).map(|i| ((i * 11) % 16) as u8).collect(),
+                    neuron_params: params.clone(),
+                },
+                LayerDesc {
+                    name: "o".into(),
+                    inputs: 8,
+                    neurons: 4,
+                    codebook: cb,
+                    widx: (0..8 * 4).map(|i| ((i * 5) % 16) as u8).collect(),
+                    neuron_params: params,
+                },
+            ],
+            timesteps: 3,
+            classes: 4,
+        }
+    }
+
+    fn spec(i: u64, samples: usize) -> SessionSpec {
+        SessionSpec::new(
+            &format!("s{i}"),
+            Box::new(TrafficWorkload::new(16, 4, 3, 0.2, samples, 100 + i)),
+        )
+    }
+
+    /// Regression: a thread dying while holding the runtime's locks
+    /// (queue, health, ticket slot) poisons them, and every runtime path
+    /// — submit, ticket wait, counters, health, finish — must recover
+    /// and keep serving instead of propagating the sibling's panic.
+    #[test]
+    fn poisoned_runtime_locks_recover_and_keep_serving() {
+        let mut rt = ServeRuntime::new(
+            tiny_net(),
+            SocConfig::default(),
+            1,
+            GoldenCheck::None,
+            8,
+            true,
+            RecoveryPolicy::disabled(),
+        )
+        .unwrap();
+        let t0 = rt.submit(spec(0, 2)).unwrap();
+        assert!(t0.wait().is_ok());
+        // Poison the shared mutexes the way a dying thread would:
+        // panic while holding the guards.
+        let shared = rt.shared.clone();
+        let ticket_inner = t0.inner.clone();
+        let _ = std::thread::spawn(move || {
+            let _q = shared.q.lock().unwrap();
+            let _h = shared.health.lock().unwrap();
+            let _s = ticket_inner.slot.lock().unwrap();
+            panic!("poison the runtime locks");
+        })
+        .join();
+        assert!(rt.shared.q.is_poisoned(), "queue mutex must be poisoned");
+        assert!(rt.shared.health.is_poisoned(), "health mutex must be poisoned");
+        // A resolved ticket still reads back through its poisoned slot.
+        assert!(t0.try_result().expect("t0 already resolved").is_ok());
+        // And the runtime keeps serving new sessions end to end.
+        let t1 = rt.submit(spec(1, 2)).unwrap();
+        let o = t1.wait().expect("session served across poisoned locks");
+        assert_eq!(o.stats.samples, 2);
+        assert_eq!(rt.submitted(), 2);
+        assert_eq!(rt.in_flight(), 0);
+        let health = rt.health_report();
+        assert_eq!(health.sessions, 2);
+        assert_eq!(health.completed, 2);
+        let out = rt.finish().expect("aggregate folds across poisoned locks");
+        assert_eq!(out.sessions.len(), 2);
+        assert!(out.failures.is_empty());
+    }
+
+    /// The health report tallies sessions/completions and, in keep-warm
+    /// single-worker serving, exactly one engine build.
+    #[test]
+    fn health_report_counts_sessions_and_rebuilds() {
+        let mut rt = ServeRuntime::new(
+            tiny_net(),
+            SocConfig::default(),
+            1,
+            GoldenCheck::None,
+            8,
+            true,
+            RecoveryPolicy::disabled(),
+        )
+        .unwrap();
+        for i in 0..3 {
+            let t = rt.submit(spec(i, 1)).unwrap();
+            t.wait().unwrap();
+        }
+        let h = rt.health_report();
+        assert_eq!(h.sessions, 3);
+        assert_eq!(h.completed, 3);
+        assert_eq!(h.retries, 0);
+        assert_eq!(h.retry_cycles_burned, 0);
+        assert_eq!(h.quarantines, 0);
+        assert_eq!(h.rebuilds, 1, "warm worker builds exactly one engine");
+        rt.finish().unwrap();
     }
 }

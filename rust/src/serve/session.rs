@@ -177,6 +177,23 @@ impl Session {
         Ok(r)
     }
 
+    /// Core-clock cycles consumed so far — O(1), polled per push by the
+    /// serving deadline enforcement, so it must not touch the latency
+    /// ledger (which [`Session::stats`] sorts).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Abandon the session and hand the engine back without producing a
+    /// report — the recovery path: a deadline-killed or degraded attempt
+    /// returns its engine so the retry loop can power-cycle it via
+    /// [`Engine::reset_for_session`] instead of paying a fresh build.
+    /// The engine's accounting window is left dirty; the caller must
+    /// reset it before reuse.
+    pub(crate) fn into_engine(self) -> Engine {
+        self.engine
+    }
+
     /// Incremental chip report over the work so far. Non-destructive:
     /// pushing more samples and snapshotting again extends the same
     /// accounting window, and [`Session::close`] right after a snapshot

@@ -79,6 +79,13 @@ pub struct SocConfig {
     /// off-chip L3 router ring joining them) through
     /// [`crate::serve::SocBuilder`] or the serving runtime.
     pub chips: usize,
+    /// Cluster shard failover: when an off-chip L3 ring node dies
+    /// mid-session, re-partition the network over the surviving chips
+    /// ([`crate::cluster::ClusterMapper::replan`]) at the next sample
+    /// boundary instead of serving degraded forever. Off by default —
+    /// the disabled path is bit-identical to a cluster built before
+    /// failover existed. Meaningless (and ignored) at `chips == 1`.
+    pub failover: bool,
 }
 
 impl Default for SocConfig {
@@ -95,6 +102,7 @@ impl Default for SocConfig {
             drive_cpu: true,
             fault_plan: FaultPlan::none(),
             chips: 1,
+            failover: false,
         }
     }
 }
@@ -884,6 +892,18 @@ impl Soc {
         self.outbufs = OutputBuffers::new();
         self.booted = false;
         self.params_loaded = false;
+    }
+
+    /// Replace the chip's armed fault schedule (the NoC must be drained
+    /// — between samples / sessions). Validation is the same as at build
+    /// time; the new plan also becomes the one
+    /// [`Soc::reset_accounting`] re-arms. The serving retry loop uses
+    /// this to install a plan's unfired tail
+    /// ([`crate::noc::FaultPlan::shifted`]) on a power-cycled chip.
+    pub fn rearm_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        self.noc.set_fault_plan(plan.clone())?;
+        self.config.fault_plan = plan;
+        Ok(())
     }
 
     /// Clear every energy ledger and run counter (cycles, SOPs, samples,

@@ -187,6 +187,65 @@ fn parsed_kill_storm_is_deterministic_and_conserves_flits() {
     assert_eq!(sa.max_latency, sb.max_latency);
 }
 
+/// Multi-domain (D=4) chaos: an L2 scale-up throttle layered under two
+/// staggered router kills on the 4-domain hierarchical fabric. The
+/// compound plan must drain (kills drop eagerly, a throttle only slows
+/// arbitration), conserve every flit, and replay bit-identically —
+/// faults on the L2 ring are as deterministic as single-domain ones.
+#[test]
+fn multi_domain_l2_throttle_under_router_kills_conserves_and_replays() {
+    use fullerene_soc::noc::LinkLevel;
+
+    let t = Topology::multi_domain(4);
+    let n_cores = t.cores().len();
+    assert_eq!(n_cores, 80, "4 domains × 20 cores");
+    let routers = t.routers();
+    // One kill early in domain 0's L1 fabric, one later and further
+    // into the router list (a different domain), with every scale-up
+    // link running at a third of its arbitration rate in between.
+    let (ra, rb) = (routers[0], routers[routers.len() / 2]);
+    let run = || {
+        let mut s = sim(t.clone());
+        s.set_fault_plan(
+            FaultPlan::none()
+                .throttle(LinkLevel::L2, 3, When::Cycle(5))
+                .kill_router(ra, When::Cycle(9))
+                .kill_router(rb, When::Cycle(40)),
+        )
+        .unwrap();
+        let mut injected = 0u64;
+        for round in 0..10u32 {
+            for c in 0..n_cores {
+                // (c + 27) % 80 crosses domain boundaries for most
+                // sources, so the throttled L2 ring carries real load.
+                s.inject(c, &Dest::Core((c + 27) % n_cores), round);
+                injected += 1;
+            }
+        }
+        s.run_until_drained(2_000_000)
+            .expect("kill+throttle plans must drain, never wedge");
+        assert_eq!(s.in_flight(), 0);
+        let h = s.fabric_health();
+        let st = s.stats();
+        assert_eq!(h.dead_routers, 2, "both staggered kills must fire");
+        assert_eq!(
+            st.delivered + h.dropped,
+            injected,
+            "conservation across 4 domains + L2 ring"
+        );
+        assert!(st.delivered > 0, "the degraded fabric went dark");
+        (st, h, s.switch_visits(), s.cycle())
+    };
+    let (sa, ha, va, ca) = run();
+    let (sb, hb, vb, cb) = run();
+    assert_eq!(ha, hb, "fabric health must replay bit-identically");
+    assert_eq!(va, vb, "worklist activity must replay bit-identically");
+    assert_eq!(ca, cb);
+    assert_eq!(sa.delivered, sb.delivered);
+    assert_eq!(sa.avg_latency.to_bits(), sb.avg_latency.to_bits());
+    assert_eq!(sa.avg_hops.to_bits(), sb.avg_hops.to_bits());
+}
+
 /// The spec grammar's public contract: usage text exists, round-trip
 /// parses hold, and malformed specs are rejected with the usage hint —
 /// the same strings `--fault-plan` and the JSON `fault_plan` key accept.

@@ -10,7 +10,11 @@
 //!   randomized fault plans mixing on-chip and L3 events (in-tree
 //!   `propcheck` loop, seeds reported on failure);
 //! - the **partition-balance regression** at Fig. 3 geometry: equal-cut
-//!   splits must break ties toward balanced shards.
+//!   splits must break ties toward balanced shards;
+//! - **shard failover**: a ring-node kill landing mid-session moves the
+//!   dead node's shard onto a spare chip at the next sample boundary,
+//!   the session completes against the functional reference, the books
+//!   span the replan, and the degraded run replays bit for bit.
 
 use fullerene_soc::benches_support::{FIG3_AXONS, FIG3_NEURONS};
 use fullerene_soc::cluster::{Cluster, ClusterMapper, Engine};
@@ -19,7 +23,7 @@ use fullerene_soc::core::Codebook;
 use fullerene_soc::datasets::Sample;
 use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
 use fullerene_soc::noc::{FaultPlan, LinkLevel, When};
-use fullerene_soc::serve::SocBuilder;
+use fullerene_soc::serve::{SessionSpec, SessionVerdict, SocBuilder, TrafficWorkload};
 use fullerene_soc::soc::{Soc, SocConfig};
 use fullerene_soc::util::propcheck::check;
 
@@ -246,4 +250,99 @@ fn fig3_geometry_partitions_balance() {
     for s in 0..4 {
         assert_eq!(p4.cores_of(&net, s, FIG3_NEURONS), 1);
     }
+}
+
+/// The failover acceptance path, end to end: a ring-node kill lands
+/// mid-sample on a three-chip cluster, the next sample boundary moves
+/// the dead node's shard onto the spare chip, and the session finishes
+/// every remaining sample against the unpartitioned functional
+/// reference with the cluster-wide flit books balanced across the
+/// replan. A warm reset then replays the whole degraded session bit
+/// for bit, and the serving stack surfaces the replan count in its
+/// per-session ledger.
+#[test]
+fn mid_session_chip_kill_fails_over_and_completes_the_session() {
+    // 3-core chips at 16 neurons/core: l0 packs 2 cores and l1 + the
+    // classifier pack 3, so `{l0} | {l1,l2}` is the only feasible
+    // two-shard split — ring node 2 starts as the spare.
+    let net = chain_net(16, &[32, 32], 10, 5);
+    let data = samples(5, 16, 5, 0xFA11);
+    let plan = FaultPlan::none().kill_l3(1, When::Timestep(2));
+    let config = SocConfig {
+        chips: 3,
+        n_cores: 3,
+        max_neurons_per_core: 16,
+        failover: true,
+        fault_plan: plan.clone(),
+        ..SocConfig::default()
+    };
+    let mut cluster = Cluster::new(net.clone(), config).unwrap();
+    assert_eq!(cluster.shards(), 2, "min-cut picks the two-shard split");
+    assert_eq!(cluster.shard_nodes(), &[0, 1]);
+
+    // Sample 0 catches the kill mid-flight: boundary flits drop, but
+    // replans wait for a boundary where every fabric is drained.
+    let mut results = vec![cluster.run_sample(&data[0], true).unwrap()];
+    let storm_drops = cluster.l3_stats().unwrap().dropped;
+    assert!(storm_drops > 0, "the kill must land mid-sample");
+    assert_eq!(cluster.replans(), 0, "replans happen at boundaries");
+
+    // The next boundary fails over onto the spare; every remaining
+    // sample completes and matches the unpartitioned reference.
+    for s in &data[1..] {
+        results.push(cluster.run_sample(s, true).unwrap());
+    }
+    assert_eq!(cluster.replans(), 1);
+    assert_eq!(cluster.shard_nodes(), &[0, 2], "shard 1 took the spare");
+    for (i, (r, s)) in results.iter().zip(&data).enumerate().skip(1) {
+        let raster = s.to_raster(net.timesteps, net.input_size());
+        assert_eq!(
+            r.counts,
+            net.reference_run(&raster),
+            "sample {i} diverged post-replan"
+        );
+    }
+    // The bidirectional ring reaches the spare without touching the
+    // dead node, so the drop counter freezes at its storm value.
+    assert_eq!(cluster.l3_stats().unwrap().dropped, storm_drops);
+    let books = cluster.conservation();
+    assert!(books.holds(), "books must span the replan: {books:?}");
+    assert_eq!(books.in_flight, 0);
+    assert!(books.dropped > 0, "pre-replan drops stay on the books");
+
+    // Warm reset restores the base partition, then the whole degraded
+    // session — storm, boundary drops, failover — replays bit for bit.
+    cluster.reset_for_session();
+    assert_eq!(cluster.replans(), 0);
+    assert_eq!(cluster.shard_nodes(), &[0, 1], "reset restores the base");
+    for (i, (first, s)) in results.iter().zip(&data).enumerate() {
+        let again = cluster.run_sample(s, true).unwrap();
+        assert_eq!(first.counts, again.counts, "replay diverged at {i}");
+        assert_eq!(first.cycles, again.cycles, "replay diverged at {i}");
+        assert_eq!(first.sops, again.sops, "replay diverged at {i}");
+        assert_eq!(first.spikes_routed, again.spikes_routed);
+    }
+    assert_eq!(cluster.replans(), 1, "the replay fails over too");
+    assert_eq!(cluster.conservation(), books, "bit-identical books");
+
+    // The serving stack carries the event end to end: the builder choke
+    // point wires `--failover` into the pool, and the session ledger
+    // reports the replan on a completed verdict.
+    let report = SocBuilder::new()
+        .chips(3)
+        .n_cores(3)
+        .max_neurons_per_core(16)
+        .failover(true)
+        .fault_plan(plan)
+        .build_pool(&net)
+        .unwrap()
+        .serve_sequential(vec![SessionSpec::new(
+            "failover",
+            Box::new(TrafficWorkload::new(16, 10, 5, 0.25, 4, 7)),
+        )])
+        .unwrap();
+    assert!(report.failures.is_empty());
+    assert_eq!(report.sessions.len(), 1);
+    assert_eq!(report.sessions[0].verdict, SessionVerdict::Completed);
+    assert_eq!(report.sessions[0].replans, 1);
 }

@@ -14,7 +14,7 @@ use fullerene_soc::datasets::Sample;
 use fullerene_soc::energy::ChipReport;
 use fullerene_soc::nn::network::{LayerDesc, NetworkDesc};
 use fullerene_soc::serve::{
-    SessionSpec, SocBuilder, SocPool, TrafficWorkload, Workload,
+    RecoveryPolicy, SessionSpec, SessionVerdict, SocBuilder, SocPool, TrafficWorkload, Workload,
 };
 use fullerene_soc::soc::{Soc, SocConfig};
 use fullerene_soc::util::prng::Rng;
@@ -293,12 +293,32 @@ fn builder_is_the_single_choke_point() {
     // The direct constructor enforces the same queue-depth ceiling as
     // the builder — no construction route skips range checking.
     assert!(fullerene_soc::serve::ServeRuntime::new(
-        net,
+        net.clone(),
         SocConfig::default(),
         1,
         GoldenCheck::None,
         usize::MAX,
         true,
+        RecoveryPolicy::disabled(),
+    )
+    .is_err());
+    // The recovery knobs are range-checked at the same choke point (the
+    // CLI's --retries/--backoff-cycles funnel through here).
+    assert!(SocBuilder::new()
+        .retries(33)
+        .build_serve_runtime(&net)
+        .is_err());
+    assert!(fullerene_soc::serve::ServeRuntime::new(
+        net,
+        SocConfig::default(),
+        1,
+        GoldenCheck::None,
+        4,
+        true,
+        RecoveryPolicy {
+            backoff_cycles: 8,
+            ..RecoveryPolicy::disabled()
+        },
     )
     .is_err());
 }
@@ -776,4 +796,206 @@ fn try_submit_surfaces_queue_full_backpressure() {
     let out = rt.finish().unwrap();
     assert_eq!(out.sessions.len(), 2);
     assert!(out.failures.is_empty());
+}
+
+// ===================== recovery policy ====================================
+
+/// Tentpole acceptance: deterministic retry. A calibrated all-router
+/// congestion storm catches the long session mid-run; the
+/// simulated-cycle deadline kills the stalled attempt and the seeded
+/// retry re-runs it clean on a power-cycled engine (the already-fired
+/// storm is dropped from the re-armed plan). The whole recovery —
+/// attempt count, burned cycles, final reports — is bit-identical
+/// across runs and between the warm multi-worker runtime and the
+/// fresh-chip sequential pool.
+#[test]
+fn retried_sessions_are_bit_identical_across_runs_and_warm_vs_fresh() {
+    use fullerene_soc::noc::{FaultPlan, Topology, When};
+
+    let net = small_net(40, 24, 4, 5);
+    let short_samples = 1usize;
+    let long_samples = 8usize;
+    let wl = |samples: usize, seed: u64| TrafficWorkload::new(40, 4, 5, 0.2, samples, seed);
+
+    // Clean probes in both clock domains: fault events fire on the NoC
+    // clock while the deadline meters the core clock.
+    let probe = |samples: usize, seed: u64| -> (u64, u64) {
+        let mut w = wl(samples, seed);
+        let mut s = SocBuilder::new().open_session(&net, "probe").unwrap();
+        while let Some(sample) = w.next_sample() {
+            s.push(&sample).unwrap();
+        }
+        (s.noc_stats().cycles, s.cycles())
+    };
+    let (short_noc, _) = probe(short_samples, 5);
+    let (long_noc, long_core) = probe(long_samples, 4);
+    let storm_at = short_noc + 1;
+    assert!(
+        long_noc > storm_at,
+        "probe: long session never reaches the storm ({long_noc} <= {storm_at})"
+    );
+    let window = 4 * long_core;
+    let deadline = 2 * long_core;
+
+    let mut plan = FaultPlan::none();
+    for r in Topology::fullerene().routers() {
+        plan = plan.congest(r, window, When::Cycle(storm_at));
+    }
+    let policy = RecoveryPolicy {
+        deadline_cycles: deadline,
+        retries: 2,
+        backoff_cycles: 64,
+        retry_seed: 11,
+        ..RecoveryPolicy::disabled()
+    };
+    let specs = || -> Vec<SessionSpec> {
+        vec![
+            SessionSpec::new("long", Box::new(wl(long_samples, 4))),
+            SessionSpec::new("short", Box::new(wl(short_samples, 5))),
+        ]
+    };
+    let builder = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .fault_plan(plan)
+        .recovery(policy)
+        .workers(2)
+        .queue_depth(2)
+        .keep_warm(true);
+    let warm = {
+        let mut rt = builder.build_serve_runtime(&net).unwrap();
+        for spec in specs() {
+            rt.submit(spec).unwrap();
+        }
+        rt.finish().unwrap()
+    };
+    let seq1 = builder
+        .build_pool(&net)
+        .unwrap()
+        .serve_sequential(specs())
+        .unwrap();
+    let seq2 = builder
+        .build_pool(&net)
+        .unwrap()
+        .serve_sequential(specs())
+        .unwrap();
+
+    // The storm really forced a retry, and the retry healed it.
+    let long = &seq1.sessions[0];
+    assert_eq!(long.attempts, 2, "one deadline kill + one clean retry");
+    assert!(
+        long.retry_cycles_burned > deadline,
+        "burned less than the stalled attempt: {}",
+        long.retry_cycles_burned
+    );
+    assert_eq!(long.verdict, SessionVerdict::Completed);
+    assert_eq!(long.stats.samples, long_samples as u64);
+    let short = &seq1.sessions[1];
+    assert_eq!(short.attempts, 1, "the storm leaked into the short session");
+    assert_eq!(short.retry_cycles_burned, 0);
+
+    // Bit-identical across runs, and warm multi-worker vs fresh-chip
+    // sequential.
+    for (other, ctx) in [(&seq2, "run-to-run"), (&warm, "warm-vs-fresh")] {
+        assert_eq!(seq1.sessions.len(), other.sessions.len(), "{ctx}");
+        for (a, b) in seq1.sessions.iter().zip(&other.sessions) {
+            let ctx = format!("{ctx} '{}'", a.name);
+            assert_eq!(a.name, b.name, "{ctx}");
+            assert_eq!(a.attempts, b.attempts, "{ctx}");
+            assert_eq!(a.retry_cycles_burned, b.retry_cycles_burned, "{ctx}");
+            assert_eq!(a.verdict, b.verdict, "{ctx}");
+            assert_reports_bit_identical(&a.report, &b.report, &ctx);
+            assert_eq!(a.stats.cycles, b.stats.cycles, "{ctx}");
+        }
+        assert_reports_bit_identical(&seq1.merged, &other.merged, ctx);
+    }
+}
+
+/// Recovery is strictly opt-in: with retries disabled and a deadline
+/// that never fires, outcomes are bit-identical to a run with no policy
+/// at all — the recovery plumbing costs the served path nothing.
+#[test]
+fn unfired_recovery_policy_is_bit_identical_to_no_policy() {
+    let net = small_net(40, 24, 4, 5);
+    let serve = |policy: Option<RecoveryPolicy>| {
+        let mut b = SocBuilder::new()
+            .check(GoldenCheck::None)
+            .workers(2)
+            .queue_depth(4);
+        if let Some(p) = policy {
+            b = b.recovery(p);
+        }
+        let mut rt = b.build_serve_runtime(&net).unwrap();
+        for spec in traffic_specs(3, 4) {
+            rt.submit(spec).unwrap();
+        }
+        rt.finish().unwrap()
+    };
+    let plain = serve(None);
+    let armed = serve(Some(RecoveryPolicy {
+        deadline_cycles: u64::MAX,
+        ..RecoveryPolicy::disabled()
+    }));
+    assert_eq!(plain.sessions.len(), armed.sessions.len());
+    for (a, b) in plain.sessions.iter().zip(&armed.sessions) {
+        let ctx = format!("unfired policy '{}'", a.name);
+        assert_eq!(a.attempts, b.attempts, "{ctx}");
+        assert_eq!(a.verdict, b.verdict, "{ctx}");
+        assert_reports_bit_identical(&a.report, &b.report, &ctx);
+        assert_eq!(a.stats.cycles, b.stats.cycles, "{ctx}");
+    }
+    assert_reports_bit_identical(&plain.merged, &armed.merged, "unfired policy merge");
+}
+
+/// Quarantine: an engine whose session saw fabric wear at or above the
+/// threshold is discarded instead of warm-reused, and the runtime's
+/// health ledger records both the quarantine and the forced rebuild —
+/// while every session still completes.
+#[test]
+fn worn_engines_are_quarantined_not_reused() {
+    use fullerene_soc::noc::{FaultPlan, Topology, When};
+
+    let net = small_net(40, 24, 4, 5);
+    let wl = |samples: usize| TrafficWorkload::new(40, 4, 5, 0.2, samples, 77);
+    let probe = |samples: usize| -> u64 {
+        let mut w = wl(samples);
+        let mut s = SocBuilder::new().open_session(&net, "probe").unwrap();
+        while let Some(sample) = w.next_sample() {
+            s.push(&sample).unwrap();
+        }
+        s.noc_stats().cycles
+    };
+    let kill_at = probe(2) + 1;
+    assert!(probe(10) > kill_at, "probe: the kill never lands");
+    let router = Topology::fullerene().routers()[0];
+    let plan = FaultPlan::none().kill_router(router, When::Cycle(kill_at));
+
+    let mut rt = SocBuilder::new()
+        .check(GoldenCheck::None)
+        .workers(1)
+        .queue_depth(4)
+        .keep_warm(true)
+        .fault_plan(plan)
+        .quarantine_after(1)
+        .build_serve_runtime(&net)
+        .unwrap();
+    // The long session reaches the kill (wear 1 >= threshold 1) and its
+    // engine is quarantined; the following shorts never reach it, so
+    // one rebuilt engine serves both warm.
+    rt.submit(SessionSpec::new("long", Box::new(wl(10)))).unwrap();
+    for i in 0..2 {
+        rt.submit(SessionSpec::new(&format!("short{i}"), Box::new(wl(2))))
+            .unwrap();
+    }
+    for r in rt.outcomes() {
+        r.outcome.expect("degradation must not fail sessions");
+    }
+    let h = rt.health_report();
+    assert_eq!(h.sessions, 3);
+    assert_eq!(h.completed, 3);
+    assert_eq!(h.quarantines, 1, "{h:?}");
+    assert_eq!(h.rebuilds, 2, "initial build + post-quarantine rebuild: {h:?}");
+    let out = rt.finish().unwrap();
+    assert_eq!(out.sessions.len(), 3);
+    let long = &out.sessions[0];
+    assert_eq!(long.degradation.dead_routers, 1, "the kill never fired");
 }
