@@ -1472,6 +1472,7 @@ pub fn resilience_check(current: &Resilience, baseline: &Json, max_regress: f64)
     let mut fails = Vec::new();
     let floor = 1.0 - max_regress;
     for p in &current.points {
+        // lint:allow(no-float-eq) 0.0 and 1.0 are exact sentinel values of the sweep grid, not measurements
         if p.kill_frac == 0.0 && (p.delivered_frac != 1.0 || p.dropped != 0) {
             fails.push(format!(
                 "{}: healthy fabric dropped {} flits (delivered_frac {:.4})",

@@ -250,6 +250,15 @@ impl Cluster {
         Ok(())
     }
 
+    /// The L3 ring as a serving-grade error instead of a panic: a
+    /// multi-chip cluster always has one, but this sits on the serving
+    /// path and must degrade to a session failure, not a crash.
+    fn ring(&self) -> Result<&L3Fabric> {
+        self.l3
+            .as_ref()
+            .ok_or_else(|| Error::Soc("multi-chip cluster lost its L3 ring".into()))
+    }
+
     /// Run one sample across the cluster. The aggregate
     /// [`SampleResult`] sums compute over shards (cycles additionally
     /// include the ring's transfer latency — within a timestep the
@@ -264,7 +273,7 @@ impl Cluster {
             self.maybe_replan()?;
         }
         let (l3_cycles0, l3_injected0) = {
-            let s = self.l3.as_ref().expect("multi-chip cluster has a ring").stats();
+            let s = self.ring()?.stats();
             (s.cycles, s.injected)
         };
         for s in &mut self.shards {
@@ -287,7 +296,10 @@ impl Cluster {
                     // the input contract (sorted axons) is the next
                     // chip's, so enforce it at the boundary.
                     egress.sort_unstable();
-                    let l3 = self.l3.as_mut().expect("multi-chip cluster has a ring");
+                    let l3 = self
+                        .l3
+                        .as_mut()
+                        .ok_or_else(|| Error::Soc("multi-chip cluster lost its L3 ring".into()))?;
                     let delivered = l3.transfer(
                         self.shard_nodes[si],
                         self.shard_nodes[si + 1],
@@ -325,7 +337,7 @@ impl Cluster {
                 agg.correct = r.correct;
             }
         }
-        let l3s = self.l3.as_ref().expect("multi-chip cluster has a ring").stats();
+        let l3s = self.ring()?.stats();
         agg.cycles += l3s.cycles - l3_cycles0;
         agg.spikes_routed += l3s.injected - l3_injected0;
         Ok(agg)
@@ -370,6 +382,7 @@ impl Cluster {
             0,
         ));
         ChipReport::merged(&reports, &self.area)
+            // lint:allow(no-silent-panic-in-serving) shards clone one SocConfig, so operating points match
             .expect("shard reports share one operating point by construction")
     }
 
@@ -394,6 +407,7 @@ impl Cluster {
                 self.config.n_cores,
                 self.config.max_neurons_per_core,
             )
+            // lint:allow(no-silent-panic-in-serving) replayed construction-time plan cannot newly fail
             .expect("base partition planned successfully at construction");
             let (chip_plan, _) = self.config.fault_plan.split_l3();
             let mut shards = Vec::with_capacity(partition.shards());
@@ -405,6 +419,7 @@ impl Cluster {
                 };
                 shards.push(
                     Soc::new(partition.sub_net(&self.net, s), shard_config)
+                        // lint:allow(no-silent-panic-in-serving) replayed construction-time build cannot newly fail
                         .expect("base shards built successfully at construction"),
                 );
             }

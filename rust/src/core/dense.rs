@@ -47,6 +47,9 @@ pub struct DenseCore {
     staged: Vec<bool>,
     current: Vec<bool>,
     acc: Vec<i32>,
+    /// Neurons that received at least one accumulation this timestep —
+    /// they pay the full MP update; the rest pay the leak-only pass.
+    touched: Vec<bool>,
     ledger: EnergyLedger,
     energy: EnergyParams,
     total_cycles: u64,
@@ -78,6 +81,7 @@ impl DenseCore {
             staged: vec![false; axons],
             current: vec![false; axons],
             acc: vec![0; neurons],
+            touched: vec![false; neurons],
             ledger: EnergyLedger::new(),
             energy,
             total_cycles: 0,
@@ -109,15 +113,25 @@ impl DenseCore {
                 if spiking {
                     let ti = t as usize;
                     self.acc[ti] = self.acc[ti].saturating_add(self.codebook.weight(w));
+                    self.touched[ti] = true;
                     st.useful_sops += 1;
                 }
                 st.synapse_walks += 1;
             }
         }
 
-        // Update EVERY neuron (full MP update: leak everywhere).
+        // Update EVERY neuron (leak everywhere — the baseline cannot
+        // skip). Neurons that accumulated input pay the full MP
+        // read-modify-write; untouched neurons pay the cheaper leak-only
+        // pass (`e_mp_leak_only` — the cost the sparse design's partial
+        // update eliminates entirely).
         let mut spikes = Vec::new();
+        let mut touched_n = 0u64;
         for n in 0..self.neurons.len() {
+            if self.touched[n] {
+                touched_n += 1;
+                self.touched[n] = false;
+            }
             if self.neurons.update_one(n, self.acc[n]) {
                 spikes.push(n as u32);
             }
@@ -132,11 +146,13 @@ impl DenseCore {
         st.cycles = words + st.synapse_walks.div_ceil(4) + st.neurons_updated;
         self.total_cycles += st.cycles;
 
-        // Energy: every walk is priced as a full SOP; every neuron pays at
-        // least the leak-only read-modify-write.
+        // Energy: every walk is priced as a full SOP; touched neurons
+        // pay the full MP update, the rest the leak-only pass.
         self.ledger.add(EventClass::CacheRead, words);
         self.ledger.add(EventClass::Sop, st.synapse_walks);
-        self.ledger.add(EventClass::MpUpdate, st.neurons_updated);
+        self.ledger.add(EventClass::MpUpdate, touched_n);
+        self.ledger
+            .add(EventClass::MpLeakOnly, st.neurons_updated - touched_n);
         self.ledger.add(EventClass::SpikeFire, st.spikes_fired);
 
         (spikes, st)

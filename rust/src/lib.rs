@@ -48,6 +48,10 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+// Backed by the linter's `no-unsafe` rule (which also covers benches,
+// examples and integration tests outside this crate root).
+#![forbid(unsafe_code)]
+
 pub mod config;
 pub mod util;
 pub mod benches_support;
@@ -57,6 +61,7 @@ pub mod core;
 pub mod datasets;
 pub mod energy;
 pub mod error;
+pub mod lint;
 pub mod metrics;
 pub mod nn;
 pub mod noc;

@@ -1,0 +1,98 @@
+//! The lint **ratchet**: a checked-in per-rule violation count
+//! (`LINT_BASELINE.json`) that CI compares against. Same arming
+//! philosophy as the bench gates:
+//!
+//! - count above baseline → **new violation**, fail;
+//! - count below baseline → the debt was paid down, so the stale baseline
+//!   must be refreshed (`lint --write-baseline`) in the same change —
+//!   otherwise the headroom would let violations creep back in.
+//!
+//! The file is written through [`crate::util::json`], keys sorted, so
+//! diffs are stable.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Schema tag written into the baseline file.
+pub const SCHEMA: &str = "lint-baseline-v1";
+
+/// Per-rule pinned violation counts.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, u64>,
+}
+
+impl Baseline {
+    /// Build from per-rule counts, including explicit zeros for every
+    /// known rule so the file documents the full contract surface.
+    pub fn from_counts(counts: BTreeMap<String, u64>) -> Self {
+        Baseline { counts }
+    }
+
+    /// Read a baseline file.
+    pub fn read(path: &Path) -> Result<Self> {
+        let j = Json::read_file(path)?;
+        let schema = j.get("schema")?.as_str()?;
+        if schema != SCHEMA {
+            return Err(Error::Config(format!(
+                "lint baseline {}: schema {schema:?}, expected {SCHEMA:?}",
+                path.display()
+            )));
+        }
+        let mut counts = BTreeMap::new();
+        for (rule, v) in j.get("rules")?.as_obj()? {
+            counts.insert(rule.clone(), v.as_i64()? as u64);
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Serialize to the checked-in JSON form.
+    pub fn to_json(&self) -> Json {
+        let rules = self
+            .counts
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect::<BTreeMap<String, Json>>();
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("rules", Json::Obj(rules)),
+        ])
+    }
+
+    /// Write the baseline file.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// Ratchet comparison: current per-rule counts vs this baseline.
+    /// Returns human-readable failures; empty means the gate passes.
+    pub fn check(&self, current: &BTreeMap<String, u64>) -> Vec<String> {
+        let mut fails = Vec::new();
+        for (rule, &cur) in current {
+            let base = self.counts.get(rule).copied().unwrap_or(0);
+            if cur > base {
+                fails.push(format!(
+                    "{rule}: {cur} violation(s), baseline pins {base} — new violations \
+                     must be fixed or carry a justified lint:allow"
+                ));
+            } else if cur < base {
+                fails.push(format!(
+                    "{rule}: {cur} violation(s), baseline pins {base} — violations were \
+                     fixed; refresh the ratchet with `lint --write-baseline`"
+                ));
+            }
+        }
+        // Rules in the baseline the linter no longer knows are stale too.
+        for rule in self.counts.keys() {
+            if !current.contains_key(rule) {
+                fails.push(format!(
+                    "{rule}: pinned in the baseline but unknown to the linter — \
+                     refresh with `lint --write-baseline`"
+                ));
+            }
+        }
+        fails
+    }
+}

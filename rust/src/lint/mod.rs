@@ -1,0 +1,256 @@
+//! `soclint` — the in-tree determinism & invariant linter.
+//!
+//! The repo's core verification asset is **bit-identity**: every
+//! optimization since PR 3 is proven `f64::to_bits`-equal against frozen
+//! oracles, and the recovery layer only works because replays are
+//! deterministic. This subsystem enforces the *preconditions* of that
+//! determinism statically, the way neuromorphic toolchains encode
+//! hardware constraints at compile time instead of discovering them at
+//! runtime:
+//!
+//! - [`rules`] — layer-1 **source lints** over a hand-rolled tokenizer
+//!   ([`tokens`]): hash-collection bans, host-clock quarantine, unscoped
+//!   threads, float equality, silent panics on the serving surface,
+//!   `unsafe` anywhere.
+//! - [`model`] — layer-2 **model lints**: ledger completeness (every
+//!   `EventClass` priced + charged + reported), every `Error` variant
+//!   constructed, every CLI flag wired and documented.
+//! - [`baseline`] — the checked-in **ratchet** (`LINT_BASELINE.json`)
+//!   that CI compares against; new violations fail, fixed ones demand a
+//!   baseline refresh.
+//!
+//! Suppression is only possible inline, at the finding site:
+//! `// lint:allow(<rule>) <justification>` — the justification text is
+//! mandatory; an allow without one suppresses nothing.
+//!
+//! Exposed as the `lint` subcommand on the `fullerene-soc` binary and run
+//! as a CI job (see `.github/workflows/ci.yml`).
+
+pub mod baseline;
+pub mod model;
+pub mod rules;
+pub mod tokens;
+
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+/// One source file under lint, with its repo-relative path (forward
+/// slashes, e.g. `rust/src/serve/pool.rs`).
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, path: &str, line: usize, msg: String) -> Self {
+        Finding { rule: rule.into(), path: path.into(), line, msg }
+    }
+
+    /// `path:line: [rule] message` — the grep-able report form.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Per-file tokenization products, computed once at load.
+struct Scanned {
+    toks: Vec<tokens::Tok>,
+    test_lines: BTreeSet<usize>,
+    allows: Vec<tokens::Allow>,
+}
+
+/// The set of files a lint run sees, with cached token scans.
+pub struct FileSet {
+    pub files: Vec<SourceFile>,
+    /// README.md text, for the `cli-flag-coverage` documentation half.
+    pub readme: Option<String>,
+    scans: BTreeMap<String, Scanned>,
+    empty_lines: BTreeSet<usize>,
+}
+
+impl FileSet {
+    /// Build from in-memory files (fixture tests use this).
+    pub fn from_memory(files: Vec<SourceFile>, readme: Option<String>) -> Self {
+        let mut scans = BTreeMap::new();
+        for f in &files {
+            let scan = tokens::scan(&f.text);
+            let test_lines = tokens::cfg_test_lines(&scan.toks);
+            scans.insert(
+                f.path.clone(),
+                Scanned { toks: scan.toks, test_lines, allows: scan.allows },
+            );
+        }
+        FileSet { files, readme, scans, empty_lines: BTreeSet::new() }
+    }
+
+    /// Load the real tree under `root` (the repo root): `rust/src`,
+    /// `rust/benches`, `rust/tests`, `rust/examples`, `examples`, plus
+    /// `README.md`. Files are sorted by path — the lint walk order is
+    /// deterministic like everything else here.
+    pub fn load(root: &Path) -> Result<Self> {
+        let mut files = Vec::new();
+        for dir in ["rust/src", "rust/benches", "rust/tests", "rust/examples", "examples"] {
+            let abs = root.join(dir);
+            if abs.is_dir() {
+                collect_rs(&abs, root, &mut files)?;
+            }
+        }
+        files.sort_by(|a, b| a.path.cmp(&b.path));
+        let readme = std::fs::read_to_string(root.join("README.md")).ok();
+        Ok(Self::from_memory(files, readme))
+    }
+
+    /// Tokens of a file, if it is in the set.
+    pub fn tokens(&self, path: &str) -> Option<&[tokens::Tok]> {
+        self.scans.get(path).map(|s| s.toks.as_slice())
+    }
+
+    /// `#[cfg(test)]` lines of a file (empty set if absent).
+    pub fn test_lines(&self, path: &str) -> &BTreeSet<usize> {
+        self.scans.get(path).map(|s| &s.test_lines).unwrap_or(&self.empty_lines)
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` into repo-relative paths.
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(&path)?;
+            out.push(SourceFile { path: rel, text });
+        }
+    }
+    Ok(())
+}
+
+/// Every rule the linter knows, in report order (drives the explicit
+/// zeros in the baseline file).
+pub fn all_rules() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = rules::SOURCE_RULES.to_vec();
+    v.extend_from_slice(model::MODEL_RULES);
+    v
+}
+
+/// Run both lint layers over a file set and apply `lint:allow`
+/// suppression. Returns the surviving findings, sorted.
+pub fn run(fs: &FileSet) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in &fs.files {
+        if let Some(toks) = fs.tokens(&f.path) {
+            findings.extend(rules::run_source_rules(f, toks, fs.test_lines(&f.path)));
+        }
+    }
+    findings.extend(model::run_model_lints(fs));
+
+    // A justified allow on the finding line (or the line above, for
+    // comment-above style) suppresses exactly its named rule.
+    findings.retain(|f| {
+        let allowed = fs.scans.get(&f.path).is_some_and(|s| {
+            s.allows.iter().any(|a| {
+                a.justified
+                    && a.rule == f.rule
+                    && (a.line == f.line || a.line + 1 == f.line)
+            })
+        });
+        !allowed
+    });
+    findings.sort_by(|a, b| {
+        (&a.path, a.line, &a.rule, &a.msg).cmp(&(&b.path, b.line, &b.rule, &b.msg))
+    });
+    findings
+}
+
+/// Per-rule counts over a finding list, with explicit zeros for every
+/// known rule.
+pub fn counts(findings: &[Finding]) -> BTreeMap<String, u64> {
+    let mut counts: BTreeMap<String, u64> =
+        all_rules().iter().map(|r| (r.to_string(), 0)).collect();
+    for f in findings {
+        *counts.entry(f.rule.clone()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Locate the repo root: `--root` wins; otherwise probe `.` then `..`
+/// for `rust/src/lib.rs` (covers running from the repo root and from
+/// `rust/`, which is how CI invokes cargo).
+fn find_root(args: &Args) -> Result<PathBuf> {
+    if let Some(r) = args.get("root") {
+        return Ok(PathBuf::from(r));
+    }
+    for cand in [".", ".."] {
+        let p = PathBuf::from(cand);
+        if p.join("rust/src/lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    Err(Error::config(
+        "cannot find the repo root (no rust/src/lib.rs in . or ..); pass --root <path>",
+    ))
+}
+
+/// The `lint` subcommand. Modes:
+///
+/// - (default) print findings and per-rule counts; informational.
+/// - `--check` compare against the ratchet baseline; any drift fails.
+/// - `--write-baseline` refresh `LINT_BASELINE.json` from the current
+///   counts.
+pub fn lint_main(args: &Args) -> Result<()> {
+    args.reject_unknown(&["check", "write-baseline", "root", "baseline"])
+        .map_err(Error::Config)?;
+    let root = find_root(args)?;
+    let baseline_path = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => root.join("LINT_BASELINE.json"),
+    };
+    let fs = FileSet::load(&root)?;
+    let findings = run(&fs);
+    let counts = counts(&findings);
+
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    println!("soclint: {} file(s), {} finding(s)", fs.files.len(), findings.len());
+    for (rule, n) in &counts {
+        println!("  {rule:<28} {n}");
+    }
+
+    if args.flag("write-baseline") {
+        baseline::Baseline::from_counts(counts).write(&baseline_path)?;
+        println!("wrote {}", baseline_path.display());
+        return Ok(());
+    }
+    if args.flag("check") {
+        let base = baseline::Baseline::read(&baseline_path)?;
+        let fails = base.check(&counts);
+        if !fails.is_empty() {
+            return Err(Error::Config(format!(
+                "lint ratchet failed:\n  {}",
+                fails.join("\n  ")
+            )));
+        }
+        println!("lint ratchet OK against {}", baseline_path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! Layer-2 **model lints**: whole-model semantic checks that no single
+//! unit test covers. These cross-reference several files at once:
+//!
+//! - `ledger-completeness` — every [`crate::energy::EventClass`] variant
+//!   must have (a) a priced arm in `energy_pj` backed by a field that
+//!   exists in `energy/constants.rs`, (b) at least one charge site in
+//!   non-test sim code, and (c) a report key (membership in
+//!   `EventClass::ALL`, which drives the breakdown/snapshot keys). This is
+//!   the invariant behind every pJ/SOP number the repo reports.
+//! - `error-variants-constructed` — every `Error` variant is actually
+//!   constructed somewhere (a variant nobody can produce is dead API).
+//! - `cli-flag-coverage` — every flag accepted by a `reject_unknown`
+//!   allowlist in `main.rs` is read somewhere in `main.rs` (the builder
+//!   choke-point path) and mentioned as `--flag` in the README.
+//!
+//! Findings anchor to the declaring line (variant / flag), so the same
+//! `lint:allow` mechanism works on them.
+
+use super::tokens::{Tok, TokKind};
+use super::{FileSet, Finding};
+
+/// All layer-2 rule names, in report order.
+pub const MODEL_RULES: &[&str] =
+    &["ledger-completeness", "error-variants-constructed", "cli-flag-coverage"];
+
+/// An enum variant with the line it is declared on.
+#[derive(Debug)]
+struct Variant {
+    name: String,
+    line: usize,
+}
+
+/// Extract the variants of `pub enum <name>` from a token stream:
+/// uppercase idents at brace depth 1, skipping payload parens/braces.
+fn enum_variants(toks: &[Tok], enum_name: &str) -> Vec<Variant> {
+    let Some(start) = find_seq(toks, 0, &["enum", enum_name, "{"]) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut depth = 1usize;
+    let mut i = start + 3;
+    let mut expect_variant = true;
+    while i < toks.len() && depth > 0 {
+        let t = &toks[i];
+        if t.is_op("{") || t.is_op("(") || t.is_op("[") || t.is_op("<") {
+            depth += 1;
+        } else if t.is_op("}") || t.is_op(")") || t.is_op("]") || t.is_op(">") {
+            depth -= 1;
+        } else if depth == 1 {
+            if t.is_op(",") {
+                expect_variant = true;
+            } else if expect_variant
+                && t.kind == TokKind::Ident
+                && t.text.chars().next().map(char::is_uppercase).unwrap_or(false)
+            {
+                out.push(Variant { name: t.text.clone(), line: t.line });
+                expect_variant = false;
+            } else if t.is_op("#") {
+                // attribute on a variant — skip `[...]` via depth tracking
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Find the first index where `toks[i..]` matches the given ident/op
+/// texts in sequence (each element matches either kind by text).
+fn find_seq(toks: &[Tok], from: usize, pat: &[&str]) -> Option<usize> {
+    let n = pat.len();
+    (from..toks.len().saturating_sub(n - 1))
+        .find(|&i| (0..n).all(|k| toks[i + k].text == pat[k]))
+}
+
+/// The token index range of the brace-matched block starting at the first
+/// `{` at or after `from`. Returns (open_index, close_index_exclusive).
+fn brace_block(toks: &[Tok], from: usize) -> Option<(usize, usize)> {
+    let open = (from..toks.len()).find(|&i| toks[i].is_op("{"))?;
+    let mut depth = 1usize;
+    let mut i = open + 1;
+    while i < toks.len() {
+        if toks[i].is_op("{") {
+            depth += 1;
+        } else if toks[i].is_op("}") {
+            depth -= 1;
+            if depth == 0 {
+                return Some((open, i + 1));
+            }
+        }
+        i += 1;
+    }
+    Some((open, toks.len()))
+}
+
+/// Run all model lints over a loaded [`FileSet`].
+pub fn run_model_lints(fs: &FileSet) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(ledger_completeness(fs));
+    out.extend(error_variants_constructed(fs));
+    out.extend(cli_flag_coverage(fs));
+    out
+}
+
+/// `ledger-completeness` (see module docs).
+fn ledger_completeness(fs: &FileSet) -> Vec<Finding> {
+    const RULE: &str = "ledger-completeness";
+    const MODEL: &str = "rust/src/energy/model.rs";
+    const CONSTANTS: &str = "rust/src/energy/constants.rs";
+    let mut out = Vec::new();
+    let Some(model_toks) = fs.tokens(MODEL) else {
+        return vec![Finding::new(RULE, MODEL, 1, "energy/model.rs not found".into())];
+    };
+    let variants = enum_variants(model_toks, "EventClass");
+    if variants.is_empty() {
+        return vec![Finding::new(RULE, MODEL, 1, "no EventClass variants found".into())];
+    }
+    // The priced arms: inside fn energy_pj's match, `Variant => p.<field>`.
+    let pj_region = find_seq(model_toks, 0, &["fn", "energy_pj"])
+        .and_then(|i| brace_block(model_toks, i))
+        .map(|(a, b)| &model_toks[a..b])
+        .unwrap_or(&[]);
+    // ALL membership drives breakdown()/snapshot report keys. Skip past
+    // the `=` so the type annotation's `[EventClass; N]` brackets don't
+    // shadow the value array.
+    let all_region = find_seq(model_toks, 0, &["ALL", ":"])
+        .and_then(|i| (i..model_toks.len()).find(|&k| model_toks[k].is_op("=")))
+        .and_then(|i| brace_block_like(model_toks, i, "[", "]"))
+        .map(|(a, b)| &model_toks[a..b])
+        .unwrap_or(&[]);
+    let constants_idents: std::collections::BTreeSet<&str> = fs
+        .tokens(CONSTANTS)
+        .map(|toks| {
+            toks.iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.as_str())
+                .collect()
+        })
+        .unwrap_or_default();
+
+    for v in &variants {
+        // (a) priced arm + constant field.
+        let arm = find_seq(pj_region, 0, &[&v.name, "=>", "p", "."]);
+        match arm {
+            None => out.push(Finding::new(
+                RULE,
+                MODEL,
+                v.line,
+                format!("EventClass::{} has no `{} => p.e_*` arm in energy_pj", v.name, v.name),
+            )),
+            Some(i) => {
+                let field = &pj_region[i + 4];
+                if !constants_idents.contains(field.text.as_str()) {
+                    out.push(Finding::new(
+                        RULE,
+                        MODEL,
+                        v.line,
+                        format!(
+                            "EventClass::{} is priced from `p.{}` but that field does not \
+                             exist in energy/constants.rs",
+                            v.name, field.text
+                        ),
+                    ));
+                }
+            }
+        }
+        // (b) ≥1 charge site: `EventClass::Variant` in non-test sim code
+        // outside the declaring file.
+        let charged = fs.files.iter().any(|f| {
+            f.path != MODEL
+                && f.path.starts_with("rust/src/")
+                && charge_site(fs, &f.path, &v.name)
+        });
+        if !charged {
+            out.push(Finding::new(
+                RULE,
+                MODEL,
+                v.line,
+                format!(
+                    "EventClass::{} is never charged: no `EventClass::{}` site in \
+                     non-test sim code — a priced class nobody charges silently \
+                     under-reports pJ/SOP",
+                    v.name, v.name
+                ),
+            ));
+        }
+        // (c) report key: membership in ALL.
+        if find_seq(all_region, 0, &["EventClass", "::", &v.name]).is_none() {
+            out.push(Finding::new(
+                RULE,
+                MODEL,
+                v.line,
+                format!(
+                    "EventClass::{} missing from EventClass::ALL: it gets no \
+                     breakdown/snapshot report key",
+                    v.name
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Does `path` contain `EventClass::<variant>` outside `#[cfg(test)]`?
+fn charge_site(fs: &FileSet, path: &str, variant: &str) -> bool {
+    let Some(toks) = fs.tokens(path) else { return false };
+    let test_lines = fs.test_lines(path);
+    let mut from = 0usize;
+    while let Some(i) = find_seq(toks, from, &["EventClass", "::", variant]) {
+        if !test_lines.contains(&toks[i].line) {
+            return true;
+        }
+        from = i + 1;
+    }
+    false
+}
+
+/// Like [`brace_block`] but for an arbitrary bracket pair.
+fn brace_block_like(toks: &[Tok], from: usize, open: &str, close: &str) -> Option<(usize, usize)> {
+    let start = (from..toks.len()).find(|&i| toks[i].is_op(open))?;
+    let mut depth = 1usize;
+    let mut i = start + 1;
+    while i < toks.len() {
+        if toks[i].is_op(open) {
+            depth += 1;
+        } else if toks[i].is_op(close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some((start, i + 1));
+            }
+        }
+        i += 1;
+    }
+    Some((start, toks.len()))
+}
+
+/// `error-variants-constructed` (see module docs).
+///
+/// Construction sites are `Error::<Variant>` token sequences anywhere in
+/// the tree **except** inside `error.rs`'s own enum declaration and trait
+/// impls (whose match arms mention every variant without anyone being
+/// able to produce it): within `error.rs` only `impl From<…> for Error`
+/// blocks and the inherent `impl Error` block (shorthand constructors)
+/// count.
+fn error_variants_constructed(fs: &FileSet) -> Vec<Finding> {
+    const RULE: &str = "error-variants-constructed";
+    const ERRS: &str = "rust/src/error.rs";
+    let Some(err_toks) = fs.tokens(ERRS) else {
+        return vec![Finding::new(RULE, ERRS, 1, "error.rs not found".into())];
+    };
+    let variants = enum_variants(err_toks, "Error");
+    if variants.is_empty() {
+        return vec![Finding::new(RULE, ERRS, 1, "no Error variants found".into())];
+    }
+    // Lines of error.rs where construction counts: From impls + inherent.
+    let mut countable = std::collections::BTreeSet::new();
+    let mut i = 0usize;
+    while i < err_toks.len() {
+        if err_toks[i].is_ident("impl") {
+            // Header tokens up to `{` decide the block's class.
+            let Some((open, close)) = brace_block(err_toks, i) else { break };
+            let header: Vec<&str> =
+                err_toks[i..open].iter().map(|t| t.text.as_str()).collect();
+            let is_from = header.contains(&"From") && header.contains(&"for");
+            let is_inherent = !header.contains(&"for");
+            if is_from || is_inherent {
+                for t in &err_toks[open..close] {
+                    countable.insert(t.line);
+                }
+            }
+            i = close;
+        } else {
+            i += 1;
+        }
+    }
+    let mut out = Vec::new();
+    for v in &variants {
+        let constructed = fs.files.iter().any(|f| {
+            let Some(toks) = fs.tokens(&f.path) else { return false };
+            let mut from = 0usize;
+            while let Some(k) = find_seq(toks, from, &["Error", "::", &v.name]) {
+                if f.path != ERRS || countable.contains(&toks[k].line) {
+                    return true;
+                }
+                from = k + 1;
+            }
+            false
+        });
+        if !constructed {
+            out.push(Finding::new(
+                RULE,
+                ERRS,
+                v.line,
+                format!("Error::{} is never constructed anywhere in the tree", v.name),
+            ));
+        }
+    }
+    out
+}
+
+/// `cli-flag-coverage` (see module docs).
+fn cli_flag_coverage(fs: &FileSet) -> Vec<Finding> {
+    const RULE: &str = "cli-flag-coverage";
+    const MAIN: &str = "rust/src/main.rs";
+    let Some(toks) = fs.tokens(MAIN) else {
+        return Vec::new(); // fixture sets without a main.rs skip this lint
+    };
+    // Collect the flag string literals inside reject_unknown(&[ … ]) and
+    // remember which token indices belong to those arrays.
+    let mut flags: Vec<(String, usize)> = Vec::new();
+    let mut array_tokens = std::collections::BTreeSet::new();
+    let mut from = 0usize;
+    while let Some(i) = find_seq(toks, from, &["reject_unknown", "(", "&", "["]) {
+        if let Some((open, close)) = brace_block_like(toks, i + 3, "[", "]") {
+            for (k, t) in toks[open..close].iter().enumerate() {
+                if t.kind == TokKind::Str {
+                    flags.push((t.text.clone(), t.line));
+                    array_tokens.insert(open + k);
+                }
+            }
+            from = close;
+        } else {
+            from = i + 1;
+        }
+    }
+    let mut out = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (flag, line) in flags {
+        if !seen.insert(flag.clone()) {
+            continue; // shared between run/serve allowlists — check once
+        }
+        // (a) read somewhere in main.rs outside the allowlist arrays.
+        let read = toks.iter().enumerate().any(|(k, t)| {
+            t.kind == TokKind::Str && t.text == flag && !array_tokens.contains(&k)
+        });
+        if !read {
+            out.push(Finding::new(
+                RULE,
+                MAIN,
+                line,
+                format!(
+                    "flag --{flag} is accepted by reject_unknown but never read in \
+                     main.rs: it has no path to the builder choke point"
+                ),
+            ));
+        }
+        // (b) README mention.
+        let mentioned = fs
+            .readme
+            .as_deref()
+            .map(|r| r.contains(&format!("--{flag}")))
+            .unwrap_or(true); // fixture sets without a README skip this half
+        if !mentioned {
+            out.push(Finding::new(
+                RULE,
+                MAIN,
+                line,
+                format!("flag --{flag} is not documented in README.md"),
+            ));
+        }
+    }
+    out
+}

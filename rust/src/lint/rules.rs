@@ -1,0 +1,196 @@
+//! Layer-1 **source lints**: token-level rules that enforce the repo's
+//! determinism and robustness contracts (see DESIGN.md §Determinism
+//! contract). Each rule is named; findings are suppressed only by an
+//! inline `// lint:allow(<rule>) <justification>` on the offending line or
+//! the line above it.
+
+use super::tokens::{Tok, TokKind};
+use super::{Finding, SourceFile};
+use std::collections::BTreeSet;
+
+/// All layer-1 rule names, in report order.
+pub const SOURCE_RULES: &[&str] = &[
+    "no-hash-collections",
+    "host-clock-quarantine",
+    "no-unscoped-threads",
+    "no-float-eq",
+    "no-silent-panic-in-serving",
+    "no-unsafe",
+];
+
+/// Host-timing sites where wall-clock reads are expected wholesale; other
+/// crate files need an inline `lint:allow(host-clock-quarantine)`.
+const HOST_CLOCK_FILE_ALLOWLIST: &[&str] = &["rust/src/util/bench.rs", "rust/src/benches_support.rs"];
+
+/// Is this file part of the simulator crate proper (as opposed to benches,
+/// tests or examples, which run on the host by definition)?
+fn in_crate_src(path: &str) -> bool {
+    path.starts_with("rust/src/")
+}
+
+/// The serving surface hardened by PR 8: panics here escape to operators.
+fn in_serving(path: &str) -> bool {
+    path.starts_with("rust/src/serve/") || path.starts_with("rust/src/cluster/")
+}
+
+/// Run every source rule over one tokenized file. `test_lines` are the
+/// `#[cfg(test)]` regions; most rules skip them (test code may use host
+/// clocks, unwrap freely, etc.).
+pub fn run_source_rules(
+    file: &SourceFile,
+    toks: &[Tok],
+    test_lines: &BTreeSet<usize>,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_test = |line: usize| test_lines.contains(&line);
+    let path = file.path.as_str();
+
+    for (i, t) in toks.iter().enumerate() {
+        let prev = i.checked_sub(1).and_then(|p| toks.get(p));
+        let next = toks.get(i + 1);
+        let next2 = toks.get(i + 2);
+
+        // no-hash-collections: HashMap/HashSet iteration order is
+        // nondeterministic and would silently break every bit-identity
+        // oracle. Sim code must use BTreeMap/BTreeSet/Vec.
+        if in_crate_src(path)
+            && !in_test(t.line)
+            && (t.is_ident("HashMap") || t.is_ident("HashSet"))
+        {
+            out.push(Finding::new(
+                "no-hash-collections",
+                path,
+                t.line,
+                format!("{} in sim code: iteration order breaks replay; use BTree* or Vec", t.text),
+            ));
+        }
+
+        // host-clock-quarantine: Instant::now / SystemTime only in the
+        // allowlisted host-timing sites; everywhere else simulated cycles
+        // are the clock.
+        if in_crate_src(path)
+            && !HOST_CLOCK_FILE_ALLOWLIST.contains(&path)
+            && !in_test(t.line)
+        {
+            let instant_now = t.is_ident("Instant")
+                && next.map(|x| x.is_op("::")).unwrap_or(false)
+                && next2.map(|x| x.is_ident("now")).unwrap_or(false);
+            if instant_now || t.is_ident("SystemTime") {
+                out.push(Finding::new(
+                    "host-clock-quarantine",
+                    path,
+                    t.line,
+                    "host clock read outside the quarantined timing sites; simulated \
+                     cycles are the only clock sim code may observe"
+                        .into(),
+                ));
+            }
+        }
+
+        // no-unscoped-threads: thread::spawn outside thread::scope means
+        // join order (and thus report merge order) is up to the caller.
+        if in_crate_src(path)
+            && !in_test(t.line)
+            && t.is_ident("thread")
+            && next.map(|x| x.is_op("::")).unwrap_or(false)
+            && next2.map(|x| x.is_ident("spawn")).unwrap_or(false)
+        {
+            out.push(Finding::new(
+                "no-unscoped-threads",
+                path,
+                t.line,
+                "thread::spawn outside thread::scope: results must be merged in \
+                 deterministic submission order and joins proven"
+                    .into(),
+            ));
+        }
+
+        // no-float-eq: == / != touching a float literal. Bit-level
+        // comparisons must go through f64::to_bits; exact-value tests
+        // need a lint:allow with the IEEE argument spelled out.
+        if in_crate_src(path)
+            && !in_test(t.line)
+            && (t.is_op("==") || t.is_op("!="))
+        {
+            let is_float = |x: Option<&Tok>| {
+                matches!(x, Some(Tok { kind: TokKind::Num { float: true }, .. }))
+            };
+            if is_float(prev) || is_float(next) {
+                out.push(Finding::new(
+                    "no-float-eq",
+                    path,
+                    t.line,
+                    format!(
+                        "`{}` against a float literal: compare via f64::to_bits or \
+                         justify the exact-value test inline",
+                        t.text
+                    ),
+                ));
+            }
+        }
+
+        // no-silent-panic-in-serving: the serving surface promises
+        // per-session failure isolation (PR 8); panics there must become
+        // Error variants. unwrap/expect/panic-family in serve/ and
+        // cluster/; slice-indexing in serve/ (cluster planners index
+        // heavily under catch_unwind attribution — see DESIGN.md).
+        if in_serving(path) && !in_test(t.line) {
+            let dotted_call = |name: &str| {
+                prev.map(|x| x.is_op(".")).unwrap_or(false)
+                    && t.is_ident(name)
+                    && next.map(|x| x.is_op("(")).unwrap_or(false)
+            };
+            if dotted_call("unwrap") || dotted_call("expect") {
+                out.push(Finding::new(
+                    "no-silent-panic-in-serving",
+                    path,
+                    t.line,
+                    format!(".{}() on the serving surface: return a proper Error variant", t.text),
+                ));
+            }
+            let panic_macro = ["panic", "unreachable", "todo", "unimplemented"]
+                .iter()
+                .any(|m| t.is_ident(m))
+                && next.map(|x| x.is_op("!")).unwrap_or(false);
+            if panic_macro {
+                out.push(Finding::new(
+                    "no-silent-panic-in-serving",
+                    path,
+                    t.line,
+                    format!("{}! on the serving surface: return a proper Error variant", t.text),
+                ));
+            }
+            // `expr[`: indexing can panic out-of-bounds. Previous token
+            // Ident / `)` / `]` distinguishes indexing from array types,
+            // attributes and slice literals.
+            if path.starts_with("rust/src/serve/") && t.is_op("[") {
+                let indexes = prev
+                    .map(|x| x.kind == TokKind::Ident || x.is_op(")") || x.is_op("]"))
+                    .unwrap_or(false);
+                if indexes {
+                    out.push(Finding::new(
+                        "no-silent-panic-in-serving",
+                        path,
+                        t.line,
+                        "slice index on the serving surface can panic: use get()/min() \
+                         or justify the bound inline"
+                            .into(),
+                    ));
+                }
+            }
+        }
+
+        // no-unsafe: crate-wide (the compiler backs this with
+        // #![forbid(unsafe_code)]; the lint also covers benches, examples
+        // and integration tests, which are outside the crate root).
+        if t.is_ident("unsafe") {
+            out.push(Finding::new(
+                "no-unsafe",
+                path,
+                t.line,
+                "unsafe is forbidden everywhere in this repo".into(),
+            ));
+        }
+    }
+    out
+}

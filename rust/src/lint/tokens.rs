@@ -1,0 +1,437 @@
+//! A lightweight Rust tokenizer for the in-tree linter.
+//!
+//! This is deliberately **not** a full parser: the lint rules only need
+//! identifiers, operators, literals and comment text, so we tokenize with a
+//! hand-rolled scanner instead of pulling in `syn` (the crate is
+//! zero-dependency by contract). The scanner understands everything that
+//! would otherwise produce false positives inside literals:
+//!
+//! - line comments and *nested* block comments (`/* /* */ */`),
+//! - string / raw-string / byte-string literals (`"…"`, `r#"…"#`, `b"…"`),
+//! - char literals vs lifetimes (`'a'` vs `'a`),
+//! - numeric literals with a float/int distinction (for `no-float-eq`),
+//! - multi-char operators (`::`, `==`, `!=`, `=>`, `..`, …).
+//!
+//! Alongside the token stream the scanner collects `// lint:allow(rule)
+//! justification` annotations from comments — the only sanctioned way to
+//! suppress a finding — and can compute `#[cfg(test)]` line regions so the
+//! rules skip test-only code.
+
+/// What a token is; `text` carries the exact source spelling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Operator / punctuation (possibly multi-char, e.g. `::`).
+    Op,
+    /// Numeric literal; `float` is true for `1.0`, `1e3`, `2f64`, …
+    Num { float: bool },
+    /// String, raw-string or byte-string literal (text excludes quotes).
+    Str,
+    /// Char literal.
+    CharLit,
+    /// Lifetime (`'a`).
+    Lifetime,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    /// True if this token is an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True if this token is an operator with exactly this text.
+    pub fn is_op(&self, s: &str) -> bool {
+        self.kind == TokKind::Op && self.text == s
+    }
+}
+
+/// An inline suppression: `// lint:allow(<rule>) <justification>`.
+///
+/// The justification is mandatory — an allow without one is recorded with
+/// `justified == false` and does **not** suppress anything (the linter
+/// reports it as its own finding instead).
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub line: usize,
+    pub justified: bool,
+}
+
+/// Tokenizer output: the token stream plus any `lint:allow` annotations.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+/// Operators we combine into multi-char tokens (longest match wins).
+const MULTI_OPS: &[&str] = &[
+    "..=", "...", "<<=", ">>=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..", "+=",
+    "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+/// Tokenize Rust source. Never fails: unterminated literals are taken to
+/// the end of input (a linter must not die on the code it inspects).
+pub fn scan(src: &str) -> Scan {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Scan::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = chars.len();
+
+    while i < n {
+        let c = chars[i];
+        // Newlines / whitespace.
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment — harvest lint:allow annotations.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let body: String = chars[start..j].iter().collect();
+            harvest_allows(&body, line, &mut out.allows);
+            i = j;
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let start = j;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let body: String = chars[start..j.min(n)].iter().collect();
+            harvest_allows(&body, line, &mut out.allows);
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+        if (c == 'r' || c == 'b') && is_raw_or_byte_string(&chars, i) {
+            let (tok, ni, nl) = scan_prefixed_string(&chars, i, line);
+            out.toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Plain string.
+        if c == '"' {
+            let (text, ni, nl) = scan_quoted(&chars, i + 1, line);
+            out.toks.push(Tok { kind: TokKind::Str, text, line });
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let esc = i + 1 < n && chars[i + 1] == '\\';
+            let closes = i + 2 < n && chars[i + 2] == '\'';
+            if esc || closes {
+                // '\n' or 'x' — a char literal. Scan to the closing quote.
+                let mut j = i + 1;
+                let start = j;
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                let text: String = chars[start..j.min(n)].iter().collect();
+                out.toks.push(Tok { kind: TokKind::CharLit, text, line });
+                i = (j + 1).min(n);
+            } else {
+                // 'a — a lifetime.
+                let mut j = i + 1;
+                while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+                let text: String = chars[i..j].iter().collect();
+                out.toks.push(Tok { kind: TokKind::Lifetime, text, line });
+                i = j;
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            out.toks.push(Tok { kind: TokKind::Ident, text, line });
+            i = j;
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let (tok, ni) = scan_number(&chars, i, line);
+            out.toks.push(tok);
+            i = ni;
+            continue;
+        }
+        // Operator: try multi-char longest-match, else single char.
+        let mut matched = false;
+        for op in MULTI_OPS {
+            let olen = op.len(); // all multi-ops are ASCII
+            if i + olen <= n && chars[i..i + olen].iter().collect::<String>() == **op {
+                out.toks.push(Tok { kind: TokKind::Op, text: (*op).into(), line });
+                i += olen;
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            out.toks.push(Tok { kind: TokKind::Op, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// True if position `i` starts a raw/byte string prefix rather than an
+/// identifier (`r"`, `r#"`, `b"`, `br"`, `rb"`, `b'`-style byte chars are
+/// treated as char literals by the main loop).
+fn is_raw_or_byte_string(chars: &[char], i: usize) -> bool {
+    let n = chars.len();
+    let mut j = i;
+    // Up to two prefix letters (r, b, br, rb).
+    while j < n && (chars[j] == 'r' || chars[j] == 'b') && j - i < 2 {
+        j += 1;
+    }
+    // Skip raw-string hashes.
+    while j < n && chars[j] == '#' {
+        j += 1;
+    }
+    j < n && chars[j] == '"' && j > i
+}
+
+/// Scan `r#"…"#` / `b"…"` starting at the prefix letter.
+fn scan_prefixed_string(chars: &[char], i: usize, mut line: usize) -> (Tok, usize, usize) {
+    let n = chars.len();
+    let start_line = line;
+    let mut j = i;
+    while j < n && (chars[j] == 'r' || chars[j] == 'b') {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    let body_start = j;
+    let raw = hashes > 0 || chars[i] == 'r' || (chars[i] == 'b' && i + 1 < n && chars[i + 1] == 'r');
+    loop {
+        if j >= n {
+            break;
+        }
+        if chars[j] == '\n' {
+            line += 1;
+            j += 1;
+            continue;
+        }
+        if !raw && chars[j] == '\\' {
+            j += 2;
+            continue;
+        }
+        if chars[j] == '"' {
+            // For raw strings the quote must be followed by the hashes.
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && chars[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                let text: String = chars[body_start..j].iter().collect();
+                return (Tok { kind: TokKind::Str, text, line: start_line }, k, line);
+            }
+        }
+        j += 1;
+    }
+    let text: String = chars[body_start..n].iter().collect();
+    (Tok { kind: TokKind::Str, text, line: start_line }, n, line)
+}
+
+/// Scan a plain `"…"` body starting just after the opening quote.
+fn scan_quoted(chars: &[char], start: usize, mut line: usize) -> (String, usize, usize) {
+    let n = chars.len();
+    let mut j = start;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            '"' => {
+                let text: String = chars[start..j].iter().collect();
+                return (text, j + 1, line);
+            }
+            _ => j += 1,
+        }
+    }
+    (chars[start..n].iter().collect(), n, line)
+}
+
+/// Scan a numeric literal; decides int vs float.
+fn scan_number(chars: &[char], i: usize, line: usize) -> (Tok, usize) {
+    let n = chars.len();
+    let mut j = i;
+    let radix_prefixed = chars[i] == '0'
+        && i + 1 < n
+        && matches!(chars[i + 1], 'x' | 'X' | 'b' | 'B' | 'o' | 'O');
+    if radix_prefixed {
+        j = i + 2;
+        while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+            j += 1;
+        }
+        let text: String = chars[i..j].iter().collect();
+        return (Tok { kind: TokKind::Num { float: false }, text, line }, j);
+    }
+    let mut float = false;
+    while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+        j += 1;
+    }
+    // Fractional part — but `0..n` is a range and `1.max(x)` a method call.
+    if j < n && chars[j] == '.' {
+        let after = chars.get(j + 1).copied();
+        let is_range = after == Some('.');
+        let is_method = after.map(|c| c.is_alphabetic() || c == '_').unwrap_or(false);
+        if !is_range && !is_method {
+            float = true;
+            j += 1;
+            while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // Exponent.
+    if j < n && (chars[j] == 'e' || chars[j] == 'E') {
+        let after = chars.get(j + 1).copied();
+        let exp = after.map(|c| c.is_ascii_digit() || c == '+' || c == '-').unwrap_or(false);
+        if exp {
+            float = true;
+            j += 2;
+            while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // Suffix (u32, f64, usize, …).
+    let suffix_start = j;
+    while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+        j += 1;
+    }
+    let suffix: String = chars[suffix_start..j].iter().collect();
+    if suffix.starts_with("f32") || suffix.starts_with("f64") {
+        float = true;
+    }
+    let text: String = chars[i..j].iter().collect();
+    (Tok { kind: TokKind::Num { float }, text, line }, j)
+}
+
+/// Extract `lint:allow(<rule>) <justification>` annotations from a comment
+/// body. Several annotations may share one comment.
+fn harvest_allows(body: &str, mut line: usize, out: &mut Vec<Allow>) {
+    for part in body.split('\n') {
+        let mut rest = part;
+        while let Some(pos) = rest.find("lint:allow(") {
+            let after = &rest[pos + "lint:allow(".len()..];
+            if let Some(close) = after.find(')') {
+                let rule = after[..close].trim().to_string();
+                let just = after[close + 1..].trim();
+                // The justification ends at the next annotation, if any.
+                let just = just.split("lint:allow(").next().unwrap_or("").trim();
+                out.push(Allow { rule, line, justified: !just.is_empty() });
+                rest = &after[close + 1..];
+            } else {
+                break;
+            }
+        }
+        line += 1;
+    }
+}
+
+/// Compute the set of 1-based lines covered by `#[cfg(test)]` items
+/// (modules or functions) so rules can skip test-only code. The region is
+/// found by matching the attribute token sequence and then brace-matching
+/// the item body; attribute-on-statement (`#[cfg(test)] use …;`) regions
+/// end at the terminating semicolon.
+pub fn cfg_test_lines(toks: &[Tok]) -> std::collections::BTreeSet<usize> {
+    let mut lines = std::collections::BTreeSet::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let hit = toks[i].is_op("#")
+            && toks[i + 1].is_op("[")
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is_op("(")
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is_op(")")
+            && toks[i + 6].is_op("]");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let region_start_line = toks[i].line;
+        // Find the item body: the first `{` at depth 0 before a `;`.
+        let mut j = i + 7;
+        let mut end_line = region_start_line;
+        while j < toks.len() {
+            if toks[j].is_op(";") {
+                end_line = toks[j].line;
+                break;
+            }
+            if toks[j].is_op("{") {
+                let mut depth = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    if toks[k].is_op("{") {
+                        depth += 1;
+                    } else if toks[k].is_op("}") {
+                        depth -= 1;
+                    }
+                    k += 1;
+                }
+                end_line = toks[k.min(toks.len()) - 1].line;
+                break;
+            }
+            j += 1;
+        }
+        for l in region_start_line..=end_line {
+            lines.insert(l);
+        }
+        i = j + 1;
+    }
+    lines
+}

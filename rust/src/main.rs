@@ -15,6 +15,9 @@
 //!                 `router` (Fig. 5c), `riscv-power` (Fig. 6).
 //! - `inspect`   — show how a weights artifact maps onto the chip.
 //! - `gen-data`  — emit a synthetic dataset JSON (debugging aid).
+//! - `lint`      — `soclint`, the in-tree determinism & invariant linter
+//!                 (`--check` ratchets against `LINT_BASELINE.json`;
+//!                 `--write-baseline` refreshes it).
 //!
 //! All chip configuration funnels through `serve::SocBuilder`, so CLI
 //! flags, JSON configs and fluent construction share one validator.
@@ -50,6 +53,7 @@ fn run(args: &Args) -> Result<()> {
         Some("bench") => cmd_bench(args),
         Some("inspect") => cmd_inspect(args),
         Some("gen-data") => cmd_gen_data(args),
+        Some("lint") => fullerene_soc::lint::lint_main(args),
         Some(other) => Err(Error::Config(format!(
             "unknown subcommand '{other}'; run without args for help"
         ))),
@@ -64,7 +68,7 @@ fn print_help() {
     println!(
         "fullerene-soc — neuromorphic SoC simulator (CS.AR 2024 reproduction)\n\
          \n\
-         USAGE: fullerene-soc <run|serve|topo|bench|inspect|gen-data> [flags]\n\
+         USAGE: fullerene-soc <run|serve|topo|bench|inspect|gen-data|lint> [flags]\n\
          \n\
          run       --workload nmnist|dvsgesture|cifar10  --samples N  --seed S\n\
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
@@ -100,7 +104,11 @@ fn print_help() {
          topo      (prints the Fig. 5 topology comparison)\n\
          bench     core-sparsity | router | riscv-power  (quick figure repros)\n\
          inspect   --weights <file>   (mapping summary)\n\
-         gen-data  --workload W --samples N --seed S --out file.json"
+         gen-data  --workload W --samples N --seed S --out file.json\n\
+         lint      (soclint: determinism & invariant linter over the tree)\n\
+                   --check (ratchet against LINT_BASELINE.json; CI gate)\n\
+                   --write-baseline (refresh the ratchet after paying down debt)\n\
+                   --root <repo-root>  --baseline <file>"
     );
 }
 

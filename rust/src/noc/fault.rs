@@ -276,47 +276,81 @@ impl FaultPlan {
     /// Parse the CLI spec grammar ([`FAULT_SPEC_USAGE`]). The empty
     /// string parses to [`FaultPlan::none`].
     pub fn parse(spec: &str) -> Result<FaultPlan> {
-        let bad = |ev: &str| Error::Config(format!("bad fault event '{ev}' — {FAULT_SPEC_USAGE}"));
+        // Every diagnostic names the event ordinal, the offending token
+        // and its char position inside the event, so a long ';'-joined
+        // spec is debuggable without bisecting it by hand.
+        fn bad(ord: usize, ev: &str, what: &str) -> Error {
+            Error::Config(format!(
+                "fault plan event #{} ({ev:?}): {what} — {FAULT_SPEC_USAGE}",
+                ord + 1
+            ))
+        }
+        fn num<T: std::str::FromStr>(ord: usize, ev: &str, field: &str, tok: &str) -> Result<T> {
+            let tok = tok.trim();
+            tok.parse().map_err(|_| {
+                let pos = ev.find(tok).unwrap_or(0);
+                bad(ord, ev, &format!("bad {field} {tok:?} at char {pos}"))
+            })
+        }
         let mut plan = FaultPlan::none();
-        for ev in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
-            let (head, when) = ev.rsplit_once('@').ok_or_else(|| bad(ev))?;
-            let when = parse_when(when.trim()).ok_or_else(|| bad(ev))?;
+        for (ord, ev) in spec.split(';').map(str::trim).filter(|s| !s.is_empty()).enumerate() {
+            let (head, when_s) = ev
+                .rsplit_once('@')
+                .ok_or_else(|| bad(ord, ev, "missing '@<when>' activation suffix"))?;
+            let when = parse_when(when_s.trim()).ok_or_else(|| {
+                bad(
+                    ord,
+                    ev,
+                    &format!(
+                        "bad activation time {:?} at char {} (want <cycle> or t<timestep>)",
+                        when_s.trim(),
+                        head.len() + 1
+                    ),
+                )
+            })?;
             let kind = if let Some(rest) = head.strip_prefix("kill-router:") {
-                FaultKind::RouterKill { node: rest.trim().parse().map_err(|_| bad(ev))? }
+                FaultKind::RouterKill { node: num(ord, ev, "router node", rest)? }
             } else if let Some(rest) = head.strip_prefix("kill-link:") {
-                let (a, b) = rest.split_once('-').ok_or_else(|| bad(ev))?;
+                let (a, b) = rest.split_once('-').ok_or_else(|| {
+                    bad(ord, ev, "missing '-' between link endpoints (want kill-link:<a>-<b>)")
+                })?;
                 FaultKind::LinkKill {
-                    a: a.trim().parse().map_err(|_| bad(ev))?,
-                    b: b.trim().parse().map_err(|_| bad(ev))?,
+                    a: num(ord, ev, "link endpoint a", a)?,
+                    b: num(ord, ev, "link endpoint b", b)?,
                 }
             } else if let Some(rest) = head.strip_prefix("throttle-l1:") {
                 FaultKind::LinkThrottle {
                     level: LinkLevel::L1,
-                    factor: rest.trim().parse().map_err(|_| bad(ev))?,
+                    factor: num(ord, ev, "throttle factor", rest)?,
                 }
             } else if let Some(rest) = head.strip_prefix("throttle-l2:") {
                 FaultKind::LinkThrottle {
                     level: LinkLevel::L2,
-                    factor: rest.trim().parse().map_err(|_| bad(ev))?,
+                    factor: num(ord, ev, "throttle factor", rest)?,
                 }
             } else if let Some(rest) = head.strip_prefix("congest:") {
-                let (node, dur) = rest.split_once('+').ok_or_else(|| bad(ev))?;
+                let (node, dur) = rest.split_once('+').ok_or_else(|| {
+                    bad(ord, ev, "missing '+' between node and duration (want congest:<node>+<cycles>)")
+                })?;
                 FaultKind::Congest {
-                    node: node.trim().parse().map_err(|_| bad(ev))?,
-                    duration: dur.trim().parse().map_err(|_| bad(ev))?,
+                    node: num(ord, ev, "congested node", node)?,
+                    duration: num(ord, ev, "congestion cycles", dur)?,
                 }
             } else if let Some(rest) = head.strip_prefix("kill-frac:") {
-                let (frac, seed) = rest.split_once('#').ok_or_else(|| bad(ev))?;
+                let (frac, seed) = rest.split_once('#').ok_or_else(|| {
+                    bad(ord, ev, "missing '#' between fraction and seed (want kill-frac:<frac>#<seed>)")
+                })?;
                 FaultKind::KillFrac {
-                    frac: frac.trim().parse().map_err(|_| bad(ev))?,
-                    seed: seed.trim().parse().map_err(|_| bad(ev))?,
+                    frac: num(ord, ev, "kill fraction", frac)?,
+                    seed: num(ord, ev, "kill seed", seed)?,
                 }
             } else if let Some(rest) = head.strip_prefix("kill-l3:") {
-                FaultKind::RouterKillL3 { chip: rest.trim().parse().map_err(|_| bad(ev))? }
+                FaultKind::RouterKillL3 { chip: num(ord, ev, "l3 chip", rest)? }
             } else if let Some(rest) = head.strip_prefix("throttle-l3:") {
-                FaultKind::LinkThrottleL3 { factor: rest.trim().parse().map_err(|_| bad(ev))? }
+                FaultKind::LinkThrottleL3 { factor: num(ord, ev, "throttle factor", rest)? }
             } else {
-                return Err(bad(ev));
+                let kind_tok = head.split(':').next().unwrap_or(head);
+                return Err(bad(ord, ev, &format!("unknown event kind {kind_tok:?} at char 0")));
             };
             plan.events.push(FaultEvent { when, kind });
         }

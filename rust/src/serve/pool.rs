@@ -159,8 +159,8 @@ impl<'a> ReplayBuffer<'a> {
     }
 
     fn next(&mut self) -> Option<Sample> {
-        if self.cursor < self.seen.len() {
-            let s = self.seen[self.cursor].clone();
+        if let Some(s) = self.seen.get(self.cursor) {
+            let s = s.clone();
             self.cursor += 1;
             return Some(s);
         }
@@ -208,7 +208,7 @@ fn run_attempt(
     deadline_cycles: u64,
     wall_deadline: Option<std::time::Instant>,
     queue_wait_s: f64,
-) -> (Result<SessionOutcome>, Option<Engine>, u64) {
+) -> (Result<SessionOutcome>, Engine, u64) {
     let mut session = Session::open_engine(engine, name);
     let use_ref = matches!(check, GoldenCheck::Reference);
     let mut mismatches = 0u64;
@@ -218,7 +218,7 @@ fn run_attempt(
             Ok(r) => r,
             Err(e) => {
                 let cycles = session.cycles();
-                return (Err(e), Some(session.into_engine()), cycles);
+                return (Err(e), session.into_engine(), cycles);
             }
         };
         if use_ref {
@@ -235,15 +235,16 @@ fn run_attempt(
                 "session '{name}' burned {cycles} simulated cycles against a \
                  {deadline_cycles}-cycle budget"
             ));
-            return (Err(e), Some(session.into_engine()), cycles);
+            return (Err(e), session.into_engine(), cycles);
         }
         if let Some(dl) = wall_deadline {
+            // lint:allow(host-clock-quarantine) the wall-deadline watchdog is host timing by design
             if std::time::Instant::now() >= dl {
                 let cycles = session.cycles();
                 let e = Error::Deadline(format!(
                     "session '{name}' overran its host wall-clock deadline"
                 ));
-                return (Err(e), Some(session.into_engine()), cycles);
+                return (Err(e), session.into_engine(), cycles);
             }
         }
     }
@@ -272,7 +273,7 @@ fn run_attempt(
             verdict: SessionVerdict::Completed,
             replans,
         }),
-        Some(engine),
+        engine,
         cycles,
     )
 }
@@ -302,6 +303,7 @@ pub(crate) fn run_session_on(
 ) -> Result<(SessionOutcome, Engine)> {
     check_geometry(net, name, workload)?;
     let wall_deadline = if policy.deadline_wall_ms > 0 {
+        // lint:allow(host-clock-quarantine) the wall-deadline watchdog is host timing by design
         Some(std::time::Instant::now() + std::time::Duration::from_millis(policy.deadline_wall_ms))
     } else {
         None
@@ -318,15 +320,11 @@ pub(crate) fn run_session_on(
             queue_wait_s,
         );
         let outcome = r?;
-        return Ok((
-            outcome,
-            engine.expect("a successful attempt returns its engine"),
-        ));
+        return Ok((outcome, engine));
     }
-    // Retry path: capture the build recipe up front (the engine may be
-    // replaced), buffer the stream for bit-exact replay.
-    let config = engine.config().clone();
-    let base_plan = config.fault_plan.clone();
+    // Retry path: capture the base fault plan up front (retries re-arm a
+    // shifted tail), buffer the stream for bit-exact replay.
+    let base_plan = engine.config().fault_plan.clone();
     let mut replay = ReplayBuffer::new(workload);
     let mut engine = engine;
     let mut burned = 0u64;
@@ -347,7 +345,7 @@ pub(crate) fn run_session_on(
             Ok(mut outcome) => {
                 outcome.attempts = attempts;
                 outcome.retry_cycles_burned = burned;
-                let mut engine = engine_back.expect("a successful attempt returns its engine");
+                let mut engine = engine_back;
                 if attempts > 1 {
                     // The winning attempt ran the plan's shifted tail;
                     // hand the engine back with the *original* plan so
@@ -363,13 +361,8 @@ pub(crate) fn run_session_on(
                 burned = burned
                     .saturating_add(cycles)
                     .saturating_add(policy.backoff_for(attempts));
-                let mut eng = match engine_back {
-                    Some(mut eng) => {
-                        eng.reset_for_session();
-                        eng
-                    }
-                    None => Engine::new(net.clone(), config.clone())?,
-                };
+                let mut eng = engine_back;
+                eng.reset_for_session();
                 eng.rearm_fault_plan(base_plan.shifted(burned))?;
                 replay.rewind();
                 engine = eng;

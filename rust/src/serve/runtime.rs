@@ -157,10 +157,16 @@ impl SessionTicket {
     /// are unaffected. May be called more than once (the result is
     /// cloned out, never drained).
     pub fn wait(&self) -> Result<SessionOutcome> {
-        let slot = wait_until(&self.inner.ready, lock_q(&self.inner.slot), |s| {
-            s.is_some()
-        });
-        slot.as_ref().expect("waited for a resolved slot").clone()
+        let mut slot = lock_q(&self.inner.slot);
+        loop {
+            // Re-take the predicate's witness by hand instead of
+            // expect()ing on it: a spurious None after wait_until would
+            // otherwise panic the caller's thread.
+            if let Some(r) = slot.as_ref() {
+                return r.clone();
+            }
+            slot = wait_until(&self.inner.ready, slot, |s| s.is_some());
+        }
     }
 
     /// Non-blocking probe: the outcome if the session already finished.
@@ -271,6 +277,7 @@ impl ServeRuntime {
         let handles = (0..workers)
             .map(|wid| {
                 let shared = shared.clone();
+                // lint:allow(no-unscoped-threads) workers joined in close_and_join(); merges stay in submission order
                 std::thread::spawn(move || worker_loop(&shared, wid))
             })
             .collect();
@@ -358,6 +365,7 @@ impl ServeRuntime {
             index,
             spec,
             ticket: ticket.clone(),
+            // lint:allow(host-clock-quarantine) queue-wait is host latency telemetry, not sim state
             submitted_at: Instant::now(),
         });
         drop(q);
@@ -389,12 +397,22 @@ impl ServeRuntime {
         let mut failures = Vec::new();
         for t in &tickets {
             let slot = lock_q(&t.slot);
-            match slot.as_ref().expect("workers resolve every ticket on drain") {
-                Ok(o) => sessions.push(o.clone()),
-                Err(e) => failures.push(SessionFailure {
+            match slot.as_ref() {
+                Some(Ok(o)) => sessions.push(o.clone()),
+                Some(Err(e)) => failures.push(SessionFailure {
                     index: t.index,
                     name: t.name.clone(),
                     error: e.clone(),
+                }),
+                // Workers resolve every ticket on drain; if one somehow
+                // didn't, that is this session's failure, not a panic.
+                None => failures.push(SessionFailure {
+                    index: t.index,
+                    name: t.name.clone(),
+                    error: Error::Runtime(format!(
+                        "session '{}' (#{}) was never resolved by a worker",
+                        t.name, t.index
+                    )),
                 }),
             }
         }
@@ -413,6 +431,7 @@ impl ServeRuntime {
         let mut first_err = None;
         for (wid, h) in std::mem::take(&mut self.workers).into_iter().enumerate() {
             if h.join().is_err() && first_err.is_none() {
+                // lint:allow(no-silent-panic-in-serving) wid enumerates self.workers, running has that length
                 let running = lock_q(&self.shared.q).running[wid].take();
                 first_err = Some(Error::Soc(match running {
                     Some(s) => {
@@ -452,10 +471,15 @@ impl Iterator for Outcomes<'_> {
         loop {
             if let Some(t) = q.completions.pop_front() {
                 let slot = lock_q(&t.slot);
-                let outcome = slot
-                    .as_ref()
-                    .expect("completed ticket carries a result")
-                    .clone();
+                let outcome = match slot.as_ref() {
+                    Some(r) => r.clone(),
+                    // A completed ticket always carries a result; if not,
+                    // surface it as this session's failure, not a panic.
+                    None => Err(Error::Runtime(format!(
+                        "session '{}' (#{}) completed without a result",
+                        t.name, t.index
+                    ))),
+                };
                 return Some(SessionResult {
                     index: t.index,
                     name: t.name.clone(),
@@ -493,6 +517,7 @@ fn worker_loop(shared: &Arc<Shared>, wid: usize) {
             });
             match q.pending.pop_front() {
                 Some(p) => {
+                    // lint:allow(no-silent-panic-in-serving) wid < workers by construction of the pool
                     q.running[wid] =
                         Some(format!("'{}' (#{})", p.spec.name, p.index));
                     p
@@ -509,6 +534,7 @@ fn worker_loop(shared: &Arc<Shared>, wid: usize) {
         p.ticket.ready.notify_all();
         {
             let mut q = lock_q(&shared.q);
+            // lint:allow(no-silent-panic-in-serving) wid < workers by construction of the pool
             q.running[wid] = None;
             q.finished += 1;
             q.completions.push_back(p.ticket.clone());

@@ -249,7 +249,7 @@ pub(crate) fn percentile<T: Copy + Default>(sorted: &[T], p: f64) -> T {
         return T::default();
     }
     let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    sorted.get(idx).or_else(|| sorted.last()).copied().unwrap_or_default()
 }
 
 #[cfg(test)]

@@ -162,6 +162,7 @@ impl Workload for EventReplay {
         if self.pass >= self.passes {
             return None;
         }
+        // lint:allow(no-silent-panic-in-serving) cursor wraps below shard_len, start+len <= samples.len
         let s = self.samples[self.start + self.cursor].clone();
         self.cursor += 1;
         Some(s)
@@ -337,26 +338,48 @@ impl Workload for TrafficWorkload {
 
 /// Parse an `<inputs>x<classes>x<timesteps>@<rate>` geometry spec (the
 /// shared grammar of `traffic:` and `synthetic:`). `usage` names the
-/// prefix in every error, so a typo'd spec explains its own grammar.
+/// grammar; every error additionally cites the offending token and its
+/// character position inside the spec, so a typo'd spec explains itself.
 fn parse_geometry_spec(rest: &str, usage: &str) -> Result<(usize, usize, usize, f64)> {
-    let (dims, rate) = rest
+    let (dims, rate_str) = rest
         .split_once('@')
-        .ok_or_else(|| Error::Config(usage.into()))?;
-    let parts: Vec<&str> = dims.split('x').collect();
-    if parts.len() != 3 {
-        return Err(Error::Config(usage.into()));
-    }
-    let parse_dim =
-        |s: &str| -> Result<usize> { s.parse().map_err(|_| Error::Config(usage.into())) };
-    let inputs = parse_dim(parts[0])?;
-    let classes = parse_dim(parts[1])?;
-    let timesteps = parse_dim(parts[2])?;
-    if inputs == 0 || classes == 0 || timesteps == 0 {
-        return Err(Error::Config(usage.into()));
-    }
-    let rate: f64 = rate.parse().map_err(|_| Error::Config(usage.into()))?;
+        .ok_or_else(|| Error::Config(format!("{usage}: missing '@<rate>' in {rest:?}")))?;
+    let mut it = dims.split('x');
+    let (p0, p1, p2) = match (it.next(), it.next(), it.next(), it.next()) {
+        (Some(a), Some(b), Some(c), None) => (a, b, c),
+        _ => {
+            return Err(Error::Config(format!(
+                "{usage}: expected exactly 3 'x'-separated dims, got {} in {dims:?}",
+                dims.split('x').count()
+            )))
+        }
+    };
+    let dim = |name: &str, part: &str, pos: usize| -> Result<usize> {
+        let v: usize = part.parse().map_err(|_| {
+            Error::Config(format!(
+                "{usage}: bad {name} {part:?} at char {pos} of {rest:?}"
+            ))
+        })?;
+        if v == 0 {
+            return Err(Error::Config(format!(
+                "{usage}: {name} must be nonzero, got {part:?} at char {pos} of {rest:?}"
+            )));
+        }
+        Ok(v)
+    };
+    let inputs = dim("inputs", p0, 0)?;
+    let classes = dim("classes", p1, p0.len() + 1)?;
+    let timesteps = dim("timesteps", p2, p0.len() + p1.len() + 2)?;
+    let rate_pos = dims.len() + 1;
+    let rate: f64 = rate_str.parse().map_err(|_| {
+        Error::Config(format!(
+            "{usage}: bad rate {rate_str:?} at char {rate_pos} of {rest:?}"
+        ))
+    })?;
     if !(0.0..=1.0).contains(&rate) {
-        return Err(Error::Config(format!("{usage} (rate outside [0, 1])")));
+        return Err(Error::Config(format!(
+            "{usage}: rate {rate} outside [0, 1] at char {rate_pos} of {rest:?}"
+        )));
     }
     Ok((inputs, classes, timesteps, rate))
 }

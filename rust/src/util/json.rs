@@ -36,6 +36,7 @@ impl Json {
     /// As i64 (must be integral), or error.
     pub fn as_i64(&self) -> Result<i64> {
         let f = self.as_f64()?;
+        // lint:allow(no-float-eq) fract()==0 is the exact IEEE integrality test, not a tolerance check
         if f.fract() != 0.0 || f.abs() > 2f64.powi(53) {
             return Err(Error::Json(format!("expected integer, got {f}")));
         }
@@ -163,6 +164,7 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
+                // lint:allow(no-float-eq) fract()==0 is the exact IEEE integrality test, not a tolerance check
                 if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
                     let _ = write!(out, "{}", *n as i64);
                 } else {

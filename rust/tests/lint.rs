@@ -1,0 +1,449 @@
+//! Fixture tests for `soclint` — every source rule and model lint is
+//! proven to (a) fire on a minimal positive snippet, (b) fall silent
+//! under a justified inline `lint:allow`, and the ratchet is proven to
+//! fail in both directions (new violation, stale baseline). A final
+//! test runs the linter over the real tree and pins the per-rule counts
+//! to the committed `LINT_BASELINE.json`.
+
+use fullerene_soc::lint::baseline::Baseline;
+use fullerene_soc::lint::{self, FileSet, SourceFile};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A one-file fixture set (no README).
+fn fixture(path: &str, text: &str) -> FileSet {
+    FileSet::from_memory(
+        vec![SourceFile { path: path.to_string(), text: text.to_string() }],
+        None,
+    )
+}
+
+/// Findings of one rule over a fixture set.
+fn hits(fs: &FileSet, rule: &str) -> Vec<lint::Finding> {
+    lint::run(fs).into_iter().filter(|f| f.rule == rule).collect()
+}
+
+// ---------------------------------------------------------------- layer 1
+
+#[test]
+fn no_hash_collections_fires_and_allows() {
+    let fs = fixture("rust/src/core/x.rs", "use std::collections::HashMap;\n");
+    assert_eq!(hits(&fs, "no-hash-collections").len(), 1);
+
+    let fs = fixture(
+        "rust/src/core/x.rs",
+        "// lint:allow(no-hash-collections) interned, order never observed\n\
+         use std::collections::HashMap;\n",
+    );
+    assert!(hits(&fs, "no-hash-collections").is_empty());
+
+    // An allow with no justification text suppresses nothing.
+    let fs = fixture(
+        "rust/src/core/x.rs",
+        "// lint:allow(no-hash-collections)\nuse std::collections::HashMap;\n",
+    );
+    assert_eq!(hits(&fs, "no-hash-collections").len(), 1);
+
+    // An allow two lines above is out of adjacency range.
+    let fs = fixture(
+        "rust/src/core/x.rs",
+        "// lint:allow(no-hash-collections) too far away\n\n\
+         use std::collections::HashMap;\n",
+    );
+    assert_eq!(hits(&fs, "no-hash-collections").len(), 1);
+
+    // #[cfg(test)] code may use hash collections freely.
+    let fs = fixture(
+        "rust/src/core/x.rs",
+        "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n",
+    );
+    assert!(hits(&fs, "no-hash-collections").is_empty());
+
+    // Benches/tests/examples are outside the sim-code scope entirely.
+    let fs = fixture("rust/benches/x.rs", "use std::collections::HashMap;\n");
+    assert!(hits(&fs, "no-hash-collections").is_empty());
+}
+
+#[test]
+fn host_clock_quarantine_fires_allows_and_allowlists() {
+    let src = "fn f() { let _t = std::time::Instant::now(); }\n";
+    assert_eq!(hits(&fixture("rust/src/noc/x.rs", src), "host-clock-quarantine").len(), 1);
+    // SystemTime is banned outright, even without ::now.
+    let fs = fixture("rust/src/noc/x.rs", "use std::time::SystemTime;\n");
+    assert_eq!(hits(&fs, "host-clock-quarantine").len(), 1);
+    // The wholesale-quarantined host-timing file is exempt.
+    assert!(hits(&fixture("rust/src/util/bench.rs", src), "host-clock-quarantine").is_empty());
+    // Inline allow (trailing, same line) with justification.
+    let fs = fixture(
+        "rust/src/noc/x.rs",
+        "fn f() { let _t = std::time::Instant::now(); } // lint:allow(host-clock-quarantine) watchdog is host timing by design\n",
+    );
+    assert!(hits(&fs, "host-clock-quarantine").is_empty());
+}
+
+#[test]
+fn no_unscoped_threads_fires_and_allows() {
+    let src = "fn f() { std::thread::spawn(|| {}); }\n";
+    assert_eq!(hits(&fixture("rust/src/serve/x.rs", src), "no-unscoped-threads").len(), 1);
+    let fs = fixture(
+        "rust/src/serve/x.rs",
+        "// lint:allow(no-unscoped-threads) joined in close(), merge order pinned\n\
+         fn f() { std::thread::spawn(|| {}); }\n",
+    );
+    assert!(hits(&fs, "no-unscoped-threads").is_empty());
+}
+
+#[test]
+fn no_float_eq_fires_and_allows() {
+    assert_eq!(
+        hits(&fixture("rust/src/energy/x.rs", "fn f(x: f64) -> bool { x == 1.5 }\n"), "no-float-eq").len(),
+        1
+    );
+    assert_eq!(
+        hits(&fixture("rust/src/energy/x.rs", "fn f(x: f64) -> bool { 0.0 != x }\n"), "no-float-eq").len(),
+        1
+    );
+    // Integer equality is fine.
+    assert!(hits(&fixture("rust/src/energy/x.rs", "fn f(x: u64) -> bool { x == 1 }\n"), "no-float-eq")
+        .is_empty());
+    // Range bounds are not float literals (`0..n` must not parse as 0.).
+    assert!(hits(
+        &fixture("rust/src/energy/x.rs", "fn f(n: usize) -> bool { (0..n).len() == 3 }\n"),
+        "no-float-eq"
+    )
+    .is_empty());
+    let fs = fixture(
+        "rust/src/energy/x.rs",
+        "// lint:allow(no-float-eq) exact sentinel value of the sweep grid\n\
+         fn f(x: f64) -> bool { x == 1.5 }\n",
+    );
+    assert!(hits(&fs, "no-float-eq").is_empty());
+}
+
+#[test]
+fn no_silent_panic_fires_on_the_serving_surface_only() {
+    let rule = "no-silent-panic-in-serving";
+    // unwrap / expect / panic-family / slice index, all in serve/.
+    assert_eq!(hits(&fixture("rust/src/serve/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n"), rule).len(), 1);
+    assert_eq!(
+        hits(&fixture("rust/src/serve/x.rs", "fn f(o: Option<u8>) { o.expect(\"x\"); }\n"), rule).len(),
+        1
+    );
+    assert_eq!(hits(&fixture("rust/src/serve/x.rs", "fn f() { panic!(\"boom\"); }\n"), rule).len(), 1);
+    assert_eq!(hits(&fixture("rust/src/serve/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n"), rule).len(), 1);
+    // cluster/ is serving surface for unwrap, but NOT for slice indexing
+    // (planners index heavily under catch_unwind attribution).
+    assert_eq!(hits(&fixture("rust/src/cluster/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n"), rule).len(), 1);
+    assert!(hits(&fixture("rust/src/cluster/x.rs", "fn f(v: &[u8]) -> u8 { v[0] }\n"), rule).is_empty());
+    // Non-serving sim code may unwrap (other rules govern it).
+    assert!(hits(&fixture("rust/src/core/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n"), rule).is_empty());
+    // Test code inside serve/ may unwrap.
+    let fs = fixture(
+        "rust/src/serve/x.rs",
+        "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u8>) { o.unwrap(); }\n}\n",
+    );
+    assert!(hits(&fs, rule).is_empty());
+    // Justified allow on the line above.
+    let fs = fixture(
+        "rust/src/serve/x.rs",
+        "// lint:allow(no-silent-panic-in-serving) index < len by construction\n\
+         fn f(v: &[u8]) -> u8 { v[0] }\n",
+    );
+    assert!(hits(&fs, rule).is_empty());
+}
+
+#[test]
+fn no_unsafe_fires_everywhere_even_in_tests() {
+    let src = "fn f() { let _x = unsafe { 1u8 }; }\n";
+    assert_eq!(hits(&fixture("rust/src/core/x.rs", src), "no-unsafe").len(), 1);
+    // Benches and integration tests are covered too (outside the crate
+    // root, so #![forbid(unsafe_code)] alone would not reach them).
+    assert_eq!(hits(&fixture("rust/benches/x.rs", src), "no-unsafe").len(), 1);
+    let in_test = format!("#[cfg(test)]\nmod tests {{\n    {src}}}\n");
+    assert_eq!(hits(&fixture("rust/src/core/x.rs", &in_test), "no-unsafe").len(), 1);
+    // The word in a string or comment is not a token hit.
+    let fs = fixture("rust/src/core/x.rs", "// unsafe is discussed here\nconst S: &str = \"unsafe\";\n");
+    assert!(hits(&fs, "no-unsafe").is_empty());
+    let fs = fixture(
+        "rust/src/core/x.rs",
+        "// lint:allow(no-unsafe) would need a real justification to exist\n\
+         fn f() { let _x = unsafe { 1u8 }; }\n",
+    );
+    assert!(hits(&fs, "no-unsafe").is_empty());
+}
+
+// ---------------------------------------------------------------- layer 2
+
+/// A complete, healthy three-file energy-model fixture.
+fn ledger_fixture(model: &str) -> FileSet {
+    FileSet::from_memory(
+        vec![
+            SourceFile { path: "rust/src/energy/model.rs".into(), text: model.into() },
+            SourceFile {
+                path: "rust/src/energy/constants.rs".into(),
+                text: "pub struct P { pub e_sop: f64, pub e_spike: f64 }\n".into(),
+            },
+            SourceFile {
+                path: "rust/src/core/charge.rs".into(),
+                text: "fn f(l: &mut L) { l.add(EventClass::Sop, 1); l.add(EventClass::Spike, 1); }\n"
+                    .into(),
+            },
+        ],
+        None,
+    )
+}
+
+const MODEL_OK: &str = "pub enum EventClass { Sop, Spike }\n\
+    impl EventClass {\n\
+        pub const ALL: [EventClass; 2] = [EventClass::Sop, EventClass::Spike];\n\
+        pub fn energy_pj(self, p: &P) -> f64 {\n\
+            match self { Sop => p.e_sop, Spike => p.e_spike }\n\
+        }\n\
+    }\n";
+
+#[test]
+fn ledger_completeness_accepts_a_complete_model() {
+    assert!(hits(&ledger_fixture(MODEL_OK), "ledger-completeness").is_empty());
+}
+
+#[test]
+fn ledger_completeness_catches_unpriced_uncharged_and_unreported() {
+    // Unpriced: Spike has no `=> p.e_*` arm.
+    let model = "pub enum EventClass { Sop, Spike }\n\
+        impl EventClass {\n\
+            pub const ALL: [EventClass; 2] = [EventClass::Sop, EventClass::Spike];\n\
+            pub fn energy_pj(self, p: &P) -> f64 { match self { Sop => p.e_sop, _ => 0.0 } }\n\
+        }\n";
+    let found = hits(&ledger_fixture(model), "ledger-completeness");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].msg.contains("no `Spike => p.e_*` arm"), "{}", found[0].msg);
+
+    // Priced from a field constants.rs does not define.
+    let model = MODEL_OK.replace("p.e_spike", "p.e_ghost");
+    let found = hits(&ledger_fixture(&model), "ledger-completeness");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].msg.contains("e_ghost"), "{}", found[0].msg);
+
+    // Never charged: drop the Spike charge site.
+    let mut fs = ledger_fixture(MODEL_OK);
+    fs = FileSet::from_memory(
+        fs.files
+            .iter()
+            .map(|f| SourceFile {
+                path: f.path.clone(),
+                text: f.text.replace("l.add(EventClass::Spike, 1); ", ""),
+            })
+            .collect(),
+        None,
+    );
+    let found = hits(&fs, "ledger-completeness");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].msg.contains("never charged"), "{}", found[0].msg);
+
+    // Missing from ALL: no report key.
+    let model = MODEL_OK.replace(", EventClass::Spike]", "]").replace("[EventClass; 2]", "[EventClass; 1]");
+    let found = hits(&ledger_fixture(&model), "ledger-completeness");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].msg.contains("missing from EventClass::ALL"), "{}", found[0].msg);
+}
+
+#[test]
+fn ledger_completeness_respects_lint_allow_on_the_variant() {
+    // Same unpriced-Spike model, but the variant carries a justified
+    // allow on the line above its declaration.
+    let model = "pub enum EventClass { Sop,\n\
+        // lint:allow(ledger-completeness) placeholder class for the next PR\n\
+        Spike }\n\
+        impl EventClass {\n\
+            pub const ALL: [EventClass; 2] = [EventClass::Sop, EventClass::Spike];\n\
+            pub fn energy_pj(self, p: &P) -> f64 { match self { Sop => p.e_sop, _ => 0.0 } }\n\
+        }\n";
+    assert!(hits(&ledger_fixture(model), "ledger-completeness").is_empty());
+}
+
+#[test]
+fn error_variants_constructed_fires_and_allows() {
+    let rule = "error-variants-constructed";
+    // Never(_) appears only in error.rs trait impls (match arms name every
+    // variant without constructing it), so it must be flagged.
+    let errs = "pub enum Error { Config(String), Never(String) }\n\
+        impl Error {\n\
+            pub fn config(s: &str) -> Error { Error::Config(s.to_string()) }\n\
+        }\n\
+        impl Clone for Error {\n\
+            fn clone(&self) -> Error {\n\
+                match self {\n\
+                    Error::Config(s) => Error::Config(s.clone()),\n\
+                    Error::Never(s) => Error::Never(s.clone()),\n\
+                }\n\
+            }\n\
+        }\n";
+    let fs = fixture("rust/src/error.rs", errs);
+    let found = hits(&fs, rule);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].msg.contains("Error::Never"), "{}", found[0].msg);
+
+    // A construction site anywhere else in the tree clears it.
+    let fs = FileSet::from_memory(
+        vec![
+            SourceFile { path: "rust/src/error.rs".into(), text: errs.into() },
+            SourceFile {
+                path: "rust/src/serve/x.rs".into(),
+                text: "fn f() -> Error { Error::Never(\"x\".into()) }\n".into(),
+            },
+        ],
+        None,
+    );
+    assert!(hits(&fs, rule).is_empty());
+
+    // Or a justified allow on the variant's declaration line.
+    let allowed = errs.replace(
+        "pub enum Error { Config(String), Never(String) }",
+        "pub enum Error { Config(String),\n\
+         // lint:allow(error-variants-constructed) reserved for wire protocol v2\n\
+         Never(String) }",
+    );
+    assert!(hits(&fixture("rust/src/error.rs", &allowed), rule).is_empty());
+}
+
+#[test]
+fn cli_flag_coverage_fires_and_allows() {
+    let rule = "cli-flag-coverage";
+    let main = "fn main() {\n\
+        let _ = args.reject_unknown(&[\"seed\", \"ghost\"]);\n\
+        let _s = args.get(\"seed\");\n\
+    }\n";
+    let fs = FileSet::from_memory(
+        vec![SourceFile { path: "rust/src/main.rs".into(), text: main.into() }],
+        Some("usage: --seed <n>\n".into()),
+    );
+    let found = hits(&fs, rule);
+    // ghost: accepted but never read, and undocumented — two findings.
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert!(found.iter().any(|f| f.msg.contains("never read")), "{found:?}");
+    assert!(found.iter().any(|f| f.msg.contains("not documented")), "{found:?}");
+    assert!(found.iter().all(|f| f.msg.contains("--ghost")), "{found:?}");
+
+    // Reading it and documenting it clears both halves.
+    let main_ok = main.replace("args.get(\"seed\")", "args.get(\"seed\").or(args.get(\"ghost\"))");
+    let fs = FileSet::from_memory(
+        vec![SourceFile { path: "rust/src/main.rs".into(), text: main_ok.into() }],
+        Some("usage: --seed <n> --ghost\n".into()),
+    );
+    assert!(hits(&fs, rule).is_empty());
+
+    // Without a README the documentation half is skipped (fixture mode).
+    let fs = FileSet::from_memory(
+        vec![SourceFile { path: "rust/src/main.rs".into(), text: main_ok.into() }],
+        None,
+    );
+    assert!(hits(&fs, rule).is_empty());
+
+    // A justified allow above the allowlist line silences the flag.
+    let main_allowed = main.replace(
+        "let _ = args.reject_unknown",
+        "// lint:allow(cli-flag-coverage) ghost is a hidden debug flag\n\
+         let _ = args.reject_unknown",
+    );
+    let fs = FileSet::from_memory(
+        vec![SourceFile { path: "rust/src/main.rs".into(), text: main_allowed.into() }],
+        Some("usage: --seed <n>\n".into()),
+    );
+    assert!(hits(&fs, rule).is_empty());
+}
+
+// ---------------------------------------------------------------- ratchet
+
+#[test]
+fn ratchet_fails_in_both_directions() {
+    let base = Baseline::from_counts(BTreeMap::from([("no-float-eq".to_string(), 1u64)]));
+
+    // Equal: gate passes.
+    let cur = BTreeMap::from([("no-float-eq".to_string(), 1u64)]);
+    assert!(base.check(&cur).is_empty());
+
+    // Above baseline: a new violation.
+    let cur = BTreeMap::from([("no-float-eq".to_string(), 2u64)]);
+    let fails = base.check(&cur);
+    assert_eq!(fails.len(), 1, "{fails:?}");
+    assert!(fails[0].contains("new violations"), "{}", fails[0]);
+
+    // Below baseline: the debt was paid down, the stale pin must go.
+    let cur = BTreeMap::from([("no-float-eq".to_string(), 0u64)]);
+    let fails = base.check(&cur);
+    assert_eq!(fails.len(), 1, "{fails:?}");
+    assert!(fails[0].contains("refresh the ratchet"), "{}", fails[0]);
+
+    // A pinned rule the linter no longer knows is stale too.
+    let fails = base.check(&BTreeMap::new());
+    assert_eq!(fails.len(), 1, "{fails:?}");
+    assert!(fails[0].contains("unknown to the linter"), "{}", fails[0]);
+
+    // A rule missing from the baseline defaults to a pin of zero.
+    let cur = BTreeMap::from([
+        ("no-float-eq".to_string(), 1u64),
+        ("no-unsafe".to_string(), 1u64),
+    ]);
+    let fails = base.check(&cur);
+    assert_eq!(fails.len(), 1, "{fails:?}");
+    assert!(fails[0].contains("no-unsafe"), "{}", fails[0]);
+}
+
+#[test]
+fn baseline_round_trips_through_json() {
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    let path = dir.join("soclint_baseline_roundtrip.json");
+    let base = Baseline::from_counts(lint::counts(&[]));
+    base.write(&path).unwrap();
+    let back = Baseline::read(&path).unwrap();
+    assert_eq!(base, back);
+    // Every known rule is pinned explicitly, even at zero.
+    for rule in lint::all_rules() {
+        assert_eq!(back.counts.get(rule), Some(&0), "{rule} missing from baseline");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn baseline_rejects_wrong_schema() {
+    let dir = std::path::PathBuf::from(env!("CARGO_TARGET_TMPDIR"));
+    let path = dir.join("soclint_baseline_bad_schema.json");
+    std::fs::write(&path, "{\"schema\":\"other-v9\",\"rules\":{}}").unwrap();
+    let err = Baseline::read(&path).unwrap_err();
+    assert!(err.to_string().contains("schema"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------- real tree
+
+#[test]
+fn real_tree_matches_the_committed_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+    let fs = FileSet::load(&root).unwrap();
+    assert!(fs.files.len() > 40, "suspiciously small tree: {} files", fs.files.len());
+    assert!(fs.readme.is_some(), "README.md not loaded");
+
+    let findings = lint::run(&fs);
+    let counts = lint::counts(&findings);
+
+    // The committed ratchet must match the tree exactly — this is the
+    // same comparison `fullerene-soc lint --check` makes in CI.
+    let base = Baseline::read(&root.join("LINT_BASELINE.json")).unwrap();
+    let fails = base.check(&counts);
+    assert!(
+        fails.is_empty(),
+        "lint ratchet drift:\n  {}\nfindings:\n  {}",
+        fails.join("\n  "),
+        findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n  ")
+    );
+
+    // The determinism contract is fully paid down: every rule at zero.
+    for (rule, n) in &counts {
+        assert_eq!(*n, 0, "{rule} has {n} unsuppressed finding(s)");
+    }
+
+    // The ledger-completeness walk really saw the real EventClass: the
+    // energy model and its constants are in the loaded set.
+    assert!(fs.tokens("rust/src/energy/model.rs").is_some());
+    assert!(fs.tokens("rust/src/energy/constants.rs").is_some());
+}
