@@ -1,0 +1,248 @@
+//! End-to-end load generator for the `serve-http` front end: hundreds
+//! of concurrent keep-alive connections submitting JSON workload
+//! sessions, honoring 429 backpressure (back off + resubmit), polling
+//! every accepted session to a terminal state, and reporting
+//! client-side request-latency percentiles plus the 429 tally.
+//!
+//! ```bash
+//! # terminal 1 — the server
+//! cargo run --release -- serve-http --port 7171 --workers 2
+//! # terminal 2 — the load
+//! cargo run --release --example http_load -- \
+//!     --addr 127.0.0.1:7171 --connections 32 --sessions 4 --shutdown
+//! ```
+//!
+//! Flags: `--addr HOST:PORT` (default `127.0.0.1:7171`),
+//! `--connections N` (default 8), `--sessions N` per connection
+//! (default 4), `--samples N` per session (default 2), `--seed N`,
+//! `--workload SPEC` (server default when omitted), `--admin-token T`,
+//! `--shutdown` (drain the server via `POST /admin/shutdown` at the
+//! end — the CI http-smoke job uses this to prove a clean drain).
+//!
+//! Exits non-zero on any protocol error, hung session, or failed
+//! shutdown, so a harness can gate on it directly.
+
+use fullerene_soc::http::Client;
+use fullerene_soc::util::cli::Args;
+use fullerene_soc::util::json::Json;
+use fullerene_soc::{Error, Result};
+use std::time::Duration;
+
+/// Nearest-rank percentile over a sorted slice (local copy: the
+/// crate-internal helper is not public, and the example should lean on
+/// the public API only).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// What one connection did: request latencies (seconds), 429s absorbed,
+/// sessions driven to a terminal state.
+struct ConnOutcome {
+    latencies_s: Vec<f64>,
+    refused_429: u64,
+    terminal: u64,
+}
+
+/// One keep-alive connection: submit `sessions` specs (retrying through
+/// 429s), then poll each accepted id until it leaves `pending`.
+fn drive_connection(
+    addr: &str,
+    conn: usize,
+    sessions: usize,
+    samples: usize,
+    seed: u64,
+    workload: Option<&str>,
+) -> Result<ConnOutcome> {
+    let mut client = Client::connect_timeout_ms(addr, 10_000)?;
+    let mut out = ConnOutcome {
+        latencies_s: Vec::new(),
+        refused_429: 0,
+        terminal: 0,
+    };
+    let mut ids = Vec::new();
+    for s in 0..sessions {
+        let mut fields = vec![
+            ("name", Json::Str(format!("load-c{conn}s{s}"))),
+            ("samples", Json::Num(samples as f64)),
+            ("seed", Json::Num((seed + 1000 * conn as u64 + s as u64) as f64)),
+        ];
+        if let Some(w) = workload {
+            fields.push(("workload", Json::Str(w.to_string())));
+        }
+        let body = Json::obj(fields);
+        loop {
+            // lint:allow(host-clock-quarantine) client-side request latency is the example's measurement
+            let t0 = std::time::Instant::now();
+            let resp = client.post_json("/v1/sessions", &body)?;
+            out.latencies_s.push(t0.elapsed().as_secs_f64());
+            match resp.status {
+                202 => {
+                    ids.push(resp.json()?.get("id")?.as_i64()? as u64);
+                    break;
+                }
+                429 => {
+                    // The backpressure contract: back off for the
+                    // server's hint, then resubmit the same spec.
+                    out.refused_429 += 1;
+                    let hint_s = resp
+                        .json()
+                        .ok()
+                        .and_then(|j| j.get_opt("retry_after_s").and_then(|v| v.as_f64().ok()))
+                        .unwrap_or(0.0);
+                    std::thread::sleep(Duration::from_millis(
+                        ((hint_s * 1e3) as u64).clamp(1, 50),
+                    ));
+                }
+                other => {
+                    return Err(Error::Runtime(format!(
+                        "submit got {other}: {}",
+                        resp.body
+                    )))
+                }
+            }
+        }
+    }
+    let mut polls = 0u64;
+    let mut pending: std::collections::VecDeque<u64> = ids.into();
+    while let Some(id) = pending.pop_front() {
+        polls += 1;
+        if polls > 500_000 {
+            return Err(Error::Runtime(format!(
+                "session {id} never reached a terminal state (hung?)"
+            )));
+        }
+        // lint:allow(host-clock-quarantine) client-side request latency is the example's measurement
+        let t0 = std::time::Instant::now();
+        let resp = client.get(&format!("/v1/sessions/{id}"))?;
+        out.latencies_s.push(t0.elapsed().as_secs_f64());
+        if resp.status != 200 {
+            return Err(Error::Runtime(format!(
+                "poll of {id} got {}: {}",
+                resp.status, resp.body
+            )));
+        }
+        if resp.json()?.get("state")?.as_str()? == "pending" {
+            pending.push_back(id);
+            std::thread::sleep(Duration::from_millis(1));
+        } else {
+            out.terminal += 1;
+        }
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = args.reject_unknown(&[
+        "addr",
+        "connections",
+        "sessions",
+        "samples",
+        "seed",
+        "workload",
+        "admin-token",
+        "shutdown",
+    ]) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let connections: usize = args.get_parse_or("connections", 8);
+    let sessions: usize = args.get_parse_or("sessions", 4);
+    let samples: usize = args.get_parse_or("samples", 2);
+    let seed: u64 = args.get_parse_or("seed", 42);
+    let workload = args.get("workload").map(str::to_string);
+    let admin_token = args.get("admin-token").map(str::to_string);
+    let do_shutdown = args.flag("shutdown");
+
+    // Fail fast if nothing is listening.
+    let mut probe = Client::connect_timeout_ms(&addr, 5_000)
+        .map_err(|e| Error::Runtime(format!("no server at {addr}: {e}")))?;
+    let hz = probe.get("/healthz")?;
+    if hz.status != 200 {
+        return Err(Error::Runtime(format!("/healthz returned {}", hz.status)));
+    }
+    drop(probe);
+
+    println!(
+        "http_load: {connections} connections x {sessions} sessions x {samples} samples -> {addr}"
+    );
+    // lint:allow(host-clock-quarantine) end-to-end wall time is the example's measurement
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..connections)
+        .map(|c| {
+            let addr = addr.clone();
+            let workload = workload.clone();
+            // lint:allow(no-unscoped-threads) load connections; every handle is joined right below
+            std::thread::spawn(move || {
+                drive_connection(&addr, c, sessions, samples, seed, workload.as_deref())
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    let mut refused = 0u64;
+    let mut terminal = 0u64;
+    let mut failures = Vec::new();
+    for (c, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(o)) => {
+                lats.extend(o.latencies_s);
+                refused += o.refused_429;
+                terminal += o.terminal;
+            }
+            Ok(Err(e)) => failures.push(format!("connection {c}: {e}")),
+            Err(_) => failures.push(format!("connection {c}: panicked")),
+        }
+    }
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+
+    let expected = (connections * sessions) as u64;
+    println!(
+        "done in {host_s:.3} s: {terminal}/{expected} sessions terminal, \
+         {refused} refused (429, retried), {} requests",
+        lats.len()
+    );
+    println!(
+        "request latency: p50 {:.3} ms, p99 {:.3} ms; throughput {:.1} sessions/s",
+        percentile(&lats, 0.50) * 1e3,
+        percentile(&lats, 0.99) * 1e3,
+        terminal as f64 / host_s
+    );
+
+    if do_shutdown {
+        let mut admin = Client::connect_timeout_ms(&addr, 5_000)?;
+        let headers: Vec<(String, String)> = admin_token
+            .iter()
+            .map(|t| ("Authorization".to_string(), format!("Bearer {t}")))
+            .collect();
+        let hdr: Vec<(&str, &str)> = headers
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        let resp = admin.request("POST", "/admin/shutdown", Some("{}"), &hdr)?;
+        if resp.status != 200 {
+            return Err(Error::Runtime(format!(
+                "admin shutdown got {}: {}",
+                resp.status, resp.body
+            )));
+        }
+        println!("server draining: {}", resp.body);
+    }
+
+    if !failures.is_empty() || terminal != expected {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        return Err(Error::Runtime(format!(
+            "{}/{expected} sessions terminal, {} connection failures",
+            terminal,
+            failures.len()
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! HTTP front-end perf smoke: end-to-end serving throughput and
+//! per-request latency through the `serve-http` stack — a loopback
+//! `HttpServer` driven by keep-alive `http::Client` connections on a
+//! uniform mix, a skewed mix (one long + shorts) and a deliberately
+//! saturated mix (queue depth 1, one worker) whose floors are the
+//! backpressure contract itself: at least one 429 on the wire, every
+//! refused submission retried to admission, every connection closed and
+//! a clean runtime drain (the seventh perf-trajectory axis).
+//!
+//! Emits `BENCH_http.json` (schema `bench-http-v1`) in the working
+//! directory and gates against a checked-in `BENCH_http.baseline.json`
+//! (working directory, then the repository root), failing the process
+//! on a >30 % regression. The structural floors fire whatever the
+//! baseline. Controls:
+//!
+//! - `FSOC_BENCH_FAST=1` — CI smoke budget;
+//! - `FSOC_HTTP_BASELINE=<path>` — explicit baseline location;
+//! - `FSOC_HTTP_SKIP_CHECK=1` — emit JSON only, no gate.
+
+use fullerene_soc::benches_support::{http_perf, http_perf_check, http_perf_json, http_perf_table};
+use fullerene_soc::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn baseline_path() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FSOC_HTTP_BASELINE") {
+        return Some(PathBuf::from(p));
+    }
+    for p in ["BENCH_http.baseline.json", "../BENCH_http.baseline.json"] {
+        let p = Path::new(p);
+        if p.exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn main() {
+    let fast = std::env::var("FSOC_BENCH_FAST").is_ok_and(|v| v == "1");
+    let perf = http_perf(42, fast).expect("http perf scenarios run");
+
+    println!("## bench: http\n{}", http_perf_table(&perf).render());
+    println!(
+        "saturated 429s: {} (floor: >= 1); connections all closed: {}; clean drain: {}",
+        perf.saturated_429s, perf.all_connections_closed, perf.clean_drain
+    );
+
+    let out = Path::new("BENCH_http.json");
+    http_perf_json(&perf, "measured")
+        .write_file(out)
+        .expect("write BENCH_http.json");
+    println!("wrote {}", out.display());
+
+    if std::env::var("FSOC_HTTP_SKIP_CHECK").is_ok_and(|v| v == "1") {
+        println!("baseline check skipped (FSOC_HTTP_SKIP_CHECK=1)");
+        return;
+    }
+    match baseline_path() {
+        None => println!("no BENCH_http.baseline.json found; baseline check skipped"),
+        Some(p) => {
+            let baseline = Json::read_file(&p).expect("parse baseline");
+            let fails = http_perf_check(&perf, &baseline, 0.30);
+            if fails.is_empty() {
+                println!("baseline check vs {} passed", p.display());
+            } else {
+                eprintln!("PERF REGRESSION vs {}:", p.display());
+                for f in &fails {
+                    eprintln!("  - {f}");
+                }
+                std::process::exit(1);
+            }
+        }
+    }
+}

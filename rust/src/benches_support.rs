@@ -54,6 +54,14 @@
 //!   `BENCH_recovery.json` by `benches/recovery.rs` and gated in CI via
 //!   [`recovery_check`] — the sixth perf-trajectory axis (recovery on
 //!   must complete strictly more sessions than recovery off).
+//! - [`http_perf`] — network-facing serving axis: end-to-end
+//!   sessions/s and per-request p50/p99 latency through the
+//!   [`crate::http`] front end over loopback TCP on uniform, skewed and
+//!   deliberately saturated session mixes, emitted as `BENCH_http.json`
+//!   by `benches/http.rs` and gated in CI via [`http_perf_check`] — the
+//!   seventh perf-trajectory axis (structural floors: saturation must
+//!   surface at least one 429, every connection must close, every
+//!   drain must be clean).
 
 use crate::cluster::{Cluster, ClusterMapper};
 use crate::coordinator::GoldenCheck;
@@ -2719,6 +2727,446 @@ pub fn recovery_table(p: &RecoveryPerf) -> Table {
     t
 }
 
+// ================ HTTP front-end load harness (BENCH_http.json) ============
+
+/// Input width of the HTTP bench's traffic workload (small: the axis
+/// measures the network front end, not the chip).
+pub const HTTP_PERF_INPUTS: usize = 64;
+const HTTP_PERF_HIDDEN: usize = 32;
+const HTTP_PERF_CLASSES: usize = 4;
+const HTTP_PERF_TIMESTEPS: usize = 2;
+/// Event rate of the HTTP bench's traffic streams.
+pub const HTTP_PERF_RATE: f64 = 0.1;
+
+/// The workload spec string submitted over the wire (same grammar as
+/// the CLI and the gateway default).
+pub fn http_perf_workload_spec() -> String {
+    format!(
+        "traffic:{HTTP_PERF_INPUTS}x{HTTP_PERF_CLASSES}x{HTTP_PERF_TIMESTEPS}@{HTTP_PERF_RATE}"
+    )
+}
+
+fn http_perf_net() -> NetworkDesc {
+    structural_net(
+        "http-perf",
+        HTTP_PERF_INPUTS,
+        HTTP_PERF_HIDDEN,
+        HTTP_PERF_CLASSES,
+        HTTP_PERF_TIMESTEPS,
+    )
+}
+
+/// Start a loopback front end over a fresh runtime for one scenario.
+fn http_perf_server(workers: usize, queue_depth: usize) -> Result<crate::http::HttpServer> {
+    let rt = ServeRuntime::new(
+        http_perf_net(),
+        SocConfig::default(),
+        workers,
+        GoldenCheck::None,
+        queue_depth,
+        true,
+        RecoveryPolicy::disabled(),
+    )?;
+    let gateway = crate::http::Gateway::new(
+        rt,
+        crate::http::GatewayConfig {
+            admin_token: None,
+            default_workload: http_perf_workload_spec(),
+            max_samples: 64,
+        },
+    );
+    crate::http::HttpServer::start(
+        crate::http::HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            io_timeout_ms: 2_000,
+            max_body_bytes: 64 * 1024,
+        },
+        gateway,
+    )
+}
+
+/// Drive one server: `plans[c]` is the list of per-session sample
+/// counts connection `c` submits on its own keep-alive connection. Every
+/// 429 is retried until admission (counting is server-side), and every
+/// accepted session is polled to a terminal state. Returns all
+/// per-request host latencies (seconds) and the terminal-session count.
+fn http_drive(addr: &str, plans: &[Vec<usize>], seed: u64) -> Result<(Vec<f64>, u64)> {
+    let handles: Vec<_> = plans
+        .iter()
+        .enumerate()
+        .map(|(c, plan)| {
+            let addr = addr.to_string();
+            let plan = plan.clone();
+            // lint:allow(no-unscoped-threads) load-generator connections; every handle is joined below
+            std::thread::spawn(move || -> Result<(Vec<f64>, u64)> {
+                let mut client = crate::http::Client::connect_timeout_ms(&addr, 10_000)?;
+                let mut lats = Vec::new();
+                let mut ids = Vec::new();
+                for (s, samples) in plan.iter().enumerate() {
+                    let body = Json::obj(vec![
+                        ("name", Json::Str(format!("c{c}s{s}"))),
+                        ("samples", Json::Num(*samples as f64)),
+                        (
+                            "seed",
+                            Json::Num((seed + 1000 * c as u64 + s as u64) as f64),
+                        ),
+                    ]);
+                    loop {
+                        let t0 = std::time::Instant::now();
+                        let resp = client.post_json("/v1/sessions", &body)?;
+                        lats.push(t0.elapsed().as_secs_f64());
+                        match resp.status {
+                            202 => {
+                                ids.push(resp.json()?.get("id")?.as_i64()? as u64);
+                                break;
+                            }
+                            429 => {
+                                // Honor the backpressure contract: back
+                                // off briefly, then resubmit the same
+                                // spec on the same connection.
+                                std::thread::sleep(std::time::Duration::from_micros(500));
+                            }
+                            other => {
+                                return Err(crate::Error::Runtime(format!(
+                                    "submit got {other}: {}",
+                                    resp.body
+                                )))
+                            }
+                        }
+                    }
+                }
+                let mut done = 0u64;
+                let mut polls = 0u64;
+                let mut pending: std::collections::VecDeque<u64> = ids.into();
+                while let Some(id) = pending.pop_front() {
+                    polls += 1;
+                    if polls > 200_000 {
+                        return Err(crate::Error::Runtime(format!(
+                            "session {id} never reached a terminal state"
+                        )));
+                    }
+                    let t0 = std::time::Instant::now();
+                    let resp = client.get(&format!("/v1/sessions/{id}"))?;
+                    lats.push(t0.elapsed().as_secs_f64());
+                    let state = resp.json()?.get("state")?.as_str()?.to_string();
+                    if state == "pending" {
+                        pending.push_back(id);
+                        std::thread::sleep(std::time::Duration::from_micros(500));
+                    } else {
+                        done += 1; // completed and failed are both terminal
+                    }
+                }
+                Ok((lats, done))
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    let mut done = 0u64;
+    for h in handles {
+        let (l, d) = h
+            .join()
+            .map_err(|_| crate::Error::Runtime("http load connection panicked".into()))??;
+        lats.extend(l);
+        done += d;
+    }
+    Ok((lats, done))
+}
+
+/// One measured HTTP scenario.
+#[derive(Debug, Clone)]
+pub struct HttpPerfCase {
+    /// Scenario name (`uniform`, `skewed`, `saturated`).
+    pub name: String,
+    /// Sessions submitted (and driven to a terminal state).
+    pub sessions: u64,
+    /// Samples across all sessions.
+    pub samples: u64,
+    /// Concurrent keep-alive client connections.
+    pub connections: u64,
+    /// Runtime worker threads.
+    pub workers: u64,
+    /// Bounded submission-queue depth.
+    pub queue_depth: u64,
+    /// Wall seconds, first submit to drained shutdown.
+    pub host_s: f64,
+    /// End-to-end sessions per host second.
+    pub sessions_per_s: f64,
+    /// Median per-request host latency (ms) over every request the
+    /// scenario issued (submits, polls, shutdown).
+    pub req_p50_ms: f64,
+    /// 99th-percentile per-request host latency (ms).
+    pub req_p99_ms: f64,
+    /// 429 responses the server emitted (server-side count).
+    pub responses_429: u64,
+    /// TCP connections the server accepted.
+    pub connections_opened: u64,
+    /// Connection threads that ran to completion.
+    pub connections_closed: u64,
+    /// The runtime drain completed without error.
+    pub drained: bool,
+}
+
+/// The `BENCH_http.json` payload — the seventh perf-trajectory axis:
+/// end-to-end HTTP serving throughput and request latency on uniform
+/// and skewed session mixes, plus a deliberately saturated mix whose
+/// floors are the backpressure contract itself (at least one 429, zero
+/// hung connections, clean drain).
+#[derive(Debug, Clone)]
+pub struct HttpPerf {
+    /// Measured scenarios: `uniform`, `skewed`, `saturated`.
+    pub cases: Vec<HttpPerfCase>,
+    /// 429s the saturated scenario produced (must be >= 1: a bounded
+    /// queue under deliberate overload that never says no is not
+    /// applying backpressure).
+    pub saturated_429s: u64,
+    /// Every scenario closed every connection it opened.
+    pub all_connections_closed: bool,
+    /// Every scenario's runtime drained cleanly at shutdown.
+    pub clean_drain: bool,
+}
+
+/// Run one scenario end to end: start a loopback server, drive the
+/// plan, drain via the admin endpoint, and fold the accounting.
+fn http_scenario(
+    name: &str,
+    workers: usize,
+    queue_depth: usize,
+    plans: &[Vec<usize>],
+    seed: u64,
+) -> Result<HttpPerfCase> {
+    let server = http_perf_server(workers, queue_depth)?;
+    let addr = server.addr().to_string();
+    let t0 = std::time::Instant::now();
+    let (mut lats, done) = http_drive(&addr, plans, seed)?;
+    let mut admin = crate::http::Client::connect_timeout_ms(&addr, 10_000)?;
+    let ts = std::time::Instant::now();
+    let resp = admin.post_json("/admin/shutdown", &Json::obj(vec![]))?;
+    lats.push(ts.elapsed().as_secs_f64());
+    if resp.status != 200 {
+        return Err(crate::Error::Runtime(format!(
+            "admin shutdown got {}: {}",
+            resp.status, resp.body
+        )));
+    }
+    let stats = server.join()?;
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let sessions: u64 = plans.iter().map(|p| p.len() as u64).sum();
+    if done != sessions {
+        return Err(crate::Error::Runtime(format!(
+            "{name}: {done}/{sessions} sessions reached a terminal state"
+        )));
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("request latencies are finite"));
+    Ok(HttpPerfCase {
+        name: name.to_string(),
+        sessions,
+        samples: plans.iter().flatten().map(|s| *s as u64).sum(),
+        connections: plans.len() as u64,
+        workers: workers as u64,
+        queue_depth: queue_depth as u64,
+        host_s,
+        sessions_per_s: sessions as f64 / host_s,
+        req_p50_ms: crate::serve::session::percentile(&lats, 0.50) * 1e3,
+        req_p99_ms: crate::serve::session::percentile(&lats, 0.99) * 1e3,
+        responses_429: stats.responses_by_code.get(&429).copied().unwrap_or(0),
+        connections_opened: stats.connections_opened,
+        connections_closed: stats.connections_closed,
+        drained: stats.drained,
+    })
+}
+
+/// Run the HTTP load scenarios:
+///
+/// - `uniform` — equal sessions across 4 keep-alive connections, ample
+///   queue (the steady serving state over the wire);
+/// - `skewed` — one connection submits a long session, three submit
+///   shorts (the HTTP view of the no-head-of-line-blocking mix);
+/// - `saturated` — queue depth 1, one worker, 4 connections submitting
+///   concurrently: overload **must** surface as 429 + `Retry-After`,
+///   every refused submission retries to admission, and the drain must
+///   still be clean — the structural floors of this axis.
+pub fn http_perf(seed: u64, fast: bool) -> Result<HttpPerf> {
+    let conns = 4usize;
+    let uni_sessions: usize = if fast { 2 } else { 4 };
+    let uni_samples: usize = if fast { 2 } else { 4 };
+    let long_samples: usize = if fast { 12 } else { 24 };
+    let sat_sessions: usize = if fast { 3 } else { 6 };
+    let sat_samples: usize = if fast { 4 } else { 6 };
+
+    let uniform_plan: Vec<Vec<usize>> =
+        (0..conns).map(|_| vec![uni_samples; uni_sessions]).collect();
+    let uniform = http_scenario("uniform", 2, 64, &uniform_plan, seed)?;
+
+    let mut skewed_plan: Vec<Vec<usize>> = vec![vec![long_samples]];
+    for _ in 1..conns {
+        skewed_plan.push(vec![1, 1]);
+    }
+    let skewed = http_scenario("skewed", 2, 64, &skewed_plan, seed + 100)?;
+
+    let saturated_plan: Vec<Vec<usize>> =
+        (0..conns).map(|_| vec![sat_samples; sat_sessions]).collect();
+    let saturated = http_scenario("saturated", 1, 1, &saturated_plan, seed + 200)?;
+
+    let saturated_429s = saturated.responses_429;
+    let cases = vec![uniform, skewed, saturated];
+    let all_connections_closed = cases
+        .iter()
+        .all(|c| c.connections_opened == c.connections_closed);
+    let clean_drain = cases.iter().all(|c| c.drained);
+    Ok(HttpPerf {
+        cases,
+        saturated_429s,
+        all_connections_closed,
+        clean_drain,
+    })
+}
+
+/// The HTTP perf run as machine-readable JSON (the `BENCH_http.json`
+/// schema the CI http-smoke job tracks).
+pub fn http_perf_json(p: &HttpPerf, provenance: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("bench-http-v1".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("workload", Json::Str(http_perf_workload_spec())),
+        (
+            "scenarios",
+            Json::Arr(
+                p.cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("sessions", Json::Num(c.sessions as f64)),
+                            ("samples", Json::Num(c.samples as f64)),
+                            ("connections", Json::Num(c.connections as f64)),
+                            ("workers", Json::Num(c.workers as f64)),
+                            ("queue_depth", Json::Num(c.queue_depth as f64)),
+                            ("host_s", Json::Num(c.host_s)),
+                            ("sessions_per_s", Json::Num(c.sessions_per_s)),
+                            ("req_p50_ms", Json::Num(c.req_p50_ms)),
+                            ("req_p99_ms", Json::Num(c.req_p99_ms)),
+                            ("responses_429", Json::Num(c.responses_429 as f64)),
+                            (
+                                "connections_opened",
+                                Json::Num(c.connections_opened as f64),
+                            ),
+                            (
+                                "connections_closed",
+                                Json::Num(c.connections_closed as f64),
+                            ),
+                            ("drained", Json::Bool(c.drained)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("saturated_429s", Json::Num(p.saturated_429s as f64)),
+        (
+            "all_connections_closed",
+            Json::Bool(p.all_connections_closed),
+        ),
+        ("clean_drain", Json::Bool(p.clean_drain)),
+    ])
+}
+
+/// Gate a fresh HTTP perf run. Same arming rule as every other axis:
+///
+/// - structural floors — **always** enforced: the saturated scenario
+///   produced at least one 429 (backpressure reached the wire), every
+///   connection opened was closed (zero hung connections), and every
+///   drain was clean;
+/// - baseline-relative throughput comparisons (per-scenario
+///   `sessions_per_s`) arm only when the baseline's `provenance` is
+///   `"measured"`.
+pub fn http_perf_check(current: &HttpPerf, baseline: &Json, max_regress: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    if current.saturated_429s == 0 {
+        fails.push(
+            "saturated scenario produced zero 429s — the bounded queue \
+             never pushed back over the wire"
+                .to_string(),
+        );
+    }
+    if !current.all_connections_closed {
+        for c in &current.cases {
+            if c.connections_opened != c.connections_closed {
+                fails.push(format!(
+                    "{}: {} of {} connections closed — hung connections at drain",
+                    c.name, c.connections_closed, c.connections_opened
+                ));
+            }
+        }
+    }
+    if !current.clean_drain {
+        fails.push("at least one scenario's runtime drain failed".to_string());
+    }
+    let measured = baseline
+        .get_opt("provenance")
+        .and_then(|v| v.as_str().ok())
+        == Some("measured");
+    if !measured {
+        return fails;
+    }
+    let floor = 1.0 - max_regress;
+    let Some(scenarios) = baseline.get_opt("scenarios").and_then(|v| v.as_arr().ok())
+    else {
+        return fails;
+    };
+    for b in scenarios {
+        let Some(name) = b.get_opt("name").and_then(|v| v.as_str().ok()) else {
+            continue;
+        };
+        let Some(cur) = current.cases.iter().find(|c| c.name == name) else {
+            fails.push(format!("scenario '{name}' missing from the current run"));
+            continue;
+        };
+        if let Some(base_v) = b.get_opt("sessions_per_s").and_then(|v| v.as_f64().ok()) {
+            if cur.sessions_per_s < floor * base_v {
+                fails.push(format!(
+                    "{name}/sessions_per_s regressed: {:.1} vs baseline {base_v:.1} \
+                     (allowed floor {:.1})",
+                    cur.sessions_per_s,
+                    floor * base_v
+                ));
+            }
+        }
+    }
+    fails
+}
+
+/// The HTTP perf run as a printable table.
+pub fn http_perf_table(p: &HttpPerf) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "sessions",
+        "conns",
+        "workers",
+        "depth",
+        "host s",
+        "sessions/s",
+        "req p50 ms",
+        "req p99 ms",
+        "429s",
+        "conns open/closed",
+    ]);
+    for c in &p.cases {
+        t.push_row(vec![
+            c.name.clone(),
+            c.sessions.to_string(),
+            c.connections.to_string(),
+            c.workers.to_string(),
+            c.queue_depth.to_string(),
+            format!("{:.3}", c.host_s),
+            format!("{:.1}", c.sessions_per_s),
+            format!("{:.3}", c.req_p50_ms),
+            format!("{:.3}", c.req_p99_ms),
+            c.responses_429.to_string(),
+            format!("{}/{}", c.connections_opened, c.connections_closed),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -3234,5 +3682,92 @@ mod tests {
         assert_eq!(recovery_check(&p, &inflated, 0.30).len(), 1);
         let j = recovery_json(&p, "measured").to_string();
         assert!(j.contains("bench-recovery-v1") && j.contains("completed_frac"));
+    }
+
+    #[test]
+    fn http_perf_scenarios_run_and_floors_hold() {
+        let p = http_perf(7, true).unwrap();
+        let names: Vec<&str> = p.cases.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["uniform", "skewed", "saturated"]);
+        for c in &p.cases {
+            assert!(c.sessions > 0 && c.samples > 0, "{}: empty scenario", c.name);
+            assert!(c.sessions_per_s > 0.0, "{}", c.name);
+            assert!(
+                c.req_p99_ms >= c.req_p50_ms,
+                "{}: latency percentiles inverted",
+                c.name
+            );
+            assert!(c.drained, "{}: unclean drain", c.name);
+            assert_eq!(
+                c.connections_opened, c.connections_closed,
+                "{}: hung connections",
+                c.name
+            );
+        }
+        // The backpressure contract: a depth-1 queue under 4 concurrent
+        // submitters must refuse at least once, and every refused
+        // submission must still land via retry (checked inside
+        // http_scenario: terminal sessions == submitted sessions).
+        assert!(p.saturated_429s >= 1, "saturation never produced a 429");
+        assert!(p.all_connections_closed && p.clean_drain);
+        // Structural floors hold with no baseline, and a measured
+        // self-baseline passes its own comparisons.
+        assert!(http_perf_check(&p, &Json::obj(vec![]), 0.30).is_empty());
+        let selfbase = http_perf_json(&p, "measured");
+        assert!(http_perf_check(&p, &selfbase, 0.30).is_empty());
+        let j = selfbase.to_string();
+        assert!(j.contains("bench-http-v1") && j.contains("saturated_429s"));
+        assert!(!http_perf_table(&p).is_empty());
+    }
+
+    #[test]
+    fn http_perf_check_gates_floors_and_measured_baselines() {
+        let case = |name: &str, sps: f64| HttpPerfCase {
+            name: name.into(),
+            sessions: 8,
+            samples: 16,
+            connections: 4,
+            workers: 2,
+            queue_depth: 64,
+            host_s: 0.1,
+            sessions_per_s: sps,
+            req_p50_ms: 0.2,
+            req_p99_ms: 1.5,
+            responses_429: 0,
+            connections_opened: 4,
+            connections_closed: 4,
+            drained: true,
+        };
+        let current = HttpPerf {
+            cases: vec![case("uniform", 100.0)],
+            saturated_429s: 3,
+            all_connections_closed: true,
+            clean_drain: true,
+        };
+        // Bootstrap baseline: only the absolute floors are gated.
+        let bootstrap = Json::parse(
+            r#"{"provenance":"bootstrap-estimate",
+                "scenarios":[{"name":"uniform","sessions_per_s":1e9}]}"#,
+        )
+        .unwrap();
+        assert!(http_perf_check(&current, &bootstrap, 0.30).is_empty());
+        // Measured baseline arms the throughput comparison.
+        let measured = Json::parse(
+            r#"{"provenance":"measured",
+                "scenarios":[{"name":"uniform","sessions_per_s":1e9}]}"#,
+        )
+        .unwrap();
+        assert_eq!(http_perf_check(&current, &measured, 0.30).len(), 1);
+        // The structural floors always fire, whatever the baseline.
+        let mut hung = case("uniform", 100.0);
+        hung.connections_closed = 3;
+        let broken = HttpPerf {
+            cases: vec![hung],
+            saturated_429s: 0,
+            all_connections_closed: false,
+            clean_drain: false,
+        };
+        let fails = http_perf_check(&broken, &bootstrap, 0.30);
+        assert_eq!(fails.len(), 3, "{fails:?}");
     }
 }

@@ -1,0 +1,155 @@
+//! Minimal blocking HTTP/1.1 client over one keep-alive connection —
+//! just enough protocol for the load generator, the HTTP bench and the
+//! end-to-end tests to drive the front end without external crates.
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One parsed response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    /// Status code.
+    pub status: u16,
+    /// Headers, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Body as UTF-8 (every fullerene-soc endpoint emits text or JSON).
+    pub body: String,
+}
+
+impl ClientResponse {
+    /// First header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        Json::parse(&self.body)
+    }
+}
+
+/// A persistent connection to one server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    host: String,
+}
+
+impl Client {
+    /// Connect with a 10 s I/O timeout.
+    pub fn connect(addr: &str) -> Result<Client> {
+        Client::connect_timeout_ms(addr, 10_000)
+    }
+
+    /// Connect with an explicit per-operation I/O timeout.
+    pub fn connect_timeout_ms(addr: &str, timeout_ms: u64) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Runtime(format!("cannot connect to {addr}: {e}")))?;
+        let timeout = Some(Duration::from_millis(timeout_ms.max(1)));
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            reader,
+            writer: stream,
+            host: addr.to_string(),
+        })
+    }
+
+    /// Issue one request on the persistent connection. `body` is sent
+    /// `Content-Length`-framed; `extra_headers` ride along verbatim.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(&str, &str)],
+    ) -> Result<ClientResponse> {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {}\r\n", self.host);
+        for (k, v) in extra_headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
+        let body = body.unwrap_or("");
+        if !body.is_empty() || method == "POST" {
+            req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        req.push_str("\r\n");
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// POST a JSON value.
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<ClientResponse> {
+        self.request(
+            "POST",
+            path,
+            Some(&body.to_string()),
+            &[("Content-Type", "application/json")],
+        )
+    }
+
+    /// GET a path.
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None, &[])
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(Error::Runtime(
+                "server closed the connection mid-response".into(),
+            ));
+        }
+        while line.ends_with('\n') || line.ends_with('\r') {
+            line.pop();
+        }
+        Ok(line)
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse> {
+        let status_line = self.read_line()?;
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| {
+                Error::Runtime(format!("bad status line '{status_line}'"))
+            })?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_length = v.parse().map_err(|_| {
+                        Error::Runtime(format!("bad Content-Length '{v}'"))
+                    })?;
+                }
+                headers.push((k, v));
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        std::io::Read::read_exact(&mut self.reader, &mut body)?;
+        let body = String::from_utf8(body)
+            .map_err(|_| Error::Runtime("non-UTF-8 response body".into()))?;
+        Ok(ClientResponse {
+            status,
+            headers,
+            body,
+        })
+    }
+}

@@ -1,0 +1,452 @@
+//! HTTP/1.1 wire framing: a bounded-memory request parser and a
+//! response writer.
+//!
+//! The parser follows the picojson-style discipline for untrusted
+//! input: every read is capped **before** allocation (request-line
+//! bytes, cumulative header bytes, header count, `Content-Length`), no
+//! recursion, and every malformed input maps to a specific 4xx instead
+//! of a panic or an unbounded buffer. Bodies are `Content-Length`
+//! framed only — chunked transfer encoding is refused with 400 (the
+//! serving API never needs it, and refusing is safer than a partial
+//! implementation).
+
+use std::io::{BufRead, Write};
+
+/// Hard cap on the request line (method + path + version + CRLF).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Hard cap on cumulative header bytes per request.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Hard cap on header count per request.
+pub const MAX_HEADERS: usize = 64;
+/// Default cap on `Content-Length` bodies (overridable per server).
+pub const DEFAULT_MAX_BODY_BYTES: usize = 256 * 1024;
+
+/// A framing-level failure, each mapping to one HTTP status.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line / header / body framing → 400.
+    BadRequest(String),
+    /// Request line or headers exceeded their caps → 431.
+    HeadersTooLarge(String),
+    /// `Content-Length` exceeded the body cap → 413.
+    PayloadTooLarge(String),
+    /// Clean EOF before any request byte (keep-alive peer went away).
+    Closed,
+    /// Socket-level failure (includes read timeouts from slow clients);
+    /// the connection is dropped without a response — there is no peer
+    /// worth answering.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The status code this error maps to (`Closed`/`Io` close the
+    /// connection without a response and report 0 here).
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequest(_) => 400,
+            HttpError::HeadersTooLarge(_) => 431,
+            HttpError::PayloadTooLarge(_) => 413,
+            HttpError::Closed | HttpError::Io(_) => 0,
+        }
+    }
+
+    /// Render as an error response (only meaningful for 4xx variants).
+    pub fn to_response(&self) -> Response {
+        let msg = match self {
+            HttpError::BadRequest(m)
+            | HttpError::HeadersTooLarge(m)
+            | HttpError::PayloadTooLarge(m) => m.clone(),
+            HttpError::Closed => "connection closed".into(),
+            HttpError::Io(e) => format!("io error: {e}"),
+        };
+        let mut r = Response::json_error(self.status().max(400), &msg);
+        r.close = true;
+        r
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Method verb, uppercased (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target path (query string, if any, left attached).
+    pub path: String,
+    /// Header list in arrival order; names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// `Content-Length`-framed body bytes (empty without the header).
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default unless `Connection: close`; HTTP/1.0 opt-in).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8, or a 400-mapped error.
+    pub fn body_utf8(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::BadRequest("request body is not UTF-8".into()))
+    }
+}
+
+/// Read one CRLF/LF-terminated line with a byte cap. `Ok(None)` is a
+/// clean EOF **before any byte** (a keep-alive peer hanging up between
+/// requests); EOF mid-line is a `BadRequest`.
+fn read_line_capped(
+    r: &mut impl BufRead,
+    cap: usize,
+    what: &str,
+) -> Result<Option<String>, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::BadRequest(format!("eof inside {what}")));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    let s = String::from_utf8(line).map_err(|_| {
+                        HttpError::BadRequest(format!("{what} is not UTF-8"))
+                    })?;
+                    return Ok(Some(s));
+                }
+                if line.len() >= cap {
+                    return Err(HttpError::HeadersTooLarge(format!(
+                        "{what} exceeds {cap} bytes"
+                    )));
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+/// Parse one request off the connection. `Ok(None)` means the peer
+/// closed cleanly between requests.
+pub fn read_request(
+    r: &mut impl BufRead,
+    max_body_bytes: usize,
+) -> Result<Option<Request>, HttpError> {
+    let Some(line) = read_line_capped(r, MAX_REQUEST_LINE, "request line")? else {
+        return Ok(None);
+    };
+    let mut parts = line.split(' ').filter(|p| !p.is_empty());
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => {
+            (m.to_string(), p.to_string(), v.to_string())
+        }
+        _ => {
+            return Err(HttpError::BadRequest(format!(
+                "malformed request line '{}'",
+                line.chars().take(80).collect::<String>()
+            )))
+        }
+    };
+    if !method.chars().all(|c| c.is_ascii_uppercase()) || method.is_empty() {
+        return Err(HttpError::BadRequest(format!("bad method '{method}'")));
+    }
+    if !path.starts_with('/') {
+        return Err(HttpError::BadRequest(format!("bad request target '{path}'")));
+    }
+    let http11 = match version.as_str() {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(HttpError::BadRequest(format!(
+                "unsupported protocol version '{other}'"
+            )))
+        }
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let line = read_line_capped(r, MAX_HEADER_BYTES, "header line")?
+            .ok_or_else(|| HttpError::BadRequest("eof inside headers".into()))?;
+        if line.is_empty() {
+            break;
+        }
+        header_bytes += line.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "headers exceed {MAX_HEADER_BYTES} bytes"
+            )));
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "more than {MAX_HEADERS} headers"
+            )));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!(
+                "header line without ':': '{}'",
+                line.chars().take(80).collect::<String>()
+            )));
+        };
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    let find = |name: &str| {
+        headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    };
+    if find("transfer-encoding").is_some() {
+        return Err(HttpError::BadRequest(
+            "chunked transfer encoding is not supported; use Content-Length".into(),
+        ));
+    }
+    let body_len = match find("content-length") {
+        None => 0,
+        Some(v) => v.parse::<usize>().map_err(|_| {
+            HttpError::BadRequest(format!("bad Content-Length '{v}'"))
+        })?,
+    };
+    if body_len > max_body_bytes {
+        // Refused before reading a single body byte: the cap bounds
+        // memory, not just parse time.
+        return Err(HttpError::PayloadTooLarge(format!(
+            "Content-Length {body_len} exceeds the {max_body_bytes}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; body_len];
+    if body_len > 0 {
+        let mut read = 0usize;
+        while read < body_len {
+            match r.read(&mut body[read..]) {
+                Ok(0) => {
+                    return Err(HttpError::BadRequest(format!(
+                        "body truncated at {read}/{body_len} bytes"
+                    )))
+                }
+                Ok(n) => read += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+    }
+
+    let conn = find("connection").map(|v| v.to_ascii_lowercase());
+    let keep_alive = match conn.as_deref() {
+        Some("close") => false,
+        Some("keep-alive") => true,
+        _ => http11,
+    };
+    Ok(Some(Request {
+        method,
+        path,
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// One response: status + body, with `Content-Length` framing always
+/// (so keep-alive clients can find the next response boundary).
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body (already serialized).
+    pub body: String,
+    /// Emit a `Retry-After: <s>` header (the 429 backpressure contract).
+    pub retry_after_s: Option<u32>,
+    /// Force `Connection: close` after writing this response.
+    pub close: bool,
+}
+
+impl Response {
+    /// JSON response.
+    pub fn json(status: u16, body: crate::util::json::Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string(),
+            retry_after_s: None,
+            close: false,
+        }
+    }
+
+    /// JSON error envelope `{"error": msg}`.
+    pub fn json_error(status: u16, msg: &str) -> Response {
+        Response::json(
+            status,
+            crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::Str(msg.to_string()),
+            )]),
+        )
+    }
+
+    /// Plain-text response (the /metrics exposition).
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body,
+            retry_after_s: None,
+            close: false,
+        }
+    }
+
+    /// Serialize onto the wire. `keep_alive` is the connection's
+    /// decision after this response (the writer only reports it).
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+            self.status,
+            status_reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if let Some(s) = self.retry_after_s {
+            head.push_str(&format!("Retry-After: {s}\r\n"));
+        }
+        head.push_str(if keep_alive && !self.close {
+            "Connection: keep-alive\r\n\r\n"
+        } else {
+            "Connection: close\r\n\r\n"
+        });
+        w.write_all(head.as_bytes())?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        read_request(
+            &mut BufReader::new(raw.as_bytes()),
+            DEFAULT_MAX_BODY_BYTES,
+        )
+    }
+
+    #[test]
+    fn parses_request_with_body_and_keep_alive_defaults() {
+        let r = parse(
+            "POST /v1/sessions HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/sessions");
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(r.header("host"), Some("x"));
+
+        let r = parse("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+        let r = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_between_requests_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_request_lines_map_to_400() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET /\r\n\r\n",
+            "GET / HTTP/2.0\r\n\r\n",
+            "get / HTTP/1.1\r\n\r\n",
+            "GET nopath HTTP/1.1\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "GET / HTTP/1.1\r\nno-colon-header\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: nan\r\n\r\n",
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+        ] {
+            let e = parse(raw).unwrap_err();
+            assert_eq!(e.status(), 400, "{raw:?} -> {e:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_request_line_and_headers_map_to_431() {
+        let long_line = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(MAX_REQUEST_LINE));
+        assert_eq!(parse(&long_line).unwrap_err().status(), 431);
+
+        let mut many = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..MAX_HEADERS + 1 {
+            many.push_str(&format!("h{i}: v\r\n"));
+        }
+        many.push_str("\r\n");
+        assert_eq!(parse(&many).unwrap_err().status(), 431);
+
+        let fat = format!(
+            "GET / HTTP/1.1\r\na: {}\r\nb: {}\r\nc: {}\r\n\r\n",
+            "y".repeat(7 * 1024),
+            "y".repeat(7 * 1024),
+            "y".repeat(7 * 1024)
+        );
+        assert_eq!(parse(&fat).unwrap_err().status(), 431);
+    }
+
+    #[test]
+    fn oversized_body_maps_to_413_without_reading_it() {
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n";
+        assert_eq!(parse(raw).unwrap_err().status(), 413);
+    }
+
+    #[test]
+    fn response_writer_frames_with_content_length() {
+        let mut buf = Vec::new();
+        let mut r = Response::json_error(429, "queue full");
+        r.retry_after_s = Some(1);
+        r.write_to(&mut buf, true).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.contains("Content-Length: "));
+        assert!(s.ends_with("{\"error\":\"queue full\"}"));
+    }
+}

@@ -1,0 +1,473 @@
+//! The HTTP ↔ serving bridge: routes parsed requests onto a shared
+//! [`ServeRuntime`] and renders outcomes/metrics as JSON and text.
+//!
+//! The gateway owns the runtime behind a mutex (submission and
+//! health/metrics snapshots are short critical sections; serving itself
+//! happens on the runtime's own worker threads) plus the ticket table
+//! that turns submission indexes into pollable session ids. Every
+//! construction knob still funnels through `SocBuilder` — the gateway
+//! receives an already-validated runtime and adds no second
+//! configuration path.
+
+use super::framing::{Request, Response};
+use crate::serve::{
+    workload_from_spec, HealthReport, ServeRuntime, SessionOutcome, SessionSpec,
+    SessionTicket,
+};
+use crate::util::json::Json;
+use crate::Error;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// `Retry-After` seconds advertised with every 429 (small: the queue
+/// turns over in session-serving time, not minutes).
+pub const RETRY_AFTER_S: u32 = 1;
+
+/// Gateway policy knobs (all validated upstream by the CLI layer).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// When set, `POST /admin/shutdown` requires this bearer token;
+    /// when `None` the admin surface is open (loopback deployments).
+    pub admin_token: Option<String>,
+    /// Workload spec used when a submission omits `"workload"` (also
+    /// the geometry the runtime's network was built for).
+    pub default_workload: String,
+    /// Cap on per-session `"samples"` from untrusted submissions.
+    pub max_samples: usize,
+}
+
+/// Counters the server updates and /metrics exposes.
+#[derive(Debug, Default)]
+struct HttpCounters {
+    requests: u64,
+    responses_by_code: BTreeMap<u16, u64>,
+}
+
+/// The shared server state: one serving runtime + the ticket table.
+pub struct Gateway {
+    cfg: GatewayConfig,
+    rt: Mutex<ServeRuntime>,
+    tickets: Mutex<BTreeMap<u64, SessionTicket>>,
+    counters: Mutex<HttpCounters>,
+    connections_opened: AtomicU64,
+    connections_closed: AtomicU64,
+    draining: AtomicBool,
+}
+
+impl Gateway {
+    /// Wrap an already-built (and therefore already-validated) runtime.
+    pub fn new(rt: ServeRuntime, cfg: GatewayConfig) -> Gateway {
+        Gateway {
+            cfg,
+            rt: Mutex::new(rt),
+            tickets: Mutex::new(BTreeMap::new()),
+            counters: Mutex::new(HttpCounters::default()),
+            connections_opened: AtomicU64::new(0),
+            connections_closed: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Whether a shutdown has been requested (admin endpoint or
+    /// programmatic).
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Flip the drain flag (also used by the programmatic shutdown).
+    pub fn request_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn connection_opened(&self) {
+        self.connections_opened.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub(super) fn connection_closed(&self) {
+        self.connections_closed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// (opened, closed) connection totals.
+    pub fn connection_counts(&self) -> (u64, u64) {
+        (
+            self.connections_opened.load(Ordering::SeqCst),
+            self.connections_closed.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Record one response for /metrics (called by the server after
+    /// every write, including framing-error responses).
+    pub(super) fn record_response(&self, status: u16) {
+        let mut c = lock(&self.counters);
+        c.requests += 1;
+        *c.responses_by_code.entry(status).or_insert(0) += 1;
+    }
+
+    /// Responses emitted with `status`, for tests and stats.
+    pub fn responses_with_status(&self, status: u16) -> u64 {
+        lock(&self.counters)
+            .responses_by_code
+            .get(&status)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Total responses by status code (snapshot).
+    pub fn responses_by_code(&self) -> BTreeMap<u16, u64> {
+        lock(&self.counters).responses_by_code.clone()
+    }
+
+    /// Drain the runtime: close the queue, serve everything already
+    /// admitted, join the workers. Idempotent; returns the final health
+    /// ledger.
+    pub fn shutdown_runtime(&self) -> crate::Result<HealthReport> {
+        let mut rt = lock(&self.rt);
+        rt.shutdown()?;
+        Ok(rt.health_report())
+    }
+
+    /// Route one request. The bool asks the server to begin its drain
+    /// (set only by an authorized `POST /admin/shutdown`).
+    pub fn handle(&self, req: &Request) -> (Response, bool) {
+        let path = req.path.split('?').next().unwrap_or("");
+        match (req.method.as_str(), path) {
+            ("GET", "/healthz") => (self.healthz(), false),
+            ("GET", "/metrics") => (Response::text(200, self.metrics_text()), false),
+            ("POST", "/v1/sessions") => (self.submit(req), false),
+            ("GET", p) if p.starts_with("/v1/sessions/") => {
+                (self.poll(&p["/v1/sessions/".len()..]), false)
+            }
+            ("POST", "/admin/shutdown") => self.admin_shutdown(req),
+            ("GET" | "POST", _) => (
+                Response::json_error(404, &format!("no route for {} {path}", req.method)),
+                false,
+            ),
+            _ => (
+                Response::json_error(
+                    405,
+                    &format!("method {} not allowed", req.method),
+                ),
+                false,
+            ),
+        }
+    }
+
+    fn healthz(&self) -> Response {
+        let (submitted, in_flight, workers) = {
+            let rt = lock(&self.rt);
+            (rt.submitted(), rt.in_flight(), rt.workers())
+        };
+        Response::json(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(self.draining())),
+                ("workers", Json::Num(workers as f64)),
+                ("submitted", Json::Num(submitted as f64)),
+                ("in_flight", Json::Num(in_flight as f64)),
+            ]),
+        )
+    }
+
+    /// `POST /v1/sessions`: JSON spec in, ticket id out. `QueueFull`
+    /// maps to 429 + `Retry-After`; a drain in progress to 503.
+    fn submit(&self, req: &Request) -> Response {
+        if self.draining() {
+            let mut r = Response::json_error(503, "server is draining; resubmit elsewhere");
+            r.retry_after_s = Some(RETRY_AFTER_S);
+            return r;
+        }
+        let body = match req.body_utf8() {
+            Ok(b) => b,
+            Err(e) => return e.to_response(),
+        };
+        let parsed = match Json::parse(body) {
+            Ok(v) => v,
+            Err(e) => return Response::json_error(400, &format!("bad JSON body: {e}")),
+        };
+        let spec_str = match parsed.get_opt("workload") {
+            None => self.cfg.default_workload.clone(),
+            Some(v) => match v.as_str() {
+                Ok(s) => s.to_string(),
+                Err(e) => return Response::json_error(400, &format!("bad 'workload': {e}")),
+            },
+        };
+        let samples = match parsed.get_opt("samples") {
+            None => 1,
+            Some(v) => match v.as_usize() {
+                Ok(n) => n,
+                Err(e) => return Response::json_error(400, &format!("bad 'samples': {e}")),
+            },
+        };
+        if samples == 0 || samples > self.cfg.max_samples {
+            return Response::json_error(
+                400,
+                &format!(
+                    "'samples' must be in 1..={} (got {samples})",
+                    self.cfg.max_samples
+                ),
+            );
+        }
+        let seed = match parsed.get_opt("seed") {
+            None => 0u64,
+            Some(v) => match v.as_i64() {
+                Ok(n) if n >= 0 => n as u64,
+                _ => return Response::json_error(400, "bad 'seed': expected u64"),
+            },
+        };
+        let workload = match workload_from_spec(&spec_str, samples, seed) {
+            Ok(w) => w,
+            Err(e) => return Response::json_error(400, &format!("bad workload spec: {e}")),
+        };
+
+        let mut rt = lock(&self.rt);
+        let name = match parsed.get_opt("name").map(|v| v.as_str()) {
+            None => format!("http-{}", rt.submitted()),
+            Some(Ok(s)) => s.to_string(),
+            Some(Err(e)) => return Response::json_error(400, &format!("bad 'name': {e}")),
+        };
+        match rt.try_submit(SessionSpec::new(&name, workload)) {
+            Ok(ticket) => {
+                let id = ticket.index();
+                drop(rt);
+                lock(&self.tickets).insert(id, ticket);
+                Response::json(
+                    202,
+                    Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("name", Json::Str(name)),
+                    ]),
+                )
+            }
+            Err(Error::QueueFull(depth)) => {
+                drop(rt);
+                let mut r = Response::json(
+                    429,
+                    Json::obj(vec![
+                        (
+                            "error",
+                            Json::Str(format!("queue full (depth {depth}); retry")),
+                        ),
+                        ("queue_depth", Json::Num(depth as f64)),
+                        ("retry_after_s", Json::Num(RETRY_AFTER_S as f64)),
+                    ]),
+                );
+                r.retry_after_s = Some(RETRY_AFTER_S);
+                r
+            }
+            Err(e @ (Error::Config(_) | Error::Json(_) | Error::Network(_))) => {
+                Response::json_error(400, &e.to_string())
+            }
+            Err(e) => Response::json_error(500, &e.to_string()),
+        }
+    }
+
+    /// `GET /v1/sessions/<id>`: poll a ticket without blocking.
+    fn poll(&self, id_str: &str) -> Response {
+        let Ok(id) = id_str.parse::<u64>() else {
+            return Response::json_error(400, &format!("bad session id '{id_str}'"));
+        };
+        let tickets = lock(&self.tickets);
+        let Some(ticket) = tickets.get(&id) else {
+            return Response::json_error(404, &format!("unknown session id {id}"));
+        };
+        let state = ticket.try_result();
+        let name = ticket.name().to_string();
+        drop(tickets);
+        match state {
+            None => Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::Str(name)),
+                    ("state", Json::Str("pending".into())),
+                ]),
+            ),
+            Some(Ok(o)) => Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::Str(name)),
+                    ("state", Json::Str("completed".into())),
+                    ("outcome", outcome_json(&o)),
+                ]),
+            ),
+            Some(Err(e)) => Response::json(
+                200,
+                Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::Str(name)),
+                    ("state", Json::Str("failed".into())),
+                    ("error", Json::Str(e.to_string())),
+                ]),
+            ),
+        }
+    }
+
+    /// `POST /admin/shutdown`: flag-gated bearer-token auth, then ask
+    /// the server to drain.
+    fn admin_shutdown(&self, req: &Request) -> (Response, bool) {
+        if let Some(expect) = &self.cfg.admin_token {
+            let presented = req
+                .header("authorization")
+                .and_then(|v| v.strip_prefix("Bearer "))
+                .or_else(|| req.header("x-admin-token"));
+            if presented != Some(expect.as_str()) {
+                return (
+                    Response::json_error(401, "missing or wrong admin token"),
+                    false,
+                );
+            }
+        }
+        self.request_drain();
+        let (submitted, in_flight) = {
+            let rt = lock(&self.rt);
+            (rt.submitted(), rt.in_flight())
+        };
+        let mut r = Response::json(
+            200,
+            Json::obj(vec![
+                ("draining", Json::Bool(true)),
+                ("submitted", Json::Num(submitted as f64)),
+                ("in_flight", Json::Num(in_flight as f64)),
+            ]),
+        );
+        // The drain closes this listener; be honest with the client.
+        r.close = true;
+        (r, true)
+    }
+
+    /// The `/metrics` text exposition (Prometheus-style lines; stable
+    /// `fsoc_` prefix, deterministic ordering via BTreeMaps).
+    pub fn metrics_text(&self) -> String {
+        let (queue_depth, submitted, in_flight, workers, health) = {
+            let rt = lock(&self.rt);
+            (
+                rt.queue_depth(),
+                rt.submitted(),
+                rt.in_flight(),
+                rt.workers(),
+                rt.health_report(),
+            )
+        };
+        let mut out = String::new();
+        out.push_str(&format!("fsoc_queue_depth {queue_depth}\n"));
+        out.push_str(&format!("fsoc_workers {workers}\n"));
+        out.push_str(&format!("fsoc_sessions_submitted {submitted}\n"));
+        out.push_str(&format!("fsoc_sessions_in_flight {in_flight}\n"));
+        out.push_str(&format!(
+            "fsoc_draining {}\n",
+            if self.draining() { 1 } else { 0 }
+        ));
+        for (label, n) in [
+            ("completed", health.completed),
+            ("deadline-exceeded", health.deadline_exceeded),
+            ("fabric-degraded", health.fabric_degraded),
+            ("failed", health.failed),
+        ] {
+            out.push_str(&format!(
+                "fsoc_sessions_verdict{{verdict=\"{label}\"}} {n}\n"
+            ));
+        }
+        for (name, n) in [
+            ("retries", health.retries),
+            ("retry_cycles_burned", health.retry_cycles_burned),
+            ("quarantines", health.quarantines),
+            ("rebuilds", health.rebuilds),
+            ("replans", health.replans),
+        ] {
+            out.push_str(&format!("fsoc_health_{name} {n}\n"));
+        }
+        {
+            let c = lock(&self.counters);
+            out.push_str(&format!("fsoc_http_requests_total {}\n", c.requests));
+            for (code, n) in &c.responses_by_code {
+                out.push_str(&format!(
+                    "fsoc_http_responses_total{{code=\"{code}\"}} {n}\n"
+                ));
+            }
+        }
+        let (opened, closed) = self.connection_counts();
+        out.push_str(&format!("fsoc_http_connections_opened {opened}\n"));
+        out.push_str(&format!("fsoc_http_connections_closed {closed}\n"));
+        // Per-class energy totals folded over every resolved outcome —
+        // the serving fleet's energy ledger through the paper's lens.
+        let mut energy: BTreeMap<String, f64> = BTreeMap::new();
+        let mut samples = 0u64;
+        {
+            let tickets = lock(&self.tickets);
+            for t in tickets.values() {
+                if let Some(Ok(o)) = t.try_result() {
+                    samples += o.stats.samples;
+                    for (class, pj) in &o.report.breakdown.by_class {
+                        *energy.entry(class.clone()).or_insert(0.0) += pj;
+                    }
+                }
+            }
+        }
+        out.push_str(&format!("fsoc_samples_served {samples}\n"));
+        for (class, pj) in &energy {
+            out.push_str(&format!("fsoc_energy_pj{{class=\"{class}\"}} {pj:.3}\n"));
+        }
+        out
+    }
+}
+
+/// Lock a gateway mutex, shrugging off poison exactly like the serving
+/// runtime does (`serve::runtime::lock_q` rationale: the data stays
+/// internally consistent between guard acquisitions, and one panicking
+/// connection must not take the whole front end down).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Render one session outcome for the polling endpoint. Alongside the
+/// human-readable floats, the energy totals are pinned as `f64::to_bits`
+/// hex strings — the wire form of the repo's bit-determinism contract
+/// (HTTP-fetched outcomes must equal in-process serving exactly, and a
+/// decimal rendering would hide one-ulp drift).
+pub fn outcome_json(o: &SessionOutcome) -> Json {
+    let bits = |f: f64| Json::Str(format!("{:016x}", f.to_bits()));
+    Json::obj(vec![
+        ("name", Json::Str(o.name.clone())),
+        ("verdict", Json::Str(o.verdict.as_str().to_string())),
+        ("attempts", Json::Num(o.attempts as f64)),
+        ("replans", Json::Num(o.replans as f64)),
+        ("retry_cycles_burned", Json::Num(o.retry_cycles_burned as f64)),
+        ("samples", Json::Num(o.stats.samples as f64)),
+        ("cycles", Json::Num(o.stats.cycles as f64)),
+        ("sops", Json::Num(o.stats.sops as f64)),
+        ("p50_latency_ms", Json::Num(o.stats.p50_latency_ms)),
+        ("p99_latency_ms", Json::Num(o.stats.p99_latency_ms)),
+        ("queue_wait_s", Json::Num(o.queue_wait_s)),
+        ("mismatches", Json::Num(o.mismatches as f64)),
+        ("checked", Json::Num(o.checked as f64)),
+        (
+            "degradation",
+            Json::obj(vec![
+                ("armed", Json::Bool(o.degradation.armed)),
+                ("delivered", Json::Num(o.degradation.delivered as f64)),
+                ("dropped", Json::Num(o.degradation.dropped as f64)),
+                (
+                    "rerouted_hops",
+                    Json::Num(o.degradation.rerouted_hops as f64),
+                ),
+                ("dead_routers", Json::Num(o.degradation.dead_routers as f64)),
+                ("dead_links", Json::Num(o.degradation.dead_links as f64)),
+            ]),
+        ),
+        (
+            "report",
+            Json::obj(vec![
+                ("pj_per_sop", Json::Num(o.report.pj_per_sop)),
+                ("power_mw", Json::Num(o.report.power_mw)),
+                ("dynamic_pj", Json::Num(o.report.breakdown.dynamic_pj)),
+                ("static_pj", Json::Num(o.report.breakdown.static_pj)),
+            ]),
+        ),
+        ("pj_per_sop_bits", bits(o.report.pj_per_sop)),
+        ("dynamic_pj_bits", bits(o.report.breakdown.dynamic_pj)),
+        ("static_pj_bits", bits(o.report.breakdown.static_pj)),
+    ])
+}

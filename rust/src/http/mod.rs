@@ -1,0 +1,44 @@
+//! Network-facing HTTP/JSON serving front end.
+//!
+//! The paper's chip is an edge-AI *service*: sessions arrive over a
+//! network, queues are bounded, and overload must degrade gracefully
+//! instead of hanging. This module puts the in-process serving stack
+//! ([`crate::serve::ServeRuntime`]) behind a hand-rolled, dependency-free
+//! HTTP/1.1 server (`std::net` only — the offline environment has no
+//! crate registry, per the mik-sdk pure-Rust-JSON rationale):
+//!
+//! - [`framing`] — bounded-memory request parsing (hard caps on request
+//!   line, header bytes/count and `Content-Length`, each mapping to its
+//!   own 4xx) and `Content-Length`-framed responses with keep-alive.
+//! - [`gateway`] — the routing/bridge layer: JSON workload-spec
+//!   submissions become [`crate::serve::SessionSpec`]s via the same
+//!   `workload_from_spec` grammar as the CLI, backpressure surfaces as
+//!   **429 + `Retry-After`** straight from [`crate::Error::QueueFull`],
+//!   and `/metrics` exposes queue depth, verdict tallies, the
+//!   [`crate::serve::HealthReport`] ledger and per-class energy totals.
+//! - [`server`] — the TCP accept loop, per-connection threads with
+//!   socket timeouts, and the clean-drain shutdown path built on
+//!   [`crate::serve::ServeRuntime::shutdown`].
+//! - [`client`] — a minimal blocking keep-alive client for the load
+//!   generator (`examples/http_load.rs`), the `BENCH_http.json` bench
+//!   and the end-to-end tests.
+//!
+//! Endpoints: `POST /v1/sessions`, `GET /v1/sessions/<id>`,
+//! `GET /metrics`, `GET /healthz`, `POST /admin/shutdown`
+//! (flag-gated bearer token). See README §serve-http for the wire
+//! contract and curl examples.
+//!
+//! Determinism: the serving physics is untouched — an outcome fetched
+//! over HTTP carries `f64::to_bits` hex pins of its energy totals and is
+//! bit-identical to the same spec served in-process (pinned in
+//! `tests/http_api.rs`).
+
+pub mod client;
+pub mod framing;
+pub mod gateway;
+pub mod server;
+
+pub use client::{Client, ClientResponse};
+pub use framing::{Request, Response};
+pub use gateway::{Gateway, GatewayConfig};
+pub use server::{HttpConfig, HttpServer, HttpStats};

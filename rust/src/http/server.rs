@@ -1,0 +1,238 @@
+//! The TCP front end: listener, per-connection threads, keep-alive
+//! request loop, and the clean-drain shutdown path.
+//!
+//! Shutdown sequencing (admin endpoint or [`HttpServer::request_shutdown`]):
+//! the drain flag flips, a wake connection unblocks `accept`, the
+//! accept loop stops admitting, every connection thread is joined
+//! (bounded by the socket read timeout — a silent keep-alive peer
+//! cannot hold the drain hostage), and finally the serving runtime
+//! itself drains via [`ServeRuntime::shutdown`](crate::serve::ServeRuntime::shutdown)
+//! so every admitted session still resolves. [`HttpStats`] reports the
+//! witness: connections opened == closed and `drained == true` is the
+//! "zero hung connections, clean drain" floor the HTTP bench enforces.
+
+use super::framing::{read_request, HttpError};
+use super::gateway::Gateway;
+use crate::serve::HealthReport;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Server knobs (validated by the CLI layer; the library applies them
+/// as-is).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:0` (port 0 = OS-assigned).
+    pub addr: String,
+    /// Socket read/write timeout per operation (ms). Bounds how long a
+    /// slow or silent client can pin a connection thread, and therefore
+    /// the drain latency.
+    pub io_timeout_ms: u64,
+    /// `Content-Length` cap for request bodies.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            io_timeout_ms: 5_000,
+            max_body_bytes: super::framing::DEFAULT_MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// Final accounting of one server lifetime, returned by
+/// [`HttpServer::join`].
+#[derive(Debug, Clone)]
+pub struct HttpStats {
+    /// TCP connections accepted.
+    pub connections_opened: u64,
+    /// Connection threads that ran to completion. Equal to
+    /// `connections_opened` on a clean drain — the no-hung-connections
+    /// witness.
+    pub connections_closed: u64,
+    /// Requests answered (all status codes).
+    pub requests: u64,
+    /// Responses by status code.
+    pub responses_by_code: BTreeMap<u16, u64>,
+    /// Final serving-runtime health ledger after the drain.
+    pub health: HealthReport,
+    /// The runtime drain completed without error.
+    pub drained: bool,
+}
+
+/// A running HTTP front end. Construct with [`HttpServer::start`]; the
+/// accept loop runs on its own thread until a shutdown is requested,
+/// then [`HttpServer::join`] returns the final [`HttpStats`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    gateway: Arc<Gateway>,
+    shutdown: Arc<AtomicBool>,
+    accept: JoinHandle<Result<HttpStats>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start serving `gateway` on a background
+    /// accept loop.
+    pub fn start(cfg: HttpConfig, gateway: Gateway) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::Config(format!("cannot bind '{}': {e}", cfg.addr)))?;
+        let addr = listener.local_addr()?;
+        let gateway = Arc::new(gateway);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (gw, flag, cfg2) = (gateway.clone(), shutdown.clone(), cfg.clone());
+        // lint:allow(no-unscoped-threads) accept loop joined by HttpServer::join; it joins every connection thread before returning
+        let accept = std::thread::spawn(move || accept_loop(listener, addr, cfg2, gw, flag));
+        Ok(HttpServer {
+            addr,
+            gateway,
+            shutdown,
+            accept,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared gateway (metrics snapshots, counters).
+    pub fn gateway(&self) -> &Arc<Gateway> {
+        &self.gateway
+    }
+
+    /// Programmatic shutdown: what `POST /admin/shutdown` does, without
+    /// the HTTP round trip.
+    pub fn request_shutdown(&self) {
+        self.gateway.request_drain();
+        self.shutdown.store(true, Ordering::SeqCst);
+        wake_accept(self.addr);
+    }
+
+    /// Block until the accept loop drains and return the final stats.
+    pub fn join(self) -> Result<HttpStats> {
+        match self.accept.join() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Runtime("http accept loop panicked".into())),
+        }
+    }
+}
+
+/// Unblock a blocking `accept` by dialing the listener once. Best
+/// effort: if the dial fails the listener is already gone.
+fn wake_accept(addr: SocketAddr) {
+    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    addr: SocketAddr,
+    cfg: HttpConfig,
+    gateway: Arc<Gateway>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<HttpStats> {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            // Transient accept errors (EMFILE, aborted handshake) must
+            // not kill the front end; a post-shutdown error is the wake.
+            Err(_) => continue,
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the wake connection itself, or a late arrival
+        }
+        gateway.connection_opened();
+        let (gw, flag, cfg2) = (gateway.clone(), shutdown.clone(), cfg.clone());
+        // lint:allow(no-unscoped-threads) connection threads collected in `conns` and joined below before the drain completes
+        conns.push(std::thread::spawn(move || {
+            handle_connection(stream, addr, &cfg2, &gw, &flag);
+            gw.connection_closed();
+        }));
+        // Reap finished threads opportunistically so a long-lived server
+        // does not accumulate one JoinHandle per historical connection.
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    let (drained, health) = match gateway.shutdown_runtime() {
+        Ok(h) => (true, h),
+        Err(_) => (false, HealthReport::default()),
+    };
+    let (connections_opened, connections_closed) = gateway.connection_counts();
+    let responses_by_code = gateway.responses_by_code();
+    let requests = responses_by_code.values().sum();
+    Ok(HttpStats {
+        connections_opened,
+        connections_closed,
+        requests,
+        responses_by_code,
+        health,
+        drained,
+    })
+}
+
+/// One connection's keep-alive loop: parse → route → respond, until the
+/// peer closes, errors, asks for `Connection: close`, times out, or the
+/// server drains.
+fn handle_connection(
+    stream: TcpStream,
+    addr: SocketAddr,
+    cfg: &HttpConfig,
+    gateway: &Arc<Gateway>,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let timeout = Some(Duration::from_millis(cfg.io_timeout_ms.max(1)));
+    if stream.set_read_timeout(timeout).is_err() || stream.set_write_timeout(timeout).is_err()
+    {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_request(&mut reader, cfg.max_body_bytes) {
+            Ok(None) => return, // peer closed cleanly between requests
+            Ok(Some(req)) => {
+                let (resp, want_shutdown) = gateway.handle(&req);
+                let keep = req.keep_alive && !resp.close;
+                let wrote = resp.write_to(&mut writer, keep).is_ok();
+                gateway.record_response(resp.status);
+                if want_shutdown {
+                    gateway.request_drain();
+                    shutdown.store(true, Ordering::SeqCst);
+                    wake_accept(addr);
+                    return;
+                }
+                if !wrote || !keep {
+                    return;
+                }
+            }
+            Err(HttpError::Closed) => return,
+            // Slow/silent client (read timeout) or socket failure: no
+            // peer worth answering — drop the connection. The timeout is
+            // what bounds drain latency against half-open peers.
+            Err(HttpError::Io(_)) => return,
+            Err(e) => {
+                // Framing violation: answer with its 4xx, then close —
+                // the byte stream is no longer trustworthy for framing.
+                let resp = e.to_response();
+                let _ = resp.write_to(&mut writer, false);
+                gateway.record_response(resp.status);
+                return;
+            }
+        }
+    }
+}

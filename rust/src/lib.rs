@@ -40,6 +40,10 @@
 //!   reports, and the multi-session [`serve::SocPool`] with deterministic
 //!   merged reporting. Sessions run on an [`cluster::Engine`], so one
 //!   session can span a whole cluster (`--chips N`).
+//! - [`http`] — the network-facing serving front end: a dependency-free
+//!   HTTP/1.1 server (`serve-http` subcommand) bridging JSON workload
+//!   submissions into the [`serve`] runtime with 429 backpressure,
+//!   `/metrics` exposition and a clean-drain shutdown.
 //! - [`coordinator`] — the batch experiment layer (dataset runs +
 //!   reference/XLA cross-checking), rebuilt on top of [`serve`].
 //! - [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX golden model
@@ -61,6 +65,7 @@ pub mod core;
 pub mod datasets;
 pub mod energy;
 pub mod error;
+pub mod http;
 pub mod lint;
 pub mod metrics;
 pub mod nn;

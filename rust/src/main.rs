@@ -10,6 +10,12 @@
 //!                 `--workers`, `--queue-depth`, `--no-warm`), printing
 //!                 outcomes as sessions finish plus per-session latency
 //!                 stats and the merged report.
+//! - `serve-http` — the same runtime behind a dependency-free HTTP/1.1
+//!                 front end (`--port`, `--host`, `--admin-token`):
+//!                 `POST /v1/sessions` submits JSON workload specs (429 +
+//!                 `Retry-After` on a full queue), `GET /v1/sessions/<id>`
+//!                 polls outcomes, `GET /metrics` exposes the serving
+//!                 ledger, `POST /admin/shutdown` drains cleanly.
 //! - `topo`      — print the Fig. 5a/5b topology comparison table.
 //! - `bench`     — quick in-CLI reproductions: `core-sparsity` (Fig. 3),
 //!                 `router` (Fig. 5c), `riscv-power` (Fig. 6).
@@ -49,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("serve-http") => cmd_serve_http(args),
         Some("topo") => cmd_topo(),
         Some("bench") => cmd_bench(args),
         Some("inspect") => cmd_inspect(args),
@@ -68,7 +75,7 @@ fn print_help() {
     println!(
         "fullerene-soc — neuromorphic SoC simulator (CS.AR 2024 reproduction)\n\
          \n\
-         USAGE: fullerene-soc <run|serve|topo|bench|inspect|gen-data|lint> [flags]\n\
+         USAGE: fullerene-soc <run|serve|serve-http|topo|bench|inspect|gen-data|lint> [flags]\n\
          \n\
          run       --workload nmnist|dvsgesture|cifar10  --samples N  --seed S\n\
                    --weights artifacts/<net>.weights.json  --check none|reference|xla|both\n\
@@ -101,6 +108,18 @@ fn print_help() {
                    synthetic:<inputs>x<classes>x<timesteps>@<rate>;\n\
                    replay shares one parsed file across sessions, --samples caps its\n\
                    length and --seed is ignored for recorded streams)\n\
+         serve-http --port P (default 7171; 0 = OS-assigned, printed at startup)\n\
+                   --host H (default 127.0.0.1)  --workers K  --queue-depth Q\n\
+                   --workload <spec> (default geometry for submissions; same\n\
+                   grammar as serve)  --hidden N  --max-samples M (per-session\n\
+                   cap on untrusted submissions)  --admin-token T (require\n\
+                   'Authorization: Bearer T' on POST /admin/shutdown)\n\
+                   --io-timeout-ms MS (socket read/write timeout; bounds how\n\
+                   long a slow client pins a connection)  --max-body-bytes B\n\
+                   --check none|reference; plus the shared chip flags and the\n\
+                   serve recovery knobs. Endpoints: POST /v1/sessions,\n\
+                   GET /v1/sessions/<id>, GET /metrics, GET /healthz,\n\
+                   POST /admin/shutdown (drains, then the process exits 0)\n\
          topo      (prints the Fig. 5 topology comparison)\n\
          bench     core-sparsity | router | riscv-power  (quick figure repros)\n\
          inspect   --weights <file>   (mapping summary)\n\
@@ -470,6 +489,148 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if keep_warm { "warm chips" } else { "cold chips" },
         ChipReport::table(std::slice::from_ref(&out.merged)).render()
     );
+    Ok(())
+}
+
+/// The network-facing serving front end: the same `ServeRuntime` as
+/// `serve`, behind the dependency-free HTTP/1.1 layer (`http` module).
+/// Runs until an authorized `POST /admin/shutdown` drains it, then
+/// prints the final accounting and exits. Every construction knob still
+/// funnels through `SocBuilder::validate`.
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "port",
+        "host",
+        "workers",
+        "queue-depth",
+        "workload",
+        "hidden",
+        "max-samples",
+        "admin-token",
+        "io-timeout-ms",
+        "max-body-bytes",
+        "check",
+        "no-warm",
+        "no-noc",
+        "no-cpu",
+        "f-core-mhz",
+        "supply",
+        "max-neurons-per-core",
+        "domains",
+        "chips",
+        "fault-plan",
+        "failover",
+        "deadline-cycles",
+        "deadline-wall-ms",
+        "retries",
+        "backoff-cycles",
+        "retry-seed",
+        "quarantine-after",
+    ])
+    .map_err(Error::Config)?;
+    let host = args.get_or("host", "127.0.0.1");
+    let port: u16 = args.get_parse_or("port", 7171);
+    let workers: usize = args.get_parse_or("workers", 2);
+    let queue_depth: usize = args.get_parse_or("queue-depth", 64);
+    let hidden: usize = args.get_parse_or("hidden", 64);
+    let spec = args.get_or("workload", "traffic:64x4x4@0.1");
+    let max_samples: usize = args.get_parse_or("max-samples", 512);
+    let admin_token = args.get("admin-token").map(str::to_string);
+    let io_timeout_ms: u64 = args.get_parse_or("io-timeout-ms", 5_000);
+    let max_body_bytes: usize = args.get_parse_or(
+        "max-body-bytes",
+        fullerene_soc::http::framing::DEFAULT_MAX_BODY_BYTES,
+    );
+    let keep_warm = !args.flag("no-warm");
+    let check = match args.get("check") {
+        Some(c) => parse_check(c)?,
+        None => fullerene_soc::coordinator::GoldenCheck::None,
+    };
+    if max_samples == 0 {
+        return Err(Error::config("--max-samples must be >= 1"));
+    }
+    let recovery = fullerene_soc::serve::RecoveryPolicy {
+        deadline_cycles: args.get_parse_or("deadline-cycles", 0),
+        deadline_wall_ms: args.get_parse_or("deadline-wall-ms", 0),
+        retries: args.get_parse_or("retries", 0),
+        backoff_cycles: args.get_parse_or("backoff-cycles", 0),
+        retry_seed: args.get_parse_or("retry-seed", 0),
+        quarantine_after: args.get_parse_or("quarantine-after", 0),
+    };
+    let mut cfg = RunConfig::default();
+    apply_chip_flags(&mut cfg, args)?;
+
+    // The runtime serves ONE network geometry; submissions whose spec
+    // disagrees fail their own session at the geometry precheck. Probe
+    // the default spec for that geometry (0 samples: generators produce
+    // nothing for the probe).
+    let probe = workload_from_spec(&spec, 0, 0)?;
+    let net = fallback_net_dims(
+        probe.name(),
+        probe.inputs(),
+        hidden,
+        probe.classes(),
+        probe.timesteps(),
+    );
+    let rt = SocBuilder::from_soc_config(cfg.soc.clone())
+        .check(check)
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .keep_warm(keep_warm)
+        .recovery(recovery)
+        .build_serve_runtime(&net)?;
+    let gateway = fullerene_soc::http::Gateway::new(
+        rt,
+        fullerene_soc::http::GatewayConfig {
+            admin_token,
+            default_workload: spec.clone(),
+            max_samples,
+        },
+    );
+    let server = fullerene_soc::http::HttpServer::start(
+        fullerene_soc::http::HttpConfig {
+            addr: format!("{host}:{port}"),
+            io_timeout_ms,
+            max_body_bytes,
+        },
+        gateway,
+    )?;
+    println!("serve-http listening on http://{}", server.addr());
+    println!(
+        "endpoints: POST /v1/sessions  GET /v1/sessions/<id>  GET /metrics  \
+         GET /healthz  POST /admin/shutdown"
+    );
+    let stats = server.join()?;
+
+    let mut t = Table::new(&["code", "responses"]);
+    for (code, n) in &stats.responses_by_code {
+        t.push_row(vec![code.to_string(), n.to_string()]);
+    }
+    println!("{}", t.render());
+    let h = stats.health;
+    println!(
+        "drained: {} sessions ({} completed, {} deadline-exceeded, {} fabric-degraded, \
+         {} failed), {} retries, {} quarantines, {} rebuilds, {} replans",
+        h.sessions,
+        h.completed,
+        h.deadline_exceeded,
+        h.fabric_degraded,
+        h.failed,
+        h.retries,
+        h.quarantines,
+        h.rebuilds,
+        h.replans
+    );
+    println!(
+        "connections: {} opened, {} closed; {} requests",
+        stats.connections_opened, stats.connections_closed, stats.requests
+    );
+    if !stats.drained || stats.connections_opened != stats.connections_closed {
+        return Err(Error::Runtime(format!(
+            "unclean shutdown: drained={}, {} of {} connections closed",
+            stats.drained, stats.connections_closed, stats.connections_opened
+        )));
+    }
     Ok(())
 }
 

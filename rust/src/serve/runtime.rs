@@ -343,7 +343,19 @@ impl ServeRuntime {
 
     fn enqueue(&mut self, spec: SessionSpec, block: bool) -> Result<SessionTicket> {
         let mut q = lock_q(&self.shared.q);
-        while q.pending.len() >= self.shared.queue_depth {
+        loop {
+            // Closed beats full: a post-shutdown submission must error
+            // out, not park forever on a queue no worker will drain
+            // (shutdown wakes `space` exactly so this check re-runs).
+            if q.closed {
+                return Err(Error::Runtime(format!(
+                    "serve runtime is shut down; session '{}' refused",
+                    spec.name
+                )));
+            }
+            if q.pending.len() < self.shared.queue_depth {
+                break;
+            }
             if !block {
                 return Err(Error::QueueFull(self.shared.queue_depth));
             }
@@ -419,6 +431,18 @@ impl ServeRuntime {
         merge_outcomes(sessions, failures, self.shared.config.domains)
     }
 
+    /// Clean drain, in place: stop accepting submissions, let the
+    /// workers serve every already-admitted session, and join them.
+    /// After `shutdown` returns, every issued ticket has resolved,
+    /// [`ServeRuntime::outcomes`] yields only already-finished sessions,
+    /// and further `submit`/`try_submit` calls error out instead of
+    /// parking. Idempotent (a second call joins nothing) and
+    /// poison-tolerant like every other runtime path; [`ServeRuntime::finish`]
+    /// remains the consuming variant that also folds the aggregate.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.close_and_join()
+    }
+
     /// Close the queue and join every worker, attributing a worker death
     /// to the session it was serving (the per-session catch normally
     /// resolves the ticket first, so this path is the backstop).
@@ -428,6 +452,10 @@ impl ServeRuntime {
             q.closed = true;
         }
         self.shared.work.notify_all();
+        // Wake submitters blocked on a full queue so they observe
+        // `closed` and error out — otherwise a drain with a full queue
+        // would leave them waiting on a condvar nobody signals again.
+        self.shared.space.notify_all();
         let mut first_err = None;
         for (wid, h) in std::mem::take(&mut self.workers).into_iter().enumerate() {
             if h.join().is_err() && first_err.is_none() {
@@ -698,6 +726,77 @@ mod tests {
         let out = rt.finish().expect("aggregate folds across poisoned locks");
         assert_eq!(out.sessions.len(), 2);
         assert!(out.failures.is_empty());
+    }
+
+    /// Clean drain: `shutdown()` resolves every admitted session, joins
+    /// the workers, rejects post-shutdown submissions with an error
+    /// (instead of parking them on a queue nobody drains), stays
+    /// idempotent, and still lets `finish()` fold the aggregate.
+    #[test]
+    fn shutdown_drains_resolves_and_rejects_new_submissions() {
+        let mut rt = ServeRuntime::new(
+            tiny_net(),
+            SocConfig::default(),
+            2,
+            GoldenCheck::None,
+            8,
+            true,
+            RecoveryPolicy::disabled(),
+        )
+        .unwrap();
+        let t0 = rt.submit(spec(0, 2)).unwrap();
+        let t1 = rt.submit(spec(1, 1)).unwrap();
+        rt.shutdown().expect("clean drain");
+        // Both tickets resolved without any explicit wait.
+        assert!(t0.try_result().expect("t0 drained").is_ok());
+        assert!(t1.try_result().expect("t1 drained").is_ok());
+        assert_eq!(rt.in_flight(), 0);
+        // Post-shutdown submissions error out — both entry points.
+        let e = rt.submit(spec(2, 1)).unwrap_err();
+        assert!(
+            e.to_string().contains("shut down"),
+            "submit after shutdown must name the drain, got: {e}"
+        );
+        assert!(rt.try_submit(spec(3, 1)).is_err());
+        // Idempotent: a second drain joins nothing and succeeds.
+        rt.shutdown().expect("shutdown is idempotent");
+        // The consuming aggregate still folds the drained sessions.
+        let out = rt.finish().expect("finish after shutdown");
+        assert_eq!(out.sessions.len(), 2);
+        assert!(out.failures.is_empty());
+    }
+
+    /// Regression for the drain's poisoned-lock path: a thread dying
+    /// while holding the queue/health mutexes must not leak into
+    /// `shutdown()` — the drain recovers the guards, resolves every
+    /// ticket and keeps the post-shutdown submission contract.
+    #[test]
+    fn shutdown_survives_poisoned_locks() {
+        let mut rt = ServeRuntime::new(
+            tiny_net(),
+            SocConfig::default(),
+            1,
+            GoldenCheck::None,
+            4,
+            true,
+            RecoveryPolicy::disabled(),
+        )
+        .unwrap();
+        let t0 = rt.submit(spec(0, 1)).unwrap();
+        assert!(t0.wait().is_ok());
+        let shared = rt.shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _q = shared.q.lock().unwrap();
+            let _h = shared.health.lock().unwrap();
+            panic!("poison the runtime locks");
+        })
+        .join();
+        assert!(rt.shared.q.is_poisoned());
+        rt.shutdown().expect("drain across poisoned locks");
+        assert!(rt.submit(spec(1, 1)).is_err());
+        let h = rt.health_report();
+        assert_eq!(h.sessions, 1);
+        assert_eq!(h.completed, 1);
     }
 
     /// The health report tallies sessions/completions and, in keep-warm

@@ -212,17 +212,32 @@ impl Json {
     }
 }
 
+/// Escape one string for emission. Every control character (C0 and
+/// DEL) is escaped — short forms where JSON has them, `\uXXXX`
+/// otherwise — and non-BMP codepoints are written as UTF-16 surrogate
+/// pairs, so emitted strings survive any spec-conforming parser (the
+/// HTTP front end serves these bytes to arbitrary clients; a raw
+/// control byte would make /metrics and outcome payloads invalid JSON).
+/// BMP characters above 0x7F stay raw UTF-8.
 fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
             '"' => out.push_str("\\\""),
             '\\' => out.push_str("\\\\"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
+            c if (c as u32) < 0x20 || (c as u32) == 0x7f => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c if (c as u32) > 0xFFFF => {
+                let v = (c as u32) - 0x10000;
+                let hi = 0xD800 + (v >> 10);
+                let lo = 0xDC00 + (v & 0x3FF);
+                let _ = write!(out, "\\u{hi:04x}\\u{lo:04x}");
             }
             c => out.push(c),
         }
@@ -501,6 +516,39 @@ mod tests {
     fn unicode_escapes_and_surrogates() {
         let v = Json::parse(r#""Aé😀""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "Aé😀");
+    }
+
+    /// The serializer must emit strictly valid JSON for hostile string
+    /// content: control characters (including \b, \f and DEL, which the
+    /// old writer passed through raw) and non-BMP codepoints round-trip
+    /// through our own parser, and the escaped forms are what a
+    /// spec-conforming third-party parser expects.
+    #[test]
+    fn escapes_control_chars_and_non_bmp_round_trip() {
+        let hostile = "a\u{0}b\u{1}c\u{8}d\u{c}e\u{1f}f\u{7f}g😀h𝕊i\né—ok";
+        let v = Json::obj(vec![("s", Json::Str(hostile.into()))]);
+        let wire = v.to_string();
+        // No raw control byte may survive onto the wire.
+        assert!(
+            wire.bytes().all(|b| b >= 0x20),
+            "raw control byte in emitted JSON: {wire:?}"
+        );
+        // Short escapes and surrogate pairs, not raw passthrough.
+        assert!(wire.contains("\\u0000"));
+        assert!(wire.contains("\\b"));
+        assert!(wire.contains("\\f"));
+        assert!(wire.contains("\\u007f"));
+        assert!(wire.contains("\\ud83d\\ude00"), "😀 as a surrogate pair");
+        assert!(wire.contains("\\ud835\\udd4a"), "𝕊 as a surrogate pair");
+        // BMP non-ASCII stays raw UTF-8 (no escaping needed).
+        assert!(wire.contains('é'));
+        // Full round trip through our own parser is lossless.
+        let re = Json::parse(&wire).unwrap();
+        assert_eq!(re.get("s").unwrap().as_str().unwrap(), hostile);
+        // Keys get the same treatment as values.
+        let k = Json::obj(vec![("x\u{2}😀", Json::Num(1.0))]);
+        let re = Json::parse(&k.to_string()).unwrap();
+        assert!(re.get_opt("x\u{2}😀").is_some());
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! End-to-end tests of the HTTP serving front end at the integration
+//! boundary (public `fullerene_soc::http` API plus raw TCP for the
+//! protocol edges):
+//!
+//! - **protocol edges** — malformed request lines (400), unknown routes
+//!   (404), oversized header blocks (431), oversized bodies (413),
+//!   disallowed methods (405), and a slow/silent client whose
+//!   connection the read timeout must reap (the drain-latency bound);
+//! - **backpressure** — a depth-1 queue answers 429 + `Retry-After`,
+//!   and honoring the retry lands every session;
+//! - **admin shutdown** — token-gated when configured (401 on a wrong
+//!   token), drains cleanly: every connection closed, runtime drained;
+//! - **bit-determinism over the wire** — the outcome a client fetches
+//!   over HTTP equals in-process serving of the same spec down to
+//!   `f64::to_bits` (pinned via the hex `*_bits` fields, not decimal
+//!   renderings that would hide one-ulp drift).
+
+use fullerene_soc::benches_support::structural_net;
+use fullerene_soc::http::{Client, Gateway, GatewayConfig, HttpConfig, HttpServer};
+use fullerene_soc::serve::{workload_from_spec, SessionSpec, SocBuilder};
+use fullerene_soc::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const SPEC: &str = "traffic:16x4x2@0.1";
+
+/// Loopback server over a small structural net; port 0 → OS-assigned.
+fn start(
+    workers: usize,
+    queue_depth: usize,
+    admin_token: Option<&str>,
+    io_timeout_ms: u64,
+) -> HttpServer {
+    let net = structural_net("http-test", 16, 8, 4, 2);
+    let rt = SocBuilder::new()
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .keep_warm(true)
+        .build_serve_runtime(&net)
+        .expect("build runtime");
+    let gateway = Gateway::new(
+        rt,
+        GatewayConfig {
+            admin_token: admin_token.map(str::to_string),
+            default_workload: SPEC.into(),
+            max_samples: 64,
+        },
+    );
+    HttpServer::start(
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            io_timeout_ms,
+            max_body_bytes: 4 * 1024,
+        },
+        gateway,
+    )
+    .expect("start server")
+}
+
+/// Write raw bytes on a fresh connection and read whatever comes back
+/// (empty when the server closes without answering).
+fn raw_roundtrip(addr: &str, bytes: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(bytes).expect("write");
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn shutdown_and_check(server: HttpServer) {
+    let mut admin = Client::connect(&server.addr().to_string()).expect("admin connect");
+    let resp = admin
+        .post_json("/admin/shutdown", &Json::obj(vec![]))
+        .expect("shutdown request");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let stats = server.join().expect("join");
+    assert!(stats.drained, "runtime drain failed");
+    assert_eq!(
+        stats.connections_opened, stats.connections_closed,
+        "hung connections at drain: {stats:?}"
+    );
+}
+
+#[test]
+fn protocol_edges_map_to_4xx_and_close() {
+    let server = start(1, 4, None, 5_000);
+    let addr = server.addr().to_string();
+
+    // Malformed request line → 400.
+    let out = raw_roundtrip(&addr, b"this is not http\r\n\r\n");
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    // Unsupported version → 400.
+    let out = raw_roundtrip(&addr, b"GET / HTTP/2.0\r\n\r\n");
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    // Unknown route → 404 (connection stays usable: keep-alive).
+    let mut c = Client::connect(&addr).unwrap();
+    assert_eq!(c.get("/no/such/route").unwrap().status, 404);
+    assert_eq!(c.get("/healthz").unwrap().status, 200, "keep-alive broken");
+    // Disallowed method → 405.
+    let out = raw_roundtrip(&addr, b"DELETE /v1/sessions HTTP/1.1\r\n\r\n");
+    assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+    // Header block over the cap → 431.
+    let mut fat = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    for i in 0..1000 {
+        fat.extend_from_slice(format!("X-Pad-{i}: {}\r\n", "y".repeat(64)).as_bytes());
+    }
+    fat.extend_from_slice(b"\r\n");
+    let out = raw_roundtrip(&addr, &fat);
+    assert!(out.starts_with("HTTP/1.1 431"), "{out}");
+    // Declared body over the cap → 413 before the body is read.
+    let out = raw_roundtrip(
+        &addr,
+        b"POST /v1/sessions HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n",
+    );
+    assert!(out.starts_with("HTTP/1.1 413"), "{out}");
+    // Transfer-Encoding is out of scope → 400, not silent misframing.
+    let out = raw_roundtrip(
+        &addr,
+        b"POST /v1/sessions HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+    );
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    // Bad JSON body → 400; bad session id → 400; unknown id → 404.
+    let mut c = Client::connect(&addr).unwrap();
+    let r = c
+        .request("POST", "/v1/sessions", Some("{not json"), &[])
+        .unwrap();
+    assert_eq!(r.status, 400, "{}", r.body);
+    assert_eq!(c.get("/v1/sessions/zzz").unwrap().status, 400);
+    assert_eq!(c.get("/v1/sessions/12345").unwrap().status, 404);
+    drop(c);
+
+    shutdown_and_check(server);
+}
+
+#[test]
+fn slow_client_is_reaped_by_the_read_timeout() {
+    // Tight timeout so the test is quick; the connection thread must
+    // close a silent peer on its own — this is what bounds drain latency.
+    let server = start(1, 4, None, 200);
+    let addr = server.addr().to_string();
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Half a request line, then silence.
+    s.write_all(b"GET /heal").expect("write");
+    // The server's read timeout fires and it drops the connection: our
+    // read returns 0 bytes (EOF) rather than hanging.
+    let mut buf = Vec::new();
+    let n = s.read_to_end(&mut buf).expect("read until server closes");
+    assert_eq!(n, 0, "server answered a half request: {buf:?}");
+    drop(s);
+    shutdown_and_check(server);
+}
+
+#[test]
+fn queue_full_maps_to_429_with_retry_after_and_retry_lands() {
+    // One worker over a depth-1 queue: concurrent submissions must see
+    // at least one refusal once the queue holds a session.
+    let server = start(1, 1, None, 5_000);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let body = |i: usize| {
+        Json::obj(vec![
+            ("samples", Json::Num(4.0)),
+            ("seed", Json::Num(i as f64)),
+            ("name", Json::Str(format!("bp-{i}"))),
+        ])
+    };
+    let mut ids = Vec::new();
+    let mut refused = 0u64;
+    for i in 0..6 {
+        loop {
+            let r = c.post_json("/v1/sessions", &body(i)).unwrap();
+            match r.status {
+                202 => {
+                    ids.push(r.json().unwrap().get("id").unwrap().as_i64().unwrap());
+                    break;
+                }
+                429 => {
+                    refused += 1;
+                    // The contract: an explicit Retry-After header and a
+                    // machine-readable hint in the body.
+                    assert_eq!(r.header("retry-after"), Some("1"), "{:?}", r.headers);
+                    let j = r.json().unwrap();
+                    assert!(j.get("retry_after_s").unwrap().as_f64().unwrap() >= 1.0);
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                other => panic!("unexpected status {other}: {}", r.body),
+            }
+        }
+    }
+    assert!(refused >= 1, "depth-1 queue never refused a submission");
+    // Every accepted session still resolves.
+    for id in ids {
+        loop {
+            let r = c.get(&format!("/v1/sessions/{id}")).unwrap();
+            assert_eq!(r.status, 200);
+            let j = r.json().unwrap();
+            match j.get("state").unwrap().as_str().unwrap() {
+                "pending" => std::thread::sleep(Duration::from_millis(5)),
+                "completed" => break,
+                other => panic!("session {id} ended {other}: {}", r.body),
+            }
+        }
+    }
+    // The 429s show up in /metrics alongside the serving gauges.
+    let m = c.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m.body.contains("fsoc_http_responses_total{code=\"429\"}"));
+    assert!(m.body.contains("fsoc_sessions_verdict{verdict=\"completed\"} 6"));
+    assert!(m.body.contains("fsoc_queue_depth 1"));
+    assert!(m.body.contains("fsoc_energy_pj{class="));
+    drop(c);
+    shutdown_and_check(server);
+}
+
+#[test]
+fn admin_shutdown_is_token_gated_and_drains() {
+    let server = start(1, 4, Some("hunter2"), 5_000);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    // No token → 401; wrong token → 401; the server keeps serving.
+    let r = c
+        .request("POST", "/admin/shutdown", Some("{}"), &[])
+        .unwrap();
+    assert_eq!(r.status, 401, "{}", r.body);
+    let r = c
+        .request(
+            "POST",
+            "/admin/shutdown",
+            Some("{}"),
+            &[("Authorization", "Bearer wrong")],
+        )
+        .unwrap();
+    assert_eq!(r.status, 401, "{}", r.body);
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
+    // Right token (alternate header form) → 200 + drain.
+    let r = c
+        .request(
+            "POST",
+            "/admin/shutdown",
+            Some("{}"),
+            &[("X-Admin-Token", "hunter2")],
+        )
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert!(r.json().unwrap().get("draining").unwrap().as_bool().unwrap());
+    drop(c);
+    let stats = server.join().expect("join");
+    assert!(stats.drained);
+    assert_eq!(stats.connections_opened, stats.connections_closed);
+    assert_eq!(*stats.responses_by_code.get(&401).unwrap(), 2);
+}
+
+#[test]
+fn submissions_during_drain_get_503() {
+    let server = start(1, 4, None, 5_000);
+    let addr = server.addr().to_string();
+    // Flip the drain flag programmatically, then submit on a connection
+    // that raced in before the listener died.
+    let mut c = Client::connect(&addr).unwrap();
+    server.gateway().request_drain();
+    let r = c
+        .post_json("/v1/sessions", &Json::obj(vec![("samples", Json::Num(1.0))]))
+        .unwrap();
+    assert_eq!(r.status, 503, "{}", r.body);
+    assert_eq!(r.header("retry-after"), Some("1"));
+    drop(c);
+    server.request_shutdown();
+    let stats = server.join().expect("join");
+    assert!(stats.drained);
+}
+
+#[test]
+fn http_outcomes_are_bit_identical_to_in_process_serving() {
+    // Serve three specs over HTTP on a 2-worker runtime…
+    let server = start(2, 8, None, 5_000);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let cases: &[(usize, u64)] = &[(3, 5), (2, 9), (5, 1)];
+    let mut ids = Vec::new();
+    for (i, (samples, seed)) in cases.iter().enumerate() {
+        let r = c
+            .post_json(
+                "/v1/sessions",
+                &Json::obj(vec![
+                    ("workload", Json::Str(SPEC.into())),
+                    ("samples", Json::Num(*samples as f64)),
+                    ("seed", Json::Num(*seed as f64)),
+                    ("name", Json::Str(format!("det-{i}"))),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(r.status, 202, "{}", r.body);
+        ids.push(r.json().unwrap().get("id").unwrap().as_i64().unwrap());
+    }
+    let mut wire = Vec::new();
+    for id in &ids {
+        loop {
+            let r = c.get(&format!("/v1/sessions/{id}")).unwrap();
+            let j = r.json().unwrap();
+            match j.get("state").unwrap().as_str().unwrap() {
+                "pending" => std::thread::sleep(Duration::from_millis(5)),
+                "completed" => {
+                    let o = j.get("outcome").unwrap().clone();
+                    wire.push(o);
+                    break;
+                }
+                other => panic!("session {id} ended {other}: {}", r.body),
+            }
+        }
+    }
+    drop(c);
+    shutdown_and_check(server);
+
+    // …then serve the same specs in-process on a 1-worker runtime: the
+    // energy physics must agree bit for bit, whatever the transport or
+    // concurrency.
+    let net = structural_net("http-test", 16, 8, 4, 2);
+    let mut rt = SocBuilder::new()
+        .workers(1)
+        .queue_depth(8)
+        .keep_warm(true)
+        .build_serve_runtime(&net)
+        .expect("build in-process runtime");
+    for ((samples, seed), fetched) in cases.iter().zip(&wire) {
+        let w = workload_from_spec(SPEC, *samples, *seed).unwrap();
+        let o = rt
+            .submit(SessionSpec::new("local", w))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let bits = |f: f64| format!("{:016x}", f.to_bits());
+        assert_eq!(
+            fetched.get("pj_per_sop_bits").unwrap().as_str().unwrap(),
+            bits(o.report.pj_per_sop),
+            "pj/SOP drifted over the wire"
+        );
+        assert_eq!(
+            fetched.get("dynamic_pj_bits").unwrap().as_str().unwrap(),
+            bits(o.report.breakdown.dynamic_pj)
+        );
+        assert_eq!(
+            fetched.get("static_pj_bits").unwrap().as_str().unwrap(),
+            bits(o.report.breakdown.static_pj)
+        );
+        assert_eq!(
+            fetched.get("sops").unwrap().as_i64().unwrap() as u64,
+            o.stats.sops
+        );
+        assert_eq!(
+            fetched.get("cycles").unwrap().as_i64().unwrap() as u64,
+            o.stats.cycles
+        );
+    }
+}
